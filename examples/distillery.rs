@@ -1,0 +1,71 @@
+//! The full Distillery walkthrough (paper Figure 3.1 blueprint) across
+//! model families, with every method in the repo compared on the same
+//! filters: Hankel order selection, gradient modal interpolation, Prony,
+//! Padé, modal truncation and balanced truncation.
+//!
+//!     cargo run --release --example distillery
+
+use laughing_hyena::data::filters::{model_filters, Family};
+use laughing_hyena::distill::modal_fit::{distill_modal, DistillConfig};
+use laughing_hyena::distill::{balanced, pade, prony};
+use laughing_hyena::hankel::{hankel_singular_values, suggest_order};
+use laughing_hyena::ssm::TransferFunction;
+use laughing_hyena::util::stats::rel_err;
+
+fn main() {
+    for fam in [Family::H3Iir, Family::H3Fir, Family::Hyena, Family::MultiHyena] {
+        println!("\n==== {} filters ====", fam.label());
+        let filters = model_filters(fam, 2, 256, 0xD157);
+        for (i, f) in filters.iter().enumerate() {
+            let (h0, taps) = (f[0], &f[1..]);
+            let sv = hankel_singular_values(taps, Some(64));
+            let order = suggest_order(&sv, 1e-3).clamp(2, 24);
+            println!("filter {i}: suggested order {order} (sigma_d+1/sigma_1 = {:.1e})",
+                sv.get(order).copied().unwrap_or(0.0) / sv[0]);
+
+            // paper method
+            let cfg = DistillConfig { order, iters: 2500, ..Default::default() };
+            let fit = distill_modal(taps, h0, &cfg);
+            println!("  modal-fit    rel err {:.2e} (stable: {})",
+                fit.rel_err, fit.ssm.is_stable());
+
+            // classical baselines at the same order
+            if let Some(s) = prony::prony(taps, h0, order) {
+                println!("  prony        rel err {:.2e} (rho = {:.3})",
+                    rel_err(&s.impulse_response(taps.len()), taps), s.spectral_radius());
+            } else {
+                println!("  prony        failed (ill-conditioned)");
+            }
+            if let Some(tf) = pade::pade(taps, h0, order.min(16)) {
+                let h = tf.impulse_response(taps.len() + 1);
+                println!("  pade         rel err {:.2e}", rel_err(&h[1..], taps));
+            } else {
+                println!("  pade         failed (singular Toeplitz)");
+            }
+            if let Some(s) = balanced::balanced_truncate(taps, h0, order, Some(64)) {
+                println!("  balanced     rel err {:.2e}",
+                    rel_err(&s.impulse_response(taps.len()), taps));
+            } else {
+                println!("  balanced     failed");
+            }
+
+            // canonical forms: the O(d) companion recurrence (App. A)
+            let tf = TransferFunction::from_modal(&fit.ssm);
+            let comp = tf.to_companion();
+            let h_comp = {
+                let mut h = vec![comp.b0];
+                h.extend(comp.impulse_response(taps.len() - 1));
+                h
+            };
+            let h_modal = {
+                let mut h = vec![fit.ssm.h0];
+                h.extend(fit.ssm.impulse_response(taps.len() - 1));
+                h
+            };
+            println!("  canonization modal->tf->companion drift {:.2e} (Lemma A.8)",
+                rel_err(&h_comp, &h_modal));
+        }
+    }
+    println!("\npaper shape: H3-family needs tiny orders; Hyena-family larger; \
+              gradient fit dominates the classical methods on rough filters");
+}

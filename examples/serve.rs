@@ -1,0 +1,63 @@
+//! Serving demo over the AOT artifacts: the coordinator runs continuous
+//! batching against the PJRT decode/prefill executables (three-layer stack
+//! on the request path, zero Python).
+//!
+//!     cargo run --release --example serve -- [n_requests]
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::{spawn, SlotEngine};
+use laughing_hyena::coordinator::state::PjrtSlotEngine;
+use laughing_hyena::experiments::common;
+use laughing_hyena::runtime::artifact::Runtime;
+use laughing_hyena::runtime::lm::ServedModel;
+use laughing_hyena::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let dir = common::require_artifacts()?;
+    let max_new = 12;
+
+    let handle = spawn(
+        move || {
+            let rt = Runtime::cpu().expect("pjrt");
+            let lm = ServedModel::new(&rt, &dir, "multihyena_tiny").expect("load model");
+            println!(
+                "engine up: batch {}, vocab {}, {} B state/seq",
+                lm.shape.batch,
+                lm.shape.vocab,
+                lm.state_bytes_per_seq()
+            );
+            Box::new(PjrtSlotEngine::new(lm)) as Box<dyn SlotEngine>
+        },
+        ServeConfig { max_batch: 4, linger_ms: 2, max_new_tokens: max_new, mem_budget: 1 << 30 },
+    );
+
+    let mut rng = Prng::new(3);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let len = 4 + rng.below(12);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(64) as i32).collect();
+            handle.submit(prompt, max_new)
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv()?;
+        println!(
+            "req {:>3}: ttft {:>7.1}ms  e2e {:>7.1}ms  tokens {:?}",
+            r.id,
+            r.ttft_s * 1e3,
+            r.total_s * 1e3,
+            &r.tokens[..4.min(r.tokens.len())]
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", handle.metrics.report());
+    println!(
+        "wall {wall:.2}s — {:.1} tok/s through the PJRT decode artifact",
+        (n_requests * max_new) as f64 / wall
+    );
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,237 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+For every artifact we also emit a ``.manifest.txt`` describing the flattened
+input/output order (tree paths, dtypes, shapes) so the Rust runtime can
+construct and interpret PJRT literals without any Python at run time, plus
+``params_*.bin`` initial checkpoints (raw little-endian f32) the Rust
+launcher owns from then on.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return ".".join(parts) if parts else "value"
+
+
+def _dtype_tag(x) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _manifest_lines(tag, tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    lines = []
+    for i, (path, leaf) in enumerate(leaves):
+        shape = ",".join(str(d) for d in leaf.shape) or "scalar"
+        lines.append(f"{tag} {i} {_path_str(path)} {_dtype_tag(leaf)} {shape}")
+    return lines
+
+
+def emit(outdir, name, fn, example_args, meta=None):
+    """Lower fn(*example_args) and write HLO text + manifest.
+
+    keep_unused=True: the rust runtime feeds arguments positionally from the
+    manifest, so the compiled program must keep parameters the graph does
+    not consume (e.g. residues in the prefill graph, which only needs the
+    poles)."""
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(outdir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    out_shapes = jax.eval_shape(fn, *example_args)
+    lines = ["# artifact manifest: flattened PJRT argument order"]
+    for m in meta or []:
+        lines.append(f"# {m}")
+    lines += _manifest_lines("in", example_args)
+    lines += _manifest_lines("out", out_shapes)
+    with open(os.path.join(outdir, f"{name}.manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  {name}: {len(text) // 1024} KiB hlo")
+
+
+def spec_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def dump_params(outdir, name, params):
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    lines = ["# checkpoint manifest: leaf path, dtype, shape, byte offset, bytes"]
+    blob = bytearray()
+    for path, leaf in leaves:
+        arr = np.asarray(leaf, dtype=np.float32)
+        off = len(blob)
+        blob.extend(arr.tobytes())
+        shape = ",".join(str(d) for d in arr.shape) or "scalar"
+        lines.append(
+            f"leaf {_path_str(path)} f32 {shape} {off} {arr.nbytes}"
+        )
+    with open(os.path.join(outdir, f"{name}.bin"), "wb") as f:
+        f.write(bytes(blob))
+    with open(os.path.join(outdir, f"{name}.manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  {name}: {len(blob) // 1024} KiB checkpoint")
+
+
+def modal_spec(cfg):
+    nl, m, d = cfg.n_layer, cfg.n_filters, cfg.d_state
+    f32 = jnp.float32
+    return {
+        "lam_re": jax.ShapeDtypeStruct((nl, m, d), f32),
+        "lam_im": jax.ShapeDtypeStruct((nl, m, d), f32),
+        "r_re": jax.ShapeDtypeStruct((nl, m, d), f32),
+        "r_im": jax.ShapeDtypeStruct((nl, m, d), f32),
+        "h0": jax.ShapeDtypeStruct((nl, m), f32),
+    }
+
+
+def build_lm_artifacts(outdir, cfg_name, cfg, kinds, batch):
+    t = cfg.seq_len
+    tok = jax.ShapeDtypeStruct((batch, t), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, t), jnp.float32)
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+    for kind in kinds:
+        kcfg = M.variant(cfg, kind)
+        params = M.init_params(kcfg, jax.random.PRNGKey(17))
+        pspec = spec_like(params)
+        dump_params(outdir, f"params_{kind}_{cfg_name}", params)
+
+        emit(
+            outdir, f"train_step_{kind}_{cfg_name}",
+            lambda p, m_, v_, s, x, y, w, _k=kcfg: M.train_step(_k, p, m_, v_, s, x, y, w),
+            (pspec, pspec, pspec, step, tok, tok, mask),
+            meta=[f"kind={kind} cfg={cfg_name} batch={batch} seq={t}"],
+        )
+        emit(
+            outdir, f"eval_loss_{kind}_{cfg_name}",
+            lambda p, x, y, w, _k=kcfg: M.loss_fn(_k, p, x, y, w),
+            (pspec, tok, tok, mask),
+        )
+    # logits + recurrent deployment only for the flagship multihyena model
+    kcfg = M.variant(cfg, "multihyena")
+    params = M.init_params(kcfg, jax.random.PRNGKey(17))
+    pspec = spec_like(params)
+    emit(
+        outdir, f"fwd_logits_multihyena_{cfg_name}",
+        lambda p, x, _k=kcfg: M.forward(_k, p, x),
+        (pspec, tok),
+    )
+    # materialized long-filter taps [n_layer, M, L] — the rust distillery's
+    # input when distilling a *trained* checkpoint
+    emit(
+        outdir, f"filters_multihyena_{cfg_name}",
+        lambda p, _k=kcfg: jnp.stack(
+            [M.filter_taps(_k, lp, _k.seq_len) for lp in p["layers"]]
+        ),
+        (pspec,),
+    )
+    mspec = modal_spec(kcfg)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    emit(
+        outdir, f"prefill_multihyena_{cfg_name}",
+        lambda p, mo, x, l, _k=kcfg: M.prefill(_k, p, mo, x, l),
+        (pspec, mspec, tok, lens),
+        meta=[f"d_state={kcfg.d_state}"],
+    )
+    tok1 = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    xsp = jax.ShapeDtypeStruct(
+        (batch, kcfg.n_layer, kcfg.d_model, kcfg.d_state), jnp.float32
+    )
+    buf = jax.ShapeDtypeStruct(
+        (batch, kcfg.n_layer, 3 * kcfg.d_model, kcfg.short_kw - 1), jnp.float32
+    )
+    emit(
+        outdir, f"decode_multihyena_{cfg_name}",
+        lambda p, mo, tk, xr, xi, sb, _k=kcfg: M.decode_step(_k, p, mo, tk, xr, xi, sb),
+        (pspec, mspec, tok1, xsp, xsp, buf),
+        meta=[f"d_state={kcfg.d_state}"],
+    )
+
+
+def build_distill_artifacts(outdir, channels, length, orders):
+    f32 = jnp.float32
+    tgt = jax.ShapeDtypeStruct((channels, length), f32)
+    step = jax.ShapeDtypeStruct((), f32)
+    for d in orders:
+        pd = {k: jax.ShapeDtypeStruct((channels, d), f32)
+              for k in ("decay", "theta", "r_re", "r_im")}
+        emit(
+            outdir, f"distill_step_c{channels}_d{d}_l{length}",
+            lambda p, m_, v_, s, t_: M.distill_step(p, m_, v_, s, t_),
+            (pd, pd, pd, step, tgt),
+            meta=[f"channels={channels} order={d} length={length} objective=l2"],
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config only (CI smoke)")
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+
+    print("== tiny (tests / smoke) ==")
+    build_lm_artifacts(outdir, "tiny", M.TINY, ["multihyena"], batch=4)
+    build_distill_artifacts(outdir, channels=8, length=64, orders=[8])
+    if not args.quick:
+        print("== small (experiments) ==")
+        build_lm_artifacts(
+            outdir, "small", M.SMALL, ["multihyena", "hyena", "gpt"], batch=8
+        )
+        build_distill_artifacts(outdir, channels=24, length=256, orders=[8, 16])
+        print("== associative recall (Table E.1) ==")
+        build_lm_artifacts(outdir, "ar", M.AR, ["multihyena", "hyena"], batch=8)
+
+    # stamp: input digest for the Makefile no-op check
+    srcs = []
+    pkg = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(pkg):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                srcs.append(os.path.join(root, f))
+    digest = hashlib.sha256()
+    for s in srcs:
+        digest.update(open(s, "rb").read())
+    with open(os.path.join(outdir, "STAMP"), "w") as f:
+        f.write(digest.hexdigest() + "\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

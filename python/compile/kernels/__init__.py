@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .hyena_gating import hyena_gating
+from .modal_filter import modal_filter
+from .ssm_decode import ssm_decode_step
+
+__all__ = ["hyena_gating", "modal_filter", "ssm_decode_step"]

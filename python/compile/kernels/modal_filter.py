@@ -1,0 +1,184 @@
+"""L1 Pallas kernels: modal filter materialization, forward + backward.
+
+The Laughing Hyena modal form (paper eq. 3.2) represents a distilled filter as
+
+    h_hat[tau] = sum_n Re( R_n * lambda_n^tau ),   tau = 0 .. L-1
+
+(`tau = t-1` in the paper's 1-indexed convention; the passthrough tap h0 is
+handled separately).  With the polar parametrization lambda_n = A_n e^{i th_n}
+and cartesian residues R_n = Rre_n + i Rim_n (paper App. B.1) this is
+
+    h_hat[tau] = sum_n A_n^tau (Rre_n cos(th_n tau) - Rim_n sin(th_n tau)).
+
+This evaluation is the distillation hot spot (Lemma 3.1's O(dL) path): it
+runs once per Adam iteration for every channel being distilled, and its VJP
+runs once more.  `pallas_call` has no autodiff rule, so the backward pass is
+its own kernel wired up through `jax.custom_vjp` — the cotangent
+contractions are analytic:
+
+    dL/dRre[n]  =  sum_t g_t A^t cos(th t)
+    dL/dRim[n]  = -sum_t g_t A^t sin(th t)
+    dL/dA[n]    =  sum_t g_t t A^(t-1) (Rre cos - Rim sin)
+    dL/dth[n]   = -sum_t g_t t A^t      (Rre sin + Rim cos)
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"): instead of the CUDA
+warp-per-channel reduction, each program materializes a damped-sinusoid
+*basis matrix* [d, T_BLK] in VMEM and contracts it with the residue row
+(forward) or the cotangent row (backward) via a matmul, so the MXU performs
+the mode/time reduction.  Grid is (channels, L / T_BLK); the basis never
+round-trips to HBM.  The backward kernel accumulates grads across time
+tiles in its output block (grid iteration over tau-tiles is sequential).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Time-tile width.  d <= 64 and T_BLK = 512 keeps the basis at
+# 64 * 512 * 4 B = 128 KiB of VMEM, far below the ~16 MiB budget, leaving
+# room for double-buffering output tiles.
+T_BLK = 512
+
+
+def _basis(decay_ref, theta_ref, t0, d):
+    """Damped-sinusoid basis for one channel: returns (amp, cos, sin),
+    each [d, T_BLK], plus tau [d, T_BLK]."""
+    tau = t0 + jax.lax.broadcasted_iota(jnp.float32, (d, T_BLK), 1)
+    decay = decay_ref[0, :][:, None]
+    theta = theta_ref[0, :][:, None]
+    log_a = jnp.log(jnp.maximum(decay, 1e-20))
+    amp = jnp.exp(tau * log_a)
+    phase = theta * tau
+    return amp, jnp.cos(phase), jnp.sin(phase), tau
+
+
+def _fwd_kernel(decay_ref, theta_ref, res_ref, out_ref):
+    """One (channel, time-tile) program.
+
+    decay_ref : [1, d]    pole magnitudes A_n (>= 0)
+    theta_ref : [1, d]    pole phases th_n
+    res_ref   : [1, 2, d] row 0 = Re(R), row 1 = -Im(R)
+    out_ref   : [1, T_BLK]
+    """
+    d = decay_ref.shape[1]
+    t0 = pl.program_id(1) * T_BLK
+    amp, cos, sin, _ = _basis(decay_ref, theta_ref, t0, d)
+    basis = jnp.concatenate([amp * cos, amp * sin], axis=0)  # [2d, T_BLK]
+    res = res_ref[0, :, :].reshape(1, 2 * d)
+    out_ref[...] = jnp.dot(res, basis, preferred_element_type=jnp.float32)
+
+
+def _bwd_kernel(decay_ref, theta_ref, rre_ref, rim_ref, g_ref,
+                gdecay_ref, gtheta_ref, grre_ref, grim_ref):
+    """One (channel, time-tile) program; accumulates grads over tau tiles.
+
+    g_ref: [1, T_BLK] cotangent; parameter refs as in forward; the four
+    gradient outputs are [1, d] blocks shared across the tau grid axis.
+    """
+    d = decay_ref.shape[1]
+    j = pl.program_id(1)
+    t0 = j * T_BLK
+    amp, cos, sin, tau = _basis(decay_ref, theta_ref, t0, d)
+    g = g_ref[0, :][None, :]  # [1, T_BLK]
+    rre = rre_ref[0, :][:, None]
+    rim = rim_ref[0, :][:, None]
+    decay = jnp.maximum(decay_ref[0, :][:, None], 1e-20)
+
+    # All four contractions reduce over tau within the tile; the tile sums
+    # accumulate into the [1, d] output blocks across the sequential grid.
+    env = rre * cos - rim * sin  # [d, T_BLK]
+    odd = rre * sin + rim * cos
+    g_rre = jnp.sum(g * (amp * cos), axis=1)
+    g_rim = -jnp.sum(g * (amp * sin), axis=1)
+    g_dec = jnp.sum(g * (tau * amp / decay * env), axis=1)
+    g_th = -jnp.sum(g * (tau * amp * odd), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        gdecay_ref[...] = jnp.zeros_like(gdecay_ref)
+        gtheta_ref[...] = jnp.zeros_like(gtheta_ref)
+        grre_ref[...] = jnp.zeros_like(grre_ref)
+        grim_ref[...] = jnp.zeros_like(grim_ref)
+
+    gdecay_ref[0, :] += g_dec
+    gtheta_ref[0, :] += g_th
+    grre_ref[0, :] += g_rre
+    grim_ref[0, :] += g_rim
+
+
+def _padded(length):
+    return ((length + T_BLK - 1) // T_BLK) * T_BLK
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _modal_filter(decay, theta, r_re, r_im, length):
+    return _modal_filter_fwd_impl(decay, theta, r_re, r_im, length)
+
+
+def _modal_filter_fwd_impl(decay, theta, r_re, r_im, length):
+    c, d = decay.shape
+    padded = _padded(length)
+    res = jnp.stack([r_re, -r_im], axis=1)  # [C, 2, d]
+    out = pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, padded), jnp.float32),
+        grid=(c, padded // T_BLK),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 2, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T_BLK), lambda i, j: (i, j)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(decay, theta, res)
+    return out[:, :length]
+
+
+def _modal_filter_fwd(decay, theta, r_re, r_im, length):
+    out = _modal_filter_fwd_impl(decay, theta, r_re, r_im, length)
+    return out, (decay, theta, r_re, r_im)
+
+
+def _modal_filter_bwd(length, resids, g):
+    decay, theta, r_re, r_im = resids
+    c, d = decay.shape
+    padded = _padded(length)
+    gp = jnp.pad(g, ((0, 0), (0, padded - length)))
+    grads = pl.pallas_call(
+        _bwd_kernel,
+        out_shape=tuple(
+            jax.ShapeDtypeStruct((c, d), jnp.float32) for _ in range(4)
+        ),
+        grid=(c, padded // T_BLK),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, T_BLK), lambda i, j: (i, j)),
+        ],
+        out_specs=tuple(
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)) for _ in range(4)
+        ),
+        interpret=True,
+    )(decay, theta, r_re, r_im, gp)
+    return grads
+
+
+_modal_filter.defvjp(_modal_filter_fwd, _modal_filter_bwd)
+
+
+def modal_filter(decay, theta, r_re, r_im, *, length):
+    """Evaluate modal filters for a batch of channels.
+
+    Args:
+      decay, theta, r_re, r_im: [C, d] float32 modal parameters.
+      length: number of taps L to materialize.
+
+    Returns:
+      [C, length] float32, tap tau = sum_n A^tau (Rre cos - Rim sin).
+      Differentiable in all four parameter arrays (custom VJP, own kernel).
+    """
+    return _modal_filter(decay, theta, r_re, r_im, length)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function mirrors the mathematical definition with no tiling / layout
+tricks; pytest asserts allclose between kernel and oracle across shape and
+parameter sweeps (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def modal_filter_ref(decay, theta, r_re, r_im, length):
+    """h_hat[c, tau] = sum_n A^tau (Rre cos(th tau) - Rim sin(th tau))."""
+    tau = jnp.arange(length, dtype=jnp.float32)  # [L]
+    amp = jnp.power(jnp.maximum(decay, 1e-20)[..., None], tau)  # [C, d, L]
+    phase = theta[..., None] * tau
+    h = amp * (r_re[..., None] * jnp.cos(phase) - r_im[..., None] * jnp.sin(phase))
+    return jnp.sum(h, axis=1)  # [C, L]
+
+
+def ssm_decode_step_ref(x_re, x_im, u, lam_re, lam_im, r_re, r_im, h0):
+    """Reference complex-arithmetic decode step."""
+    x = x_re + 1j * x_im
+    lam = lam_re + 1j * lam_im
+    res = r_re + 1j * r_im
+    y = jnp.real(jnp.sum(res[None] * x, axis=-1)) + h0[None] * u
+    x_new = lam[None] * x + u[..., None]
+    return jnp.real(x_new), jnp.imag(x_new), y
+
+
+def hyena_gating_ref(q, x):
+    return q * x
+
+
+def causal_conv_ref(h, u):
+    """(h * u)_t = sum_{j<=t} h_{t-j} u_j  via explicit O(L^2) sum.
+
+    h: [C, L] filters; u: [B, T, C] inputs with T <= L.  Returns [B, T, C].
+    """
+    h = np.asarray(h)
+    u = np.asarray(u)
+    b, t, c = u.shape
+    out = np.zeros_like(u)
+    for i in range(t):
+        # sum_{j=0..i} h[i-j] * u[j]
+        taps = h[:, : i + 1][:, ::-1]  # h[0..i] reversed -> h[i-j]
+        out[:, i, :] = np.einsum("btc,ct->bc", u[:, : i + 1, :], taps.copy())
+    return out
+
+
+def fft_causal_conv(h, u):
+    """FFT-based causal convolution matching causal_conv_ref.
+
+    h: [C, L], u: [B, T, C] -> [B, T, C]; zero-padded to 2L to avoid wrap.
+    """
+    t = u.shape[1]
+    n = 2 * max(h.shape[1], t)
+    hf = jnp.fft.rfft(h, n=n, axis=-1)  # [C, F]
+    uf = jnp.fft.rfft(u, n=n, axis=1)  # [B, F, C]
+    yf = uf * jnp.transpose(hf)[None]  # broadcast over batch
+    y = jnp.fft.irfft(yf, n=n, axis=1)[:, :t, :]
+    return y.astype(u.dtype)

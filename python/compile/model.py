@@ -1,0 +1,493 @@
+"""L2: JAX models for the Laughing Hyena reproduction (build-time only).
+
+Defines, in functional pytree style:
+
+  * MultiHyena / Hyena language models (paper §2.1, §4) with implicit
+    (Siren-MLP) long-convolution filters, multi-head weight tying, short
+    depthwise convolutions on q/k/v and FFT long convolutions;
+  * a GPT-style Transformer baseline (causal MHA) trained on the same data;
+  * AdamW train steps (for Table 5.1 / Table E.1 pre-training runs);
+  * the recurrent decode step over distilled modal SSMs (paper §3.4),
+    calling the L1 `ssm_decode` Pallas kernel;
+  * prompt prefill that runs the true convolutions AND initializes the
+    modal states x_T (paper Prop. 3.2);
+  * the batched modal-interpolation distillation step (paper §3.2),
+    calling the L1 `modal_filter` Pallas kernel.
+
+Everything here is lowered once by aot.py to HLO text and executed from the
+Rust coordinator; Python is never on the request path.
+"""
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hyena_gating, modal_filter, ssm_decode_step
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Model/architecture configuration (mirrored by rust/src/config.rs)."""
+
+    kind: str = "multihyena"  # multihyena | hyena | gpt
+    vocab: int = 512
+    d_model: int = 96
+    n_layer: int = 3
+    heads: int = 8  # M long-conv heads (multihyena); hyena uses heads=d_model
+    seq_len: int = 256  # training L
+    short_kw: int = 3  # short depthwise conv width on q/k/v
+    mlp_mult: int = 2
+    attn_heads: int = 4  # for the gpt baseline
+    filter_emb: int = 9  # implicit filter positional features (odd: 1 + 2k)
+    filter_width: int = 32  # implicit filter MLP width
+    filter_sine_freq: float = 4.0  # paper D.1: sine activation frequency 4
+    lr: float = 3e-3
+    weight_decay: float = 0.1
+    # distilled-state dimension used by prefill/decode artifacts
+    d_state: int = 16
+
+    @property
+    def n_filters(self) -> int:
+        return self.d_model if self.kind == "hyena" else self.heads
+
+    @property
+    def group(self) -> int:
+        """Channels per long-conv head (N = D / M)."""
+        return self.d_model // self.n_filters
+
+
+TINY = Config(vocab=64, d_model=32, n_layer=2, heads=4, seq_len=64,
+              filter_width=16, d_state=8)
+SMALL = Config(vocab=512, d_model=96, n_layer=3, heads=8, seq_len=256)
+# Associative recall (Table E.1): 2-layer, long sequences, small vocab of
+# key/value symbols; rust generates the episodes.
+AR = Config(vocab=128, d_model=64, n_layer=2, heads=8, seq_len=512,
+            filter_width=16, lr=1e-3, d_state=16)
+
+
+def variant(cfg: Config, kind: str) -> Config:
+    heads = cfg.d_model if kind == "hyena" else cfg.heads
+    return dataclasses.replace(cfg, kind=kind, heads=heads)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -scale, scale)
+
+
+def init_params(cfg: Config, key) -> Params:
+    """Random init; layout documented for the rust checkpoint loader."""
+    keys = jax.random.split(key, 4 + cfg.n_layer)
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "ln_f_g": jnp.ones((cfg.d_model,)),
+        "ln_f_b": jnp.zeros((cfg.d_model,)),
+    }
+    if cfg.kind == "gpt":
+        p["pos"] = jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)) * 0.02
+    layers = []
+    for i in range(cfg.n_layer):
+        k = jax.random.split(keys[4 + i], 10)
+        d = cfg.d_model
+        lp = {
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "w_qkv": _dense_init(k[0], d, 3 * d),
+            "b_qkv": jnp.zeros((3 * d,)),
+            "w_out": _dense_init(k[1], d, d),
+            "b_out": jnp.zeros((d,)),
+            "w_mlp1": _dense_init(k[2], d, cfg.mlp_mult * d),
+            "b_mlp1": jnp.zeros((cfg.mlp_mult * d,)),
+            "w_mlp2": _dense_init(k[3], cfg.mlp_mult * d, d),
+            "b_mlp2": jnp.zeros((d,)),
+        }
+        if cfg.kind != "gpt":
+            m = cfg.n_filters
+            lp.update({
+                # short depthwise causal conv over q,k,v
+                "short": jax.random.normal(k[4], (3 * d, cfg.short_kw)) * 0.3,
+                # implicit long filter: Siren MLP  emb -> W -> W -> M
+                "f_w1": _dense_init(k[5], cfg.filter_emb, cfg.filter_width),
+                "f_b1": jnp.zeros((cfg.filter_width,)),
+                "f_w2": _dense_init(k[6], cfg.filter_width, cfg.filter_width),
+                "f_b2": jnp.zeros((cfg.filter_width,)),
+                "f_w3": _dense_init(k[7], cfg.filter_width, m),
+                "f_b3": jnp.zeros((m,)),
+                # per-head exponential decay rate (softplus -> positive)
+                "f_decay": jnp.linspace(0.3, 2.0, m),
+                # per-head passthrough bias (adds to tap 0)
+                "f_bias": jax.random.normal(k[8], (m,)) * 0.02,
+            })
+        layers.append(lp)
+    p["layers"] = layers
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def filter_taps(cfg: Config, lp: Params, length: int) -> jnp.ndarray:
+    """Materialize implicit long filters h: [M, length] (paper §2, implicit
+    parametrization; Siren features per [2] with decay window)."""
+    t = jnp.arange(length, dtype=jnp.float32) / float(cfg.seq_len)
+    ks = jnp.arange(1, (cfg.filter_emb - 1) // 2 + 1, dtype=jnp.float32)
+    feats = [t[:, None]]
+    ang = 2.0 * jnp.pi * t[:, None] * ks[None, :]
+    feats += [jnp.sin(ang), jnp.cos(ang)]
+    z = jnp.concatenate(feats, axis=-1)  # [L, emb]
+    w0 = cfg.filter_sine_freq
+    z = jnp.sin(w0 * (z @ lp["f_w1"] + lp["f_b1"]))
+    z = jnp.sin(w0 * (z @ lp["f_w2"] + lp["f_b2"]))
+    h = z @ lp["f_w3"] + lp["f_b3"]  # [L, M]
+    decay = jax.nn.softplus(lp["f_decay"])  # [M]
+    window = jnp.exp(-decay[None, :] * t[:, None] * float(cfg.seq_len) / 64.0)
+    h = h * window
+    h = jnp.transpose(h)  # [M, L]
+    # tap-0 bias = the h0 passthrough the distillery treats separately
+    h = h.at[:, 0].add(lp["f_bias"])
+    return h
+
+
+def short_conv(u, w, kw):
+    """Causal depthwise conv, u: [B, T, C], w: [C, kw]."""
+    pads = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for j in range(kw):
+        out = out + pads[:, j : j + u.shape[1], :] * w[None, None, :, kw - 1 - j]
+    return out
+
+
+def fft_long_conv(h, u):
+    """Causal FFT convolution: h [M, L] filters, u [B, T, D] with the D
+    channels grouped into M heads of size N=D/M (weight tying, paper §4)."""
+    b, t, d = u.shape
+    m, filt_len = h.shape
+    n = d // m
+    length = 2 * max(filt_len, t)
+    hf = jnp.fft.rfft(h, n=length, axis=-1)  # [M, F]
+    uf = jnp.fft.rfft(u, n=length, axis=1)  # [B, F, D]
+    hf_full = jnp.repeat(hf, n, axis=0)  # [D, F]
+    yf = uf * jnp.transpose(hf_full)[None]
+    y = jnp.fft.irfft(yf, n=length, axis=1)[:, :t, :]
+    return y.astype(u.dtype)
+
+
+def hyena_mixer(cfg: Config, lp: Params, x, filt_len=None):
+    """Multi-head Hyena operator (order 2): y = q . (h * (k . v))."""
+    b, t, d = x.shape
+    qkv = x @ lp["w_qkv"] + lp["b_qkv"]
+    qkv = short_conv(qkv, lp["short"], cfg.short_kw)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    z = k * v
+    h = filter_taps(cfg, lp, filt_len or t)
+    zc = fft_long_conv(h, z)
+    y = hyena_gating(q, zc)  # L1 Pallas kernel
+    return y @ lp["w_out"] + lp["b_out"]
+
+
+def attn_mixer(cfg: Config, lp: Params, x):
+    b, t, d = x.shape
+    nh = cfg.attn_heads
+    hd = d // nh
+    qkv = x @ lp["w_qkv"] + lp["b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ lp["w_out"] + lp["b_out"]
+
+
+def block(cfg: Config, lp: Params, x):
+    h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+    if cfg.kind == "gpt":
+        x = x + attn_mixer(cfg, lp, h)
+    else:
+        x = x + hyena_mixer(cfg, lp, h)
+    h = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+    h = jax.nn.gelu(h @ lp["w_mlp1"] + lp["b_mlp1"]) @ lp["w_mlp2"] + lp["b_mlp2"]
+    return x + h
+
+
+def forward(cfg: Config, p: Params, tokens) -> jnp.ndarray:
+    """tokens [B, T] int32 -> logits [B, T, V]."""
+    x = p["embed"][tokens]
+    if cfg.kind == "gpt":
+        x = x + p["pos"][None, : tokens.shape[1]]
+    for lp in p["layers"]:
+        x = block(cfg, lp, x)
+    x = layer_norm(x, p["ln_f_g"], p["ln_f_b"])
+    return x @ jnp.transpose(p["embed"])  # weight-tied LM head
+
+
+def loss_fn(cfg: Config, p: Params, tokens, targets, mask=None):
+    logits = forward(cfg, p, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step
+# ---------------------------------------------------------------------------
+
+
+def init_opt(p: Params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, p)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, p)
+
+
+def train_step(cfg: Config, p, m, v, step, tokens, targets, mask=None):
+    """One AdamW step; returns (p', m', v', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda q: loss_fn(cfg, q, tokens, targets, mask)
+    )(p)
+    b1, b2, eps = 0.9, 0.98, 1e-9
+    t = step + 1.0
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def upd(pl, ml, vl, gl):
+        ml = b1 * ml + (1 - b1) * gl
+        vl = b2 * vl + (1 - b2) * gl * gl
+        upd_ = (ml / bc1) / (jnp.sqrt(vl / bc2) + eps)
+        pl = pl - cfg.lr * (upd_ + cfg.weight_decay * pl)
+        return pl, ml, vl
+
+    flat_p, tree = jax.tree_util.tree_flatten(p)
+    flat_m = jax.tree_util.tree_flatten(m)[0]
+    flat_v = jax.tree_util.tree_flatten(v)[0]
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    out = [upd(a, b, c, g) for a, b, c, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    p2 = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    m2 = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    v2 = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return p2, m2, v2, loss
+
+
+# ---------------------------------------------------------------------------
+# Recurrent deployment (paper §3.4): prefill + decode over distilled SSMs
+# ---------------------------------------------------------------------------
+#
+# Modal parameters per layer (produced by the distillery, rust side or
+# distill_step below), all float32:
+#   lam_re/lam_im [n_layer, M, d_state]  poles
+#   r_re/r_im     [n_layer, M, d_state]  residues
+#   h0            [n_layer, M]           passthrough taps
+# Decode state:
+#   x_re/x_im     [B, n_layer, D, d_state]  (channels share head params)
+#   sc_buf        [B, n_layer, 3D, short_kw-1]  short-conv tails
+
+
+def _broadcast_heads(cfg: Config, a):
+    """[M, d] -> [D, d] by repeating each head over its N channels."""
+    return jnp.repeat(a, cfg.group, axis=0)
+
+
+def decode_step(cfg: Config, p: Params, modal: Params, token, x_re, x_im, sc_buf):
+    """One recurrent token step. token: [B] int32. Returns
+    (logits [B,V], x_re', x_im', sc_buf')."""
+    x = p["embed"][token]  # [B, D]
+    new_xre, new_xim, new_buf = [], [], []
+    for i, lp in enumerate(p["layers"]):
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        qkv = h @ lp["w_qkv"] + lp["b_qkv"]  # [B, 3D]
+        # short conv against the rolling buffer
+        buf = sc_buf[:, i]  # [B, 3D, kw-1]
+        window = jnp.concatenate([buf, qkv[:, :, None]], axis=-1)  # [B,3D,kw]
+        qkv_c = jnp.sum(window * lp["short"][None, :, ::-1][:, :, :], axis=-1)
+        # note: short filter applied with w[kw-1-j] over window -> reverse
+        new_buf.append(window[:, :, 1:])
+        q, k, v = jnp.split(qkv_c, 3, axis=-1)
+        z = k * v  # [B, D]
+        lam_re = _broadcast_heads(cfg, modal["lam_re"][i])
+        lam_im = _broadcast_heads(cfg, modal["lam_im"][i])
+        r_re = _broadcast_heads(cfg, modal["r_re"][i])
+        r_im = _broadcast_heads(cfg, modal["r_im"][i])
+        h0 = jnp.repeat(modal["h0"][i], cfg.group, axis=0)
+        xr, xi, y = ssm_decode_step(  # L1 Pallas kernel
+            x_re[:, i], x_im[:, i], z, lam_re, lam_im, r_re, r_im, h0
+        )
+        new_xre.append(xr)
+        new_xim.append(xi)
+        y = q * y
+        x = x + (y @ lp["w_out"] + lp["b_out"])
+        hh = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        hh = jax.nn.gelu(hh @ lp["w_mlp1"] + lp["b_mlp1"]) @ lp["w_mlp2"] + lp["b_mlp2"]
+        x = x + hh
+    x = layer_norm(x, p["ln_f_g"], p["ln_f_b"])
+    logits = x @ jnp.transpose(p["embed"])
+    return (
+        logits,
+        jnp.stack(new_xre, axis=1),
+        jnp.stack(new_xim, axis=1),
+        jnp.stack(new_buf, axis=1),
+    )
+
+
+def prefill(cfg: Config, p: Params, modal: Params, tokens, lengths):
+    """Process a (right-padded) prompt batch.
+
+    tokens: [B, T] int32, lengths: [B] int32 actual prompt lengths.
+    Runs the TRUE convolution forward pass for logits and initializes the
+    modal states x_T for every layer/channel:  x_T = sum_j lam^(T-1-j) z_j
+    (Prop. 3.2's result computed via the powers contraction; the FFT variant
+    lives in rust/src/distill/prefill.rs and is benchmarked in §Perf).
+
+    Returns (last_logits [B, V], x_re, x_im, sc_buf).
+    """
+    b, t = tokens.shape
+    d, kw = cfg.d_model, cfg.short_kw
+    pos = jnp.arange(t, dtype=jnp.int32)
+    valid = pos[None, :] < lengths[:, None]  # [B, T]
+
+    x = p["embed"][tokens] * valid[..., None]
+    xres, xims, bufs = [], [], []
+    for i, lp in enumerate(p["layers"]):
+        h = layer_norm(x, lp["ln1_g"], lp["ln1_b"])
+        qkv_pre = h @ lp["w_qkv"] + lp["b_qkv"]  # [B, T, 3D]
+        qkv = short_conv(qkv_pre, lp["short"], kw)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        z = (k * v) * valid[..., None]  # zero pad positions
+        # --- true convolution for outputs
+        hf = filter_taps(cfg, lp, t)
+        zc = fft_long_conv(hf, z)
+        y = hyena_gating(q, zc)
+        x = x + (y @ lp["w_out"] + lp["b_out"])
+        hh = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        hh = jax.nn.gelu(hh @ lp["w_mlp1"] + lp["b_mlp1"]) @ lp["w_mlp2"] + lp["b_mlp2"]
+        x = x + hh
+        # --- modal state init: exponent e[b, j] = len[b]-1-j (masked >= 0)
+        expn = (lengths[:, None] - 1 - pos[None, :]).astype(jnp.float32)  # [B,T]
+        lam_a = jnp.sqrt(
+            modal["lam_re"][i] ** 2 + modal["lam_im"][i] ** 2
+        )  # [M, d]
+        lam_th = jnp.arctan2(modal["lam_im"][i], modal["lam_re"][i])
+        log_a = jnp.log(jnp.maximum(lam_a, 1e-20))
+        # powers[b, j, m, n] = A^e cos/sin(th e), masked to valid positions
+        e = jnp.maximum(expn, 0.0)[:, :, None, None]  # [B,T,1,1]
+        amp = jnp.exp(e * log_a[None, None]) * valid[:, :, None, None]
+        pw_re = amp * jnp.cos(lam_th[None, None] * e)
+        pw_im = amp * jnp.sin(lam_th[None, None] * e)
+        ds = modal["lam_re"].shape[-1]
+        zg = z.reshape(b, t, cfg.n_filters, cfg.group)  # [B,T,M,N]
+        xre = jnp.einsum("btmn,btmd->bmnd", zg, pw_re).reshape(b, d, ds)
+        xim = jnp.einsum("btmn,btmd->bmnd", zg, pw_im).reshape(b, d, ds)
+        xres.append(xre)
+        xims.append(xim)
+        # --- short-conv tail: last kw-1 *pre-conv* qkv rows before length
+        idx = jnp.clip(
+            lengths[:, None] - (kw - 1) + jnp.arange(kw - 1)[None, :], 0, t - 1
+        )  # [B, kw-1]
+        tail_valid = (lengths[:, None] - (kw - 1) + jnp.arange(kw - 1)[None, :]) >= 0
+        tail = jnp.take_along_axis(qkv_pre, idx[:, :, None], axis=1)  # [B,kw-1,3D]
+        tail = tail * tail_valid[:, :, None]
+        bufs.append(jnp.transpose(tail, (0, 2, 1)))  # [B, 3D, kw-1]
+
+    x = layer_norm(x, p["ln_f_g"], p["ln_f_b"])
+    logits = x @ jnp.transpose(p["embed"])  # [B, T, V]
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1
+    )[:, 0]  # [B, V]
+    return (
+        last,
+        jnp.stack(xres, axis=1),
+        jnp.stack(xims, axis=1),
+        jnp.stack(bufs, axis=1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Distillation step (paper §3.2): batched modal interpolation, l2 or H2
+# ---------------------------------------------------------------------------
+
+
+def distill_loss(params, target, objective="l2"):
+    """params: dict of decay/theta/r_re/r_im [C, d]; target: [C, L] filter
+    taps for tau = 0..L-1 (h[1..L] in paper indexing)."""
+    length = target.shape[1]
+    hhat = modal_filter(  # L1 Pallas kernel
+        params["decay"], params["theta"], params["r_re"], params["r_im"],
+        length=length,
+    )
+    if objective == "h2":
+        # Parseval: H2 distance == l2 distance; computing it in frequency
+        # domain exercises the paper's eq. B.9 objective.
+        err = jnp.fft.rfft(hhat - target, axis=-1)
+        return jnp.mean(jnp.sum(jnp.abs(err) ** 2, axis=-1) / length)
+    return jnp.mean(jnp.sum((hhat - target) ** 2, axis=-1))
+
+
+def distill_step(params, m, v, step, target, lr=0.02, objective="l2"):
+    """One Adam step of the modal interpolation program
+    min ||h_hat - h||^2 over poles (polar) + residues (cartesian).
+
+    Projected gradient on the pole magnitudes keeps |lambda| < 1: the paper
+    (App. B.1) notes distillation itself needs no stability constraint, but
+    the deployed recurrence does — an unstable pole makes the prefill
+    powers x_T = sum lam^(T-1-j) z_j blow up.  The projection radius 0.9995
+    leaves the optimizer the full useful range (lambda^L at L=256 still
+    ~0.88)."""
+    loss, grads = jax.value_and_grad(distill_loss)(params, target, objective)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = step + 1.0
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        new_p[k] = params[k] - lr * (new_m[k] / bc1) / (
+            jnp.sqrt(new_v[k] / bc2) + eps
+        )
+    new_p["decay"] = jnp.clip(new_p["decay"], 0.0, 0.9995)
+    return new_p, new_m, new_v, loss
+
+
+def init_modal(key, c, d):
+    """Ring-of-poles init (radius ~0.9, phases spread over the upper half
+    circle in conjugate-symmetric pairs is implicit: real target keeps the
+    optimization real-symmetric)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = jnp.tile(jnp.linspace(0.0, jnp.pi, d)[None], (c, 1))
+    theta = theta + jax.random.normal(k1, (c, d)) * 0.01
+    # spread magnitudes so both fast and slow timescales are reachable
+    decay = jnp.tile(jnp.linspace(0.6, 0.97, d)[None], (c, 1))
+    decay = jnp.clip(decay + jax.random.normal(k2, (c, d)) * 0.01, 0.05, 0.999)
+    return {
+        "decay": decay,
+        "theta": theta,
+        "r_re": jax.random.normal(k3, (c, d)) * 0.01,
+        "r_im": jnp.zeros((c, d)),
+    }

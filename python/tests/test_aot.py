@@ -1,0 +1,81 @@
+"""AOT artifact sanity: manifests parse, HLO text loads, shapes line up.
+
+Runs only when `make artifacts` has produced the output directory (pytest
+is invoked after artifacts in the Makefile)."""
+
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.isdir(ART), reason="run `make artifacts` first"
+)
+
+
+def manifest(name):
+    path = os.path.join(ART, f"{name}.manifest.txt")
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.startswith("#") or not line.strip():
+                continue
+            rows.append(line.split())
+    return rows
+
+
+def test_expected_artifacts_exist():
+    expected = [
+        "train_step_multihyena_small",
+        "train_step_hyena_small",
+        "train_step_gpt_small",
+        "eval_loss_multihyena_small",
+        "prefill_multihyena_small",
+        "decode_multihyena_small",
+        "distill_step_c24_d16_l256",
+        "train_step_multihyena_ar",
+        "train_step_hyena_ar",
+    ]
+    for name in expected:
+        assert os.path.exists(os.path.join(ART, f"{name}.hlo.txt")), name
+        assert os.path.exists(os.path.join(ART, f"{name}.manifest.txt")), name
+
+
+def test_hlo_text_is_parseable_header():
+    with open(os.path.join(ART, "decode_multihyena_small.hlo.txt")) as f:
+        head = f.read(200)
+    assert head.startswith("HloModule"), head[:50]
+
+
+def test_train_step_manifest_roundtrip():
+    rows = manifest("train_step_multihyena_small")
+    ins = [r for r in rows if r[0] == "in"]
+    outs = [r for r in rows if r[0] == "out"]
+    # params + m + v appear symmetrically in inputs and outputs
+    n_leaves = sum(1 for r in ins if r[2].startswith("0."))
+    assert n_leaves > 10
+    assert len(outs) == 3 * n_leaves + 1  # params', m', v', loss
+    # tokens/targets are i32, mask f32
+    dtypes = {r[2]: r[3] for r in ins}
+    assert dtypes["4"] == "i32" and dtypes["5"] == "i32" and dtypes["6"] == "f32"
+
+
+def test_checkpoint_manifest_offsets_contiguous():
+    rows = manifest("params_multihyena_small")
+    off = 0
+    for r in rows:
+        assert r[0] == "leaf"
+        assert int(r[4]) == off
+        off += int(r[5])
+    blob = os.path.getsize(os.path.join(ART, "params_multihyena_small.bin"))
+    assert blob == off
+
+
+def test_decode_manifest_state_shapes():
+    rows = manifest("decode_multihyena_small")
+    ins = {r[2]: r[4] for r in rows if r[0] == "in"}
+    # x_re input (arg 3) is [B, n_layer, D, d_state] = 8,3,96,16
+    assert ins["3"] == "8,3,96,16"
+    assert ins["4"] == "8,3,96,16"
+    assert ins["5"] == "8,3,288,2"  # short-conv buffer

@@ -1,0 +1,212 @@
+"""L2 model tests: shapes, training signal, and — critically — agreement
+between the convolutional forward pass and the distilled recurrent mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def tokens(b, t, seed=0, vocab=None):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.integers(0, vocab or CFG.vocab, (b, t)), jnp.int32)
+
+
+class TestForward:
+    def test_logits_shape(self, params):
+        x = tokens(2, CFG.seq_len)
+        logits = M.forward(CFG, params, x)
+        assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_causality(self, params):
+        """Perturbing token t must not change logits at positions < t."""
+        x = tokens(1, 32, seed=1)
+        base = M.forward(CFG, params, x)
+        x2 = x.at[0, 20].set((x[0, 20] + 1) % CFG.vocab)
+        pert = M.forward(CFG, params, x2)
+        np.testing.assert_allclose(base[0, :20], pert[0, :20], atol=1e-5)
+        assert not np.allclose(base[0, 20:], pert[0, 20:], atol=1e-5)
+
+    def test_gpt_variant_runs(self):
+        cfg = M.variant(CFG, "gpt")
+        p = M.init_params(cfg, jax.random.PRNGKey(1))
+        logits = M.forward(cfg, p, tokens(2, cfg.seq_len))
+        assert logits.shape == (2, cfg.seq_len, cfg.vocab)
+
+    def test_hyena_variant_runs(self):
+        cfg = M.variant(CFG, "hyena")
+        assert cfg.n_filters == cfg.d_model
+        p = M.init_params(cfg, jax.random.PRNGKey(1))
+        logits = M.forward(cfg, p, tokens(1, 16))
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_filter_taps_shape_and_decay(self, params):
+        h = M.filter_taps(CFG, params["layers"][0], CFG.seq_len)
+        assert h.shape == (CFG.n_filters, CFG.seq_len)
+        energy_head = np.abs(np.asarray(h))
+        assert energy_head[:, -8:].mean() < energy_head[:, :8].mean()
+
+
+class TestTraining:
+    def test_loss_decreases(self, params):
+        cfg = CFG
+        p = params
+        m, v = M.init_opt(p)
+        x = tokens(4, cfg.seq_len, seed=2)
+        y = jnp.roll(x, -1, axis=1)
+        mask = jnp.ones(x.shape, jnp.float32)
+        step = jax.jit(
+            lambda p, m, v, s: M.train_step(cfg, p, m, v, s, x, y, mask)
+        )
+        losses = []
+        for i in range(8):
+            p, m, v, loss = step(p, m, v, jnp.float32(i))
+            losses.append(float(loss))
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0]
+
+    def test_masked_loss_ignores_positions(self, params):
+        x = tokens(2, 16, seed=3)
+        y = jnp.roll(x, -1, axis=1)
+        full = M.loss_fn(CFG, params, x, y, jnp.ones(x.shape, jnp.float32))
+        m = jnp.zeros(x.shape, jnp.float32).at[:, 5].set(1.0)
+        only5 = M.loss_fn(CFG, params, x, y, m)
+        logits = M.forward(CFG, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        want = -jnp.mean(
+            jnp.take_along_axis(logp[:, 5], y[:, 5][:, None], axis=-1)
+        )
+        np.testing.assert_allclose(only5, want, rtol=1e-5)
+        assert not np.allclose(full, only5)
+
+
+class TestRecurrentMode:
+    """Conv-mode forward vs distilled prefill+decode (§3.4 deployment)."""
+
+    def _distilled_modal(self, params, d, iters=3000):
+        """Distill the model's true implicit filters into order-d modal
+        SSMs (in-process gradient distillation, cosine lr)."""
+        cfg = CFG
+        stacks = {k: [] for k in ("lam_re", "lam_im", "r_re", "r_im", "h0")}
+        key = jax.random.PRNGKey(7)
+        for lp in params["layers"]:
+            h = M.filter_taps(cfg, lp, cfg.seq_len)  # [M, L]
+            tgt = h[:, 1:]  # taps tau=0.. map to h[1..]
+            mp = M.init_modal(key, cfg.n_filters, d)
+            m_ = {k: jnp.zeros_like(x) for k, x in mp.items()}
+            v_ = dict(m_)
+            step = jax.jit(
+                lambda p, m, v, s, lr: M.distill_step(p, m, v, s, tgt, lr=lr)
+            )
+            for it in range(iters):
+                lr = 0.05 * 0.5 * (1 + np.cos(np.pi * it / iters)) + 1e-4
+                mp, m_, v_, loss = step(
+                    mp, m_, v_, jnp.float32(it), jnp.float32(lr)
+                )
+            stacks["lam_re"].append(mp["decay"] * jnp.cos(mp["theta"]))
+            stacks["lam_im"].append(mp["decay"] * jnp.sin(mp["theta"]))
+            stacks["r_re"].append(mp["r_re"])
+            stacks["r_im"].append(mp["r_im"])
+            stacks["h0"].append(h[:, 0])
+        return {k: jnp.stack(v) for k, v in stacks.items()}
+
+    def test_prefill_decode_consistency(self, params):
+        """Prefill(T) then K decode steps must track the full conv forward
+        pass over the same T+K tokens (within distillation error).
+
+        Untrained Siren filters are nearly full-rank (the paper's App. E.2
+        observation), so this uses a generous order d=24 at L=64; the
+        trained-model case distills far smaller (§5.2)."""
+        cfg = CFG
+        modal = self._distilled_modal(params, d=24)
+        t, k = 24, 6
+        full = tokens(2, t + k, seed=5)
+        lengths = jnp.asarray([t, t - 3], jnp.int32)
+
+        last, xr, xi, buf = M.prefill(cfg, params, modal, full[:, :t], lengths)
+        ref_logits = M.forward(cfg, params, full)
+
+        # prefill last-logit vs conv forward at position len-1 (exact: the
+        # prefill output path IS the convolution)
+        for b, ln in enumerate([t, t - 3]):
+            np.testing.assert_allclose(
+                last[b], ref_logits[b, ln - 1], rtol=2e-3, atol=2e-3
+            )
+        assert float(jnp.max(jnp.abs(xr))) < 1e3, "unstable prefill state"
+
+        # teacher-forced decode for batch row 0 (full length t)
+        errs = []
+        for j in range(k):
+            tok = full[:, t + j]
+            logits, xr, xi, buf = M.decode_step(cfg, params, modal, tok, xr, xi, buf)
+            want = ref_logits[0, t + j]
+            got = logits[0]
+            errs.append(
+                float(jnp.linalg.norm(got - want) / (jnp.linalg.norm(want) + 1e-9))
+            )
+        assert max(errs) < 0.15, f"relative logit drift too large: {errs}"
+
+    def test_decode_step_shapes(self, params):
+        cfg = CFG
+        b, nl, dm, ds = 3, cfg.n_layer, cfg.d_model, 8
+        modal = {
+            "lam_re": jnp.zeros((nl, cfg.n_filters, ds)),
+            "lam_im": jnp.zeros((nl, cfg.n_filters, ds)),
+            "r_re": jnp.zeros((nl, cfg.n_filters, ds)),
+            "r_im": jnp.zeros((nl, cfg.n_filters, ds)),
+            "h0": jnp.zeros((nl, cfg.n_filters)),
+        }
+        xr = jnp.zeros((b, nl, dm, ds))
+        buf = jnp.zeros((b, nl, 3 * dm, cfg.short_kw - 1))
+        logits, xr2, xi2, buf2 = M.decode_step(
+            cfg, params, modal, jnp.zeros((b,), jnp.int32), xr, xr, buf
+        )
+        assert logits.shape == (b, cfg.vocab)
+        assert xr2.shape == xr.shape and buf2.shape == buf.shape
+
+
+class TestDistillStep:
+    def test_converges_on_synthetic_ssm(self):
+        """Distilling a filter that IS a d-dim modal SSM must recover it to
+        near machine precision (well-specified case)."""
+        r = np.random.default_rng(0)
+        c, d, length = 4, 8, 128
+        true = M.init_modal(jax.random.PRNGKey(3), c, d)
+        true["r_re"] = jnp.asarray(r.normal(0, 0.3, (c, d)), jnp.float32)
+        true["decay"] = jnp.asarray(r.uniform(0.7, 0.95, (c, d)), jnp.float32)
+        from compile.kernels.ref import modal_filter_ref
+
+        tgt = modal_filter_ref(
+            true["decay"], true["theta"], true["r_re"], true["r_im"], length
+        )
+        p = M.init_modal(jax.random.PRNGKey(11), c, d)
+        m = {k: jnp.zeros_like(v) for k, v in p.items()}
+        v = dict(m)
+        step = jax.jit(lambda p, m, v, s: M.distill_step(p, m, v, s, tgt))
+        for it in range(600):
+            p, m, v, loss = step(p, m, v, jnp.float32(it))
+        assert float(loss) < 1e-3, float(loss)
+
+    def test_h2_objective_matches_l2_scale(self):
+        """Parseval: H2 and l2 objectives agree up to the DFT convention."""
+        r = np.random.default_rng(1)
+        c, d, length = 2, 4, 64
+        p = M.init_modal(jax.random.PRNGKey(1), c, d)
+        tgt = jnp.asarray(r.normal(0, 1, (c, length)), jnp.float32)
+        l2 = M.distill_loss(p, tgt, "l2")
+        h2 = M.distill_loss(p, tgt, "h2")
+        # rfft of a real signal halves the spectrum; the H2 sum over rfft
+        # bins is within a factor ~2 of the l2 energy — check same order.
+        assert 0.2 < float(h2 / l2) < 2.5

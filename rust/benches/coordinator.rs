@@ -1,0 +1,92 @@
+//! Coordinator benchmarks: scheduling overhead per token, continuous
+//! batching utilization, and tail latency under load — L3 should not be the
+//! bottleneck (§Perf target: overhead ≪ one engine decode step).
+
+use laughing_hyena::benchkit::{fmt_time, Table};
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::{spawn, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+
+fn main() {
+    let mut table = Table::new(&[
+        "slots", "requests", "wall", "tok/s", "ttft p50", "e2e p99", "util %",
+    ]);
+    for (slots, n_req, max_new) in [(2usize, 16usize, 16usize), (4, 32, 16), (8, 64, 16)] {
+        let handle = spawn(
+            move || {
+                let shape = LmShape::bench("nano").unwrap();
+                Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
+            },
+            ServeConfig {
+                max_batch: slots,
+                linger_ms: 1,
+                max_new_tokens: max_new,
+                mem_budget: 1 << 30,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| handle.submit(vec![1 + (i % 32) as i32; 24], max_new))
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("response");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = handle.metrics.snapshot();
+        // utilization: generated tokens / (decode steps * slots)
+        let util = 100.0 * m.tokens_generated as f64
+            / ((m.decode_steps as f64) * slots as f64).max(1.0);
+        table.row(&[
+            slots.to_string(),
+            n_req.to_string(),
+            fmt_time(wall),
+            format!("{:.0}", (n_req * max_new) as f64 / wall),
+            fmt_time(laughing_hyena::util::stats::percentile(&m.ttft_s, 50.0)),
+            fmt_time(laughing_hyena::util::stats::percentile(&m.total_s, 99.0)),
+            format!("{util:.0}"),
+        ]);
+        handle.shutdown();
+    }
+    table.print("coordinator under load (native recurrent engine, shape nano)");
+    let _ = table.write_csv("bench_coordinator.csv");
+
+    // pure scheduling overhead: 0-work engine
+    struct NullEngine {
+        slots: usize,
+    }
+    impl SlotEngine for NullEngine {
+        fn n_slots(&self) -> usize {
+            self.slots
+        }
+        fn bytes_per_seq(&self) -> u64 {
+            1
+        }
+        fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+            jobs.iter().map(|(s, _)| (*s, 1)).collect()
+        }
+        fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+            active.iter().map(|&s| (s, 1)).collect()
+        }
+        fn clear_slot(&mut self, _slot: usize) {}
+    }
+    let handle = spawn(
+        || Box::new(NullEngine { slots: 8 }) as Box<dyn SlotEngine>,
+        ServeConfig { max_batch: 8, linger_ms: 0, max_new_tokens: 64, mem_budget: 1 << 30 },
+    );
+    let n_req = 200;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req).map(|_| handle.submit(vec![1; 4], 64)).collect();
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = handle.metrics.snapshot();
+    println!(
+        "\nscheduling overhead (null engine): {} decode steps in {:.3}s -> {:.1}us/step",
+        m.decode_steps,
+        wall,
+        wall * 1e6 / m.decode_steps as f64
+    );
+    handle.shutdown();
+}

@@ -1,0 +1,113 @@
+//! Distillation benchmarks + method ablations:
+//! * modal-fit iteration cost vs (order, length) — the distillery hot path;
+//! * gradient fit vs Prony vs Padé vs balanced truncation (accuracy + time)
+//!   on clean and rough filters — the paper's §3.2 / App.-E comparison;
+//! * prefill strategy ablation (recurrent vs powers vs Prop-3.2 FFT).
+
+use laughing_hyena::benchkit::{bench, fmt_time, time_once, Table};
+use laughing_hyena::data::filters::{model_filters, Family};
+use laughing_hyena::distill::modal_fit::{distill_modal, DistillConfig};
+use laughing_hyena::distill::prefill::{prefill_powers, prefill_recurrent, FftPrefiller};
+use laughing_hyena::distill::{balanced, pade, prony};
+use laughing_hyena::util::stats::rel_err;
+use laughing_hyena::util::Prng;
+
+fn main() {
+    // 1) modal-fit cost scaling
+    let mut cost = Table::new(&["order", "L", "time/iter", "iters/s"]);
+    let mut rng = Prng::new(2);
+    for (d, l) in [(8usize, 256usize), (16, 256), (32, 256), (16, 1024)] {
+        let taps = rng.normal_vec(l);
+        let iters = 50;
+        let cfg = DistillConfig { order: d, iters, restarts: 1, ..Default::default() };
+        let r = bench(&format!("fit d={d} L={l}"), 1, 4, || {
+            distill_modal(&taps, 0.0, &cfg).loss
+        });
+        cost.row(&[
+            d.to_string(),
+            l.to_string(),
+            fmt_time(r.mean_s / iters as f64),
+            format!("{:.0}", iters as f64 / r.mean_s),
+        ]);
+    }
+    cost.print("modal interpolation cost (per Adam iteration)");
+    let _ = cost.write_csv("bench_distill_cost.csv");
+
+    // 2) method ablation: accuracy + wall time per method per family
+    let mut ab = Table::new(&["family", "method", "rel err", "time"]);
+    for fam in [Family::H3Iir, Family::MultiHyena] {
+        let f = &model_filters(fam, 1, 256, 7)[0];
+        let (h0, taps) = (f[0], &f[1..]);
+        let d = 12;
+        // gradient modal fit
+        let cfg = DistillConfig { order: d, iters: 2000, ..Default::default() };
+        let (fit, t_fit) = time_once(|| distill_modal(taps, h0, &cfg));
+        ab.row(&[
+            fam.label().into(),
+            "modal-fit (paper)".into(),
+            format!("{:.2e}", fit.rel_err),
+            fmt_time(t_fit),
+        ]);
+        // Prony
+        let (pr, t_pr) = time_once(|| prony::prony(taps, h0, d));
+        let pr_err = pr
+            .map(|s| rel_err(&s.impulse_response(taps.len()), taps))
+            .unwrap_or(f64::NAN);
+        ab.row(&[
+            fam.label().into(),
+            "prony".into(),
+            format!("{pr_err:.2e}"),
+            fmt_time(t_pr),
+        ]);
+        // Pade
+        let (pd, t_pd) = time_once(|| pade::pade(taps, h0, d));
+        let pd_err = pd
+            .map(|tf| {
+                let h = tf.impulse_response(taps.len() + 1);
+                rel_err(&h[1..], taps)
+            })
+            .unwrap_or(f64::NAN);
+        ab.row(&[
+            fam.label().into(),
+            "pade".into(),
+            format!("{pd_err:.2e}"),
+            fmt_time(t_pd),
+        ]);
+        // balanced truncation
+        let (bt, t_bt) = time_once(|| balanced::balanced_truncate(taps, h0, d, Some(64)));
+        let bt_err = bt
+            .map(|s| rel_err(&s.impulse_response(taps.len()), taps))
+            .unwrap_or(f64::NAN);
+        ab.row(&[
+            fam.label().into(),
+            "balanced (Kung)".into(),
+            format!("{bt_err:.2e}"),
+            fmt_time(t_bt),
+        ]);
+    }
+    ab.print("distillation method ablation (order 12)");
+    let _ = ab.write_csv("bench_distill_methods.csv");
+
+    // 3) prefill strategies (paper §3.4 trade-offs)
+    let mut pf = Table::new(&["T", "recurrent", "powers", "fft (Prop 3.2)"]);
+    let sys = {
+        let f = &model_filters(Family::H3Iir, 1, 64, 9)[0];
+        let cfg = DistillConfig { order: 8, iters: 1500, ..Default::default() };
+        distill_modal(&f[1..], f[0], &cfg).ssm
+    };
+    let fftp = FftPrefiller::new(&sys).expect("prefiller");
+    for t in [256usize, 1024, 4096, 16384] {
+        let u = rng.normal_vec(t);
+        let r1 = bench("rec", 2, 8, || prefill_recurrent(&sys, &u).0[0].re);
+        let r2 = bench("pow", 2, 8, || prefill_powers(&sys, &u).0[0].re);
+        let r3 = bench("fft", 2, 8, || fftp.prefill(&u).0[0].re);
+        pf.row(&[
+            t.to_string(),
+            fmt_time(r1.mean_s),
+            fmt_time(r2.mean_s),
+            fmt_time(r3.mean_s),
+        ]);
+    }
+    pf.print("prefill strategy ablation (order-8 modal SSM)");
+    let _ = pf.write_csv("bench_prefill.csv");
+}

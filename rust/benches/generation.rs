@@ -1,0 +1,68 @@
+//! End-to-end generation benchmarks over the native engines — the timing
+//! backbone for Figures 1.1 / 5.3 / D.11, runnable standalone via
+//! `cargo bench --bench generation`.
+
+use laughing_hyena::benchkit::{fmt_bytes, fmt_time, Table};
+use laughing_hyena::engine::conv_cache::ConvCacheEngine;
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::transformer::TransformerEngine;
+use laughing_hyena::engine::{run_generation, Engine, LmShape};
+use laughing_hyena::util::Prng;
+
+fn main() {
+    let shape = LmShape::bench("nano").unwrap();
+    let mut rng = Prng::new(4);
+    let mut table = Table::new(&[
+        "engine", "T", "K", "batch", "prefill", "tok/s decode", "peak state",
+    ]);
+    for (t, k, b) in [(64usize, 32usize, 2usize), (256, 64, 2), (256, 64, 4)] {
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|_| (0..t).map(|_| rng.below(shape.vocab) as i32).collect())
+            .collect();
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, b, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, b, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, b, 7)),
+            };
+            let r = run_generation(eng.as_mut(), &prompts, k);
+            table.row(&[
+                which.into(),
+                t.to_string(),
+                k.to_string(),
+                b.to_string(),
+                fmt_time(r.prefill_s),
+                format!("{:.1}", (b * (k - 1)) as f64 / r.decode_s),
+                fmt_bytes(r.peak_state_bytes),
+            ]);
+        }
+    }
+    table.print("generation end-to-end (shape nano)");
+    let _ = table.write_csv("bench_generation.csv");
+
+    // per-component decode-step costs: modal update vs attention, isolated
+    let mut steps = Table::new(&["engine", "context", "decode step (1 tok, b=1)"]);
+    for t in [128usize, 512] {
+        let prompts = vec![(0..t).map(|_| rng.below(shape.vocab) as i32).collect::<Vec<_>>()];
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, 1, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, 1, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, 1, 7)),
+            };
+            eng.prefill(&prompts);
+            let n = 64;
+            let t0 = std::time::Instant::now();
+            for _ in 0..n {
+                eng.decode();
+            }
+            steps.row(&[
+                which.into(),
+                t.to_string(),
+                fmt_time(t0.elapsed().as_secs_f64() / n as f64),
+            ]);
+        }
+    }
+    steps.print("single decode-step latency vs context length");
+    let _ = steps.write_csv("bench_decode_step.csv");
+}

@@ -1,0 +1,62 @@
+//! Substrate micro-benchmarks: FFT, Hankel eigensolve, modal evaluation —
+//! the building blocks whose costs bound every experiment driver.
+//! (criterion is unavailable offline; benchkit prints mean/p50/p99.)
+
+use laughing_hyena::benchkit::{bench, fmt_time, Table};
+use laughing_hyena::dsp::fft::dft_real;
+use laughing_hyena::dsp::C64;
+use laughing_hyena::hankel::hankel_singular_values;
+use laughing_hyena::ssm::ModalSsm;
+use laughing_hyena::util::Prng;
+
+fn main() {
+    let mut table = Table::new(&["bench", "mean", "p50", "p99", "throughput"]);
+    let mut rng = Prng::new(1);
+
+    for n in [256usize, 1024, 4096] {
+        let x = rng.normal_vec(n);
+        let r = bench(&format!("fft n={n}"), 3, 30, || dft_real(&x)[0].re);
+        table.row(&[
+            r.name.clone(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p99_s),
+            format!("{:.1} Melem/s", n as f64 / r.mean_s / 1e6),
+        ]);
+    }
+
+    for n in [64usize, 128, 256] {
+        let taps = rng.normal_vec(2 * n);
+        let r = bench(&format!("hankel eig n={n}"), 1, 5, || {
+            hankel_singular_values(&taps, Some(n))[0]
+        });
+        table.row(&[
+            r.name.clone(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p99_s),
+            format!("{:.2} solves/s", 1.0 / r.mean_s),
+        ]);
+    }
+
+    for (d, l) in [(16usize, 256usize), (64, 1024)] {
+        let sys = ModalSsm::new(
+            (0..d).map(|i| C64::polar(0.9, 0.1 * i as f64)).collect(),
+            (0..d).map(|_| C64::new(rng.normal(), rng.normal())).collect(),
+            0.0,
+        );
+        let r = bench(&format!("modal impulse d={d} L={l}"), 3, 50, || {
+            sys.impulse_response(l)[l - 1]
+        });
+        table.row(&[
+            r.name.clone(),
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p99_s),
+            format!("{:.1} Mtap/s", (d * l) as f64 / r.mean_s / 1e6),
+        ]);
+    }
+
+    table.print("substrate micro-benchmarks");
+    let _ = table.write_csv("bench_substrates.csv");
+}

@@ -1,0 +1,172 @@
+//! Benchmark harness (criterion is unavailable in the offline image — see
+//! DESIGN.md §6): warmup + timed iterations, percentile reporting, aligned
+//! table printing and CSV output under `results/`.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+/// A `black_box`-style sink prevents the optimizer from deleting work: have
+/// `f` return a value that folds into the checksum.
+pub fn bench<F: FnMut() -> f64>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let mut sink = 0.0f64;
+    for _ in 0..warmup {
+        sink += f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink += f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    // keep the sink alive
+    if sink.is_nan() {
+        eprintln!("(sink nan)");
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p99_s: stats::percentile(&samples, 99.0),
+        std_s: stats::std_dev(&samples),
+    }
+}
+
+/// Measure wall time of a single closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Aligned plain-text table, printed to stdout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let joined: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", joined.join("  "));
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("  {}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also write the table as CSV under results/<file>.
+    pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all("results")?;
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(format!("results/{file}"), out)
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}us", s * 1e6)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2}GiB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.2}MiB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.1}KiB", bf / K)
+    } else {
+        format!("{b}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop-ish", 2, 16, || {
+            let mut acc = 0.0;
+            for i in 0..100 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.mean_s >= 0.0 && r.p50_s >= 0.0 && r.p99_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test table");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(2.0), "2.00s");
+        assert_eq!(fmt_time(0.002), "2.00ms");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+}

@@ -1,0 +1,232 @@
+//! Configuration system: a TOML-subset parser (serde/toml are unavailable
+//! offline) plus the typed configs the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float and boolean values, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// Parsed config: section -> key -> raw value.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig, ParseError> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(ParseError { line: no + 1, msg: format!("bad section: {line}") });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                let mut val = line[eq + 1..].trim().to_string();
+                if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                if key.is_empty() {
+                    return Err(ParseError { line: no + 1, msg: "empty key".into() });
+                }
+                cfg.sections.entry(section.clone()).or_default().insert(key, val);
+            } else {
+                return Err(ParseError { line: no + 1, msg: format!("expected key = value: {line}") });
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<RawConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+}
+
+/// Model architecture config — mirrors python/compile/model.py::Config so
+/// the launcher, the AOT manifests and the native engines agree on shapes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub kind: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub heads: usize,
+    pub seq_len: usize,
+    pub short_kw: usize,
+    pub mlp_mult: usize,
+    pub d_state: usize,
+}
+
+impl ModelConfig {
+    /// Named presets matching aot.py's TINY / SMALL / AR configs.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let base = ModelConfig {
+            kind: "multihyena".into(),
+            vocab: 512,
+            d_model: 96,
+            n_layer: 3,
+            heads: 8,
+            seq_len: 256,
+            short_kw: 3,
+            mlp_mult: 2,
+            d_state: 16,
+        };
+        match name {
+            "small" => Some(base),
+            "tiny" => Some(ModelConfig {
+                vocab: 64,
+                d_model: 32,
+                n_layer: 2,
+                heads: 4,
+                seq_len: 64,
+                d_state: 8,
+                ..base
+            }),
+            "ar" => Some(ModelConfig {
+                vocab: 128,
+                d_model: 64,
+                n_layer: 2,
+                heads: 8,
+                seq_len: 512,
+                d_state: 8,
+                ..base
+            }),
+            _ => None,
+        }
+    }
+
+    /// Long-conv filters per layer (M for multihyena, D for plain hyena).
+    pub fn n_filters(&self) -> usize {
+        if self.kind == "hyena" {
+            self.d_model
+        } else {
+            self.heads
+        }
+    }
+
+    pub fn from_raw(raw: &RawConfig) -> ModelConfig {
+        let mut base = ModelConfig::preset(raw.get_str("model", "preset", "small"))
+            .unwrap_or_else(|| ModelConfig::preset("small").unwrap());
+        base.kind = raw.get_str("model", "kind", &base.kind.clone()).to_string();
+        base.vocab = raw.get_usize("model", "vocab", base.vocab);
+        base.d_model = raw.get_usize("model", "d_model", base.d_model);
+        base.n_layer = raw.get_usize("model", "n_layer", base.n_layer);
+        base.heads = raw.get_usize("model", "heads", base.heads);
+        base.seq_len = raw.get_usize("model", "seq_len", base.seq_len);
+        base.d_state = raw.get_usize("model", "d_state", base.d_state);
+        base
+    }
+}
+
+/// Serving coordinator config.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Fixed engine batch (artifact batch for the AOT path).
+    pub max_batch: usize,
+    /// Batching linger before dispatching a partial batch.
+    pub linger_ms: u64,
+    pub max_new_tokens: usize,
+    /// Device memory budget for the admission ledger (bytes).
+    pub mem_budget: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 8,
+            linger_ms: 2,
+            max_new_tokens: 64,
+            mem_budget: 2 << 30,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_raw(raw: &RawConfig) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            max_batch: raw.get_usize("serve", "max_batch", d.max_batch),
+            linger_ms: raw.get_usize("serve", "linger_ms", d.linger_ms as usize) as u64,
+            max_new_tokens: raw.get_usize("serve", "max_new_tokens", d.max_new_tokens),
+            mem_budget: raw.get_usize("serve", "mem_budget", d.mem_budget as usize) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let raw = RawConfig::parse(
+            "# comment\n[model]\npreset = \"tiny\"\nd_model = 48\n\n[serve]\nmax_batch = 4\nlinger_ms = 7\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("model", "preset"), Some("tiny"));
+        assert_eq!(raw.get_usize("serve", "max_batch", 0), 4);
+        let mc = ModelConfig::from_raw(&raw);
+        assert_eq!(mc.d_model, 48);
+        assert_eq!(mc.vocab, 64); // from tiny preset
+        let sc = ServeConfig::from_raw(&raw);
+        assert_eq!(sc.linger_ms, 7);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(RawConfig::parse("not a kv line").is_err());
+        assert!(RawConfig::parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn presets_exist() {
+        for p in ["tiny", "small", "ar"] {
+            assert!(ModelConfig::preset(p).is_some(), "{p}");
+        }
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn hyena_filter_count_is_width() {
+        let mut c = ModelConfig::preset("small").unwrap();
+        assert_eq!(c.n_filters(), 8);
+        c.kind = "hyena".into();
+        assert_eq!(c.n_filters(), 96);
+    }
+}

@@ -1,0 +1,200 @@
+//! Admission queue + slot allocator: the continuous-batching core.
+//!
+//! The engine exposes `B` fixed slots (the AOT artifacts have a fixed batch
+//! dimension).  Sequences occupy a slot from prefill until their token
+//! budget is exhausted; freed slots are immediately refilled from the
+//! queue.  A memory ledger guards admission so the coordinator reproduces
+//! the paper's peak-batch behaviour under a byte budget.
+
+use std::collections::VecDeque;
+
+use super::request::GenRequest;
+
+/// State of one engine slot.
+pub enum Slot {
+    Free,
+    Busy {
+        req: GenRequest,
+        generated: Vec<i32>,
+        /// Set when the first token was produced (for TTFT).
+        first_token_s: Option<f64>,
+    },
+}
+
+impl Slot {
+    pub fn is_free(&self) -> bool {
+        matches!(self, Slot::Free)
+    }
+}
+
+/// FIFO admission queue with a memory ledger.
+pub struct Batcher {
+    pub queue: VecDeque<GenRequest>,
+    pub slots: Vec<Slot>,
+    /// Bytes of generation state one sequence costs (constant for the
+    /// recurrent engine — the whole point of the paper).
+    pub bytes_per_seq: u64,
+    pub mem_budget: u64,
+    pub mem_used: u64,
+}
+
+impl Batcher {
+    pub fn new(n_slots: usize, bytes_per_seq: u64, mem_budget: u64) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            slots: (0..n_slots).map(|_| Slot::Free).collect(),
+            bytes_per_seq,
+            mem_budget,
+            mem_used: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn busy_slots(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| !self.slots[i].is_free()).collect()
+    }
+
+    pub fn free_slots(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.slots[i].is_free()).collect()
+    }
+
+    /// Admit queued requests into free slots, respecting the memory budget.
+    /// Returns (slot, prompt) pairs that need prefilling.
+    pub fn admit(&mut self) -> Vec<(usize, Vec<i32>)> {
+        let mut admitted = vec![];
+        for slot_idx in self.free_slots() {
+            if self.queue.is_empty() {
+                break;
+            }
+            if self.mem_used + self.bytes_per_seq > self.mem_budget {
+                break; // ledger full: leave requests queued
+            }
+            let req = self.queue.pop_front().unwrap();
+            let prompt = req.prompt.clone();
+            self.slots[slot_idx] =
+                Slot::Busy { req, generated: vec![], first_token_s: None };
+            self.mem_used += self.bytes_per_seq;
+            admitted.push((slot_idx, prompt));
+        }
+        admitted
+    }
+
+    /// Release a slot and return its request + generated tokens.
+    pub fn release(&mut self, slot_idx: usize) -> Option<(GenRequest, Vec<i32>, Option<f64>)> {
+        let slot = std::mem::replace(&mut self.slots[slot_idx], Slot::Free);
+        match slot {
+            Slot::Free => None,
+            Slot::Busy { req, generated, first_token_s } => {
+                self.mem_used = self.mem_used.saturating_sub(self.bytes_per_seq);
+                Some((req, generated, first_token_s))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64, len: usize) -> (GenRequest, std::sync::mpsc::Receiver<super::super::request::GenResponse>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                id,
+                prompt: vec![1; len],
+                max_new_tokens: 4,
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn admits_up_to_slot_count() {
+        let mut b = Batcher::new(2, 100, 10_000);
+        let mut rxs = vec![];
+        for i in 0..5 {
+            let (r, rx) = req(i, 4);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        let admitted = b.admit();
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.queue_len(), 3);
+        assert_eq!(b.busy_slots().len(), 2);
+        // releasing frees capacity
+        b.release(admitted[0].0).unwrap();
+        let more = b.admit();
+        assert_eq!(more.len(), 1);
+    }
+
+    #[test]
+    fn memory_ledger_blocks_admission() {
+        let mut b = Batcher::new(4, 600, 1000); // only one sequence fits
+        let mut rxs = vec![];
+        for i in 0..3 {
+            let (r, rx) = req(i, 4);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        assert_eq!(b.admit().len(), 1);
+        assert_eq!(b.mem_used, 600);
+        assert_eq!(b.queue_len(), 2);
+        // free it -> next can come in
+        let busy = b.busy_slots();
+        b.release(busy[0]);
+        assert_eq!(b.mem_used, 0);
+        assert_eq!(b.admit().len(), 1);
+    }
+
+    #[test]
+    fn ledger_invariant_under_random_ops() {
+        // property: mem_used == busy_slots * bytes_per_seq, always
+        check("ledger invariant", 16, |rng| {
+            let mut b = Batcher::new(4, 50, 175); // max 3 concurrent
+            let mut rxs = vec![];
+            let mut next_id = 0u64;
+            for _ in 0..40 {
+                if rng.uniform() < 0.6 {
+                    let (r, rx) = req(next_id, 2);
+                    next_id += 1;
+                    b.enqueue(r);
+                    rxs.push(rx);
+                    b.admit();
+                } else {
+                    let busy = b.busy_slots();
+                    if !busy.is_empty() {
+                        let k = busy[rng.below(busy.len())];
+                        b.release(k);
+                        b.admit();
+                    }
+                }
+                let want = b.busy_slots().len() as u64 * 50;
+                if b.mem_used != want {
+                    return Err(format!("ledger {} != busy {}", b.mem_used, want));
+                }
+                if b.mem_used > 175 {
+                    return Err("budget exceeded".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn release_free_slot_is_none() {
+        let mut b = Batcher::new(1, 10, 100);
+        assert!(b.release(0).is_none());
+    }
+}

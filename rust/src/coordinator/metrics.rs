@@ -1,0 +1,103 @@
+//! Coordinator metrics: counters and latency reservoirs, shared behind a
+//! mutex (the request path touches them once per token batch, not per
+//! request, so contention is negligible — measured in benches/coordinator).
+
+use std::sync::Mutex;
+
+#[derive(Default, Debug)]
+pub struct MetricsInner {
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub prefills: u64,
+    pub decode_steps: u64,
+    pub ttft_s: Vec<f64>,
+    pub total_s: Vec<f64>,
+    pub queue_peak: usize,
+}
+
+/// Shared metrics handle.
+#[derive(Default)]
+pub struct Metrics(Mutex<MetricsInner>);
+
+impl Metrics {
+    pub fn record_enqueue(&self, queue_len: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.requests_in += 1;
+        m.queue_peak = m.queue_peak.max(queue_len);
+    }
+
+    pub fn record_prefill(&self, n: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.prefills += n as u64;
+    }
+
+    pub fn record_decode(&self, tokens: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.decode_steps += 1;
+        m.tokens_generated += tokens as u64;
+    }
+
+    pub fn record_done(&self, ttft: Option<f64>, total: f64) {
+        let mut m = self.0.lock().unwrap();
+        m.requests_done += 1;
+        if let Some(t) = ttft {
+            m.ttft_s.push(t);
+        }
+        m.total_s.push(total);
+    }
+
+    pub fn snapshot(&self) -> MetricsInner {
+        let m = self.0.lock().unwrap();
+        MetricsInner {
+            requests_in: m.requests_in,
+            requests_done: m.requests_done,
+            tokens_generated: m.tokens_generated,
+            prefills: m.prefills,
+            decode_steps: m.decode_steps,
+            ttft_s: m.ttft_s.clone(),
+            total_s: m.total_s.clone(),
+            queue_peak: m.queue_peak,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let m = self.snapshot();
+        let p = |v: &Vec<f64>, q| crate::util::stats::percentile(v, q);
+        format!(
+            "requests {}/{} | tokens {} | prefills {} | decode steps {} | \
+             ttft p50 {:.1}ms p99 {:.1}ms | e2e p50 {:.1}ms p99 {:.1}ms | queue peak {}",
+            m.requests_done,
+            m.requests_in,
+            m.tokens_generated,
+            m.prefills,
+            m.decode_steps,
+            p(&m.ttft_s, 50.0) * 1e3,
+            p(&m.ttft_s, 99.0) * 1e3,
+            p(&m.total_s, 50.0) * 1e3,
+            p(&m.total_s, 99.0) * 1e3,
+            m.queue_peak
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.record_enqueue(3);
+        m.record_enqueue(5);
+        m.record_prefill(2);
+        m.record_decode(8);
+        m.record_done(Some(0.01), 0.05);
+        let s = m.snapshot();
+        assert_eq!(s.requests_in, 2);
+        assert_eq!(s.queue_peak, 5);
+        assert_eq!(s.tokens_generated, 8);
+        assert_eq!(s.requests_done, 1);
+        assert!(m.report().contains("requests 1/2"));
+    }
+}

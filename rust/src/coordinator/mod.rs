@@ -1,0 +1,16 @@
+//! Serving coordinator (L3): request router, dynamic batcher with
+//! continuous batching over fixed engine slots, per-session state manager
+//! and metrics — the deployment story the paper's throughput numbers
+//! assume (recurrent models keep per-sequence state constant, so the
+//! coordinator can pack far more sequences per device, Figure 1.1).
+//!
+//! Thread-based (std::sync::mpsc); tokio is unavailable offline.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod state;
+
+pub use request::{GenRequest, GenResponse};
+pub use server::{CoordinatorHandle, SlotEngine};

@@ -1,0 +1,32 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A generation request submitted to the coordinator.
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Channel the finished response is delivered on.
+    pub reply: Sender<GenResponse>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// The finished generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Seconds from enqueue to first generated token.
+    pub ttft_s: f64,
+    /// Seconds from enqueue to completion.
+    pub total_s: f64,
+}
+
+/// Why a sequence left its slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+}

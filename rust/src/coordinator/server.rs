@@ -1,0 +1,224 @@
+//! The coordinator event loop: a dedicated engine thread running continuous
+//! batching over the slot engine, fed by an mpsc request channel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batcher, Slot};
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse};
+pub use super::state::SlotEngine;
+use crate::config::ServeConfig;
+
+enum Msg {
+    Req(GenRequest),
+    Shutdown,
+}
+
+/// Client handle: submit prompts, read metrics, shut down.
+pub struct CoordinatorHandle {
+    tx: Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl CoordinatorHandle {
+    /// Submit a generation request; returns the response receiver.
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let req = GenRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt,
+            max_new_tokens,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        self.tx.send(Msg::Req(req)).expect("coordinator alive");
+        rx
+    }
+
+    /// Stop the engine thread after draining in-flight work.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for CoordinatorHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn the coordinator.  The engine is built *inside* the engine thread
+/// via `make_engine` because PJRT executables are not `Send`.
+pub fn spawn<F>(make_engine: F, cfg: ServeConfig) -> CoordinatorHandle
+where
+    F: FnOnce() -> Box<dyn SlotEngine> + Send + 'static,
+{
+    let (tx, rx) = channel::<Msg>();
+    let metrics = Arc::new(Metrics::default());
+    let m = metrics.clone();
+    let join = std::thread::spawn(move || {
+        let mut engine = make_engine();
+        let n_slots = engine.n_slots();
+        let mut batcher = Batcher::new(n_slots, engine.bytes_per_seq(), cfg.mem_budget);
+        let mut shutdown = false;
+        loop {
+            // 1) intake: drain quickly; block briefly when idle
+            let idle = batcher.busy_slots().is_empty() && batcher.queue_len() == 0;
+            if idle && !shutdown {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(Msg::Req(r)) => {
+                        m.record_enqueue(batcher.queue_len() + 1);
+                        batcher.enqueue(r);
+                    }
+                    Ok(Msg::Shutdown) => shutdown = true,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => shutdown = true,
+                }
+            }
+            // opportunistic linger for batch formation
+            let linger = Instant::now();
+            loop {
+                match rx.try_recv() {
+                    Ok(Msg::Req(r)) => {
+                        m.record_enqueue(batcher.queue_len() + 1);
+                        batcher.enqueue(r);
+                    }
+                    Ok(Msg::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    Err(_) => {
+                        if batcher.queue_len() == 0
+                            || batcher.free_slots().is_empty()
+                            || linger.elapsed() > Duration::from_millis(cfg.linger_ms)
+                        {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            if shutdown && batcher.busy_slots().is_empty() && batcher.queue_len() == 0 {
+                break;
+            }
+            // 2) admission + prefill
+            let jobs = batcher.admit();
+            if !jobs.is_empty() {
+                m.record_prefill(jobs.len());
+                let firsts = engine.prefill_slots(&jobs);
+                for (slot, tok) in firsts {
+                    if let Slot::Busy { req, generated, first_token_s } =
+                        &mut batcher.slots[slot]
+                    {
+                        generated.push(tok);
+                        *first_token_s = Some(req.enqueued.elapsed().as_secs_f64());
+                    }
+                }
+            }
+            // 3) decode step over active slots
+            let active = batcher.busy_slots();
+            if !active.is_empty() {
+                let toks = engine.decode_slots(&active);
+                m.record_decode(toks.len());
+                for (slot, tok) in toks {
+                    if let Slot::Busy { generated, .. } = &mut batcher.slots[slot] {
+                        generated.push(tok);
+                    }
+                }
+            }
+            // 4) retire finished sequences
+            for slot in batcher.busy_slots() {
+                let done = match &batcher.slots[slot] {
+                    Slot::Busy { req, generated, .. } => generated.len() >= req.max_new_tokens,
+                    Slot::Free => false,
+                };
+                if done {
+                    if let Some((req, mut generated, ttft)) = batcher.release(slot) {
+                        generated.truncate(req.max_new_tokens);
+                        let total = req.enqueued.elapsed().as_secs_f64();
+                        m.record_done(ttft, total);
+                        let _ = req.reply.send(GenResponse {
+                            id: req.id,
+                            tokens: generated,
+                            ttft_s: ttft.unwrap_or(total),
+                            total_s: total,
+                        });
+                    }
+                    engine.clear_slot(slot);
+                }
+            }
+        }
+    });
+    CoordinatorHandle { tx, join: Some(join), metrics, next_id: AtomicU64::new(0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::recurrent::RecurrentEngine;
+    use crate::engine::LmShape;
+
+    fn handle(slots: usize) -> CoordinatorHandle {
+        spawn(
+            move || {
+                let shape = LmShape::bench("nano").unwrap();
+                Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
+            },
+            ServeConfig { max_batch: slots, linger_ms: 1, max_new_tokens: 8, mem_budget: 1 << 30 },
+        )
+    }
+
+    #[test]
+    fn serves_a_single_request() {
+        let h = handle(2);
+        let rx = h.submit(vec![1, 2, 3], 5);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.ttft_s <= resp.total_s);
+        h.shutdown();
+    }
+
+    #[test]
+    fn serves_more_requests_than_slots() {
+        let h = handle(2);
+        let rxs: Vec<_> = (0..6).map(|i| h.submit(vec![1 + i, 2, 3], 4)).collect();
+        let mut ids = vec![];
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(r.tokens.len(), 4);
+            ids.push(r.id);
+        }
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        let m = h.metrics.snapshot();
+        assert_eq!(m.requests_done, 6);
+        assert_eq!(m.tokens_generated as usize + m.prefills as usize, 6 * 4);
+        h.shutdown();
+    }
+
+    #[test]
+    fn identical_prompts_get_identical_tokens_regardless_of_batching() {
+        // continuous batching must not leak state across slots
+        let h = handle(3);
+        let a = h.submit(vec![5, 6, 7], 6).recv_timeout(Duration::from_secs(30)).unwrap();
+        // now saturate and resubmit the same prompt
+        let rxs: Vec<_> = (0..5).map(|_| h.submit(vec![5, 6, 7], 6)).collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(r.tokens, a.tokens, "determinism across batch layouts");
+        }
+        h.shutdown();
+    }
+}

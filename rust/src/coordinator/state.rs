@@ -1,0 +1,132 @@
+//! Slot-engine abstraction: the coordinator schedules over `B` fixed slots
+//! whose per-sequence state the engine owns.  Two implementations:
+//! the native [`crate::engine::recurrent::RecurrentEngine`] and the PJRT
+//! [`crate::runtime::lm::ServedModel`] (AOT artifacts).
+
+use crate::engine::recurrent::RecurrentEngine;
+use crate::runtime::lm::ServedModel;
+
+/// What the scheduler needs from a generation backend.
+///
+/// Not `Send`: PJRT executables hold `Rc` internals, so the coordinator
+/// constructs its engine *inside* the engine thread (see `server::spawn`).
+pub trait SlotEngine {
+    fn n_slots(&self) -> usize;
+    /// Per-sequence state bytes (for the admission ledger).
+    fn bytes_per_seq(&self) -> u64;
+    /// Prefill the given (slot, prompt) jobs; returns (slot, first token).
+    fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)>;
+    /// One decode step over the given active slots; returns (slot, token).
+    fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)>;
+    fn clear_slot(&mut self, slot: usize);
+}
+
+impl SlotEngine for RecurrentEngine {
+    fn n_slots(&self) -> usize {
+        self.batch()
+    }
+
+    fn bytes_per_seq(&self) -> u64 {
+        self.bytes_per_row()
+    }
+
+    fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        jobs.iter()
+            .map(|(slot, prompt)| (*slot, self.prefill_row(*slot, prompt)))
+            .collect()
+    }
+
+    fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+        active.iter().map(|&s| (s, self.decode_row(s))).collect()
+    }
+
+    fn clear_slot(&mut self, slot: usize) {
+        self.reset_row(slot);
+    }
+}
+
+use crate::engine::Engine as _;
+
+/// PJRT-backed slot engine: the decode artifact runs the *whole* fixed
+/// batch each step (inactive slots carry dummy state — the padding cost of
+/// fixed-shape compiled graphs); prefill runs the full batch and merges the
+/// refreshed rows of the jobs while restoring untouched busy rows.
+pub struct PjrtSlotEngine {
+    pub lm: ServedModel,
+}
+
+impl PjrtSlotEngine {
+    pub fn new(lm: ServedModel) -> PjrtSlotEngine {
+        PjrtSlotEngine { lm }
+    }
+}
+
+impl SlotEngine for PjrtSlotEngine {
+    fn n_slots(&self) -> usize {
+        self.lm.shape.batch
+    }
+
+    fn bytes_per_seq(&self) -> u64 {
+        self.lm.state_bytes_per_seq()
+    }
+
+    fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        let b = self.lm.shape.batch;
+        // snapshot rows that must survive the whole-batch prefill
+        let keep: Vec<usize> =
+            (0..b).filter(|s| !jobs.iter().any(|(j, _)| j == s)).collect();
+        let saved: Vec<_> = keep.iter().map(|&s| (s, self.lm.save_row(s))).collect();
+        let mut prompts: Vec<Vec<i32>> = vec![vec![0]; b];
+        for (slot, p) in jobs {
+            prompts[*slot] = p.clone();
+        }
+        let first = self.lm.prefill_batch(&prompts).expect("prefill");
+        for (s, row) in &saved {
+            self.lm.restore_row(*s, row);
+        }
+        jobs.iter().map(|(s, _)| (*s, first[*s])).collect()
+    }
+
+    fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+        let toks = self.lm.decode_step().expect("decode");
+        active.iter().map(|&s| (s, toks[s])).collect()
+    }
+
+    fn clear_slot(&mut self, slot: usize) {
+        self.lm.clear_row(slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::LmShape;
+
+    #[test]
+    fn native_slot_engine_roundtrip() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = RecurrentEngine::new(&shape, 3, 5);
+        assert_eq!(SlotEngine::n_slots(&eng), 3);
+        assert!(eng.bytes_per_seq() > 0);
+        let first = eng.prefill_slots(&[(0, vec![1, 2, 3]), (2, vec![4, 5])]);
+        assert_eq!(first.len(), 2);
+        let toks = eng.decode_slots(&[0, 2]);
+        assert_eq!(toks.len(), 2);
+        assert!(toks.iter().all(|(_, t)| (*t as usize) < shape.vocab));
+        eng.clear_slot(0);
+    }
+
+    #[test]
+    fn native_rows_are_independent() {
+        // prefilling row 1 must not change row 0's future tokens
+        let shape = LmShape::bench("nano").unwrap();
+        let mut a = RecurrentEngine::new(&shape, 2, 5);
+        let mut b = RecurrentEngine::new(&shape, 2, 5);
+        a.prefill_row(0, &[7, 8, 9]);
+        b.prefill_row(0, &[7, 8, 9]);
+        b.prefill_row(1, &[1, 2, 3, 4, 5]);
+        for _ in 0..4 {
+            assert_eq!(a.decode_row(0), b.decode_row(0));
+        }
+    }
+}

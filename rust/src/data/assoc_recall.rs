@@ -1,0 +1,140 @@
+//! Associative recall episodes (paper §4, Thm 4.1, Table E.1): sequences of
+//! key-value pairs followed by a query key; the model must emit the value
+//! associated with that key.
+
+use crate::util::Prng;
+
+/// One associative-recall episode, already laid out as a token sequence.
+pub struct Episode {
+    /// Token sequence: k1 v1 k2 v2 ... kq (padded to `len` with pad token).
+    pub tokens: Vec<i32>,
+    /// Target sequence (next-token), nonzero loss mask only at the answer.
+    pub targets: Vec<i32>,
+    /// Loss mask (1.0 exactly at the position predicting the answer).
+    pub mask: Vec<f32>,
+    /// The correct value token.
+    pub answer: i32,
+    /// Position whose *output* should be the answer (the query position).
+    pub query_pos: usize,
+}
+
+/// Episode generator. Vocabulary layout: [0] pad, [1..=s] keys,
+/// [s+1..=2s] values; requires vocab >= 2s+1.
+pub struct AssocRecall {
+    pub s: usize,
+    pub len: usize,
+    rng: Prng,
+}
+
+impl AssocRecall {
+    pub fn new(s: usize, len: usize, seed: u64) -> AssocRecall {
+        assert!(len >= 2 * s + 1, "sequence too short for {s} pairs");
+        AssocRecall { s, len, rng: Prng::new(seed) }
+    }
+
+    /// Vocabulary needed by a model consuming these episodes.
+    pub fn vocab(&self) -> usize {
+        2 * self.s + 1
+    }
+
+    pub fn episode(&mut self) -> Episode {
+        let s = self.s;
+        // random bijection key -> value
+        let mut vals: Vec<usize> = (0..s).collect();
+        self.rng.shuffle(&mut vals);
+        // random order of key presentation
+        let mut order: Vec<usize> = (0..s).collect();
+        self.rng.shuffle(&mut order);
+        let mut tokens = Vec::with_capacity(self.len);
+        for &k in &order {
+            tokens.push((1 + k) as i32); // key token
+            tokens.push((1 + s + vals[k]) as i32); // value token
+        }
+        let q = order[self.rng.below(s)];
+        tokens.push((1 + q) as i32);
+        let query_pos = tokens.len() - 1;
+        let answer = (1 + s + vals[q]) as i32;
+        tokens.resize(self.len, 0); // pad
+        // next-token supervision at every key position (its target is the
+        // paired value) plus the final query position (its target is the
+        // answer) — dense recall signal, the form the task is learnable in
+        // at small scale; value positions are unsupervised (their successor
+        // key is random).
+        let mut targets = vec![0i32; self.len];
+        let mut mask = vec![0f32; self.len];
+        for i in 0..s {
+            targets[2 * i] = tokens[2 * i + 1];
+            mask[2 * i] = 1.0;
+        }
+        targets[query_pos] = answer;
+        mask[query_pos] = 1.0;
+        Episode { tokens, targets, mask, answer, query_pos }
+    }
+
+    /// Batch of episodes flattened row-major.
+    pub fn batch(&mut self, b: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<(usize, i32)>) {
+        let mut tokens = Vec::with_capacity(b * self.len);
+        let mut targets = Vec::with_capacity(b * self.len);
+        let mut mask = Vec::with_capacity(b * self.len);
+        let mut answers = Vec::with_capacity(b);
+        for _ in 0..b {
+            let e = self.episode();
+            tokens.extend(&e.tokens);
+            targets.extend(&e.targets);
+            mask.extend(&e.mask);
+            answers.push((e.query_pos, e.answer));
+        }
+        (tokens, targets, mask, answers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_structure() {
+        let mut g = AssocRecall::new(8, 32, 1);
+        for _ in 0..20 {
+            let e = g.episode();
+            assert_eq!(e.tokens.len(), 32);
+            assert_eq!(e.query_pos, 2 * 8);
+            // query token appears earlier as a key
+            let q = e.tokens[e.query_pos];
+            let earlier: Vec<i32> = e.tokens[..e.query_pos].to_vec();
+            let kpos = earlier.iter().position(|&t| t == q).expect("query key seen");
+            assert_eq!(kpos % 2, 0, "keys at even positions");
+            // answer is the value right after that key
+            assert_eq!(e.tokens[kpos + 1], e.answer);
+            // mask selects the query position + every key position
+            assert_eq!(e.mask.iter().filter(|&&m| m > 0.0).count(), 8 + 1);
+            assert_eq!(e.targets[e.query_pos], e.answer);
+            for i in 0..8 {
+                assert_eq!(e.targets[2 * i], e.tokens[2 * i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn values_and_keys_disjoint() {
+        let mut g = AssocRecall::new(5, 16, 2);
+        let e = g.episode();
+        for (i, &t) in e.tokens[..11].iter().enumerate() {
+            if i % 2 == 0 {
+                assert!((1..=5).contains(&t), "key range");
+            } else {
+                assert!((6..=10).contains(&t), "value range");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = AssocRecall::new(4, 12, 3);
+        let (tok, tgt, mask, ans) = g.batch(3);
+        assert_eq!(tok.len(), 36);
+        assert_eq!(tgt.len(), 36);
+        assert_eq!(mask.len(), 36);
+        assert_eq!(ans.len(), 3);
+    }
+}

@@ -1,0 +1,151 @@
+//! Synthetic "pre-trained" filter suites (DESIGN.md §6 substitution for the
+//! paper's H3/Hyena/MultiHyena checkpoints, whose filters App. D
+//! characterizes qualitatively):
+//!
+//! * H3-like diagonal ("IIR"): exact low-order modal systems — Hankel
+//!   spectrum collapses after a handful of modes (Figure D.10: "decay
+//!   rapidly"; §5.2: H3 distills with d < 8).
+//! * H3-like shift ("FIR"): short explicit taps.
+//! * Hyena-like implicit: many damped sinusoids under a decay envelope plus
+//!   a small rough component — slow spectral decay (distills with d < 32).
+//! * MultiHyena-like: even more modes per filter (Figure D.9: "larger
+//!   effective dimension, slower decay") — weight tying packs more signal
+//!   into each of the fewer filters.
+
+use crate::dsp::C64;
+use crate::ssm::ModalSsm;
+use crate::util::Prng;
+
+/// Filter family to synthesize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    H3Iir,
+    H3Fir,
+    Hyena,
+    MultiHyena,
+}
+
+impl Family {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Family::H3Iir => "h3-iir",
+            Family::H3Fir => "h3-fir",
+            Family::Hyena => "hyena",
+            Family::MultiHyena => "multihyena",
+        }
+    }
+}
+
+/// Generate one filter: full taps [h0, h1, ..., h_{len-1}].
+pub fn filter(family: Family, len: usize, rng: &mut Prng) -> Vec<f64> {
+    match family {
+        Family::H3Iir => {
+            let pairs = 2 + rng.below(2);
+            modal_mixture(rng, pairs, 0.0, len)
+        }
+        Family::H3Fir => {
+            // short explicit taps (kernel width ~4-8), zero beyond
+            let k = 4 + rng.below(5);
+            let mut taps = vec![0.0; len];
+            for t in taps.iter_mut().take(k.min(len)) {
+                *t = rng.normal() * 0.5;
+            }
+            taps
+        }
+        Family::Hyena => {
+            let pairs = 8 + rng.below(5);
+            modal_mixture(rng, pairs, 2e-4, len)
+        }
+        Family::MultiHyena => {
+            let pairs = 14 + rng.below(7);
+            modal_mixture(rng, pairs, 2e-4, len)
+        }
+    }
+}
+
+/// Mixture of damped complex sinusoids (conjugate-closed) with optional
+/// rough noise floor — the decaying oscillatory shape App. D's filter
+/// visualizations show for pre-trained models.
+fn modal_mixture(rng: &mut Prng, pairs: usize, noise: f64, len: usize) -> Vec<f64> {
+    let ps: Vec<(C64, C64)> = (0..pairs)
+        .map(|k| {
+            // timescales spread geometrically: slow modes dominate
+            let r = 0.999 - 0.35 * (k as f64 + rng.uniform()) / pairs as f64;
+            let th = rng.range(0.02, 2.8);
+            let amp = rng.normal() * (1.0 / (1.0 + k as f64)).sqrt() * 0.4;
+            (C64::polar(r.clamp(0.3, 0.999), th), C64::new(amp, rng.normal() * 0.1))
+        })
+        .collect();
+    let sys = ModalSsm::from_conjugate_pairs(&ps, rng.normal() * 0.3);
+    let mut taps = vec![sys.h0];
+    taps.extend(sys.impulse_response(len - 1));
+    if noise > 0.0 {
+        for t in taps.iter_mut() {
+            *t += noise * rng.normal();
+        }
+    }
+    taps
+}
+
+/// A model's worth of filters: `count` filters of the family.
+pub fn model_filters(family: Family, count: usize, len: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Prng::new(seed);
+    (0..count).map(|_| filter(family, len, &mut rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hankel::hankel_singular_values;
+
+    fn spectrum_knee(taps: &[f64], tol: f64) -> usize {
+        let sv = hankel_singular_values(&taps[1..], Some(64));
+        sv.iter().filter(|&&s| s > tol * sv[0]).count()
+    }
+
+    #[test]
+    fn h3_filters_have_fast_hankel_decay() {
+        let filters = model_filters(Family::H3Iir, 4, 128, 7);
+        for f in &filters {
+            let knee = spectrum_knee(f, 1e-4);
+            assert!(knee <= 8, "H3-like filter should be <= 8 dim, got {knee}");
+        }
+    }
+
+    #[test]
+    fn hyena_filters_have_larger_effective_dimension() {
+        // paper Figure D.9/D.10: Hyena >> H3 in effective dimension
+        let h3: usize = model_filters(Family::H3Iir, 4, 128, 8)
+            .iter()
+            .map(|f| spectrum_knee(f, 1e-3))
+            .sum();
+        let hy: usize = model_filters(Family::Hyena, 4, 128, 8)
+            .iter()
+            .map(|f| spectrum_knee(f, 1e-3))
+            .sum();
+        let mh: usize = model_filters(Family::MultiHyena, 4, 128, 8)
+            .iter()
+            .map(|f| spectrum_knee(f, 1e-3))
+            .sum();
+        assert!(hy > h3, "hyena {hy} vs h3 {h3}");
+        assert!(mh >= hy, "multihyena {mh} vs hyena {hy}");
+    }
+
+    #[test]
+    fn fir_filters_are_short() {
+        let filters = model_filters(Family::H3Fir, 3, 64, 9);
+        for f in &filters {
+            assert!(f[16..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn filters_decay_to_zero() {
+        for fam in [Family::H3Iir, Family::Hyena, Family::MultiHyena] {
+            let f = &model_filters(fam, 1, 256, 10)[0];
+            let head: f64 = f[..32].iter().map(|x| x.abs()).sum();
+            let tail: f64 = f[224..].iter().map(|x| x.abs()).sum();
+            assert!(tail < head, "{fam:?}: tail {tail} head {head}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrates (the paper trained on The Pile and benchmarked on
+//! pre-trained checkpoints — neither is available offline, so these
+//! generators produce the synthetic equivalents; DESIGN.md §6 documents why
+//! each substitution preserves the relevant behaviour).
+
+pub mod assoc_recall;
+pub mod corpus;
+pub mod filters;

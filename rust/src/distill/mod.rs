@@ -1,0 +1,29 @@
+//! The Laughing Hyena Distillery (paper §3) — native implementation.
+//!
+//! Given the taps of a pre-trained long-convolution filter, produce a
+//! compact [`crate::ssm::ModalSsm`] whose impulse response interpolates it:
+//!
+//! * [`modal_fit`] — the paper's method: gradient-based nonlinear least
+//!   squares over polar poles + cartesian residues (§3.2, App. B.1), with
+//!   l2 or H2 objectives (§3.1) and Adam + cosine schedule.
+//! * [`prony`] — Prony's 1795 two-stage linear solution (§3.2 mentions it
+//!   as the classical, numerically fragile alternative).
+//! * [`pade`] — Padé rational interpolation on the first 2d taps
+//!   (App. B.2 footnote 15 baseline).
+//! * [`modal_trunc`] / [`balanced`] — classical model-order reduction
+//!   baselines from App. E.3.
+//! * [`prefill`] — the three prompt-state initialization strategies of
+//!   §3.4 (recurrent, closed-form powers, Prop-3.2 FFT).
+//! * [`pipeline`] — the end-to-end distillery: Hankel spectrum → order
+//!   selection → fit → validation report.
+
+pub mod balanced;
+pub mod modal_fit;
+pub mod modal_trunc;
+pub mod pade;
+pub mod pipeline;
+pub mod prefill;
+pub mod prony;
+
+pub use modal_fit::{DistillConfig, DistillResult, Objective};
+pub use pipeline::{DistilledFilter, Distillery, DistilleryReport};

@@ -1,0 +1,433 @@
+//! Gradient-based modal interpolation (paper §3.2) — the core distillation
+//! algorithm, and the L3 performance hot path for all App.-D error sweeps.
+//!
+//! Parametrization (App. B.1): poles in polar form lambda_n = A_n e^{i th_n}
+//! (A_n projected into [0, 0.9995] for deployable stability), residues in
+//! cartesian form.  Objective: L-point nonlinear least squares
+//! min sum_tau (Re sum_n R_n lambda_n^tau - h_{tau+1})^2, optimized with
+//! Adam under a cosine learning-rate schedule.  Gradients are analytic —
+//! the same contractions the L1 Pallas backward kernel computes:
+//!
+//!   dE/dRre[n] =  2 sum_t g_t A^t cos(th t)        g_t = h_hat_t - h_t
+//!   dE/dRim[n] = -2 sum_t g_t A^t sin(th t)
+//!   dE/dA[n]   =  2 sum_t g_t t A^(t-1) (Rre cos - Rim sin)
+//!   dE/dth[n]  = -2 sum_t g_t t A^t      (Rre sin + Rim cos)
+
+use crate::dsp::C64;
+use crate::ssm::ModalSsm;
+
+/// Distillation objective (paper §3.1). By Parseval the two are equal for
+/// finite sequences; `H2` evaluates the loss in frequency domain (eq. B.9)
+/// and is kept as an ablation/verification path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    L2,
+    H2,
+}
+
+/// Hyperparameters of the modal interpolation program.
+#[derive(Clone, Debug)]
+pub struct DistillConfig {
+    pub order: usize,
+    pub iters: usize,
+    pub lr: f64,
+    pub objective: Objective,
+    pub seed: u64,
+    /// Stability projection radius for |lambda| (paper App. B.1 notes
+    /// distillation itself needs no constraint; deployment does).
+    pub max_radius: f64,
+    /// Random restarts; the best final loss wins.
+    pub restarts: usize,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig {
+            order: 16,
+            iters: 3000,
+            lr: 0.05,
+            objective: Objective::L2,
+            seed: 0,
+            max_radius: 0.9995,
+            restarts: 1,
+        }
+    }
+}
+
+/// Outcome of one filter distillation.
+#[derive(Clone, Debug)]
+pub struct DistillResult {
+    pub ssm: ModalSsm,
+    /// Final squared-l2 interpolation error sum_tau (h_hat - h)^2.
+    pub loss: f64,
+    /// Relative l2 error ||h_hat - h|| / ||h||.
+    pub rel_err: f64,
+    pub iters_run: usize,
+}
+
+/// Optimization state: structure-of-arrays modal parameters.
+struct Params {
+    decay: Vec<f64>,
+    theta: Vec<f64>,
+    r_re: Vec<f64>,
+    r_im: Vec<f64>,
+}
+
+impl Params {
+    fn init(order: usize, rng: &mut crate::util::Prng) -> Params {
+        // ring-of-poles init matching python/compile/model.py::init_modal:
+        // magnitudes spread over timescales, phases over the half circle.
+        let d = order;
+        let decay = (0..d)
+            .map(|n| {
+                let base = if d == 1 { 0.9 } else { 0.6 + 0.37 * n as f64 / (d - 1) as f64 };
+                (base + 0.01 * rng.normal()).clamp(0.05, 0.999)
+            })
+            .collect();
+        let theta = (0..d)
+            .map(|n| {
+                let base = if d == 1 {
+                    0.0
+                } else {
+                    std::f64::consts::PI * n as f64 / (d - 1) as f64
+                };
+                base + 0.01 * rng.normal()
+            })
+            .collect();
+        Params {
+            decay,
+            theta,
+            r_re: (0..d).map(|_| 0.01 * rng.normal()).collect(),
+            r_im: vec![0.0; d],
+        }
+    }
+
+    fn to_ssm(&self, h0: f64) -> ModalSsm {
+        let poles: Vec<C64> = self
+            .decay
+            .iter()
+            .zip(&self.theta)
+            .map(|(&a, &t)| C64::polar(a, t))
+            .collect();
+        let residues: Vec<C64> = self
+            .r_re
+            .iter()
+            .zip(&self.r_im)
+            .map(|(&re, &im)| C64::new(re, im))
+            .collect();
+        ModalSsm::new(poles, residues, h0)
+    }
+}
+
+/// Fused forward + gradient pass. Returns loss; writes gradients.
+/// O(d L): per mode, incremental powers A^t, recurrence for cos/sin(th t).
+#[allow(clippy::too_many_arguments)]
+fn loss_and_grad(
+    p: &Params,
+    target: &[f64],
+    resid: &mut [f64],
+    g_decay: &mut [f64],
+    g_theta: &mut [f64],
+    g_rre: &mut [f64],
+    g_rim: &mut [f64],
+) -> f64 {
+    let d = p.decay.len();
+    let l = target.len();
+    // forward: residual r_t = h_hat_t - h_t
+    resid.copy_from_slice(target);
+    for x in resid.iter_mut() {
+        *x = -*x;
+    }
+    for n in 0..d {
+        let (a, th) = (p.decay[n].max(1e-12), p.theta[n]);
+        let (rre, rim) = (p.r_re[n], p.r_im[n]);
+        // c_t = A^t cos(th t), s_t = A^t sin(th t), evaluated as FOUR
+        // independent rotation streams (t mod 4) each advancing by rot^4 —
+        // breaks the serial complex-multiply dependency chain (§Perf).
+        let (mut cs, mut ss) = lane_init(a, th);
+        let (r4c, r4s) = rot_pow(a, th, 4);
+        let chunks = l / 4;
+        for ch in 0..chunks {
+            let base = 4 * ch;
+            for k in 0..4 {
+                resid[base + k] += rre * cs[k] - rim * ss[k];
+                let c2 = cs[k] * r4c - ss[k] * r4s;
+                ss[k] = cs[k] * r4s + ss[k] * r4c;
+                cs[k] = c2;
+            }
+        }
+        for (k, rt) in resid.iter_mut().enumerate().take(l).skip(4 * chunks) {
+            let k = k - 4 * chunks;
+            *rt += rre * cs[k] - rim * ss[k];
+        }
+    }
+    let loss: f64 = resid.iter().map(|r| r * r).sum();
+    // backward: four contractions per mode.  §Perf: 1/a hoisted out of the
+    // loop and the shared g*t factor computed once (see EXPERIMENTS.md).
+    for n in 0..d {
+        let (a, th) = (p.decay[n].max(1e-12), p.theta[n]);
+        let inv_a = 1.0 / a;
+        let (rre, rim) = (p.r_re[n], p.r_im[n]);
+        let (mut cs, mut ss) = lane_init(a, th);
+        let (r4c, r4s) = rot_pow(a, th, 4);
+        let (mut gd, mut gt, mut gr, mut gi) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let chunks = l / 4;
+        for ch in 0..chunks {
+            let base = 4 * ch;
+            for k in 0..4 {
+                let g = resid[base + k];
+                let gt_f = g * (base + k) as f64;
+                gr += g * cs[k];
+                gi -= g * ss[k];
+                gd += gt_f * (rre * cs[k] - rim * ss[k]);
+                gt -= gt_f * (rre * ss[k] + rim * cs[k]);
+                let c2 = cs[k] * r4c - ss[k] * r4s;
+                ss[k] = cs[k] * r4s + ss[k] * r4c;
+                cs[k] = c2;
+            }
+        }
+        for t in 4 * chunks..l {
+            let k = t - 4 * chunks;
+            let g = resid[t];
+            let gt_f = g * t as f64;
+            gr += g * cs[k];
+            gi -= g * ss[k];
+            gd += gt_f * (rre * cs[k] - rim * ss[k]);
+            gt -= gt_f * (rre * ss[k] + rim * cs[k]);
+        }
+        g_rre[n] = 2.0 * gr;
+        g_rim[n] = 2.0 * gi;
+        g_decay[n] = 2.0 * gd * inv_a;
+        g_theta[n] = 2.0 * gt;
+    }
+    loss
+}
+
+/// First four basis samples: (A^k cos(th k), A^k sin(th k)) for k = 0..3.
+#[inline]
+fn lane_init(a: f64, th: f64) -> ([f64; 4], [f64; 4]) {
+    let mut cs = [0.0f64; 4];
+    let mut ss = [0.0f64; 4];
+    for k in 0..4 {
+        let (rc, rs) = rot_pow(a, th, k as u32);
+        cs[k] = rc;
+        ss[k] = rs;
+    }
+    (cs, ss)
+}
+
+/// (A e^{i th})^p as (re, im).
+#[inline]
+fn rot_pow(a: f64, th: f64, p: u32) -> (f64, f64) {
+    let amp = a.powi(p as i32);
+    (amp * (th * p as f64).cos(), amp * (th * p as f64).sin())
+}
+
+/// Distill one filter.
+///
+/// `taps[tau]` = h_{tau+1} (Markov parameters, tau = 0..L-1); `h0` is the
+/// passthrough assigned verbatim (§3.2: "the passthrough cannot be freely
+/// assigned: it is simply h_0").
+pub fn distill_modal(taps: &[f64], h0: f64, cfg: &DistillConfig) -> DistillResult {
+    let mut best: Option<DistillResult> = None;
+    for restart in 0..cfg.restarts.max(1) {
+        let mut rng = crate::util::Prng::new(cfg.seed ^ (restart as u64).wrapping_mul(0x9E37));
+        let r = run_single(taps, h0, cfg, &mut rng);
+        if best.as_ref().map_or(true, |b| r.loss < b.loss) {
+            best = Some(r);
+        }
+    }
+    best.unwrap()
+}
+
+fn run_single(
+    taps: &[f64],
+    h0: f64,
+    cfg: &DistillConfig,
+    rng: &mut crate::util::Prng,
+) -> DistillResult {
+    let d = cfg.order;
+    let l = taps.len();
+    let mut p = Params::init(d, rng);
+    // Adam state
+    let mut m = vec![0.0f64; 4 * d];
+    let mut v = vec![0.0f64; 4 * d];
+    let (b1, b2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+
+    let mut resid = vec![0.0f64; l];
+    let (mut gd, mut gt, mut gr, mut gi) =
+        (vec![0.0; d], vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+    let mut loss = f64::MAX;
+    for it in 0..cfg.iters {
+        loss = loss_and_grad(&p, taps, &mut resid, &mut gd, &mut gt, &mut gr, &mut gi);
+        let lr = cfg.lr * 0.5 * (1.0 + (std::f64::consts::PI * it as f64 / cfg.iters as f64).cos())
+            + 1e-4;
+        let t = (it + 1) as f64;
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        let mut upd = |idx: usize, param: &mut [f64], grad: &[f64]| {
+            for n in 0..d {
+                let k = idx * d + n;
+                m[k] = b1 * m[k] + (1.0 - b1) * grad[n];
+                v[k] = b2 * v[k] + (1.0 - b2) * grad[n] * grad[n];
+                param[n] -= lr * (m[k] / bc1) / ((v[k] / bc2).sqrt() + eps);
+            }
+        };
+        upd(0, &mut p.decay, &gd);
+        upd(1, &mut p.theta, &gt);
+        upd(2, &mut p.r_re, &gr);
+        upd(3, &mut p.r_im, &gi);
+        // stability projection (projected gradient)
+        for a in p.decay.iter_mut() {
+            *a = a.clamp(0.0, cfg.max_radius);
+        }
+    }
+    // final loss after the last update
+    loss = loss.min(loss_and_grad(&p, taps, &mut resid, &mut gd, &mut gt, &mut gr, &mut gi));
+    let norm: f64 = taps.iter().map(|x| x * x).sum::<f64>().sqrt();
+    DistillResult {
+        ssm: p.to_ssm(h0),
+        loss,
+        rel_err: loss.sqrt() / norm.max(1e-30),
+        iters_run: cfg.iters,
+    }
+}
+
+/// H2 objective value (eq. B.9) of a fitted system against target taps:
+/// computed in frequency domain; equals the l2 loss by Parseval (tested).
+pub fn h2_loss(ssm: &ModalSsm, taps: &[f64]) -> f64 {
+    let l = taps.len();
+    let hhat = ssm.impulse_response(l);
+    let diff: Vec<f64> = hhat.iter().zip(taps).map(|(a, b)| a - b).collect();
+    let spec = crate::dsp::fft::dft_real(&diff);
+    spec.iter().map(|z| z.abs2()).sum::<f64>() / l as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Prng;
+
+    fn modal_taps(rng: &mut Prng, pairs: usize, l: usize) -> (Vec<f64>, usize) {
+        let ps: Vec<(C64, C64)> = (0..pairs)
+            .map(|_| {
+                (
+                    C64::polar(rng.range(0.5, 0.9), rng.range(0.3, 2.5)),
+                    C64::new(rng.normal(), rng.normal()),
+                )
+            })
+            .collect();
+        let sys = ModalSsm::from_conjugate_pairs(&ps, 0.0);
+        (sys.impulse_response(l), 2 * pairs)
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Prng::new(3);
+        let (taps, _) = modal_taps(&mut rng, 2, 48);
+        let d = 3;
+        let p = Params::init(d, &mut rng);
+        let l = taps.len();
+        let mut resid = vec![0.0; l];
+        let (mut gd, mut gt, mut gr, mut gi) =
+            (vec![0.0; d], vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        let base = loss_and_grad(&p, &taps, &mut resid, &mut gd, &mut gt, &mut gr, &mut gi);
+        assert!(base.is_finite());
+        let eps = 1e-6;
+        let fields: [(&[f64], &dyn Fn(&mut Params) -> &mut Vec<f64>); 4] = [
+            (&gd, &|p| &mut p.decay),
+            (&gt, &|p| &mut p.theta),
+            (&gr, &|p| &mut p.r_re),
+            (&gi, &|p| &mut p.r_im),
+        ];
+        for (grad, get) in fields {
+            for n in 0..d {
+                let mut p2 = Params {
+                    decay: p.decay.clone(),
+                    theta: p.theta.clone(),
+                    r_re: p.r_re.clone(),
+                    r_im: p.r_im.clone(),
+                };
+                get(&mut p2)[n] += eps;
+                let mut r2 = vec![0.0; l];
+                let (mut a, mut b, mut c, mut dd) =
+                    (vec![0.0; d], vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+                let lp =
+                    loss_and_grad(&p2, &taps, &mut r2, &mut a, &mut b, &mut c, &mut dd);
+                let fd = (lp - base) / eps;
+                assert!(
+                    (fd - grad[n]).abs() < 1e-3 * (1.0 + grad[n].abs()),
+                    "fd {fd} vs analytic {}",
+                    grad[n]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn well_specified_recovery() {
+        // a filter that IS a low-order modal SSM distills to ~zero error
+        check("well-specified modal recovery", 4, |rng| {
+            let pairs = 1 + rng.below(2);
+            let (taps, d_true) = modal_taps(rng, pairs, 64);
+            let cfg = DistillConfig {
+                order: d_true + 2,
+                iters: 2500,
+                restarts: 2,
+                seed: rng.next_u64(),
+                ..DistillConfig::default()
+            };
+            let r = distill_modal(&taps, 0.0, &cfg);
+            if r.rel_err < 0.02 {
+                Ok(())
+            } else {
+                Err(format!("rel_err {:.4} (d_true={d_true})", r.rel_err))
+            }
+        });
+    }
+
+    #[test]
+    fn stability_projection_holds() {
+        let mut rng = Prng::new(9);
+        let (taps, _) = modal_taps(&mut rng, 2, 64);
+        let cfg = DistillConfig { order: 8, iters: 400, ..DistillConfig::default() };
+        let r = distill_modal(&taps, 0.5, &cfg);
+        assert!(r.ssm.spectral_radius() <= cfg.max_radius + 1e-12);
+        assert_eq!(r.ssm.h0, 0.5);
+    }
+
+    #[test]
+    fn more_order_no_worse() {
+        let mut rng = Prng::new(11);
+        let (taps, _) = modal_taps(&mut rng, 3, 96);
+        let small = distill_modal(
+            &taps,
+            0.0,
+            &DistillConfig { order: 2, iters: 1200, ..Default::default() },
+        );
+        let large = distill_modal(
+            &taps,
+            0.0,
+            &DistillConfig { order: 10, iters: 1200, ..Default::default() },
+        );
+        assert!(large.rel_err <= small.rel_err * 1.05, "{} vs {}", large.rel_err, small.rel_err);
+    }
+
+    #[test]
+    fn h2_equals_l2_by_parseval() {
+        let mut rng = Prng::new(13);
+        let (taps, _) = modal_taps(&mut rng, 2, 64);
+        let r = distill_modal(
+            &taps,
+            0.0,
+            &DistillConfig { order: 4, iters: 300, ..Default::default() },
+        );
+        let l2: f64 = {
+            let hh = r.ssm.impulse_response(taps.len());
+            hh.iter().zip(&taps).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let h2 = h2_loss(&r.ssm, &taps);
+        assert!((l2 - h2).abs() < 1e-8 * l2.max(1e-12), "{l2} vs {h2}");
+    }
+}

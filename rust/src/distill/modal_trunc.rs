@@ -1,0 +1,120 @@
+//! Modal truncation (paper App. E.3.1): reduce a *diagonal* SSM by keeping
+//! the n modes with the largest H-infinity influence bound
+//! |r_i| / |1 - |lambda_i|| and discarding the rest.
+
+use crate::ssm::ModalSsm;
+
+/// Influence bound of each mode (eq. E.2 summand).
+pub fn mode_influence(sys: &ModalSsm) -> Vec<f64> {
+    sys.poles
+        .iter()
+        .zip(&sys.residues)
+        .map(|(l, r)| {
+            let denom = (1.0 - l.abs()).abs().max(1e-12);
+            r.abs() / denom
+        })
+        .collect()
+}
+
+/// Keep the n most influential modes (E.3.1). Preserves conjugate pairs by
+/// construction when the input is conjugate-closed and n counts both
+/// halves of each kept pair — callers pass even n for real filters.
+pub fn modal_truncate(sys: &ModalSsm, n: usize) -> ModalSsm {
+    let infl = mode_influence(sys);
+    let mut order: Vec<usize> = (0..sys.order()).collect();
+    order.sort_by(|&i, &j| infl[j].partial_cmp(&infl[i]).unwrap());
+    let keep: Vec<usize> = order.into_iter().take(n.min(sys.order())).collect();
+    ModalSsm::new(
+        keep.iter().map(|&i| sys.poles[i]).collect(),
+        keep.iter().map(|&i| sys.residues[i]).collect(),
+        sys.h0,
+    )
+}
+
+/// l-infinity impulse-response error of a reduction (the metric plotted in
+/// Figure E.1).
+pub fn linf_error(full: &ModalSsm, reduced: &ModalSsm, len: usize) -> f64 {
+    let a = full.impulse_response(len);
+    let b = reduced.impulse_response(len);
+    crate::util::stats::max_abs_diff(&a, &b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::C64;
+    use crate::util::prop::check;
+    use crate::util::Prng;
+
+    fn random_diag(rng: &mut Prng, pairs: usize) -> ModalSsm {
+        let ps: Vec<(C64, C64)> = (0..pairs)
+            .map(|_| {
+                (
+                    C64::polar(rng.range(0.3, 0.95), rng.range(0.2, 2.9)),
+                    C64::new(rng.normal(), rng.normal()),
+                )
+            })
+            .collect();
+        ModalSsm::from_conjugate_pairs(&ps, 0.0)
+    }
+
+    #[test]
+    fn full_order_truncation_is_identity() {
+        let mut rng = Prng::new(1);
+        let sys = random_diag(&mut rng, 3);
+        let t = modal_truncate(&sys, sys.order());
+        assert_eq!(t.order(), sys.order());
+        let e = linf_error(&sys, &t, 32);
+        assert!(e < 1e-12, "{e}");
+    }
+
+    #[test]
+    fn error_bounded_by_discarded_influence() {
+        // eq. E.2: the error of discarding a mode set is bounded by the sum
+        // of the discarded influence terms |r|/|1-|lambda|| (times 2 for
+        // the h-inf -> l-inf slack of the truncated response).
+        check("modal truncation error <= influence bound", 8, |rng| {
+            let sys = random_diag(rng, 6);
+            let infl = mode_influence(&sys);
+            let mut order: Vec<usize> = (0..sys.order()).collect();
+            order.sort_by(|&i, &j| infl[j].partial_cmp(&infl[i]).unwrap());
+            for n in (2..=12).step_by(2) {
+                let e = linf_error(&sys, &modal_truncate(&sys, n), 64);
+                let bound: f64 = order.iter().skip(n).map(|&i| infl[i]).sum();
+                if e > 2.0 * bound + 1e-9 {
+                    return Err(format!("n={n}: err {e} > bound {bound}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_vanishes_at_full_order_and_shrinks_on_average() {
+        // Figure E.1 trend: increasing order reduces error overall (the
+        // strict per-step monotonicity can be broken by cancellation).
+        check("modal truncation trend", 8, |rng| {
+            let sys = random_diag(rng, 6);
+            let e2 = linf_error(&sys, &modal_truncate(&sys, 2), 64);
+            let e12 = linf_error(&sys, &modal_truncate(&sys, 12), 64);
+            if e12 < 1e-10 && e2 >= e12 {
+                Ok(())
+            } else {
+                Err(format!("e2={e2}, e12={e12}"))
+            }
+        });
+    }
+
+    #[test]
+    fn keeps_dominant_mode() {
+        // one huge slow mode + tiny fast modes: order-2 truncation must
+        // retain the dominant conjugate pair
+        let ps = [
+            (C64::polar(0.95, 0.5), C64::new(10.0, 0.0)),
+            (C64::polar(0.3, 1.5), C64::new(0.01, 0.0)),
+        ];
+        let sys = ModalSsm::from_conjugate_pairs(&ps, 0.0);
+        let t = modal_truncate(&sys, 2);
+        assert!((t.poles[0].abs() - 0.95).abs() < 1e-12);
+    }
+}

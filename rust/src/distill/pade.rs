@@ -1,0 +1,87 @@
+//! Padé rational interpolation (paper App. B.2 footnote 15): match the
+//! first 2d+1 taps of the filter exactly by solving a d-dimensional linear
+//! (Toeplitz) system — o(z^{-L}) error at infinity, but "known to often
+//! become numerically ill-conditioned even with small d".
+
+use crate::linalg::lu::solve_real;
+use crate::linalg::Mat;
+use crate::ssm::TransferFunction;
+
+/// Order-d Padé approximant of the filter [h0, taps...] as a transfer
+/// function: H(z) = (b0 + .. + bd z^-d) / (1 + a1 z^-1 + .. + ad z^-d)
+/// matching h_t exactly for t = 0..2d.
+pub fn pade(taps: &[f64], h0: f64, d: usize) -> Option<TransferFunction> {
+    if taps.len() < 2 * d {
+        return None;
+    }
+    // full tap sequence including the passthrough
+    let mut h = Vec::with_capacity(taps.len() + 1);
+    h.push(h0);
+    h.extend_from_slice(taps);
+    // Denominator from the linear system:
+    //   sum_{j=1..d} a_j h_{t-j} = -h_t   for t = d+1 .. 2d
+    let mut m = Mat::zeros(d, d);
+    let mut rhs = vec![0.0; d];
+    for (row, t) in (d + 1..=2 * d).enumerate() {
+        for j in 1..=d {
+            m[(row, j - 1)] = h[t - j];
+        }
+        rhs[row] = -h[t];
+    }
+    let a_tail = solve_real(&m, &rhs)?;
+    let mut a = vec![1.0];
+    a.extend(a_tail);
+    // Numerator by forward substitution: b_t = h_t + sum_j a_j h_{t-j}
+    let mut b = vec![0.0; d + 1];
+    for t in 0..=d {
+        let mut acc = h[t];
+        for j in 1..=d.min(t) {
+            acc += a[j] * h[t - j];
+        }
+        b[t] = acc;
+    }
+    Some(TransferFunction::new(b, a))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::C64;
+    use crate::ssm::ModalSsm;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn matches_first_2d_taps_exactly() {
+        check("pade matches first 2d+1 taps", 12, |rng| {
+            let d = 2 + rng.below(3);
+            let taps = rng.normal_vec(4 * d);
+            let h0 = rng.normal();
+            let tf = match pade(&taps, h0, d) {
+                Some(tf) => tf,
+                None => return Ok(()), // singular Toeplitz draw
+            };
+            let got = tf.impulse_response(2 * d + 1);
+            let mut want = vec![h0];
+            want.extend(&taps[..2 * d]);
+            assert_close(&got, &want, 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn exact_on_rational_filters() {
+        let ps = [(C64::polar(0.7, 0.9), C64::new(0.5, 1.0))];
+        let sys = ModalSsm::from_conjugate_pairs(&ps, 0.2);
+        let taps = sys.impulse_response(32);
+        let tf = pade(&taps, 0.2, 2).expect("pade");
+        // rational of true order: matches everywhere, not just 2d taps
+        let got = tf.impulse_response(32);
+        let mut want = vec![0.2];
+        want.extend(&taps[..31]);
+        assert_close(&got, &want, 1e-7, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn insufficient_taps_rejected() {
+        assert!(pade(&[1.0, 2.0], 0.0, 4).is_none());
+    }
+}

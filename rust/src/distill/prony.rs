@@ -1,0 +1,123 @@
+//! Prony's method (1795): the classical two-stage linear solution of the
+//! nonlinear least-squares interpolation problem (paper §3.2).
+//!
+//! Stage 1 — linear prediction: find denominator coefficients a such that
+//! h_t ≈ -sum_{j=1..d} a_j h_{t-j} (least squares over t = d..L-1).
+//! Stage 2 — poles are the prediction-polynomial roots; residues solve the
+//! complex Vandermonde least-squares fit h_tau ≈ sum_n R_n lambda_n^tau.
+//!
+//! The paper notes these Prony/Padé-style methods "can be numerically
+//! unstable" — the benchmark in benches/distillation.rs reproduces exactly
+//! that comparison against gradient-based modal fitting.
+
+use crate::dsp::poly::poly_roots;
+use crate::dsp::C64;
+use crate::linalg::lu::{lstsq_c64, solve_real};
+use crate::linalg::Mat;
+use crate::ssm::ModalSsm;
+
+/// Distill taps (h_{tau+1}) into an order-d modal SSM via Prony's method.
+/// Returns None when the linear systems are too ill-conditioned to solve.
+pub fn prony(taps: &[f64], h0: f64, d: usize) -> Option<ModalSsm> {
+    let l = taps.len();
+    if l < 2 * d + 1 || d == 0 {
+        return None;
+    }
+    // Stage 1: least-squares linear prediction via normal equations.
+    // rows: t = d .. l-1;  A[t, j] = h_{t-1-j},  rhs = -h_t
+    let rows = l - d;
+    let mut ata = Mat::zeros(d, d);
+    let mut atb = vec![0.0; d];
+    for t in d..l {
+        for i in 0..d {
+            let hi = taps[t - 1 - i];
+            atb[i] += hi * (-taps[t]);
+            for j in 0..d {
+                ata[(i, j)] += hi * taps[t - 1 - j];
+            }
+        }
+    }
+    // small ridge for conditioning
+    let scale = (0..d).map(|i| ata[(i, i)].abs()).fold(0.0, f64::max);
+    for i in 0..d {
+        ata[(i, i)] += 1e-10 * scale.max(1e-30);
+    }
+    let a = solve_real(&ata, &atb)?;
+    let _ = rows;
+
+    // Stage 2a: poles = roots of z^d + a_1 z^{d-1} + ... + a_d
+    let mut coeffs: Vec<C64> = Vec::with_capacity(d + 1);
+    for k in (0..d).rev() {
+        coeffs.push(C64::real(a[k]));
+    }
+    coeffs.push(C64::ONE);
+    let poles = poly_roots(&coeffs);
+    if poles.iter().any(|p| !p.is_finite()) {
+        return None;
+    }
+
+    // Stage 2b: residues by Vandermonde least squares over all taps.
+    let vand: Vec<Vec<C64>> = (0..l)
+        .map(|t| poles.iter().map(|p| p.powi(t as u64)).collect())
+        .collect();
+    let rhs: Vec<C64> = taps.iter().map(|&x| C64::real(x)).collect();
+    let residues = lstsq_c64(&vand, &rhs, 1e-12)?;
+    if residues.iter().any(|r| !r.is_finite()) {
+        return None;
+    }
+    Some(ModalSsm::new(poles, residues, h0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::stats::rel_err;
+
+    #[test]
+    fn exact_recovery_of_low_order_system() {
+        check("prony recovers modal systems exactly", 10, |rng| {
+            let pairs = 1 + rng.below(2);
+            let ps: Vec<(C64, C64)> = (0..pairs)
+                .map(|_| {
+                    (
+                        C64::polar(rng.range(0.5, 0.9), rng.range(0.4, 2.5)),
+                        C64::new(rng.normal(), rng.normal()),
+                    )
+                })
+                .collect();
+            let sys = ModalSsm::from_conjugate_pairs(&ps, 0.3);
+            let taps = sys.impulse_response(64);
+            let got = match prony(&taps, 0.3, 2 * pairs) {
+                Some(g) => g,
+                None => return Err("prony failed".into()),
+            };
+            let err = rel_err(&got.impulse_response(64), &taps);
+            if err < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err:.2e}"))
+            }
+        });
+    }
+
+    #[test]
+    fn too_short_input_rejected() {
+        assert!(prony(&[1.0, 0.5, 0.2], 0.0, 4).is_none());
+    }
+
+    #[test]
+    fn noisy_taps_degrade_gracefully() {
+        // with noise, the fit should still be finite and roughly track
+        let mut rng = crate::util::Prng::new(42);
+        let ps = [(C64::polar(0.8, 1.0), C64::new(1.0, -0.5))];
+        let sys = ModalSsm::from_conjugate_pairs(&ps, 0.0);
+        let mut taps = sys.impulse_response(64);
+        for t in taps.iter_mut() {
+            *t += 0.001 * rng.normal();
+        }
+        let got = prony(&taps, 0.0, 4).expect("prony");
+        let err = rel_err(&got.impulse_response(64), &taps);
+        assert!(err < 0.2, "rel err {err}");
+    }
+}

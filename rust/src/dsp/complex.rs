@@ -1,0 +1,244 @@
+//! Complex double-precision arithmetic (`num-complex` is not in the offline
+//! crate set; poles/residues of the modal form are inherently complex).
+
+use std::ops::{Add, AddAssign, Div, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number with `f64` components.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+    pub const I: C64 = C64 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        C64 { re, im }
+    }
+
+    #[inline]
+    pub fn real(re: f64) -> Self {
+        C64 { re, im: 0.0 }
+    }
+
+    /// From polar form `r e^{i theta}`.
+    #[inline]
+    pub fn polar(r: f64, theta: f64) -> Self {
+        C64 { re: r * theta.cos(), im: r * theta.sin() }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        C64 { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    #[inline]
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    #[inline]
+    pub fn recip(self) -> Self {
+        let d = self.abs2();
+        C64 { re: self.re / d, im: -self.im / d }
+    }
+
+    /// Complex exponential.
+    pub fn exp(self) -> Self {
+        let r = self.re.exp();
+        C64 { re: r * self.im.cos(), im: r * self.im.sin() }
+    }
+
+    /// Principal natural log.
+    pub fn ln(self) -> Self {
+        C64 { re: self.abs().ln(), im: self.arg() }
+    }
+
+    /// Principal square root.
+    pub fn sqrt(self) -> Self {
+        let r = self.abs();
+        let t = self.arg() / 2.0;
+        C64::polar(r.sqrt(), t)
+    }
+
+    /// Integer power by repeated squaring.
+    pub fn powi(self, mut n: u64) -> Self {
+        let mut base = self;
+        let mut acc = C64::ONE;
+        while n > 0 {
+            if n & 1 == 1 {
+                acc = acc * base;
+            }
+            base = base * base;
+            n >>= 1;
+        }
+        acc
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+
+    /// Scale by a real factor.
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        C64 { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    #[inline]
+    fn div(self, o: C64) -> C64 {
+        self * o.recip()
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    #[inline]
+    fn neg(self) -> C64 {
+        C64 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for C64 {
+    #[inline]
+    fn add_assign(&mut self, o: C64) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for C64 {
+    #[inline]
+    fn sub_assign(&mut self, o: C64) {
+        *self = *self - o;
+    }
+}
+
+impl MulAssign for C64 {
+    #[inline]
+    fn mul_assign(&mut self, o: C64) {
+        *self = *self * o;
+    }
+}
+
+impl From<f64> for C64 {
+    fn from(x: f64) -> Self {
+        C64::real(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn close(a: C64, b: C64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn field_identities() {
+        let z = C64::new(3.0, -4.0);
+        assert_eq!(z.abs(), 5.0);
+        assert!(close(z * z.recip(), C64::ONE, 1e-12));
+        assert!(close(z + (-z), C64::ZERO, 1e-12));
+        assert!(close(z / z, C64::ONE, 1e-12));
+    }
+
+    #[test]
+    fn polar_roundtrip() {
+        check("polar roundtrip", 64, |rng| {
+            let r = rng.range(0.01, 10.0);
+            let th = rng.range(-3.0, 3.0);
+            let z = C64::polar(r, th);
+            if (z.abs() - r).abs() < 1e-10 && (z.arg() - th).abs() < 1e-10 {
+                Ok(())
+            } else {
+                Err(format!("got ({}, {})", z.abs(), z.arg()))
+            }
+        });
+    }
+
+    #[test]
+    fn exp_ln_inverse() {
+        check("exp(ln(z)) == z", 64, |rng| {
+            let z = C64::new(rng.range(-2.0, 2.0), rng.range(-2.0, 2.0));
+            if z.abs() < 1e-3 {
+                return Ok(());
+            }
+            let w = z.ln().exp();
+            if close(w, z, 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("{w:?} vs {z:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        check("powi", 32, |rng| {
+            let z = C64::polar(rng.range(0.5, 1.5), rng.range(-3.0, 3.0));
+            let n = 1 + rng.below(12) as u64;
+            let mut want = C64::ONE;
+            for _ in 0..n {
+                want = want * z;
+            }
+            if close(z.powi(n), want, 1e-9 * want.abs().max(1.0)) {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let z = C64::new(-2.0, 0.5);
+        let s = z.sqrt();
+        assert!(close(s * s, z, 1e-12));
+    }
+}

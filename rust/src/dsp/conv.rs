@@ -1,0 +1,99 @@
+//! Causal convolution: direct (O(TL)) and FFT-based (Õ(T)) — the two
+//! evaluation modes of a long-convolution layer (paper eq. 2.1).
+
+use super::complex::C64;
+use super::fft::{dft, idft, next_pow2};
+
+/// Direct causal convolution: y_t = sum_{j=0..t} h_{t-j} u_j, truncated to
+/// `u.len()` outputs. Filter shorter than the input is zero-extended.
+pub fn causal_conv_direct(h: &[f64], u: &[f64]) -> Vec<f64> {
+    let t = u.len();
+    let mut y = vec![0.0; t];
+    for i in 0..t {
+        let kmax = i.min(h.len().saturating_sub(1));
+        let mut acc = 0.0;
+        for k in 0..=kmax {
+            acc += h[k] * u[i - k];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+/// FFT causal convolution, zero-padded to avoid circular wrap.
+pub fn causal_conv_fft(h: &[f64], u: &[f64]) -> Vec<f64> {
+    let t = u.len();
+    let n = next_pow2(t + h.len());
+    let mut hb = vec![C64::ZERO; n];
+    for (i, &x) in h.iter().enumerate() {
+        hb[i] = C64::real(x);
+    }
+    let mut ub = vec![C64::ZERO; n];
+    for (i, &x) in u.iter().enumerate() {
+        ub[i] = C64::real(x);
+    }
+    let hf = dft(&hb);
+    let uf = dft(&ub);
+    let prod: Vec<C64> = hf.iter().zip(&uf).map(|(a, b)| *a * *b).collect();
+    idft(&prod).into_iter().take(t).map(|z| z.re).collect()
+}
+
+/// One *incremental* step of cached-convolution generation (Lemma 2.1):
+/// given the full history `hist` (inputs so far) compute the next output
+/// y_t = sum_j h_{t-j} hist_j at t = hist.len()-1. O(t) per token.
+pub fn conv_step(h: &[f64], hist: &[f64]) -> f64 {
+    let t = hist.len() - 1;
+    let kmax = t.min(h.len().saturating_sub(1));
+    let mut acc = 0.0;
+    for k in 0..=kmax {
+        acc += h[k] * hist[t - k];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn fft_matches_direct() {
+        check("fft conv == direct conv", 24, |rng| {
+            let lh = 1 + rng.below(40);
+            let lu = 1 + rng.below(60);
+            let h = rng.normal_vec(lh);
+            let u = rng.normal_vec(lu);
+            assert_close(&causal_conv_fft(&h, &u), &causal_conv_direct(&h, &u), 1e-9, 1e-9)
+        });
+    }
+
+    #[test]
+    fn identity_filter() {
+        let u = [1.0, -2.0, 3.0];
+        let y = causal_conv_direct(&[1.0], &u);
+        assert_eq!(y, u.to_vec());
+    }
+
+    #[test]
+    fn delay_filter() {
+        let u = [1.0, 2.0, 3.0, 4.0];
+        let y = causal_conv_direct(&[0.0, 1.0], &u);
+        assert_eq!(y, vec![0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn conv_step_matches_batch() {
+        check("incremental == batch conv", 16, |rng| {
+            let h = rng.normal_vec(8);
+            let u = rng.normal_vec(20);
+            let want = causal_conv_direct(&h, &u);
+            for t in 0..u.len() {
+                let got = conv_step(&h, &u[..=t]);
+                if (got - want[t]).abs() > 1e-10 {
+                    return Err(format!("t={t}: {got} vs {}", want[t]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! FFT substrate: iterative radix-2 Cooley-Tukey plus Bluestein's algorithm
+//! for arbitrary lengths.
+//!
+//! Used by: the Õ(L) transfer-function evaluation (paper Lemma A.6), the
+//! H2 distillation objective (eq. B.9), FFT-based causal convolution
+//! (conv-mode generation, Lemma 2.1) and the Prop-3.2 fast prefill.
+
+use super::complex::C64;
+
+/// True if `n` is a power of two (and non-zero).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+/// Smallest power of two >= n.
+pub fn next_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p < n {
+        p <<= 1;
+    }
+    p
+}
+
+/// In-place radix-2 DIT FFT. `data.len()` must be a power of two.
+/// `inverse` applies the conjugate transform *without* the 1/n scaling.
+fn fft_pow2(data: &mut [C64], inverse: bool) {
+    let n = data.len();
+    debug_assert!(is_pow2(n));
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::polar(1.0, ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::ONE;
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = data[i + k + len / 2] * w;
+                data[i + k] = u + v;
+                data[i + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward DFT of arbitrary length (radix-2 when possible, Bluestein
+/// otherwise). Returns a new vector.
+pub fn dft(input: &[C64]) -> Vec<C64> {
+    transform(input, false)
+}
+
+/// Inverse DFT (includes the 1/n scaling).
+pub fn idft(input: &[C64]) -> Vec<C64> {
+    let n = input.len();
+    let mut out = transform(input, true);
+    let s = 1.0 / n as f64;
+    for z in &mut out {
+        *z = z.scale(s);
+    }
+    out
+}
+
+fn transform(input: &[C64], inverse: bool) -> Vec<C64> {
+    let n = input.len();
+    assert!(n > 0, "empty DFT");
+    if is_pow2(n) {
+        let mut data = input.to_vec();
+        fft_pow2(&mut data, inverse);
+        data
+    } else {
+        bluestein(input, inverse)
+    }
+}
+
+/// Bluestein's chirp-z algorithm: DFT of arbitrary n via a power-of-two
+/// circular convolution.
+fn bluestein(input: &[C64], inverse: bool) -> Vec<C64> {
+    let n = input.len();
+    let m = next_pow2(2 * n - 1);
+    let sign = if inverse { 1.0 } else { -1.0 };
+    // chirp[k] = exp(sign * i pi k^2 / n) with sign=-1 forward (from
+    // k*t = (k^2 + t^2 - (k-t)^2)/2); k^2 mod 2n keeps angles small.
+    let chirp: Vec<C64> = (0..n)
+        .map(|k| {
+            let k2 = ((k as u64 * k as u64) % (2 * n as u64)) as f64;
+            C64::polar(1.0, sign * std::f64::consts::PI * k2 / n as f64)
+        })
+        .collect();
+    let mut a = vec![C64::ZERO; m];
+    for k in 0..n {
+        a[k] = input[k] * chirp[k];
+    }
+    let mut b = vec![C64::ZERO; m];
+    for k in 0..n {
+        let c = chirp[k].conj();
+        b[k] = c;
+        if k != 0 {
+            b[m - k] = c;
+        }
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for i in 0..m {
+        a[i] = a[i] * b[i];
+    }
+    fft_pow2(&mut a, true);
+    let s = 1.0 / m as f64;
+    (0..n).map(|k| a[k].scale(s) * chirp[k]).collect()
+}
+
+/// DFT of a real sequence.
+pub fn dft_real(input: &[f64]) -> Vec<C64> {
+    let buf: Vec<C64> = input.iter().map(|&x| C64::real(x)).collect();
+    dft(&buf)
+}
+
+/// Real part of the inverse DFT (for spectra of real signals).
+pub fn idft_real(input: &[C64]) -> Vec<f64> {
+    idft(input).into_iter().map(|z| z.re).collect()
+}
+
+/// Direct O(n^2) DFT — test oracle only.
+pub fn dft_naive(input: &[C64]) -> Vec<C64> {
+    let n = input.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = C64::ZERO;
+            for (t, &x) in input.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * t % n) as f64 / n as f64;
+                acc += x * C64::polar(1.0, ang);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn rand_signal(rng: &mut crate::util::Prng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft_pow2_and_arbitrary() {
+        check("dft == naive dft", 24, |rng| {
+            let n = [1, 2, 3, 4, 7, 8, 12, 16, 27, 33, 64][rng.below(11)];
+            let x = rand_signal(rng, n);
+            let got = dft(&x);
+            let want = dft_naive(&x);
+            for (g, w) in got.iter().zip(&want) {
+                if (*g - *w).abs() > 1e-8 * (1.0 + w.abs()) {
+                    return Err(format!("n={n}: {g:?} vs {w:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        check("idft(dft(x)) == x", 24, |rng| {
+            let n = 1 + rng.below(100);
+            let x = rand_signal(rng, n);
+            let y = idft(&dft(&x));
+            for (g, w) in y.iter().zip(&x) {
+                if (*g - *w).abs() > 1e-9 * (1.0 + w.abs()) {
+                    return Err(format!("n={n}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parseval() {
+        check("parseval", 16, |rng| {
+            let n = 1 + rng.below(64);
+            let x = rand_signal(rng, n);
+            let f = dft(&x);
+            let e_time: f64 = x.iter().map(|z| z.abs2()).sum();
+            let e_freq: f64 = f.iter().map(|z| z.abs2()).sum::<f64>() / n as f64;
+            if (e_time - e_freq).abs() < 1e-8 * e_time.max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("{e_time} vs {e_freq}"))
+            }
+        });
+    }
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let mut x = vec![C64::ZERO; 16];
+        x[0] = C64::ONE;
+        for z in dft(&x) {
+            assert!((z - C64::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn real_helpers() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let back = idft_real(&dft_real(&x));
+        for (g, w) in back.iter().zip(&x) {
+            assert!((g - w).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2(8), 8);
+        assert_eq!(next_pow2(1000), 1024);
+    }
+}

@@ -1,0 +1,10 @@
+//! Signal-processing substrate: complex arithmetic, FFT, convolution, and
+//! polynomial algebra — everything the transfer-function machinery of the
+//! paper (App. A) rests on.
+
+pub mod complex;
+pub mod conv;
+pub mod fft;
+pub mod poly;
+
+pub use complex::C64;

@@ -1,0 +1,238 @@
+//! Polynomial algebra over C: construction from roots, Horner evaluation,
+//! long division, and companion matrices.
+//!
+//! This is the machinery behind the paper's transfer-function conversions:
+//! `poly(eig(A))` for ss→tf (App. A.6), companion realization for tf→ss
+//! (App. A.5), and the denominator evaluation of Prop. 3.2's prefill filter.
+//! Polynomials are stored low-order-first: p(x) = c[0] + c[1] x + ... .
+
+use super::complex::C64;
+
+/// Multiply two polynomials (coefficient convolution).
+pub fn poly_mul(a: &[C64], b: &[C64]) -> Vec<C64> {
+    let mut out = vec![C64::ZERO; a.len() + b.len() - 1];
+    for (i, &x) in a.iter().enumerate() {
+        for (j, &y) in b.iter().enumerate() {
+            out[i + j] += x * y;
+        }
+    }
+    out
+}
+
+/// Monic polynomial with the given roots: prod (x - r_i).
+/// Returns d+1 coefficients, low-order-first, with c[d] == 1.
+pub fn poly_from_roots(roots: &[C64]) -> Vec<C64> {
+    let mut p = vec![C64::ONE];
+    for &r in roots {
+        p = poly_mul(&p, &[-r, C64::ONE]);
+    }
+    p
+}
+
+/// Horner evaluation p(x).
+pub fn poly_eval(coeffs: &[C64], x: C64) -> C64 {
+    let mut acc = C64::ZERO;
+    for &c in coeffs.iter().rev() {
+        acc = acc * x + c;
+    }
+    acc
+}
+
+/// Derivative coefficients.
+pub fn poly_deriv(coeffs: &[C64]) -> Vec<C64> {
+    if coeffs.len() <= 1 {
+        return vec![C64::ZERO];
+    }
+    coeffs[1..]
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c.scale((i + 1) as f64))
+        .collect()
+}
+
+/// Polynomial long division: returns (quotient, remainder) of a / b.
+/// Panics if b is (numerically) zero.
+pub fn poly_divmod(a: &[C64], b: &[C64]) -> (Vec<C64>, Vec<C64>) {
+    let deg = |p: &[C64]| p.iter().rposition(|c| c.abs() > 1e-300);
+    let db = deg(b).expect("division by zero polynomial");
+    let mut rem: Vec<C64> = a.to_vec();
+    let da = match deg(&rem) {
+        Some(d) if d >= db => d,
+        _ => return (vec![C64::ZERO], rem),
+    };
+    let mut q = vec![C64::ZERO; da - db + 1];
+    for k in (0..=da - db).rev() {
+        let coeff = rem[db + k] / b[db];
+        q[k] = coeff;
+        for j in 0..=db {
+            let sub = b[j] * coeff;
+            rem[j + k] -= sub;
+        }
+    }
+    rem.truncate(db.max(1));
+    (q, rem)
+}
+
+/// Companion matrix (row-major, dense) of a *monic* polynomial
+/// x^d + c[d-1] x^(d-1) + ... + c[0]; eigenvalues are the roots.
+/// `coeffs` holds d+1 entries low-order-first with coeffs[d] == 1.
+pub fn companion(coeffs: &[C64]) -> Vec<Vec<C64>> {
+    let d = coeffs.len() - 1;
+    assert!(d >= 1, "constant polynomial has no companion");
+    let lead = coeffs[d];
+    let mut m = vec![vec![C64::ZERO; d]; d];
+    for i in 0..d {
+        m[0][i] = -(coeffs[d - 1 - i] / lead);
+    }
+    for i in 1..d {
+        m[i][i - 1] = C64::ONE;
+    }
+    m
+}
+
+/// All complex roots via Durand-Kerner (Weierstrass) iteration — robust for
+/// the moderate degrees of distilled systems (d <= ~64) and works directly
+/// on complex coefficients, unlike real-Hessenberg QR.
+pub fn poly_roots(coeffs: &[C64]) -> Vec<C64> {
+    // strip (numerically) zero leading coefficients
+    let deg = coeffs
+        .iter()
+        .rposition(|c| c.abs() > 1e-12)
+        .expect("zero polynomial");
+    if deg == 0 {
+        return vec![];
+    }
+    // normalize to monic
+    let lead = coeffs[deg];
+    let p: Vec<C64> = coeffs[..=deg].iter().map(|&c| c / lead).collect();
+    let d = deg;
+    // init on a spiral of radius ~ root bound
+    let bound = 1.0
+        + p[..d]
+            .iter()
+            .map(|c| c.abs())
+            .fold(0.0, f64::max);
+    let seed = C64::new(0.4, 0.9);
+    let mut z: Vec<C64> = (0..d)
+        .map(|k| seed.powi(k as u64 + 1).scale(bound.min(2.0)))
+        .collect();
+    for _ in 0..600 {
+        let mut max_step = 0.0f64;
+        for i in 0..d {
+            let mut denom = C64::ONE;
+            for j in 0..d {
+                if i != j {
+                    denom = denom * (z[i] - z[j]);
+                }
+            }
+            if denom.abs() < 1e-300 {
+                continue;
+            }
+            let step = poly_eval(&p, z[i]) / denom;
+            z[i] -= step;
+            max_step = max_step.max(step.abs());
+        }
+        if max_step < 1e-13 {
+            break;
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn from_roots_and_eval() {
+        let roots = [C64::real(1.0), C64::real(2.0), C64::new(0.0, 1.0)];
+        let p = poly_from_roots(&roots);
+        for &r in &roots {
+            assert!(poly_eval(&p, r).abs() < 1e-12);
+        }
+        // monic
+        assert!((p[3] - C64::ONE).abs() < 1e-12);
+    }
+
+    #[test]
+    fn divmod_recomposes() {
+        check("a == q*b + r", 24, |rng| {
+            let da = 1 + rng.below(6);
+            let db = 1 + rng.below(da);
+            let a: Vec<C64> =
+                (0..=da).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let b: Vec<C64> =
+                (0..=db).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            if b.last().unwrap().abs() < 1e-3 {
+                return Ok(()); // skip ill-conditioned leading coefficient
+            }
+            let (q, r) = poly_divmod(&a, &b);
+            let mut recomposed = poly_mul(&q, &b);
+            recomposed.resize(recomposed.len().max(r.len()), C64::ZERO);
+            for (i, c) in r.iter().enumerate() {
+                recomposed[i] += *c;
+            }
+            for (i, &c) in a.iter().enumerate() {
+                if (recomposed[i] - c).abs() > 1e-8 * (1.0 + c.abs()) {
+                    return Err(format!("coeff {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deriv_power_rule() {
+        // p = 1 + 2x + 3x^2 -> p' = 2 + 6x
+        let p = [C64::real(1.0), C64::real(2.0), C64::real(3.0)];
+        let d = poly_deriv(&p);
+        assert!((d[0] - C64::real(2.0)).abs() < 1e-15);
+        assert!((d[1] - C64::real(6.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn roots_recovered_from_random_polys() {
+        check("poly_roots recovers roots", 16, |rng| {
+            let d = 1 + rng.below(10);
+            let roots: Vec<C64> = (0..d)
+                .map(|_| C64::polar(rng.range(0.2, 1.2), rng.range(-3.1, 3.1)))
+                .collect();
+            let p = poly_from_roots(&roots);
+            let got = poly_roots(&p);
+            // every true root must be matched by a computed root
+            for r in &roots {
+                let best = got.iter().map(|g| (*g - *r).abs()).fold(f64::MAX, f64::min);
+                if best > 1e-6 {
+                    return Err(format!("root {r:?} unmatched (best {best:.2e}, d={d})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roots_of_unity() {
+        // x^8 - 1
+        let mut p = vec![C64::ZERO; 9];
+        p[0] = C64::real(-1.0);
+        p[8] = C64::ONE;
+        let roots = poly_roots(&p);
+        assert_eq!(roots.len(), 8);
+        for r in roots {
+            assert!((r.abs() - 1.0).abs() < 1e-9);
+            assert!(poly_eval(&p, r).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn companion_shape() {
+        // x^2 - 3x + 2 = (x-1)(x-2)
+        let p = [C64::real(2.0), C64::real(-3.0), C64::ONE];
+        let m = companion(&p);
+        assert_eq!(m.len(), 2);
+        assert!((m[0][0] - C64::real(3.0)).abs() < 1e-15);
+        assert!((m[0][1] - C64::real(-2.0)).abs() < 1e-15);
+        assert!((m[1][0] - C64::ONE).abs() < 1e-15);
+    }
+}

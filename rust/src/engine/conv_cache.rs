@@ -1,0 +1,199 @@
+//! Conv-mode LCSM engine (Hyena/H3 without distillation, Lemma 2.1): the
+//! long convolution is evaluated against the cached gated-signal history,
+//! O(t) per channel per token with O(L)-growing memory — exactly the cost
+//! profile LaughingHyena removes.
+
+use super::backbone::Backbone;
+use super::shapes::LmShape;
+use super::Engine;
+use crate::util::Prng;
+
+pub struct ConvCacheEngine {
+    bb: Backbone,
+    /// Long filter taps per head [n_layer][heads][L] (h0 first).
+    filters: Vec<Vec<Vec<f32>>>,
+    batch: usize,
+    /// Gated-signal history per sequence/layer/channel: [B][layer][t * D]
+    /// (row-major over time; grows every token — the paper's O(L) cache).
+    hist: Vec<Vec<Vec<f32>>>,
+    /// Short-conv buffers, as in the recurrent engine.
+    sc: Vec<Vec<Vec<f32>>>,
+    last: Vec<i32>,
+}
+
+impl ConvCacheEngine {
+    pub fn new(shape: &LmShape, batch: usize, seed: u64) -> ConvCacheEngine {
+        let bb = Backbone::new(shape, seed);
+        let mut rng = Prng::new(seed ^ 0xF117E5);
+        // decaying random filters, length = seq_len
+        let filters = (0..shape.n_layer)
+            .map(|_| {
+                (0..shape.heads)
+                    .map(|_| {
+                        (0..shape.seq_len)
+                            .map(|t| {
+                                let dec = (-(t as f64) / (shape.seq_len as f64 / 4.0)).exp();
+                                (rng.normal() * 0.3 * dec) as f32
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let d = shape.d_model;
+        let kw = shape.short_kw;
+        ConvCacheEngine {
+            bb,
+            filters,
+            batch,
+            hist: vec![vec![Vec::new(); shape.n_layer]; batch],
+            sc: vec![vec![vec![0.0; 3 * d * (kw - 1)]; shape.n_layer]; batch],
+            last: vec![0; batch],
+        }
+    }
+}
+
+/// One conv-mode mixer step: push z_t = k*v into the history, evaluate the
+/// causal convolution at the newest position (O(t D)), gate with q.
+#[allow(clippy::too_many_arguments)]
+fn mix_conv(
+    d: usize,
+    kw: usize,
+    group: usize,
+    filters_layer: &[Vec<f32>],
+    buf: &mut [f32],
+    hist: &mut Vec<f32>,
+    qkv: &[f32],
+) -> Vec<f32> {
+    let mut qkv_c = vec![0.0f32; 3 * d];
+    let w: [f32; 3] = [0.25, 0.35, 0.4];
+    for c in 0..3 * d {
+        let mut acc = w[kw - 1] * qkv[c];
+        for j in 0..kw - 1 {
+            acc += w[j] * buf[c * (kw - 1) + j];
+        }
+        qkv_c[c] = acc;
+        for j in 0..kw - 2 {
+            buf[c * (kw - 1) + j] = buf[c * (kw - 1) + j + 1];
+        }
+        buf[c * (kw - 1) + kw - 2] = qkv[c];
+    }
+    let (q, rest) = qkv_c.split_at(d);
+    let (k, v) = rest.split_at(d);
+    // append z_t
+    let t0 = hist.len() / d;
+    hist.resize((t0 + 1) * d, 0.0);
+    for c in 0..d {
+        hist[t0 * d + c] = k[c] * v[c];
+    }
+    let t = t0 + 1;
+    // y_c = sum_{j=0..t-1} h[t-1-j] z_j  — O(t) per channel
+    let mut y = vec![0.0f32; d];
+    for c in 0..d {
+        let h = &filters_layer[c / group];
+        let kmax = (t - 1).min(h.len() - 1);
+        let mut acc = 0.0f32;
+        for j in 0..=kmax {
+            acc += h[j] * hist[(t - 1 - j) * d + c];
+        }
+        y[c] = q[c] * acc;
+    }
+    y
+}
+
+impl Engine for ConvCacheEngine {
+    fn name(&self) -> &'static str {
+        "hyena-conv"
+    }
+
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Vec<i32> {
+        assert_eq!(prompts.len(), self.batch);
+        for b in 0..self.batch {
+            for l in 0..self.bb.shape.n_layer {
+                self.hist[b][l].clear();
+                self.sc[b][l].fill(0.0);
+            }
+        }
+        let batch = self.batch;
+        let mut out = Vec::with_capacity(batch);
+        let Self { bb, filters, hist, sc, last, .. } = self;
+        let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
+        let group = d / bb.shape.heads;
+        for b in 0..batch {
+            let mut logits = vec![0.0f32; bb.shape.vocab];
+            let (h_b, sc_b) = (&mut hist[b], &mut sc[b]);
+            for &tok in &prompts[b] {
+                logits = bb.decode_one(tok, |li, qkv| {
+                    mix_conv(d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv)
+                });
+            }
+            let next = bb.greedy(&logits);
+            last[b] = next;
+            out.push(next);
+        }
+        out
+    }
+
+    fn decode(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch);
+        let Self { bb, filters, hist, sc, last, .. } = self;
+        let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
+        let group = d / bb.shape.heads;
+        for b in 0..last.len() {
+            let tok = last[b];
+            let (h_b, sc_b) = (&mut hist[b], &mut sc[b]);
+            let logits = bb.decode_one(tok, |li, qkv| {
+                mix_conv(d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv)
+            });
+            let next = bb.greedy(&logits);
+            last[b] = next;
+            out.push(next);
+        }
+        out
+    }
+
+    fn state_bytes(&self) -> u64 {
+        let mut total = 0u64;
+        for b in 0..self.batch {
+            for l in 0..self.bb.shape.n_layer {
+                total += (self.hist[b][l].len() * 4) as u64;
+                total += (self.sc[b][l].len() * 4) as u64;
+            }
+        }
+        total
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::run_generation;
+
+    #[test]
+    fn cache_grows_linearly_with_tokens() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = ConvCacheEngine::new(&shape, 1, 3);
+        eng.prefill(&[vec![1; 8]]);
+        let after_prefill = eng.state_bytes();
+        for _ in 0..8 {
+            eng.decode();
+        }
+        let after_decode = eng.state_bytes();
+        // 8 prompt + 1 + 8 generated tokens of history
+        let per_tok = (shape.n_layer * shape.d_model * 4) as u64;
+        assert_eq!(after_decode - after_prefill, 8 * per_tok);
+    }
+
+    #[test]
+    fn generation_works_end_to_end() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = ConvCacheEngine::new(&shape, 2, 4);
+        let r = run_generation(&mut eng, &[vec![1, 2, 3], vec![4, 5, 6]], 5);
+        assert_eq!(r.tokens, 10);
+        assert!(r.peak_state_bytes > 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! f32 dense primitives shared by the native engines: batched GEMV,
+//! layer norm, and weight initialization.  The decode hot loop lives here —
+//! see EXPERIMENTS.md §Perf for the iteration log on `matvec`.
+
+use crate::util::Prng;
+
+/// Row-major f32 weight matrix [rows=in, cols=out] (x @ W layout).
+pub struct Dense {
+    pub w: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Dense {
+    pub fn random(rows: usize, cols: usize, rng: &mut Prng) -> Dense {
+        let scale = 1.0 / (rows as f64).sqrt();
+        let w = (0..rows * cols)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        Dense { w, rows, cols }
+    }
+
+    /// y = x @ W for a single row x [in] -> y [out].
+    /// Row-major W makes this a sum of scaled rows — sequential access.
+    pub fn apply(&self, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.rows);
+        debug_assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.w[i * self.cols..(i + 1) * self.cols];
+            for (yo, &wv) in y.iter_mut().zip(row) {
+                *yo += xi * wv;
+            }
+        }
+    }
+
+    /// Batched apply: x [b, in] row-major -> y [b, out].
+    pub fn apply_batch(&self, x: &[f32], y: &mut [f32], b: usize) {
+        for r in 0..b {
+            self.apply(
+                &x[r * self.rows..(r + 1) * self.rows],
+                &mut y[r * self.cols..(r + 1) * self.cols],
+            );
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.w.len() * 4) as u64
+    }
+}
+
+/// In-place layer norm (unit gain, zero bias — engines benchmark compute
+/// cost, not learned statistics).
+pub fn layer_norm(x: &mut [f32]) {
+    let n = x.len() as f32;
+    let mean: f32 = x.iter().sum::<f32>() / n;
+    let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for v in x.iter_mut() {
+        *v = (*v - mean) * inv;
+    }
+}
+
+/// GELU (tanh approximation).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Greedy argmax.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::MIN;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_matches_naive() {
+        let mut rng = Prng::new(1);
+        let d = Dense::random(5, 3, &mut rng);
+        let x: Vec<f32> = (0..5).map(|i| i as f32 - 2.0).collect();
+        let mut y = vec![0.0; 3];
+        d.apply(&x, &mut y);
+        for c in 0..3 {
+            let want: f32 = (0..5).map(|r| x[r] * d.w[r * 3 + c]).sum();
+            assert!((y[c] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.3 - 5.0).collect();
+        layer_norm(&mut x);
+        let mean: f32 = x.iter().sum::<f32>() / 64.0;
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / 64.0;
+        assert!(mean.abs() < 1e-4);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+    }
+}

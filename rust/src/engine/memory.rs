@@ -1,0 +1,102 @@
+//! Analytic memory ledger: exact byte accounting for generation state at
+//! arbitrary model scale (the paper's A100-80GB numbers correspond to
+//! `budget` here).  Drives the OOM frontiers in Figures 1.1 / 5.4 / D.11
+//! at paper-scale shapes, cross-validated against the engines' measured
+//! `state_bytes()` at bench scale (tests below).
+
+use super::shapes::LmShape;
+
+/// Bytes per element (engines run f32; the paper benchmarks fp16 — set 2
+/// to reproduce the paper's absolute numbers).
+pub const F32: u64 = 4;
+
+/// KV-cache bytes for one sequence at context length t (Transformer).
+pub fn kv_cache_bytes(shape: &LmShape, t: usize, elem: u64) -> u64 {
+    2 * shape.n_layer as u64 * shape.d_model as u64 * t as u64 * elem
+}
+
+/// Gated-signal history bytes for one sequence (conv-mode LCSM).
+pub fn conv_cache_bytes(shape: &LmShape, t: usize, elem: u64) -> u64 {
+    shape.n_layer as u64 * shape.d_model as u64 * t as u64 * elem
+}
+
+/// Recurrent state bytes for one sequence (LaughingHyena): complex modal
+/// state per channel plus the short-conv tail — *independent of t*.
+pub fn ssm_state_bytes(shape: &LmShape, elem: u64) -> u64 {
+    shape.n_layer as u64
+        * (2 * shape.d_model as u64 * shape.d_state as u64
+            + 3 * shape.d_model as u64 * (shape.short_kw as u64 - 1))
+        * elem
+}
+
+/// Largest batch that fits a memory budget for a (T, K) generation
+/// workload, given per-sequence state at the worst case t = T + K.
+pub fn max_batch(per_seq_bytes: u64, weights: u64, budget: u64) -> usize {
+    if budget <= weights || per_seq_bytes == 0 {
+        return 0;
+    }
+    ((budget - weights) / per_seq_bytes) as usize
+}
+
+/// Approximate weight bytes for a shape.
+pub fn weight_bytes(shape: &LmShape, elem: u64) -> u64 {
+    shape.params() * elem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::conv_cache::ConvCacheEngine;
+    use crate::engine::recurrent::RecurrentEngine;
+    use crate::engine::transformer::TransformerEngine;
+    use crate::engine::Engine;
+
+    #[test]
+    fn ledger_matches_measured_engine_state() {
+        let shape = LmShape::bench("nano").unwrap();
+        let t = 12;
+        // transformer
+        let mut tr = TransformerEngine::new(&shape, 1, 1);
+        tr.prefill(&[vec![1; t]]);
+        assert_eq!(tr.state_bytes(), kv_cache_bytes(&shape, t, F32));
+        // conv cache (history only part of state; add short-conv tail)
+        let mut cv = ConvCacheEngine::new(&shape, 1, 1);
+        cv.prefill(&[vec![1; t]]);
+        let sc_tail = (shape.n_layer * 3 * shape.d_model * (shape.short_kw - 1)) as u64 * F32;
+        assert_eq!(cv.state_bytes(), conv_cache_bytes(&shape, t, F32) + sc_tail);
+        // recurrent: constant
+        let mut rc = RecurrentEngine::new(&shape, 1, 1);
+        rc.prefill(&[vec![1; t]]);
+        assert_eq!(rc.state_bytes(), ssm_state_bytes(&shape, F32));
+    }
+
+    #[test]
+    fn recurrent_state_beats_kv_cache_at_scale() {
+        // the Figure 5.4 gap: at 1.3B/2048 context, KV cache dwarfs the
+        // distilled state by orders of magnitude
+        let shape = LmShape::paper("1.3b").unwrap();
+        let kv = kv_cache_bytes(&shape, 2048, 2);
+        let ssm = ssm_state_bytes(&shape, 2);
+        assert!(kv > 50 * ssm, "kv {kv} vs ssm {ssm}");
+    }
+
+    #[test]
+    fn max_batch_ordering_reproduces_fig11_frontier() {
+        // under the same budget, LaughingHyena admits far larger batches
+        let shape = LmShape::paper("1.3b").unwrap();
+        let budget = 80 << 30; // A100 80GB
+        let w = weight_bytes(&shape, 2);
+        let l = 2048;
+        let b_tr = max_batch(kv_cache_bytes(&shape, l, 2), w, budget);
+        let b_conv = max_batch(conv_cache_bytes(&shape, l, 2), w, budget);
+        let b_lh = max_batch(ssm_state_bytes(&shape, 2), w, budget);
+        assert!(b_lh > b_conv && b_conv > b_tr, "{b_lh} {b_conv} {b_tr}");
+        assert!(b_lh >= 10 * b_tr, "paper: ~10x larger peak batches");
+    }
+
+    #[test]
+    fn zero_budget_admits_nothing() {
+        let shape = LmShape::paper("125m").unwrap();
+        assert_eq!(max_batch(ssm_state_bytes(&shape, 2), weight_bytes(&shape, 2), 0), 0);
+    }
+}

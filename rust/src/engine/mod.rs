@@ -1,0 +1,68 @@
+//! Native generation engines for the §5.4 benchmark suite: three
+//! architectures with the exact per-token asymptotics the paper compares
+//! (Lemmas 2.1-2.3), doing real float work with randomly initialized
+//! weights:
+//!
+//! * [`recurrent::RecurrentEngine`] — LaughingHyena: distilled modal SSM
+//!   per channel, O(d) per token, O(d) state.
+//! * [`conv_cache::ConvCacheEngine`] — Hyena/H3 conv mode: cache the gated
+//!   signal history, O(t) per token, O(L) state.
+//! * [`transformer::TransformerEngine`] — KV-cached attention, O(t) per
+//!   token, O(L) state with a much larger constant (2 tensors/layer).
+//!
+//! Quality experiments (logit errors, downstream impact) do NOT use these —
+//! they run the real trained model through [`crate::runtime`]; the engines
+//! are for throughput/latency/memory *shape* reproduction at CPU scale.
+
+pub mod backbone;
+pub mod conv_cache;
+pub mod linear;
+pub mod memory;
+pub mod recurrent;
+pub mod shapes;
+pub mod transformer;
+
+pub use shapes::LmShape;
+
+/// A batched auto-regressive generation engine.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+    /// Consume prompts (one per sequence), initialize generation state, and
+    /// return the first sampled token per sequence (greedy).
+    fn prefill(&mut self, prompts: &[Vec<i32>]) -> Vec<i32>;
+    /// One decode step for the whole batch (feeds back the previous
+    /// tokens); returns the next token per sequence.
+    fn decode(&mut self) -> Vec<i32>;
+    /// Bytes of per-generation state currently allocated (kv caches, SSM
+    /// states, conv histories) — weights excluded.
+    fn state_bytes(&self) -> u64;
+    fn batch(&self) -> usize;
+}
+
+/// Generate K tokens after prefill and collect simple timing stats.
+pub struct GenReport {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub tokens: usize,
+    pub peak_state_bytes: u64,
+}
+
+/// Drive any engine through the standard (T-prompt, K-token) workload.
+pub fn run_generation(engine: &mut dyn Engine, prompts: &[Vec<i32>], k: usize) -> GenReport {
+    let t0 = std::time::Instant::now();
+    let _first = engine.prefill(prompts);
+    let prefill_s = t0.elapsed().as_secs_f64();
+    let mut peak = engine.state_bytes();
+    let t1 = std::time::Instant::now();
+    for _ in 1..k {
+        engine.decode();
+        peak = peak.max(engine.state_bytes());
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    GenReport {
+        prefill_s,
+        decode_s,
+        tokens: k * prompts.len(),
+        peak_state_bytes: peak,
+    }
+}

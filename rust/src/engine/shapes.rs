@@ -1,0 +1,111 @@
+//! Model shape presets: the paper's benchmark sizes (125M .. 6.7B, §D.4)
+//! plus CPU-scale shapes the measured benches actually run.  Parameter
+//! counts follow the GPT-style layout used throughout.
+
+/// Architecture shape (no weights).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LmShape {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    /// Long-conv heads (multihyena weight tying); d_model for plain hyena.
+    pub heads: usize,
+    pub attn_heads: usize,
+    pub mlp_mult: usize,
+    pub short_kw: usize,
+    /// Distilled state dimension per channel.
+    pub d_state: usize,
+    /// Max filter length / training context.
+    pub seq_len: usize,
+}
+
+impl LmShape {
+    /// Paper benchmark sizes (§D.4 parameter scaling). `seq_len` set to the
+    /// 2048 context these models use.
+    pub fn paper(name: &str) -> Option<LmShape> {
+        let mk = |name, d_model, n_layer| LmShape {
+            name,
+            vocab: 50_257,
+            d_model,
+            n_layer,
+            heads: 8,
+            attn_heads: d_model / 64,
+            mlp_mult: 4,
+            short_kw: 3,
+            d_state: 16,
+            seq_len: 2048,
+        };
+        match name {
+            "125m" => Some(mk("125m", 768, 12)),
+            "355m" => Some(mk("355m", 1024, 24)),
+            "1.3b" => Some(mk("1.3b", 2048, 24)),
+            "2.7b" => Some(mk("2.7b", 2560, 32)),
+            "6.7b" => Some(mk("6.7b", 4096, 32)),
+            _ => None,
+        }
+    }
+
+    /// CPU-scale shapes for measured benches (same structure, smaller).
+    pub fn bench(name: &str) -> Option<LmShape> {
+        let mk = |name, vocab, d_model, n_layer, seq_len| LmShape {
+            name,
+            vocab,
+            d_model,
+            n_layer,
+            heads: 8,
+            attn_heads: 4,
+            mlp_mult: 2,
+            short_kw: 3,
+            d_state: 16,
+            seq_len,
+        };
+        match name {
+            "nano" => Some(mk("nano", 256, 64, 2, 512)),
+            "micro" => Some(mk("micro", 512, 128, 4, 1024)),
+            "mini" => Some(mk("mini", 1024, 256, 6, 2048)),
+            _ => None,
+        }
+    }
+
+    /// Approximate parameter count (embeddings + per-layer projections).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let per_layer = 3 * d * d // qkv
+            + d * d // out
+            + 2 * self.mlp_mult as u64 * d * d // mlp
+            + 4 * d; // norms + biases (approx)
+        self.vocab as u64 * d + self.n_layer as u64 * per_layer
+    }
+
+    /// FLOPs per generated token per sequence (dense projections dominate).
+    pub fn flops_per_token(&self) -> u64 {
+        2 * self.params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_roughly_match_names() {
+        // within ~25% of the named parameter count
+        for (name, want) in [("125m", 125e6), ("355m", 355e6), ("1.3b", 1.3e9), ("2.7b", 2.7e9)] {
+            let s = LmShape::paper(name).unwrap();
+            let p = s.params() as f64;
+            assert!(
+                (p / want - 1.0).abs() < 0.4,
+                "{name}: {p:.2e} vs {want:.2e}"
+            );
+        }
+    }
+
+    #[test]
+    fn bench_shapes_exist() {
+        for n in ["nano", "micro", "mini"] {
+            assert!(LmShape::bench(n).is_some());
+        }
+        assert!(LmShape::bench("huge").is_none());
+    }
+}

@@ -1,0 +1,134 @@
+//! Shared experiment plumbing: artifact discovery, filter extraction and
+//! distillation of a served model's trained filters.
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+use crate::distill::{DistillConfig, Objective};
+use crate::dsp::C64;
+use crate::runtime::artifact::{Runtime, Value};
+use crate::ssm::ModalSsm;
+
+/// Locate the artifacts directory (repo-root relative).
+pub fn artifacts_dir() -> PathBuf {
+    let cand = PathBuf::from("artifacts");
+    if cand.exists() {
+        return cand;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn require_artifacts() -> Result<PathBuf> {
+    let dir = artifacts_dir();
+    if !dir.join("STAMP").exists() {
+        bail!("artifacts missing — run `make artifacts` first");
+    }
+    Ok(dir)
+}
+
+/// Materialize the trained long-conv filter taps of a checkpoint through
+/// the `filters_<tag>` artifact.  Returns taps[layer][head] = full filter
+/// [h0, h1, ...].
+pub fn extract_filters(
+    rt: &Runtime,
+    dir: &std::path::Path,
+    tag: &str,
+    params: &[Value],
+) -> Result<Vec<Vec<Vec<f64>>>> {
+    let art = rt.load(dir, &format!("filters_{tag}"))?;
+    let out = art.execute(params)?;
+    let spec = &art.manifest.outputs[0];
+    let (nl, m, l) = (spec.shape[0], spec.shape[1], spec.shape[2]);
+    let data = out[0].as_f32()?;
+    let mut filters = vec![vec![vec![0.0f64; l]; m]; nl];
+    for li in 0..nl {
+        for hi in 0..m {
+            for t in 0..l {
+                filters[li][hi][t] = data[(li * m + hi) * l + t] as f64;
+            }
+        }
+    }
+    Ok(filters)
+}
+
+/// Distill every filter of a model to the given order, then zero-pad the
+/// modal systems to `d_state` slots (zero residues are inert) so they fit
+/// the fixed-shape decode artifact.
+pub fn distill_filters(
+    filters: &[Vec<Vec<f64>>],
+    order: usize,
+    d_state: usize,
+    iters: usize,
+) -> (Vec<Vec<ModalSsm>>, Vec<f64>) {
+    assert!(order <= d_state, "order {order} exceeds artifact d_state {d_state}");
+    let mut rel_errs = vec![];
+    let systems = filters
+        .iter()
+        .enumerate()
+        .map(|(li, layer)| {
+            layer
+                .iter()
+                .enumerate()
+                .map(|(hi, taps)| {
+                    let cfg = DistillConfig {
+                        order,
+                        iters,
+                        seed: (li * 131 + hi) as u64,
+                        objective: Objective::L2,
+                        restarts: 1,
+                        ..DistillConfig::default()
+                    };
+                    let r = crate::distill::modal_fit::distill_modal(&taps[1..], taps[0], &cfg);
+                    rel_errs.push(r.rel_err);
+                    pad_modal(&r.ssm, d_state)
+                })
+                .collect()
+        })
+        .collect();
+    (systems, rel_errs)
+}
+
+/// Zero-pad a modal system with inert modes up to dimension d.
+pub fn pad_modal(sys: &ModalSsm, d: usize) -> ModalSsm {
+    let mut poles = sys.poles.clone();
+    let mut residues = sys.residues.clone();
+    while poles.len() < d {
+        poles.push(C64::ZERO);
+        residues.push(C64::ZERO);
+    }
+    ModalSsm::new(poles, residues, sys.h0)
+}
+
+/// Relative l1 error between two logit vectors (Figure 5.1's metric).
+pub fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum();
+    let den: f64 = b.iter().map(|y| y.abs() as f64).sum();
+    num / den.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_modal_is_inert() {
+        let sys = ModalSsm::new(
+            vec![C64::polar(0.8, 1.0)],
+            vec![C64::new(0.5, -0.2)],
+            0.3,
+        );
+        let padded = pad_modal(&sys, 4);
+        assert_eq!(padded.order(), 4);
+        let a = sys.impulse_response(16);
+        let b = padded.impulse_response(16);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rel_l1_basics() {
+        assert_eq!(rel_l1(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rel_l1(&[1.1, 2.0], &[1.0, 2.0]) - 0.1 / 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,115 @@
+//! Figure 1.1 — peak generation throughput vs batch size for Transformer,
+//! conv-mode Hyena and LaughingHyena.
+//!
+//! Measured at CPU bench scale (shape `nano` by default), plus the
+//! paper-scale analytic frontier: under an 80 GiB fp16 budget the maximum
+//! admissible batch per engine (the mechanism behind the paper's 10x peak
+//! throughput gap — Transformers OOM on KV caches long before the
+//! recurrent model runs out of state memory).
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::engine::conv_cache::ConvCacheEngine;
+use crate::engine::memory::{self, F32};
+use crate::engine::recurrent::RecurrentEngine;
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::{run_generation, Engine, LmShape};
+use crate::util::Prng;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let shape = LmShape::bench(args.get("shape").unwrap_or("nano")).expect("shape");
+    let t = args.get_usize("prompt", 192);
+    let k = args.get_usize("tokens", 64);
+    let max_batch = args.get_usize("max-batch", 8);
+    // the CPU testbed "device" budget: scaled so the transformer hits its
+    // frontier inside the sweep (KV bytes at L = t+k decide admission)
+    let budget = args.get_u64(
+        "budget",
+        memory::weight_bytes(&shape, F32)
+            + (max_batch / 2).max(1) as u64 * memory::kv_cache_bytes(&shape, t + k, F32),
+    );
+
+    let mut table = Table::new(&[
+        "batch", "engine", "admitted", "decode tok/s", "total tok/s", "state",
+    ]);
+    let mut rng = Prng::new(42);
+    let mut batch = 1usize;
+    while batch <= max_batch {
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..t).map(|_| rng.below(shape.vocab) as i32).collect())
+            .collect();
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            // admission under the byte budget (weights + per-seq state)
+            let per_seq = match which {
+                "transformer" => memory::kv_cache_bytes(&shape, t + k, F32),
+                "hyena-conv" => memory::conv_cache_bytes(&shape, t + k, F32),
+                _ => memory::ssm_state_bytes(&shape, F32),
+            };
+            let admitted = memory::max_batch(per_seq, memory::weight_bytes(&shape, F32), budget)
+                .min(batch);
+            if admitted == 0 {
+                table.row(&[
+                    batch.to_string(),
+                    which.into(),
+                    "0 (OOM)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            let sub = &prompts[..admitted];
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, admitted, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, admitted, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, admitted, 7)),
+            };
+            let r = run_generation(eng.as_mut(), sub, k);
+            let decode_tps = (admitted * (k - 1)) as f64 / r.decode_s;
+            let total_tps = (admitted * k) as f64 / (r.prefill_s + r.decode_s);
+            table.row(&[
+                batch.to_string(),
+                which.into(),
+                admitted.to_string(),
+                format!("{decode_tps:.1}"),
+                format!("{total_tps:.1}"),
+                crate::benchkit::fmt_bytes(r.peak_state_bytes),
+            ]);
+        }
+        batch *= 2;
+    }
+    table.print(&format!(
+        "Figure 1.1 (measured, shape {}, T={t}, K={k}, budget {})",
+        shape.name,
+        crate::benchkit::fmt_bytes(budget)
+    ));
+    table.write_csv("fig1_1.csv")?;
+
+    // paper-scale analytic frontier (fp16, A100-80GB)
+    let mut frontier = Table::new(&["size", "engine", "max batch", "peak tok/s (rel)"]);
+    for size in ["355m", "1.3b", "2.7b"] {
+        let s = LmShape::paper(size).unwrap();
+        let w = memory::weight_bytes(&s, 2);
+        let budget = 80u64 << 30;
+        let l = 512 + 256; // the paper's T=512, K=256 workload
+        let engines: [(&str, u64); 3] = [
+            ("transformer", memory::kv_cache_bytes(&s, l, 2)),
+            ("hyena-conv", memory::conv_cache_bytes(&s, l, 2)),
+            ("laughing-hyena", memory::ssm_state_bytes(&s, 2)),
+        ];
+        let b_tr = memory::max_batch(engines[0].1, w, budget).max(1);
+        for (name, per_seq) in engines {
+            let b = memory::max_batch(per_seq, w, budget);
+            // throughput ∝ admitted batch at the compute-saturated plateau
+            frontier.row(&[
+                size.into(),
+                name.into(),
+                b.to_string(),
+                format!("{:.1}x", b as f64 / b_tr as f64),
+            ]);
+        }
+    }
+    frontier.print("Figure 1.1 (paper-scale admission frontier, fp16, 80GiB)");
+    frontier.write_csv("fig1_1_frontier.csv")?;
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Figure 5.1 — errors between logits of the pre-trained (conv-mode) and
+//! distilled (recurrent-mode) model, across sorted-logit percentiles.
+//!
+//! Path: trained checkpoint → `filters_*` artifact → native distillery →
+//! `set_modal` on the served model → teacher-forced recurrent decode vs the
+//! conv forward pass (`fwd_logits` artifact).
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::data::corpus::Corpus;
+use crate::runtime::artifact::{Runtime, Value};
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::lm::ServedModel;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let dir = super::common::require_artifacts()?;
+    let tag = "multihyena_small";
+    let order = args.get_usize("order", 16);
+    let iters = args.get_usize("iters", 2500);
+    let rt = Runtime::cpu()?;
+
+    // prefer the tab5.1-trained checkpoint; fall back to init params
+    let trained = std::path::Path::new("results/trained_multihyena_small.bin");
+    let ck = if trained.exists() {
+        println!("using trained checkpoint results/trained_{tag}");
+        Checkpoint::load(std::path::Path::new("results/trained_multihyena_small"))?
+    } else {
+        println!("note: results/trained_{tag} missing (run tab5.1 first); using init params");
+        Checkpoint::load(&dir.join(format!("params_{tag}")))?
+    };
+    let params: Vec<Value> =
+        ck.tensors.iter().map(|t| Value::f32(t.data.clone(), &t.shape)).collect();
+
+    // 1) extract trained filters + distill
+    let filters = super::common::extract_filters(&rt, &dir, tag, &params)?;
+    let mut lm = ServedModel::new(&rt, &dir, tag)?;
+    let (systems, rel_errs) =
+        super::common::distill_filters(&filters, order, lm.shape.d_state, iters);
+    println!(
+        "filter rel-l2 errors @ order {order}: min {:.3} mean {:.3} max {:.3}",
+        rel_errs.iter().cloned().fold(f64::MAX, f64::min),
+        crate::util::stats::mean(&rel_errs),
+        rel_errs.iter().cloned().fold(0.0, f64::max),
+    );
+    // install trained weights + distilled filters into the served model
+    lm.set_params(params.clone());
+    lm.set_modal(&systems)?;
+
+    // 2) conv-mode logits over an eval batch
+    let fwd = rt.load(&dir, &format!("fwd_logits_{tag}"))?;
+    let (b, t, v) = (lm.shape.batch, lm.shape.seq_len, lm.shape.vocab);
+    let mut corpus = Corpus::new(v, 4, 777);
+    let (tokens, _) = corpus.batch(b, t);
+    let mut inputs = params.clone();
+    inputs.push(Value::i32(tokens.clone(), &[b, t]));
+    let conv_logits = fwd.execute(&inputs)?[0].as_f32()?.to_vec();
+
+    // 3) recurrent-mode logits: prefill T0 tokens, teacher-force K steps
+    let t0 = args.get_usize("prefill", t / 2);
+    let k = args.get_usize("horizon", 16.min(t - t0 - 1));
+    let prompts: Vec<Vec<i32>> =
+        (0..b).map(|r| tokens[r * t..r * t + t0].to_vec()).collect();
+    lm.prefill_batch(&prompts)?;
+    let mut rel_errors = vec![];
+    let mut pairs: Vec<(f32, f64)> = vec![]; // (conv logit, |rel err|)
+    for j in 0..k {
+        // teacher forcing: feed the true next token
+        for r in 0..b {
+            lm.last_tokens[r] = tokens[r * t + t0 + j];
+        }
+        let rec = lm.decode_step_logits()?;
+        for r in 0..b {
+            let want = &conv_logits[(r * t + t0 + j) * v..(r * t + t0 + j + 1) * v];
+            let got = &rec[r * v..(r + 1) * v];
+            rel_errors.push(super::common::rel_l1(got, want));
+            for c in 0..v {
+                let denom = want[c].abs().max(1e-3);
+                pairs.push((want[c], ((got[c] - want[c]).abs() / denom) as f64));
+            }
+        }
+    }
+
+    // 4) the paper's percentile profile: sort by conv logit magnitude
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut table = Table::new(&["percentile", "logit", "rel err"]);
+    for q in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9, 99.99] {
+        let idx = ((q / 100.0) * (pairs.len() - 1) as f64) as usize;
+        table.row(&[
+            format!("{q}"),
+            format!("{:.3}", pairs[idx].0),
+            format!("{:.2e}", pairs[idx].1),
+        ]);
+    }
+    table.print(&format!(
+        "Figure 5.1 (order {order}): rel error across sorted logits; mean rel-l1 {:.3e}",
+        crate::util::stats::mean(&rel_errors)
+    ));
+    table.write_csv("fig5_1.csv")?;
+    println!(
+        "paper shape: rel err < 1e-2 up to the 99.99th percentile at d=16 \
+         (largest errors live on small-magnitude logits)"
+    );
+    Ok(())
+}

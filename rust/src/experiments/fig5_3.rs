@@ -1,0 +1,47 @@
+//! Figure 5.3 — generation throughput vs prompt length at fixed batch:
+//! LCSM prefill scales ~linearly while Transformer prefill is quadratic, so
+//! the gap widens with T.
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::engine::conv_cache::ConvCacheEngine;
+use crate::engine::recurrent::RecurrentEngine;
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::{run_generation, Engine, LmShape};
+use crate::util::Prng;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let shape = LmShape::bench(args.get("shape").unwrap_or("nano")).expect("shape");
+    let batch = args.get_usize("batch", 4);
+    let k = args.get_usize("tokens", 16);
+    let lens = [32usize, 64, 128, 256];
+    let mut rng = Prng::new(3);
+    let mut table = Table::new(&["T", "engine", "prefill s", "decode tok/s", "e2e tok/s"]);
+    for &t in &lens {
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..t).map(|_| rng.below(shape.vocab) as i32).collect())
+            .collect();
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, batch, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, batch, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, batch, 7)),
+            };
+            let r = run_generation(eng.as_mut(), &prompts, k);
+            table.row(&[
+                t.to_string(),
+                which.into(),
+                format!("{:.3}", r.prefill_s),
+                format!("{:.1}", (batch * (k - 1)) as f64 / r.decode_s),
+                format!("{:.1}", (batch * k) as f64 / (r.prefill_s + r.decode_s)),
+            ]);
+        }
+    }
+    table.print(&format!(
+        "Figure 5.3 (shape {}, batch {batch}, K={k}): throughput vs prompt length",
+        shape.name
+    ));
+    table.write_csv("fig5_3.csv")?;
+    println!("paper shape: e2e throughput gap vs transformer widens as T grows");
+    Ok(())
+}

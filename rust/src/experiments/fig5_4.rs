@@ -1,0 +1,58 @@
+//! Figure 5.4 — peak generation memory vs number of generated tokens:
+//! recurrent models are flat; caches grow linearly in K.
+
+use crate::benchkit::{fmt_bytes, Table};
+use crate::cli::Args;
+use crate::engine::conv_cache::ConvCacheEngine;
+use crate::engine::memory::{self, F32};
+use crate::engine::recurrent::RecurrentEngine;
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::{run_generation, Engine, LmShape};
+use crate::util::Prng;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let shape = LmShape::bench(args.get("shape").unwrap_or("nano")).expect("shape");
+    let batch = args.get_usize("batch", 4);
+    let t = args.get_usize("prompt", 32);
+    let mut rng = Prng::new(5);
+    let prompts: Vec<Vec<i32>> = (0..batch)
+        .map(|_| (0..t).map(|_| rng.below(shape.vocab) as i32).collect())
+        .collect();
+    let mut table = Table::new(&["K", "transformer", "hyena-conv", "laughing-hyena"]);
+    for k in [16usize, 32, 64, 128] {
+        let mut cells = vec![k.to_string()];
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, batch, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, batch, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, batch, 7)),
+            };
+            let r = run_generation(eng.as_mut(), &prompts, k);
+            cells.push(fmt_bytes(r.peak_state_bytes));
+        }
+        table.row(&cells);
+    }
+    table.print(&format!(
+        "Figure 5.4 (measured, shape {}, batch {batch}, T={t}): peak generation state",
+        shape.name
+    ));
+    table.write_csv("fig5_4.csv")?;
+
+    // paper-scale analytic version (1.3B, fp16, batch 64, T=512)
+    let s = LmShape::paper("1.3b").unwrap();
+    let b = 64u64;
+    let mut analytic = Table::new(&["K", "transformer", "hyena-conv", "laughing-hyena"]);
+    for k in [128usize, 256, 512, 1024] {
+        analytic.row(&[
+            k.to_string(),
+            fmt_bytes(b * memory::kv_cache_bytes(&s, 512 + k, 2)),
+            fmt_bytes(b * memory::conv_cache_bytes(&s, 512 + k, 2)),
+            fmt_bytes(b * memory::ssm_state_bytes(&s, 2)),
+        ]);
+    }
+    let _ = F32;
+    analytic.print("Figure 5.4 (paper scale 1.3B fp16, batch 64, T=512): analytic ledger");
+    analytic.write_csv("fig5_4_paper.csv")?;
+    println!("paper shape: recurrent memory constant in K; ~3x gap at K=512");
+    Ok(())
+}

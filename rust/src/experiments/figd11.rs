@@ -1,0 +1,69 @@
+//! Figure D.11 — latency / throughput / peak memory vs model size:
+//! measured across the CPU bench shapes plus the analytic paper-scale
+//! ledger (125M .. 6.7B, fp16).
+
+use crate::benchkit::{fmt_bytes, fmt_time, Table};
+use crate::cli::Args;
+use crate::engine::conv_cache::ConvCacheEngine;
+use crate::engine::memory::{self};
+use crate::engine::recurrent::RecurrentEngine;
+use crate::engine::transformer::TransformerEngine;
+use crate::engine::{run_generation, Engine, LmShape};
+use crate::util::Prng;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let batch = args.get_usize("batch", 2);
+    let t = args.get_usize("prompt", 64);
+    let k = args.get_usize("tokens", 16);
+    let mut rng = Prng::new(7);
+    let mut table = Table::new(&[
+        "shape", "params", "engine", "latency/tok", "tok/s", "peak state",
+    ]);
+    for name in ["nano", "micro"] {
+        let shape = LmShape::bench(name).unwrap();
+        let prompts: Vec<Vec<i32>> = (0..batch)
+            .map(|_| (0..t).map(|_| rng.below(shape.vocab) as i32).collect())
+            .collect();
+        for which in ["transformer", "hyena-conv", "laughing-hyena"] {
+            let mut eng: Box<dyn Engine> = match which {
+                "transformer" => Box::new(TransformerEngine::new(&shape, batch, 7)),
+                "hyena-conv" => Box::new(ConvCacheEngine::new(&shape, batch, 7)),
+                _ => Box::new(RecurrentEngine::new(&shape, batch, 7)),
+            };
+            let r = run_generation(eng.as_mut(), &prompts, k);
+            table.row(&[
+                name.into(),
+                format!("{:.1}M", shape.params() as f64 / 1e6),
+                which.into(),
+                fmt_time(r.decode_s / (k - 1) as f64),
+                format!("{:.1}", (batch * (k - 1)) as f64 / r.decode_s),
+                fmt_bytes(r.peak_state_bytes),
+            ]);
+        }
+    }
+    table.print(&format!("Figure D.11 (measured, batch {batch}, T={t}, K={k})"));
+    table.write_csv("figD11_measured.csv")?;
+
+    // analytic paper-scale scaling (fp16, batch 64, T=512, K=256)
+    let mut paper = Table::new(&[
+        "size", "kv cache/seq", "ssm state/seq", "ratio", "max batch tr", "max batch lh",
+    ]);
+    for size in ["125m", "355m", "1.3b", "2.7b", "6.7b"] {
+        let s = LmShape::paper(size).unwrap();
+        let kv = memory::kv_cache_bytes(&s, 768, 2);
+        let ssm = memory::ssm_state_bytes(&s, 2);
+        let w = memory::weight_bytes(&s, 2);
+        let budget = 80u64 << 30;
+        paper.row(&[
+            size.into(),
+            fmt_bytes(kv),
+            fmt_bytes(ssm),
+            format!("{:.0}x", kv as f64 / ssm as f64),
+            memory::max_batch(kv, w, budget).to_string(),
+            memory::max_batch(ssm, w, budget).to_string(),
+        ]);
+    }
+    paper.print("Figure D.11 (paper-scale state ledger, fp16, T+K=768)");
+    paper.write_csv("figD11_paper.csv")?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Figures D.1–D.5 — distillation error (min/mean/max over channels) vs
+//! order, per model family: H3 IIR & FIR distill with tiny d; Hyena and
+//! MultiHyena need larger orders (synthetic filter suites per DESIGN.md §6).
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::data::filters::{model_filters, Family};
+use crate::distill::{DistillConfig, Distillery};
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let n_filters = args.get_usize("filters", 6);
+    let len = args.get_usize("len", 256);
+    let iters = args.get_usize("iters", 1200);
+    let orders = [2usize, 4, 8, 16, 32];
+    let mut table =
+        Table::new(&["family", "order", "min rel err", "mean rel err", "max rel err"]);
+    let mut knee = Table::new(&["family", "order for mean err < 0.05"]);
+    for fam in [Family::H3Iir, Family::H3Fir, Family::Hyena, Family::MultiHyena] {
+        let filters = model_filters(fam, n_filters, len, 0xD0 + fam as u64);
+        let mut first_good: Option<usize> = None;
+        for &d in &orders {
+            let distillery = Distillery {
+                order: Some(d),
+                fit: DistillConfig { iters, ..Default::default() },
+                hankel_window: Some(64),
+                ..Default::default()
+            };
+            let r = distillery.distill_all(&filters);
+            if first_good.is_none() && r.mean_err() < 0.05 {
+                first_good = Some(d);
+            }
+            table.row(&[
+                fam.label().into(),
+                d.to_string(),
+                format!("{:.2e}", r.min_err()),
+                format!("{:.2e}", r.mean_err()),
+                format!("{:.2e}", r.max_err()),
+            ]);
+        }
+        knee.row(&[
+            fam.label().into(),
+            first_good.map_or(">32".into(), |d| d.to_string()),
+        ]);
+        println!("  {} done", fam.label());
+    }
+    table.print("Figures D.1-D.5: distillation error vs order per family");
+    table.write_csv("figD_distill_errors.csv")?;
+    knee.print("Order needed per family (paper: H3 < 8, Hyena-family < 32)");
+    knee.write_csv("figD_knee.csv")?;
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Figures D.6–D.8 — long-conv filters at initialization vs after training:
+//! trained filters decay and become low-dimensional; init filters are
+//! rough/high-dimensional (the App. E.2 observation that motivates
+//! post-training distillation).
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::hankel::effective_dimension;
+use crate::runtime::artifact::{Runtime, Value};
+use crate::runtime::checkpoint::Checkpoint;
+
+pub fn run(_args: &Args) -> anyhow::Result<()> {
+    let dir = super::common::require_artifacts()?;
+    let tag = "multihyena_small";
+    let rt = Runtime::cpu()?;
+    let to_values = |ck: &Checkpoint| -> Vec<Value> {
+        ck.tensors.iter().map(|t| Value::f32(t.data.clone(), &t.shape)).collect()
+    };
+    let init_ck = Checkpoint::load(&dir.join(format!("params_{tag}")))?;
+    let init_f = super::common::extract_filters(&rt, &dir, tag, &to_values(&init_ck))?;
+    let trained_base = std::path::Path::new("results/trained_multihyena_small");
+    let trained_f = if trained_base.with_extension("bin").exists() {
+        let ck = Checkpoint::load(trained_base)?;
+        Some(super::common::extract_filters(&rt, &dir, tag, &to_values(&ck))?)
+    } else {
+        println!("note: run tab5.1 first to compare trained filters");
+        None
+    };
+
+    let mut table = Table::new(&[
+        "layer", "head", "init |h| head/tail", "init eff-dim", "trained eff-dim",
+    ]);
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("layer,head,phase,t,h\n");
+    for (li, layer) in init_f.iter().enumerate() {
+        for (hi, taps) in layer.iter().enumerate().take(3) {
+            let head: f64 = taps[..16].iter().map(|x| x.abs()).sum();
+            let tail: f64 = taps[taps.len() - 16..].iter().map(|x| x.abs()).sum();
+            let e_init = effective_dimension(&taps[1..], 1e-3);
+            let e_train = trained_f
+                .as_ref()
+                .map(|f| effective_dimension(&f[li][hi][1..], 1e-3).to_string())
+                .unwrap_or_else(|| "-".into());
+            table.row(&[
+                li.to_string(),
+                hi.to_string(),
+                format!("{:.2}/{:.3}", head, tail),
+                e_init.to_string(),
+                e_train,
+            ]);
+            for (t, h) in taps.iter().enumerate().step_by(4) {
+                csv.push_str(&format!("{li},{hi},init,{t},{h:.6}\n"));
+            }
+            if let Some(f) = &trained_f {
+                for (t, h) in f[li][hi].iter().enumerate().step_by(4) {
+                    csv.push_str(&format!("{li},{hi},trained,{t},{h:.6}\n"));
+                }
+            }
+        }
+    }
+    std::fs::write("results/figD_filters.csv", csv)?;
+    table.print("Figures D.6-D.8: filters at init vs trained (taps in results/figD_filters.csv)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation
+//! (DESIGN.md §4 maps each ID to the sections/modules involved).
+//!
+//! Every driver prints the paper-shaped table to stdout and writes CSV
+//! under `results/`.  Scaled-down defaults run on this CPU testbed;
+//! `--steps/--batch/--orders` options widen them.
+
+pub mod common;
+pub mod fig1_1;
+pub mod fig5_1;
+pub mod fig5_2;
+pub mod fig5_3;
+pub mod fig5_4;
+pub mod figd11;
+pub mod figd_distill;
+pub mod figd_filters;
+pub mod figd_hankel;
+pub mod fige;
+pub mod tab5_1;
+pub mod tab5_2;
+pub mod tabe1;
+
+use crate::cli::Args;
+
+/// All experiment IDs in paper order.
+pub const ALL: &[&str] = &[
+    "fig1.1",
+    "tab5.1",
+    "fig5.1",
+    "fig5.2",
+    "tab5.2",
+    "fig5.3",
+    "fig5.4",
+    "figD.distill-errors",
+    "figD.filters",
+    "figD.hankel",
+    "figD.11",
+    "tabE.1",
+    "figE.1",
+    "figE.2",
+];
+
+/// Dispatch an experiment by ID.
+pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+    match id {
+        "fig1.1" => fig1_1::run(args),
+        "tab5.1" => tab5_1::run(args),
+        "fig5.1" => fig5_1::run(args),
+        "fig5.2" => fig5_2::run(args),
+        "tab5.2" => tab5_2::run(args),
+        "fig5.3" => fig5_3::run(args),
+        "fig5.4" => fig5_4::run(args),
+        "figD.distill-errors" => figd_distill::run(args),
+        "figD.filters" => figd_filters::run(args),
+        "figD.hankel" => figd_hankel::run(args),
+        "figD.11" => figd11::run(args),
+        "tabE.1" => tabe1::run(args),
+        "figE.1" => fige::run_modal(args),
+        "figE.2" => fige::run_balanced(args),
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,80 @@
+//! Table 5.1 — pre-training perplexity of GPT vs Hyena vs MultiHyena at
+//! increasing token budgets (scaled down: synthetic Zipf-Markov corpus,
+//! hundreds of steps instead of billions of tokens; DESIGN.md §6).
+//!
+//! Drives the AOT `train_step_*_small` artifacts from rust; Python never
+//! runs.  Checkpoints land in `results/` for figD.filters and fig5.1.
+
+use crate::benchkit::Table;
+use crate::cli::Args;
+use crate::data::corpus::Corpus;
+use crate::runtime::artifact::Runtime;
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::trainer::Trainer;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let dir = super::common::require_artifacts()?;
+    let budgets: Vec<usize> = {
+        let max = args.get_usize("steps", 240);
+        vec![max / 4, max / 2, max]
+    };
+    let kinds = ["gpt", "hyena", "multihyena"];
+    let rt = Runtime::cpu()?;
+    let mut table = Table::new(&["model", "params", "steps@ppl…", "", "", "tok/budget"]);
+    let mut rows: Vec<Vec<String>> = vec![];
+    for kind in kinds {
+        let tag = format!("{kind}_small");
+        let mut tr = Trainer::new(&rt, &dir, &tag)?;
+        let ck0 = Checkpoint::load(&dir.join(format!("params_{tag}")))?;
+        let n_params = ck0.total_params();
+        let corpus_master = Corpus::new(512, 4, 1234);
+        let mut corpus = corpus_master.fork(1);
+        let mut heldout = corpus_master.fork(2);
+        let mask = vec![1.0f32; tr.batch * tr.seq_len];
+        let mut ppls = vec![];
+        let mut done = 0usize;
+        for &budget in &budgets {
+            while done < budget {
+                let (tok, tgt) = corpus.batch(tr.batch, tr.seq_len);
+                tr.step(&tok, &tgt, &mask)?;
+                done += 1;
+            }
+            // held-out perplexity over 4 eval batches
+            let mut losses = vec![];
+            for _ in 0..4 {
+                let (tok, tgt) = heldout.batch(tr.batch, tr.seq_len);
+                losses.push(tr.eval(&tok, &tgt, &mask)? as f64);
+            }
+            let ppl = crate::util::stats::mean(&losses).exp();
+            println!("  {kind}: {done} steps -> ppl {ppl:.3}");
+            ppls.push(ppl);
+        }
+        // save the trained checkpoint for downstream experiments
+        std::fs::create_dir_all("results")?;
+        tr.checkpoint(&ck0)
+            .save(std::path::Path::new(&format!("results/trained_{tag}")))?;
+        let tokens_per_budget = budgets
+            .iter()
+            .map(|b| format!("{}k", b * tr.batch * tr.seq_len / 1000))
+            .collect::<Vec<_>>()
+            .join("/");
+        rows.push(vec![
+            kind.to_string(),
+            format!("{:.2}M", n_params as f64 / 1e6),
+            format!("{}@{:.2}", budgets[0], ppls[0]),
+            format!("{}@{:.2}", budgets[1], ppls[1]),
+            format!("{}@{:.2}", budgets[2], ppls[2]),
+            tokens_per_budget,
+        ]);
+    }
+    for r in &rows {
+        table.row(r);
+    }
+    table.print("Table 5.1 (scaled: held-out ppl on Zipf-Markov corpus at step budgets)");
+    table.write_csv("tab5_1.csv")?;
+    println!(
+        "paper shape to reproduce: MultiHyena < Hyena ≈ GPT at every budget \
+         (checkpoints saved under results/trained_*)"
+    );
+    Ok(())
+}

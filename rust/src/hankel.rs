@@ -1,0 +1,150 @@
+//! Hankel-operator analysis (paper §3.3): minimal distillation orders.
+//!
+//! Theorem 3.1 (Ho-Kalman): the McMillan degree of a filter equals the rank
+//! of its infinite Hankel matrix `S = (h_{i+j-1})`.  Theorem 3.2 (AAK): the
+//! best achievable order-d approximation error in Hankel norm is exactly
+//! the (d+1)-th Hankel singular value.  Inspecting the decay of the
+//! spectrum of the truncated `S_L` therefore *predicts* the distillation
+//! order before any optimization runs — this module computes that.
+
+use crate::linalg::eig_sym::{eig_sym, SymEig};
+use crate::linalg::Mat;
+
+/// Build the n x n principal Hankel sub-matrix from filter taps.
+///
+/// `taps[tau]` holds h_{tau+1} (the paper's Markov parameters; the h_0
+/// passthrough never enters the Hankel operator). Entries beyond the
+/// provided taps are zero (truncated filter, App. A.7).
+pub fn hankel_matrix(taps: &[f64], n: usize) -> Mat {
+    Mat::from_fn(n, n, |i, j| taps.get(i + j).copied().unwrap_or(0.0))
+}
+
+/// Hankel singular values of a filter (descending).
+///
+/// Uses the symmetry of S_L: sigma = |eigenvalues|. `n` defaults to the
+/// full tap count when None.
+pub fn hankel_singular_values(taps: &[f64], n: Option<usize>) -> Vec<f64> {
+    let n = n.unwrap_or(taps.len());
+    let s = hankel_matrix(taps, n);
+    eig_sym(&s).values.into_iter().map(f64::abs).collect()
+}
+
+/// Full symmetric eigendecomposition of the Hankel matrix — Kung's balanced
+/// truncation (paper App. E.3.2) needs the eigenvectors.
+pub fn hankel_eig(taps: &[f64], n: usize) -> SymEig {
+    eig_sym(&hankel_matrix(taps, n))
+}
+
+/// Suggested distillation order: smallest d such that sigma_{d+1} falls
+/// below `tol * sigma_1` (the paper's "rule of thumb": d large enough for
+/// sigma_{d+1} to be small). Returns at least 1 and at most n.
+pub fn suggest_order(sigmas: &[f64], tol: f64) -> usize {
+    if sigmas.is_empty() || sigmas[0] == 0.0 {
+        return 1;
+    }
+    let s0 = sigmas[0];
+    for (i, &s) in sigmas.iter().enumerate().skip(1) {
+        if s < tol * s0 {
+            return i.max(1);
+        }
+    }
+    sigmas.len()
+}
+
+/// AAK lower bound (Thm 3.2): no order-d system can approximate the filter
+/// with Hankel-norm error below sigma_{d+1}. Returns 0 beyond the spectrum.
+pub fn aak_lower_bound(sigmas: &[f64], d: usize) -> f64 {
+    sigmas.get(d).copied().unwrap_or(0.0)
+}
+
+/// "Effective dimension" summary used in the Figure D.9/D.10 analysis:
+/// number of normalized singular values above the threshold.
+pub fn effective_dimension(taps: &[f64], tol: f64) -> usize {
+    let sv = hankel_singular_values(taps, None);
+    if sv.is_empty() || sv[0] == 0.0 {
+        return 0;
+    }
+    sv.iter().filter(|&&s| s > tol * sv[0]).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::C64;
+    use crate::util::prop::check;
+
+    /// Impulse response of sum_n R_n lambda_n^tau (real part).
+    fn modal_taps(poles: &[C64], res: &[C64], len: usize) -> Vec<f64> {
+        (0..len)
+            .map(|t| {
+                poles
+                    .iter()
+                    .zip(res)
+                    .map(|(l, r)| (*r * l.powi(t as u64)).re)
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hankel_structure() {
+        let taps = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = hankel_matrix(&taps, 3);
+        assert_eq!(s[(0, 0)], 1.0);
+        assert_eq!(s[(0, 2)], 3.0);
+        assert_eq!(s[(2, 0)], 3.0);
+        assert_eq!(s[(2, 2)], 5.0);
+    }
+
+    #[test]
+    fn rank_counts_modes_ho_kalman() {
+        // A d-mode (conjugate-closed) modal filter has Hankel rank d.
+        check("hankel rank == McMillan degree", 10, |rng| {
+            let pairs = 1 + rng.below(3);
+            let mut poles = vec![];
+            let mut res = vec![];
+            for _ in 0..pairs {
+                let l = C64::polar(rng.range(0.5, 0.9), rng.range(0.3, 2.8));
+                let r = C64::new(rng.normal(), rng.normal());
+                poles.push(l);
+                poles.push(l.conj());
+                res.push(r);
+                res.push(r.conj());
+            }
+            let d = poles.len();
+            let taps = modal_taps(&poles, &res, 48);
+            let sv = hankel_singular_values(&taps, Some(24));
+            let rank = sv.iter().filter(|&&s| s > 1e-8 * sv[0]).count();
+            if rank == d {
+                Ok(())
+            } else {
+                Err(format!("rank {rank} != modes {d}; sv[..6]={:?}", &sv[..6.min(sv.len())]))
+            }
+        });
+    }
+
+    #[test]
+    fn suggest_order_finds_knee() {
+        let sigmas = [1.0, 0.5, 0.2, 1e-7, 1e-8];
+        assert_eq!(suggest_order(&sigmas, 1e-4), 3);
+        assert_eq!(suggest_order(&sigmas, 1e-9), 5);
+        assert_eq!(suggest_order(&[0.0], 1e-4), 1);
+    }
+
+    #[test]
+    fn aak_bound_is_spectrum_tail() {
+        let sigmas = [2.0, 1.0, 0.1];
+        assert_eq!(aak_lower_bound(&sigmas, 1), 1.0);
+        assert_eq!(aak_lower_bound(&sigmas, 3), 0.0);
+    }
+
+    #[test]
+    fn truncated_delay_line_is_full_rank() {
+        // h = delta at tau=K: Hankel is an anti-diagonal line -> rank K+1
+        let mut taps = vec![0.0; 12];
+        taps[5] = 1.0;
+        let sv = hankel_singular_values(&taps, Some(8));
+        let rank = sv.iter().filter(|&&s| s > 1e-10).count();
+        assert_eq!(rank, 6);
+    }
+}

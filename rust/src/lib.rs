@@ -1,0 +1,33 @@
+//! # Laughing Hyena Distillery — Rust coordinator and distillation library
+//!
+//! Reproduction of *"Laughing Hyena Distillery: Extracting Compact
+//! Recurrences From Convolutions"* (Massaroli, Poli, Fu et al., NeurIPS
+//! 2023) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — serving coordinator, generation engines, and a
+//!   native implementation of the full distillery (modal interpolation,
+//!   Hankel-spectrum order selection, truncation baselines) plus every
+//!   numerical substrate it needs (FFT, eigen/SVD, polynomial algebra,
+//!   state-space realizations).
+//! * **L2** — JAX MultiHyena/Hyena/GPT models, AOT-lowered to HLO text in
+//!   `artifacts/` (see `python/compile/`), executed through [`runtime`].
+//! * **L1** — Pallas kernels for the modal filter materialization and the
+//!   fused diagonal-SSM decode step (see `python/compile/kernels/`).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `repro` binary is self-contained.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distill;
+pub mod dsp;
+pub mod engine;
+pub mod experiments;
+pub mod hankel;
+pub mod linalg;
+pub mod runtime;
+pub mod ssm;
+pub mod util;

@@ -1,0 +1,367 @@
+//! Eigenvalues of a general real matrix: Householder Hessenberg reduction
+//! followed by the shifted Francis double-step QR iteration (the classic
+//! `hqr` algorithm).
+//!
+//! Needed for the ss→tf conversion `a = poly(eig(A))`,
+//! `b = poly(eig(A - BC)) + ...` (paper App. A.6 / Listing 1) and for
+//! canonizing arbitrary dense state-space models (Lemma A.8).
+
+use super::mat::Mat;
+use crate::dsp::C64;
+
+/// Reduce to upper Hessenberg form in place (Householder reflectors).
+fn hessenberg(a: &mut Mat) {
+    let n = a.rows;
+    for k in 0..n.saturating_sub(2) {
+        // Householder vector for column k below the subdiagonal
+        let mut alpha = 0.0;
+        for i in k + 1..n {
+            alpha += a[(i, k)] * a[(i, k)];
+        }
+        alpha = alpha.sqrt();
+        if alpha < 1e-300 {
+            continue;
+        }
+        if a[(k + 1, k)] > 0.0 {
+            alpha = -alpha;
+        }
+        let mut v = vec![0.0; n];
+        v[k + 1] = a[(k + 1, k)] - alpha;
+        for i in k + 2..n {
+            v[i] = a[(i, k)];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        // A <- (I - 2 v v^T / v^T v) A
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k + 1..n {
+                dot += v[i] * a[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k + 1..n {
+                a[(i, j)] -= f * v[i];
+            }
+        }
+        // A <- A (I - 2 v v^T / v^T v)
+        for i in 0..n {
+            let mut dot = 0.0;
+            for j in k + 1..n {
+                dot += a[(i, j)] * v[j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for j in k + 1..n {
+                a[(i, j)] -= f * v[j];
+            }
+        }
+    }
+}
+
+/// Eigenvalues of a general real square matrix (complex output).
+/// Numerical Recipes-style `hqr` on the Hessenberg form.
+pub fn eig_real(a_in: &Mat) -> Vec<C64> {
+    assert_eq!(a_in.rows, a_in.cols);
+    let n = a_in.rows;
+    if n == 0 {
+        return vec![];
+    }
+    let mut a = a_in.clone();
+    hessenberg(&mut a);
+
+    let mut wr = vec![0.0f64; n];
+    let mut wi = vec![0.0f64; n];
+    // overall matrix norm for deflation thresholds
+    let mut anorm = 0.0;
+    for i in 0..n {
+        for j in i.saturating_sub(1)..n {
+            anorm += a[(i, j)].abs();
+        }
+    }
+    if anorm == 0.0 {
+        return vec![C64::ZERO; n];
+    }
+
+    let mut nn = n as isize - 1;
+    let mut t = 0.0f64;
+    while nn >= 0 {
+        let mut its = 0;
+        loop {
+            // search for a small subdiagonal element
+            let mut l = nn;
+            while l >= 1 {
+                let s = a[((l - 1) as usize, (l - 1) as usize)].abs()
+                    + a[(l as usize, l as usize)].abs();
+                let s = if s == 0.0 { anorm } else { s };
+                if a[(l as usize, (l - 1) as usize)].abs() <= f64::EPSILON * s {
+                    break;
+                }
+                l -= 1;
+            }
+            let x = a[(nn as usize, nn as usize)];
+            if l == nn {
+                // one root found
+                wr[nn as usize] = x + t;
+                wi[nn as usize] = 0.0;
+                nn -= 1;
+                break;
+            }
+            let y = a[((nn - 1) as usize, (nn - 1) as usize)];
+            let w = a[(nn as usize, (nn - 1) as usize)]
+                * a[((nn - 1) as usize, nn as usize)];
+            if l == nn - 1 {
+                // two roots found
+                let p = 0.5 * (y - x);
+                let q = p * p + w;
+                let z = q.abs().sqrt();
+                let x2 = x + t;
+                if q >= 0.0 {
+                    let z = p + z.copysign(p);
+                    wr[(nn - 1) as usize] = x2 + z;
+                    wr[nn as usize] = if z != 0.0 { x2 - w / z } else { x2 + z };
+                    wi[(nn - 1) as usize] = 0.0;
+                    wi[nn as usize] = 0.0;
+                } else {
+                    wr[(nn - 1) as usize] = x2 + p;
+                    wr[nn as usize] = x2 + p;
+                    wi[(nn - 1) as usize] = -z;
+                    wi[nn as usize] = z;
+                }
+                nn -= 2;
+                break;
+            }
+            // no root yet: QR step
+            if its == 60 {
+                // convergence failure: report current diagonal (rare; the
+                // callers treat eigenvalues statistically)
+                wr[nn as usize] = x + t;
+                wi[nn as usize] = 0.0;
+                nn -= 1;
+                break;
+            }
+            let mut x = x;
+            let mut y = y;
+            let mut w = w;
+            if its == 10 || its == 20 {
+                // exceptional shift
+                t += x;
+                for i in 0..=nn as usize {
+                    a[(i, i)] -= x;
+                }
+                let s = a[(nn as usize, (nn - 1) as usize)].abs()
+                    + a[((nn - 1) as usize, (nn - 2) as usize)].abs();
+                x = 0.75 * s;
+                y = x;
+                w = -0.4375 * s * s;
+            }
+            its += 1;
+            // look for two consecutive small subdiagonal elements
+            let mut m = nn - 2;
+            let (mut p, mut q, mut r) = (0.0f64, 0.0f64, 0.0f64);
+            while m >= l {
+                let z = a[(m as usize, m as usize)];
+                let rr = x - z;
+                let ss = y - z;
+                p = (rr * ss - w) / a[((m + 1) as usize, m as usize)]
+                    + a[(m as usize, (m + 1) as usize)];
+                q = a[((m + 1) as usize, (m + 1) as usize)] - z - rr - ss;
+                r = a[((m + 2) as usize, (m + 1) as usize)];
+                let s = p.abs() + q.abs() + r.abs();
+                p /= s;
+                q /= s;
+                r /= s;
+                if m == l {
+                    break;
+                }
+                let u = a[(m as usize, (m - 1) as usize)].abs() * (q.abs() + r.abs());
+                let v = p.abs()
+                    * (a[((m - 1) as usize, (m - 1) as usize)].abs()
+                        + a[(m as usize, m as usize)].abs()
+                        + a[((m + 1) as usize, (m + 1) as usize)].abs());
+                if u <= f64::EPSILON * v {
+                    break;
+                }
+                m -= 1;
+            }
+            for i in m + 2..=nn {
+                a[(i as usize, (i - 2) as usize)] = 0.0;
+                if i != m + 2 {
+                    a[(i as usize, (i - 3) as usize)] = 0.0;
+                }
+            }
+            // double QR step on rows l..nn
+            let mut k = m;
+            while k <= nn - 1 {
+                if k != m {
+                    p = a[(k as usize, (k - 1) as usize)];
+                    q = a[((k + 1) as usize, (k - 1) as usize)];
+                    r = if k != nn - 1 {
+                        a[((k + 2) as usize, (k - 1) as usize)]
+                    } else {
+                        0.0
+                    };
+                    x = p.abs() + q.abs() + r.abs();
+                    if x != 0.0 {
+                        p /= x;
+                        q /= x;
+                        r /= x;
+                    }
+                }
+                let s = (p * p + q * q + r * r).sqrt().copysign(p);
+                if s == 0.0 {
+                    k += 1;
+                    continue;
+                }
+                if k == m {
+                    if l != m {
+                        a[(k as usize, (k - 1) as usize)] =
+                            -a[(k as usize, (k - 1) as usize)];
+                    }
+                } else {
+                    a[(k as usize, (k - 1) as usize)] = -s * x;
+                }
+                p += s;
+                let x2 = p / s;
+                let y2 = q / s;
+                let z2 = r / s;
+                q /= p;
+                r /= p;
+                // row modification
+                for j in k as usize..=nn as usize {
+                    let mut pp = a[(k as usize, j)] + q * a[((k + 1) as usize, j)];
+                    if k != nn - 1 {
+                        pp += r * a[((k + 2) as usize, j)];
+                        a[((k + 2) as usize, j)] -= pp * z2;
+                    }
+                    a[((k + 1) as usize, j)] -= pp * y2;
+                    a[(k as usize, j)] -= pp * x2;
+                }
+                // column modification
+                let mmin = if nn < k + 3 { nn } else { k + 3 };
+                for i in l as usize..=mmin as usize {
+                    let mut pp =
+                        x2 * a[(i, k as usize)] + y2 * a[(i, (k + 1) as usize)];
+                    if k != nn - 1 {
+                        pp += z2 * a[(i, (k + 2) as usize)];
+                        a[(i, (k + 2) as usize)] -= pp * r;
+                    }
+                    a[(i, (k + 1) as usize)] -= pp * q;
+                    a[(i, k as usize)] -= pp;
+                }
+                k += 1;
+            }
+        }
+    }
+    (0..n).map(|i| C64::new(wr[i], wi[i])).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::poly::{poly_eval, poly_from_roots};
+    use crate::util::prop::check;
+
+    /// Match two multisets of complex numbers greedily.
+    fn matches(got: &[C64], want: &[C64], tol: f64) -> Result<(), String> {
+        if got.len() != want.len() {
+            return Err("length".into());
+        }
+        let mut used = vec![false; got.len()];
+        for w in want {
+            let mut best = (usize::MAX, f64::MAX);
+            for (i, g) in got.iter().enumerate() {
+                if !used[i] {
+                    let d = (*g - *w).abs();
+                    if d < best.1 {
+                        best = (i, d);
+                    }
+                }
+            }
+            if best.1 > tol {
+                return Err(format!("unmatched {w:?} (best {:.2e})", best.1));
+            }
+            used[best.0] = true;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn diagonal_and_triangular() {
+        let a = Mat::from_rows(&[
+            vec![3.0, 1.0, 0.0],
+            vec![0.0, -2.0, 5.0],
+            vec![0.0, 0.0, 0.5],
+        ]);
+        let got = eig_real(&a);
+        matches(
+            &got,
+            &[C64::real(3.0), C64::real(-2.0), C64::real(0.5)],
+            1e-9,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn rotation_has_complex_pair() {
+        // rotation by 90 degrees: eigenvalues +-i
+        let a = Mat::from_rows(&[vec![0.0, -1.0], vec![1.0, 0.0]]);
+        let got = eig_real(&a);
+        matches(&got, &[C64::I, -C64::I], 1e-9).unwrap();
+    }
+
+    #[test]
+    fn companion_matrix_eigs_are_poly_roots() {
+        check("eig(companion(p)) == roots(p)", 12, |rng| {
+            let d = 2 + rng.below(8);
+            // real-coefficient polynomial from conjugate-closed root set
+            let mut roots: Vec<C64> = vec![];
+            let mut k = 0;
+            while k < d {
+                if k + 1 < d && rng.uniform() < 0.6 {
+                    let z = C64::polar(rng.range(0.2, 1.1), rng.range(0.1, 3.0));
+                    roots.push(z);
+                    roots.push(z.conj());
+                    k += 2;
+                } else {
+                    roots.push(C64::real(rng.range(-1.0, 1.0)));
+                    k += 1;
+                }
+            }
+            let p = poly_from_roots(&roots);
+            let n = roots.len();
+            let a = Mat::from_fn(n, n, |i, j| {
+                if i == 0 {
+                    -p[n - 1 - j].re
+                } else if i == j + 1 {
+                    1.0
+                } else {
+                    0.0
+                }
+            });
+            let got = eig_real(&a);
+            // verify via the polynomial itself (roots may be clustered)
+            for g in &got {
+                if poly_eval(&p, *g).abs() > 1e-5 {
+                    return Err(format!("p(eig) = {:.2e}", poly_eval(&p, *g).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_equals_eig_sum() {
+        check("trace == sum eig", 16, |rng| {
+            let n = 2 + rng.below(10);
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let es: C64 = eig_real(&a).into_iter().fold(C64::ZERO, |s, e| s + e);
+            if (es.re - tr).abs() < 1e-6 * (1.0 + tr.abs()) && es.im.abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("trace {tr} vs {es:?}"))
+            }
+        });
+    }
+}

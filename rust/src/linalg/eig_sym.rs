@@ -1,0 +1,170 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi rotation method.
+//!
+//! This is the workhorse behind the paper's Hankel analysis: the truncated
+//! Hankel matrix S_L = (h_{i+j}) is real symmetric, so its singular values
+//! are |eigenvalues| and Kung's balanced-truncation realization (App.
+//! E.3.2) needs the eigenvectors too.  Jacobi is O(n^3) per sweep but
+//! unconditionally stable and accurate for the L <= 1024 sizes used here.
+
+use super::mat::Mat;
+
+/// Eigendecomposition of a symmetric matrix.
+/// `values[k]` corresponds to eigenvector column `vectors[:, k]`,
+/// sorted by |value| descending (the Hankel convention used throughout).
+pub struct SymEig {
+    pub values: Vec<f64>,
+    pub vectors: Mat, // columns are eigenvectors
+}
+
+/// Cyclic Jacobi with threshold sweeps. Panics on non-square input;
+/// symmetry is assumed (the strictly-lower triangle is ignored).
+pub fn eig_sym(a: &Mat) -> SymEig {
+    assert_eq!(a.rows, a.cols, "eig_sym needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    if n == 0 {
+        return SymEig { values: vec![], vectors: v };
+    }
+
+    let off = |m: &Mat| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                s += m[(i, j)] * m[(i, j)];
+            }
+        }
+        s.sqrt()
+    };
+    let scale = m.fro().max(1e-300);
+
+    for _sweep in 0..60 {
+        if off(&m) <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        m[(j, j)].abs().partial_cmp(&m[(i, i)].abs()).unwrap()
+    });
+    let values: Vec<f64> = order.iter().map(|&i| m[(i, i)]).collect();
+    let vectors = Mat::from_fn(n, n, |r, c| v[(r, order[c])]);
+    SymEig { values, vectors }
+}
+
+/// Singular values of a symmetric matrix (|eigenvalues|, descending).
+pub fn sym_singular_values(a: &Mat) -> Vec<f64> {
+    eig_sym(a).values.into_iter().map(f64::abs).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Prng;
+
+    fn random_symmetric(rng: &mut Prng, n: usize) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.normal();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        check("V diag(w) V^T == A", 12, |rng| {
+            let n = 1 + rng.below(12);
+            let a = random_symmetric(rng, n);
+            let SymEig { values, vectors } = eig_sym(&a);
+            let mut d = Mat::zeros(n, n);
+            for (i, &w) in values.iter().enumerate() {
+                d[(i, i)] = w;
+            }
+            let rec = vectors.matmul(&d).matmul(&vectors.transpose());
+            if rec.sub(&a).fro() < 1e-8 * a.fro().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("n={n}, err={}", rec.sub(&a).fro()))
+            }
+        });
+    }
+
+    #[test]
+    fn vectors_orthonormal() {
+        check("V^T V == I", 12, |rng| {
+            let n = 2 + rng.below(10);
+            let a = random_symmetric(rng, n);
+            let v = eig_sym(&a).vectors;
+            let g = v.transpose().matmul(&v);
+            if g.sub(&Mat::eye(n)).fro() < 1e-9 * n as f64 {
+                Ok(())
+            } else {
+                Err("not orthonormal".into())
+            }
+        });
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2, 1], [1, 2]] has eigenvalues 3 and 1
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let w = eig_sym(&a).values;
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_fixed_point() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = -5.0;
+        a[(1, 1)] = 2.0;
+        a[(2, 2)] = 0.1;
+        let w = eig_sym(&a).values;
+        assert!((w[0] + 5.0).abs() < 1e-12); // sorted by |.|
+        assert!((w[1] - 2.0).abs() < 1e-12);
+        assert!((w[2] - 0.1).abs() < 1e-12);
+    }
+}

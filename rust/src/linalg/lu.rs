@@ -1,0 +1,195 @@
+//! LU factorization with partial pivoting: real and complex solves, plus a
+//! complex least-squares helper (normal equations).
+//!
+//! Consumers: Prony's method (linear prediction system + Vandermonde
+//! residue fit, paper §3.2's classical alternative), Padé rational
+//! interpolation (App. B.2), and the truncation-correction inverse
+//! C = C̄ (I - A^L)^{-1} (App. A.4).
+
+use super::mat::Mat;
+use crate::dsp::C64;
+
+/// Solve A x = b for real square A (partial pivoting). Returns None if A is
+/// numerically singular.
+pub fn solve_real(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(a.rows, b.len());
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let (piv, mag) = (col..n)
+            .map(|r| (r, m[(r, col)].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        if mag < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = tmp;
+            }
+            x.swap(col, piv);
+        }
+        for r in col + 1..n {
+            let f = m[(r, col)] / m[(col, col)];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                let v = m[(col, j)] * f;
+                m[(r, j)] -= v;
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        x[col] /= m[(col, col)];
+        for r in 0..col {
+            x[r] -= m[(r, col)] * x[col];
+        }
+    }
+    Some(x)
+}
+
+/// Solve A x = b for complex square A (partial pivoting on |.|).
+pub fn solve_c64(a: &[Vec<C64>], b: &[C64]) -> Option<Vec<C64>> {
+    let n = a.len();
+    assert!(a.iter().all(|r| r.len() == n));
+    assert_eq!(b.len(), n);
+    let mut m: Vec<Vec<C64>> = a.to_vec();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        let (piv, mag) = (col..n)
+            .map(|r| (r, m[r][col].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        if mag < 1e-300 {
+            return None;
+        }
+        m.swap(col, piv);
+        x.swap(col, piv);
+        for r in col + 1..n {
+            let f = m[r][col] / m[col][col];
+            if f.abs() == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                let v = m[col][j] * f;
+                m[r][j] -= v;
+            }
+            let v = x[col] * f;
+            x[r] -= v;
+        }
+    }
+    for col in (0..n).rev() {
+        x[col] = x[col] / m[col][col];
+        for r in 0..col {
+            let v = m[r][col] * x[col];
+            x[r] -= v;
+        }
+    }
+    Some(x)
+}
+
+/// Complex least squares min ||A x - b||_2 for tall A (rows >= cols) via the
+/// normal equations A^H A x = A^H b with Tikhonov jitter for conditioning.
+pub fn lstsq_c64(a: &[Vec<C64>], b: &[C64], ridge: f64) -> Option<Vec<C64>> {
+    let rows = a.len();
+    let cols = if rows == 0 { 0 } else { a[0].len() };
+    assert_eq!(b.len(), rows);
+    let mut ata = vec![vec![C64::ZERO; cols]; cols];
+    let mut atb = vec![C64::ZERO; cols];
+    for r in 0..rows {
+        for i in 0..cols {
+            let ari = a[r][i].conj();
+            atb[i] += ari * b[r];
+            for j in 0..cols {
+                ata[i][j] += ari * a[r][j];
+            }
+        }
+    }
+    let scale: f64 = (0..cols).map(|i| ata[i][i].abs()).fold(0.0, f64::max);
+    for i in 0..cols {
+        ata[i][i] += C64::real(ridge * scale.max(1e-30));
+    }
+    solve_c64(&ata, &atb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn real_solve_roundtrip() {
+        check("A(solve(A,b)) == b", 24, |rng| {
+            let n = 1 + rng.below(8);
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let b = rng.normal_vec(n);
+            let x = match solve_real(&a, &b) {
+                Some(x) => x,
+                None => return Ok(()), // singular draw
+            };
+            let back = a.matvec(&x);
+            for (g, w) in back.iter().zip(&b) {
+                if (g - w).abs() > 1e-6 * (1.0 + w.abs()) {
+                    return Err(format!("n={n}: {g} vs {w}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn singular_matrix_detected() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve_real(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn complex_solve_roundtrip() {
+        check("complex solve", 16, |rng| {
+            let n = 1 + rng.below(6);
+            let a: Vec<Vec<C64>> = (0..n)
+                .map(|_| (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect())
+                .collect();
+            let b: Vec<C64> =
+                (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect();
+            let x = match solve_c64(&a, &b) {
+                Some(x) => x,
+                None => return Ok(()),
+            };
+            for r in 0..n {
+                let mut acc = C64::ZERO;
+                for j in 0..n {
+                    acc += a[r][j] * x[j];
+                }
+                if (acc - b[r]).abs() > 1e-6 * (1.0 + b[r].abs()) {
+                    return Err(format!("row {r}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lstsq_exact_when_consistent() {
+        // overdetermined but consistent system
+        let a = vec![
+            vec![C64::real(1.0), C64::real(0.0)],
+            vec![C64::real(0.0), C64::real(1.0)],
+            vec![C64::real(1.0), C64::real(1.0)],
+        ];
+        let x_true = [C64::real(2.0), C64::new(0.0, -1.0)];
+        let b: Vec<C64> = a
+            .iter()
+            .map(|row| row[0] * x_true[0] + row[1] * x_true[1])
+            .collect();
+        let x = lstsq_c64(&a, &b, 0.0).unwrap();
+        assert!((x[0] - x_true[0]).abs() < 1e-10);
+        assert!((x[1] - x_true[1]).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear-algebra substrate (no external BLAS/LAPACK in the offline
+//! image): LU solves, Jacobi symmetric eigendecomposition, one-sided Jacobi
+//! SVD, and real-Hessenberg QR eigenvalues.
+//!
+//! Sized for the paper's workloads: Hankel matrices up to L x L with
+//! L <= 1024 and state-space systems with d <= 64.
+
+pub mod eig;
+pub mod eig_sym;
+pub mod lu;
+pub mod mat;
+pub mod svd;
+
+pub use mat::Mat;

@@ -1,0 +1,146 @@
+//! Singular values via one-sided Jacobi orthogonalization.
+//!
+//! Cross-checks the symmetric-eigen path on Hankel matrices (tests) and
+//! serves general rectangular inputs (rank estimates in the distillery).
+
+use super::mat::Mat;
+
+/// Singular values of an arbitrary real matrix, descending.
+/// One-sided Jacobi on the (tall) side: rotates column pairs of A until all
+/// are mutually orthogonal; singular values are the column norms.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let work = if a.rows >= a.cols { a.clone() } else { a.transpose() };
+    let (m, n) = (work.rows, work.cols);
+    if n == 0 || m == 0 {
+        return vec![];
+    }
+    // column-major copy for cache-friendly column rotations
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| work[(i, j)]).collect())
+        .collect();
+    let eps = 1e-15;
+    for _sweep in 0..60 {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in p + 1..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let xp = cols[p][i];
+                    let xq = cols[q][i];
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+    let mut sv: Vec<f64> = cols
+        .iter()
+        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Numerical rank: count of singular values above `tol * sigma_max`.
+pub fn rank(a: &Mat, tol: f64) -> usize {
+    let sv = singular_values(a);
+    match sv.first() {
+        None => 0,
+        Some(&s0) if s0 == 0.0 => 0,
+        Some(&s0) => sv.iter().filter(|&&s| s > tol * s0).count(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut a = Mat::zeros(3, 3);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = -1.0;
+        a[(2, 2)] = 0.5;
+        let sv = singular_values(&a);
+        assert!((sv[0] - 3.0).abs() < 1e-10);
+        assert!((sv[1] - 1.0).abs() < 1e-10);
+        assert!((sv[2] - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn frobenius_consistency() {
+        check("sum sigma^2 == ||A||_F^2", 16, |rng| {
+            let m = 1 + rng.below(10);
+            let n = 1 + rng.below(10);
+            let a = Mat::from_fn(m, n, |_, _| rng.normal());
+            let sv = singular_values(&a);
+            let sum_sq: f64 = sv.iter().map(|s| s * s).sum();
+            let fro2 = a.fro() * a.fro();
+            if (sum_sq - fro2).abs() < 1e-8 * fro2.max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("{sum_sq} vs {fro2}"))
+            }
+        });
+    }
+
+    #[test]
+    fn rank_of_outer_product() {
+        check("rank(u v^T) == 1", 12, |rng| {
+            let m = 2 + rng.below(8);
+            let n = 2 + rng.below(8);
+            let u = rng.normal_vec(m);
+            let v = rng.normal_vec(n);
+            let a = Mat::from_fn(m, n, |i, j| u[i] * v[j]);
+            if rank(&a, 1e-9) == 1 {
+                Ok(())
+            } else {
+                Err(format!("rank {}", rank(&a, 1e-9)))
+            }
+        });
+    }
+
+    #[test]
+    fn matches_sym_eig_on_symmetric_input() {
+        check("svd == |eig| for symmetric", 8, |rng| {
+            let n = 2 + rng.below(8);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in i..n {
+                    let x = rng.normal();
+                    a[(i, j)] = x;
+                    a[(j, i)] = x;
+                }
+            }
+            let sv = singular_values(&a);
+            let ev = super::super::eig_sym::sym_singular_values(&a);
+            for (s, e) in sv.iter().zip(&ev) {
+                if (s - e).abs() > 1e-7 * (1.0 + e) {
+                    return Err(format!("{s} vs {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! `repro` — the Laughing Hyena Distillery launcher.
+//!
+//! Subcommands:
+//!   experiment <id>   regenerate a paper table/figure (or `all`)
+//!   train <tag>       drive an AOT train_step artifact
+//!   distill           distill synthetic or checkpoint filters, report errors
+//!   serve             run the serving coordinator demo
+//!   info              environment and artifact inventory
+
+use anyhow::Result;
+use laughing_hyena::cli::Args;
+use laughing_hyena::config::{ModelConfig, RawConfig, ServeConfig};
+use laughing_hyena::coordinator::server::{spawn, SlotEngine};
+use laughing_hyena::data::corpus::Corpus;
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::experiments;
+use laughing_hyena::runtime::artifact::Runtime;
+use laughing_hyena::runtime::trainer::Trainer;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("train") => cmd_train(&args),
+        Some("distill") => cmd_distill(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <experiment|train|distill|serve|info> [args]\n\
+                 \n\
+                 repro experiment <id>           one of {:?} or 'all'\n\
+                 repro train <tag> --steps N     e.g. tag multihyena_small\n\
+                 repro distill --order D         distillery over synthetic suites\n\
+                 repro serve --requests N        coordinator demo (native engine)\n\
+                 repro info",
+                experiments::ALL
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    experiments::run(id, args)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let tag = args.positional.get(1).cloned().unwrap_or("multihyena_small".into());
+    let steps = args.get_usize("steps", 100);
+    let dir = laughing_hyena::experiments::common::require_artifacts()?;
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let mut tr = Trainer::new(&rt, &dir, &tag)?;
+    let mut corpus = Corpus::new(512, 4, args.get_u64("seed", 1234));
+    let mask = vec![1.0f32; tr.batch * tr.seq_len];
+    for i in 0..steps {
+        let (tok, tgt) = corpus.batch(tr.batch, tr.seq_len);
+        let loss = tr.step(&tok, &tgt, &mask)?;
+        if i % 10 == 0 || i + 1 == steps {
+            println!("step {i:>5}  loss {loss:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_distill(args: &Args) -> Result<()> {
+    use laughing_hyena::data::filters::{model_filters, Family};
+    use laughing_hyena::distill::{DistillConfig, Distillery};
+    let order = args.get_usize("order", 16);
+    let iters = args.get_usize("iters", 2000);
+    let distillery = Distillery {
+        order: Some(order),
+        fit: DistillConfig { iters, ..Default::default() },
+        hankel_window: Some(64),
+        ..Default::default()
+    };
+    for fam in [Family::H3Iir, Family::Hyena, Family::MultiHyena] {
+        let filters = model_filters(fam, args.get_usize("filters", 4), 256, 99);
+        let r = distillery.distill_all(&filters);
+        println!(
+            "{:>12}: order {order}, rel err min {:.3e} mean {:.3e} max {:.3e}",
+            fam.label(),
+            r.min_err(),
+            r.mean_err(),
+            r.max_err()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg_file = args.get("config");
+    let raw = match cfg_file {
+        Some(p) => RawConfig::load(p)?,
+        None => RawConfig::parse("")?,
+    };
+    let serve_cfg = ServeConfig::from_raw(&raw);
+    let _model_cfg = ModelConfig::from_raw(&raw);
+    let n_requests = args.get_usize("requests", 16);
+    let slots = args.get_usize("slots", serve_cfg.max_batch);
+    let shape_name = args.get("shape").unwrap_or("nano").to_string();
+    let max_new = args.get_usize("tokens", serve_cfg.max_new_tokens.min(16));
+    println!("coordinator demo: {n_requests} requests over {slots} slots (shape {shape_name})");
+    let handle = spawn(
+        move || {
+            let shape = LmShape::bench(&shape_name).expect("shape");
+            Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
+        },
+        serve_cfg,
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| handle.submit(vec![1 + (i % 32) as i32; 16], max_new))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv()?;
+        println!(
+            "req {:>3}: {} tokens, ttft {:.1}ms, total {:.1}ms",
+            r.id,
+            r.tokens.len(),
+            r.ttft_s * 1e3,
+            r.total_s * 1e3
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", handle.metrics.report());
+    println!(
+        "wall {:.2}s, system throughput {:.1} tok/s",
+        wall,
+        (n_requests * max_new) as f64 / wall
+    );
+    handle.shutdown();
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("laughing-hyena repro — three-layer Rust + JAX + Pallas stack");
+    let dir = laughing_hyena::experiments::common::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    if dir.exists() {
+        let mut n_hlo = 0;
+        let mut n_ck = 0;
+        for e in std::fs::read_dir(&dir)? {
+            let name = e?.file_name().to_string_lossy().to_string();
+            if name.ends_with(".hlo.txt") {
+                n_hlo += 1;
+            }
+            if name.ends_with(".bin") {
+                n_ck += 1;
+            }
+        }
+        println!("  {n_hlo} HLO artifacts, {n_ck} checkpoints");
+    } else {
+        println!("  (missing — run `make artifacts`)");
+    }
+    match Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    Ok(())
+}

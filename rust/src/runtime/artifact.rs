@@ -1,0 +1,223 @@
+//! PJRT artifact executor: HLO text -> compile once -> execute many.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactManifest, Dtype};
+
+/// Host-side tensor value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(vec![x], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Value::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Value {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Value::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Value::F32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+            Value::I32(d, _) => xla::Literal::vec1(d).reshape(&dims)?,
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: Dtype, shape: &[usize]) -> Result<Value> {
+        Ok(match dtype {
+            Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, shape.to_vec()),
+            Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, shape.to_vec()),
+        })
+    }
+}
+
+/// Shared PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<dir>/<name>.hlo.txt` (+ manifest).
+    pub fn load(&self, dir: &Path, name: &str) -> Result<Artifact> {
+        let hlo = dir.join(format!("{name}.hlo.txt"));
+        let man = dir.join(format!("{name}.manifest.txt"));
+        let manifest = ArtifactManifest::load(&man)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Artifact { exe, manifest, name: name.to_string() })
+    }
+}
+
+/// One compiled executable + its IO manifest.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: ArtifactManifest,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Execute with host values; validates against the manifest and returns
+    /// host values in manifest output order.
+    pub fn execute(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest wants {}",
+                self.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        for (v, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            if v.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input {} ({}) shape {:?} != manifest {:?}",
+                    self.name,
+                    spec.index,
+                    spec.path,
+                    v.shape(),
+                    spec.shape
+                );
+            }
+            let ok = matches!(
+                (v, spec.dtype),
+                (Value::F32(..), Dtype::F32) | (Value::I32(..), Dtype::I32)
+            );
+            if !ok {
+                bail!("{}: input {} dtype mismatch", self.name, spec.index);
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest wants {}",
+                self.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.manifest.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec.dtype, &spec.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn distill_step_artifact_round_trips_and_reduces_loss() {
+        // The full L3->PJRT->L2->L1 stack on the tiny distill artifact.
+        let dir = artifacts_dir();
+        if !dir.join("distill_step_c8_d8_l64.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().expect("pjrt cpu client");
+        let art = rt.load(&dir, "distill_step_c8_d8_l64").expect("load artifact");
+        let (c, d, l) = (8usize, 8usize, 64usize);
+        // params: decay, theta, r_re, r_im [C, d] (manifest order 0.decay..)
+        let mut rng = crate::util::Prng::new(5);
+        let decay: Vec<f32> = (0..c * d).map(|i| 0.6 + 0.3 * ((i % d) as f32 / d as f32)).collect();
+        let theta: Vec<f32> =
+            (0..c * d).map(|i| std::f32::consts::PI * (i % d) as f32 / d as f32).collect();
+        let r_re: Vec<f32> = (0..c * d).map(|_| 0.01 * rng.normal() as f32).collect();
+        let r_im = vec![0.0f32; c * d];
+        let zeros = vec![0.0f32; c * d];
+        // target: decaying cosine filters
+        let target: Vec<f32> = (0..c * l)
+            .map(|i| {
+                let (ch, t) = (i / l, (i % l) as f32);
+                ((-0.05 * t).exp() * (0.2 * (ch as f32 + 1.0) * t).cos()) as f32
+            })
+            .collect();
+        let cd = [c, d];
+        let mk = |v: &Vec<f32>| Value::f32(v.clone(), &cd);
+        let mut p = [mk(&decay), mk(&theta), mk(&r_re), mk(&r_im)];
+        let mut m: Vec<Value> = (0..4).map(|_| mk(&zeros)).collect();
+        let mut v: Vec<Value> = (0..4).map(|_| mk(&zeros)).collect();
+        let tgt = Value::f32(target, &[c, l]);
+        let mut first_loss = None;
+        let mut last_loss = 0.0f32;
+        for it in 0..150 {
+            let mut inputs: Vec<Value> = vec![];
+            inputs.extend_from_slice(&p);
+            inputs.extend(m.iter().cloned());
+            inputs.extend(v.iter().cloned());
+            inputs.push(Value::scalar_f32(it as f32));
+            inputs.push(tgt.clone());
+            let out = art.execute(&inputs).expect("execute");
+            assert_eq!(out.len(), 13); // 4 params + 4 m + 4 v + loss
+            for i in 0..4 {
+                p[i] = out[i].clone();
+                m[i] = out[4 + i].clone();
+                v[i] = out[8 + i].clone();
+            }
+            last_loss = out[12].as_f32().unwrap()[0];
+            if first_loss.is_none() {
+                first_loss = Some(last_loss);
+            }
+        }
+        let first = first_loss.unwrap();
+        assert!(last_loss.is_finite());
+        assert!(
+            last_loss < 0.5 * first,
+            "distill loss should drop: {first} -> {last_loss}"
+        );
+    }
+}

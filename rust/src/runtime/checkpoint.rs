@@ -1,0 +1,141 @@
+//! Checkpoint IO: raw little-endian f32 blobs + manifests, owned by the
+//! Rust launcher after aot.py writes the initial ones.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::manifest::{parse_checkpoint_manifest, CheckpointLeaf};
+
+/// A named, shaped f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros_like(&self) -> Tensor {
+        Tensor {
+            path: self.path.clone(),
+            shape: self.shape.clone(),
+            data: vec![0.0; self.data.len()],
+        }
+    }
+}
+
+/// An ordered set of tensors (flatten order = manifest order = PJRT order).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    /// Load `<base>.bin` + `<base>.manifest.txt`.
+    pub fn load(base: &Path) -> Result<Checkpoint> {
+        let mpath = base.with_extension("manifest.txt");
+        let bpath = base.with_extension("bin");
+        let leaves = parse_checkpoint_manifest(
+            &std::fs::read_to_string(&mpath)
+                .with_context(|| format!("reading {}", mpath.display()))?,
+        )?;
+        let blob = std::fs::read(&bpath)
+            .with_context(|| format!("reading {}", bpath.display()))?;
+        let mut tensors = Vec::with_capacity(leaves.len());
+        for CheckpointLeaf { path, shape, offset, nbytes } in leaves {
+            if offset + nbytes > blob.len() {
+                bail!("leaf {path} out of range");
+            }
+            if nbytes % 4 != 0 {
+                bail!("leaf {path} not f32-aligned");
+            }
+            let mut data = vec![0f32; nbytes / 4];
+            for (i, chunk) in blob[offset..offset + nbytes].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            let elems: usize = shape.iter().product::<usize>().max(1);
+            if elems != data.len() {
+                bail!("leaf {path}: shape/size mismatch");
+            }
+            tensors.push(Tensor { path, shape, data });
+        }
+        Ok(Checkpoint { tensors })
+    }
+
+    /// Save back as `<base>.bin` + `<base>.manifest.txt`.
+    pub fn save(&self, base: &Path) -> Result<()> {
+        let mut blob: Vec<u8> = vec![];
+        let mut lines =
+            vec!["# checkpoint manifest: leaf path, dtype, shape, byte offset, bytes".to_string()];
+        for t in &self.tensors {
+            let off = blob.len();
+            for v in &t.data {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+            let shape = if t.shape.is_empty() {
+                "scalar".to_string()
+            } else {
+                t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+            };
+            lines.push(format!("leaf {} f32 {} {} {}", t.path, shape, off, t.data.len() * 4));
+        }
+        std::fs::write(base.with_extension("bin"), &blob)?;
+        std::fs::write(base.with_extension("manifest.txt"), lines.join("\n") + "\n")?;
+        Ok(())
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.path == path)
+    }
+
+    pub fn get_mut(&mut self, path: &str) -> Option<&mut Tensor> {
+        self.tensors.iter_mut().find(|t| t.path == path)
+    }
+
+    /// Tensors whose path matches a prefix (e.g. one layer).
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&Tensor> {
+        self.tensors.iter().filter(|t| t.path.starts_with(prefix)).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ck = Checkpoint {
+            tensors: vec![
+                Tensor { path: "a.b".into(), shape: vec![2, 3], data: vec![1.0; 6] },
+                Tensor { path: "c".into(), shape: vec![], data: vec![-2.5] },
+            ],
+        };
+        let dir = std::env::temp_dir().join("lh_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("ck");
+        ck.save(&base).unwrap();
+        let back = Checkpoint::load(&base).unwrap();
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.get("a.b").unwrap().data, vec![1.0; 6]);
+        assert_eq!(back.get("c").unwrap().data, vec![-2.5]);
+        assert_eq!(back.total_params(), 7);
+    }
+
+    #[test]
+    fn loads_real_aot_checkpoint_when_present() {
+        let base = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/params_multihyena_tiny");
+        if !base.with_extension("bin").exists() {
+            return;
+        }
+        let ck = Checkpoint::load(&base).unwrap();
+        assert!(ck.total_params() > 1000);
+        assert!(ck.get("embed").is_some());
+        // layers flattened with dotted paths
+        assert!(ck.tensors.iter().any(|t| t.path.contains("layers.0")));
+    }
+}

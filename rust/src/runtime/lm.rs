@@ -1,0 +1,361 @@
+//! Served model: the prefill + decode AOT artifacts, the trained weights,
+//! and the distilled modal parameters — everything the coordinator needs to
+//! generate tokens with Python fully out of the loop.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::artifact::{Artifact, Runtime, Value};
+use super::checkpoint::Checkpoint;
+use crate::ssm::ModalSsm;
+
+/// Shapes recovered from the decode manifest.
+#[derive(Clone, Debug)]
+pub struct ServedShape {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_state: usize,
+    pub sc_width: usize, // 3*D
+    pub sc_tail: usize,  // short_kw - 1
+}
+
+pub struct ServedModel {
+    prefill: Artifact,
+    decode: Artifact,
+    params: Vec<Value>,
+    /// Modal leaves in manifest (sorted-key) order:
+    /// h0, lam_im, lam_re, r_im, r_re.
+    modal: Vec<Value>,
+    pub shape: ServedShape,
+    // live generation state (host-resident between steps)
+    x_re: Vec<f32>,
+    x_im: Vec<f32>,
+    sc: Vec<f32>,
+    pub last_tokens: Vec<i32>,
+}
+
+impl ServedModel {
+    /// Load `prefill_<tag>` + `decode_<tag>` + `params_<tag>`.
+    pub fn new(rt: &Runtime, dir: &Path, tag: &str) -> Result<ServedModel> {
+        let prefill = rt.load(dir, &format!("prefill_{tag}"))?;
+        let decode = rt.load(dir, &format!("decode_{tag}"))?;
+        let ck = Checkpoint::load(&dir.join(format!("params_{tag}")))?;
+        let params: Vec<Value> = ck
+            .tensors
+            .iter()
+            .map(|t| Value::f32(t.data.clone(), &t.shape))
+            .collect();
+        // recover shapes from the decode manifest
+        let n_p = decode
+            .manifest
+            .inputs
+            .iter()
+            .filter(|s| s.path.starts_with("0."))
+            .count();
+        let n_modal = decode
+            .manifest
+            .inputs
+            .iter()
+            .filter(|s| s.path.starts_with("1."))
+            .count();
+        if n_modal != 5 {
+            bail!("expected 5 modal leaves, found {n_modal}");
+        }
+        let tok = &decode.manifest.inputs[n_p + n_modal];
+        let xre = &decode.manifest.inputs[n_p + n_modal + 1];
+        let scb = &decode.manifest.inputs[n_p + n_modal + 3];
+        let lam_spec = decode
+            .manifest
+            .inputs
+            .iter()
+            .find(|s| s.path == "1.lam_re")
+            .expect("modal lam_re leaf");
+        let logits_spec = &decode.manifest.outputs[0];
+        let ptok = prefill
+            .manifest
+            .inputs
+            .iter()
+            .find(|s| s.path == "2")
+            .expect("prefill tokens");
+        let shape = ServedShape {
+            batch: tok.shape[0],
+            seq_len: ptok.shape[1],
+            vocab: logits_spec.shape[1],
+            n_layer: xre.shape[1],
+            d_model: xre.shape[2],
+            heads: lam_spec.shape[1],
+            d_state: xre.shape[3],
+            sc_width: scb.shape[2],
+            sc_tail: scb.shape[3],
+        };
+        let b = shape.batch;
+        let state_len = b * shape.n_layer * shape.d_model * shape.d_state;
+        let sc_len = b * shape.n_layer * shape.sc_width * shape.sc_tail;
+        let modal = default_modal(&shape);
+        Ok(ServedModel {
+            prefill,
+            decode,
+            params,
+            modal,
+            x_re: vec![0.0; state_len],
+            x_im: vec![0.0; state_len],
+            sc: vec![0.0; sc_len],
+            last_tokens: vec![0; b],
+            shape,
+        })
+    }
+
+    /// Install distilled filters: `systems[layer][head]`.
+    pub fn set_modal(&mut self, systems: &[Vec<ModalSsm>]) -> Result<()> {
+        let s = &self.shape;
+        if systems.len() != s.n_layer || systems.iter().any(|l| l.len() != s.heads) {
+            bail!("expected {}x{} modal systems", s.n_layer, s.heads);
+        }
+        let n = s.n_layer * s.heads * s.d_state;
+        let mut lam_re = vec![0f32; n];
+        let mut lam_im = vec![0f32; n];
+        let mut r_re = vec![0f32; n];
+        let mut r_im = vec![0f32; n];
+        let mut h0 = vec![0f32; s.n_layer * s.heads];
+        for (li, layer) in systems.iter().enumerate() {
+            for (hi, sys) in layer.iter().enumerate() {
+                if sys.order() != s.d_state {
+                    bail!("system order {} != artifact d_state {}", sys.order(), s.d_state);
+                }
+                let base = (li * s.heads + hi) * s.d_state;
+                for (k, (p, r)) in sys.poles.iter().zip(&sys.residues).enumerate() {
+                    lam_re[base + k] = p.re as f32;
+                    lam_im[base + k] = p.im as f32;
+                    r_re[base + k] = r.re as f32;
+                    r_im[base + k] = r.im as f32;
+                }
+                h0[li * s.heads + hi] = sys.h0 as f32;
+            }
+        }
+        let lmd = [s.n_layer, s.heads, s.d_state];
+        let lm2 = [s.n_layer, s.heads];
+        self.modal = vec![
+            Value::f32(h0, &lm2),
+            Value::f32(lam_im, &lmd),
+            Value::f32(lam_re, &lmd),
+            Value::f32(r_im, &lmd),
+            Value::f32(r_re, &lmd),
+        ];
+        Ok(())
+    }
+
+    /// Prefill the whole batch; prompts are right-padded internally.
+    /// Returns the first greedy token per row.
+    pub fn prefill_batch(&mut self, prompts: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let s = self.shape.clone();
+        if prompts.len() != s.batch {
+            bail!("expected {} prompts", s.batch);
+        }
+        let mut tokens = vec![0i32; s.batch * s.seq_len];
+        let mut lengths = vec![0i32; s.batch];
+        for (b, p) in prompts.iter().enumerate() {
+            if p.is_empty() || p.len() > s.seq_len {
+                bail!("prompt length {} out of range 1..{}", p.len(), s.seq_len);
+            }
+            tokens[b * s.seq_len..b * s.seq_len + p.len()].copy_from_slice(p);
+            lengths[b] = p.len() as i32;
+        }
+        let mut inputs: Vec<Value> = self.params.clone();
+        inputs.extend(self.modal.iter().cloned());
+        inputs.push(Value::i32(tokens, &[s.batch, s.seq_len]));
+        inputs.push(Value::i32(lengths, &[s.batch]));
+        let out = self.prefill.execute(&inputs)?;
+        let logits = out[0].as_f32()?;
+        self.x_re = out[1].as_f32()?.to_vec();
+        self.x_im = out[2].as_f32()?.to_vec();
+        self.sc = out[3].as_f32()?.to_vec();
+        let next: Vec<i32> = (0..s.batch)
+            .map(|b| argmax_f32(&logits[b * s.vocab..(b + 1) * s.vocab]) as i32)
+            .collect();
+        self.last_tokens = next.clone();
+        Ok(next)
+    }
+
+    /// Replace the model weights (e.g. with a trained checkpoint).
+    pub fn set_params(&mut self, params: Vec<Value>) {
+        assert_eq!(params.len(), self.params.len(), "leaf count mismatch");
+        self.params = params;
+    }
+
+    /// One decode step returning the raw logits [B*V] (teacher-forcing
+    /// callers overwrite `last_tokens` before each call); also advances
+    /// `last_tokens` greedily for plain generation.
+    pub fn decode_step_logits(&mut self) -> Result<Vec<f32>> {
+        let s = self.shape.clone();
+        let state_shape = [s.batch, s.n_layer, s.d_model, s.d_state];
+        let sc_shape = [s.batch, s.n_layer, s.sc_width, s.sc_tail];
+        let mut inputs: Vec<Value> = self.params.clone();
+        inputs.extend(self.modal.iter().cloned());
+        inputs.push(Value::i32(self.last_tokens.clone(), &[s.batch]));
+        inputs.push(Value::f32(self.x_re.clone(), &state_shape));
+        inputs.push(Value::f32(self.x_im.clone(), &state_shape));
+        inputs.push(Value::f32(self.sc.clone(), &sc_shape));
+        let out = self.decode.execute(&inputs)?;
+        let logits = out[0].as_f32()?.to_vec();
+        self.x_re = out[1].as_f32()?.to_vec();
+        self.x_im = out[2].as_f32()?.to_vec();
+        self.sc = out[3].as_f32()?.to_vec();
+        for b in 0..s.batch {
+            self.last_tokens[b] =
+                argmax_f32(&logits[b * s.vocab..(b + 1) * s.vocab]) as i32;
+        }
+        Ok(logits)
+    }
+
+    /// One decode step for the whole batch (greedy feedback).
+    pub fn decode_step(&mut self) -> Result<Vec<i32>> {
+        let s = self.shape.clone();
+        let state_shape = [s.batch, s.n_layer, s.d_model, s.d_state];
+        let sc_shape = [s.batch, s.n_layer, s.sc_width, s.sc_tail];
+        let mut inputs: Vec<Value> = self.params.clone();
+        inputs.extend(self.modal.iter().cloned());
+        inputs.push(Value::i32(self.last_tokens.clone(), &[s.batch]));
+        inputs.push(Value::f32(self.x_re.clone(), &state_shape));
+        inputs.push(Value::f32(self.x_im.clone(), &state_shape));
+        inputs.push(Value::f32(self.sc.clone(), &sc_shape));
+        let out = self.decode.execute(&inputs)?;
+        let logits = out[0].as_f32()?;
+        self.x_re = out[1].as_f32()?.to_vec();
+        self.x_im = out[2].as_f32()?.to_vec();
+        self.sc = out[3].as_f32()?.to_vec();
+        let next: Vec<i32> = (0..s.batch)
+            .map(|b| argmax_f32(&logits[b * s.vocab..(b + 1) * s.vocab]) as i32)
+            .collect();
+        self.last_tokens = next.clone();
+        Ok(next)
+    }
+
+    /// Merge prefilled state rows from another prefill result into chosen
+    /// slots — the continuous-batching primitive (batch rows are
+    /// independent in every op of the graph).
+    pub fn adopt_rows(&mut self, other: &ServedModel, rows: &[(usize, usize)]) {
+        let s = &self.shape;
+        let state_row = s.n_layer * s.d_model * s.d_state;
+        let sc_row = s.n_layer * s.sc_width * s.sc_tail;
+        for &(src, dst) in rows {
+            self.x_re[dst * state_row..(dst + 1) * state_row]
+                .copy_from_slice(&other.x_re[src * state_row..(src + 1) * state_row]);
+            self.x_im[dst * state_row..(dst + 1) * state_row]
+                .copy_from_slice(&other.x_im[src * state_row..(src + 1) * state_row]);
+            self.sc[dst * sc_row..(dst + 1) * sc_row]
+                .copy_from_slice(&other.sc[src * sc_row..(src + 1) * sc_row]);
+            self.last_tokens[dst] = other.last_tokens[src];
+        }
+    }
+
+    /// Snapshot one slot's generation state (continuous batching: busy rows
+    /// survive whole-batch prefills of other slots).
+    pub fn save_row(&self, row: usize) -> RowState {
+        let s = &self.shape;
+        let state_row = s.n_layer * s.d_model * s.d_state;
+        let sc_row = s.n_layer * s.sc_width * s.sc_tail;
+        RowState {
+            x_re: self.x_re[row * state_row..(row + 1) * state_row].to_vec(),
+            x_im: self.x_im[row * state_row..(row + 1) * state_row].to_vec(),
+            sc: self.sc[row * sc_row..(row + 1) * sc_row].to_vec(),
+            last: self.last_tokens[row],
+        }
+    }
+
+    /// Restore a snapshot into a slot.
+    pub fn restore_row(&mut self, row: usize, saved: &RowState) {
+        let s = &self.shape;
+        let state_row = s.n_layer * s.d_model * s.d_state;
+        let sc_row = s.n_layer * s.sc_width * s.sc_tail;
+        self.x_re[row * state_row..(row + 1) * state_row].copy_from_slice(&saved.x_re);
+        self.x_im[row * state_row..(row + 1) * state_row].copy_from_slice(&saved.x_im);
+        self.sc[row * sc_row..(row + 1) * sc_row].copy_from_slice(&saved.sc);
+        self.last_tokens[row] = saved.last;
+    }
+
+    /// Zero the generation state of one slot.
+    pub fn clear_row(&mut self, row: usize) {
+        let s = &self.shape;
+        let state_row = s.n_layer * s.d_model * s.d_state;
+        let sc_row = s.n_layer * s.sc_width * s.sc_tail;
+        self.x_re[row * state_row..(row + 1) * state_row].fill(0.0);
+        self.x_im[row * state_row..(row + 1) * state_row].fill(0.0);
+        self.sc[row * sc_row..(row + 1) * sc_row].fill(0.0);
+        self.last_tokens[row] = 0;
+    }
+
+    /// Per-sequence recurrent state bytes (the O(d) memory of Lemma 2.2).
+    pub fn state_bytes_per_seq(&self) -> u64 {
+        let s = &self.shape;
+        ((2 * s.n_layer * s.d_model * s.d_state + s.n_layer * s.sc_width * s.sc_tail) * 4)
+            as u64
+    }
+}
+
+/// Saved per-slot generation state.
+#[derive(Clone, Debug)]
+pub struct RowState {
+    x_re: Vec<f32>,
+    x_im: Vec<f32>,
+    sc: Vec<f32>,
+    last: i32,
+}
+
+fn default_modal(s: &ServedShape) -> Vec<Value> {
+    let lmd = [s.n_layer, s.heads, s.d_state];
+    let lm2 = [s.n_layer, s.heads];
+    let n = s.n_layer * s.heads * s.d_state;
+    vec![
+        Value::f32(vec![1.0; s.n_layer * s.heads], &lm2), // h0 = identity tap
+        Value::f32(vec![0.0; n], &lmd),
+        Value::f32(vec![0.0; n], &lmd),
+        Value::f32(vec![0.0; n], &lmd),
+        Value::f32(vec![0.0; n], &lmd),
+    ]
+}
+
+fn argmax_f32(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::MIN;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn served_model_generates_with_tiny_artifacts() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("decode_multihyena_tiny.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut lm = ServedModel::new(&rt, &dir, "multihyena_tiny").unwrap();
+        assert_eq!(lm.shape.batch, 4);
+        assert_eq!(lm.shape.d_state, 8);
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|b| vec![1 + b as i32, 2, 3, 4, 5]).collect();
+        let first = lm.prefill_batch(&prompts).unwrap();
+        assert!(first.iter().all(|&t| (t as usize) < lm.shape.vocab));
+        for _ in 0..3 {
+            let toks = lm.decode_step().unwrap();
+            assert!(toks.iter().all(|&t| (t as usize) < lm.shape.vocab));
+        }
+        // row ops
+        lm.clear_row(1);
+        let snapshot = lm.last_tokens.clone();
+        assert_eq!(snapshot[1], 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Artifact + checkpoint manifests — the text files aot.py emits alongside
+//! every HLO artifact, describing the flattened PJRT argument order.
+
+use anyhow::{bail, Context, Result};
+
+/// Dtype tags used by aot.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype tag {other}"),
+        }
+    }
+}
+
+/// One flattened tensor slot (input or output).
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub index: usize,
+    /// Dotted tree path, e.g. "0.layers.1.w_qkv".
+    pub path: String,
+    pub dtype: Dtype,
+    /// Empty shape = scalar.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Parsed `<name>.manifest.txt` for an AOT artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|d| d.parse::<usize>().context("bad shape dim"))
+        .collect()
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        let mut m = ArtifactManifest::default();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("bad manifest line: {line}");
+            }
+            let spec = TensorSpec {
+                index: parts[1].parse()?,
+                path: parts[2].to_string(),
+                dtype: Dtype::parse(parts[3])?,
+                shape: parse_shape(parts[4])?,
+            };
+            match parts[0] {
+                "in" => m.inputs.push(spec),
+                "out" => m.outputs.push(spec),
+                other => bail!("bad manifest tag {other}"),
+            }
+        }
+        // slots must arrive in index order (aot.py writes them that way)
+        for (i, s) in m.inputs.iter().enumerate() {
+            if s.index != i {
+                bail!("input order broken at {i}");
+            }
+        }
+        for (i, s) in m.outputs.iter().enumerate() {
+            if s.index != i {
+                bail!("output order broken at {i}");
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Index of the first input whose path starts with the prefix.
+    pub fn input_index(&self, prefix: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.path.starts_with(prefix))
+    }
+
+    /// Index of the first output whose path starts with the prefix.
+    pub fn output_index(&self, prefix: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.path.starts_with(prefix))
+    }
+}
+
+/// One leaf of a checkpoint manifest (`params_*.manifest.txt`).
+#[derive(Clone, Debug)]
+pub struct CheckpointLeaf {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Parse a checkpoint manifest.
+pub fn parse_checkpoint_manifest(text: &str) -> Result<Vec<CheckpointLeaf>> {
+    let mut out = vec![];
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 6 || parts[0] != "leaf" || parts[2] != "f32" {
+            bail!("bad checkpoint line: {line}");
+        }
+        out.push(CheckpointLeaf {
+            path: parts[1].to_string(),
+            shape: parse_shape(parts[3])?,
+            offset: parts[4].parse()?,
+            nbytes: parts[5].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# artifact manifest\n\
+        # kind=multihyena\n\
+        in 0 0.embed f32 64,32\n\
+        in 1 1 i32 4,16\n\
+        in 2 2 f32 scalar\n\
+        out 0 0 f32 4,16,64\n";
+
+    #[test]
+    fn parses_artifact_manifest() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.inputs[0].shape, vec![64, 32]);
+        assert_eq!(m.inputs[1].dtype, Dtype::I32);
+        assert_eq!(m.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(m.inputs[2].elements(), 1);
+        assert_eq!(m.input_index("1"), Some(1));
+    }
+
+    #[test]
+    fn rejects_out_of_order() {
+        let bad = "in 1 x f32 2\nin 0 y f32 2\n";
+        assert!(ArtifactManifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn parses_checkpoint_manifest() {
+        let text = "# ck\nleaf embed f32 4,8 0 128\nleaf ln_g f32 8 128 32\n";
+        let leaves = parse_checkpoint_manifest(text).unwrap();
+        assert_eq!(leaves.len(), 2);
+        assert_eq!(leaves[1].offset, 128);
+        assert_eq!(leaves[0].shape, vec![4, 8]);
+    }
+
+    #[test]
+    fn real_artifact_manifests_parse() {
+        // integration against the actual aot.py output when present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.exists() {
+            return;
+        }
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            let name = p.file_name().unwrap().to_string_lossy().to_string();
+            if name.ends_with(".manifest.txt") && !name.starts_with("params_") {
+                ArtifactManifest::load(&p).unwrap_or_else(|e| panic!("{name}: {e}"));
+            }
+        }
+    }
+}

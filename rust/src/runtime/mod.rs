@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest), own checkpoints,
+//! and execute the L2 graphs from the Rust hot path.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 emits HloModuleProtos with 64-bit
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod lm;
+pub mod manifest;
+pub mod trainer;
+
+pub use artifact::Artifact;
+pub use checkpoint::Checkpoint;
+pub use manifest::{ArtifactManifest, TensorSpec};

@@ -1,0 +1,157 @@
+//! Training driver: owns params + Adam state as host values and steps the
+//! AOT `train_step_*` artifact.  This is the L3 side of the Table 5.1 /
+//! Table E.1 pre-training runs — Python only built the graph.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use super::artifact::{Artifact, Runtime, Value};
+use super::checkpoint::Checkpoint;
+
+pub struct Trainer {
+    train: Artifact,
+    eval: Option<Artifact>,
+    /// Flattened parameter leaves (manifest order).
+    pub params: Vec<Value>,
+    m: Vec<Value>,
+    v: Vec<Value>,
+    step: f32,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+impl Trainer {
+    /// Load `train_step_<tag>` (+ optional `eval_loss_<tag>`) and the
+    /// initial checkpoint `params_<tag>`.
+    pub fn new(rt: &Runtime, dir: &Path, tag: &str) -> Result<Trainer> {
+        let train = rt.load(dir, &format!("train_step_{tag}"))?;
+        let eval = rt.load(dir, &format!("eval_loss_{tag}")).ok();
+        let ck = Checkpoint::load(&dir.join(format!("params_{tag}")))?;
+        // manifest inputs: params (0.*), m (1.*), v (2.*), step, tokens,
+        // targets, mask
+        let n_leaves = train
+            .manifest
+            .inputs
+            .iter()
+            .filter(|s| s.path.starts_with("0."))
+            .count();
+        if n_leaves != ck.tensors.len() {
+            bail!(
+                "checkpoint has {} leaves, manifest wants {n_leaves}",
+                ck.tensors.len()
+            );
+        }
+        let params: Vec<Value> = ck
+            .tensors
+            .iter()
+            .map(|t| Value::f32(t.data.clone(), &t.shape))
+            .collect();
+        let zeros: Vec<Value> = ck
+            .tensors
+            .iter()
+            .map(|t| Value::f32(vec![0.0; t.data.len()], &t.shape))
+            .collect();
+        let tok_spec = &train.manifest.inputs[3 * n_leaves + 1];
+        let (batch, seq_len) = (tok_spec.shape[0], tok_spec.shape[1]);
+        Ok(Trainer {
+            train,
+            eval,
+            params,
+            m: zeros.clone(),
+            v: zeros,
+            step: 0.0,
+            batch,
+            seq_len,
+        })
+    }
+
+    /// One optimizer step; returns the training loss.
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32], mask: &[f32]) -> Result<f32> {
+        let bt = [self.batch, self.seq_len];
+        let mut inputs: Vec<Value> = Vec::with_capacity(3 * self.params.len() + 4);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(Value::scalar_f32(self.step));
+        inputs.push(Value::i32(tokens.to_vec(), &bt));
+        inputs.push(Value::i32(targets.to_vec(), &bt));
+        inputs.push(Value::f32(mask.to_vec(), &bt));
+        let out = self.train.execute(&inputs)?;
+        let n = self.params.len();
+        for i in 0..n {
+            self.params[i] = out[i].clone();
+            self.m[i] = out[n + i].clone();
+            self.v[i] = out[2 * n + i].clone();
+        }
+        self.step += 1.0;
+        Ok(out[3 * n].as_f32()?[0])
+    }
+
+    /// Held-out loss via the eval artifact.
+    pub fn eval(&self, tokens: &[i32], targets: &[i32], mask: &[f32]) -> Result<f32> {
+        let eval = match &self.eval {
+            Some(e) => e,
+            None => bail!("no eval artifact loaded"),
+        };
+        let bt = [self.batch, self.seq_len];
+        let mut inputs: Vec<Value> = Vec::with_capacity(self.params.len() + 3);
+        inputs.extend(self.params.iter().cloned());
+        inputs.push(Value::i32(tokens.to_vec(), &bt));
+        inputs.push(Value::i32(targets.to_vec(), &bt));
+        inputs.push(Value::f32(mask.to_vec(), &bt));
+        let out = eval.execute(&inputs)?;
+        Ok(out[0].as_f32()?[0])
+    }
+
+    /// Export the current params as a checkpoint.
+    pub fn checkpoint(&self, reference: &Checkpoint) -> Checkpoint {
+        let mut ck = reference.clone();
+        for (t, v) in ck.tensors.iter_mut().zip(&self.params) {
+            if let Value::F32(d, _) = v {
+                t.data = d.clone();
+            }
+        }
+        ck
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Corpus;
+
+    #[test]
+    fn tiny_train_step_reduces_loss() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("train_step_multihyena_tiny.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let mut tr = Trainer::new(&rt, &dir, "multihyena_tiny").unwrap();
+        assert_eq!(tr.batch, 4);
+        assert_eq!(tr.seq_len, 64);
+        let mut corpus = Corpus::new(64, 4, 1);
+        let mask = vec![1.0f32; tr.batch * tr.seq_len];
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for i in 0..30 {
+            let (tok, tgt) = corpus.batch(tr.batch, tr.seq_len);
+            let loss = tr.step(&tok, &tgt, &mask).unwrap();
+            if i == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first, "loss should fall: {first} -> {last}");
+        // eval path works too
+        let (tok, tgt) = corpus.batch(tr.batch, tr.seq_len);
+        let ev = tr.eval(&tok, &tgt, &mask).unwrap();
+        assert!(ev.is_finite());
+    }
+}

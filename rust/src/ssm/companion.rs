@@ -1,0 +1,233 @@
+//! Companion canonical form (paper App. A.5) with the O(d) fast recurrence
+//! of Lemma A.7: the state matrix is a lower shift plus a rank-one term, so
+//! a step is one shift and two inner products — no matrix ever materialized.
+
+use crate::dsp::C64;
+use crate::linalg::Mat;
+
+/// Companion-form SSM: x' = (L - e1 ⊗ alpha) x + e1 u, y = beta^T x + b0 u.
+#[derive(Clone, Debug)]
+pub struct CompanionSsm {
+    /// Denominator coefficients [a1 .. ad].
+    pub alpha: Vec<f64>,
+    /// Output coefficients [beta1 .. betad] (already h0-corrected).
+    pub beta: Vec<f64>,
+    /// Passthrough b0 = h0.
+    pub b0: f64,
+}
+
+/// Ring-buffer state for the companion recurrence (the shift is O(1) by
+/// moving the head pointer instead of memmoving d elements).
+#[derive(Clone, Debug)]
+pub struct CompanionState {
+    buf: Vec<f64>,
+    head: usize, // index of x^1 (most recent)
+}
+
+impl CompanionState {
+    /// Canonical-order view (x^1 .. x^d) of the ring buffer.
+    pub fn snapshot(&self, d: usize) -> Vec<f64> {
+        (0..d).map(|k| self.buf[(self.head + k) % d.max(1)]).collect()
+    }
+}
+
+impl CompanionSsm {
+    pub fn new(alpha: Vec<f64>, beta: Vec<f64>, b0: f64) -> Self {
+        assert_eq!(alpha.len(), beta.len());
+        CompanionSsm { alpha, beta, b0 }
+    }
+
+    pub fn order(&self) -> usize {
+        self.alpha.len()
+    }
+
+    pub fn zero_state(&self) -> CompanionState {
+        CompanionState { buf: vec![0.0; self.order().max(1)], head: 0 }
+    }
+
+    /// One recurrent step (Listing 2): y = <beta, x> + b0 u;
+    /// x1' = u - <alpha, x>; shift.  O(d).
+    pub fn step(&self, st: &mut CompanionState, u: f64) -> f64 {
+        let d = self.order();
+        if d == 0 {
+            return self.b0 * u;
+        }
+        let mut y = self.b0 * u;
+        let mut lr = u;
+        // x^k = buf[(head + k - 1) % d]
+        for k in 0..d {
+            let x = st.buf[(st.head + k) % d];
+            y += self.beta[k] * x;
+            lr -= self.alpha[k] * x;
+        }
+        // shift: new head holds x1' = lr
+        st.head = (st.head + d - 1) % d;
+        st.buf[st.head] = lr;
+        y
+    }
+
+    pub fn filter(&self, u: &[f64]) -> Vec<f64> {
+        let mut st = self.zero_state();
+        u.iter().map(|&x| self.step(&mut st, x)).collect()
+    }
+
+    /// Impulse response taps [h_1 .. h_len] (h_0 = b0 excluded).
+    pub fn impulse_response(&self, len: usize) -> Vec<f64> {
+        let mut u = vec![0.0; len + 1];
+        u[0] = 1.0;
+        self.filter(&u)[1..].to_vec()
+    }
+
+    /// Prop. 3.2 FFT prefill: the companion state after a length-T prompt is
+    /// x_T = (v_{T-1}, ..., v_{T-d}) where v = g * u and G = 1/den.
+    /// Computed here exactly in O(dT) via the v-recurrence; callers that
+    /// want the Õ(T) variant convolve with
+    /// [`super::transfer::TransferFunction::prefill_filter`] via FFT.
+    pub fn prefill_direct(&self, u: &[f64]) -> CompanionState {
+        let d = self.order();
+        let t = u.len();
+        let mut v = vec![0.0; t];
+        for i in 0..t {
+            let mut acc = u[i];
+            for j in 1..=d.min(i) {
+                acc -= self.alpha[j - 1] * v[i - j];
+            }
+            v[i] = acc;
+        }
+        let mut st = self.zero_state();
+        // x^k = v_{T-k}
+        for k in 0..d {
+            let idx = t as isize - 1 - k as isize;
+            st.buf[k] = if idx >= 0 { v[idx as usize] } else { 0.0 };
+        }
+        st.head = 0;
+        st
+    }
+
+    /// Dense (A, B, C, h0) realization (paper eq. A.8) — used by tests and
+    /// by conversions that need an explicit matrix.
+    pub fn to_dense(&self) -> (Mat, Vec<f64>, Vec<f64>, f64) {
+        let d = self.order();
+        let mut a = Mat::zeros(d, d);
+        for j in 0..d {
+            a[(0, j)] = -self.alpha[j];
+        }
+        for i in 1..d {
+            a[(i, i - 1)] = 1.0;
+        }
+        let mut b = vec![0.0; d];
+        if d > 0 {
+            b[0] = 1.0;
+        }
+        (a, b, self.beta.clone(), self.b0)
+    }
+
+    /// Poles = eigenvalues of the companion matrix = denominator roots.
+    pub fn poles(&self) -> Vec<C64> {
+        let d = self.order();
+        let mut coeffs: Vec<C64> = Vec::with_capacity(d + 1);
+        for k in (1..=d).rev() {
+            coeffs.push(C64::real(self.alpha[k - 1]));
+        }
+        coeffs.push(C64::ONE);
+        crate::dsp::poly::poly_roots(&coeffs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssm::modal::ModalSsm;
+    use crate::ssm::transfer::TransferFunction;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Prng;
+
+    fn random_modal(rng: &mut Prng, pairs: usize) -> ModalSsm {
+        let ps: Vec<(crate::dsp::C64, crate::dsp::C64)> = (0..pairs)
+            .map(|_| {
+                (
+                    crate::dsp::C64::polar(rng.range(0.3, 0.9), rng.range(0.2, 2.9)),
+                    crate::dsp::C64::new(rng.normal(), rng.normal()),
+                )
+            })
+            .collect();
+        ModalSsm::from_conjugate_pairs(&ps, rng.normal())
+    }
+
+    #[test]
+    fn companion_matches_transfer_function() {
+        check("companion step == tf recurrence", 16, |rng| {
+            let pairs = 1 + rng.below(3);
+            let sys = random_modal(rng, pairs);
+            let tf = TransferFunction::from_modal(&sys);
+            let comp = tf.to_companion();
+            let u = rng.normal_vec(30);
+            let got = comp.filter(&u);
+            // reference: convolve with the exact impulse response
+            let taps = tf.impulse_response(30);
+            let want = crate::dsp::conv::causal_conv_direct(&taps, &u);
+            assert_close(&got, &want, 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn canonization_theorem_a8() {
+        // dense -> tf -> companion preserves the impulse response
+        check("canonization preserves IO behaviour", 10, |rng| {
+            let sys = random_modal(rng, 2);
+            let tf = TransferFunction::from_modal(&sys);
+            let comp = tf.to_companion();
+            let (a, b, c, h0) = comp.to_dense();
+            let tf2 = TransferFunction::from_dense(&a, &b, &c, h0);
+            assert_close(
+                &tf2.impulse_response(24),
+                &tf.impulse_response(24),
+                1e-5,
+                1e-5,
+            )
+        });
+    }
+
+    #[test]
+    fn prefill_direct_matches_stepping() {
+        check("prop 3.2 prefill == stepped state", 12, |rng| {
+            let sys = random_modal(rng, 2);
+            let comp = TransferFunction::from_modal(&sys).to_companion();
+            let u = rng.normal_vec(25);
+            // state by stepping
+            let mut st = comp.zero_state();
+            for &x in &u {
+                comp.step(&mut st, x);
+            }
+            let fast = comp.prefill_direct(&u);
+            let d = comp.order();
+            for k in 0..d {
+                let a = st.buf[(st.head + k) % d];
+                let b = fast.buf[(fast.head + k) % d];
+                if (a - b).abs() > 1e-8 * (1.0 + b.abs()) {
+                    return Err(format!("x^{k}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn poles_match_modal_poles() {
+        let mut rng = Prng::new(5);
+        let sys = random_modal(&mut rng, 2);
+        let comp = TransferFunction::from_modal(&sys).to_companion();
+        let got = comp.poles();
+        for l in &sys.poles {
+            let best = got.iter().map(|g| (*g - *l).abs()).fold(f64::MAX, f64::min);
+            assert!(best < 1e-6, "pole {l:?} unmatched ({best:.2e})");
+        }
+    }
+
+    #[test]
+    fn zero_order_passthrough() {
+        let c = CompanionSsm::new(vec![], vec![], 2.5);
+        let y = c.filter(&[1.0, -2.0]);
+        assert_eq!(y, vec![2.5, -5.0]);
+    }
+}

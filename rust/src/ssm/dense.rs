@@ -1,0 +1,148 @@
+//! Unstructured dense state-space model (paper eq. 2.2): the generic
+//! realization with O(d^2) step cost that Lemma A.8 canonizes into the O(d)
+//! companion form.
+
+use super::transfer::TransferFunction;
+use crate::linalg::Mat;
+
+/// Dense SISO SSM: x' = A x + B u, y = C x + h0 u.
+#[derive(Clone, Debug)]
+pub struct DenseSsm {
+    pub a: Mat,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+    pub h0: f64,
+}
+
+impl DenseSsm {
+    pub fn new(a: Mat, b: Vec<f64>, c: Vec<f64>, h0: f64) -> Self {
+        assert_eq!(a.rows, a.cols);
+        assert_eq!(a.rows, b.len());
+        assert_eq!(a.rows, c.len());
+        DenseSsm { a, b, c, h0 }
+    }
+
+    pub fn order(&self) -> usize {
+        self.b.len()
+    }
+
+    /// One O(d^2) step; returns y_t computed from the pre-update state.
+    pub fn step(&self, state: &mut Vec<f64>, u: f64) -> f64 {
+        let y = self.c.iter().zip(state.iter()).map(|(c, x)| c * x).sum::<f64>()
+            + self.h0 * u;
+        let ax = self.a.matvec(state);
+        for (i, x) in state.iter_mut().enumerate() {
+            *x = ax[i] + self.b[i] * u;
+        }
+        y
+    }
+
+    pub fn filter(&self, u: &[f64]) -> Vec<f64> {
+        let mut st = vec![0.0; self.order()];
+        u.iter().map(|&x| self.step(&mut st, x)).collect()
+    }
+
+    /// Impulse-response taps [h_1 .. h_len] = C A^{t-1} B.
+    pub fn impulse_response(&self, len: usize) -> Vec<f64> {
+        let mut v = self.b.clone();
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.c.iter().zip(&v).map(|(c, x)| c * x).sum());
+            v = self.a.matvec(&v);
+        }
+        out
+    }
+
+    /// Similarity transform x̂ = K x (Lemma A.3 invariance):
+    /// Â = K A K^{-1}, B̂ = K B, Ĉ = C K^{-1}.
+    pub fn transformed(&self, k: &Mat, k_inv: &Mat) -> DenseSsm {
+        DenseSsm {
+            a: k.matmul(&self.a).matmul(k_inv),
+            b: k.matvec(&self.b),
+            c: k_inv.transpose().matvec(&self.c),
+            h0: self.h0,
+        }
+    }
+
+    /// Canonize (Theorem A.8): dense → transfer function → companion; the
+    /// result has an O(d) recurrence with identical input-output behaviour.
+    pub fn canonize(&self) -> super::companion::CompanionSsm {
+        TransferFunction::from_dense(&self.a, &self.b, &self.c, self.h0).to_companion()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu::solve_real;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Prng;
+
+    fn random_stable_dense(rng: &mut Prng, d: usize) -> DenseSsm {
+        // random A scaled to spectral radius ~0.8
+        let mut a = Mat::from_fn(d, d, |_, _| rng.normal());
+        let sn = a.spectral_norm().max(1e-6);
+        a = a.scale(0.8 / sn);
+        DenseSsm::new(a, rng.normal_vec(d), rng.normal_vec(d), rng.normal())
+    }
+
+    #[test]
+    fn impulse_response_matches_stepping() {
+        check("dense impulse == step", 12, |rng| {
+            let d = 1 + rng.below(6);
+            let sys = random_stable_dense(rng, d);
+            let mut u = vec![0.0; 16];
+            u[0] = 1.0;
+            let y = sys.filter(&u);
+            let h = sys.impulse_response(15);
+            if (y[0] - sys.h0).abs() > 1e-10 {
+                return Err("h0".into());
+            }
+            assert_close(&y[1..], &h, 1e-9, 1e-9)
+        });
+    }
+
+    #[test]
+    fn transfer_function_is_similarity_invariant() {
+        // Lemma A.3: transformed system has the same impulse response
+        check("similarity invariance", 10, |rng| {
+            let d = 2 + rng.below(4);
+            let sys = random_stable_dense(rng, d);
+            // random well-conditioned K = I + small noise
+            let k = Mat::from_fn(d, d, |i, j| {
+                (if i == j { 1.0 } else { 0.0 }) + 0.2 * rng.normal()
+            });
+            // invert K column by column
+            let mut k_inv = Mat::zeros(d, d);
+            for col in 0..d {
+                let mut e = vec![0.0; d];
+                e[col] = 1.0;
+                let x = match solve_real(&k, &e) {
+                    Some(x) => x,
+                    None => return Ok(()),
+                };
+                for r in 0..d {
+                    k_inv[(r, col)] = x[r];
+                }
+            }
+            let sys2 = sys.transformed(&k, &k_inv);
+            assert_close(
+                &sys2.impulse_response(20),
+                &sys.impulse_response(20),
+                1e-6,
+                1e-6,
+            )
+        });
+    }
+
+    #[test]
+    fn canonization_preserves_behaviour_and_speeds_step() {
+        check("dense canonize == dense behaviour", 10, |rng| {
+            let d = 2 + rng.below(4);
+            let sys = random_stable_dense(rng, d);
+            let comp = sys.canonize();
+            let u = rng.normal_vec(24);
+            assert_close(&comp.filter(&u), &sys.filter(&u), 2e-5, 2e-5)
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! State-space realizations and conversions (paper §2, §3.4, App. A).
+//!
+//! Realization zoo:
+//! * [`modal::ModalSsm`] — diagonal A with complex poles/residues, the form
+//!   LaughingHyena distills into (eq. 3.2, Prop. 3.3): O(d) step.
+//! * [`companion::CompanionSsm`] — companion canonical form (App. A.5):
+//!   O(d) step via shift + two inner products (Lemma A.7).
+//! * [`dense::DenseSsm`] — unstructured (A, B, C, h0): O(d^2) step; the
+//!   thing you get from generic parametrizations, canonized via Lemma A.8.
+//! * [`shift::ShiftSsm`] — truncated filter as an L-dim SSM (App. A.7):
+//!   the "cache the last L inputs" baseline.
+//! * [`transfer::TransferFunction`] — rational H(z) in z^{-1}, the
+//!   invariant connecting all of the above (Lemma A.3).
+
+pub mod companion;
+pub mod dense;
+pub mod modal;
+pub mod shift;
+pub mod transfer;
+
+pub use companion::CompanionSsm;
+pub use dense::DenseSsm;
+pub use modal::ModalSsm;
+pub use shift::ShiftSsm;
+pub use transfer::TransferFunction;

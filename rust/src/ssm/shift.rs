@@ -1,0 +1,82 @@
+//! Shift SSM: a truncated length-L filter viewed as an L-dimensional
+//! state-space model whose state is the last L inputs (paper App. A.7).
+//! This is the "conv cache" baseline — O(L) per step, O(L) memory — that
+//! H3 uses for one of its filters and that LaughingHyena replaces with a
+//! d ≪ L modal recurrence.
+
+/// Truncated-filter SSM. `taps` = [h_0, h_1, ..., h_{L-1}] (h_0 included).
+#[derive(Clone, Debug)]
+pub struct ShiftSsm {
+    pub taps: Vec<f64>,
+}
+
+/// Rolling input window (ring buffer), x_t = (u_{t-1}, ..., u_{t-L+1}).
+#[derive(Clone, Debug)]
+pub struct ShiftState {
+    buf: Vec<f64>,
+    head: usize,
+}
+
+impl ShiftSsm {
+    pub fn new(taps: Vec<f64>) -> Self {
+        assert!(!taps.is_empty());
+        ShiftSsm { taps }
+    }
+
+    /// State dimension = L - 1 (the h0 tap needs no memory).
+    pub fn order(&self) -> usize {
+        self.taps.len() - 1
+    }
+
+    pub fn zero_state(&self) -> ShiftState {
+        ShiftState { buf: vec![0.0; self.order().max(1)], head: 0 }
+    }
+
+    /// One step (eq. A.12): y = <h_1.., x> + h_0 u, then push u.
+    pub fn step(&self, st: &mut ShiftState, u: f64) -> f64 {
+        let d = self.order();
+        let mut y = self.taps[0] * u;
+        for k in 0..d {
+            y += self.taps[k + 1] * st.buf[(st.head + k) % d.max(1)];
+        }
+        if d > 0 {
+            st.head = (st.head + d - 1) % d;
+            st.buf[st.head] = u;
+        }
+        y
+    }
+
+    pub fn filter(&self, u: &[f64]) -> Vec<f64> {
+        let mut st = self.zero_state();
+        u.iter().map(|&x| self.step(&mut st, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsp::conv::causal_conv_direct;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn equals_direct_convolution() {
+        check("shift ssm == convolution", 16, |rng| {
+            let l = 1 + rng.below(12);
+            let taps = rng.normal_vec(l);
+            let u = rng.normal_vec(20);
+            let sys = ShiftSsm::new(taps.clone());
+            assert_close(&sys.filter(&u), &causal_conv_direct(&taps, &u), 1e-10, 1e-10)
+        });
+    }
+
+    #[test]
+    fn single_tap_is_gain() {
+        let sys = ShiftSsm::new(vec![3.0]);
+        assert_eq!(sys.filter(&[1.0, 2.0]), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn order_is_len_minus_one() {
+        assert_eq!(ShiftSsm::new(vec![1.0, 2.0, 3.0]).order(), 2);
+    }
+}

@@ -1,0 +1,336 @@
+//! Rational transfer functions H(z) in negative powers of z (paper eq. 3.1):
+//!
+//! ```text
+//! H(z) = b0 + (b1 z^-1 + ... + bd z^-d) / (1 + a1 z^-1 + ... + ad z^-d)
+//! ```
+//!
+//! stored *simply proper*: numerator `b` has d+1 entries (b0 = h0 included),
+//! denominator `a` has d+1 entries with a[0] == 1.  The transfer function is
+//! the invariant of the system (Lemma A.3); conversions in this module:
+//! modal → tf (partial-fraction recombination), tf → companion (App. A.5,
+//! including the h0 long division), dense ss → tf via `poly(eig(.))`
+//! (App. A.6 / Listing 1), Õ(L) frequency/impulse evaluation (Lemma A.6),
+//! and the Prop-3.2 prefill filter g = Z^{-1}[1/den].
+
+use super::companion::CompanionSsm;
+use super::modal::ModalSsm;
+use crate::dsp::fft::{dft, idft};
+use crate::dsp::poly::poly_from_roots;
+use crate::dsp::C64;
+use crate::linalg::eig::eig_real;
+use crate::linalg::Mat;
+
+/// Simply-proper rational transfer function in z^{-1}.
+#[derive(Clone, Debug)]
+pub struct TransferFunction {
+    /// Numerator [b0, b1, .., bd].
+    pub b: Vec<f64>,
+    /// Denominator [1, a1, .., ad].
+    pub a: Vec<f64>,
+}
+
+impl TransferFunction {
+    pub fn new(b: Vec<f64>, a: Vec<f64>) -> Self {
+        assert!(!a.is_empty() && (a[0] - 1.0).abs() < 1e-9, "denominator must be monic in z^0");
+        TransferFunction { b, a }
+    }
+
+    /// Order d (denominator degree).
+    pub fn order(&self) -> usize {
+        self.a.len() - 1
+    }
+
+    /// Evaluate H at a point z (Horner in z^{-1}).
+    pub fn eval(&self, z: C64) -> C64 {
+        let zi = z.recip();
+        let horner = |c: &[f64]| {
+            let mut acc = C64::ZERO;
+            for &x in c.iter().rev() {
+                acc = acc * zi + C64::real(x);
+            }
+            acc
+        };
+        horner(&self.b) / horner(&self.a)
+    }
+
+    /// Frequency response on the L roots of unity in Õ(L) (Lemma A.6):
+    /// FFT(zero-padded b) / FFT(zero-padded a).
+    /// Convention: bin k holds H(e^{+2 pi i k / L}) — the DFT kernel
+    /// e^{-2 pi i k t / L} plays the role of z^{-t}.
+    pub fn freq_response(&self, l: usize) -> Vec<C64> {
+        assert!(l > self.order(), "need L > d for the FFT evaluation");
+        let pad = |c: &[f64]| {
+            let mut buf = vec![C64::ZERO; l];
+            for (i, &x) in c.iter().enumerate() {
+                buf[i] = C64::real(x);
+            }
+            dft(&buf)
+        };
+        let num = pad(&self.b);
+        let den = pad(&self.a);
+        num.into_iter().zip(den).map(|(n, d)| n / d).collect()
+    }
+
+    /// Impulse response [h_0, h_1, ..., h_{len-1}] via the exact difference
+    /// equation h_t = b_t - sum_j a_j h_{t-j} (O(d len); alias-free, unlike
+    /// the inverse-FFT route for slowly decaying filters).
+    pub fn impulse_response(&self, len: usize) -> Vec<f64> {
+        let d = self.order();
+        let mut h = vec![0.0; len];
+        for t in 0..len {
+            let mut acc = self.b.get(t).copied().unwrap_or(0.0);
+            for j in 1..=d.min(t) {
+                acc -= self.a[j] * h[t - j];
+            }
+            h[t] = acc;
+        }
+        h
+    }
+
+    /// Impulse response via inverse FFT of the frequency response — the
+    /// Õ(L) path of Lemma A.6.  Subject to circular aliasing ~ rho^L; pad
+    /// with `oversample` >= 1 to push the alias floor down.
+    pub fn impulse_response_fft(&self, len: usize, oversample: usize) -> Vec<f64> {
+        let l = (len * oversample.max(1)).next_power_of_two();
+        let spec = self.freq_response(l);
+        idft(&spec).into_iter().take(len).map(|z| z.re).collect()
+    }
+
+    /// Prop. 3.2 prefill filter g = Z^{-1}[1 / den(H)]: g_t satisfies
+    /// g_t = delta_t - sum_j a_j g_{t-j}.
+    pub fn prefill_filter(&self, len: usize) -> Vec<f64> {
+        let d = self.order();
+        let mut g = vec![0.0; len];
+        for t in 0..len {
+            let mut acc = if t == 0 { 1.0 } else { 0.0 };
+            for j in 1..=d.min(t) {
+                acc -= self.a[j] * g[t - j];
+            }
+            g[t] = acc;
+        }
+        g
+    }
+
+    /// Partial-fraction recombination: modal form → rational form.
+    /// H(z) = h0 + sum_n R_n/(z - lambda_n); the poles MUST be
+    /// conjugate-closed for the coefficients to come out real — for
+    /// distilled systems (free poles + Re[.] output) call
+    /// [`ModalSsm::conjugate_closure`] first, or use
+    /// [`TransferFunction::from_modal_real`] which does so automatically.
+    pub fn from_modal(sys: &ModalSsm) -> Self {
+        let d = sys.order();
+        let den_pos = poly_from_roots(&sys.poles); // z-power coeffs, monic, len d+1
+        // num(z) = sum_n R_n prod_{m != n} (z - lambda_m): degree d-1
+        let mut num_pos = vec![C64::ZERO; d.max(1)];
+        for n in 0..d {
+            let others: Vec<C64> = sys
+                .poles
+                .iter()
+                .enumerate()
+                .filter(|(m, _)| *m != n)
+                .map(|(_, &l)| l)
+                .collect();
+            let q = poly_from_roots(&others); // degree d-1
+            for (k, &c) in q.iter().enumerate() {
+                num_pos[k] += sys.residues[n] * c;
+            }
+        }
+        // convert z-power rational of degree (d-1)/d to z^{-1} form:
+        // b_j = num_pos[d-j] (j = 1..d), a_j = den_pos[d-j]
+        let mut a = vec![0.0; d + 1];
+        for j in 0..=d {
+            a[j] = den_pos[d - j].re;
+        }
+        let mut b = vec![0.0; d + 1];
+        b[0] = sys.h0;
+        for j in 1..=d {
+            let c = if d >= j { num_pos.get(d - j).copied().unwrap_or(C64::ZERO) } else { C64::ZERO };
+            b[j] = c.re + sys.h0 * a[j]; // fold h0 into the simply-proper numerator
+        }
+        // normalize a[0] to exactly 1 (it is by construction)
+        TransferFunction::new(b, a)
+    }
+
+    /// Real rational form of an arbitrary (not necessarily conjugate-
+    /// closed) modal system whose output is Re[C x]: goes through the
+    /// order-2d conjugate closure, so the result is exactly real.
+    pub fn from_modal_real(sys: &ModalSsm) -> Self {
+        Self::from_modal(&sys.conjugate_closure())
+    }
+
+    /// Dense state space → transfer function via eigenvalues
+    /// (App. A.6, Listing 1): a = poly(eig(A)),
+    /// b = poly(eig(A - B C)) + (h0 - 1) a.
+    pub fn from_dense(a_mat: &Mat, b_vec: &[f64], c_vec: &[f64], h0: f64) -> Self {
+        let d = a_mat.rows;
+        let eig_a = eig_real(a_mat);
+        let a_pos = real_coeffs(&poly_from_roots(&eig_a));
+        let mut a_bc = a_mat.clone();
+        for i in 0..d {
+            for j in 0..d {
+                a_bc[(i, j)] -= b_vec[i] * c_vec[j];
+            }
+        }
+        let eig_abc = eig_real(&a_bc);
+        let q_pos = real_coeffs(&poly_from_roots(&eig_abc));
+        // numerator(z) = q(z) + (h0 - 1) p(z), both degree d (monic)
+        let num_pos: Vec<f64> = q_pos
+            .iter()
+            .zip(&a_pos)
+            .map(|(q, p)| q + (h0 - 1.0) * p)
+            .collect();
+        // z^{-1} form: coefficient of z^{d-j} becomes index j
+        let a = (0..=d).map(|j| a_pos[d - j]).collect::<Vec<_>>();
+        let b = (0..=d).map(|j| num_pos[d - j]).collect::<Vec<_>>();
+        TransferFunction::new(b, a)
+    }
+
+    /// Companion canonical realization (App. A.5): isolates h0 = b0 by long
+    /// division, beta_j = b_j - b0 a_j.
+    pub fn to_companion(&self) -> CompanionSsm {
+        let d = self.order();
+        let b0 = self.b.first().copied().unwrap_or(0.0);
+        let alpha: Vec<f64> = self.a[1..].to_vec();
+        let beta: Vec<f64> = (1..=d)
+            .map(|j| self.b.get(j).copied().unwrap_or(0.0) - b0 * self.a[j])
+            .collect();
+        CompanionSsm::new(alpha, beta, b0)
+    }
+
+    /// Poles (denominator roots in z).
+    pub fn poles(&self) -> Vec<C64> {
+        // den in z^{-1}: 1 + a1 z^-1 + ... + ad z^-d; roots of
+        // z^d + a1 z^{d-1} + ... + ad (positive powers, reversed coeffs)
+        let coeffs: Vec<C64> = self.a.iter().rev().map(|&x| C64::real(x)).collect();
+        crate::dsp::poly::poly_roots(&coeffs)
+    }
+
+    /// Modal form via pole/residue expansion (Prop. 3.1): residues by
+    /// R_n = num(lambda_n) / den'(lambda_n) evaluated in z-powers.
+    pub fn to_modal(&self) -> ModalSsm {
+        let d = self.order();
+        let h0 = self.b.first().copied().unwrap_or(0.0);
+        // strictly-proper numerator in z-powers: n(z) = sum_j beta_j z^{d-j}
+        let beta: Vec<f64> = (1..=d)
+            .map(|j| self.b.get(j).copied().unwrap_or(0.0) - h0 * self.a[j])
+            .collect();
+        let mut num_pos = vec![C64::ZERO; d]; // degree d-1
+        for j in 1..=d {
+            num_pos[d - j] = C64::real(beta[j - 1]);
+        }
+        let den_pos: Vec<C64> = self.a.iter().rev().map(|&x| C64::real(x)).collect();
+        let dden = crate::dsp::poly::poly_deriv(&den_pos);
+        let poles = self.poles();
+        let residues: Vec<C64> = poles
+            .iter()
+            .map(|&l| {
+                crate::dsp::poly::poly_eval(&num_pos, l)
+                    / crate::dsp::poly::poly_eval(&dden, l)
+            })
+            .collect();
+        ModalSsm::new(poles, residues, h0)
+    }
+}
+
+fn real_coeffs(p: &[C64]) -> Vec<f64> {
+    p.iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::Prng;
+
+    fn random_modal(rng: &mut Prng, pairs: usize) -> ModalSsm {
+        let ps: Vec<(C64, C64)> = (0..pairs)
+            .map(|_| {
+                (
+                    C64::polar(rng.range(0.3, 0.9), rng.range(0.2, 2.9)),
+                    C64::new(rng.normal(), rng.normal()),
+                )
+            })
+            .collect();
+        ModalSsm::from_conjugate_pairs(&ps, rng.normal())
+    }
+
+    #[test]
+    fn modal_to_tf_preserves_impulse_response() {
+        check("modal -> tf impulse response", 16, |rng| {
+            let pairs = 1 + rng.below(3);
+            let sys = random_modal(rng, pairs);
+            let tf = TransferFunction::from_modal(&sys);
+            let want: Vec<f64> = {
+                let mut v = vec![sys.h0];
+                v.extend(sys.impulse_response(23));
+                v
+            };
+            assert_close(&tf.impulse_response(24), &want, 1e-7, 1e-7)
+        });
+    }
+
+    #[test]
+    fn tf_roundtrip_through_modal() {
+        check("tf -> modal -> tf", 12, |rng| {
+            let pairs = 1 + rng.below(3);
+            let sys = random_modal(rng, pairs);
+            let tf = TransferFunction::from_modal(&sys);
+            let back = TransferFunction::from_modal(&tf.to_modal());
+            assert_close(
+                &back.impulse_response(20),
+                &tf.impulse_response(20),
+                1e-6,
+                1e-6,
+            )
+        });
+    }
+
+    #[test]
+    fn freq_response_matches_pointwise_eval() {
+        check("fft freq response == horner eval", 8, |rng| {
+            let sys = random_modal(rng, 2);
+            let tf = TransferFunction::from_modal(&sys);
+            let l = 32;
+            let fast = tf.freq_response(l);
+            for k in 0..l {
+                let z = C64::polar(1.0, 2.0 * std::f64::consts::PI * k as f64 / l as f64);
+                let slow = tf.eval(z);
+                if (fast[k] - slow).abs() > 1e-8 * (1.0 + slow.abs()) {
+                    return Err(format!("bin {k}: {:?} vs {:?}", fast[k], slow));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn impulse_fft_matches_recurrence_for_stable_systems() {
+        check("fft impulse == recurrence", 8, |rng| {
+            let sys = random_modal(rng, 2);
+            let tf = TransferFunction::from_modal(&sys);
+            let exact = tf.impulse_response(32);
+            let fft = tf.impulse_response_fft(32, 8);
+            assert_close(&fft, &exact, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn prefill_filter_inverts_denominator() {
+        check("a * g == delta", 12, |rng| {
+            let sys = random_modal(rng, 2);
+            let tf = TransferFunction::from_modal(&sys);
+            let g = tf.prefill_filter(24);
+            let conv = crate::dsp::conv::causal_conv_direct(&tf.a, &g);
+            let mut delta = vec![0.0; 24];
+            delta[0] = 1.0;
+            assert_close(&conv, &delta, 1e-8, 1e-8)
+        });
+    }
+
+    #[test]
+    fn fir_transfer_function() {
+        // pure FIR: denominator = [1]: impulse response == numerator taps
+        let tf = TransferFunction::new(vec![0.5, -1.0, 2.0], vec![1.0]);
+        assert_eq!(tf.impulse_response(5), vec![0.5, -1.0, 2.0, 0.0, 0.0]);
+    }
+}

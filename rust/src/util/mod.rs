@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, statistics, property-testing.
+//!
+//! The offline build image ships only the `xla` crate's dependency closure
+//! (no `rand`, no `proptest`, no `criterion`), so these substrates are
+//! implemented in-repo (see DESIGN.md §6 "Substitutions").
+
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+pub use prng::Prng;

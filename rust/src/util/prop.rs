@@ -1,0 +1,75 @@
+//! Minimal property-based testing harness (proptest is unavailable in the
+//! offline image; see DESIGN.md §6).
+//!
+//! A property runs against many seeded random cases; on failure the seed is
+//! reported so the case can be replayed deterministically:
+//!
+//! ```
+//! use laughing_hyena::util::prop::check;
+//! use laughing_hyena::util::Prng;
+//! check("abs is non-negative", 64, |rng: &mut Prng| {
+//!     let x = rng.normal();
+//!     if x.abs() >= 0.0 { Ok(()) } else { Err(format!("abs({x}) < 0")) }
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Run `prop` for `cases` seeded cases; panics with seed + message on the
+/// first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert |a - b| <= atol + rtol*|b| element-wise, with a useful message.
+pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol:.3e})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("uniform in range", 32, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 4, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-9], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[2.0], 1e-6, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 0.0).is_err());
+    }
+}
