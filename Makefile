@@ -1,0 +1,32 @@
+# CI-style entry points. `make verify` is the tier-1 gate.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test verify doc bench artifacts clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# tier-1 gate: build + full test suite
+verify: build test
+
+doc:
+	$(CARGO) doc --no-deps
+
+bench:
+	$(CARGO) bench --bench distillation
+	$(CARGO) bench --bench substrates
+	$(CARGO) bench --bench generation
+	$(CARGO) bench --bench coordinator
+
+# Lower the L2 graphs to HLO artifacts under rust/artifacts/ (needs JAX).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../rust/artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf results

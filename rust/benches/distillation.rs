@@ -1,4 +1,6 @@
 //! Distillation benchmarks + method ablations:
+//! * pooled vs sequential distillation of a multi-head filter bank — the
+//!   `util::pool` fan-out (results are bit-identical; asserted here);
 //! * modal-fit iteration cost vs (order, length) — the distillery hot path;
 //! * gradient fit vs Prony vs Padé vs balanced truncation (accuracy + time)
 //!   on clean and rough filters — the paper's §3.2 / App.-E comparison;
@@ -8,11 +10,59 @@ use laughing_hyena::benchkit::{bench, fmt_time, time_once, Table};
 use laughing_hyena::data::filters::{model_filters, Family};
 use laughing_hyena::distill::modal_fit::{distill_modal, DistillConfig};
 use laughing_hyena::distill::prefill::{prefill_powers, prefill_recurrent, FftPrefiller};
-use laughing_hyena::distill::{balanced, pade, prony};
+use laughing_hyena::distill::{balanced, pade, prony, Distillery};
+use laughing_hyena::util::pool::Pool;
 use laughing_hyena::util::stats::rel_err;
 use laughing_hyena::util::Prng;
 
 fn main() {
+    // 0) pooled vs sequential distillation of a filter bank (the tentpole
+    //    fan-out): same per-filter seeds and order, so the reports must be
+    //    bit-identical — only the wall time changes
+    let cores = Pool::auto().threads();
+    let mut pooled_tab = Table::new(&[
+        "filters", "order", "sequential", "pooled", "speedup",
+    ]);
+    let mut headline = String::new();
+    for n_filters in [8usize, 16] {
+        let bank = model_filters(Family::MultiHyena, n_filters, 256, 0xBA);
+        let mk = |threads: Option<usize>| Distillery {
+            order: Some(12),
+            fit: DistillConfig { iters: 600, ..Default::default() },
+            hankel_window: Some(48),
+            threads,
+            ..Default::default()
+        };
+        let (seq, t_seq) = time_once(|| mk(Some(1)).distill_all(&bank));
+        let (par, t_par) = time_once(|| mk(None).distill_all(&bank));
+        for (a, b) in seq.filters.iter().zip(&par.filters) {
+            assert_eq!(
+                a.rel_err.to_bits(),
+                b.rel_err.to_bits(),
+                "pooled distillation must be bit-identical to sequential"
+            );
+        }
+        let speedup = t_seq / t_par.max(1e-12);
+        pooled_tab.row(&[
+            n_filters.to_string(),
+            "12".into(),
+            fmt_time(t_seq),
+            fmt_time(t_par),
+            format!("{speedup:.2}x"),
+        ]);
+        if n_filters == 8 {
+            headline = format!(
+                "pooled distillation of the 8-filter bank: {speedup:.2}x faster \
+                 than sequential on {cores} cores (bit-identical rel_err)"
+            );
+        }
+    }
+    pooled_tab.print(&format!(
+        "pooled vs sequential distill_all ({cores} cores, util::pool)"
+    ));
+    let _ = pooled_tab.write_csv("bench_distill_pool.csv");
+    println!("{headline}");
+
     // 1) modal-fit cost scaling
     let mut cost = Table::new(&["order", "L", "time/iter", "iters/s"]);
     let mut rng = Prng::new(2);

@@ -98,7 +98,7 @@ impl Table {
         }
     }
 
-    /// Also write the table as CSV under results/<file>.
+    /// Also write the table as CSV under `results/<file>`.
     pub fn write_csv(&self, file: &str) -> std::io::Result<()> {
         std::fs::create_dir_all("results")?;
         let mut out = String::new();

@@ -12,13 +12,23 @@ pub struct RawConfig {
     sections: BTreeMap<String, BTreeMap<String, String>>,
 }
 
-/// Parse error with line information.
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+/// Parse error with line information (`thiserror` is unavailable offline,
+/// so `Display`/`Error` are implemented by hand).
+#[derive(Debug)]
 pub struct ParseError {
+    /// 1-based line number the error was detected on.
     pub line: usize,
+    /// Human-readable description of what went wrong on that line.
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl RawConfig {
     pub fn parse(text: &str) -> Result<RawConfig, ParseError> {

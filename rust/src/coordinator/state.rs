@@ -31,9 +31,8 @@ impl SlotEngine for RecurrentEngine {
     }
 
     fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
-        jobs.iter()
-            .map(|(slot, prompt)| (*slot, self.prefill_row(*slot, prompt)))
-            .collect()
+        // rows are independent: fan the prompt ingestion out across cores
+        self.prefill_rows(jobs)
     }
 
     fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {

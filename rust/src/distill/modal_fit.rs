@@ -335,13 +335,8 @@ mod tests {
         let base = loss_and_grad(&p, &taps, &mut resid, &mut gd, &mut gt, &mut gr, &mut gi);
         assert!(base.is_finite());
         let eps = 1e-6;
-        let fields: [(&[f64], &dyn Fn(&mut Params) -> &mut Vec<f64>); 4] = [
-            (&gd, &|p| &mut p.decay),
-            (&gt, &|p| &mut p.theta),
-            (&gr, &|p| &mut p.r_re),
-            (&gi, &|p| &mut p.r_im),
-        ];
-        for (grad, get) in fields {
+        let fields: [(&[f64], usize); 4] = [(&gd, 0), (&gt, 1), (&gr, 2), (&gi, 3)];
+        for (grad, which) in fields {
             for n in 0..d {
                 let mut p2 = Params {
                     decay: p.decay.clone(),
@@ -349,7 +344,13 @@ mod tests {
                     r_re: p.r_re.clone(),
                     r_im: p.r_im.clone(),
                 };
-                get(&mut p2)[n] += eps;
+                let field = match which {
+                    0 => &mut p2.decay,
+                    1 => &mut p2.theta,
+                    2 => &mut p2.r_re,
+                    _ => &mut p2.r_im,
+                };
+                field[n] += eps;
                 let mut r2 = vec![0.0; l];
                 let (mut a, mut b, mut c, mut dd) =
                     (vec![0.0; d], vec![0.0; d], vec![0.0; d], vec![0.0; d]);

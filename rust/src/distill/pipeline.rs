@@ -1,10 +1,16 @@
 //! The end-to-end Distillery (paper Figure 3.1 blueprint): for each filter
 //! of a pre-trained model — Hankel spectrum → candidate order → modal
 //! interpolation → validation report.
+//!
+//! Distilling a multi-head filter bank is embarrassingly parallel (one
+//! independent, deterministic fit per filter), so [`Distillery::distill_all`]
+//! fans out over [`crate::util::pool::Pool`]. Results are bit-identical to
+//! the sequential path at any thread count (tested below).
 
 use super::modal_fit::{distill_modal, DistillConfig, DistillResult};
 use crate::hankel::{aak_lower_bound, hankel_singular_values, suggest_order};
 use crate::ssm::ModalSsm;
+use crate::util::pool::Pool;
 
 /// One distilled filter plus its diagnostics.
 #[derive(Clone, Debug)]
@@ -28,7 +34,14 @@ pub struct Distillery {
     pub spectrum_tol: f64,
     /// Hankel window (None = min(len, 128) for tractable eigensolves).
     pub hankel_window: Option<usize>,
+    /// Hyperparameters of the per-filter modal interpolation (§3.2).
     pub fit: DistillConfig,
+    /// Worker threads for multi-filter banks in
+    /// [`Distillery::distill_all`]; None = one per available core,
+    /// `Some(1)` forces the sequential path. Each filter's fit is
+    /// deterministic and independent, so the report is bit-identical at
+    /// any thread count.
+    pub threads: Option<usize>,
 }
 
 impl Default for Distillery {
@@ -38,6 +51,7 @@ impl Default for Distillery {
             spectrum_tol: 1e-3,
             hankel_window: None,
             fit: DistillConfig::default(),
+            threads: None,
         }
     }
 }
@@ -91,10 +105,16 @@ impl Distillery {
         }
     }
 
-    /// Distill every filter of a model (each row = [h0, h1, ...]).
+    /// Distill every filter of a model (each row = [h0, h1, ...]), fanning
+    /// out across [`Pool`] workers — the L3 hot path for filter banks.
     pub fn distill_all(&self, filters: &[Vec<f64>]) -> DistilleryReport {
+        let pool = match self.threads {
+            Some(n) => Pool::new(n),
+            None => Pool::auto(),
+        };
+        let jobs: Vec<&Vec<f64>> = filters.iter().collect();
         DistilleryReport {
-            filters: filters.iter().map(|f| self.distill_filter(f)).collect(),
+            filters: pool.map(jobs, |f| self.distill_filter(f)),
         }
     }
 }
@@ -149,6 +169,41 @@ mod tests {
         assert_eq!(report.filters.len(), 3);
         assert!(report.min_err() <= report.mean_err());
         assert!(report.mean_err() <= report.max_err() + 1e-12);
+    }
+
+    #[test]
+    fn pooled_distillation_bit_identical_to_sequential() {
+        // tentpole invariant: fanning the filter bank over the thread pool
+        // must not change a single bit of any per-filter result
+        let mut rng = Prng::new(17);
+        let filters: Vec<Vec<f64>> =
+            (0..6).map(|_| synthetic_filter(&mut rng, 2, 96)).collect();
+        let base = Distillery {
+            order: Some(4),
+            fit: DistillConfig { iters: 300, ..Default::default() },
+            hankel_window: Some(32),
+            threads: Some(1),
+            ..Default::default()
+        };
+        let seq = base.distill_all(&filters);
+        for threads in [2usize, 4, 16] {
+            let pooled =
+                Distillery { threads: Some(threads), ..base.clone() }.distill_all(&filters);
+            assert_eq!(pooled.filters.len(), seq.filters.len());
+            for (p, s) in pooled.filters.iter().zip(&seq.filters) {
+                assert_eq!(p.order, s.order, "threads={threads}");
+                assert_eq!(
+                    p.rel_err.to_bits(),
+                    s.rel_err.to_bits(),
+                    "threads={threads}: rel_err must be bit-identical"
+                );
+                assert_eq!(p.linf_err.to_bits(), s.linf_err.to_bits());
+                for (a, b) in p.ssm.poles.iter().zip(&s.ssm.poles) {
+                    assert_eq!(a.re.to_bits(), b.re.to_bits());
+                    assert_eq!(a.im.to_bits(), b.im.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! * [`prefill_powers`]    — same asymptotics, vectorization-friendly
 //!   closed form x_n = sum_j lambda_n^{T-1-j} u_j (what the L2 JAX prefill
 //!   graph computes on the MXU).
-//! * [`prefill_fft`]       — Prop. 3.2: one FFT convolution with
-//!   g = Z^{-1}[1/den] gives the companion state in Õ(T); a fixed d x d
+//! * [`FftPrefiller`]      — Prop. 3.2: one FFT convolution with
+//!   g = Z^{-1} of 1/den gives the companion state in Õ(T); a fixed d x d
 //!   similarity transform maps it to modal coordinates.
 
 use crate::dsp::conv::causal_conv_fft;

@@ -6,6 +6,7 @@
 
 use super::linear::{argmax, gelu, layer_norm, Dense};
 use super::shapes::LmShape;
+use crate::util::pool::Pool;
 use crate::util::Prng;
 
 pub struct Layer {
@@ -30,14 +31,19 @@ impl Backbone {
         let embed: Vec<f32> = (0..shape.vocab * d)
             .map(|_| (rng.normal() * 0.02) as f32)
             .collect();
-        let layers = (0..shape.n_layer)
-            .map(|_| Layer {
-                qkv: Dense::random(d, 3 * d, &mut rng),
-                out: Dense::random(d, d, &mut rng),
-                mlp1: Dense::random(d, shape.mlp_mult * d, &mut rng),
-                mlp2: Dense::random(shape.mlp_mult * d, d, &mut rng),
-            })
-            .collect();
+        // Per-layer weight init fans out over the pool (the bulk of the
+        // coordinator's engine-factory cost). Each layer draws from its own
+        // splitmix-derived stream, so construction is deterministic per
+        // seed at any thread count.
+        let layers = Pool::auto().map((0..shape.n_layer).collect::<Vec<usize>>(), |li| {
+            let mut lr = Prng::derived(seed, li as u64);
+            Layer {
+                qkv: Dense::random(d, 3 * d, &mut lr),
+                out: Dense::random(d, d, &mut lr),
+                mlp1: Dense::random(d, shape.mlp_mult * d, &mut lr),
+                mlp2: Dense::random(shape.mlp_mult * d, d, &mut lr),
+            }
+        });
         let lm_head = Dense::random(d, shape.vocab, &mut rng);
         Backbone { shape: shape.clone(), embed, layers, lm_head }
     }

@@ -11,6 +11,7 @@ use super::shapes::LmShape;
 use super::Engine;
 use crate::dsp::C64;
 use crate::ssm::ModalSsm;
+use crate::util::pool::Pool;
 use crate::util::Prng;
 
 /// Per-head modal parameters, broadcast over the head's channels.
@@ -20,6 +21,18 @@ struct HeadModal {
     r_re: Vec<f32>,
     r_im: Vec<f32>,
     h0: f32,
+}
+
+impl HeadModal {
+    fn from_ssm(sys: &ModalSsm) -> HeadModal {
+        HeadModal {
+            lam_re: sys.poles.iter().map(|p| p.re as f32).collect(),
+            lam_im: sys.poles.iter().map(|p| p.im as f32).collect(),
+            r_re: sys.residues.iter().map(|r| r.re as f32).collect(),
+            r_im: sys.residues.iter().map(|r| r.im as f32).collect(),
+            h0: sys.h0 as f32,
+        }
+    }
 }
 
 pub struct RecurrentEngine {
@@ -40,26 +53,23 @@ pub struct RecurrentEngine {
 impl RecurrentEngine {
     /// Build with synthetic distilled filters (random stable modal systems
     /// per head — the engines benchmark cost, not quality).
+    ///
+    /// Setup fans out over [`Pool`] per (layer, head); each head draws its
+    /// modal system from its own derived seed, so construction is
+    /// deterministic at any thread count.
     pub fn new(shape: &LmShape, batch: usize, seed: u64) -> RecurrentEngine {
         let bb = Backbone::new(shape, seed);
-        let mut rng = Prng::new(seed ^ 0xD15711);
         let d_state = shape.d_state;
-        let modal = (0..shape.n_layer)
-            .map(|_| {
-                (0..shape.heads)
-                    .map(|_| {
-                        let sys = random_modal(&mut rng, d_state);
-                        HeadModal {
-                            lam_re: sys.poles.iter().map(|p| p.re as f32).collect(),
-                            lam_im: sys.poles.iter().map(|p| p.im as f32).collect(),
-                            r_re: sys.residues.iter().map(|r| r.re as f32).collect(),
-                            r_im: sys.residues.iter().map(|r| r.im as f32).collect(),
-                            h0: sys.h0 as f32,
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
+        let head_jobs: Vec<usize> = (0..shape.n_layer * shape.heads).collect();
+        let flat = Pool::auto().map(head_jobs, |idx| {
+            let mut rng = Prng::derived(seed ^ 0xD15711, idx as u64);
+            HeadModal::from_ssm(&random_modal(&mut rng, d_state))
+        });
+        let mut modal: Vec<Vec<HeadModal>> = Vec::with_capacity(shape.n_layer);
+        let mut it = flat.into_iter();
+        for _ in 0..shape.n_layer {
+            modal.push((0..shape.heads).map(|_| it.next().expect("head modal")).collect());
+        }
         let d = shape.d_model;
         let kw = shape.short_kw;
         RecurrentEngine {
@@ -76,32 +86,61 @@ impl RecurrentEngine {
 
     /// Zero the generation state of one batch row (slot recycling).
     pub fn reset_row(&mut self, b: usize) {
-        for l in 0..self.bb.shape.n_layer {
-            self.x_re[b][l].fill(0.0);
-            self.x_im[b][l].fill(0.0);
-            self.sc[b][l].fill(0.0);
-        }
+        reset_row_bufs(&mut self.x_re[b], &mut self.x_im[b], &mut self.sc[b]);
         self.last[b] = 0;
     }
 
     /// Prefill a single batch row with a prompt; returns the first greedy
     /// token. Rows are independent — this is the continuous-batching hook.
     pub fn prefill_row(&mut self, b: usize, prompt: &[i32]) -> i32 {
-        self.reset_row(b);
+        let mut wanted: Vec<Option<&[i32]>> = vec![None; self.batch];
+        wanted[b] = Some(prompt);
+        self.prefill_wanted(&wanted)[0].1
+    }
+
+    /// Prefill several (slot, prompt) jobs, fanning the independent rows out
+    /// over [`Pool`] workers — the coordinator's batched-prefill hot path.
+    /// Returns (slot, first greedy token) pairs in ascending slot order.
+    pub fn prefill_rows(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        let mut wanted: Vec<Option<&[i32]>> = vec![None; self.batch];
+        for (slot, prompt) in jobs {
+            wanted[*slot] = Some(prompt.as_slice());
+        }
+        self.prefill_wanted(&wanted)
+    }
+
+    /// Shared pooled prefill core: rows with a `Some(prompt)` entry are
+    /// reset and consumed in parallel (each row owns disjoint state).
+    fn prefill_wanted(&mut self, wanted: &[Option<&[i32]>]) -> Vec<(usize, i32)> {
         let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let group = d / bb.shape.heads;
-        let mut logits = vec![0.0f32; bb.shape.vocab];
-        let (xr_b, xi_b, sc_b) = (&mut x_re[b], &mut x_im[b], &mut sc[b]);
-        for &tok in prompt {
-            logits = bb.decode_one(tok, |li, qkv| {
-                mix_one(d, kw, group, *d_state, &modal[li], &mut sc_b[li],
-                        &mut xr_b[li], &mut xi_b[li], qkv)
-            });
-        }
-        let next = bb.greedy(&logits);
-        last[b] = next;
-        next
+        let ds = *d_state;
+        let bb = &*bb;
+        let modal = &*modal;
+        let rows: Vec<_> = x_re
+            .iter_mut()
+            .zip(x_im.iter_mut())
+            .zip(sc.iter_mut())
+            .zip(last.iter_mut())
+            .enumerate()
+            .filter_map(|(b, (((xr, xi), sc_b), last_b))| {
+                wanted[b].map(|prompt| (b, xr, xi, sc_b, last_b, prompt))
+            })
+            .collect();
+        Pool::auto().map(rows, |(b, xr, xi, sc_b, last_b, prompt)| {
+            reset_row_bufs(xr, xi, sc_b);
+            let mut logits = vec![0.0f32; bb.shape.vocab];
+            for &tok in prompt {
+                logits = bb.decode_one(tok, |li, qkv| {
+                    mix_one(d, kw, group, ds, &modal[li], &mut sc_b[li],
+                            &mut xr[li], &mut xi[li], qkv)
+                });
+            }
+            let next = bb.greedy(&logits);
+            *last_b = next;
+            (b, next)
+        })
     }
 
     /// One decode step for a single row.
@@ -128,18 +167,19 @@ impl RecurrentEngine {
     /// Replace the synthetic modal systems of one layer (distillery output).
     pub fn set_layer_modal(&mut self, layer: usize, systems: &[ModalSsm]) {
         assert_eq!(systems.len(), self.bb.shape.heads);
-        self.modal[layer] = systems
-            .iter()
-            .map(|sys| HeadModal {
-                lam_re: sys.poles.iter().map(|p| p.re as f32).collect(),
-                lam_im: sys.poles.iter().map(|p| p.im as f32).collect(),
-                r_re: sys.residues.iter().map(|r| r.re as f32).collect(),
-                r_im: sys.residues.iter().map(|r| r.im as f32).collect(),
-                h0: sys.h0 as f32,
-            })
-            .collect();
+        self.modal[layer] = systems.iter().map(HeadModal::from_ssm).collect();
     }
+}
 
+/// Zero one row's per-layer generation buffers — the single reset site
+/// shared by [`RecurrentEngine::reset_row`] and the pooled prefill (add any
+/// new per-row state buffer here so slot recycling can't go stale).
+fn reset_row_bufs(xr: &mut [Vec<f32>], xi: &mut [Vec<f32>], sc: &mut [Vec<f32>]) {
+    for l in 0..xr.len() {
+        xr[l].fill(0.0);
+        xi[l].fill(0.0);
+        sc[l].fill(0.0);
+    }
 }
 
 /// Fused short-conv + gated SSM mixer for one token of one sequence.
@@ -214,33 +254,15 @@ impl Engine for RecurrentEngine {
 
     fn prefill(&mut self, prompts: &[Vec<i32>]) -> Vec<i32> {
         assert_eq!(prompts.len(), self.batch);
-        // reset state
-        for b in 0..self.batch {
-            for l in 0..self.bb.shape.n_layer {
-                self.x_re[b][l].fill(0.0);
-                self.x_im[b][l].fill(0.0);
-                self.sc[b][l].fill(0.0);
-            }
-        }
-        let batch = self.batch;
-        let mut out = Vec::with_capacity(batch);
-        let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
-        let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
-        let group = d / bb.shape.heads;
-        for b in 0..batch {
-            // consume the prompt through the recurrence (O(T d) state init;
-            // the FFT variant is benchmarked at the filter level)
-            let mut logits = vec![0.0f32; bb.shape.vocab];
-            let (xr_b, xi_b, sc_b) = (&mut x_re[b], &mut x_im[b], &mut sc[b]);
-            for &tok in &prompts[b] {
-                logits = bb.decode_one(tok, |li, qkv| {
-                    mix_one(d, kw, group, *d_state, &modal[li], &mut sc_b[li],
-                            &mut xr_b[li], &mut xi_b[li], qkv)
-                });
-            }
-            let next = bb.greedy(&logits);
-            last[b] = next;
-            out.push(next);
+        // consume every prompt through the recurrence (O(T d) state init;
+        // the FFT variant is benchmarked at the filter level), with the
+        // independent rows fanned out over the pool
+        let wanted: Vec<Option<&[i32]>> =
+            prompts.iter().map(|p| Some(p.as_slice())).collect();
+        let firsts = self.prefill_wanted(&wanted);
+        let mut out = vec![0i32; prompts.len()];
+        for (slot, tok) in firsts {
+            out[slot] = tok;
         }
         out
     }
@@ -312,5 +334,24 @@ mod tests {
         let p = vec![vec![2, 4, 6]];
         assert_eq!(e1.prefill(&p), e2.prefill(&p));
         assert_eq!(e1.decode(), e2.decode());
+    }
+
+    #[test]
+    fn pooled_prefill_matches_row_by_row() {
+        // the pooled batch prefill must agree exactly with prefilling each
+        // row on its own (rows are independent by construction)
+        let shape = LmShape::bench("nano").unwrap();
+        let prompts = vec![vec![1, 2, 3, 4], vec![9, 8, 7], vec![5; 6], vec![2, 2]];
+        let mut pooled = RecurrentEngine::new(&shape, 4, 21);
+        let mut serial = RecurrentEngine::new(&shape, 4, 21);
+        let batch_first = pooled.prefill(&prompts);
+        let mut row_first = Vec::new();
+        for (b, p) in prompts.iter().enumerate() {
+            row_first.push(serial.prefill_row(b, p));
+        }
+        assert_eq!(batch_first, row_first);
+        for _ in 0..4 {
+            assert_eq!(pooled.decode(), serial.decode());
+        }
     }
 }

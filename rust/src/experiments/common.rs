@@ -54,6 +54,10 @@ pub fn extract_filters(
 /// Distill every filter of a model to the given order, then zero-pad the
 /// modal systems to `d_state` slots (zero residues are inert) so they fit
 /// the fixed-shape decode artifact.
+///
+/// Every (layer, head) fit is independent and carries its own derived seed,
+/// so the whole bank fans out over [`crate::util::pool::Pool`] with results
+/// identical to the sequential order (row-major over layers then heads).
 pub fn distill_filters(
     filters: &[Vec<Vec<f64>>],
     order: usize,
@@ -61,30 +65,37 @@ pub fn distill_filters(
     iters: usize,
 ) -> (Vec<Vec<ModalSsm>>, Vec<f64>) {
     assert!(order <= d_state, "order {order} exceeds artifact d_state {d_state}");
-    let mut rel_errs = vec![];
-    let systems = filters
+    let jobs: Vec<(usize, usize, &Vec<f64>)> = filters
         .iter()
         .enumerate()
-        .map(|(li, layer)| {
-            layer
-                .iter()
-                .enumerate()
-                .map(|(hi, taps)| {
-                    let cfg = DistillConfig {
-                        order,
-                        iters,
-                        seed: (li * 131 + hi) as u64,
-                        objective: Objective::L2,
-                        restarts: 1,
-                        ..DistillConfig::default()
-                    };
-                    let r = crate::distill::modal_fit::distill_modal(&taps[1..], taps[0], &cfg);
-                    rel_errs.push(r.rel_err);
-                    pad_modal(&r.ssm, d_state)
-                })
-                .collect()
+        .flat_map(|(li, layer)| {
+            layer.iter().enumerate().map(move |(hi, taps)| (li, hi, taps))
         })
         .collect();
+    let results = crate::util::pool::Pool::auto().map(jobs, |(li, hi, taps)| {
+        let cfg = DistillConfig {
+            order,
+            iters,
+            seed: (li * 131 + hi) as u64,
+            objective: Objective::L2,
+            restarts: 1,
+            ..DistillConfig::default()
+        };
+        let r = crate::distill::modal_fit::distill_modal(&taps[1..], taps[0], &cfg);
+        (r.rel_err, pad_modal(&r.ssm, d_state))
+    });
+    let mut rel_errs = Vec::with_capacity(results.len());
+    let mut systems: Vec<Vec<ModalSsm>> = Vec::with_capacity(filters.len());
+    let mut it = results.into_iter();
+    for layer in filters {
+        let mut row = Vec::with_capacity(layer.len());
+        for _ in layer {
+            let (err, sys) = it.next().expect("one result per filter");
+            rel_errs.push(err);
+            row.push(sys);
+        }
+        systems.push(row);
+    }
     (systems, rel_errs)
 }
 

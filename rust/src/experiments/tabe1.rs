@@ -45,9 +45,7 @@ pub fn run(args: &Args) -> anyhow::Result<()> {
                 inputs.push(Value::i32(tok.clone(), &[tr.batch, tr.seq_len]));
                 let out = art.execute(&inputs)?;
                 let logits = out[0].as_f32()?;
-                let v = eval_gen.vocab().next_multiple_of(1).max(1);
                 let vocab = out[0].shape()[2];
-                let _ = v;
                 for (r, (qpos, ans)) in answers.iter().enumerate() {
                     let base = (r * tr.seq_len + qpos) * vocab;
                     let row = &logits[base..base + vocab];

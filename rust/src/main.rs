@@ -1,11 +1,14 @@
 //! `repro` — the Laughing Hyena Distillery launcher.
 //!
 //! Subcommands:
-//!   experiment <id>   regenerate a paper table/figure (or `all`)
-//!   train <tag>       drive an AOT train_step artifact
-//!   distill           distill synthetic or checkpoint filters, report errors
-//!   serve             run the serving coordinator demo
-//!   info              environment and artifact inventory
+//!
+//! ```text
+//! experiment <id>   regenerate a paper table/figure (or 'all')
+//! train <tag>       drive an AOT train_step artifact
+//! distill           distill synthetic or checkpoint filters, report errors
+//! serve             run the serving coordinator demo
+//! info              environment and artifact inventory
+//! ```
 
 use anyhow::Result;
 use laughing_hyena::cli::Args;

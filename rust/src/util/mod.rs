@@ -1,11 +1,14 @@
-//! Small self-contained utilities: PRNG, statistics, property-testing.
+//! Small self-contained utilities: PRNG, statistics, property-testing, and
+//! a scoped thread pool.
 //!
 //! The offline build image ships only the `xla` crate's dependency closure
-//! (no `rand`, no `proptest`, no `criterion`), so these substrates are
-//! implemented in-repo (see DESIGN.md §6 "Substitutions").
+//! (no `rand`, no `proptest`, no `criterion`, no `rayon`), so these
+//! substrates are implemented in-repo (see DESIGN.md §6 "Substitutions").
 
+pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;
 
+pub use pool::Pool;
 pub use prng::Prng;

@@ -1,0 +1,163 @@
+//! Scoped thread pool for embarrassingly parallel fan-out (rayon is not in
+//! the offline crate set; see DESIGN.md §6 "Substitutions").
+//!
+//! The distillery hot path — one independent modal fit per filter of a
+//! multi-head filter bank — and the per-row engine prefill are pure
+//! fan-out: no shared mutable state, results keyed by index. [`Pool::map`]
+//! covers exactly that shape with `std::thread::scope`, so borrowed inputs
+//! (`&self`, `&mut` state rows) flow into workers without `Arc` or cloning.
+//!
+//! Determinism: items are striped round-robin over workers and results are
+//! written back by original index, so `map` returns bit-identical output in
+//! the original order regardless of thread count (tested against the
+//! sequential path in `distill::pipeline`).
+//!
+//! ```
+//! use laughing_hyena::util::pool::Pool;
+//!
+//! let pool = Pool::new(4);
+//! let squares = pool.map((0..8u64).collect::<Vec<_>>(), |x| x * x);
+//! assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+//!
+//! // Pool::auto() sizes itself from the available cores.
+//! assert!(Pool::auto().threads() >= 1);
+//! ```
+
+/// A lightweight scoped thread pool: threads are spawned per [`Pool::map`]
+/// call inside a `std::thread::scope`, so there are no persistent workers,
+/// no channels, and borrowed data can cross into the workers safely.
+#[derive(Clone, Copy, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool with a fixed worker count (clamped to at least 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool sized from `std::thread::available_parallelism` (1 if unknown).
+    pub fn auto() -> Pool {
+        Pool::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    /// Worker count this pool fans out over.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, in parallel, returning results in the
+    /// original item order.
+    ///
+    /// Items are consumed by value so per-item `&mut` state bundles can be
+    /// distributed to workers. With one worker (or zero/one items) this
+    /// degenerates to a plain sequential map on the calling thread — same
+    /// results, same order, no spawn cost.
+    ///
+    /// Panics if a worker panics (the panic message is propagated).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        // stripe round-robin, remembering each item's original index
+        let mut buckets: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            buckets[i % workers].push((i, item));
+        }
+        let f = &f;
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = buckets
+                .into_iter()
+                .map(|bucket| {
+                    scope.spawn(move || {
+                        bucket
+                            .into_iter()
+                            .map(|(i, item)| (i, f(item)))
+                            .collect::<Vec<(usize, R)>>()
+                    })
+                })
+                .collect();
+            for handle in handles {
+                for (i, r) in handle.join().expect("pool worker panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+        out.into_iter()
+            .map(|r| r.expect("every index produces a result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_at_any_thread_count() {
+        let items: Vec<usize> = (0..37).collect();
+        let want: Vec<usize> = items.iter().map(|x| x * 3 + 1).collect();
+        for threads in [1usize, 2, 4, 9, 64] {
+            let got = Pool::new(threads).map(items.clone(), |x| x * 3 + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_item() {
+        let pool = Pool::new(4);
+        let empty: Vec<u32> = vec![];
+        assert_eq!(pool.map(empty, |x| x + 1), Vec::<u32>::new());
+        assert_eq!(pool.map(vec![41u32], |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn workers_receive_mutable_bundles() {
+        // the engine-prefill shape: each item owns &mut into disjoint rows
+        let mut rows = vec![vec![0.0f64; 8]; 5];
+        let jobs: Vec<(usize, &mut Vec<f64>)> = rows.iter_mut().enumerate().collect();
+        let sums = Pool::new(3).map(jobs, |(i, row)| {
+            for (t, x) in row.iter_mut().enumerate() {
+                *x = (i * 10 + t) as f64;
+            }
+            row.iter().sum::<f64>()
+        });
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row[0], (i * 10) as f64);
+            assert!((sums[i] - row.iter().sum::<f64>()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pool_is_deterministic_across_thread_counts() {
+        // same seeded work, different parallelism -> bit-identical floats
+        let items: Vec<u64> = (0..16).collect();
+        let work = |seed: u64| {
+            let mut rng = crate::util::Prng::new(seed);
+            (0..100).map(|_| rng.normal()).sum::<f64>()
+        };
+        let seq = Pool::new(1).map(items.clone(), work);
+        let par = Pool::new(8).map(items, work);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn auto_pool_has_at_least_one_thread() {
+        assert!(Pool::auto().threads() >= 1);
+    }
+}

@@ -11,6 +11,14 @@ pub struct Prng {
 }
 
 impl Prng {
+    /// Generator for the `stream`-th derived substream of `seed`:
+    /// deterministic per (seed, stream) and decorrelated across streams, so
+    /// parallel construction over substreams matches sequential derivation
+    /// at any thread count (used by the pooled engine/backbone setup).
+    pub fn derived(seed: u64, stream: u64) -> Self {
+        Prng::new(seed ^ stream.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
     /// Seed via splitmix64 so nearby seeds give unrelated streams.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;

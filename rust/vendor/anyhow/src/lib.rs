@@ -1,0 +1,205 @@
+//! Minimal, API-compatible subset of the `anyhow` crate.
+//!
+//! The offline build image ships no crates.io registry, so this vendored
+//! shim provides exactly the surface the repository uses:
+//!
+//! * [`Error`] — an opaque error that any `std::error::Error` converts into,
+//!   carrying the full source chain as text;
+//! * [`Result<T>`] with the `Error` default;
+//! * the [`Context`] extension trait for `Result` and `Option`;
+//! * the [`anyhow!`] and [`bail!`] macros.
+//!
+//! Formatting matches anyhow's conventions: `{}` prints the outermost
+//! message, `{:#}` prints the chain joined with `": "`, and `{:?}` prints a
+//! multi-line report with a `Caused by:` section.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error: a message plus the stringified source chain.
+pub struct Error {
+    msg: String,
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    /// Push `context` in front of the current message (the anyhow
+    /// `.context()` semantics: newest context is the outermost message).
+    fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        let inner = std::mem::replace(&mut self.msg, context.to_string());
+        self.chain.insert(0, inner);
+        self
+    }
+
+    /// The stringified error chain, outermost first (message excluded).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that keeps this blanket conversion coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let msg = e.to_string();
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg, chain }
+    }
+}
+
+/// Extension trait attaching context to `Result` and `Option` errors.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily computed context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_keeps_message() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing file");
+    }
+
+    #[test]
+    fn context_wraps_outermost() {
+        let r: Result<()> = Err(io_err()).context("opening config");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("nothing here");
+        assert_eq!(r.unwrap_err().to_string(), "nothing here");
+        let ok: Result<i32> = Some(3).context("unused");
+        assert_eq!(ok.unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(n: usize) -> Result<()> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("unlucky {n}");
+            }
+            Ok(())
+        }
+        assert!(fails(2).is_ok());
+        assert_eq!(fails(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(fails(11).unwrap_err().to_string(), "n too big: 11");
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+}
