@@ -1,9 +1,22 @@
-# CI-style entry points. `make verify` is the tier-1 gate.
+# CI-style entry points. `make verify` is the tier-1 gate; `make help`
+# lists everything.
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify doc bench artifacts clean
+.PHONY: help build test verify ci doc bench artifacts clean
+
+help:
+	@echo "targets:"
+	@echo "  build      cargo build --release"
+	@echo "  test       cargo test -q"
+	@echo "  verify     tier-1 gate: build + test"
+	@echo "  ci         full gate: build + test + docs with warnings denied"
+	@echo "  doc        cargo doc --no-deps"
+	@echo "  bench      all bench suites (distillation, substrates,"
+	@echo "             generation, coordinator, session)"
+	@echo "  artifacts  lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
+	@echo "  clean      cargo clean + remove results/"
 
 build:
 	$(CARGO) build --release
@@ -14,6 +27,12 @@ test:
 # tier-1 gate: build + full test suite
 verify: build test
 
+# full CI chain: tier-1 plus rustdoc with warnings denied
+ci:
+	$(CARGO) build --release
+	$(CARGO) test -q
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
 doc:
 	$(CARGO) doc --no-deps
 
@@ -22,6 +41,7 @@ bench:
 	$(CARGO) bench --bench substrates
 	$(CARGO) bench --bench generation
 	$(CARGO) bench --bench coordinator
+	$(CARGO) bench --bench session
 
 # Lower the L2 graphs to HLO artifacts under rust/artifacts/ (needs JAX).
 artifacts:

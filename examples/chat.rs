@@ -1,0 +1,129 @@
+//! Multi-turn chat over the session subsystem: each turn resumes the
+//! conversation's O(1) recurrence state from the coordinator's LRU session
+//! store instead of re-prefilling the growing transcript — the serving win
+//! the paper's constant-state claim (Lemma 2.2) buys.
+//!
+//!     cargo run --release --example chat -- [n_sessions] [n_turns]
+//!
+//! Runs `n_sessions` scripted conversations of `n_turns` turns each on the
+//! native recurrent engine, then replays the same conversations through
+//! plain one-shot requests (re-prefilling the transcript every turn) and
+//! prints the latency and prefill-work comparison.  It also asserts the
+//! core invariant live: resumed turns produce exactly the tokens the
+//! uninterrupted transcript produces.
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::{spawn, CoordinatorHandle, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::util::Prng;
+
+fn coordinator(slots: usize) -> CoordinatorHandle {
+    spawn(
+        move || {
+            let shape = LmShape::bench("nano").unwrap();
+            Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
+        },
+        ServeConfig { max_batch: slots, linger_ms: 1, ..ServeConfig::default() },
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_sessions: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let n_turns: usize =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+    let max_new = 12;
+    let mut rng = Prng::new(7);
+    // scripted user turns: [session][turn] -> delta tokens
+    let scripts: Vec<Vec<Vec<i32>>> = (0..n_sessions)
+        .map(|_| {
+            (0..n_turns)
+                .map(|_| (0..6 + rng.below(10)).map(|_| rng.below(64) as i32).collect())
+                .collect()
+        })
+        .collect();
+
+    // --- session path: submit only each turn's delta -------------------
+    let h = coordinator(4);
+    let mut transcripts: Vec<Vec<i32>> = vec![vec![]; n_sessions];
+    let mut session_wall = vec![0.0f64; n_turns];
+    for t in 0..n_turns {
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_sessions)
+            .map(|s| {
+                h.submit_in_session(s as u64, scripts[s][t].clone(), max_new)
+                    .expect("coordinator alive")
+            })
+            .collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv()?;
+            transcripts[s].extend(&scripts[s][t]);
+            transcripts[s].extend(&r.tokens);
+            println!(
+                "session {s} turn {t}: {} new tokens in, {} out, e2e {:>6.1}ms",
+                scripts[s][t].len(),
+                r.tokens.len(),
+                r.total_s * 1e3
+            );
+        }
+        session_wall[t] = t0.elapsed().as_secs_f64();
+    }
+    println!("\nsession metrics:  {}\n", h.metrics.report());
+
+    // --- invariant check: last turn == uninterrupted generation --------
+    let s0_prefix_len =
+        transcripts[0].len() - max_new.min(transcripts[0].len());
+    let uninterrupted = h
+        .submit(transcripts[0][..s0_prefix_len].to_vec(), max_new)
+        .expect("coordinator alive")
+        .recv()?;
+    assert_eq!(
+        &transcripts[0][s0_prefix_len..],
+        &uninterrupted.tokens[..],
+        "resumed session diverged from uninterrupted generation"
+    );
+    println!("invariant ok: resumed turns == uninterrupted transcript generation");
+    let session_metrics = h.metrics.snapshot();
+    h.shutdown();
+
+    // --- baseline path: re-prefill the whole transcript every turn -----
+    let h2 = coordinator(4);
+    let mut base_transcripts: Vec<Vec<i32>> = vec![vec![]; n_sessions];
+    let mut baseline_wall = vec![0.0f64; n_turns];
+    for t in 0..n_turns {
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_sessions)
+            .map(|s| {
+                let mut full = base_transcripts[s].clone();
+                full.extend(&scripts[s][t]);
+                h2.submit(full, max_new).expect("coordinator alive")
+            })
+            .collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv()?;
+            base_transcripts[s].extend(&scripts[s][t]);
+            base_transcripts[s].extend(&r.tokens);
+        }
+        baseline_wall[t] = t0.elapsed().as_secs_f64();
+    }
+    h2.shutdown();
+    assert_eq!(transcripts, base_transcripts, "paths must agree token-for-token");
+
+    println!("\nper-turn wall clock, resume vs re-prefill:");
+    for t in 0..n_turns {
+        println!(
+            "  turn {t}: resume {:>7.1}ms | re-prefill {:>7.1}ms | speedup {:.2}x",
+            session_wall[t] * 1e3,
+            baseline_wall[t] * 1e3,
+            baseline_wall[t] / session_wall[t].max(1e-9)
+        );
+    }
+    println!(
+        "\nprefill tokens saved by sessions: {} (hits {}, misses {})",
+        session_metrics.prefill_tokens_saved,
+        session_metrics.session_hits,
+        session_metrics.session_misses
+    );
+    Ok(())
+}

@@ -30,7 +30,13 @@ fn main() -> anyhow::Result<()> {
             );
             Box::new(PjrtSlotEngine::new(lm)) as Box<dyn SlotEngine>
         },
-        ServeConfig { max_batch: 4, linger_ms: 2, max_new_tokens: max_new, mem_budget: 1 << 30 },
+        ServeConfig {
+            max_batch: 4,
+            linger_ms: 2,
+            max_new_tokens: max_new,
+            mem_budget: 1 << 30,
+            ..ServeConfig::default()
+        },
     );
 
     let mut rng = Prng::new(3);
@@ -39,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         .map(|_| {
             let len = 4 + rng.below(12);
             let prompt: Vec<i32> = (0..len).map(|_| rng.below(64) as i32).collect();
-            handle.submit(prompt, max_new)
+            handle.submit(prompt, max_new).expect("coordinator alive")
         })
         .collect();
     for rx in rxs {

@@ -23,11 +23,12 @@ fn main() {
                 linger_ms: 1,
                 max_new_tokens: max_new,
                 mem_budget: 1 << 30,
+                ..ServeConfig::default()
             },
         );
         let t0 = std::time::Instant::now();
         let rxs: Vec<_> = (0..n_req)
-            .map(|i| handle.submit(vec![1 + (i % 32) as i32; 24], max_new))
+            .map(|i| handle.submit(vec![1 + (i % 32) as i32; 24], max_new).expect("alive"))
             .collect();
         for rx in rxs {
             rx.recv().expect("response");
@@ -72,11 +73,18 @@ fn main() {
     }
     let handle = spawn(
         || Box::new(NullEngine { slots: 8 }) as Box<dyn SlotEngine>,
-        ServeConfig { max_batch: 8, linger_ms: 0, max_new_tokens: 64, mem_budget: 1 << 30 },
+        ServeConfig {
+            max_batch: 8,
+            linger_ms: 0,
+            max_new_tokens: 64,
+            mem_budget: 1 << 30,
+            ..ServeConfig::default()
+        },
     );
     let n_req = 200;
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_req).map(|_| handle.submit(vec![1; 4], 64)).collect();
+    let rxs: Vec<_> =
+        (0..n_req).map(|_| handle.submit(vec![1; 4], 64).expect("alive")).collect();
     for rx in rxs {
         rx.recv().expect("response");
     }

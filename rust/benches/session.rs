@@ -1,0 +1,109 @@
+//! Session subsystem benchmarks: what does resuming a stored O(1) state
+//! buy over re-prefilling the transcript, and what does a snapshot cost?
+//!
+//! The paper's Lemma 2.2 makes the per-sequence state constant in t; this
+//! bench turns that into the serving numbers that motivate the session
+//! store: per-turn latency of `submit_in_session` (restore + feed delta)
+//! vs one-shot re-prefill of the growing transcript, the prefill tokens the
+//! store saves, and snapshot blob sizes for the recurrent engine vs the
+//! KV-cached Transformer baseline.
+
+use laughing_hyena::benchkit::{fmt_bytes, fmt_time, Table};
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::{spawn, CoordinatorHandle, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::transformer::TransformerEngine;
+use laughing_hyena::engine::LmShape;
+
+fn coordinator(slots: usize) -> CoordinatorHandle {
+    spawn(
+        move || {
+            let shape = LmShape::bench("nano").unwrap();
+            Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
+        },
+        ServeConfig { max_batch: slots, linger_ms: 1, ..ServeConfig::default() },
+    )
+}
+
+fn main() {
+    let max_new = 8usize;
+    let delta_len = 8usize;
+
+    // --- resume vs re-prefill turn latency over a growing transcript ---
+    let mut table = Table::new(&[
+        "turns", "transcript", "resume/turn", "reprefill/turn", "speedup", "saved tok",
+    ]);
+    for n_turns in [4usize, 8, 16] {
+        let deltas: Vec<Vec<i32>> =
+            (0..n_turns).map(|t| vec![1 + (t % 32) as i32; delta_len]).collect();
+
+        // session path: delta-only turns against the stored state
+        let h = coordinator(2);
+        let t0 = std::time::Instant::now();
+        let mut transcript_len = 0usize;
+        for d in &deltas {
+            let r = h
+                .submit_in_session(1, d.clone(), max_new)
+                .expect("alive")
+                .recv()
+                .expect("turn");
+            transcript_len += d.len() + r.tokens.len();
+        }
+        let resume_s = t0.elapsed().as_secs_f64() / n_turns as f64;
+        let m = h.metrics.snapshot();
+        let saved = m.prefill_tokens_saved;
+        h.shutdown();
+
+        // baseline: re-prefill the full transcript every turn
+        let h = coordinator(2);
+        let mut transcript: Vec<i32> = vec![];
+        let t0 = std::time::Instant::now();
+        for d in &deltas {
+            transcript.extend_from_slice(d);
+            let r = h.submit(transcript.clone(), max_new).expect("alive").recv().expect("turn");
+            transcript.extend_from_slice(&r.tokens);
+        }
+        let reprefill_s = t0.elapsed().as_secs_f64() / n_turns as f64;
+        h.shutdown();
+
+        table.row(&[
+            n_turns.to_string(),
+            transcript_len.to_string(),
+            fmt_time(resume_s),
+            fmt_time(reprefill_s),
+            format!("{:.2}x", reprefill_s / resume_s.max(1e-12)),
+            saved.to_string(),
+        ]);
+    }
+    table.print("session resume vs transcript re-prefill (nano, 8-token turns)");
+    let _ = table.write_csv("bench_session.csv");
+
+    // --- snapshot blob size + cost: O(1) recurrent vs O(t) KV ----------
+    let shape = LmShape::bench("nano").unwrap();
+    let mut table = Table::new(&[
+        "transcript", "recurrent blob", "kv blob", "snapshot", "restore",
+    ]);
+    for t_len in [64usize, 256, 1024] {
+        let prompt: Vec<i32> = (0..t_len).map(|i| (i % 50) as i32).collect();
+        let mut rec = RecurrentEngine::new(&shape, 1, 5);
+        rec.prefill_row(0, &prompt);
+        let mut tr = TransformerEngine::new(&shape, 1, 5);
+        tr.prefill_row(0, &prompt);
+        let t0 = std::time::Instant::now();
+        let snap = rec.snapshot_slot(0).expect("supported");
+        let snap_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        rec.restore_slot(0, &snap).expect("restore");
+        let restore_s = t0.elapsed().as_secs_f64();
+        let kv = tr.snapshot_slot(0).expect("supported");
+        table.row(&[
+            t_len.to_string(),
+            fmt_bytes(snap.state_bytes()),
+            fmt_bytes(kv.state_bytes()),
+            fmt_time(snap_s),
+            fmt_time(restore_s),
+        ]);
+    }
+    table.print("snapshot blob size: constant recurrent state vs growing KV cache");
+    let _ = table.write_csv("bench_session_blobs.csv");
+}

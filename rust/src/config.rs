@@ -174,6 +174,12 @@ pub struct ServeConfig {
     pub max_new_tokens: usize,
     /// Device memory budget for the admission ledger (bytes).
     pub mem_budget: u64,
+    /// RAM budget for the multi-turn session store (bytes); LRU sessions
+    /// beyond it are evicted (to `session_spill_dir` when set).
+    pub session_budget: u64,
+    /// Directory evicted session states spill to (None = drop on evict and
+    /// re-prefill the transcript on the next turn).
+    pub session_spill_dir: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -183,6 +189,8 @@ impl Default for ServeConfig {
             linger_ms: 2,
             max_new_tokens: 64,
             mem_budget: 2 << 30,
+            session_budget: 256 << 20,
+            session_spill_dir: None,
         }
     }
 }
@@ -195,6 +203,13 @@ impl ServeConfig {
             linger_ms: raw.get_usize("serve", "linger_ms", d.linger_ms as usize) as u64,
             max_new_tokens: raw.get_usize("serve", "max_new_tokens", d.max_new_tokens),
             mem_budget: raw.get_usize("serve", "mem_budget", d.mem_budget as usize) as u64,
+            session_budget: raw
+                .get_usize("serve", "session_budget", d.session_budget as usize)
+                as u64,
+            session_spill_dir: raw
+                .get("serve", "session_spill_dir")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
         }
     }
 }
@@ -216,6 +231,19 @@ mod tests {
         assert_eq!(mc.vocab, 64); // from tiny preset
         let sc = ServeConfig::from_raw(&raw);
         assert_eq!(sc.linger_ms, 7);
+        assert_eq!(sc.session_budget, 256 << 20); // default survives
+        assert_eq!(sc.session_spill_dir, None);
+    }
+
+    #[test]
+    fn parses_session_settings() {
+        let raw = RawConfig::parse(
+            "[serve]\nsession_budget = 1024\nsession_spill_dir = \"/tmp/spill\"\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_raw(&raw);
+        assert_eq!(sc.session_budget, 1024);
+        assert_eq!(sc.session_spill_dir.as_deref(), Some("/tmp/spill"));
     }
 
     #[test]

@@ -25,6 +25,14 @@ impl Slot {
     pub fn is_free(&self) -> bool {
         matches!(self, Slot::Free)
     }
+
+    /// Session id of the occupying request, if any.
+    pub fn session(&self) -> Option<u64> {
+        match self {
+            Slot::Free => None,
+            Slot::Busy { req, .. } => req.session,
+        }
+    }
 }
 
 /// FIFO admission queue with a memory ledger.
@@ -67,16 +75,23 @@ impl Batcher {
 
     /// Admit queued requests into free slots, respecting the memory budget.
     /// Returns (slot, prompt) pairs that need prefilling.
+    ///
+    /// Turns of one session must serialize: a request whose session id is
+    /// already occupying a slot stays queued (a pipelined second turn would
+    /// otherwise resume from a transcript missing the first turn's output).
+    /// Such a held-back request does not head-of-line block the rest of the
+    /// queue; everything else drains strictly FIFO.
     pub fn admit(&mut self) -> Vec<(usize, Vec<i32>)> {
         let mut admitted = vec![];
         for slot_idx in self.free_slots() {
-            if self.queue.is_empty() {
-                break;
-            }
-            if self.mem_used + self.bytes_per_seq > self.mem_budget {
+            if self.ledger_blocked() {
                 break; // ledger full: leave requests queued
             }
-            let req = self.queue.pop_front().unwrap();
+            let pos = self.queue.iter().position(|r| self.admissible(r));
+            let req = match pos.and_then(|p| self.queue.remove(p)) {
+                Some(req) => req,
+                None => break, // nothing admissible right now
+            };
             let prompt = req.prompt.clone();
             self.slots[slot_idx] =
                 Slot::Busy { req, generated: vec![], first_token_s: None };
@@ -84,6 +99,36 @@ impl Batcher {
             admitted.push((slot_idx, prompt));
         }
         admitted
+    }
+
+    /// Whether the byte ledger refuses another sequence.  One sequence is
+    /// always allowed through an empty ledger (minimum progress) — a
+    /// `bytes_per_seq` larger than the whole budget must not hang every
+    /// request forever.  Shared by [`Batcher::admit`] and
+    /// [`Batcher::has_admissible`].
+    fn ledger_blocked(&self) -> bool {
+        self.mem_used + self.bytes_per_seq > self.mem_budget && self.mem_used > 0
+    }
+
+    /// Whether a request may enter a slot right now: turns of a session
+    /// already occupying a slot must wait for it to retire.  The single
+    /// predicate behind both [`Batcher::admit`] and
+    /// [`Batcher::has_admissible`].
+    fn admissible(&self, r: &GenRequest) -> bool {
+        match r.session {
+            None => true,
+            Some(id) => !self.slots.iter().any(|s| s.session() == Some(id)),
+        }
+    }
+
+    /// Whether any queued request could enter a free slot right now — the
+    /// server lingers for batch formation only while this holds (a queue of
+    /// ledger-blocked or held-back session turns must not stall decoding).
+    pub fn has_admissible(&self) -> bool {
+        if self.free_slots().is_empty() || self.ledger_blocked() {
+            return false;
+        }
+        self.queue.iter().any(|r| self.admissible(r))
     }
 
     /// Release a slot and return its request + generated tokens.
@@ -113,6 +158,7 @@ mod tests {
                 id,
                 prompt: vec![1; len],
                 max_new_tokens: 4,
+                session: None,
                 reply: tx,
                 enqueued: Instant::now(),
             },
@@ -196,5 +242,132 @@ mod tests {
     fn release_free_slot_is_none() {
         let mut b = Batcher::new(1, 10, 100);
         assert!(b.release(0).is_none());
+    }
+
+    #[test]
+    fn admission_blocked_exactly_at_byte_budget() {
+        // budget holds exactly two sequences; a third must stay queued even
+        // though a slot is free
+        let mut b = Batcher::new(3, 500, 1000);
+        let mut rxs = vec![];
+        for i in 0..3 {
+            let (r, rx) = req(i, 2);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        let admitted = b.admit();
+        assert_eq!(admitted.len(), 2);
+        assert_eq!(b.mem_used, 1000);
+        assert_eq!(b.queue_len(), 1);
+        assert_eq!(b.free_slots().len(), 1, "slot free but ledger full");
+        // re-admit without releasing: still blocked
+        assert!(b.admit().is_empty());
+    }
+
+    #[test]
+    fn mem_used_returns_to_zero_after_full_release() {
+        let mut b = Batcher::new(4, 250, 1000);
+        let mut rxs = vec![];
+        for i in 0..4 {
+            let (r, rx) = req(i, 2);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        assert_eq!(b.admit().len(), 4);
+        assert_eq!(b.mem_used, 1000);
+        for slot in b.busy_slots() {
+            b.release(slot);
+        }
+        assert_eq!(b.mem_used, 0);
+        assert!(b.busy_slots().is_empty());
+    }
+
+    #[test]
+    fn queue_order_preserved_under_partial_admission() {
+        // five requests, two slots: admission must drain strictly FIFO
+        // across several partial admission rounds
+        let mut b = Batcher::new(2, 100, 10_000);
+        let mut rxs = vec![];
+        for i in 0..5 {
+            let (r, rx) = req(i, 2);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        let mut admitted_ids = vec![];
+        loop {
+            let round = b.admit();
+            if round.is_empty() && b.queue_len() == 0 {
+                break;
+            }
+            for (slot, _) in &round {
+                if let Slot::Busy { req, .. } = &b.slots[*slot] {
+                    admitted_ids.push(req.id);
+                }
+            }
+            for (slot, _) in &round {
+                b.release(*slot);
+            }
+        }
+        assert_eq!(admitted_ids, vec![0, 1, 2, 3, 4], "FIFO order broken");
+    }
+
+    #[test]
+    fn oversized_sequence_still_makes_progress_one_at_a_time() {
+        // bytes_per_seq larger than the whole budget must not deadlock:
+        // exactly one sequence runs at a time
+        let mut b = Batcher::new(2, 5000, 1000);
+        let mut rxs = vec![];
+        for i in 0..2 {
+            let (r, rx) = req(i, 2);
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        assert!(b.has_admissible());
+        assert_eq!(b.admit().len(), 1, "minimum-progress admission");
+        assert!(!b.has_admissible(), "second must wait for the first");
+        assert!(b.admit().is_empty());
+        let slot = b.busy_slots()[0];
+        b.release(slot);
+        assert_eq!(b.admit().len(), 1);
+    }
+
+    #[test]
+    fn same_session_turns_serialize_without_blocking_others() {
+        // two queued turns of session 9 + one one-shot, three free slots:
+        // only the first turn of 9 may enter; the one-shot must not be
+        // head-of-line blocked behind the held-back second turn
+        let mut b = Batcher::new(3, 10, 1000);
+        for (i, sess) in [(0u64, Some(9)), (1, Some(9)), (2, None)] {
+            let (mut r, _rx) = req(i, 2);
+            r.session = sess;
+            b.enqueue(r);
+        }
+        let admitted = b.admit();
+        assert_eq!(admitted.len(), 2, "turn 1 of session 9 + the one-shot");
+        assert_eq!(b.queue_len(), 1, "turn 2 of session 9 held back");
+        let sessions: Vec<_> =
+            b.busy_slots().iter().map(|&s| b.slots[s].session()).collect();
+        assert_eq!(sessions.iter().filter(|s| **s == Some(9)).count(), 1);
+        // retire session 9's first turn -> its second turn becomes admissible
+        let slot9 = b
+            .busy_slots()
+            .into_iter()
+            .find(|&s| b.slots[s].session() == Some(9))
+            .unwrap();
+        b.release(slot9);
+        let next = b.admit();
+        assert_eq!(next.len(), 1);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn slot_session_accessor() {
+        let (mut r, _rx) = req(1, 2);
+        r.session = Some(77);
+        let mut b = Batcher::new(1, 10, 100);
+        assert_eq!(b.slots[0].session(), None);
+        b.enqueue(r);
+        b.admit();
+        assert_eq!(b.slots[0].session(), Some(77));
     }
 }

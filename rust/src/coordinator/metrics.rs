@@ -14,6 +14,19 @@ pub struct MetricsInner {
     pub ttft_s: Vec<f64>,
     pub total_s: Vec<f64>,
     pub queue_peak: usize,
+    /// Session turns resumed from a stored state (no transcript re-prefill).
+    pub session_hits: u64,
+    /// Session turns whose state was gone (evicted, unspilled) and had to
+    /// re-prefill the full transcript.
+    pub session_misses: u64,
+    /// Prefill tokens skipped by resuming instead of re-prefilling.
+    pub prefill_tokens_saved: u64,
+    /// Bytes currently resident in the session store (gauge).
+    pub session_bytes_held: u64,
+    /// Session-store evictions so far (gauge, mirrors the store).
+    pub session_evictions: u64,
+    /// Evictions persisted to the spill directory (gauge).
+    pub session_spills: u64,
 }
 
 /// Shared metrics handle.
@@ -38,6 +51,27 @@ impl Metrics {
         m.tokens_generated += tokens as u64;
     }
 
+    /// A session turn resumed from a stored state; `tokens_saved` is the
+    /// transcript prefill it skipped.
+    pub fn record_session_hit(&self, tokens_saved: u64) {
+        let mut m = self.0.lock().unwrap();
+        m.session_hits += 1;
+        m.prefill_tokens_saved += tokens_saved;
+    }
+
+    pub fn record_session_miss(&self) {
+        let mut m = self.0.lock().unwrap();
+        m.session_misses += 1;
+    }
+
+    /// Mirror the session store's gauges after a snapshot/eviction.
+    pub fn set_session_store(&self, bytes_held: u64, evictions: u64, spills: u64) {
+        let mut m = self.0.lock().unwrap();
+        m.session_bytes_held = bytes_held;
+        m.session_evictions = evictions;
+        m.session_spills = spills;
+    }
+
     pub fn record_done(&self, ttft: Option<f64>, total: f64) {
         let mut m = self.0.lock().unwrap();
         m.requests_done += 1;
@@ -58,13 +92,19 @@ impl Metrics {
             ttft_s: m.ttft_s.clone(),
             total_s: m.total_s.clone(),
             queue_peak: m.queue_peak,
+            session_hits: m.session_hits,
+            session_misses: m.session_misses,
+            prefill_tokens_saved: m.prefill_tokens_saved,
+            session_bytes_held: m.session_bytes_held,
+            session_evictions: m.session_evictions,
+            session_spills: m.session_spills,
         }
     }
 
     pub fn report(&self) -> String {
         let m = self.snapshot();
         let p = |v: &Vec<f64>, q| crate::util::stats::percentile(v, q);
-        format!(
+        let mut line = format!(
             "requests {}/{} | tokens {} | prefills {} | decode steps {} | \
              ttft p50 {:.1}ms p99 {:.1}ms | e2e p50 {:.1}ms p99 {:.1}ms | queue peak {}",
             m.requests_done,
@@ -77,7 +117,20 @@ impl Metrics {
             p(&m.total_s, 50.0) * 1e3,
             p(&m.total_s, 99.0) * 1e3,
             m.queue_peak
-        )
+        );
+        if m.session_hits + m.session_misses > 0 || m.session_bytes_held > 0 {
+            line.push_str(&format!(
+                " | sessions hit/miss {}/{} | prefill tokens saved {} | \
+                 session bytes {} (evictions {}, spills {})",
+                m.session_hits,
+                m.session_misses,
+                m.prefill_tokens_saved,
+                m.session_bytes_held,
+                m.session_evictions,
+                m.session_spills
+            ));
+        }
+        line
     }
 }
 
@@ -99,5 +152,26 @@ mod tests {
         assert_eq!(s.tokens_generated, 8);
         assert_eq!(s.requests_done, 1);
         assert!(m.report().contains("requests 1/2"));
+        // no session traffic -> no session segment in the report
+        assert!(!m.report().contains("sessions hit/miss"));
+    }
+
+    #[test]
+    fn session_counters_accumulate_and_report() {
+        let m = Metrics::default();
+        m.record_session_hit(120);
+        m.record_session_hit(80);
+        m.record_session_miss();
+        m.set_session_store(4096, 3, 2);
+        let s = m.snapshot();
+        assert_eq!(s.session_hits, 2);
+        assert_eq!(s.session_misses, 1);
+        assert_eq!(s.prefill_tokens_saved, 200);
+        assert_eq!(s.session_bytes_held, 4096);
+        assert_eq!(s.session_evictions, 3);
+        assert_eq!(s.session_spills, 2);
+        let r = m.report();
+        assert!(r.contains("sessions hit/miss 2/1"), "{r}");
+        assert!(r.contains("prefill tokens saved 200"), "{r}");
     }
 }

@@ -13,4 +13,4 @@ pub mod server;
 pub mod state;
 
 pub use request::{GenRequest, GenResponse};
-pub use server::{CoordinatorHandle, SlotEngine};
+pub use server::{CoordinatorClosed, CoordinatorHandle, SlotEngine};

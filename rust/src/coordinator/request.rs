@@ -6,8 +6,13 @@ use std::time::Instant;
 /// A generation request submitted to the coordinator.
 pub struct GenRequest {
     pub id: u64,
+    /// Tokens to consume this turn.  For a session request this is only the
+    /// *delta* (the new turn's tokens) — the coordinator owns the
+    /// transcript and either resumes the stored state or re-prefills it.
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Multi-turn session this request belongs to (None = one-shot).
+    pub session: Option<u64>,
     /// Channel the finished response is delivered on.
     pub reply: Sender<GenResponse>,
     /// Enqueue timestamp (for latency accounting).

@@ -1,8 +1,20 @@
 //! The coordinator event loop: a dedicated engine thread running continuous
 //! batching over the slot engine, fed by an mpsc request channel.
+//!
+//! Multi-turn sessions: `submit_in_session` tags a request with a session
+//! id.  At retire the slot's O(1) recurrence state is snapshotted into the
+//! LRU [`Store`]; the next turn restores it into a free slot and feeds only
+//! the new tokens — skipping the re-prefill of the whole transcript while
+//! producing bit-identical tokens to one uninterrupted generation (the
+//! engine feeds the same token sequence through the same per-token path).
+//! If the state was evicted (and not spilled), the coordinator falls back
+//! to re-prefilling the transcript it keeps per session, so eviction can
+//! never change tokens — only latency.
 
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -12,11 +24,27 @@ use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
 pub use super::state::SlotEngine;
 use crate::config::ServeConfig;
+use crate::session::{Store, StoreConfig};
 
 enum Msg {
     Req(GenRequest),
+    /// Drop a session's stored state and transcript.
+    End(u64),
     Shutdown,
 }
+
+/// The engine thread is gone (shut down, or its construction panicked), so
+/// the request could not be submitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoordinatorClosed;
+
+impl std::fmt::Display for CoordinatorClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "coordinator engine thread has exited")
+    }
+}
+
+impl std::error::Error for CoordinatorClosed {}
 
 /// Client handle: submit prompts, read metrics, shut down.
 pub struct CoordinatorHandle {
@@ -27,18 +55,62 @@ pub struct CoordinatorHandle {
 }
 
 impl CoordinatorHandle {
-    /// Submit a generation request; returns the response receiver.
-    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize) -> Receiver<GenResponse> {
+    /// Submit a one-shot generation request; returns the response receiver,
+    /// or [`CoordinatorClosed`] if the engine thread has exited.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
+        self.submit_opt(None, prompt, max_new_tokens)
+    }
+
+    /// Submit one turn of a multi-turn session.  `tokens` is only this
+    /// turn's new tokens; the coordinator resumes the session's stored
+    /// recurrence state (or re-prefills its transcript on a store miss).
+    ///
+    /// Pipelining is safe: turns of one session serialize inside the
+    /// batcher — a second turn submitted before the first's reply stays
+    /// queued until the first retires, so it always sees the full
+    /// transcript.
+    pub fn submit_in_session(
+        &self,
+        session_id: u64,
+        tokens: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
+        self.submit_opt(Some(session_id), tokens, max_new_tokens)
+    }
+
+    fn submit_opt(
+        &self,
+        session: Option<u64>,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
         let (tx, rx) = channel();
         let req = GenRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             prompt,
-            max_new_tokens,
+            // a 0-token generation is meaningless and would leave a session
+            // snapshot whose pending token is absent from the transcript —
+            // every request produces at least the prefill token
+            max_new_tokens: max_new_tokens.max(1),
+            session,
             reply: tx,
             enqueued: Instant::now(),
         };
-        self.tx.send(Msg::Req(req)).expect("coordinator alive");
-        rx
+        self.tx.send(Msg::Req(req)).map_err(|_| CoordinatorClosed)?;
+        Ok(rx)
+    }
+
+    /// Drop a session's stored state and transcript (RAM and spill), so
+    /// long-running coordinators do not accumulate dead conversations.
+    /// Takes effect once the session is quiescent: if a turn is still
+    /// queued or in flight, the end is deferred until its last turn
+    /// retires, so in-flight turns always see the full transcript.
+    pub fn end_session(&self, session_id: u64) -> Result<(), CoordinatorClosed> {
+        self.tx.send(Msg::End(session_id)).map_err(|_| CoordinatorClosed)
     }
 
     /// Stop the engine thread after draining in-flight work.
@@ -59,6 +131,65 @@ impl Drop for CoordinatorHandle {
     }
 }
 
+/// Record a slot's first generated token (prefill or session resume).
+fn record_first_token(batcher: &mut Batcher, slot: usize, tok: i32) {
+    if let Slot::Busy { req, generated, first_token_s } = &mut batcher.slots[slot] {
+        generated.push(tok);
+        *first_token_s = Some(req.enqueued.elapsed().as_secs_f64());
+    }
+}
+
+/// Mutable scheduler state the intake path updates (grouped so the three
+/// intake sites — idle block, fast drain, linger wait — share one handler).
+struct Sched {
+    batcher: Batcher,
+    store: Store,
+    /// Per-session token transcript (prompt + generated, every turn): the
+    /// correctness fallback when a state was evicted without spill.
+    history: HashMap<u64, Vec<i32>>,
+    /// Sessions whose `end_session` arrived while a turn was queued or in
+    /// flight; freed when their last turn retires.
+    pending_end: HashSet<u64>,
+    shutdown: bool,
+}
+
+impl Sched {
+    /// Whether any turn of this session is queued or occupying a slot.
+    fn session_in_flight(&self, id: u64) -> bool {
+        self.batcher.slots.iter().any(|s| s.session() == Some(id))
+            || self.batcher.queue.iter().any(|r| r.session == Some(id))
+    }
+
+    /// Drop a session's transcript and stored state (RAM and spill).
+    fn free_session(&mut self, id: u64, m: &Metrics) {
+        self.history.remove(&id);
+        self.store.evict_session(id);
+        m.set_session_store(
+            self.store.bytes_used(),
+            self.store.stats.evictions,
+            self.store.stats.spills,
+        );
+    }
+
+    /// Apply one channel message (the single intake site).
+    fn apply_msg(&mut self, msg: Msg, m: &Metrics) {
+        match msg {
+            Msg::Req(r) => {
+                m.record_enqueue(self.batcher.queue_len() + 1);
+                self.batcher.enqueue(r);
+            }
+            Msg::End(id) => {
+                if self.session_in_flight(id) {
+                    self.pending_end.insert(id);
+                } else {
+                    self.free_session(id, m);
+                }
+            }
+            Msg::Shutdown => self.shutdown = true,
+        }
+    }
+}
+
 /// Spawn the coordinator.  The engine is built *inside* the engine thread
 /// via `make_engine` because PJRT executables are not `Send`.
 pub fn spawn<F>(make_engine: F, cfg: ServeConfig) -> CoordinatorHandle
@@ -71,82 +202,177 @@ where
     let join = std::thread::spawn(move || {
         let mut engine = make_engine();
         let n_slots = engine.n_slots();
-        let mut batcher = Batcher::new(n_slots, engine.bytes_per_seq(), cfg.mem_budget);
-        let mut shutdown = false;
+        let mut s = Sched {
+            batcher: Batcher::new(n_slots, engine.bytes_per_seq(), cfg.mem_budget),
+            store: Store::new(StoreConfig {
+                budget_bytes: cfg.session_budget,
+                spill_dir: cfg.session_spill_dir.as_ref().map(PathBuf::from),
+            }),
+            history: HashMap::new(),
+            pending_end: HashSet::new(),
+            shutdown: false,
+        };
         loop {
-            // 1) intake: drain quickly; block briefly when idle
-            let idle = batcher.busy_slots().is_empty() && batcher.queue_len() == 0;
-            if idle && !shutdown {
+            // 1) intake: block briefly when there is nothing to run — no
+            // busy slots and nothing admissible (an empty queue, or one
+            // holding only ledger-blocked / held-back session turns)
+            let idle = s.batcher.busy_slots().is_empty() && !s.batcher.has_admissible();
+            if idle && !s.shutdown {
                 match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(Msg::Req(r)) => {
-                        m.record_enqueue(batcher.queue_len() + 1);
-                        batcher.enqueue(r);
-                    }
-                    Ok(Msg::Shutdown) => shutdown = true,
+                    Ok(msg) => s.apply_msg(msg, &m),
                     Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => shutdown = true,
+                    Err(RecvTimeoutError::Disconnected) => s.shutdown = true,
                 }
             }
-            // opportunistic linger for batch formation
-            let linger = Instant::now();
-            loop {
+            // 1b) fast drain + opportunistic linger for batch formation:
+            // while an admissible request is queued and slots remain free,
+            // block on the channel up to the linger deadline (hoping to
+            // batch more arrivals) instead of spinning a core.  A queue of
+            // only unadmissible requests must NOT linger — that would stall
+            // every decode step of the active generations.
+            let deadline = Instant::now() + Duration::from_millis(cfg.linger_ms);
+            while !s.shutdown {
                 match rx.try_recv() {
-                    Ok(Msg::Req(r)) => {
-                        m.record_enqueue(batcher.queue_len() + 1);
-                        batcher.enqueue(r);
+                    Ok(msg) => {
+                        s.apply_msg(msg, &m);
+                        continue;
                     }
-                    Ok(Msg::Shutdown) => {
-                        shutdown = true;
+                    Err(TryRecvError::Disconnected) => {
+                        s.shutdown = true;
                         break;
                     }
-                    Err(_) => {
-                        if batcher.queue_len() == 0
-                            || batcher.free_slots().is_empty()
-                            || linger.elapsed() > Duration::from_millis(cfg.linger_ms)
-                        {
-                            break;
-                        }
-                        std::thread::yield_now();
+                    Err(TryRecvError::Empty) => {}
+                }
+                if !s.batcher.has_admissible() {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(msg) => s.apply_msg(msg, &m),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        s.shutdown = true;
+                        break;
                     }
                 }
             }
-            if shutdown && batcher.busy_slots().is_empty() && batcher.queue_len() == 0 {
+            if s.shutdown && s.batcher.busy_slots().is_empty() && s.batcher.queue_len() == 0 {
                 break;
             }
-            // 2) admission + prefill
-            let jobs = batcher.admit();
-            if !jobs.is_empty() {
-                m.record_prefill(jobs.len());
-                let firsts = engine.prefill_slots(&jobs);
-                for (slot, tok) in firsts {
-                    if let Slot::Busy { req, generated, first_token_s } =
-                        &mut batcher.slots[slot]
-                    {
-                        generated.push(tok);
-                        *first_token_s = Some(req.enqueued.elapsed().as_secs_f64());
+            // 2) admission: session turns with a stored state resume in
+            // O(delta); everything else (one-shots, first turns, store
+            // misses) goes through prefill
+            let admitted = s.batcher.admit();
+            if !admitted.is_empty() {
+                let mut prefill_jobs: Vec<(usize, Vec<i32>)> = Vec::new();
+                let mut resume_jobs: Vec<(usize, Vec<i32>)> = Vec::new();
+                for (slot, delta) in admitted {
+                    let id = match s.batcher.slots[slot].session() {
+                        Some(id) => id,
+                        None => {
+                            prefill_jobs.push((slot, delta));
+                            continue;
+                        }
+                    };
+                    if let Some(state) = s.store.take(id) {
+                        if engine.restore_slot(slot, &state).is_ok() {
+                            // resume: replay the pending greedy token, then
+                            // only this turn's new tokens
+                            let mut feed = Vec::with_capacity(delta.len() + 1);
+                            feed.push(state.last_token);
+                            feed.extend_from_slice(&delta);
+                            m.record_session_hit(state.tokens_seen);
+                            resume_jobs.push((slot, feed));
+                            continue;
+                        }
+                        // unusable blob (wrong engine/shape): fall through
+                    }
+                    // no usable state: re-prefill the transcript — slower,
+                    // never wrong (a first turn has an empty transcript and
+                    // is not a miss)
+                    if s.history.contains_key(&id) {
+                        m.record_session_miss();
+                    }
+                    let mut full = s.history.get(&id).cloned().unwrap_or_default();
+                    full.extend_from_slice(&delta);
+                    prefill_jobs.push((slot, full));
+                }
+                m.set_session_store(
+                    s.store.bytes_used(),
+                    s.store.stats.evictions,
+                    s.store.stats.spills,
+                );
+                if !resume_jobs.is_empty() {
+                    // restored rows are independent: one pooled feed call
+                    for (slot, tok) in engine.feed_slots(&resume_jobs) {
+                        record_first_token(&mut s.batcher, slot, tok);
+                    }
+                }
+                if !prefill_jobs.is_empty() {
+                    m.record_prefill(prefill_jobs.len());
+                    let firsts = engine.prefill_slots(&prefill_jobs);
+                    for (slot, tok) in firsts {
+                        record_first_token(&mut s.batcher, slot, tok);
                     }
                 }
             }
-            // 3) decode step over active slots
-            let active = batcher.busy_slots();
+            // 3) decode step over active slots that still owe tokens (slots
+            // at their budget must not advance: their state would drift past
+            // the transcript and break session snapshots)
+            let active: Vec<usize> = s
+                .batcher
+                .busy_slots()
+                .into_iter()
+                .filter(|&sl| match &s.batcher.slots[sl] {
+                    Slot::Busy { req, generated, .. } => generated.len() < req.max_new_tokens,
+                    Slot::Free => false,
+                })
+                .collect();
             if !active.is_empty() {
                 let toks = engine.decode_slots(&active);
                 m.record_decode(toks.len());
                 for (slot, tok) in toks {
-                    if let Slot::Busy { generated, .. } = &mut batcher.slots[slot] {
+                    if let Slot::Busy { generated, .. } = &mut s.batcher.slots[slot] {
                         generated.push(tok);
                     }
                 }
             }
-            // 4) retire finished sequences
-            for slot in batcher.busy_slots() {
-                let done = match &batcher.slots[slot] {
+            // 4) retire finished sequences (snapshot session state first)
+            for slot in s.batcher.busy_slots() {
+                let done = match &s.batcher.slots[slot] {
                     Slot::Busy { req, generated, .. } => generated.len() >= req.max_new_tokens,
                     Slot::Free => false,
                 };
                 if done {
-                    if let Some((req, mut generated, ttft)) = batcher.release(slot) {
+                    if let Some((req, mut generated, ttft)) = s.batcher.release(slot) {
                         generated.truncate(req.max_new_tokens);
+                        if let Some(id) = req.session {
+                            if s.pending_end.contains(&id) && !s.session_in_flight(id) {
+                                // deferred end_session: the last turn just
+                                // retired, drop the transcript and state
+                                s.pending_end.remove(&id);
+                                s.free_session(id, &m);
+                            } else {
+                                let h = s.history.entry(id).or_default();
+                                h.extend_from_slice(&req.prompt);
+                                h.extend_from_slice(&generated);
+                                let h_len = h.len();
+                                if let Some(mut st) = engine.snapshot_slot(slot) {
+                                    // the state has consumed everything
+                                    // except the final pending greedy token
+                                    st.tokens_seen = h_len.saturating_sub(1) as u64;
+                                    s.store.put(id, st);
+                                }
+                                m.set_session_store(
+                                    s.store.bytes_used(),
+                                    s.store.stats.evictions,
+                                    s.store.stats.spills,
+                                );
+                            }
+                        }
                         let total = req.enqueued.elapsed().as_secs_f64();
                         m.record_done(ttft, total);
                         let _ = req.reply.send(GenResponse {
@@ -170,20 +396,34 @@ mod tests {
     use crate::engine::recurrent::RecurrentEngine;
     use crate::engine::LmShape;
 
-    fn handle(slots: usize) -> CoordinatorHandle {
+    fn cfg(slots: usize) -> ServeConfig {
+        ServeConfig {
+            max_batch: slots,
+            linger_ms: 1,
+            max_new_tokens: 8,
+            mem_budget: 1 << 30,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn handle_cfg(slots: usize, cfg: ServeConfig) -> CoordinatorHandle {
         spawn(
             move || {
                 let shape = LmShape::bench("nano").unwrap();
                 Box::new(RecurrentEngine::new(&shape, slots, 11)) as Box<dyn SlotEngine>
             },
-            ServeConfig { max_batch: slots, linger_ms: 1, max_new_tokens: 8, mem_budget: 1 << 30 },
+            cfg,
         )
+    }
+
+    fn handle(slots: usize) -> CoordinatorHandle {
+        handle_cfg(slots, cfg(slots))
     }
 
     #[test]
     fn serves_a_single_request() {
         let h = handle(2);
-        let rx = h.submit(vec![1, 2, 3], 5);
+        let rx = h.submit(vec![1, 2, 3], 5).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(resp.tokens.len(), 5);
         assert!(resp.ttft_s <= resp.total_s);
@@ -193,7 +433,7 @@ mod tests {
     #[test]
     fn serves_more_requests_than_slots() {
         let h = handle(2);
-        let rxs: Vec<_> = (0..6).map(|i| h.submit(vec![1 + i, 2, 3], 4)).collect();
+        let rxs: Vec<_> = (0..6).map(|i| h.submit(vec![1 + i, 2, 3], 4).unwrap()).collect();
         let mut ids = vec![];
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
@@ -212,13 +452,190 @@ mod tests {
     fn identical_prompts_get_identical_tokens_regardless_of_batching() {
         // continuous batching must not leak state across slots
         let h = handle(3);
-        let a = h.submit(vec![5, 6, 7], 6).recv_timeout(Duration::from_secs(30)).unwrap();
+        let a = h
+            .submit(vec![5, 6, 7], 6)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
         // now saturate and resubmit the same prompt
-        let rxs: Vec<_> = (0..5).map(|_| h.submit(vec![5, 6, 7], 6)).collect();
+        let rxs: Vec<_> = (0..5).map(|_| h.submit(vec![5, 6, 7], 6).unwrap()).collect();
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert_eq!(r.tokens, a.tokens, "determinism across batch layouts");
         }
+        h.shutdown();
+    }
+
+    #[test]
+    fn submit_returns_err_when_engine_thread_is_gone() {
+        // an engine whose construction panics kills the thread; submit must
+        // surface CoordinatorClosed instead of panicking the caller
+        let h = spawn(|| panic!("engine construction failed (test)"), cfg(1));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match h.submit(vec![1, 2], 2) {
+                Err(CoordinatorClosed) => break,
+                Ok(_) => {
+                    assert!(Instant::now() < deadline, "submit kept succeeding");
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        assert!(h.submit_in_session(1, vec![1], 1).is_err());
+        // shutdown of a dead coordinator must not panic either
+        h.shutdown();
+    }
+
+    /// Drive one session turn to completion.
+    fn turn(h: &CoordinatorHandle, sid: u64, delta: Vec<i32>, max_new: usize) -> Vec<i32> {
+        h.submit_in_session(sid, delta, max_new)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .tokens
+    }
+
+    /// The acceptance invariant: a conversation split across 3+ session
+    /// turns — with eviction pressure forcing a spill/restore cycle — must
+    /// produce bit-identical tokens to the same transcript generated in
+    /// single uninterrupted requests.
+    #[test]
+    fn session_turns_bit_identical_to_uninterrupted_with_spill_cycle() {
+        // budget fits exactly ONE nano session state, so interleaving two
+        // sessions forces every stored state through disk
+        let shape = LmShape::bench("nano").unwrap();
+        let one_state = RecurrentEngine::new(&shape, 1, 11).snapshot_row(0).state_bytes();
+        let spill = std::env::temp_dir()
+            .join(format!("lh_sess_spill_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&spill);
+        let h = handle_cfg(
+            2,
+            ServeConfig {
+                session_budget: one_state,
+                session_spill_dir: Some(spill.to_string_lossy().into_owned()),
+                ..cfg(2)
+            },
+        );
+        let (d1, d2, d3) = (vec![3, 1, 4, 1, 5], vec![9, 2, 6], vec![5, 3, 5]);
+        let (n1, n2, n3) = (4usize, 3usize, 5usize);
+        // session A turn 1, then session B turn 1 (evicts A's state to disk)
+        let g1 = turn(&h, 0xA, d1.clone(), n1);
+        assert_eq!(g1.len(), n1);
+        let _other = turn(&h, 0xB, vec![7, 7, 7, 7, 7, 7], 4);
+        // A turn 2 restores from disk; B's state now takes the RAM slot
+        let g2 = turn(&h, 0xA, d2.clone(), n2);
+        let _other = turn(&h, 0xB, vec![8, 8], 3);
+        let g3 = turn(&h, 0xA, d3.clone(), n3);
+        // uninterrupted equivalents over the growing transcript
+        let mut t2 = d1.clone();
+        t2.extend(&g1);
+        t2.extend(&d2);
+        let mut t3 = t2.clone();
+        t3.extend(&g2);
+        t3.extend(&d3);
+        let u2 = h
+            .submit(t2, n2)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .tokens;
+        let u3 = h
+            .submit(t3, n3)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .tokens;
+        assert_eq!(g2, u2, "turn 2 != uninterrupted generation");
+        assert_eq!(g3, u3, "turn 3 != uninterrupted generation");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.session_misses, 0, "spill must make eviction lossless");
+        assert!(m.session_hits >= 2, "turns 2 and 3 must resume, got {}", m.session_hits);
+        assert!(m.session_spills >= 1, "eviction pressure must have spilled");
+        assert!(
+            m.prefill_tokens_saved as usize >= d1.len() + n1,
+            "resume must skip the transcript prefill (saved {})",
+            m.prefill_tokens_saved
+        );
+        h.shutdown();
+        let _ = std::fs::remove_dir_all(&spill);
+    }
+
+    #[test]
+    fn evicted_session_without_spill_reprefills_identically() {
+        // zero store budget + no spill: every turn is a miss, and the
+        // transcript fallback must still produce the exact same tokens
+        let h_sess = handle_cfg(2, ServeConfig { session_budget: 0, ..cfg(2) });
+        let h_ref = handle_cfg(
+            2,
+            ServeConfig { session_budget: 256 << 20, ..cfg(2) },
+        );
+        let (d1, d2, d3) = (vec![2, 7, 1, 8], vec![2, 8], vec![1, 8, 2, 8]);
+        let mut toks_sess = vec![];
+        let mut toks_ref = vec![];
+        for (d, n) in [(d1, 3usize), (d2, 4), (d3, 3)] {
+            toks_sess.push(turn(&h_sess, 5, d.clone(), n));
+            toks_ref.push(turn(&h_ref, 5, d, n));
+        }
+        assert_eq!(toks_sess, toks_ref, "miss fallback changed tokens");
+        let m = h_sess.metrics.snapshot();
+        assert_eq!(m.session_hits, 0);
+        assert_eq!(m.session_misses, 2, "turns 2 and 3 missed");
+        assert_eq!(h_ref.metrics.snapshot().session_hits, 2);
+        h_sess.shutdown();
+        h_ref.shutdown();
+    }
+
+    #[test]
+    fn pipelined_session_turns_serialize_and_match_awaited() {
+        // both turns submitted before either reply is read: the batcher
+        // must hold turn 2 back until turn 1 retires, so the result is
+        // identical to awaiting each turn
+        let h = handle(2);
+        let r1 = h.submit_in_session(7, vec![4, 2, 4], 3).unwrap();
+        let r2 = h.submit_in_session(7, vec![6, 1], 3).unwrap();
+        let g1 = r1.recv_timeout(Duration::from_secs(60)).unwrap().tokens;
+        let g2 = r2.recv_timeout(Duration::from_secs(60)).unwrap().tokens;
+        let h2 = handle(2);
+        let a1 = turn(&h2, 7, vec![4, 2, 4], 3);
+        let a2 = turn(&h2, 7, vec![6, 1], 3);
+        assert_eq!(g1, a1, "pipelined turn 1 diverged");
+        assert_eq!(g2, a2, "pipelined turn 2 resumed a stale transcript");
+        assert_eq!(h.metrics.snapshot().session_misses, 0);
+        h.shutdown();
+        h2.shutdown();
+    }
+
+    #[test]
+    fn end_session_frees_state_and_transcript() {
+        let h = handle(2);
+        let g1 = turn(&h, 3, vec![1, 2, 3], 4);
+        h.end_session(3).unwrap();
+        // channel is FIFO: the End is processed before the next turn
+        let g2 = turn(&h, 3, vec![1, 2, 3], 4);
+        assert_eq!(g1, g2, "an ended session must behave like a fresh one");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.session_hits, 0, "turn after end must not resume");
+        assert_eq!(m.session_misses, 0, "turn after end is a first turn, not a miss");
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_sessions_do_not_cross_contaminate() {
+        // two sessions with identical transcripts, interleaved with noise:
+        // both must see identical tokens at every turn
+        let h = handle(3);
+        let mut a = vec![];
+        let mut b = vec![];
+        for i in 0..3 {
+            let delta = vec![4 + i, 2, 9];
+            let ra = h.submit_in_session(100, delta.clone(), 4).unwrap();
+            let noise = h.submit(vec![13, 13, 13], 6).unwrap();
+            let rb = h.submit_in_session(200, delta, 4).unwrap();
+            a.push(ra.recv_timeout(Duration::from_secs(60)).unwrap().tokens);
+            b.push(rb.recv_timeout(Duration::from_secs(60)).unwrap().tokens);
+            let _ = noise.recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        assert_eq!(a, b, "sessions with equal transcripts diverged");
         h.shutdown();
     }
 }

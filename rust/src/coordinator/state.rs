@@ -1,15 +1,24 @@
 //! Slot-engine abstraction: the coordinator schedules over `B` fixed slots
-//! whose per-sequence state the engine owns.  Two implementations:
-//! the native [`crate::engine::recurrent::RecurrentEngine`] and the PJRT
-//! [`crate::runtime::lm::ServedModel`] (AOT artifacts).
+//! whose per-sequence state the engine owns.  Three implementations:
+//! the native [`crate::engine::recurrent::RecurrentEngine`], the
+//! KV-cached [`crate::engine::transformer::TransformerEngine`] baseline,
+//! and the PJRT [`crate::runtime::lm::ServedModel`] (AOT artifacts).
 
 use crate::engine::recurrent::RecurrentEngine;
-use crate::runtime::lm::ServedModel;
+use crate::engine::transformer::TransformerEngine;
+use crate::runtime::lm::{RowState, ServedModel};
+use crate::session::{SessionError, SessionState};
 
 /// What the scheduler needs from a generation backend.
 ///
 /// Not `Send`: PJRT executables hold `Rc` internals, so the coordinator
 /// constructs its engine *inside* the engine thread (see `server::spawn`).
+///
+/// The session methods (`snapshot_slot` / `restore_slot` / `feed_slot`)
+/// are the O(1)-state checkpoint/resume surface: default implementations
+/// report "unsupported" so simple engines still work — the coordinator
+/// then falls back to re-prefilling the transcript for session turns.  An
+/// engine that overrides `restore_slot` MUST also override `feed_slot`.
 pub trait SlotEngine {
     fn n_slots(&self) -> usize;
     /// Per-sequence state bytes (for the admission ledger).
@@ -19,6 +28,36 @@ pub trait SlotEngine {
     /// One decode step over the given active slots; returns (slot, token).
     fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)>;
     fn clear_slot(&mut self, slot: usize);
+
+    /// Tag stamped into snapshots; restore refuses blobs from other tags.
+    fn state_tag(&self) -> &'static str {
+        "unsupported"
+    }
+
+    /// Extract a slot's full generation state as a versioned blob, or
+    /// `None` when the engine cannot snapshot.
+    fn snapshot_slot(&self, _slot: usize) -> Option<SessionState> {
+        None
+    }
+
+    /// Reinstall a snapshot into a slot, validating tag and shape.
+    fn restore_slot(&mut self, _slot: usize, _state: &SessionState) -> Result<(), SessionError> {
+        Err(SessionError::Unsupported)
+    }
+
+    /// Feed tokens through an already-populated slot *without* resetting
+    /// it; returns the greedy token after the last fed token.  Only called
+    /// after a successful `restore_slot`.
+    fn feed_slot(&mut self, _slot: usize, _tokens: &[i32]) -> i32 {
+        unimplemented!("engine overrides restore_slot but not feed_slot")
+    }
+
+    /// Feed several restored slots in one call — engines with independent
+    /// rows override this with a pooled fan-out (the batched session-resume
+    /// hot path); the default loops [`SlotEngine::feed_slot`].
+    fn feed_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        jobs.iter().map(|(s, t)| (*s, self.feed_slot(*s, t))).collect()
+    }
 }
 
 impl SlotEngine for RecurrentEngine {
@@ -42,9 +81,78 @@ impl SlotEngine for RecurrentEngine {
     fn clear_slot(&mut self, slot: usize) {
         self.reset_row(slot);
     }
+
+    fn state_tag(&self) -> &'static str {
+        crate::engine::recurrent::STATE_TAG
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Option<SessionState> {
+        Some(self.snapshot_row(slot))
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SessionState) -> Result<(), SessionError> {
+        self.restore_row(slot, state)
+    }
+
+    fn feed_slot(&mut self, slot: usize, tokens: &[i32]) -> i32 {
+        self.feed_row(slot, tokens)
+    }
+
+    fn feed_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        // rows are independent: fan the resumed turns out across cores
+        self.feed_rows(jobs)
+    }
 }
 
 use crate::engine::Engine as _;
+
+/// The Transformer baseline as a slot engine: sessions still *work* (the
+/// coordinator snapshots the KV cache), but the blob is O(t) — the contrast
+/// with the recurrent engine's constant-size state that the session bench
+/// measures.
+impl SlotEngine for TransformerEngine {
+    fn n_slots(&self) -> usize {
+        self.batch()
+    }
+
+    fn bytes_per_seq(&self) -> u64 {
+        // the ledger wants a per-sequence constant; charge the worst case —
+        // a full-context KV cache (the honest admission cost of Lemma 2.3)
+        let s = self.shape();
+        crate::engine::memory::kv_cache_bytes(s, s.seq_len, crate::engine::memory::F32)
+    }
+
+    fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        jobs.iter().map(|(s, p)| (*s, self.prefill_row(*s, p))).collect()
+    }
+
+    fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+        active.iter().map(|&s| (s, self.decode_row(s))).collect()
+    }
+
+    fn clear_slot(&mut self, slot: usize) {
+        self.reset_row(slot);
+    }
+
+    fn state_tag(&self) -> &'static str {
+        crate::engine::transformer::STATE_TAG
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Option<SessionState> {
+        Some(self.snapshot_row(slot))
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SessionState) -> Result<(), SessionError> {
+        self.restore_row(slot, state)
+    }
+
+    fn feed_slot(&mut self, slot: usize, tokens: &[i32]) -> i32 {
+        self.feed_row(slot, tokens)
+    }
+}
+
+/// Engine tag for PJRT-served snapshots.
+pub const PJRT_STATE_TAG: &str = "pjrt-multihyena";
 
 /// PJRT-backed slot engine: the decode artifact runs the *whole* fixed
 /// batch each step (inactive slots carry dummy state — the padding cost of
@@ -52,11 +160,21 @@ use crate::engine::Engine as _;
 /// refreshed rows of the jobs while restoring untouched busy rows.
 pub struct PjrtSlotEngine {
     pub lm: ServedModel,
+    /// Rows currently owned by a request (prefilled or restored, not yet
+    /// cleared) — decode must shield these when they are not active, while
+    /// free rows may drift (they are reset by the next prefill anyway).
+    occupied: Vec<bool>,
 }
 
 impl PjrtSlotEngine {
     pub fn new(lm: ServedModel) -> PjrtSlotEngine {
-        PjrtSlotEngine { lm }
+        let n = lm.shape.batch;
+        PjrtSlotEngine { lm, occupied: vec![false; n] }
+    }
+
+    fn row_lens(&self) -> (usize, usize) {
+        let s = &self.lm.shape;
+        (s.n_layer * s.d_model * s.d_state, s.n_layer * s.sc_width * s.sc_tail)
     }
 }
 
@@ -83,16 +201,76 @@ impl SlotEngine for PjrtSlotEngine {
         for (s, row) in &saved {
             self.lm.restore_row(*s, row);
         }
+        for (slot, _) in jobs {
+            self.occupied[*slot] = true;
+        }
         jobs.iter().map(|(s, _)| (*s, first[*s])).collect()
     }
 
     fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+        // the decode artifact steps the whole fixed batch; occupied rows
+        // NOT in `active` (busy-at-budget awaiting a session snapshot) must
+        // not drift past their transcript, so shield them — free rows may
+        // drift, the next prefill resets them
+        let b = self.lm.shape.batch;
+        let saved: Vec<_> = (0..b)
+            .filter(|&s| self.occupied[s] && !active.contains(&s))
+            .map(|s| (s, self.lm.save_row(s)))
+            .collect();
         let toks = self.lm.decode_step().expect("decode");
+        for (s, row) in &saved {
+            self.lm.restore_row(*s, row);
+        }
         active.iter().map(|&s| (s, toks[s])).collect()
     }
 
     fn clear_slot(&mut self, slot: usize) {
         self.lm.clear_row(slot);
+        self.occupied[slot] = false;
+    }
+
+    fn state_tag(&self) -> &'static str {
+        PJRT_STATE_TAG
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Option<SessionState> {
+        let row = self.lm.save_row(slot);
+        let mut st = SessionState::new(PJRT_STATE_TAG, row.last);
+        st.push_plane("x_re", row.x_re);
+        st.push_plane("x_im", row.x_im);
+        st.push_plane("sc", row.sc);
+        Some(st)
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SessionState) -> Result<(), SessionError> {
+        state.check_engine(PJRT_STATE_TAG)?;
+        let (x_len, sc_len) = self.row_lens();
+        let row = RowState {
+            x_re: state.plane_checked("x_re", x_len)?.to_vec(),
+            x_im: state.plane_checked("x_im", x_len)?.to_vec(),
+            sc: state.plane_checked("sc", sc_len)?.to_vec(),
+            last: state.last_token,
+        };
+        self.lm.restore_row(slot, &row);
+        self.occupied[slot] = true;
+        Ok(())
+    }
+
+    fn feed_slot(&mut self, slot: usize, tokens: &[i32]) -> i32 {
+        // the decode artifact steps the whole fixed batch, so shield the
+        // other rows while this slot consumes its resumed tokens
+        let b = self.lm.shape.batch;
+        let saved: Vec<_> =
+            (0..b).filter(|&s| s != slot).map(|s| (s, self.lm.save_row(s))).collect();
+        for &tok in tokens {
+            self.lm.last_tokens[slot] = tok;
+            let _ = self.lm.decode_step().expect("decode");
+        }
+        let next = self.lm.last_tokens[slot];
+        for (s, row) in &saved {
+            self.lm.restore_row(*s, row);
+        }
+        next
     }
 }
 
@@ -127,5 +305,52 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(a.decode_row(0), b.decode_row(0));
         }
+    }
+
+    #[test]
+    fn slot_engine_session_surface_roundtrips() {
+        // the trait-level snapshot/restore path both engines share
+        let shape = LmShape::bench("nano").unwrap();
+        for eng in [
+            Box::new(RecurrentEngine::new(&shape, 2, 5)) as Box<dyn SlotEngine>,
+            Box::new(TransformerEngine::new(&shape, 2, 5)) as Box<dyn SlotEngine>,
+        ] {
+            let mut eng = eng;
+            eng.prefill_slots(&[(0, vec![9, 8, 7, 6])]);
+            let snap = eng.snapshot_slot(0).expect("supported");
+            assert_eq!(snap.engine, eng.state_tag());
+            let a: Vec<_> = (0..4).map(|_| eng.decode_slots(&[0])[0].1).collect();
+            eng.clear_slot(0);
+            eng.restore_slot(0, &snap).unwrap();
+            let first = eng.feed_slot(0, &[snap.last_token]);
+            assert_eq!(first, a[0], "resume replays the pending token");
+            for i in 1..4 {
+                assert_eq!(eng.decode_slots(&[0])[0].1, a[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn default_session_surface_reports_unsupported() {
+        struct Null;
+        impl SlotEngine for Null {
+            fn n_slots(&self) -> usize {
+                1
+            }
+            fn bytes_per_seq(&self) -> u64 {
+                1
+            }
+            fn prefill_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+                jobs.iter().map(|(s, _)| (*s, 0)).collect()
+            }
+            fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+                active.iter().map(|&s| (s, 0)).collect()
+            }
+            fn clear_slot(&mut self, _slot: usize) {}
+        }
+        let mut n = Null;
+        assert!(n.snapshot_slot(0).is_none());
+        let st = SessionState::new("x", 0);
+        assert!(matches!(n.restore_slot(0, &st), Err(SessionError::Unsupported)));
     }
 }

@@ -10,9 +10,13 @@ use super::backbone::Backbone;
 use super::shapes::LmShape;
 use super::Engine;
 use crate::dsp::C64;
+use crate::session::{SessionError, SessionState};
 use crate::ssm::ModalSsm;
 use crate::util::pool::Pool;
 use crate::util::Prng;
+
+/// Engine tag stamped into [`SessionState`] snapshots.
+pub const STATE_TAG: &str = "laughing-hyena";
 
 /// Per-head modal parameters, broadcast over the head's channels.
 struct HeadModal {
@@ -112,6 +116,23 @@ impl RecurrentEngine {
     /// Shared pooled prefill core: rows with a `Some(prompt)` entry are
     /// reset and consumed in parallel (each row owns disjoint state).
     fn prefill_wanted(&mut self, wanted: &[Option<&[i32]>]) -> Vec<(usize, i32)> {
+        self.run_wanted(wanted, true)
+    }
+
+    /// Feed several (slot, tokens) jobs *without* resetting the rows,
+    /// fanned out over the pool — the coordinator's batched session-resume
+    /// hot path (same per-row math as [`RecurrentEngine::feed_row`]).
+    pub fn feed_rows(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        let mut wanted: Vec<Option<&[i32]>> = vec![None; self.batch];
+        for (slot, tokens) in jobs {
+            wanted[*slot] = Some(tokens.as_slice());
+        }
+        self.run_wanted(&wanted, false)
+    }
+
+    /// Pooled multi-row token ingestion; `reset` distinguishes prefill
+    /// (fresh rows) from session resume (continue from restored state).
+    fn run_wanted(&mut self, wanted: &[Option<&[i32]>], reset: bool) -> Vec<(usize, i32)> {
         let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let group = d / bb.shape.heads;
@@ -129,15 +150,11 @@ impl RecurrentEngine {
             })
             .collect();
         Pool::auto().map(rows, |(b, xr, xi, sc_b, last_b, prompt)| {
-            reset_row_bufs(xr, xi, sc_b);
-            let mut logits = vec![0.0f32; bb.shape.vocab];
-            for &tok in prompt {
-                logits = bb.decode_one(tok, |li, qkv| {
-                    mix_one(d, kw, group, ds, &modal[li], &mut sc_b[li],
-                            &mut xr[li], &mut xi[li], qkv)
-                });
+            if reset {
+                reset_row_bufs(xr, xi, sc_b);
             }
-            let next = bb.greedy(&logits);
+            let fallback = if reset { 0 } else { *last_b };
+            let next = consume_row(bb, modal, d, kw, group, ds, sc_b, xr, xi, prompt, fallback);
             *last_b = next;
             (b, next)
         })
@@ -145,18 +162,65 @@ impl RecurrentEngine {
 
     /// One decode step for a single row.
     pub fn decode_row(&mut self, b: usize) -> i32 {
+        let tok = self.last[b];
+        self.feed_row(b, &[tok])
+    }
+
+    /// Feed tokens through one row *without* resetting it — the session
+    /// resume hook.  Starting from a restored snapshot, feeding the
+    /// snapshot's pending `last_token` followed by the new turn's tokens is
+    /// arithmetically identical to prefilling the whole transcript from
+    /// scratch (same per-token op sequence), which is what makes resumed
+    /// sessions bit-exact.  Returns the greedy token after the last fed
+    /// token (the row's `last` if `tokens` is empty).
+    pub fn feed_row(&mut self, b: usize, tokens: &[i32]) -> i32 {
         let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let group = d / bb.shape.heads;
-        let tok = last[b];
-        let (xr_b, xi_b, sc_b) = (&mut x_re[b], &mut x_im[b], &mut sc[b]);
-        let logits = bb.decode_one(tok, |li, qkv| {
-            mix_one(d, kw, group, *d_state, &modal[li], &mut sc_b[li],
-                    &mut xr_b[li], &mut xi_b[li], qkv)
-        });
-        let next = bb.greedy(&logits);
+        let next = consume_row(
+            bb, modal, d, kw, group, *d_state,
+            &mut sc[b], &mut x_re[b], &mut x_im[b], tokens, last[b],
+        );
         last[b] = next;
         next
+    }
+
+    /// Extract one row's full per-layer SSM + short-conv state as a
+    /// versioned [`SessionState`] blob (O(d) bytes, independent of how many
+    /// tokens the row has consumed — Lemma 2.2 is what makes sessions
+    /// cheap).
+    pub fn snapshot_row(&self, b: usize) -> SessionState {
+        let flat = |layers: &[Vec<f32>]| -> Vec<f32> {
+            layers.iter().flat_map(|l| l.iter().copied()).collect()
+        };
+        let mut st = SessionState::new(STATE_TAG, self.last[b]);
+        st.push_plane("x_re", flat(&self.x_re[b]));
+        st.push_plane("x_im", flat(&self.x_im[b]));
+        st.push_plane("sc", flat(&self.sc[b]));
+        st
+    }
+
+    /// Reinstall a snapshot into one row, validating engine tag and shape.
+    pub fn restore_row(&mut self, b: usize, st: &SessionState) -> Result<(), SessionError> {
+        st.check_engine(STATE_TAG)?;
+        let shape = &self.bb.shape;
+        let x_len = shape.n_layer * shape.d_model * self.d_state;
+        let sc_len = shape.n_layer * 3 * shape.d_model * (shape.short_kw - 1);
+        let x_re = st.plane_checked("x_re", x_len)?;
+        let x_im = st.plane_checked("x_im", x_len)?;
+        let sc = st.plane_checked("sc", sc_len)?;
+        let unflat = |flat: &[f32], layers: &mut [Vec<f32>]| {
+            let mut off = 0;
+            for l in layers {
+                l.copy_from_slice(&flat[off..off + l.len()]);
+                off += l.len();
+            }
+        };
+        unflat(x_re, &mut self.x_re[b]);
+        unflat(x_im, &mut self.x_im[b]);
+        unflat(sc, &mut self.sc[b]);
+        self.last[b] = st.last_token;
+        Ok(())
     }
 
     /// Bytes of generation state one slot costs.
@@ -180,6 +244,36 @@ fn reset_row_bufs(xr: &mut [Vec<f32>], xi: &mut [Vec<f32>], sc: &mut [Vec<f32>])
         xi[l].fill(0.0);
         sc[l].fill(0.0);
     }
+}
+
+/// Feed `tokens` through one row's recurrence (no reset) and return the
+/// greedy token after the last one (`fallback` when `tokens` is empty).
+/// The single per-token path shared by prefill, decode and session resume —
+/// sharing it is what guarantees the three produce identical arithmetic.
+#[allow(clippy::too_many_arguments)]
+fn consume_row(
+    bb: &Backbone,
+    modal: &[Vec<HeadModal>],
+    d: usize,
+    kw: usize,
+    group: usize,
+    ds: usize,
+    sc_b: &mut [Vec<f32>],
+    xr: &mut [Vec<f32>],
+    xi: &mut [Vec<f32>],
+    tokens: &[i32],
+    fallback: i32,
+) -> i32 {
+    if tokens.is_empty() {
+        return fallback;
+    }
+    let mut logits = Vec::new();
+    for &tok in tokens {
+        logits = bb.decode_one(tok, |li, qkv| {
+            mix_one(d, kw, group, ds, &modal[li], &mut sc_b[li], &mut xr[li], &mut xi[li], qkv)
+        });
+    }
+    bb.greedy(&logits)
 }
 
 /// Fused short-conv + gated SSM mixer for one token of one sequence.
@@ -334,6 +428,80 @@ mod tests {
         let p = vec![vec![2, 4, 6]];
         assert_eq!(e1.prefill(&p), e2.prefill(&p));
         assert_eq!(e1.decode(), e2.decode());
+    }
+
+    #[test]
+    fn snapshot_restore_resume_is_bit_identical() {
+        // generate, snapshot mid-stream, keep generating on A; restore the
+        // snapshot into a *different* engine row and replay — every token
+        // must match bit-for-bit.
+        let shape = LmShape::bench("nano").unwrap();
+        let mut a = RecurrentEngine::new(&shape, 2, 13);
+        a.prefill_row(0, &[3, 1, 4, 1, 5]);
+        for _ in 0..3 {
+            a.decode_row(0);
+        }
+        let snap = a.snapshot_row(0);
+        let cont_a: Vec<i32> = (0..6).map(|_| a.decode_row(0)).collect();
+        let mut b = RecurrentEngine::new(&shape, 2, 13);
+        b.restore_row(1, &snap).unwrap();
+        let cont_b: Vec<i32> = (0..6).map(|_| b.decode_row(1)).collect();
+        assert_eq!(cont_a, cont_b);
+    }
+
+    #[test]
+    fn feed_without_reset_matches_fresh_prefill_of_transcript() {
+        // resume semantics: state(prefix) + feed(rest) == prefill(prefix ++ rest)
+        let shape = LmShape::bench("nano").unwrap();
+        let prefix = vec![7, 8, 9, 2];
+        let rest = vec![4, 4, 1];
+        let mut split = RecurrentEngine::new(&shape, 1, 5);
+        split.prefill_row(0, &prefix);
+        let first_split = split.feed_row(0, &rest);
+        let mut whole = RecurrentEngine::new(&shape, 1, 5);
+        let mut full = prefix.clone();
+        full.extend_from_slice(&rest);
+        let first_whole = whole.prefill_row(0, &full);
+        assert_eq!(first_split, first_whole);
+        for _ in 0..5 {
+            assert_eq!(split.decode_row(0), whole.decode_row(0));
+        }
+    }
+
+    #[test]
+    fn pooled_feed_rows_matches_row_by_row() {
+        // the batched session-resume path must agree exactly with feeding
+        // each row on its own
+        let shape = LmShape::bench("nano").unwrap();
+        let mut pooled = RecurrentEngine::new(&shape, 3, 21);
+        let mut serial = RecurrentEngine::new(&shape, 3, 21);
+        for b in 0..3 {
+            pooled.prefill_row(b, &[1 + b as i32, 5, 9]);
+            serial.prefill_row(b, &[1 + b as i32, 5, 9]);
+        }
+        let jobs: Vec<(usize, Vec<i32>)> =
+            (0..3).map(|b| (b, vec![2 + b as i32, 4])).collect();
+        let batch = pooled.feed_rows(&jobs);
+        let mut row_by_row = vec![];
+        for (b, toks) in &jobs {
+            row_by_row.push((*b, serial.feed_row(*b, toks)));
+        }
+        assert_eq!(batch, row_by_row);
+        for _ in 0..3 {
+            assert_eq!(pooled.decode(), serial.decode());
+        }
+    }
+
+    #[test]
+    fn restore_rejects_foreign_and_misshapen_blobs() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = RecurrentEngine::new(&shape, 1, 5);
+        let mut snap = eng.snapshot_row(0);
+        snap.engine = "transformer".into();
+        assert!(eng.restore_row(0, &snap).is_err());
+        let mut snap2 = eng.snapshot_row(0);
+        snap2.planes[0].data.pop();
+        assert!(eng.restore_row(0, &snap2).is_err());
     }
 
     #[test]

@@ -5,6 +5,10 @@
 use super::backbone::Backbone;
 use super::shapes::LmShape;
 use super::Engine;
+use crate::session::{SessionError, SessionState};
+
+/// Engine tag stamped into [`SessionState`] snapshots.
+pub const STATE_TAG: &str = "transformer";
 
 pub struct TransformerEngine {
     bb: Backbone,
@@ -24,6 +28,101 @@ impl TransformerEngine {
             v_cache: vec![vec![Vec::new(); shape.n_layer]; batch],
             last: vec![0; batch],
         }
+    }
+
+    pub fn shape(&self) -> &LmShape {
+        &self.bb.shape
+    }
+
+    /// Clear one row's KV cache (slot recycling).
+    pub fn reset_row(&mut self, b: usize) {
+        for l in 0..self.bb.shape.n_layer {
+            self.k_cache[b][l].clear();
+            self.v_cache[b][l].clear();
+        }
+        self.last[b] = 0;
+    }
+
+    /// Feed tokens through one row without resetting it; returns the greedy
+    /// token after the last fed token (row's `last` if `tokens` is empty).
+    pub fn feed_row(&mut self, b: usize, tokens: &[i32]) -> i32 {
+        if tokens.is_empty() {
+            return self.last[b];
+        }
+        let Self { bb, k_cache, v_cache, last, .. } = self;
+        let (d, nh) = (bb.shape.d_model, bb.shape.attn_heads);
+        let (kc_b, vc_b) = (&mut k_cache[b], &mut v_cache[b]);
+        let mut logits = Vec::new();
+        for &tok in tokens {
+            logits = bb.decode_one(tok, |li, qkv| {
+                mix_attn(d, nh, &mut kc_b[li], &mut vc_b[li], qkv)
+            });
+        }
+        let next = bb.greedy(&logits);
+        last[b] = next;
+        next
+    }
+
+    /// Prefill a single row with a prompt; returns the first greedy token.
+    pub fn prefill_row(&mut self, b: usize, prompt: &[i32]) -> i32 {
+        self.reset_row(b);
+        self.feed_row(b, prompt)
+    }
+
+    /// One decode step for a single row.
+    pub fn decode_row(&mut self, b: usize) -> i32 {
+        let tok = self.last[b];
+        self.feed_row(b, &[tok])
+    }
+
+    /// Snapshot one row's KV cache.  Unlike the recurrent engine this blob
+    /// is O(t) — it grows with everything the row has consumed, which is
+    /// exactly the contrast the paper draws (Lemma 2.2 vs 2.3) and what the
+    /// session bench reports.
+    pub fn snapshot_row(&self, b: usize) -> SessionState {
+        let mut st = SessionState::new(STATE_TAG, self.last[b]);
+        for l in 0..self.bb.shape.n_layer {
+            st.push_plane(&format!("k.{l}"), self.k_cache[b][l].clone());
+            st.push_plane(&format!("v.{l}"), self.v_cache[b][l].clone());
+        }
+        st
+    }
+
+    /// Reinstall a KV snapshot into one row.  Cache lengths vary with the
+    /// consumed transcript, so validation checks layer count and row
+    /// alignment rather than a fixed size.
+    pub fn restore_row(&mut self, b: usize, st: &SessionState) -> Result<(), SessionError> {
+        st.check_engine(STATE_TAG)?;
+        let d = self.bb.shape.d_model;
+        for l in 0..self.bb.shape.n_layer {
+            for prefix in ["k", "v"] {
+                let name = format!("{prefix}.{l}");
+                let p = st
+                    .plane(&name)
+                    .ok_or_else(|| SessionError::MissingPlane { plane: name.clone() })?;
+                if p.len() % d != 0 {
+                    return Err(SessionError::Corrupt(format!(
+                        "plane '{name}' length {} is not a multiple of d_model {d}",
+                        p.len()
+                    )));
+                }
+            }
+        }
+        for l in 0..self.bb.shape.n_layer {
+            self.k_cache[b][l] = st.plane(&format!("k.{l}")).unwrap().to_vec();
+            self.v_cache[b][l] = st.plane(&format!("v.{l}")).unwrap().to_vec();
+        }
+        self.last[b] = st.last_token;
+        Ok(())
+    }
+
+    /// KV bytes one row currently holds.
+    pub fn row_state_bytes(&self, b: usize) -> u64 {
+        let mut total = 0u64;
+        for l in 0..self.bb.shape.n_layer {
+            total += ((self.k_cache[b][l].len() + self.v_cache[b][l].len()) * 4) as u64;
+        }
+        total
     }
 }
 
@@ -81,48 +180,13 @@ impl Engine for TransformerEngine {
 
     fn prefill(&mut self, prompts: &[Vec<i32>]) -> Vec<i32> {
         assert_eq!(prompts.len(), self.batch);
-        for b in 0..self.batch {
-            for l in 0..self.bb.shape.n_layer {
-                self.k_cache[b][l].clear();
-                self.v_cache[b][l].clear();
-            }
-        }
-        let batch = self.batch;
-        let mut out = Vec::with_capacity(batch);
-        let Self { bb, k_cache, v_cache, last, .. } = self;
-        let (d, nh) = (bb.shape.d_model, bb.shape.attn_heads);
-        for b in 0..batch {
-            // token-by-token prompt ingestion: every position attends over
-            // the growing cache — the O(T^2) prefill of Lemma 2.3
-            let mut logits = vec![0.0f32; bb.shape.vocab];
-            let (kc_b, vc_b) = (&mut k_cache[b], &mut v_cache[b]);
-            for &tok in &prompts[b] {
-                logits = bb.decode_one(tok, |li, qkv| {
-                    mix_attn(d, nh, &mut kc_b[li], &mut vc_b[li], qkv)
-                });
-            }
-            let next = bb.greedy(&logits);
-            last[b] = next;
-            out.push(next);
-        }
-        out
+        // token-by-token prompt ingestion: every position attends over
+        // the growing cache — the O(T^2) prefill of Lemma 2.3
+        (0..self.batch).map(|b| self.prefill_row(b, &prompts[b])).collect()
     }
 
     fn decode(&mut self) -> Vec<i32> {
-        let mut out = Vec::with_capacity(self.batch);
-        let Self { bb, k_cache, v_cache, last, .. } = self;
-        let (d, nh) = (bb.shape.d_model, bb.shape.attn_heads);
-        for b in 0..last.len() {
-            let tok = last[b];
-            let (kc_b, vc_b) = (&mut k_cache[b], &mut v_cache[b]);
-            let logits = bb.decode_one(tok, |li, qkv| {
-                mix_attn(d, nh, &mut kc_b[li], &mut vc_b[li], qkv)
-            });
-            let next = bb.greedy(&logits);
-            last[b] = next;
-            out.push(next);
-        }
-        out
+        (0..self.batch).map(|b| self.decode_row(b)).collect()
     }
 
     fn state_bytes(&self) -> u64 {
@@ -180,6 +244,50 @@ mod tests {
         for c in 0..d {
             assert!((y[c] - (2.0 + 4.0 + 1.0) / 3.0).abs() < 1e-5, "{}", y[c]);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_resume_is_bit_identical() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut a = TransformerEngine::new(&shape, 2, 13);
+        a.prefill_row(0, &[3, 1, 4, 1, 5]);
+        for _ in 0..3 {
+            a.decode_row(0);
+        }
+        let snap = a.snapshot_row(0);
+        assert!(snap.state_bytes() > 0);
+        let cont_a: Vec<i32> = (0..5).map(|_| a.decode_row(0)).collect();
+        let mut b = TransformerEngine::new(&shape, 2, 13);
+        b.restore_row(1, &snap).unwrap();
+        let cont_b: Vec<i32> = (0..5).map(|_| b.decode_row(1)).collect();
+        assert_eq!(cont_a, cont_b);
+    }
+
+    #[test]
+    fn snapshot_grows_with_transcript_unlike_recurrent() {
+        // the Lemma 2.2 / 2.3 contrast at the session layer: KV snapshots
+        // grow per consumed token, recurrent snapshots do not
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = TransformerEngine::new(&shape, 1, 3);
+        eng.prefill_row(0, &[1; 4]);
+        let small = eng.snapshot_row(0).state_bytes();
+        eng.feed_row(0, &[2; 16]);
+        let big = eng.snapshot_row(0).state_bytes();
+        assert!(big > small);
+        let mut rec = crate::engine::recurrent::RecurrentEngine::new(&shape, 1, 3);
+        rec.prefill_row(0, &[1; 4]);
+        let r_small = rec.snapshot_row(0).state_bytes();
+        rec.feed_row(0, &[2; 16]);
+        assert_eq!(rec.snapshot_row(0).state_bytes(), r_small, "O(1) state");
+    }
+
+    #[test]
+    fn restore_rejects_foreign_blob() {
+        let shape = LmShape::bench("nano").unwrap();
+        let mut eng = TransformerEngine::new(&shape, 1, 3);
+        let mut snap = eng.snapshot_row(0);
+        snap.engine = "laughing-hyena".into();
+        assert!(eng.restore_row(0, &snap).is_err());
     }
 
     #[test]

@@ -29,5 +29,6 @@ pub mod experiments;
 pub mod hankel;
 pub mod linalg;
 pub mod runtime;
+pub mod session;
 pub mod ssm;
 pub mod util;

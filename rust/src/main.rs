@@ -37,6 +37,8 @@ fn main() {
                  repro train <tag> --steps N     e.g. tag multihyena_small\n\
                  repro distill --order D         distillery over synthetic suites\n\
                  repro serve --requests N        coordinator demo (native engine)\n\
+                 repro serve --sessions N --turns T [--session-budget B --spill-dir D]\n\
+                 \u{20}                               multi-turn session demo (state resume)\n\
                  repro info",
                 experiments::ALL
             );
@@ -108,13 +110,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(p) => RawConfig::load(p)?,
         None => RawConfig::parse("")?,
     };
-    let serve_cfg = ServeConfig::from_raw(&raw);
+    let mut serve_cfg = ServeConfig::from_raw(&raw);
     let _model_cfg = ModelConfig::from_raw(&raw);
+    if let Some(dir) = args.get("spill-dir") {
+        serve_cfg.session_spill_dir = Some(dir.to_string());
+    }
+    serve_cfg.session_budget =
+        args.get_u64("session-budget", serve_cfg.session_budget);
     let n_requests = args.get_usize("requests", 16);
     let slots = args.get_usize("slots", serve_cfg.max_batch);
     let shape_name = args.get("shape").unwrap_or("nano").to_string();
     let max_new = args.get_usize("tokens", serve_cfg.max_new_tokens.min(16));
-    println!("coordinator demo: {n_requests} requests over {slots} slots (shape {shape_name})");
+    let n_sessions = args.get_usize("sessions", 0);
     let handle = spawn(
         move || {
             let shape = LmShape::bench(&shape_name).expect("shape");
@@ -123,26 +130,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         serve_cfg,
     );
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|i| handle.submit(vec![1 + (i % 32) as i32; 16], max_new))
-        .collect();
-    for rx in rxs {
-        let r = rx.recv()?;
+    if n_sessions > 0 {
+        // multi-turn session demo: each session runs `--turns` turns, every
+        // turn resuming the stored O(1) recurrence state instead of
+        // re-prefilling the growing transcript
+        let turns = args.get_usize("turns", 4);
         println!(
-            "req {:>3}: {} tokens, ttft {:.1}ms, total {:.1}ms",
-            r.id,
-            r.tokens.len(),
-            r.ttft_s * 1e3,
-            r.total_s * 1e3
+            "session demo: {n_sessions} sessions x {turns} turns over {slots} slots"
         );
+        for t in 0..turns {
+            let rxs: Vec<_> = (0..n_sessions)
+                .map(|s| {
+                    let delta = vec![1 + ((s + t) % 32) as i32; 8];
+                    handle.submit_in_session(s as u64, delta, max_new)
+                })
+                .collect::<std::result::Result<_, _>>()?;
+            for (s, rx) in rxs.into_iter().enumerate() {
+                let r = rx.recv()?;
+                println!(
+                    "session {s:>3} turn {t}: {} tokens, ttft {:.1}ms, total {:.1}ms",
+                    r.tokens.len(),
+                    r.ttft_s * 1e3,
+                    r.total_s * 1e3
+                );
+            }
+        }
+    } else {
+        println!(
+            "coordinator demo: {n_requests} requests over {slots} slots (shape {})",
+            args.get("shape").unwrap_or("nano")
+        );
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| handle.submit(vec![1 + (i % 32) as i32; 16], max_new))
+            .collect::<std::result::Result<_, _>>()?;
+        for rx in rxs {
+            let r = rx.recv()?;
+            println!(
+                "req {:>3}: {} tokens, ttft {:.1}ms, total {:.1}ms",
+                r.id,
+                r.tokens.len(),
+                r.ttft_s * 1e3,
+                r.total_s * 1e3
+            );
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("{}", handle.metrics.report());
-    println!(
-        "wall {:.2}s, system throughput {:.1} tok/s",
-        wall,
-        (n_requests * max_new) as f64 / wall
-    );
+    println!("wall {wall:.2}s");
     handle.shutdown();
     Ok(())
 }

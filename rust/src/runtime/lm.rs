@@ -296,13 +296,15 @@ impl ServedModel {
     }
 }
 
-/// Saved per-slot generation state.
+/// Saved per-slot generation state.  Fields are public so the coordinator's
+/// session layer can lift a row into a portable
+/// [`crate::session::SessionState`] blob and back.
 #[derive(Clone, Debug)]
 pub struct RowState {
-    x_re: Vec<f32>,
-    x_im: Vec<f32>,
-    sc: Vec<f32>,
-    last: i32,
+    pub x_re: Vec<f32>,
+    pub x_im: Vec<f32>,
+    pub sc: Vec<f32>,
+    pub last: i32,
 }
 
 fn default_modal(s: &ServedShape) -> Vec<Value> {

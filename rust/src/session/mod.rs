@@ -1,0 +1,28 @@
+//! Session subsystem: O(1) snapshot/resume of per-sequence SSM state.
+//!
+//! The paper's deployment claim (Lemma 2.2) is that a distilled layer
+//! carries a *constant-size* recurrence state per sequence.  That makes an
+//! entire in-flight conversation checkpointable in O(state) bytes — a
+//! KV-cached Transformer would have to persist an O(t)-growing cache, and a
+//! conv-mode model the full gated-signal history.  This module turns that
+//! observation into a serving feature:
+//!
+//! * [`state::SessionState`] — a versioned, byte-exact blob of one slot's
+//!   generation state, extracted and reinstalled through
+//!   [`crate::coordinator::state::SlotEngine::snapshot_slot`] /
+//!   [`crate::coordinator::state::SlotEngine::restore_slot`].
+//! * [`store::Store`] — a byte-budgeted LRU session store with hit/miss
+//!   accounting and optional spill-to-disk through the existing
+//!   [`crate::runtime::checkpoint`] serialization.
+//!
+//! The coordinator (`coordinator/server.rs`) wires both into
+//! `submit_in_session`: a resumed turn restores the stored state into a
+//! free slot and feeds only the *new* tokens, skipping the re-prefill of
+//! the whole transcript — while guaranteeing bit-identical tokens to a
+//! single uninterrupted generation (asserted in the server tests).
+
+pub mod state;
+pub mod store;
+
+pub use state::{Plane, SessionError, SessionState, FORMAT_VERSION};
+pub use store::{Store, StoreConfig, StoreStats};

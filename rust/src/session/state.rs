@@ -1,0 +1,287 @@
+//! Versioned, byte-exact snapshot of one sequence's generation state.
+//!
+//! A [`SessionState`] is engine-agnostic: named f32 planes plus the pending
+//! greedy token.  Engines define their own plane layout (the recurrent
+//! engine stores `x_re`/`x_im`/`sc` concatenated over layers; the
+//! Transformer baseline stores per-layer KV planes) and validate it on
+//! restore, so a blob can never be reinstalled into the wrong engine or
+//! shape.  Serialization reuses [`crate::runtime::checkpoint`] — the same
+//! manifest + little-endian blob format the AOT checkpoints use — and is
+//! bit-exact: `f32::to_le_bytes`/`from_le_bytes` round-trip every bit
+//! pattern, and non-float metadata rides along via `f32::from_bits`.
+
+use crate::runtime::checkpoint::{Checkpoint, Tensor};
+
+/// Blob format version; bump on any layout change so stale spills are
+/// rejected instead of misread.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One named f32 buffer of a snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plane {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+/// A full per-sequence generation-state snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionState {
+    /// [`FORMAT_VERSION`] at snapshot time.
+    pub version: u32,
+    /// Owning session id (stamped by the store on insert).
+    pub session_id: u64,
+    /// Engine tag (`SlotEngine::state_tag`); restore refuses foreign blobs.
+    pub engine: String,
+    /// Greedy token sampled after the last consumed position — it has NOT
+    /// been fed through the recurrence yet.  Resume feeds it first.
+    pub last_token: i32,
+    /// Tokens the state has consumed (prompt + generated, excluding the
+    /// pending `last_token`) — exactly the prefill work a resume skips.
+    pub tokens_seen: u64,
+    pub planes: Vec<Plane>,
+}
+
+impl SessionState {
+    pub fn new(engine: &str, last_token: i32) -> SessionState {
+        SessionState {
+            version: FORMAT_VERSION,
+            session_id: 0,
+            engine: engine.to_string(),
+            last_token,
+            tokens_seen: 0,
+            planes: Vec::new(),
+        }
+    }
+
+    pub fn push_plane(&mut self, name: &str, data: Vec<f32>) {
+        self.planes.push(Plane { name: name.to_string(), data });
+    }
+
+    pub fn plane(&self, name: &str) -> Option<&[f32]> {
+        self.planes.iter().find(|p| p.name == name).map(|p| p.data.as_slice())
+    }
+
+    /// Restore-side validation: the blob must carry this engine's tag.
+    pub fn check_engine(&self, tag: &str) -> Result<(), SessionError> {
+        if self.version != FORMAT_VERSION {
+            return Err(SessionError::Version { got: self.version });
+        }
+        if self.engine != tag {
+            return Err(SessionError::EngineMismatch {
+                expected: tag.to_string(),
+                got: self.engine.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Fetch a plane and validate its exact element count.
+    pub fn plane_checked(&self, name: &str, len: usize) -> Result<&[f32], SessionError> {
+        let p = self
+            .plane(name)
+            .ok_or_else(|| SessionError::MissingPlane { plane: name.to_string() })?;
+        if p.len() != len {
+            return Err(SessionError::PlaneMismatch {
+                plane: name.to_string(),
+                expected: len,
+                got: p.len(),
+            });
+        }
+        Ok(p)
+    }
+
+    /// Bytes this snapshot occupies (LRU-ledger accounting): plane data
+    /// plus name/metadata overhead.
+    pub fn state_bytes(&self) -> u64 {
+        let planes: u64 = self
+            .planes
+            .iter()
+            .map(|p| 4 * p.data.len() as u64 + p.name.len() as u64 + 16)
+            .sum();
+        32 + self.engine.len() as u64 + planes
+    }
+
+    /// Encode as a [`Checkpoint`] (the spill-to-disk format).  Metadata is
+    /// packed bit-exactly into a `meta` tensor via `f32::from_bits`.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let meta = vec![
+            f32::from_bits(self.version),
+            f32::from_bits(self.last_token as u32),
+            f32::from_bits(self.tokens_seen as u32),
+            f32::from_bits((self.tokens_seen >> 32) as u32),
+            f32::from_bits(self.session_id as u32),
+            f32::from_bits((self.session_id >> 32) as u32),
+        ];
+        let mut tensors = vec![Tensor { path: "meta".into(), shape: vec![6], data: meta }];
+        // the engine tag rides in a tensor path (checkpoints store f32 only)
+        tensors.push(Tensor {
+            path: format!("engine/{}", self.engine),
+            shape: vec![],
+            data: vec![0.0],
+        });
+        for p in &self.planes {
+            tensors.push(Tensor {
+                path: format!("plane/{}", p.name),
+                shape: vec![p.data.len()],
+                data: p.data.clone(),
+            });
+        }
+        Checkpoint { tensors }
+    }
+
+    /// Decode a spilled checkpoint back into a snapshot.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<SessionState, SessionError> {
+        let meta = ck
+            .get("meta")
+            .ok_or_else(|| SessionError::Corrupt("missing meta tensor".into()))?;
+        if meta.data.len() != 6 {
+            return Err(SessionError::Corrupt("meta tensor malformed".into()));
+        }
+        let version = meta.data[0].to_bits();
+        if version != FORMAT_VERSION {
+            return Err(SessionError::Version { got: version });
+        }
+        let engine = ck
+            .tensors
+            .iter()
+            .find_map(|t| t.path.strip_prefix("engine/"))
+            .ok_or_else(|| SessionError::Corrupt("missing engine tag".into()))?
+            .to_string();
+        let planes = ck
+            .tensors
+            .iter()
+            .filter_map(|t| {
+                t.path
+                    .strip_prefix("plane/")
+                    .map(|name| Plane { name: name.to_string(), data: t.data.clone() })
+            })
+            .collect();
+        Ok(SessionState {
+            version,
+            session_id: (meta.data[4].to_bits() as u64)
+                | ((meta.data[5].to_bits() as u64) << 32),
+            engine,
+            last_token: meta.data[1].to_bits() as i32,
+            tokens_seen: (meta.data[2].to_bits() as u64)
+                | ((meta.data[3].to_bits() as u64) << 32),
+            planes,
+        })
+    }
+}
+
+/// Why a snapshot could not be taken or reinstalled.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// The engine does not implement snapshot/restore.
+    Unsupported,
+    /// Blob written by an incompatible format version.
+    Version { got: u32 },
+    /// Blob belongs to a different engine implementation.
+    EngineMismatch { expected: String, got: String },
+    /// A plane's element count does not match the engine's layout.
+    PlaneMismatch { plane: String, expected: usize, got: usize },
+    MissingPlane { plane: String },
+    /// Spilled blob failed to parse.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Unsupported => write!(f, "engine does not support session snapshots"),
+            SessionError::Version { got } => {
+                write!(f, "session blob version {got} != supported {FORMAT_VERSION}")
+            }
+            SessionError::EngineMismatch { expected, got } => {
+                write!(f, "session blob for engine '{got}', expected '{expected}'")
+            }
+            SessionError::PlaneMismatch { plane, expected, got } => {
+                write!(f, "plane '{plane}' has {got} elements, expected {expected}")
+            }
+            SessionError::MissingPlane { plane } => write!(f, "plane '{plane}' missing"),
+            SessionError::Corrupt(msg) => write!(f, "corrupt session blob: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SessionState {
+        let mut st = SessionState::new("test-engine", 42);
+        st.session_id = 0xDEAD_BEEF_0123_4567;
+        st.tokens_seen = (7u64 << 33) | 99;
+        // adversarial bit patterns: NaN, -0.0, denormals must survive
+        st.push_plane("x_re", vec![1.5, -0.0, f32::NAN, f32::MIN_POSITIVE / 2.0]);
+        st.push_plane("sc", vec![0.0; 8]);
+        st
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let st = sample();
+        let back = SessionState::from_checkpoint(&st.to_checkpoint()).unwrap();
+        assert_eq!(back.version, st.version);
+        assert_eq!(back.session_id, st.session_id);
+        assert_eq!(back.engine, st.engine);
+        assert_eq!(back.last_token, st.last_token);
+        assert_eq!(back.tokens_seen, st.tokens_seen);
+        assert_eq!(back.planes.len(), st.planes.len());
+        for (a, b) in st.planes.iter().zip(&back.planes) {
+            assert_eq!(a.name, b.name);
+            let bits_a: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "plane {} not bit-exact", a.name);
+        }
+    }
+
+    #[test]
+    fn disk_roundtrip_is_bit_exact() {
+        let st = sample();
+        let dir = std::env::temp_dir().join(format!("lh_sess_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("blob");
+        st.to_checkpoint().save(&base).unwrap();
+        let back =
+            SessionState::from_checkpoint(&Checkpoint::load(&base).unwrap()).unwrap();
+        let bits = |s: &SessionState| -> Vec<u32> {
+            s.planes.iter().flat_map(|p| p.data.iter().map(|v| v.to_bits())).collect()
+        };
+        assert_eq!(bits(&st), bits(&back));
+        assert_eq!(back.last_token, 42);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let st = sample();
+        assert!(st.check_engine("test-engine").is_ok());
+        assert!(matches!(
+            st.check_engine("other"),
+            Err(SessionError::EngineMismatch { .. })
+        ));
+        assert!(st.plane_checked("x_re", 4).is_ok());
+        assert!(matches!(
+            st.plane_checked("x_re", 5),
+            Err(SessionError::PlaneMismatch { .. })
+        ));
+        assert!(matches!(
+            st.plane_checked("nope", 1),
+            Err(SessionError::MissingPlane { .. })
+        ));
+        let mut old = st.clone();
+        old.version = 999;
+        assert!(matches!(old.check_engine("test-engine"), Err(SessionError::Version { .. })));
+    }
+
+    #[test]
+    fn state_bytes_tracks_plane_payload() {
+        let st = sample();
+        assert!(st.state_bytes() > 4 * (4 + 8));
+        let empty = SessionState::new("e", 0);
+        assert!(empty.state_bytes() < st.state_bytes());
+    }
+}

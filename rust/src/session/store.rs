@@ -1,0 +1,292 @@
+//! Byte-budgeted LRU session store with optional spill-to-disk.
+//!
+//! Holds [`SessionState`] blobs between turns of a conversation.  RAM
+//! residency is bounded by `budget_bytes`; least-recently-used sessions are
+//! evicted first, and — when a spill directory is configured — written to
+//! disk through the checkpoint serialization instead of being dropped, so a
+//! later turn can still resume in O(state) I/O rather than re-prefilling
+//! the whole transcript.
+//!
+//! `take` removes the state (it moves into an engine slot); the coordinator
+//! `put`s a fresh snapshot back at retire.  Hit/miss/eviction/spill
+//! accounting feeds the coordinator metrics.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+
+use super::state::SessionState;
+use crate::runtime::checkpoint::Checkpoint;
+
+/// Store configuration.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// RAM budget for resident session states.
+    pub budget_bytes: u64,
+    /// Evicted states spill here instead of being dropped (None = drop).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { budget_bytes: 256 << 20, spill_dir: None }
+    }
+}
+
+/// Counters exported to the coordinator metrics.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// RAM-resident lookup hits.
+    pub hits: u64,
+    /// Lookups served by loading a spilled blob from disk.
+    pub disk_hits: u64,
+    /// Lookups that found nothing (state was dropped or never stored).
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Evictions that were persisted to the spill directory.
+    pub spills: u64,
+}
+
+struct Entry {
+    state: SessionState,
+    bytes: u64,
+    tick: u64,
+}
+
+/// The LRU session store.
+pub struct Store {
+    cfg: StoreConfig,
+    entries: HashMap<u64, Entry>,
+    /// recency index: monotone tick -> session id (oldest first).
+    recency: BTreeMap<u64, u64>,
+    used: u64,
+    tick: u64,
+    pub stats: StoreStats,
+}
+
+impl Store {
+    pub fn new(cfg: StoreConfig) -> Store {
+        if let Some(dir) = &cfg.spill_dir {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        Store {
+            cfg,
+            entries: HashMap::new(),
+            recency: BTreeMap::new(),
+            used: 0,
+            tick: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    /// Resident states (excludes spilled-to-disk sessions).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently held in RAM.
+    pub fn bytes_used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn contains_resident(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Insert (or replace) the state for a session, then enforce the byte
+    /// budget by evicting least-recently-used sessions.
+    pub fn put(&mut self, id: u64, mut state: SessionState) {
+        state.session_id = id;
+        self.remove_resident(id);
+        let bytes = state.state_bytes();
+        self.tick += 1;
+        self.recency.insert(self.tick, id);
+        self.entries.insert(id, Entry { state, bytes, tick: self.tick });
+        self.used += bytes;
+        self.stats.inserts += 1;
+        self.evict_to_budget();
+    }
+
+    /// Remove and return the state for a session: RAM first, then the spill
+    /// directory.  The state moves into an engine slot, so on success it no
+    /// longer lives in the store (the coordinator re-`put`s at retire).
+    pub fn take(&mut self, id: u64) -> Option<SessionState> {
+        if let Some(e) = self.entries.remove(&id) {
+            self.recency.remove(&e.tick);
+            self.used -= e.bytes;
+            self.stats.hits += 1;
+            return Some(e.state);
+        }
+        if let Some(base) = self.spill_base(id) {
+            if base.with_extension("bin").exists() {
+                if let Ok(ck) = Checkpoint::load(&base) {
+                    if let Ok(state) = SessionState::from_checkpoint(&ck) {
+                        let _ = std::fs::remove_file(base.with_extension("bin"));
+                        let _ = std::fs::remove_file(base.with_extension("manifest.txt"));
+                        self.stats.disk_hits += 1;
+                        return Some(state);
+                    }
+                }
+            }
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Drop a session entirely (RAM and disk); returns whether anything
+    /// existed.
+    pub fn evict_session(&mut self, id: u64) -> bool {
+        let mut found = self.remove_resident(id);
+        if let Some(base) = self.spill_base(id) {
+            if base.with_extension("bin").exists() {
+                let _ = std::fs::remove_file(base.with_extension("bin"));
+                let _ = std::fs::remove_file(base.with_extension("manifest.txt"));
+                found = true;
+            }
+        }
+        found
+    }
+
+    fn remove_resident(&mut self, id: u64) -> bool {
+        if let Some(e) = self.entries.remove(&id) {
+            self.recency.remove(&e.tick);
+            self.used -= e.bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn spill_base(&self, id: u64) -> Option<PathBuf> {
+        self.cfg.spill_dir.as_ref().map(|d| d.join(format!("session_{id:016x}")))
+    }
+
+    fn evict_to_budget(&mut self) {
+        while self.used > self.cfg.budget_bytes {
+            // oldest tick = least recently used
+            let (tick, id) = match self.recency.iter().next() {
+                Some((&tick, &id)) => (tick, id),
+                None => break,
+            };
+            self.recency.remove(&tick);
+            let e = self.entries.remove(&id).expect("recency/entries in sync");
+            self.used -= e.bytes;
+            self.stats.evictions += 1;
+            if let Some(base) = self.spill_base(id) {
+                if e.state.to_checkpoint().save(&base).is_ok() {
+                    self.stats.spills += 1;
+                } else {
+                    eprintln!("session store: failed to spill session {id:#x}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::state::SessionState;
+
+    fn state(tag: i32, floats: usize) -> SessionState {
+        let mut st = SessionState::new("test", tag);
+        st.push_plane("x", (0..floats).map(|i| i as f32 + tag as f32).collect());
+        st
+    }
+
+    #[test]
+    fn put_take_roundtrip_and_stats() {
+        let mut s = Store::new(StoreConfig { budget_bytes: 1 << 20, spill_dir: None });
+        s.put(1, state(10, 100));
+        s.put(2, state(20, 100));
+        assert_eq!(s.len(), 2);
+        let a = s.take(1).unwrap();
+        assert_eq!(a.last_token, 10);
+        assert_eq!(a.session_id, 1);
+        assert!(s.take(1).is_none()); // moved out
+        assert_eq!(s.stats.hits, 1);
+        assert_eq!(s.stats.misses, 1);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget_and_recency() {
+        let one = state(0, 100).state_bytes();
+        // room for exactly two states
+        let mut s = Store::new(StoreConfig { budget_bytes: 2 * one, spill_dir: None });
+        s.put(1, state(1, 100));
+        s.put(2, state(2, 100));
+        // touch 1 so 2 becomes LRU
+        let st1 = s.take(1).unwrap();
+        s.put(1, st1);
+        s.put(3, state(3, 100));
+        assert_eq!(s.stats.evictions, 1);
+        assert!(s.contains_resident(1), "recently-touched survives");
+        assert!(!s.contains_resident(2), "LRU evicted");
+        assert!(s.contains_resident(3));
+        assert!(s.bytes_used() <= 2 * one);
+    }
+
+    #[test]
+    fn eviction_spills_to_disk_and_take_restores_bit_exact() {
+        let dir = std::env::temp_dir().join(format!("lh_sess_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let one = state(0, 64).state_bytes();
+        let mut s = Store::new(StoreConfig { budget_bytes: one, spill_dir: Some(dir.clone()) });
+        let mut a = state(7, 64);
+        a.planes[0].data[0] = f32::NAN; // must survive the disk trip bit-exactly
+        let want_bits = a.planes[0].data[0].to_bits();
+        s.put(1, a);
+        s.put(2, state(8, 64)); // evicts 1 -> disk
+        assert_eq!(s.stats.spills, 1);
+        assert!(!s.contains_resident(1));
+        let back = s.take(1).expect("disk hit");
+        assert_eq!(s.stats.disk_hits, 1);
+        assert_eq!(back.last_token, 7);
+        assert_eq!(back.planes[0].data[0].to_bits(), want_bits);
+        // the spill file is consumed by take
+        assert!(s.take(1).is_none());
+        assert_eq!(s.stats.misses, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_state_is_evicted_immediately() {
+        let mut s = Store::new(StoreConfig { budget_bytes: 8, spill_dir: None });
+        s.put(1, state(1, 1000)); // bigger than the whole budget
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.stats.evictions, 1);
+        assert_eq!(s.bytes_used(), 0);
+    }
+
+    #[test]
+    fn replacing_a_session_does_not_leak_bytes() {
+        let mut s = Store::new(StoreConfig { budget_bytes: 1 << 20, spill_dir: None });
+        s.put(1, state(1, 100));
+        let b = s.bytes_used();
+        s.put(1, state(2, 100));
+        assert_eq!(s.bytes_used(), b);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.take(1).unwrap().last_token, 2);
+        assert_eq!(s.bytes_used(), 0);
+    }
+
+    #[test]
+    fn evict_session_drops_ram_and_disk() {
+        let dir = std::env::temp_dir().join(format!("lh_sess_evict_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let one = state(0, 32).state_bytes();
+        let mut s = Store::new(StoreConfig { budget_bytes: one, spill_dir: Some(dir.clone()) });
+        s.put(1, state(1, 32));
+        s.put(2, state(2, 32)); // 1 spilled
+        assert!(s.evict_session(1), "disk copy dropped");
+        assert!(s.evict_session(2), "ram copy dropped");
+        assert!(!s.evict_session(3));
+        assert!(s.take(1).is_none() && s.take(2).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

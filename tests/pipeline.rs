@@ -89,9 +89,16 @@ fn distilled_engine_serves_through_coordinator() {
             }
             Box::new(eng) as Box<dyn SlotEngine>
         },
-        ServeConfig { max_batch: 2, linger_ms: 1, max_new_tokens: 8, mem_budget: 1 << 30 },
+        ServeConfig {
+            max_batch: 2,
+            linger_ms: 1,
+            max_new_tokens: 8,
+            mem_budget: 1 << 30,
+            ..ServeConfig::default()
+        },
     );
-    let rxs: Vec<_> = (0..4).map(|i| handle.submit(vec![i + 1, 2, 3], 6)).collect();
+    let rxs: Vec<_> =
+        (0..4).map(|i| handle.submit(vec![i + 1, 2, 3], 6).expect("alive")).collect();
     for rx in rxs {
         let r = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(r.tokens.len(), 6);
