@@ -4,19 +4,22 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci doc bench artifacts clean
+.PHONY: help build test verify ci lint doc bench bench-decode artifacts clean
 
 help:
 	@echo "targets:"
-	@echo "  build      cargo build --release"
-	@echo "  test       cargo test -q"
-	@echo "  verify     tier-1 gate: build + test"
-	@echo "  ci         full gate: build + test + docs with warnings denied"
-	@echo "  doc        cargo doc --no-deps"
-	@echo "  bench      all bench suites (distillation, substrates,"
-	@echo "             generation, coordinator, session)"
-	@echo "  artifacts  lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
-	@echo "  clean      cargo clean + remove results/"
+	@echo "  build        cargo build --release"
+	@echo "  test         cargo test -q"
+	@echo "  verify       tier-1 gate: build + test"
+	@echo "  ci           full gate: build + test + clippy + docs, warnings denied"
+	@echo "  lint         cargo clippy with warnings denied"
+	@echo "  doc          cargo doc --no-deps"
+	@echo "  bench        all bench suites (distillation, substrates,"
+	@echo "               generation, coordinator, session, decode)"
+	@echo "  bench-decode decode hot-path bench with the 2x throughput gate;"
+	@echo "               rewrites BENCH_decode.json at the repo root"
+	@echo "  artifacts    lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
+	@echo "  clean        cargo clean + remove results/"
 
 build:
 	$(CARGO) build --release
@@ -27,11 +30,15 @@ test:
 # tier-1 gate: build + full test suite
 verify: build test
 
-# full CI chain: tier-1 plus rustdoc with warnings denied
+# full CI chain: tier-1 plus clippy and rustdoc with warnings denied
 ci:
 	$(CARGO) build --release
 	$(CARGO) test -q
+	$(CARGO) clippy --all-targets -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
 
 doc:
 	$(CARGO) doc --no-deps
@@ -42,6 +49,13 @@ bench:
 	$(CARGO) bench --bench generation
 	$(CARGO) bench --bench coordinator
 	$(CARGO) bench --bench session
+	$(CARGO) bench --bench decode
+
+# decode hot-path throughput with the regression gate (fused+pooled must
+# reach 2x the unfused serial baseline somewhere on the batch sweep);
+# emits BENCH_decode.json (repo root) + results/bench_decode.csv
+bench-decode:
+	DECODE_BENCH_GATE=1 $(CARGO) bench --bench decode
 
 # Lower the L2 graphs to HLO artifacts under rust/artifacts/ (needs JAX).
 artifacts:

@@ -1,0 +1,344 @@
+//! Decode hot-path benchmark: the fused, allocation-free, pooled token
+//! step of [`RecurrentEngine`] against a verbatim transcription of the
+//! pre-fusion path (per-token heap allocations, memmove-shifted short-conv
+//! windows, four-plane modal lookup with a per-channel head division, and
+//! a serial batch walk).
+//!
+//! Both engines are built from the same seed, so they carry identical
+//! weights and modal parameters — the bench asserts the two paths emit
+//! bit-identical tokens before timing anything, then sweeps the batch size
+//! and writes the machine-readable perf trajectory point to
+//! `BENCH_decode.json` at the repo root (plus `results/bench_decode.csv`).
+//!
+//! Gate: with `DECODE_BENCH_GATE=1` (set by `make bench-decode`) the run
+//! fails unless the best speedup over the sweep reaches 2x.
+
+use laughing_hyena::benchkit::{bench, fmt_time, Json, Table};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::{Engine, LmShape};
+use laughing_hyena::util::pool::Pool;
+
+/// The pre-fusion decode path, kept byte-for-byte faithful to the old
+/// implementation so the speedup is measured against what actually shipped.
+mod baseline {
+    use laughing_hyena::dsp::C64;
+    use laughing_hyena::engine::backbone::Backbone;
+    use laughing_hyena::engine::linear::{gelu, layer_norm};
+    use laughing_hyena::engine::LmShape;
+    use laughing_hyena::ssm::ModalSsm;
+    use laughing_hyena::util::Prng;
+
+    struct HeadModal {
+        lam_re: Vec<f32>,
+        lam_im: Vec<f32>,
+        r_re: Vec<f32>,
+        r_im: Vec<f32>,
+        h0: f32,
+    }
+
+    impl HeadModal {
+        fn from_ssm(sys: &ModalSsm) -> HeadModal {
+            HeadModal {
+                lam_re: sys.poles.iter().map(|p| p.re as f32).collect(),
+                lam_im: sys.poles.iter().map(|p| p.im as f32).collect(),
+                r_re: sys.residues.iter().map(|r| r.re as f32).collect(),
+                r_im: sys.residues.iter().map(|r| r.im as f32).collect(),
+                h0: sys.h0 as f32,
+            }
+        }
+    }
+
+    // same derived streams as RecurrentEngine::new -> identical parameters
+    fn random_modal(rng: &mut Prng, d: usize) -> ModalSsm {
+        let pairs: Vec<(C64, C64)> = (0..d / 2)
+            .map(|_| {
+                (
+                    C64::polar(rng.range(0.5, 0.95), rng.range(0.1, 2.9)),
+                    C64::new(rng.normal() * 0.2, rng.normal() * 0.2),
+                )
+            })
+            .collect();
+        ModalSsm::from_conjugate_pairs(&pairs, rng.normal() * 0.1)
+    }
+
+    pub struct UnfusedEngine {
+        bb: Backbone,
+        modal: Vec<Vec<HeadModal>>,
+        d_state: usize,
+        batch: usize,
+        x_re: Vec<Vec<Vec<f32>>>,
+        x_im: Vec<Vec<Vec<f32>>>,
+        sc: Vec<Vec<Vec<f32>>>,
+        last: Vec<i32>,
+    }
+
+    impl UnfusedEngine {
+        pub fn new(shape: &LmShape, batch: usize, seed: u64) -> UnfusedEngine {
+            let bb = Backbone::new(shape, seed);
+            let d_state = shape.d_state;
+            let mut modal: Vec<Vec<HeadModal>> = Vec::with_capacity(shape.n_layer);
+            for l in 0..shape.n_layer {
+                modal.push(
+                    (0..shape.heads)
+                        .map(|h| {
+                            let idx = (l * shape.heads + h) as u64;
+                            let mut rng = Prng::derived(seed ^ 0xD15711, idx);
+                            HeadModal::from_ssm(&random_modal(&mut rng, d_state))
+                        })
+                        .collect(),
+                );
+            }
+            let d = shape.d_model;
+            let kw = shape.short_kw;
+            UnfusedEngine {
+                bb,
+                modal,
+                d_state,
+                batch,
+                x_re: vec![vec![vec![0.0; d * d_state]; shape.n_layer]; batch],
+                x_im: vec![vec![vec![0.0; d * d_state]; shape.n_layer]; batch],
+                sc: vec![vec![vec![0.0; 3 * d * (kw - 1)]; shape.n_layer]; batch],
+                last: vec![0; batch],
+            }
+        }
+
+        pub fn prefill(&mut self, prompts: &[Vec<i32>]) -> Vec<i32> {
+            assert_eq!(prompts.len(), self.batch);
+            let mut out = Vec::with_capacity(self.batch);
+            for b in 0..self.batch {
+                for l in 0..self.bb.shape.n_layer {
+                    self.x_re[b][l].fill(0.0);
+                    self.x_im[b][l].fill(0.0);
+                    self.sc[b][l].fill(0.0);
+                }
+                out.push(self.consume_row(b, &prompts[b]));
+            }
+            out
+        }
+
+        /// The old serial batch walk: one row at a time, per-token allocs.
+        pub fn decode(&mut self) -> Vec<i32> {
+            let mut out = Vec::with_capacity(self.batch);
+            for b in 0..self.batch {
+                let tok = self.last[b];
+                out.push(self.consume_row(b, &[tok]));
+            }
+            out
+        }
+
+        fn consume_row(&mut self, b: usize, tokens: &[i32]) -> i32 {
+            let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
+            let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
+            let group = d / bb.shape.heads;
+            let (xr_b, xi_b, sc_b) = (&mut x_re[b], &mut x_im[b], &mut sc[b]);
+            let mut logits = Vec::new();
+            for &tok in tokens {
+                logits = decode_one_alloc(bb, tok, |li, qkv| {
+                    mix_one_alloc(
+                        d,
+                        kw,
+                        group,
+                        *d_state,
+                        &modal[li],
+                        &mut sc_b[li],
+                        &mut xr_b[li],
+                        &mut xi_b[li],
+                        qkv,
+                    )
+                });
+            }
+            let next = bb.greedy(&logits);
+            last[b] = next;
+            next
+        }
+    }
+
+    /// Verbatim pre-refactor `Backbone::decode_one`: allocates every
+    /// intermediate on every token.
+    fn decode_one_alloc(
+        bb: &Backbone,
+        token: i32,
+        mut mixer: impl FnMut(usize, &[f32]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        let d = bb.shape.d_model;
+        let mut x: Vec<f32> =
+            bb.embed[token as usize * d..(token as usize + 1) * d].to_vec();
+        let mut qkv = vec![0.0f32; 3 * d];
+        let mut proj = vec![0.0f32; d];
+        let mut mid = vec![0.0f32; bb.shape.mlp_mult * d];
+        for (li, layer) in bb.layers.iter().enumerate() {
+            let mut h = x.clone();
+            layer_norm(&mut h);
+            layer.qkv.apply(&h, &mut qkv);
+            let mixed = mixer(li, &qkv);
+            layer.out.apply(&mixed, &mut proj);
+            for (xi, p) in x.iter_mut().zip(&proj) {
+                *xi += p;
+            }
+            let mut h2 = x.clone();
+            layer_norm(&mut h2);
+            layer.mlp1.apply(&h2, &mut mid);
+            for v in mid.iter_mut() {
+                *v = gelu(*v);
+            }
+            layer.mlp2.apply(&mid, &mut proj);
+            for (xi, p) in x.iter_mut().zip(&proj) {
+                *xi += p;
+            }
+        }
+        layer_norm(&mut x);
+        let mut logits = vec![0.0f32; bb.shape.vocab];
+        bb.lm_head.apply(&x, &mut logits);
+        logits
+    }
+
+    /// Verbatim pre-refactor `mix_one`: allocates `qkv_c` and `y` and
+    /// memmove-shifts every channel window on every token of every layer.
+    #[allow(clippy::too_many_arguments)]
+    fn mix_one_alloc(
+        d: usize,
+        kw: usize,
+        group: usize,
+        ds: usize,
+        modal_layer: &[HeadModal],
+        buf: &mut [f32],
+        xr: &mut [f32],
+        xi: &mut [f32],
+        qkv: &[f32],
+    ) -> Vec<f32> {
+        let mut qkv_c = vec![0.0f32; 3 * d];
+        let w: [f32; 3] = [0.25, 0.35, 0.4];
+        for c in 0..3 * d {
+            let mut acc = w[kw - 1] * qkv[c];
+            for j in 0..kw - 1 {
+                acc += w[j] * buf[c * (kw - 1) + j];
+            }
+            qkv_c[c] = acc;
+            for j in 0..kw - 2 {
+                buf[c * (kw - 1) + j] = buf[c * (kw - 1) + j + 1];
+            }
+            buf[c * (kw - 1) + kw - 2] = qkv[c];
+        }
+        let (q, rest) = qkv_c.split_at(d);
+        let (k, v) = rest.split_at(d);
+        let mut y = vec![0.0f32; d];
+        for c in 0..d {
+            let head = &modal_layer[c / group];
+            let u = k[c] * v[c];
+            let base = c * ds;
+            let mut acc = head.h0 * u;
+            for n in 0..ds {
+                let (re, im) = (xr[base + n], xi[base + n]);
+                acc += head.r_re[n] * re - head.r_im[n] * im;
+                let nr = head.lam_re[n] * re - head.lam_im[n] * im + u;
+                let ni = head.lam_re[n] * im + head.lam_im[n] * re;
+                xr[base + n] = nr;
+                xi[base + n] = ni;
+            }
+            y[c] = q[c] * acc;
+        }
+        y
+    }
+}
+
+fn main() {
+    let shape = LmShape::bench("nano").unwrap();
+    let threads = Pool::auto().threads();
+    let steps = 16usize; // decode steps per timed iteration
+    let (warmup, iters) = (3usize, 24usize);
+    let mut table = Table::new(&[
+        "batch",
+        "fused tok/s",
+        "fused ns/tok",
+        "unfused tok/s",
+        "unfused ns/tok",
+        "speedup",
+        "p99/iter",
+    ]);
+    let mut points = Vec::new();
+    let mut speedups = Vec::new();
+    for batch in [1usize, 2, 4, 8] {
+        let prompts: Vec<Vec<i32>> =
+            (0..batch).map(|b| vec![1 + (b % 7) as i32; 8]).collect();
+        let mut fused = RecurrentEngine::new(&shape, batch, 11);
+        let mut unfused = baseline::UnfusedEngine::new(&shape, batch, 11);
+        // correctness cross-check before timing: same seed -> same weights
+        // -> the fused path must emit bit-identical tokens
+        assert_eq!(
+            fused.prefill(&prompts),
+            unfused.prefill(&prompts),
+            "fused prefill diverged from the unfused baseline"
+        );
+        for _ in 0..4 {
+            assert_eq!(
+                fused.decode(),
+                unfused.decode(),
+                "fused decode diverged from the unfused baseline"
+            );
+        }
+        let rf = bench(&format!("fused b{batch}"), warmup, iters, || {
+            let mut sink = 0.0;
+            for _ in 0..steps {
+                sink += fused.decode()[0] as f64;
+            }
+            sink
+        });
+        let ru = bench(&format!("unfused b{batch}"), warmup, iters, || {
+            let mut sink = 0.0;
+            for _ in 0..steps {
+                sink += unfused.decode()[0] as f64;
+            }
+            sink
+        });
+        let tokens = (steps * batch) as f64;
+        let f_tps = tokens / rf.mean_s;
+        let u_tps = tokens / ru.mean_s;
+        let f_ns = rf.mean_s / tokens * 1e9;
+        let u_ns = ru.mean_s / tokens * 1e9;
+        let speedup = f_tps / u_tps;
+        speedups.push(speedup);
+        table.row(&[
+            batch.to_string(),
+            format!("{f_tps:.0}"),
+            format!("{f_ns:.0}"),
+            format!("{u_tps:.0}"),
+            format!("{u_ns:.0}"),
+            format!("{speedup:.2}x"),
+            fmt_time(rf.p99_s),
+        ]);
+        points.push(Json::obj(vec![
+            ("batch", Json::Int(batch as i64)),
+            ("fused_tok_per_s", Json::Num(f_tps)),
+            ("fused_ns_per_token", Json::Num(f_ns)),
+            ("unfused_tok_per_s", Json::Num(u_tps)),
+            ("unfused_ns_per_token", Json::Num(u_ns)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    table.print(&format!(
+        "fused+pooled decode vs unfused serial baseline (nano, {threads} threads)"
+    ));
+    let _ = table.write_csv("bench_decode.csv");
+
+    let best = speedups.iter().cloned().fold(0.0f64, f64::max);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("decode".into())),
+        ("shape", Json::Str(shape.name.into())),
+        ("threads", Json::Int(threads as i64)),
+        ("decode_steps_per_iter", Json::Int(steps as i64)),
+        ("iters", Json::Int(iters as i64)),
+        ("best_speedup", Json::Num(best)),
+        ("points", Json::Arr(points)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    doc.save(path).expect("write BENCH_decode.json");
+    println!("\nwrote {path} (best speedup {best:.2}x)");
+
+    if std::env::var("DECODE_BENCH_GATE").is_ok() {
+        assert!(
+            best >= 2.0,
+            "decode perf gate: best speedup {best:.2}x over the batch sweep is below 2x"
+        );
+        println!("decode perf gate passed (>= 2x)");
+    }
+}

@@ -112,6 +112,113 @@ impl Table {
     }
 }
 
+/// Minimal JSON value for machine-readable bench artifacts (the
+/// `BENCH_*.json` perf trajectory; serde is unavailable offline).  Numbers
+/// use Rust's shortest-roundtrip `Display` (valid JSON for finite floats);
+/// non-finite floats serialize as `null`.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object from `(key, value)` pairs, preserving order.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        let pad = |out: &mut String, n: usize| {
+            for _ in 0..n {
+                out.push_str("  ");
+            }
+        };
+        match self {
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Int(v) => out.push_str(&v.to_string()),
+            Json::Bool(v) => out.push_str(if *v { "true" } else { "false" }),
+            Json::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(out, indent + 1);
+                    item.write(out, indent + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    pad(out, indent + 1);
+                    Json::Str(k.clone()).write(out, indent + 1);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                    if i + 1 < pairs.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Render with two-space indentation (stable and diff-friendly — these
+    /// files are checked in as the perf trajectory).
+    pub fn to_string_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s.push('\n');
+        s
+    }
+
+    /// Write the pretty-printed document to `path`.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_string_pretty())
+    }
+}
+
 /// Format seconds human-readably.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -168,5 +275,38 @@ mod tests {
         assert_eq!(fmt_time(0.002), "2.00ms");
         assert_eq!(fmt_bytes(2048), "2.0KiB");
         assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MiB");
+    }
+
+    #[test]
+    fn json_renders_nested_documents() {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("decode".into())),
+            ("ok", Json::Bool(true)),
+            ("n", Json::Int(-3)),
+            ("speedup", Json::Num(2.5)),
+            ("empty", Json::Arr(vec![])),
+            (
+                "points",
+                Json::Arr(vec![Json::obj(vec![("batch", Json::Int(1))])]),
+            ),
+        ]);
+        let s = doc.to_string_pretty();
+        assert!(s.starts_with("{\n"));
+        assert!(s.contains("\"bench\": \"decode\""));
+        assert!(s.contains("\"ok\": true"));
+        assert!(s.contains("\"n\": -3"));
+        assert!(s.contains("\"speedup\": 2.5"));
+        assert!(s.contains("\"empty\": []"));
+        assert!(s.contains("\"batch\": 1"));
+        assert!(s.ends_with("}\n"));
+    }
+
+    #[test]
+    fn json_escapes_strings_and_nulls_non_finite() {
+        let s = Json::Str("a\"b\\c\nd\u{1}".into()).to_string_pretty();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"\n");
+        assert_eq!(Json::Num(f64::NAN).to_string_pretty(), "null\n");
+        assert_eq!(Json::Num(f64::INFINITY).to_string_pretty(), "null\n");
+        assert_eq!(Json::Num(0.125).to_string_pretty(), "0.125\n");
     }
 }

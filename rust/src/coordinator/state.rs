@@ -75,7 +75,9 @@ impl SlotEngine for RecurrentEngine {
     }
 
     fn decode_slots(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
-        active.iter().map(|&s| (s, self.decode_row(s))).collect()
+        // rows are independent: the token step fans out across cores too,
+        // bit-identical to stepping each row serially
+        self.decode_rows(active)
     }
 
     fn clear_slot(&mut self, slot: usize) {
@@ -272,6 +274,52 @@ impl SlotEngine for PjrtSlotEngine {
         }
         next
     }
+
+    fn feed_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
+        // One interleaved walk for k resumed turns: the decode artifact
+        // steps the whole fixed batch anyway, and rows are independent in
+        // every op of the graph, so the resumed slots can consume their
+        // token streams *together*.  Occupied rows not being fed are saved
+        // once up front (the inherited per-slot loop pays k whole-batch
+        // walks and k x (B-1) save/restores); free rows may drift, exactly
+        // as in `decode_slots` — the next prefill resets them.  Each fed
+        // row is saved the moment its stream ends so the remaining steps
+        // cannot drift it.
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let b = self.lm.shape.batch;
+        let mut fed = vec![false; b];
+        for (slot, toks) in jobs {
+            if !toks.is_empty() {
+                fed[*slot] = true;
+            }
+        }
+        let shielded: Vec<(usize, RowState)> = (0..b)
+            .filter(|&s| !fed[s] && self.occupied[s])
+            .map(|s| (s, self.lm.save_row(s)))
+            .collect();
+        let max_len = jobs.iter().map(|(_, t)| t.len()).max().unwrap_or(0);
+        let mut finished: Vec<(usize, RowState)> = Vec::with_capacity(jobs.len());
+        for i in 0..max_len {
+            for (slot, toks) in jobs {
+                if i < toks.len() {
+                    self.lm.last_tokens[*slot] = toks[i];
+                }
+            }
+            let _ = self.lm.decode_step().expect("decode");
+            for (slot, toks) in jobs {
+                if toks.len() == i + 1 {
+                    finished.push((*slot, self.lm.save_row(*slot)));
+                }
+            }
+        }
+        // reinstall every row at its correct post-feed (or untouched) state
+        for (s, row) in shielded.iter().chain(finished.iter()) {
+            self.lm.restore_row(*s, row);
+        }
+        jobs.iter().map(|(s, _)| (*s, self.lm.last_tokens[*s])).collect()
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +376,60 @@ mod tests {
                 assert_eq!(eng.decode_slots(&[0])[0].1, a[i]);
             }
         }
+    }
+
+    #[test]
+    fn pooled_decode_slots_preserves_active_order() {
+        // the scheduler relies on (slot, token) pairs; the pooled fan-out
+        // must report them in the caller's order and agree with the serial
+        // per-row step
+        let shape = LmShape::bench("nano").unwrap();
+        let mut pooled = RecurrentEngine::new(&shape, 3, 8);
+        let mut serial = RecurrentEngine::new(&shape, 3, 8);
+        for b in 0..3 {
+            pooled.prefill_row(b, &[2 + b as i32, 7]);
+            serial.prefill_row(b, &[2 + b as i32, 7]);
+        }
+        let active = [2usize, 0];
+        let got = SlotEngine::decode_slots(&mut pooled, &active);
+        let want: Vec<(usize, i32)> =
+            active.iter().map(|&s| (s, serial.decode_row(s))).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pjrt_feed_slots_matches_sequential_feed_slot() {
+        // the interleaved multi-resume walk must agree with the inherited
+        // per-slot loop and leave untouched slots bit-identical
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("decode_multihyena_tiny.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = crate::runtime::artifact::Runtime::cpu().unwrap();
+        let mk = || {
+            let lm =
+                crate::runtime::lm::ServedModel::new(&rt, &dir, "multihyena_tiny").unwrap();
+            PjrtSlotEngine::new(lm)
+        };
+        let mut batched = mk();
+        let mut looped = mk();
+        let prompts: Vec<(usize, Vec<i32>)> =
+            (0..4).map(|s| (s, vec![1 + s as i32, 2, 3])).collect();
+        batched.prefill_slots(&prompts);
+        looped.prefill_slots(&prompts);
+        // uneven resumed streams incl. an empty one; slot 1 untouched
+        let jobs: Vec<(usize, Vec<i32>)> =
+            vec![(0, vec![4, 5, 6]), (2, vec![7]), (3, vec![])];
+        let got = batched.feed_slots(&jobs);
+        let want: Vec<(usize, i32)> =
+            jobs.iter().map(|(s, t)| (*s, looped.feed_slot(*s, t))).collect();
+        assert_eq!(got, want);
+        assert_eq!(
+            batched.decode_slots(&[0, 1, 2, 3]),
+            looped.decode_slots(&[0, 1, 2, 3]),
+            "all slots (incl. untouched ones) must be bit-identical after resume"
+        );
     }
 
     #[test]

@@ -1,13 +1,54 @@
 //! Shared decoder backbone for the native engines: embeddings, pre/post
 //! projections, MLP and LM head.  Engines differ only in the token-mixing
-//! core, injected as a closure — `mixer(layer, row, qkv) -> mixed [D]` for
-//! single-token decode and `mixer_block(layer, row, qkv_t) -> mixed [T, D]`
-//! for whole-prompt prefill.
+//! core, injected as a closure — `mixer(layer, qkv, out)` writes the mixed
+//! `[D]` vector for single-token decode and `mixer_block(layer, qkv_t, t)`
+//! returns the mixed `[T, D]` block for whole-prompt prefill.
+//!
+//! Single-token decode is allocation-free: every intermediate lives in a
+//! caller-owned [`DecodeScratch`], so the per-token hot loop touches only
+//! pre-allocated buffers (the engines keep one scratch per batch row and
+//! reuse it for every token).
 
 use super::linear::{argmax, gelu, layer_norm, Dense};
 use super::shapes::LmShape;
 use crate::util::pool::Pool;
 use crate::util::Prng;
+
+/// Reusable buffers for [`Backbone::decode_one`]: everything the
+/// single-token forward pass needs, allocated once per row and reused for
+/// every token so steady-state decode performs zero heap allocations.
+pub struct DecodeScratch {
+    /// Residual stream [D].
+    x: Vec<f32>,
+    /// Normed hidden [D].
+    h: Vec<f32>,
+    /// Projected qkv [3D].
+    qkv: Vec<f32>,
+    /// Mixer output [D].
+    mixed: Vec<f32>,
+    /// Out/MLP projection output [D].
+    proj: Vec<f32>,
+    /// MLP hidden [mlp_mult * D].
+    mid: Vec<f32>,
+    /// LM-head output [V]; after [`Backbone::decode_one`] returns this
+    /// holds the logits of the decoded token.
+    pub logits: Vec<f32>,
+}
+
+impl DecodeScratch {
+    pub fn new(shape: &LmShape) -> DecodeScratch {
+        let d = shape.d_model;
+        DecodeScratch {
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            qkv: vec![0.0; 3 * d],
+            mixed: vec![0.0; d],
+            proj: vec![0.0; d],
+            mid: vec![0.0; shape.mlp_mult * d],
+            logits: vec![0.0; shape.vocab],
+        }
+    }
+}
 
 pub struct Layer {
     pub qkv: Dense,  // [D, 3D]
@@ -26,6 +67,7 @@ pub struct Backbone {
 
 impl Backbone {
     pub fn new(shape: &LmShape, seed: u64) -> Backbone {
+        shape.validate().expect("invalid LmShape");
         let mut rng = Prng::new(seed);
         let d = shape.d_model;
         let embed: Vec<f32> = (0..shape.vocab * d)
@@ -56,42 +98,41 @@ impl Backbone {
         b
     }
 
-    /// Decode one token for one sequence; `mixer(layer, qkv) -> mixed [D]`.
+    /// Decode one token for one sequence into `scratch.logits`, touching
+    /// only the caller's pre-allocated [`DecodeScratch`] (zero heap
+    /// allocations).  `mixer(layer, qkv, out)` must write *every* element
+    /// of the `[D]` output slice (it is not pre-zeroed between tokens).
     pub fn decode_one(
         &self,
         token: i32,
-        mut mixer: impl FnMut(usize, &[f32]) -> Vec<f32>,
-    ) -> Vec<f32> {
+        scratch: &mut DecodeScratch,
+        mut mixer: impl FnMut(usize, &[f32], &mut [f32]),
+    ) {
         let d = self.shape.d_model;
-        let mut x: Vec<f32> =
-            self.embed[token as usize * d..(token as usize + 1) * d].to_vec();
-        let mut qkv = vec![0.0f32; 3 * d];
-        let mut proj = vec![0.0f32; d];
-        let mut mid = vec![0.0f32; self.shape.mlp_mult * d];
+        let DecodeScratch { x, h, qkv, mixed, proj, mid, logits } = scratch;
+        x.copy_from_slice(&self.embed[token as usize * d..(token as usize + 1) * d]);
         for (li, layer) in self.layers.iter().enumerate() {
-            let mut h = x.clone();
-            layer_norm(&mut h);
-            layer.qkv.apply(&h, &mut qkv);
-            let mixed = mixer(li, &qkv);
-            layer.out.apply(&mixed, &mut proj);
-            for (xi, p) in x.iter_mut().zip(&proj) {
-                *xi += p;
+            h.copy_from_slice(x);
+            layer_norm(h);
+            layer.qkv.apply(h, qkv);
+            mixer(li, qkv, mixed);
+            layer.out.apply(mixed, proj);
+            for (xi, p) in x.iter_mut().zip(proj.iter()) {
+                *xi += *p;
             }
-            let mut h2 = x.clone();
-            layer_norm(&mut h2);
-            layer.mlp1.apply(&h2, &mut mid);
+            h.copy_from_slice(x);
+            layer_norm(h);
+            layer.mlp1.apply(h, mid);
             for v in mid.iter_mut() {
                 *v = gelu(*v);
             }
-            layer.mlp2.apply(&mid, &mut proj);
-            for (xi, p) in x.iter_mut().zip(&proj) {
-                *xi += p;
+            layer.mlp2.apply(mid, proj);
+            for (xi, p) in x.iter_mut().zip(proj.iter()) {
+                *xi += *p;
             }
         }
-        layer_norm(&mut x);
-        let mut logits = vec![0.0f32; self.shape.vocab];
-        self.lm_head.apply(&x, &mut logits);
-        logits
+        layer_norm(x);
+        self.lm_head.apply(x, logits);
     }
 
     /// Block forward over a whole prompt for one sequence; the mixer sees
@@ -156,13 +197,14 @@ mod tests {
     fn decode_one_produces_finite_logits() {
         let shape = LmShape::bench("nano").unwrap();
         let bb = Backbone::new(&shape, 1);
-        let logits = bb.decode_one(3, |_li, qkv| {
+        let mut scratch = DecodeScratch::new(&shape);
+        bb.decode_one(3, &mut scratch, |_li, qkv, out| {
             // identity-ish mixer: take the v third
             let d = shape.d_model;
-            qkv[2 * d..3 * d].to_vec()
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
         });
-        assert_eq!(logits.len(), shape.vocab);
-        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(scratch.logits.len(), shape.vocab);
+        assert!(scratch.logits.iter().all(|v| v.is_finite()));
     }
 
     #[test]
@@ -182,9 +224,34 @@ mod tests {
             }
             out
         });
-        let single = bb.decode_one(13, |_li, qkv| qkv[2 * d..3 * d].to_vec());
-        for (a, b) in block.iter().zip(&single) {
+        let mut scratch = DecodeScratch::new(&shape);
+        bb.decode_one(13, &mut scratch, |_li, qkv, out| {
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
+        });
+        for (a, b) in block.iter().zip(&scratch.logits) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn decode_one_is_repeatable_with_reused_scratch() {
+        // the scratch is not cleared between tokens; a second pass over the
+        // same token with the same mixer state must reproduce the logits
+        let shape = LmShape::bench("nano").unwrap();
+        let bb = Backbone::new(&shape, 7);
+        let d = shape.d_model;
+        let mut scratch = DecodeScratch::new(&shape);
+        bb.decode_one(9, &mut scratch, |_li, qkv, out| {
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
+        });
+        let first = scratch.logits.clone();
+        bb.decode_one(42, &mut scratch, |_li, qkv, out| {
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
+        });
+        bb.decode_one(9, &mut scratch, |_li, qkv, out| {
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
+        });
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&first), bits(&scratch.logits));
     }
 }

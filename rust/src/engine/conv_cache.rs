@@ -3,8 +3,8 @@
 //! O(t) per channel per token with O(L)-growing memory — exactly the cost
 //! profile LaughingHyena removes.
 
-use super::backbone::Backbone;
-use super::shapes::LmShape;
+use super::backbone::{Backbone, DecodeScratch};
+use super::shapes::{LmShape, SHORT_TAPS};
 use super::Engine;
 use crate::util::Prng;
 
@@ -16,9 +16,13 @@ pub struct ConvCacheEngine {
     /// Gated-signal history per sequence/layer/channel: [B][layer][t * D]
     /// (row-major over time; grows every token — the paper's O(L) cache).
     hist: Vec<Vec<Vec<f32>>>,
-    /// Short-conv buffers, as in the recurrent engine.
+    /// Short-conv buffers, as in the recurrent engine (shift-based here:
+    /// this engine exists to measure the O(t) long-conv cost, not to win).
     sc: Vec<Vec<Vec<f32>>>,
     last: Vec<i32>,
+    /// Token-step scratch (serial engine: one set for all rows).
+    scratch: DecodeScratch,
+    qkv_c: Vec<f32>,
 }
 
 impl ConvCacheEngine {
@@ -49,12 +53,15 @@ impl ConvCacheEngine {
             hist: vec![vec![Vec::new(); shape.n_layer]; batch],
             sc: vec![vec![vec![0.0; 3 * d * (kw - 1)]; shape.n_layer]; batch],
             last: vec![0; batch],
+            scratch: DecodeScratch::new(shape),
+            qkv_c: vec![0.0; 3 * d],
         }
     }
 }
 
 /// One conv-mode mixer step: push z_t = k*v into the history, evaluate the
 /// causal convolution at the newest position (O(t D)), gate with q.
+/// `kw == 1` skips the short-conv window entirely.
 #[allow(clippy::too_many_arguments)]
 fn mix_conv(
     d: usize,
@@ -64,19 +71,28 @@ fn mix_conv(
     buf: &mut [f32],
     hist: &mut Vec<f32>,
     qkv: &[f32],
-) -> Vec<f32> {
-    let mut qkv_c = vec![0.0f32; 3 * d];
-    let w: [f32; 3] = [0.25, 0.35, 0.4];
-    for c in 0..3 * d {
-        let mut acc = w[kw - 1] * qkv[c];
-        for j in 0..kw - 1 {
-            acc += w[j] * buf[c * (kw - 1) + j];
+    qkv_c: &mut [f32],
+    out: &mut [f32],
+) {
+    let tail = kw - 1;
+    let cur = SHORT_TAPS[tail];
+    if tail == 0 {
+        for (o, &x) in qkv_c.iter_mut().zip(qkv) {
+            *o = cur * x;
         }
-        qkv_c[c] = acc;
-        for j in 0..kw - 2 {
-            buf[c * (kw - 1) + j] = buf[c * (kw - 1) + j + 1];
+    } else {
+        let taps = &SHORT_TAPS[..tail];
+        for c in 0..3 * d {
+            let win = &mut buf[c * tail..(c + 1) * tail];
+            let mut acc = cur * qkv[c];
+            for (j, &w) in taps.iter().enumerate() {
+                acc += w * win[j];
+            }
+            qkv_c[c] = acc;
+            // roll the window (oldest-first layout)
+            win.copy_within(1.., 0);
+            win[tail - 1] = qkv[c];
         }
-        buf[c * (kw - 1) + kw - 2] = qkv[c];
     }
     let (q, rest) = qkv_c.split_at(d);
     let (k, v) = rest.split_at(d);
@@ -88,7 +104,6 @@ fn mix_conv(
     }
     let t = t0 + 1;
     // y_c = sum_{j=0..t-1} h[t-1-j] z_j  — O(t) per channel
-    let mut y = vec![0.0f32; d];
     for c in 0..d {
         let h = &filters_layer[c / group];
         let kmax = (t - 1).min(h.len() - 1);
@@ -96,9 +111,8 @@ fn mix_conv(
         for j in 0..=kmax {
             acc += h[j] * hist[(t - 1 - j) * d + c];
         }
-        y[c] = q[c] * acc;
+        out[c] = q[c] * acc;
     }
-    y
 }
 
 impl Engine for ConvCacheEngine {
@@ -116,18 +130,22 @@ impl Engine for ConvCacheEngine {
         }
         let batch = self.batch;
         let mut out = Vec::with_capacity(batch);
-        let Self { bb, filters, hist, sc, last, .. } = self;
+        let Self { bb, filters, hist, sc, last, scratch, qkv_c, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let group = d / bb.shape.heads;
         for b in 0..batch {
-            let mut logits = vec![0.0f32; bb.shape.vocab];
+            // empty prompts must see zero logits (argmax -> token 0), not
+            // whatever the previous row left in the shared scratch
+            scratch.logits.fill(0.0);
             let (h_b, sc_b) = (&mut hist[b], &mut sc[b]);
             for &tok in &prompts[b] {
-                logits = bb.decode_one(tok, |li, qkv| {
-                    mix_conv(d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv)
+                bb.decode_one(tok, scratch, |li, qkv, y| {
+                    mix_conv(
+                        d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv, qkv_c, y,
+                    )
                 });
             }
-            let next = bb.greedy(&logits);
+            let next = bb.greedy(&scratch.logits);
             last[b] = next;
             out.push(next);
         }
@@ -136,16 +154,18 @@ impl Engine for ConvCacheEngine {
 
     fn decode(&mut self) -> Vec<i32> {
         let mut out = Vec::with_capacity(self.batch);
-        let Self { bb, filters, hist, sc, last, .. } = self;
+        let Self { bb, filters, hist, sc, last, scratch, qkv_c, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let group = d / bb.shape.heads;
         for b in 0..last.len() {
             let tok = last[b];
             let (h_b, sc_b) = (&mut hist[b], &mut sc[b]);
-            let logits = bb.decode_one(tok, |li, qkv| {
-                mix_conv(d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv)
+            bb.decode_one(tok, scratch, |li, qkv, y| {
+                mix_conv(
+                    d, kw, group, &filters[li], &mut sc_b[li], &mut h_b[li], qkv, qkv_c, y,
+                )
             });
-            let next = bb.greedy(&logits);
+            let next = bb.greedy(&scratch.logits);
             last[b] = next;
             out.push(next);
         }
@@ -195,5 +215,18 @@ mod tests {
         let r = run_generation(&mut eng, &[vec![1, 2, 3], vec![4, 5, 6]], 5);
         assert_eq!(r.tokens, 10);
         assert!(r.peak_state_bytes > 0);
+    }
+
+    #[test]
+    fn short_kw_one_generates() {
+        // the no-short-conv configuration must also work in conv mode
+        let mut shape = LmShape::bench("nano").unwrap();
+        shape.short_kw = 1;
+        let mut eng = ConvCacheEngine::new(&shape, 1, 4);
+        eng.prefill(&[vec![1, 2, 3]]);
+        for _ in 0..3 {
+            let toks = eng.decode();
+            assert!(toks.iter().all(|&t| (t as usize) < shape.vocab));
+        }
     }
 }

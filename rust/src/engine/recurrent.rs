@@ -2,12 +2,31 @@
 //! long-conv filter is a distilled modal SSM; decode is O(d) per channel
 //! per token with constant memory (Lemma 2.2).
 //!
-//! State layout is structure-of-arrays f32 (re/im planes) — the same layout
-//! the L1 `ssm_decode` Pallas kernel uses — so the per-token update is a
-//! single linear sweep over `[B, D, d]`.
+//! The token step is the hottest loop in the repo, so its data layout is
+//! built for it:
+//!
+//! * **Flat SoA state.**  Each batch row owns one contiguous allocation per
+//!   plane (`x_re` / `x_im` over `[n_layer * D * d]`, short-conv window
+//!   over `[n_layer * 3D * (kw-1)]`) — the same structure-of-arrays layout
+//!   the L1 `ssm_decode` Pallas kernel uses — so the per-token update is a
+//!   single linear sweep with no per-layer pointer chasing.
+//! * **Interleaved modal plane.**  Per layer the modal parameters are
+//!   pre-broadcast to channel order as `[lam_re, lam_im, r_re, r_im]`
+//!   quadruples, so the `[D, d]` sweep is one contiguous FMA pass with no
+//!   per-channel head lookup or division.
+//! * **Circular short-conv windows.**  The `kw-1` retained inputs per
+//!   channel are indexed by a per-row cursor instead of memmove-shifted on
+//!   every token; `kw == 1` degenerates to no window at all.
+//! * **Engine-owned scratch.**  Every per-token intermediate (backbone
+//!   buffers, logits, short-conv output) lives in per-row
+//!   [`RowScratch`], so `mix_one` / `consume_row` /
+//!   [`Backbone::decode_one`] perform zero heap allocations in steady
+//!   state, and [`RecurrentEngine::decode_rows`] can fan rows out over the
+//!   [`Pool`] without contention — decode parallelizes like prefill
+//!   already did.
 
-use super::backbone::Backbone;
-use super::shapes::LmShape;
+use super::backbone::{Backbone, DecodeScratch};
+use super::shapes::{LmShape, SHORT_TAPS};
 use super::Engine;
 use crate::dsp::C64;
 use crate::session::{SessionError, SessionState};
@@ -18,40 +37,82 @@ use crate::util::Prng;
 /// Engine tag stamped into [`SessionState`] snapshots.
 pub const STATE_TAG: &str = "laughing-hyena";
 
-/// Per-head modal parameters, broadcast over the head's channels.
-struct HeadModal {
-    lam_re: Vec<f32>,
-    lam_im: Vec<f32>,
-    r_re: Vec<f32>,
-    r_im: Vec<f32>,
-    h0: f32,
+/// Per-layer modal parameters, pre-broadcast to channel order: for channel
+/// `c` and mode `n`, `plane[(c * d_state + n) * 4 ..][..4]` holds
+/// `[lam_re, lam_im, r_re, r_im]` of head `c / (d_model / heads)`.
+struct LayerModal {
+    /// Interleaved quadruples, `[D * d_state * 4]`.
+    plane: Vec<f32>,
+    /// Per-channel passthrough tap, `[D]`.
+    h0: Vec<f32>,
 }
 
-impl HeadModal {
-    fn from_ssm(sys: &ModalSsm) -> HeadModal {
-        HeadModal {
-            lam_re: sys.poles.iter().map(|p| p.re as f32).collect(),
-            lam_im: sys.poles.iter().map(|p| p.im as f32).collect(),
-            r_re: sys.residues.iter().map(|r| r.re as f32).collect(),
-            r_im: sys.residues.iter().map(|r| r.im as f32).collect(),
-            h0: sys.h0 as f32,
+impl LayerModal {
+    /// Broadcast one layer's per-head systems over their channel groups.
+    fn from_heads(heads: &[ModalSsm], d_model: usize, d_state: usize) -> LayerModal {
+        let group = d_model / heads.len();
+        let mut plane = Vec::with_capacity(d_model * d_state * 4);
+        let mut h0 = Vec::with_capacity(d_model);
+        for c in 0..d_model {
+            let sys = &heads[c / group];
+            assert_eq!(
+                sys.order(),
+                d_state,
+                "modal system order must match the shape's d_state"
+            );
+            for n in 0..d_state {
+                plane.push(sys.poles[n].re as f32);
+                plane.push(sys.poles[n].im as f32);
+                plane.push(sys.residues[n].re as f32);
+                plane.push(sys.residues[n].im as f32);
+            }
+            h0.push(sys.h0 as f32);
+        }
+        LayerModal { plane, h0 }
+    }
+}
+
+/// Per-row decode scratch: the backbone's token buffers plus the fused
+/// mixer's short-conv output.  One per slot, so pooled decode workers never
+/// share a buffer.
+struct RowScratch {
+    bb: DecodeScratch,
+    /// Short-conv output [3D].
+    qkv_c: Vec<f32>,
+}
+
+impl RowScratch {
+    fn new(shape: &LmShape) -> RowScratch {
+        RowScratch {
+            bb: DecodeScratch::new(shape),
+            qkv_c: vec![0.0; 3 * shape.d_model],
         }
     }
 }
 
 pub struct RecurrentEngine {
     bb: Backbone,
-    /// modal params per layer per head.
-    modal: Vec<Vec<HeadModal>>,
+    /// Pre-broadcast modal params per layer.
+    modal: Vec<LayerModal>,
     d_state: usize,
     batch: usize,
-    // generation state
-    /// [B][layer][D * d] interleaved per channel, re and im planes.
-    x_re: Vec<Vec<Vec<f32>>>,
-    x_im: Vec<Vec<Vec<f32>>>,
-    /// short-conv rolling buffers [B][layer][3D * (kw-1)].
-    sc: Vec<Vec<Vec<f32>>>,
+    // generation state: one contiguous allocation per row per plane
+    /// SSM state planes, `[B]` rows of `[n_layer * D * d_state]`.
+    x_re: Vec<Vec<f32>>,
+    x_im: Vec<Vec<f32>>,
+    /// Short-conv windows, `[B]` rows of `[n_layer * 3D * (kw-1)]`,
+    /// circularly indexed by `sc_pos`.
+    sc: Vec<Vec<f32>>,
+    /// Circular cursor into every `kw-1`-slot channel window of `sc`.  All
+    /// layers and channels of a row advance in lockstep (one step per
+    /// token), so a single cursor per row suffices; the element at offset
+    /// `(sc_pos + j) % (kw-1)` of a window is the j-th oldest retained
+    /// input.  Snapshots linearize to oldest-first order, which keeps
+    /// [`SessionState`] blobs byte-identical to the pre-circular format.
+    sc_pos: Vec<usize>,
     last: Vec<i32>,
+    /// Per-row decode scratch (index-aligned with the state rows).
+    scratch: Vec<RowScratch>,
 }
 
 impl RecurrentEngine {
@@ -67,30 +128,39 @@ impl RecurrentEngine {
         let head_jobs: Vec<usize> = (0..shape.n_layer * shape.heads).collect();
         let flat = Pool::auto().map(head_jobs, |idx| {
             let mut rng = Prng::derived(seed ^ 0xD15711, idx as u64);
-            HeadModal::from_ssm(&random_modal(&mut rng, d_state))
+            random_modal(&mut rng, d_state)
         });
-        let mut modal: Vec<Vec<HeadModal>> = Vec::with_capacity(shape.n_layer);
+        let mut modal: Vec<LayerModal> = Vec::with_capacity(shape.n_layer);
         let mut it = flat.into_iter();
         for _ in 0..shape.n_layer {
-            modal.push((0..shape.heads).map(|_| it.next().expect("head modal")).collect());
+            let heads: Vec<ModalSsm> =
+                (0..shape.heads).map(|_| it.next().expect("head modal")).collect();
+            modal.push(LayerModal::from_heads(&heads, shape.d_model, d_state));
         }
         let d = shape.d_model;
-        let kw = shape.short_kw;
+        let tail = shape.short_kw - 1;
         RecurrentEngine {
             bb,
             modal,
             d_state,
             batch,
-            x_re: vec![vec![vec![0.0; d * d_state]; shape.n_layer]; batch],
-            x_im: vec![vec![vec![0.0; d * d_state]; shape.n_layer]; batch],
-            sc: vec![vec![vec![0.0; 3 * d * (kw - 1)]; shape.n_layer]; batch],
+            x_re: vec![vec![0.0; shape.n_layer * d * d_state]; batch],
+            x_im: vec![vec![0.0; shape.n_layer * d * d_state]; batch],
+            sc: vec![vec![0.0; shape.n_layer * 3 * d * tail]; batch],
+            sc_pos: vec![0; batch],
             last: vec![0; batch],
+            scratch: (0..batch).map(|_| RowScratch::new(shape)).collect(),
         }
     }
 
     /// Zero the generation state of one batch row (slot recycling).
     pub fn reset_row(&mut self, b: usize) {
-        reset_row_bufs(&mut self.x_re[b], &mut self.x_im[b], &mut self.sc[b]);
+        reset_row_state(
+            &mut self.x_re[b],
+            &mut self.x_im[b],
+            &mut self.sc[b],
+            &mut self.sc_pos[b],
+        );
         self.last[b] = 0;
     }
 
@@ -133,31 +203,79 @@ impl RecurrentEngine {
     /// Pooled multi-row token ingestion; `reset` distinguishes prefill
     /// (fresh rows) from session resume (continue from restored state).
     fn run_wanted(&mut self, wanted: &[Option<&[i32]>], reset: bool) -> Vec<(usize, i32)> {
-        let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
-        let group = d / bb.shape.heads;
         let ds = *d_state;
         let bb = &*bb;
-        let modal = &*modal;
+        let modal = &modal[..];
         let rows: Vec<_> = x_re
             .iter_mut()
             .zip(x_im.iter_mut())
             .zip(sc.iter_mut())
+            .zip(sc_pos.iter_mut())
             .zip(last.iter_mut())
+            .zip(scratch.iter_mut())
             .enumerate()
-            .filter_map(|(b, (((xr, xi), sc_b), last_b))| {
-                wanted[b].map(|prompt| (b, xr, xi, sc_b, last_b, prompt))
+            .filter_map(|(b, (((((xr, xi), sc_b), pos), last_b), scr))| {
+                wanted[b].map(|prompt| (b, xr, xi, sc_b, pos, last_b, scr, prompt))
             })
             .collect();
-        Pool::auto().map(rows, |(b, xr, xi, sc_b, last_b, prompt)| {
+        Pool::auto().map(rows, |(b, xr, xi, sc_b, pos, last_b, scr, prompt)| {
             if reset {
-                reset_row_bufs(xr, xi, sc_b);
+                reset_row_state(xr, xi, sc_b, pos);
             }
             let fallback = if reset { 0 } else { *last_b };
-            let next = consume_row(bb, modal, d, kw, group, ds, sc_b, xr, xi, prompt, fallback);
+            let next =
+                consume_row(bb, modal, d, kw, ds, sc_b, pos, xr, xi, scr, prompt, fallback);
             *last_b = next;
             (b, next)
         })
+    }
+
+    /// One pooled decode step over the given rows (each feeds back its own
+    /// pending `last` token); returns (row, next token) pairs in the
+    /// caller's `active` order.  Rows are independent, so the fan-out is
+    /// bit-identical to stepping each row serially — asserted by
+    /// `pooled_decode_matches_serial_across_partial_active_sets`.  `active`
+    /// entries must be unique.
+    pub fn decode_rows(&mut self, active: &[usize]) -> Vec<(usize, i32)> {
+        let mut mask = vec![false; self.batch];
+        for &s in active {
+            mask[s] = true;
+        }
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
+        let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
+        let ds = *d_state;
+        let bb = &*bb;
+        let modal = &modal[..];
+        let rows: Vec<_> = x_re
+            .iter_mut()
+            .zip(x_im.iter_mut())
+            .zip(sc.iter_mut())
+            .zip(sc_pos.iter_mut())
+            .zip(last.iter_mut())
+            .zip(scratch.iter_mut())
+            .enumerate()
+            .filter_map(|(b, (((((xr, xi), sc_b), pos), last_b), scr))| {
+                if mask[b] {
+                    Some((b, xr, xi, sc_b, pos, last_b, scr))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let stepped = Pool::auto().map(rows, |(b, xr, xi, sc_b, pos, last_b, scr)| {
+            let tok = [*last_b];
+            let next = consume_row(bb, modal, d, kw, ds, sc_b, pos, xr, xi, scr, &tok, *last_b);
+            *last_b = next;
+            (b, next)
+        });
+        // report in the caller's order (the fan-out ran in slot order)
+        let mut by_slot = vec![0i32; mask.len()];
+        for (b, t) in &stepped {
+            by_slot[*b] = *t;
+        }
+        active.iter().map(|&s| (s, by_slot[s])).collect()
     }
 
     /// One decode step for a single row.
@@ -174,12 +292,21 @@ impl RecurrentEngine {
     /// sessions bit-exact.  Returns the greedy token after the last fed
     /// token (the row's `last` if `tokens` is empty).
     pub fn feed_row(&mut self, b: usize, tokens: &[i32]) -> i32 {
-        let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
-        let group = d / bb.shape.heads;
         let next = consume_row(
-            bb, modal, d, kw, group, *d_state,
-            &mut sc[b], &mut x_re[b], &mut x_im[b], tokens, last[b],
+            bb,
+            modal,
+            d,
+            kw,
+            *d_state,
+            &mut sc[b],
+            &mut sc_pos[b],
+            &mut x_re[b],
+            &mut x_im[b],
+            &mut scratch[b],
+            tokens,
+            last[b],
         );
         last[b] = next;
         next
@@ -188,19 +315,38 @@ impl RecurrentEngine {
     /// Extract one row's full per-layer SSM + short-conv state as a
     /// versioned [`SessionState`] blob (O(d) bytes, independent of how many
     /// tokens the row has consumed — Lemma 2.2 is what makes sessions
-    /// cheap).
+    /// cheap).  The short-conv plane is linearized to oldest-first order,
+    /// so the blob bytes do not depend on the row's circular cursor.
     pub fn snapshot_row(&self, b: usize) -> SessionState {
-        let flat = |layers: &[Vec<f32>]| -> Vec<f32> {
-            layers.iter().flat_map(|l| l.iter().copied()).collect()
-        };
         let mut st = SessionState::new(STATE_TAG, self.last[b]);
-        st.push_plane("x_re", flat(&self.x_re[b]));
-        st.push_plane("x_im", flat(&self.x_im[b]));
-        st.push_plane("sc", flat(&self.sc[b]));
+        st.push_plane("x_re", self.x_re[b].clone());
+        st.push_plane("x_im", self.x_im[b].clone());
+        st.push_plane("sc", self.linearized_sc(b));
         st
     }
 
+    /// The `sc` plane in blob (oldest-first) order, independent of the
+    /// physical cursor position.
+    fn linearized_sc(&self, b: usize) -> Vec<f32> {
+        let tail = self.bb.shape.short_kw - 1;
+        let row = &self.sc[b];
+        if tail == 0 {
+            return Vec::new();
+        }
+        let pos = self.sc_pos[b];
+        let mut out = Vec::with_capacity(row.len());
+        for win in row.chunks_exact(tail) {
+            for j in 0..tail {
+                let idx = pos + j;
+                out.push(win[if idx >= tail { idx - tail } else { idx }]);
+            }
+        }
+        out
+    }
+
     /// Reinstall a snapshot into one row, validating engine tag and shape.
+    /// The blob's oldest-first `sc` plane is installed at cursor 0 (where
+    /// physical order equals logical order).
     pub fn restore_row(&mut self, b: usize, st: &SessionState) -> Result<(), SessionError> {
         st.check_engine(STATE_TAG)?;
         let shape = &self.bb.shape;
@@ -209,16 +355,10 @@ impl RecurrentEngine {
         let x_re = st.plane_checked("x_re", x_len)?;
         let x_im = st.plane_checked("x_im", x_len)?;
         let sc = st.plane_checked("sc", sc_len)?;
-        let unflat = |flat: &[f32], layers: &mut [Vec<f32>]| {
-            let mut off = 0;
-            for l in layers {
-                l.copy_from_slice(&flat[off..off + l.len()]);
-                off += l.len();
-            }
-        };
-        unflat(x_re, &mut self.x_re[b]);
-        unflat(x_im, &mut self.x_im[b]);
-        unflat(sc, &mut self.sc[b]);
+        self.x_re[b].copy_from_slice(x_re);
+        self.x_im[b].copy_from_slice(x_im);
+        self.sc[b].copy_from_slice(sc);
+        self.sc_pos[b] = 0;
         self.last[b] = st.last_token;
         Ok(())
     }
@@ -231,19 +371,19 @@ impl RecurrentEngine {
     /// Replace the synthetic modal systems of one layer (distillery output).
     pub fn set_layer_modal(&mut self, layer: usize, systems: &[ModalSsm]) {
         assert_eq!(systems.len(), self.bb.shape.heads);
-        self.modal[layer] = systems.iter().map(HeadModal::from_ssm).collect();
+        self.modal[layer] =
+            LayerModal::from_heads(systems, self.bb.shape.d_model, self.d_state);
     }
 }
 
 /// Zero one row's per-layer generation buffers — the single reset site
 /// shared by [`RecurrentEngine::reset_row`] and the pooled prefill (add any
 /// new per-row state buffer here so slot recycling can't go stale).
-fn reset_row_bufs(xr: &mut [Vec<f32>], xi: &mut [Vec<f32>], sc: &mut [Vec<f32>]) {
-    for l in 0..xr.len() {
-        xr[l].fill(0.0);
-        xi[l].fill(0.0);
-        sc[l].fill(0.0);
-    }
+fn reset_row_state(xr: &mut [f32], xi: &mut [f32], sc: &mut [f32], pos: &mut usize) {
+    xr.fill(0.0);
+    xi.fill(0.0);
+    sc.fill(0.0);
+    *pos = 0;
 }
 
 /// Feed `tokens` through one row's recurrence (no reset) and return the
@@ -253,80 +393,125 @@ fn reset_row_bufs(xr: &mut [Vec<f32>], xi: &mut [Vec<f32>], sc: &mut [Vec<f32>])
 #[allow(clippy::too_many_arguments)]
 fn consume_row(
     bb: &Backbone,
-    modal: &[Vec<HeadModal>],
+    modal: &[LayerModal],
     d: usize,
     kw: usize,
-    group: usize,
     ds: usize,
-    sc_b: &mut [Vec<f32>],
-    xr: &mut [Vec<f32>],
-    xi: &mut [Vec<f32>],
+    sc_b: &mut [f32],
+    sc_pos: &mut usize,
+    xr_b: &mut [f32],
+    xi_b: &mut [f32],
+    scratch: &mut RowScratch,
     tokens: &[i32],
     fallback: i32,
 ) -> i32 {
     if tokens.is_empty() {
         return fallback;
     }
-    let mut logits = Vec::new();
+    let tail = kw - 1;
+    let x_plane = d * ds; // per-layer SSM plane length
+    let sc_plane = 3 * d * tail; // per-layer short-conv length
     for &tok in tokens {
-        logits = bb.decode_one(tok, |li, qkv| {
-            mix_one(d, kw, group, ds, &modal[li], &mut sc_b[li], &mut xr[li], &mut xi[li], qkv)
+        let pos = *sc_pos;
+        let RowScratch { bb: bb_scr, qkv_c } = scratch;
+        bb.decode_one(tok, bb_scr, |li, qkv, out| {
+            mix_one(
+                d,
+                kw,
+                ds,
+                &modal[li],
+                &mut sc_b[li * sc_plane..(li + 1) * sc_plane],
+                pos,
+                &mut xr_b[li * x_plane..(li + 1) * x_plane],
+                &mut xi_b[li * x_plane..(li + 1) * x_plane],
+                qkv,
+                qkv_c,
+                out,
+            );
         });
+        if tail > 0 {
+            *sc_pos = (pos + 1) % tail;
+        }
     }
-    bb.greedy(&logits)
+    bb.greedy(&scratch.bb.logits)
 }
 
-/// Fused short-conv + gated SSM mixer for one token of one sequence.
+/// Fused short-conv + gated SSM mixer for one token of one layer of one
+/// row, allocation-free: `qkv_c` is the row's short-conv scratch and `out`
+/// the backbone's mixer slot.  `pos` is the row's circular cursor into each
+/// channel's `kw-1`-slot window of `buf` (see `RecurrentEngine::sc_pos`).
 /// Free function so the backbone (&) and generation state (&mut) borrows
 /// stay disjoint.
 #[allow(clippy::too_many_arguments)]
 fn mix_one(
     d: usize,
     kw: usize,
-    group: usize,
     ds: usize,
-    modal_layer: &[HeadModal],
+    modal: &LayerModal,
     buf: &mut [f32],
+    pos: usize,
     xr: &mut [f32],
     xi: &mut [f32],
     qkv: &[f32],
-) -> Vec<f32> {
-    // short conv: fixed causal taps (engines measure cost; the AOT path
-    // carries learned taps)
-    let mut qkv_c = vec![0.0f32; 3 * d];
-    let w: [f32; 3] = [0.25, 0.35, 0.4];
-    for c in 0..3 * d {
-        let mut acc = w[kw - 1] * qkv[c];
-        for j in 0..kw - 1 {
-            acc += w[j] * buf[c * (kw - 1) + j];
+    qkv_c: &mut [f32],
+    out: &mut [f32],
+) {
+    // short conv against the circular window: taps SHORT_TAPS[..kw], the
+    // last weighting the current input, then overwrite the oldest slot
+    // (the caller advances the cursor once per token)
+    let tail = kw - 1;
+    let cur = SHORT_TAPS[tail];
+    if tail == 0 {
+        for (o, &x) in qkv_c.iter_mut().zip(qkv) {
+            *o = cur * x;
         }
-        qkv_c[c] = acc;
-        // roll buffer
-        for j in 0..kw - 2 {
-            buf[c * (kw - 1) + j] = buf[c * (kw - 1) + j + 1];
+    } else {
+        let taps = &SHORT_TAPS[..tail];
+        for c in 0..3 * d {
+            let win = &mut buf[c * tail..(c + 1) * tail];
+            let mut acc = cur * qkv[c];
+            for (j, &w) in taps.iter().enumerate() {
+                let idx = pos + j;
+                acc += w * win[if idx >= tail { idx - tail } else { idx }];
+            }
+            qkv_c[c] = acc;
+            win[pos] = qkv[c];
         }
-        buf[c * (kw - 1) + kw - 2] = qkv[c];
     }
     let (q, rest) = qkv_c.split_at(d);
     let (k, v) = rest.split_at(d);
-    // gated SSM update per channel
-    let mut y = vec![0.0f32; d];
+    // gated SSM update: one contiguous [D, d] FMA sweep over the
+    // interleaved modal plane (no per-channel head lookup)
     for c in 0..d {
-        let head = &modal_layer[c / group];
         let u = k[c] * v[c];
         let base = c * ds;
-        let mut acc = head.h0 * u;
-        for n in 0..ds {
-            let (re, im) = (xr[base + n], xi[base + n]);
-            acc += head.r_re[n] * re - head.r_im[n] * im;
-            let nr = head.lam_re[n] * re - head.lam_im[n] * im + u;
-            let ni = head.lam_re[n] * im + head.lam_im[n] * re;
-            xr[base + n] = nr;
-            xi[base + n] = ni;
-        }
-        y[c] = q[c] * acc;
+        let acc = ssm_channel_step(
+            &modal.plane[base * 4..(base + ds) * 4],
+            modal.h0[c],
+            u,
+            &mut xr[base..base + ds],
+            &mut xi[base..base + ds],
+        );
+        out[c] = q[c] * acc;
     }
-    y
+}
+
+/// One channel's modal-SSM update against its interleaved
+/// `[lam_re, lam_im, r_re, r_im]` plane slice: returns
+/// `h0*u + Re<R, x>` and advances the state in place — the f32
+/// transcription of [`ModalSsm::step`] (Prop. 3.3), kept standalone so the
+/// parity test can pin the fused kernel against the scalar reference.
+#[inline(always)]
+fn ssm_channel_step(plane: &[f32], h0: f32, u: f32, xr: &mut [f32], xi: &mut [f32]) -> f32 {
+    let mut acc = h0 * u;
+    for n in 0..xr.len() {
+        let m = &plane[n * 4..n * 4 + 4];
+        let (re, im) = (xr[n], xi[n]);
+        acc += m[2] * re - m[3] * im;
+        xr[n] = m[0] * re - m[1] * im + u;
+        xi[n] = m[0] * im + m[1] * re;
+    }
+    acc
 }
 
 fn random_modal(rng: &mut Prng, d: usize) -> ModalSsm {
@@ -362,22 +547,8 @@ impl Engine for RecurrentEngine {
     }
 
     fn decode(&mut self) -> Vec<i32> {
-        let mut out = Vec::with_capacity(self.batch);
-        let Self { bb, modal, x_re, x_im, sc, d_state, last, .. } = self;
-        let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
-        let group = d / bb.shape.heads;
-        for b in 0..last.len() {
-            let tok = last[b];
-            let (xr_b, xi_b, sc_b) = (&mut x_re[b], &mut x_im[b], &mut sc[b]);
-            let logits = bb.decode_one(tok, |li, qkv| {
-                mix_one(d, kw, group, *d_state, &modal[li], &mut sc_b[li],
-                        &mut xr_b[li], &mut xi_b[li], qkv)
-            });
-            let next = bb.greedy(&logits);
-            last[b] = next;
-            out.push(next);
-        }
-        out
+        let all: Vec<usize> = (0..self.batch).collect();
+        self.decode_rows(&all).into_iter().map(|(_, t)| t).collect()
     }
 
     fn state_bytes(&self) -> u64 {
@@ -397,6 +568,7 @@ impl Engine for RecurrentEngine {
 mod tests {
     use super::*;
     use crate::engine::run_generation;
+    use crate::util::prop::check;
 
     #[test]
     fn generates_tokens_in_vocab() {
@@ -521,5 +693,154 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(pooled.decode(), serial.decode());
         }
+    }
+
+    #[test]
+    fn pooled_decode_matches_serial_across_partial_active_sets() {
+        // the fused + pooled decode step must agree bit-for-bit with
+        // stepping each row on its own, for full and partial active sets
+        let shape = LmShape::bench("nano").unwrap();
+        let mut pooled = RecurrentEngine::new(&shape, 4, 31);
+        let mut serial = RecurrentEngine::new(&shape, 4, 31);
+        for b in 0..4 {
+            let p = vec![1 + b as i32, 9, 3, 7];
+            pooled.prefill_row(b, &p);
+            serial.prefill_row(b, &p);
+        }
+        let sets: [&[usize]; 5] = [&[0, 1, 2, 3], &[2], &[1, 3], &[0, 2, 3], &[3, 0]];
+        for active in sets {
+            let batch = pooled.decode_rows(active);
+            let one: Vec<(usize, i32)> =
+                active.iter().map(|&s| (s, serial.decode_row(s))).collect();
+            assert_eq!(batch, one, "active set {active:?}");
+        }
+    }
+
+    #[test]
+    fn fused_kernel_matches_modal_ssm_step_reference() {
+        // the fused per-channel update must (a) agree bit-for-bit with a
+        // scalar f32 transcription of ModalSsm::step run side by side, and
+        // (b) track the f64 ModalSsm::step reference on the same (f32-cast)
+        // poles/residues to f32 accumulation accuracy
+        check("fused SSM channel == ModalSsm::step", 16, |rng| {
+            let ds = 2 * (1 + rng.below(4));
+            let sys = random_modal(rng, ds);
+            // interleaved plane + the scalar parameter copies, f32-cast
+            // exactly like LayerModal::from_heads
+            let mut plane = Vec::with_capacity(ds * 4);
+            for n in 0..ds {
+                plane.push(sys.poles[n].re as f32);
+                plane.push(sys.poles[n].im as f32);
+                plane.push(sys.residues[n].re as f32);
+                plane.push(sys.residues[n].im as f32);
+            }
+            let h0 = sys.h0 as f32;
+            // f64 reference system over the f32-cast parameters
+            let sys32 = ModalSsm::new(
+                sys.poles.iter().map(|p| C64::new(p.re as f32 as f64, p.im as f32 as f64)).collect(),
+                sys.residues.iter().map(|r| C64::new(r.re as f32 as f64, r.im as f32 as f64)).collect(),
+                h0 as f64,
+            );
+            let mut st = sys32.zero_state();
+            let mut xr = vec![0.0f32; ds];
+            let mut xi = vec![0.0f32; ds];
+            let (mut rxr, mut rxi) = (vec![0.0f32; ds], vec![0.0f32; ds]);
+            for t in 0..24 {
+                let u = rng.normal() as f32;
+                let got = ssm_channel_step(&plane, h0, u, &mut xr, &mut xi);
+                // scalar f32 transcription of ModalSsm::step, same op order
+                let mut want = h0 * u;
+                for n in 0..ds {
+                    let (re, im) = (rxr[n], rxi[n]);
+                    want += plane[n * 4 + 2] * re - plane[n * 4 + 3] * im;
+                    rxr[n] = plane[n * 4] * re - plane[n * 4 + 1] * im + u;
+                    rxi[n] = plane[n * 4] * im + plane[n * 4 + 1] * re;
+                }
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!("step {t}: fused {got} != scalar {want}"));
+                }
+                for n in 0..ds {
+                    if xr[n].to_bits() != rxr[n].to_bits()
+                        || xi[n].to_bits() != rxi[n].to_bits()
+                    {
+                        return Err(format!("step {t}: state bits diverged at mode {n}"));
+                    }
+                }
+                let want64 = sys32.step(&mut st, u as f64);
+                // f32 state rounding compounds through the recurrence;
+                // 1e-3 is ~10x the worst accumulated drift and far below
+                // any formula-level mistake
+                let tol = 1e-3 * (1.0 + want64.abs());
+                if (got as f64 - want64).abs() > tol {
+                    return Err(format!(
+                        "step {t}: fused {got} vs f64 reference {want64} (tol {tol:.3e})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snapshot_is_cursor_invariant() {
+        // restoring a blob normalizes the circular cursor to 0;
+        // re-snapshotting must reproduce identical plane bytes even though
+        // the source row's cursor was mid-cycle
+        let shape = LmShape::bench("nano").unwrap();
+        let mut a = RecurrentEngine::new(&shape, 1, 9);
+        a.prefill_row(0, &[5, 4, 3]); // 3 tokens -> cursor mid-window
+        let snap = a.snapshot_row(0);
+        let mut b = RecurrentEngine::new(&shape, 1, 9);
+        b.restore_row(0, &snap).unwrap();
+        let snap2 = b.snapshot_row(0);
+        assert_eq!(snap.planes, snap2.planes);
+        assert_eq!(snap.last_token, snap2.last_token);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_checkpoint_serialization() {
+        // the PR-2 blob path end to end: snapshot -> checkpoint encode ->
+        // decode -> restore must continue bit-identically
+        let shape = LmShape::bench("nano").unwrap();
+        let mut a = RecurrentEngine::new(&shape, 1, 17);
+        a.prefill_row(0, &[6, 1, 8, 0, 3]);
+        let snap = a.snapshot_row(0);
+        let back = SessionState::from_checkpoint(&snap.to_checkpoint()).unwrap();
+        let cont_a: Vec<i32> = (0..5).map(|_| a.decode_row(0)).collect();
+        let mut b = RecurrentEngine::new(&shape, 1, 17);
+        b.restore_row(0, &back).unwrap();
+        let cont_b: Vec<i32> = (0..5).map(|_| b.decode_row(0)).collect();
+        assert_eq!(cont_a, cont_b);
+    }
+
+    #[test]
+    fn short_kw_one_runs_without_short_conv() {
+        // kw = 1 is the no-short-conv configuration: zero-length windows,
+        // empty sc plane, and the full generate/snapshot/resume cycle works
+        let mut shape = LmShape::bench("nano").unwrap();
+        shape.short_kw = 1;
+        let mut eng = RecurrentEngine::new(&shape, 2, 7);
+        let prompts = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let first = eng.prefill(&prompts);
+        assert_eq!(first.len(), 2);
+        for _ in 0..3 {
+            let toks = eng.decode();
+            assert!(toks.iter().all(|&t| (t as usize) < shape.vocab));
+        }
+        let snap = eng.snapshot_row(0);
+        assert_eq!(snap.plane("sc").unwrap().len(), 0);
+        let cont: Vec<i32> = (0..4).map(|_| eng.decode_row(0)).collect();
+        let mut other = RecurrentEngine::new(&shape, 2, 7);
+        other.restore_row(1, &snap).unwrap();
+        let cont_b: Vec<i32> = (0..4).map(|_| other.decode_row(1)).collect();
+        assert_eq!(cont, cont_b);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid LmShape")]
+    fn short_kw_zero_is_rejected_at_construction() {
+        let mut shape = LmShape::bench("nano").unwrap();
+        shape.short_kw = 0;
+        let _ = RecurrentEngine::new(&shape, 1, 7);
     }
 }

@@ -2,6 +2,15 @@
 //! plus CPU-scale shapes the measured benches actually run.  Parameter
 //! counts follow the GPT-style layout used throughout.
 
+/// Longest short-conv kernel the engines' fixed tap table supports.
+pub const MAX_SHORT_KW: usize = 3;
+
+/// Fixed causal short-conv taps shared by the native engines (the AOT path
+/// carries learned taps; the engines measure cost, not quality).  A kernel
+/// of width `kw` uses the first `kw` entries: `SHORT_TAPS[kw - 1]` weights
+/// the current input, `SHORT_TAPS[j]` the `j`-th oldest retained input.
+pub const SHORT_TAPS: [f32; MAX_SHORT_KW] = [0.25, 0.35, 0.4];
+
 /// Architecture shape (no weights).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LmShape {
@@ -68,6 +77,52 @@ impl LmShape {
         }
     }
 
+    /// Validate the structural invariants every engine relies on; returns
+    /// a description of the first violation.  Called by
+    /// [`super::backbone::Backbone::new`], so a bad shape fails loudly at
+    /// engine construction instead of underflowing inside a kernel.
+    ///
+    /// `short_kw == 1` is the valid no-short-conv configuration (the
+    /// rolling window has zero taps); `short_kw == 0` is meaningless and
+    /// rejected, as is a width past the fixed tap table or a head count
+    /// that does not divide `d_model`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.vocab == 0 || self.d_model == 0 || self.n_layer == 0 {
+            return Err(format!(
+                "{}: vocab, d_model and n_layer must all be nonzero",
+                self.name
+            ));
+        }
+        if self.short_kw == 0 {
+            return Err(format!(
+                "{}: short_kw must be >= 1 (1 means no short conv)",
+                self.name
+            ));
+        }
+        if self.short_kw > MAX_SHORT_KW {
+            return Err(format!(
+                "{}: short_kw {} exceeds the {MAX_SHORT_KW}-tap table",
+                self.name, self.short_kw
+            ));
+        }
+        if self.heads == 0 || self.d_model % self.heads != 0 {
+            return Err(format!(
+                "{}: heads {} must be nonzero and divide d_model {}",
+                self.name, self.heads, self.d_model
+            ));
+        }
+        if self.attn_heads == 0 || self.d_model % self.attn_heads != 0 {
+            return Err(format!(
+                "{}: attn_heads {} must be nonzero and divide d_model {}",
+                self.name, self.attn_heads, self.d_model
+            ));
+        }
+        if self.d_state == 0 {
+            return Err(format!("{}: d_state must be nonzero", self.name));
+        }
+        Ok(())
+    }
+
     /// Approximate parameter count (embeddings + per-layer projections).
     pub fn params(&self) -> u64 {
         let d = self.d_model as u64;
@@ -107,5 +162,32 @@ mod tests {
             assert!(LmShape::bench(n).is_some());
         }
         assert!(LmShape::bench("huge").is_none());
+    }
+
+    #[test]
+    fn presets_validate() {
+        for n in ["125m", "355m", "1.3b", "2.7b", "6.7b"] {
+            LmShape::paper(n).unwrap().validate().unwrap();
+        }
+        for n in ["nano", "micro", "mini"] {
+            LmShape::bench(n).unwrap().validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_short_kw_and_heads() {
+        let good = LmShape::bench("nano").unwrap();
+        let mut kw1 = good.clone();
+        kw1.short_kw = 1; // no-short-conv is a supported configuration
+        kw1.validate().unwrap();
+        let mut kw0 = good.clone();
+        kw0.short_kw = 0;
+        assert!(kw0.validate().unwrap_err().contains("short_kw"));
+        let mut kw9 = good.clone();
+        kw9.short_kw = MAX_SHORT_KW + 1;
+        assert!(kw9.validate().unwrap_err().contains("tap table"));
+        let mut heads = good.clone();
+        heads.heads = 7; // does not divide d_model = 64
+        assert!(heads.validate().unwrap_err().contains("heads"));
     }
 }

@@ -2,7 +2,7 @@
 //! an O(L) cache of two tensors per layer — the memory profile that caps
 //! Transformer batch sizes in Figure 1.1.
 
-use super::backbone::Backbone;
+use super::backbone::{Backbone, DecodeScratch};
 use super::shapes::LmShape;
 use super::Engine;
 use crate::session::{SessionError, SessionState};
@@ -17,6 +17,10 @@ pub struct TransformerEngine {
     k_cache: Vec<Vec<Vec<f32>>>,
     v_cache: Vec<Vec<Vec<f32>>>,
     last: Vec<i32>,
+    /// Token-step scratch (serial engine: one set for all rows).
+    scratch: DecodeScratch,
+    /// Attention-score scratch, grown to the cache length as needed.
+    scores: Vec<f32>,
 }
 
 impl TransformerEngine {
@@ -27,6 +31,8 @@ impl TransformerEngine {
             k_cache: vec![vec![Vec::new(); shape.n_layer]; batch],
             v_cache: vec![vec![Vec::new(); shape.n_layer]; batch],
             last: vec![0; batch],
+            scratch: DecodeScratch::new(shape),
+            scores: Vec::new(),
         }
     }
 
@@ -49,16 +55,15 @@ impl TransformerEngine {
         if tokens.is_empty() {
             return self.last[b];
         }
-        let Self { bb, k_cache, v_cache, last, .. } = self;
+        let Self { bb, k_cache, v_cache, last, scratch, scores, .. } = self;
         let (d, nh) = (bb.shape.d_model, bb.shape.attn_heads);
         let (kc_b, vc_b) = (&mut k_cache[b], &mut v_cache[b]);
-        let mut logits = Vec::new();
         for &tok in tokens {
-            logits = bb.decode_one(tok, |li, qkv| {
-                mix_attn(d, nh, &mut kc_b[li], &mut vc_b[li], qkv)
+            bb.decode_one(tok, scratch, |li, qkv, out| {
+                mix_attn(d, nh, &mut kc_b[li], &mut vc_b[li], qkv, scores, out)
             });
         }
-        let next = bb.greedy(&logits);
+        let next = bb.greedy(&scratch.logits);
         last[b] = next;
         next
     }
@@ -126,14 +131,17 @@ impl TransformerEngine {
     }
 }
 
-/// Multi-head causal attention over the cache for a single new position.
+/// Multi-head causal attention over the cache for a single new position,
+/// written into `y` (fully overwritten); `scores` is reusable scratch.
 fn mix_attn(
     d: usize,
     nh: usize,
     kc: &mut Vec<f32>,
     vc: &mut Vec<f32>,
     qkv: &[f32],
-) -> Vec<f32> {
+    scores: &mut Vec<f32>,
+    y: &mut [f32],
+) {
     let hd = d / nh;
     let (q, rest) = qkv.split_at(d);
     let (k, v) = rest.split_at(d);
@@ -141,8 +149,9 @@ fn mix_attn(
     vc.extend_from_slice(v);
     let t = kc.len() / d;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut y = vec![0.0f32; d];
-    let mut scores = vec![0.0f32; t];
+    y.fill(0.0);
+    scores.clear();
+    scores.resize(t, 0.0);
     for h in 0..nh {
         let off = h * hd;
         // scores over the whole cache (O(t * hd))
@@ -170,7 +179,6 @@ fn mix_attn(
             }
         }
     }
-    y
 }
 
 impl Engine for TransformerEngine {
@@ -239,7 +247,9 @@ mod tests {
             .map(|(i, _)| if i < d { 1.0 } else { 1.0 })
             .collect();
         // new token's k/v: ones and ones -> cache rows become 3
-        let y = mix_attn(d, 1, &mut kc, &mut vc, &qkv);
+        let mut y = vec![0.0f32; d];
+        let mut scores = Vec::new();
+        mix_attn(d, 1, &mut kc, &mut vc, &qkv, &mut scores, &mut y);
         // all three rows equal score -> y = mean(2, 4, 1) per channel
         for c in 0..d {
             assert!((y[c] - (2.0 + 4.0 + 1.0) / 3.0).abs() < 1e-5, "{}", y[c]);
