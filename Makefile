@@ -4,20 +4,23 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci lint doc bench bench-decode artifacts clean
+.PHONY: help build test verify ci lint doc bench bench-decode bench-smoke artifacts clean
 
 help:
 	@echo "targets:"
 	@echo "  build        cargo build --release"
 	@echo "  test         cargo test -q"
 	@echo "  verify       tier-1 gate: build + test"
-	@echo "  ci           full gate: build + test + clippy + docs, warnings denied"
+	@echo "  ci           full gate: build + test (with and without --features simd)"
+	@echo "               + clippy + docs (warnings denied) + decode bench smoke"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
 	@echo "               generation, coordinator, session, decode)"
 	@echo "  bench-decode decode hot-path bench with the 2x throughput gate;"
 	@echo "               rewrites BENCH_decode.json at the repo root"
+	@echo "  bench-smoke  1-iteration decode bench (--features simd, no gate,"
+	@echo "               no file writes) so bench code cannot rot"
 	@echo "  artifacts    lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
 	@echo "  clean        cargo clean + remove results/"
 
@@ -30,12 +33,24 @@ test:
 # tier-1 gate: build + full test suite
 verify: build test
 
-# full CI chain: tier-1 plus clippy and rustdoc with warnings denied
+# full CI chain: tier-1 (default features AND the simd intrinsics path)
+# plus clippy, rustdoc with warnings denied, and the decode bench smoke
 ci:
 	$(CARGO) build --release
+	$(CARGO) build --release --features simd
 	$(CARGO) test -q
+	$(CARGO) test -q --features simd
 	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	$(MAKE) bench-smoke
+
+# 1-iteration run of the decode bench (keeps its correctness cross-checks,
+# skips the gate and the BENCH_decode.json/CSV writes): proves the bench
+# still compiles and agrees without touching the recorded perf point.
+# Built with --features simd so the intrinsics path stays exercised.
+bench-smoke:
+	DECODE_BENCH_SMOKE=1 $(CARGO) bench --bench decode --features simd
 
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings
@@ -53,9 +68,11 @@ bench:
 
 # decode hot-path throughput with the regression gate (fused+pooled must
 # reach 2x the unfused serial baseline somewhere on the batch sweep);
-# emits BENCH_decode.json (repo root) + results/bench_decode.csv
+# emits BENCH_decode.json (repo root) + results/bench_decode.csv.  Runs
+# with --features simd so the recorded point carries the SIMD delta (the
+# scalar fallback is measured in the same run via the forced-scalar pass).
 bench-decode:
-	DECODE_BENCH_GATE=1 $(CARGO) bench --bench decode
+	DECODE_BENCH_GATE=1 $(CARGO) bench --bench decode --features simd
 
 # Lower the L2 graphs to HLO artifacts under rust/artifacts/ (needs JAX).
 artifacts:

@@ -36,11 +36,12 @@ pub struct Distillery {
     pub hankel_window: Option<usize>,
     /// Hyperparameters of the per-filter modal interpolation (§3.2).
     pub fit: DistillConfig,
-    /// Worker threads for multi-filter banks in
-    /// [`Distillery::distill_all`]; None = one per available core,
-    /// `Some(1)` forces the sequential path. Each filter's fit is
-    /// deterministic and independent, so the report is bit-identical at
-    /// any thread count.
+    /// Fan-out width for multi-filter banks in
+    /// [`Distillery::distill_all`]; None = one lane per available core,
+    /// `Some(1)` forces the sequential path. The lanes are the shared
+    /// persistent [`Pool`] workers (`Some(n)` caps the width, it does not
+    /// spawn). Each filter's fit is deterministic and independent, so the
+    /// report is bit-identical at any width.
     pub threads: Option<usize>,
 }
 

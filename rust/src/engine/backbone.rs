@@ -73,10 +73,10 @@ impl Backbone {
         let embed: Vec<f32> = (0..shape.vocab * d)
             .map(|_| (rng.normal() * 0.02) as f32)
             .collect();
-        // Per-layer weight init fans out over the pool (the bulk of the
-        // coordinator's engine-factory cost). Each layer draws from its own
-        // splitmix-derived stream, so construction is deterministic per
-        // seed at any thread count.
+        // Per-layer weight init fans out over the shared persistent pool
+        // (the bulk of the coordinator's engine-factory cost). Each layer
+        // draws from its own splitmix-derived stream, so construction is
+        // deterministic per seed at any thread count.
         let layers = Pool::auto().map((0..shape.n_layer).collect::<Vec<usize>>(), |li| {
             let mut lr = Prng::derived(seed, li as u64);
             Layer {

@@ -18,6 +18,7 @@ pub mod backbone;
 pub mod conv_cache;
 pub mod linear;
 pub mod memory;
+pub mod modal_sweep;
 pub mod recurrent;
 pub mod shapes;
 pub mod transformer;

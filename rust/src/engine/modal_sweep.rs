@@ -1,0 +1,356 @@
+//! The per-channel modal sweep — the innermost arithmetic of the decode
+//! hot path (Prop. 3.3: one diagonal-SSM update + output contraction per
+//! channel per token) — as a lane-structured kernel with an optional
+//! explicit-SIMD path.
+//!
+//! # The canonical kernel
+//!
+//! [`ssm_channel_step`] consumes a channel's interleaved
+//! `[lam_re, lam_im, r_re, r_im]` parameter plane (see
+//! `recurrent::LayerModal`) and advances its `(x_re, x_im)` state in
+//! place, returning `h0*u + Re⟨R, x⟩`.  The *state* update of mode `n`
+//! touches only mode `n`, so its evaluation order is free; the output
+//! *contraction* is a float sum, whose order is pinned so every
+//! implementation produces identical bits:
+//!
+//! * modes are swept in groups of [`LANES`] = 8, each group accumulating
+//!   element-wise into 8 **lane accumulators** (`lane j` takes modes
+//!   `j, j+8, j+16, …` of the full groups);
+//! * the ragged tail (`d_state % 8` trailing modes) accumulates
+//!   sequentially into a separate scalar;
+//! * the result is `(h0*u + tree(lanes)) + tail`, where `tree` is the
+//!   fixed reduction `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — exactly
+//!   the shape an 8-wide register reduces in (extract high half, add,
+//!   movehl, add, shuffle, add).
+//!
+//! Because the lane structure *is* the vector structure, LLVM can
+//! auto-vectorize the stable-Rust kernel without reassociating any float
+//! math, and the `core::arch` path below implements the same ops in the
+//! same order — which is what makes the two **bit-identical**, property-
+//! tested in this module and leaned on by every snapshot/resume
+//! invariant upstream.
+//!
+//! # SIMD dispatch
+//!
+//! With `--features simd` on `x86_64`, [`sweep`] routes channels with at
+//! least one full lane group through an AVX2 kernel
+//! (`is_x86_feature_detected!` checked once, cached); everything else —
+//! other architectures, builds without the feature, pre-AVX2 CPUs,
+//! channels with `d_state < 8` — takes the scalar kernel.  No FMA is
+//! ever used: contraction would change the bits.  [`force_scalar`] turns
+//! the SIMD path off at runtime so the decode bench can measure the
+//! delta inside one process.
+
+/// Mode-group width of the canonical kernel (f32 lanes of one 256-bit
+/// register); the contraction's lane accumulators have this many slots.
+pub const LANES: usize = 8;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// When set, [`sweep`] always takes the scalar kernel (bench hook for
+/// measuring the SIMD delta; results are bit-identical either way).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Route [`sweep`] through the scalar kernel even when SIMD is available
+/// (`on = true`), or restore auto dispatch (`on = false`).
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// True when [`sweep`] currently dispatches to the explicit-SIMD kernel:
+/// the `simd` feature is compiled in, the CPU reports AVX2, and
+/// [`force_scalar`] is off.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_active() -> bool {
+    !FORCE_SCALAR.load(Ordering::Relaxed) && have_avx2()
+}
+
+/// True when [`sweep`] currently dispatches to the explicit-SIMD kernel
+/// (always false in builds without `--features simd` or off `x86_64`).
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_active() -> bool {
+    false
+}
+
+/// One-time cached `is_x86_feature_detected!("avx2")`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn have_avx2() -> bool {
+    use std::sync::atomic::AtomicU8;
+    // 0 = unknown, 1 = absent, 2 = present
+    static DETECTED: AtomicU8 = AtomicU8::new(0);
+    match DETECTED.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let ok = std::arch::is_x86_feature_detected!("avx2");
+            DETECTED.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+            ok
+        }
+    }
+}
+
+/// One channel's modal-SSM update against its interleaved
+/// `[lam_re, lam_im, r_re, r_im]` plane slice, dispatching to the SIMD
+/// kernel when available (see module docs): returns `h0*u + Re⟨R, x⟩`
+/// and advances the state in place.  Bit-identical to
+/// [`ssm_channel_step`] on every input, on every path.
+#[inline]
+pub fn sweep(plane: &[f32], h0: f32, u: f32, xr: &mut [f32], xi: &mut [f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if xr.len() >= LANES && simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime.
+        return unsafe { x86::sweep_avx2(plane, h0, u, xr, xi) };
+    }
+    ssm_channel_step(plane, h0, u, xr, xi)
+}
+
+/// The canonical scalar kernel (the f32 transcription of
+/// [`crate::ssm::ModalSsm::step`], with the contraction in the pinned
+/// lane order — see module docs).  Always available; written so LLVM can
+/// auto-vectorize it without touching float semantics.
+#[inline]
+pub fn ssm_channel_step(plane: &[f32], h0: f32, u: f32, xr: &mut [f32], xi: &mut [f32]) -> f32 {
+    let ds = xr.len();
+    debug_assert_eq!(plane.len(), ds * 4);
+    debug_assert_eq!(xi.len(), ds);
+    let full = ds - ds % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut g = 0;
+    while g < full {
+        for j in 0..LANES {
+            let n = g + j;
+            let m = &plane[n * 4..n * 4 + 4];
+            let (re, im) = (xr[n], xi[n]);
+            lanes[j] += m[2] * re - m[3] * im;
+            xr[n] = m[0] * re - m[1] * im + u;
+            xi[n] = m[0] * im + m[1] * re;
+        }
+        g += LANES;
+    }
+    let mut tail = 0.0f32;
+    for n in full..ds {
+        let m = &plane[n * 4..n * 4 + 4];
+        let (re, im) = (xr[n], xi[n]);
+        tail += m[2] * re - m[3] * im;
+        xr[n] = m[0] * re - m[1] * im + u;
+        xi[n] = m[0] * im + m[1] * re;
+    }
+    (h0 * u + lane_tree(&lanes)) + tail
+}
+
+/// The pinned reduction tree over the lane accumulators — exactly the op
+/// sequence the AVX2 epilogue performs, so both paths add in the same
+/// order.
+#[inline]
+fn lane_tree(l: &[f32; LANES]) -> f32 {
+    let b = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    (b[0] + b[2]) + (b[1] + b[3])
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::LANES;
+    use core::arch::x86_64::*;
+
+    /// AVX2 modal sweep: per 8-mode group, de-interleave the
+    /// `[lam_re, lam_im, r_re, r_im]` quadruples with a two-level
+    /// transpose (cross-lane 128-bit permutes, then the classic in-lane
+    /// 4x4 unpack/shuffle), update both state registers, and accumulate
+    /// the contraction into one 8-lane register.  Only `mul`/`add`/`sub`
+    /// — never FMA — in the exact op order of
+    /// [`super::ssm_channel_step`], ending in the same reduction tree
+    /// and the same sequential scalar tail, so the two kernels are
+    /// bit-identical on every input.
+    ///
+    /// # Safety
+    ///
+    /// The caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sweep_avx2(
+        plane: &[f32],
+        h0: f32,
+        u: f32,
+        xr: &mut [f32],
+        xi: &mut [f32],
+    ) -> f32 {
+        let ds = xr.len();
+        debug_assert_eq!(plane.len(), ds * 4);
+        debug_assert_eq!(xi.len(), ds);
+        let full = ds - ds % LANES;
+        let p = plane.as_ptr();
+        let xrp = xr.as_mut_ptr();
+        let xip = xi.as_mut_ptr();
+        let uv = _mm256_set1_ps(u);
+        let mut acc = _mm256_setzero_ps();
+        let mut g = 0usize;
+        while g < full {
+            // 8 interleaved quadruples = 32 contiguous floats
+            let q = p.add(g * 4);
+            let v0 = _mm256_loadu_ps(q); //           modes g+0, g+1
+            let v1 = _mm256_loadu_ps(q.add(8)); //    modes g+2, g+3
+            let v2 = _mm256_loadu_ps(q.add(16)); //   modes g+4, g+5
+            let v3 = _mm256_loadu_ps(q.add(24)); //   modes g+6, g+7
+            // pair quad k with quad k+4 across the 128-bit halves ...
+            let t0 = _mm256_permute2f128_ps::<0x20>(v0, v2); // quads 0 | 4
+            let t1 = _mm256_permute2f128_ps::<0x31>(v0, v2); // quads 1 | 5
+            let t2 = _mm256_permute2f128_ps::<0x20>(v1, v3); // quads 2 | 6
+            let t3 = _mm256_permute2f128_ps::<0x31>(v1, v3); // quads 3 | 7
+            // ... then transpose each half's 4x4 block in-lane
+            let u0 = _mm256_unpacklo_ps(t0, t1); // lam_re01 lam_im01 | ..45
+            let u1 = _mm256_unpackhi_ps(t0, t1); // r_re01   r_im01   | ..45
+            let u2 = _mm256_unpacklo_ps(t2, t3); // lam_re23 lam_im23 | ..67
+            let u3 = _mm256_unpackhi_ps(t2, t3); // r_re23   r_im23   | ..67
+            let lam_re = _mm256_shuffle_ps::<0b01_00_01_00>(u0, u2);
+            let lam_im = _mm256_shuffle_ps::<0b11_10_11_10>(u0, u2);
+            let r_re = _mm256_shuffle_ps::<0b01_00_01_00>(u1, u3);
+            let r_im = _mm256_shuffle_ps::<0b11_10_11_10>(u1, u3);
+            let re = _mm256_loadu_ps(xrp.add(g));
+            let im = _mm256_loadu_ps(xip.add(g));
+            // lanes[j] += r_re*re - r_im*im
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_sub_ps(_mm256_mul_ps(r_re, re), _mm256_mul_ps(r_im, im)),
+            );
+            // x <- lam*x + u (complex multiply, real input injection)
+            let nr = _mm256_add_ps(
+                _mm256_sub_ps(_mm256_mul_ps(lam_re, re), _mm256_mul_ps(lam_im, im)),
+                uv,
+            );
+            let ni = _mm256_add_ps(_mm256_mul_ps(lam_re, im), _mm256_mul_ps(lam_im, re));
+            _mm256_storeu_ps(xrp.add(g), nr);
+            _mm256_storeu_ps(xip.add(g), ni);
+            g += LANES;
+        }
+        // the exact lane_tree reduction: halves, movehl, lane-1 shuffle
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps::<1>(acc);
+        let b = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let c = _mm_add_ps(b, _mm_movehl_ps(b, b)); // [b0+b2, b1+b3, ..]
+        let tree = _mm_cvtss_f32(_mm_add_ss(c, _mm_shuffle_ps::<0b01>(c, c)));
+        // sequential scalar tail, same order as the canonical kernel
+        let mut tail = 0.0f32;
+        for n in full..ds {
+            let m = &plane[n * 4..n * 4 + 4];
+            let (re, im) = (xr[n], xi[n]);
+            tail += m[2] * re - m[3] * im;
+            xr[n] = m[0] * re - m[1] * im + u;
+            xi[n] = m[0] * im + m[1] * re;
+        }
+        (h0 * u + tree) + tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use std::sync::Mutex;
+
+    /// Tests that read *or* toggle the process-global [`force_scalar`]
+    /// flag serialize here, so a concurrently running toggle test cannot
+    /// silently strip the SIMD path out of the bit-identity property test
+    /// (the harness runs tests on multiple threads).
+    static DISPATCH_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Random (plane, h0) in the ranges the distillery produces: stable
+    /// poles, O(1) residues.
+    fn random_plane(rng: &mut crate::util::Prng, ds: usize) -> (Vec<f32>, f32) {
+        let mut plane = Vec::with_capacity(ds * 4);
+        for _ in 0..ds {
+            let (r, th) = (rng.range(0.3, 0.99), rng.range(0.0, 6.28));
+            plane.push((r * th.cos()) as f32);
+            plane.push((r * th.sin()) as f32);
+            plane.push(rng.normal() as f32);
+            plane.push(rng.normal() as f32);
+        }
+        (plane, rng.normal() as f32)
+    }
+
+    #[test]
+    fn dispatch_is_bit_identical_to_scalar_across_shapes() {
+        // the tentpole invariant: whatever `sweep` dispatches to (AVX2
+        // when built with --features simd on an AVX2 machine, scalar
+        // otherwise) must match the canonical kernel bit for bit —
+        // output AND state — including ragged tails (ds % 8 != 0) and
+        // sub-lane shapes (ds < 8)
+        let _dispatch = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        check("sweep dispatch == scalar kernel", 64, |rng| {
+            let ds = 1 + rng.below(21); // 1..=21 covers <8, =8, 16, ragged
+            let (plane, h0) = random_plane(rng, ds);
+            let mut xr_a = vec![0.0f32; ds];
+            let mut xi_a = vec![0.0f32; ds];
+            let mut xr_b = vec![0.0f32; ds];
+            let mut xi_b = vec![0.0f32; ds];
+            for t in 0..32 {
+                let u = rng.normal() as f32;
+                let got = sweep(&plane, h0, u, &mut xr_a, &mut xi_a);
+                let want = ssm_channel_step(&plane, h0, u, &mut xr_b, &mut xi_b);
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "ds={ds} step {t}: sweep {got} != scalar {want} \
+                         (simd_active={})",
+                        simd_active()
+                    ));
+                }
+                for n in 0..ds {
+                    if xr_a[n].to_bits() != xr_b[n].to_bits()
+                        || xi_a[n].to_bits() != xi_b[n].to_bits()
+                    {
+                        return Err(format!("ds={ds} step {t}: state bits at mode {n}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn force_scalar_roundtrips_and_keeps_bits() {
+        // flipping the bench hook must not change a single bit
+        let _dispatch = DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let mut rng = crate::util::Prng::new(42);
+        let ds = 16;
+        let (plane, h0) = random_plane(&mut rng, ds);
+        let (mut xr_a, mut xi_a) = (vec![0.0f32; ds], vec![0.0f32; ds]);
+        let (mut xr_b, mut xi_b) = (vec![0.0f32; ds], vec![0.0f32; ds]);
+        for _ in 0..16 {
+            let u = rng.normal() as f32;
+            force_scalar(false);
+            let auto = sweep(&plane, h0, u, &mut xr_a, &mut xi_a);
+            force_scalar(true);
+            assert!(!simd_active(), "force_scalar must win the dispatch");
+            let scal = sweep(&plane, h0, u, &mut xr_b, &mut xi_b);
+            force_scalar(false);
+            assert_eq!(auto.to_bits(), scal.to_bits());
+        }
+    }
+
+    #[test]
+    fn tail_is_sequential_and_lanes_are_strided() {
+        // pin the contraction order contract itself: lane j owns modes
+        // j, j+8, ... of the full groups; the tail sums sequentially;
+        // the tree is ((l0+l4)+(l2+l6)) + ((l1+l7... see lane_tree)
+        let ds = 11; // one full group + 3-mode tail
+        let plane: Vec<f32> = (0..ds)
+            .flat_map(|n| [0.0, 0.0, (n + 1) as f32, 0.0])
+            .collect();
+        let mut xr = vec![1.0f32; ds];
+        let mut xi = vec![0.0f32; ds];
+        let got = ssm_channel_step(&plane, 0.0, 0.0, &mut xr, &mut xi);
+        // lanes j = 1..=8 (modes 0..8), tail = 9 + 10 + 11
+        let l: Vec<f32> = (1..=8).map(|v| v as f32).collect();
+        let b = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+        let want = ((b[0] + b[2]) + (b[1] + b[3])) + (9.0 + 10.0 + 11.0);
+        assert_eq!(got.to_bits(), want.to_bits());
+        // state picked up u = 0 through lam = 0: fully zeroed
+        assert!(xr.iter().chain(xi.iter()).all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn zero_modes_degenerates_to_h0_times_u() {
+        let (mut xr, mut xi) = (Vec::new(), Vec::new());
+        let got = ssm_channel_step(&[], 0.5, -2.0, &mut xr, &mut xi);
+        assert_eq!(got, (0.5f32 * -2.0 + 0.0) + 0.0);
+        assert_eq!(got.to_bits(), sweep(&[], 0.5, -2.0, &mut xr, &mut xi).to_bits());
+    }
+}

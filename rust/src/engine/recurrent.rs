@@ -12,7 +12,7 @@
 //!   single linear sweep with no per-layer pointer chasing.
 //! * **Interleaved modal plane.**  Per layer the modal parameters are
 //!   pre-broadcast to channel order as `[lam_re, lam_im, r_re, r_im]`
-//!   quadruples, so the `[D, d]` sweep is one contiguous FMA pass with no
+//!   quadruples, so the `[D, d]` sweep is one contiguous pass with no
 //!   per-channel head lookup or division.
 //! * **Circular short-conv windows.**  The `kw-1` retained inputs per
 //!   channel are indexed by a per-row cursor instead of memmove-shifted on
@@ -23,7 +23,13 @@
 //!   [`Backbone::decode_one`] perform zero heap allocations in steady
 //!   state, and [`RecurrentEngine::decode_rows`] can fan rows out over the
 //!   [`Pool`] without contention — decode parallelizes like prefill
-//!   already did.
+//!   already did.  The pool's workers are persistent (parked between
+//!   steps), so the per-step fan-out costs a handoff, not thread spawns.
+//! * **Vectorized modal sweep.**  The per-channel contraction + state
+//!   update runs through [`super::modal_sweep::sweep`]: a lane-structured
+//!   kernel (auto-vectorizable on stable Rust) with an AVX2 path behind
+//!   `--features simd`, bit-identical to the scalar kernel by
+//!   construction.
 
 use super::backbone::{Backbone, DecodeScratch};
 use super::shapes::{LmShape, SHORT_TAPS};
@@ -480,12 +486,13 @@ fn mix_one(
     }
     let (q, rest) = qkv_c.split_at(d);
     let (k, v) = rest.split_at(d);
-    // gated SSM update: one contiguous [D, d] FMA sweep over the
-    // interleaved modal plane (no per-channel head lookup)
+    // gated SSM update: one contiguous [D, d] sweep over the interleaved
+    // modal plane (no per-channel head lookup), dispatched through the
+    // lane-structured / SIMD kernel — see engine::modal_sweep
     for c in 0..d {
         let u = k[c] * v[c];
         let base = c * ds;
-        let acc = ssm_channel_step(
+        let acc = super::modal_sweep::sweep(
             &modal.plane[base * 4..(base + ds) * 4],
             modal.h0[c],
             u,
@@ -494,24 +501,6 @@ fn mix_one(
         );
         out[c] = q[c] * acc;
     }
-}
-
-/// One channel's modal-SSM update against its interleaved
-/// `[lam_re, lam_im, r_re, r_im]` plane slice: returns
-/// `h0*u + Re<R, x>` and advances the state in place — the f32
-/// transcription of [`ModalSsm::step`] (Prop. 3.3), kept standalone so the
-/// parity test can pin the fused kernel against the scalar reference.
-#[inline(always)]
-fn ssm_channel_step(plane: &[f32], h0: f32, u: f32, xr: &mut [f32], xi: &mut [f32]) -> f32 {
-    let mut acc = h0 * u;
-    for n in 0..xr.len() {
-        let m = &plane[n * 4..n * 4 + 4];
-        let (re, im) = (xr[n], xi[n]);
-        acc += m[2] * re - m[3] * im;
-        xr[n] = m[0] * re - m[1] * im + u;
-        xi[n] = m[0] * im + m[1] * re;
-    }
-    acc
 }
 
 fn random_modal(rng: &mut Prng, d: usize) -> ModalSsm {
@@ -718,15 +707,22 @@ mod tests {
 
     #[test]
     fn fused_kernel_matches_modal_ssm_step_reference() {
-        // the fused per-channel update must (a) agree bit-for-bit with a
-        // scalar f32 transcription of ModalSsm::step run side by side, and
-        // (b) track the f64 ModalSsm::step reference on the same (f32-cast)
-        // poles/residues to f32 accumulation accuracy
+        // the fused per-channel update must (a) agree bit-for-bit with the
+        // canonical lane-ordered kernel whatever `sweep` dispatches to
+        // (scalar or AVX2 — see engine::modal_sweep for the exhaustive
+        // shape sweep), (b) advance the *state* bit-identically to a
+        // scalar f32 transcription of ModalSsm::step (the state update is
+        // order-free), and (c) track the f64 ModalSsm::step reference on
+        // the same (f32-cast) poles/residues to f32 accumulation accuracy.
+        // The output contraction is compared to the sequential
+        // transcription with a reassociation tolerance: its lane-tree
+        // order (chosen so the kernel vectorizes without changing bits
+        // between scalar and SIMD) reorders the sum.
+        use crate::engine::modal_sweep;
         check("fused SSM channel == ModalSsm::step", 16, |rng| {
-            let ds = 2 * (1 + rng.below(4));
+            let ds = 2 * (1 + rng.below(8)); // 2..=16: sub-lane and full-lane
             let sys = random_modal(rng, ds);
-            // interleaved plane + the scalar parameter copies, f32-cast
-            // exactly like LayerModal::from_heads
+            // interleaved plane, f32-cast exactly like LayerModal::from_heads
             let mut plane = Vec::with_capacity(ds * 4);
             for n in 0..ds {
                 plane.push(sys.poles[n].re as f32);
@@ -744,27 +740,38 @@ mod tests {
             let mut st = sys32.zero_state();
             let mut xr = vec![0.0f32; ds];
             let mut xi = vec![0.0f32; ds];
+            let (mut cxr, mut cxi) = (vec![0.0f32; ds], vec![0.0f32; ds]);
             let (mut rxr, mut rxi) = (vec![0.0f32; ds], vec![0.0f32; ds]);
             for t in 0..24 {
                 let u = rng.normal() as f32;
-                let got = ssm_channel_step(&plane, h0, u, &mut xr, &mut xi);
-                // scalar f32 transcription of ModalSsm::step, same op order
-                let mut want = h0 * u;
+                let got = modal_sweep::sweep(&plane, h0, u, &mut xr, &mut xi);
+                let canon = modal_sweep::ssm_channel_step(&plane, h0, u, &mut cxr, &mut cxi);
+                if got.to_bits() != canon.to_bits() {
+                    return Err(format!("step {t}: dispatch {got} != canonical {canon}"));
+                }
+                // scalar f32 transcription of ModalSsm::step, sequential order
+                let mut seq = h0 * u;
                 for n in 0..ds {
                     let (re, im) = (rxr[n], rxi[n]);
-                    want += plane[n * 4 + 2] * re - plane[n * 4 + 3] * im;
+                    seq += plane[n * 4 + 2] * re - plane[n * 4 + 3] * im;
                     rxr[n] = plane[n * 4] * re - plane[n * 4 + 1] * im + u;
                     rxi[n] = plane[n * 4] * im + plane[n * 4 + 1] * re;
-                }
-                if got.to_bits() != want.to_bits() {
-                    return Err(format!("step {t}: fused {got} != scalar {want}"));
                 }
                 for n in 0..ds {
                     if xr[n].to_bits() != rxr[n].to_bits()
                         || xi[n].to_bits() != rxi[n].to_bits()
+                        || cxr[n].to_bits() != rxr[n].to_bits()
+                        || cxi[n].to_bits() != rxi[n].to_bits()
                     {
                         return Err(format!("step {t}: state bits diverged at mode {n}"));
                     }
+                }
+                // sequential vs lane-tree order: pure reassociation noise
+                let rtol = 1e-4 * (1.0 + seq.abs());
+                if (got - seq).abs() > rtol {
+                    return Err(format!(
+                        "step {t}: fused {got} vs sequential {seq} (tol {rtol:.3e})"
+                    ));
                 }
                 let want64 = sys32.step(&mut st, u as f64);
                 // f32 state rounding compounds through the recurrence;

@@ -56,8 +56,9 @@ pub fn extract_filters(
 /// the fixed-shape decode artifact.
 ///
 /// Every (layer, head) fit is independent and carries its own derived seed,
-/// so the whole bank fans out over [`crate::util::pool::Pool`] with results
-/// identical to the sequential order (row-major over layers then heads).
+/// so the whole bank fans out over the persistent
+/// [`crate::util::pool::Pool`] workers with results identical to the
+/// sequential order (row-major over layers then heads).
 pub fn distill_filters(
     filters: &[Vec<Vec<f64>>],
     order: usize,

@@ -1,5 +1,5 @@
 //! Small self-contained utilities: PRNG, statistics, property-testing, and
-//! a scoped thread pool.
+//! a persistent worker pool.
 //!
 //! The offline build image ships only the `xla` crate's dependency closure
 //! (no `rand`, no `proptest`, no `criterion`, no `rayon`), so these

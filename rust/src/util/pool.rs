@@ -1,16 +1,43 @@
-//! Scoped thread pool for embarrassingly parallel fan-out (rayon is not in
-//! the offline crate set; see DESIGN.md §6 "Substitutions").
+//! Persistent worker pool for embarrassingly parallel fan-out (rayon is
+//! not in the offline crate set; see DESIGN.md §6 "Substitutions").
 //!
-//! The distillery hot path — one independent modal fit per filter of a
-//! multi-head filter bank — and the per-row engine prefill are pure
-//! fan-out: no shared mutable state, results keyed by index. [`Pool::map`]
-//! covers exactly that shape with `std::thread::scope`, so borrowed inputs
-//! (`&self`, `&mut` state rows) flow into workers without `Arc` or cloning.
+//! The decode hot path fans out *every token step*: at one token of work
+//! per row per call, the spawn cost of the old scoped-thread design
+//! (`std::thread::scope` + N spawns per [`Pool::map`]) was a visible
+//! fraction of the fused kernel.  Workers are therefore **long-lived**:
+//! spawned once, parked on per-lane condvars, and handed each `map` call
+//! through an epoch-stamped job cell.  The calling thread participates as
+//! lane 0, so a `map` costs two mutex round-trips and the targeted
+//! condvar wakeups — no thread creation anywhere on the steady-state
+//! path.
 //!
-//! Determinism: items are striped round-robin over workers and results are
-//! written back by original index, so `map` returns bit-identical output in
-//! the original order regardless of thread count (tested against the
-//! sequential path in `distill::pipeline`).
+//! * **Handoff.**  `map` type-erases a per-lane dispatch closure into the
+//!   shared cell, bumps the epoch, and wakes the workers; every worker
+//!   runs each epoch exactly once and decrements a pending counter, on
+//!   which the caller blocks.  Borrowed inputs (`&self`, `&mut` state
+//!   rows) still flow into workers without `Arc` or cloning: the caller
+//!   cannot return — not even by unwinding — before every worker is done
+//!   with the erased borrow.
+//! * **Determinism.**  Items are striped round-robin over the lanes and
+//!   results are written back by original index, so `map` returns
+//!   bit-identical output in the original order regardless of lane count
+//!   (tested against the sequential path in `distill::pipeline`).
+//! * **Panics** in any worker are caught, carried across the handoff, and
+//!   re-raised on the calling thread with the original payload; the pool
+//!   stays usable afterwards.
+//! * **Lifecycle.**  [`Pool::auto`] and [`Pool::new`] are width-capped
+//!   handles onto one process-global pool sized from
+//!   `available_parallelism` (workers spawn on first use and live for the
+//!   process).  [`Pool::dedicated`] builds a private pool whose `Drop`
+//!   shuts the workers down and joins them — nothing leaks.
+//! * **Re-entrancy & contention.**  A `map` issued from inside a pool
+//!   worker (or from a caller already inside `map`) runs sequentially
+//!   inline, and a `map` that finds the pool busy with another thread's
+//!   epoch retries briefly then does the same instead of parking
+//!   unboundedly — so no lock-ordering deadlock can form through user
+//!   closures, and callers never convoy behind each other.  Fan-outs
+//!   smaller than the worker set wake and wait for only the lanes they
+//!   use; idle cores stay parked.
 //!
 //! ```
 //! use laughing_hyena::util::pool::Pool;
@@ -19,47 +46,309 @@
 //! let squares = pool.map((0..8u64).collect::<Vec<_>>(), |x| x * x);
 //! assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
 //!
-//! // Pool::auto() sizes itself from the available cores.
+//! // Pool::auto() fans out over all available cores.
 //! assert!(Pool::auto().threads() >= 1);
 //! ```
 
-/// A lightweight scoped thread pool: threads are spawned per [`Pool::map`]
-/// call inside a `std::thread::scope`, so there are no persistent workers,
-/// no channels, and borrowed data can cross into the workers safely.
-#[derive(Clone, Copy, Debug)]
-pub struct Pool {
-    threads: usize,
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Poison-tolerant lock: a panic propagating out of `map` unwinds while
+/// pool mutexes are held (that is by design — the panic is the caller's),
+/// and the pool must stay fully usable afterwards.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Poison-tolerant condvar wait (see [`lock`]).
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// True on pool worker threads and on any thread currently inside
+    /// [`Pool::map`]; nested `map` calls see it and run inline.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Handle onto a worker pool, cheap to clone.  [`Pool::auto`] /
+/// [`Pool::new`] share the process-global workers; [`Pool::dedicated`]
+/// owns private ones.
+#[derive(Clone)]
+pub struct Pool {
+    /// Max fan-out this handle uses (1 = sequential).
+    width: usize,
+    core: Arc<Core>,
+}
+
+/// Lifetime-erased `&dyn Fn(lane)` published for one epoch.  Only valid
+/// while the publishing [`Core::run_epoch`] is on the stack: the caller
+/// waits for every worker (even on unwind) before the referent dies.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared by all workers) and `run_epoch`
+// keeps it alive for as long as any worker can touch it.
+unsafe impl Send for TaskPtr {}
+
+/// The epoch handoff cell, guarded by `Shared::slot`.
+struct Slot {
+    /// Monotonic job id; every worker observes each epoch at most once.
+    epoch: u64,
+    job: Option<TaskPtr>,
+    /// Lanes participating in the current epoch (lane 0 is the caller;
+    /// workers with `lane >= lanes` skip the epoch without being waited
+    /// on, so small fan-outs never pay for idle cores).
+    lanes: usize,
+    /// Participating background workers that have not finished the
+    /// current epoch (`lanes - 1` at publish).
+    pending: usize,
+    /// Panic payloads caught from workers during the current epoch.
+    panics: Vec<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Per-worker parking spots (index `lane - 1`), all associated with
+    /// the `slot` mutex.  Publishing an epoch notifies exactly the
+    /// participating lanes, so a 2-lane decode step on a 64-core machine
+    /// wakes one worker instead of storming all 63.
+    work: Vec<Condvar>,
+    /// The caller parks here waiting for `pending == 0`.
+    done: Condvar,
+    /// Live background workers (observability + the shutdown test).
+    alive: AtomicUsize,
+}
+
+/// The long-lived part of a pool: parked workers plus the handoff cell.
+struct Core {
+    shared: Arc<Shared>,
+    /// Serializes `map` calls: one epoch in flight at a time.
+    call: Mutex<()>,
+    /// Background workers actually running (the caller is lane 0 on top).
+    bg: usize,
+    /// Joined on drop (empty for the never-dropped global core only after
+    /// shutdown).
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Core {
+    /// Spawn `bg` parked workers.  If the OS refuses a spawn the pool
+    /// simply runs with fewer lanes — never panics, never loses work.
+    fn start(bg: usize) -> Core {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                lanes: 0,
+                pending: 0,
+                panics: Vec::new(),
+                shutdown: false,
+            }),
+            work: (0..bg).map(|_| Condvar::new()).collect(),
+            done: Condvar::new(),
+            alive: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(bg);
+        for lane in 1..=bg {
+            let sh = Arc::clone(&shared);
+            let builder = std::thread::Builder::new().name(format!("lh-pool-{lane}"));
+            match builder.spawn(move || worker_loop(&sh, lane)) {
+                Ok(h) => handles.push(h),
+                Err(_) => break,
+            }
+        }
+        let bg = handles.len();
+        Core { shared, call: Mutex::new(()), bg, handles: Mutex::new(handles) }
+    }
+
+    /// Publish `task` to workers `1..lanes`, run lane 0 on the calling
+    /// thread, wait for every participating worker, and re-raise the
+    /// first worker panic.  Workers beyond `lanes` observe the epoch and
+    /// skip it off the critical path — a 2-row decode step on a 64-core
+    /// machine waits for exactly one worker, not 63.
+    ///
+    /// The caller must hold `self.call` (one epoch in flight at a time);
+    /// `2 <= lanes <= self.bg + 1`.
+    fn run_epoch(&self, lanes: usize, task: &(dyn Fn(usize) + Sync)) {
+        {
+            let mut slot = lock(&self.shared.slot);
+            debug_assert!(slot.job.is_none(), "epochs never overlap");
+            debug_assert!((2..=self.bg + 1).contains(&lanes));
+            slot.epoch += 1;
+            slot.job = Some(TaskPtr(task as *const (dyn Fn(usize) + Sync)));
+            slot.lanes = lanes;
+            slot.pending = lanes - 1;
+            slot.panics.clear();
+            // wake exactly the participating workers; the rest stay parked
+            for cv in &self.shared.work[..lanes - 1] {
+                cv.notify_one();
+            }
+        }
+        // Wait-for-workers guard: runs on normal exit AND on unwind from
+        // lane 0, so the erased borrow in the cell can never dangle.
+        struct EpochGuard<'a>(&'a Shared);
+        impl Drop for EpochGuard<'_> {
+            fn drop(&mut self) {
+                let mut slot = lock(&self.0.slot);
+                while slot.pending > 0 {
+                    slot = wait(&self.0.done, slot);
+                }
+                slot.job = None;
+            }
+        }
+        {
+            let _guard = EpochGuard(&self.shared);
+            task(0); // the caller is lane 0
+        }
+        let payload = {
+            let mut slot = lock(&self.shared.slot);
+            if slot.panics.is_empty() {
+                None
+            } else {
+                Some(slot.panics.remove(0))
+            }
+        };
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Core {
+    fn drop(&mut self) {
+        {
+            let mut slot = lock(&self.shared.slot);
+            slot.shutdown = true;
+            for cv in &self.shared.work {
+                cv.notify_one();
+            }
+        }
+        for h in lock(&self.handles).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker body: park on the condvar, run each published epoch exactly
+/// once, decrement `pending`, repeat until shutdown.
+fn worker_loop(shared: &Shared, lane: usize) {
+    IN_POOL.with(|f| f.set(true));
+    shared.alive.fetch_add(1, Ordering::SeqCst);
+    struct AliveGuard<'a>(&'a AtomicUsize);
+    impl Drop for AliveGuard<'_> {
+        fn drop(&mut self) {
+            self.0.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    let _alive = AliveGuard(&shared.alive);
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut slot = lock(&shared.slot);
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
+                    if let Some(t) = slot.job {
+                        seen = slot.epoch;
+                        if lane < slot.lanes {
+                            break t;
+                        }
+                        // surplus worker this epoch: not counted in
+                        // `pending`, so skipping is free for the caller
+                    }
+                }
+                slot = wait(&shared.work[lane - 1], slot);
+            }
+        };
+        // SAFETY: the publishing `run_epoch` keeps the pointee alive until
+        // `pending` (decremented below) reaches zero.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (*task.0)(lane) }));
+        let mut slot = lock(&shared.slot);
+        if let Err(p) = result {
+            slot.panics.push(p);
+        }
+        slot.pending -= 1;
+        if slot.pending == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// The process-global core, sized from `available_parallelism` and spawned
+/// on first use; it lives (parked) for the rest of the process.
+fn global_core() -> Arc<Core> {
+    static GLOBAL: OnceLock<Arc<Core>> = OnceLock::new();
+    GLOBAL
+        .get_or_init(|| {
+            let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Arc::new(Core::start(lanes.saturating_sub(1)))
+        })
+        .clone()
+}
+
+/// Raw output cursor handed to the lanes; each original index is written
+/// by exactly one lane, so the writes are disjoint.
+struct OutPtr<R>(*mut Option<R>);
+impl<R> Clone for OutPtr<R> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<R> Copy for OutPtr<R> {}
+// SAFETY: lanes write disjoint indices; the caller outlives the epoch.
+unsafe impl<R: Send> Send for OutPtr<R> {}
+unsafe impl<R: Send> Sync for OutPtr<R> {}
+
+/// One lane's input bucket; only that lane touches it during an epoch.
+struct LaneCell<T>(std::cell::UnsafeCell<Vec<(usize, T)>>);
+// SAFETY: bucket `lane` is accessed only by lane `lane` (see dispatch
+// closure in `Pool::map`), so there is never a concurrent access.
+unsafe impl<T: Send> Sync for LaneCell<T> {}
+
 impl Pool {
-    /// Pool with a fixed worker count (clamped to at least 1).
-    pub fn new(threads: usize) -> Pool {
-        Pool { threads: threads.max(1) }
+    /// Handle with a fixed max fan-out (clamped to at least 1) onto the
+    /// shared process-global workers.  `Pool::new(1)` is the guaranteed
+    /// sequential path.
+    pub fn new(width: usize) -> Pool {
+        Pool { width: width.max(1), core: global_core() }
     }
 
-    /// Pool sized from `std::thread::available_parallelism` (1 if unknown).
+    /// Full-width handle onto the process-global pool (one lane per
+    /// available core).
     pub fn auto() -> Pool {
-        Pool::new(
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-        )
+        let core = global_core();
+        Pool { width: core.bg + 1, core }
     }
 
-    /// Worker count this pool fans out over.
+    /// A private pool with its own `width - 1` background workers (the
+    /// caller is the remaining lane).  Dropping it shuts the workers down
+    /// and joins them; use this for isolation (tests, one-off tools) —
+    /// the steady-state paths share the global pool via [`Pool::auto`].
+    pub fn dedicated(width: usize) -> Pool {
+        let width = width.max(1);
+        Pool { width, core: Arc::new(Core::start(width - 1)) }
+    }
+
+    /// Max lanes a `map` on this handle fans out over (1 = sequential).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.width.min(self.core.bg + 1)
     }
 
     /// Apply `f` to every item, in parallel, returning results in the
     /// original item order.
     ///
     /// Items are consumed by value so per-item `&mut` state bundles can be
-    /// distributed to workers. With one worker (or zero/one items) this
-    /// degenerates to a plain sequential map on the calling thread — same
-    /// results, same order, no spawn cost.
+    /// distributed to workers.  With one lane (or zero/one items, or when
+    /// called from inside the pool) this degenerates to a plain sequential
+    /// map on the calling thread — same results, same order.
     ///
-    /// Panics if a worker panics (the panic message is propagated).
+    /// Panics if a worker panics (the original payload is re-raised).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -67,37 +356,72 @@ impl Pool {
         F: Fn(T) -> R + Sync,
     {
         let n = items.len();
-        let workers = self.threads.min(n);
-        if workers <= 1 {
+        let lanes = self.threads().min(n);
+        if lanes <= 1 || IN_POOL.with(|g| g.get()) {
             return items.into_iter().map(f).collect();
         }
-        // stripe round-robin, remembering each item's original index
-        let mut buckets: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
-        for (i, item) in items.into_iter().enumerate() {
-            buckets[i % workers].push((i, item));
-        }
-        let f = &f;
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = buckets
-                .into_iter()
-                .map(|bucket| {
-                    scope.spawn(move || {
-                        bucket
-                            .into_iter()
-                            .map(|(i, item)| (i, f(item)))
-                            .collect::<Vec<(usize, R)>>()
-                    })
-                })
-                .collect();
-            for handle in handles {
-                for (i, r) in handle.join().expect("pool worker panicked") {
-                    out[i] = Some(r);
+        // One epoch in flight per core.  If another thread is mid-map on
+        // this pool, retry briefly (epochs are short — a decode step's
+        // lock hold is microseconds) and then run this call sequentially
+        // inline rather than parking unboundedly: the results are
+        // identical either way, and because no caller ever blocks
+        // indefinitely on the handoff, no lock-ordering deadlock can form
+        // through user closures (e.g. a lane-0 closure joining a helper
+        // thread that itself maps) — the worst case is bounded yields
+        // followed by inline execution.
+        let mut spins = 0u32;
+        let _call = loop {
+            match self.core.call.try_lock() {
+                Ok(g) => break g,
+                Err(std::sync::TryLockError::Poisoned(e)) => break e.into_inner(),
+                Err(std::sync::TryLockError::WouldBlock) if spins < 128 => {
+                    spins += 1;
+                    std::thread::yield_now();
+                }
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    return items.into_iter().map(f).collect();
                 }
             }
-        });
+        };
+        // stripe round-robin, remembering each item's original index (no
+        // worker can see the buckets until the epoch below, so filling
+        // them is ordinary exclusive access)
+        let mut buckets: Vec<LaneCell<T>> =
+            (0..lanes).map(|_| LaneCell(std::cell::UnsafeCell::new(Vec::new()))).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            buckets[i % lanes].0.get_mut().push((i, item));
+        }
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let out_ptr = OutPtr(out.as_mut_ptr());
+        let buckets = &buckets;
+        let f = &f;
+        let dispatch = move |lane: usize| {
+            if lane >= lanes {
+                return; // surplus worker this epoch
+            }
+            // SAFETY: each bucket is taken by exactly one lane, once.
+            let bucket = unsafe { std::mem::take(&mut *buckets[lane].0.get()) };
+            for (i, item) in bucket {
+                let r = f(item);
+                // SAFETY: index `i` belongs to exactly one lane, and `out`
+                // outlives the epoch (run_epoch waits for all lanes).
+                unsafe { *out_ptr.0.add(i) = Some(r) };
+            }
+        };
+        {
+            // nested maps from lane 0's user closure run inline
+            struct ReentryGuard;
+            impl Drop for ReentryGuard {
+                fn drop(&mut self) {
+                    IN_POOL.with(|g| g.set(false));
+                }
+            }
+            IN_POOL.with(|g| g.set(true));
+            let _reentry = ReentryGuard;
+            self.core.run_epoch(lanes, &dispatch);
+        }
         out.into_iter()
-            .map(|r| r.expect("every index produces a result"))
+            .map(|r| r.expect("every index produces exactly one result"))
             .collect()
     }
 }
@@ -113,6 +437,8 @@ mod tests {
         for threads in [1usize, 2, 4, 9, 64] {
             let got = Pool::new(threads).map(items.clone(), |x| x * 3 + 1);
             assert_eq!(got, want, "threads={threads}");
+            let ded = Pool::dedicated(threads).map(items.clone(), |x| x * 3 + 1);
+            assert_eq!(ded, want, "dedicated threads={threads}");
         }
     }
 
@@ -122,6 +448,10 @@ mod tests {
         let empty: Vec<u32> = vec![];
         assert_eq!(pool.map(empty, |x| x + 1), Vec::<u32>::new());
         assert_eq!(pool.map(vec![41u32], |x| x + 1), vec![42]);
+        let ded = Pool::dedicated(3);
+        let empty: Vec<u32> = vec![];
+        assert_eq!(ded.map(empty, |x| x + 1), Vec::<u32>::new());
+        assert_eq!(ded.map(vec![41u32], |x| x + 1), vec![42]);
     }
 
     #[test]
@@ -150,14 +480,140 @@ mod tests {
             (0..100).map(|_| rng.normal()).sum::<f64>()
         };
         let seq = Pool::new(1).map(items.clone(), work);
-        let par = Pool::new(8).map(items, work);
-        for (a, b) in seq.iter().zip(&par) {
+        let par = Pool::new(8).map(items.clone(), work);
+        let ded = Pool::dedicated(5).map(items, work);
+        for ((a, b), c) in seq.iter().zip(&par).zip(&ded) {
             assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(a.to_bits(), c.to_bits());
         }
     }
 
     #[test]
     fn auto_pool_has_at_least_one_thread() {
         assert!(Pool::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn map_reuses_the_same_workers_across_calls() {
+        // persistent lifecycle: repeated maps must not grow the worker set
+        let pool = Pool::dedicated(4);
+        let mut counts = Vec::new();
+        for _ in 0..5 {
+            let _ = pool.map((0..64u64).collect::<Vec<_>>(), |x| x.wrapping_mul(3));
+            counts.push(pool.core.shared.alive.load(Ordering::SeqCst));
+        }
+        for c in counts {
+            assert_eq!(c, pool.core.bg, "worker set must stay fixed");
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = Pool::dedicated(4);
+        // `bg` rather than a literal: Core::start tolerates refused spawns
+        let bg = pool.core.bg;
+        let alive = Arc::clone(&pool.core.shared);
+        // a completed map proves every participating worker has started
+        let got = pool.map((0..32u64).collect::<Vec<_>>(), |x| x + 1);
+        assert_eq!(got[31], 32);
+        assert_eq!(alive.alive.load(Ordering::SeqCst), bg);
+        drop(pool);
+        assert_eq!(
+            alive.alive.load(Ordering::SeqCst),
+            0,
+            "drop must join every worker thread"
+        );
+    }
+
+    #[test]
+    fn worker_panic_propagates_with_payload_and_pool_survives() {
+        let pool = Pool::dedicated(3);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            // item 1 lands on lane 1 — a background worker whenever one
+            // exists (round-robin striping); with every spawn refused the
+            // map runs inline and the panic still propagates as required
+            pool.map((0..16u64).collect::<Vec<_>>(), |x| {
+                if x == 1 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 1"), "payload carried verbatim: {msg}");
+        // the pool is still fully functional afterwards
+        assert_eq!(pool.map(vec![1u64, 2, 3], |x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn caller_lane_panic_still_joins_the_epoch() {
+        // item 0 is lane 0 (the caller): its unwind must wait for the
+        // workers, then the pool must remain usable
+        let pool = Pool::dedicated(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..16u64).collect::<Vec<_>>(), |x| {
+                if x == 0 {
+                    panic!("lane zero");
+                }
+                x
+            })
+        }));
+        assert!(caught.is_err());
+        assert_eq!(pool.map(vec![5u64], |x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn nested_map_runs_inline_without_deadlock() {
+        // a map issued from inside a map (from lane 0 or a worker thread)
+        // must fall back to the sequential path instead of deadlocking
+        let pool = Pool::dedicated(4);
+        let outer = pool.map(vec![10u64, 20, 30], |x| {
+            Pool::auto()
+                .map(vec![1u64, 2, 3], move |y| x + y)
+                .iter()
+                .sum::<u64>()
+        });
+        assert_eq!(outer, vec![36, 66, 96]);
+    }
+
+    #[test]
+    fn narrow_maps_skip_surplus_workers_and_leave_them_usable() {
+        // a width-capped handle on a wider core only waits for the lanes
+        // it uses; surplus workers observe the epoch, skip it, and stay
+        // available for the next full-width call (interleaved to exercise
+        // the seen-epoch bookkeeping of skipped epochs)
+        let wide = Pool::dedicated(4);
+        let narrow = Pool { width: 2, core: Arc::clone(&wide.core) };
+        assert_eq!(narrow.threads(), 2usize.min(wide.core.bg + 1));
+        let want: Vec<usize> = (0..23).map(|x| x * 7).collect();
+        for _ in 0..3 {
+            assert_eq!(narrow.map((0..23).collect::<Vec<_>>(), |x| x * 7), want);
+            assert_eq!(wide.map((0..23).collect::<Vec<_>>(), |x| x * 7), want);
+        }
+    }
+
+    #[test]
+    fn concurrent_maps_from_many_threads_stay_correct() {
+        // the global pool takes calls from any thread; whoever finds it
+        // busy runs inline (try_lock fallback), and every caller gets its
+        // own correct results either way
+        let results: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|t| {
+                    s.spawn(move || {
+                        Pool::auto().map((0..20u64).collect::<Vec<_>>(), move |x| x * 10 + t)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (t, r) in results.iter().enumerate() {
+            let want: Vec<u64> = (0..20u64).map(|x| x * 10 + t as u64).collect();
+            assert_eq!(r, &want);
+        }
     }
 }
