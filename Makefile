@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci lint doc bench bench-decode bench-smoke artifacts clean
+.PHONY: help build test verify ci lint doc bench bench-decode bench-smoke serve-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -21,6 +21,8 @@ help:
 	@echo "               rewrites BENCH_decode.json at the repo root"
 	@echo "  bench-smoke  1-iteration decode bench (--features simd, no gate,"
 	@echo "               no file writes) so bench code cannot rot"
+	@echo "  serve-demo   2-shard serving cluster on loopback sockets with a"
+	@echo "               live mid-conversation session migration"
 	@echo "  artifacts    lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
 	@echo "  clean        cargo clean + remove results/"
 
@@ -34,7 +36,11 @@ test:
 verify: build test
 
 # full CI chain: tier-1 (default features AND the simd intrinsics path)
-# plus clippy, rustdoc with warnings denied, and the decode bench smoke
+# plus clippy, rustdoc with warnings denied, and the decode bench smoke.
+# `cargo test` includes the serve-layer loopback integration test
+# (tests/serve_router.rs): router + shard servers on 127.0.0.1 with
+# port-0 auto-assign, so it is sandbox-safe; clippy covers serve/ via
+# --all-targets.
 ci:
 	$(CARGO) build --release
 	$(CARGO) build --release --features simd
@@ -51,6 +57,11 @@ ci:
 # Built with --features simd so the intrinsics path stays exercised.
 bench-smoke:
 	DECODE_BENCH_SMOKE=1 $(CARGO) bench --bench decode --features simd
+
+# the 2-shard quickstart: router + 2 in-process shard servers over
+# loopback sockets, 4 sessions x 3 turns, one live migration in between
+serve-demo:
+	$(CARGO) run --release -- serve --shards 2 --sessions 4 --turns 3 --migrate
 
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings

@@ -7,7 +7,12 @@
 //!
 //! * **pool delta** — the same fused engine stepped through the pooled
 //!   `decode()` vs a serial `decode_row` walk (isolates the persistent
-//!   worker-pool handoff win at each batch size);
+//!   worker-pool handoff win at each batch size).  Batches at or below
+//!   [`pool::INLINE_CUTOVER`] run inline on the caller by design (the
+//!   condvar handoff costs more than 1-2 rows of work), so their
+//!   `pool_speedup` is ~1.0 by construction — each sweep point records
+//!   `pool_inline` so the JSON is unambiguous about which regime it
+//!   measured;
 //! * **SIMD delta** — the pooled step with auto modal-sweep dispatch vs
 //!   [`modal_sweep::force_scalar`] (≈1.0 unless built with
 //!   `--features simd` on an AVX2 machine; results are bit-identical
@@ -29,7 +34,7 @@
 use laughing_hyena::benchkit::{bench, fmt_time, Json, Table};
 use laughing_hyena::engine::recurrent::RecurrentEngine;
 use laughing_hyena::engine::{modal_sweep, Engine, LmShape};
-use laughing_hyena::util::pool::Pool;
+use laughing_hyena::util::pool::{self, Pool};
 
 /// The pre-fusion decode path, faithful to the old implementation in
 /// every perf-relevant behavior (see `mix_one_alloc` for the one
@@ -403,6 +408,7 @@ fn main() {
             ("unfused_ns_per_token", Json::Num(u_ns)),
             ("speedup", Json::Num(speedup)),
             ("pool_speedup", Json::Num(pool_speedup)),
+            ("pool_inline", Json::Bool(batch <= pool::INLINE_CUTOVER)),
             ("simd_speedup", Json::Num(simd_speedup)),
         ]));
     }

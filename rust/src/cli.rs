@@ -48,6 +48,11 @@ impl Args {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// `--key value` with a default (the common launcher pattern).
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -96,5 +101,8 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_usize("missing", 7), 7);
         assert_eq!(a.get_f64("missing", 0.5), 0.5);
+        assert_eq!(a.get_str("missing", "nano"), "nano");
+        let b = parse("serve --shape micro");
+        assert_eq!(b.get_str("shape", "nano"), "micro");
     }
 }

@@ -23,6 +23,9 @@ pub struct MetricsInner {
     pub prefill_tokens_saved: u64,
     /// Bytes currently resident in the session store (gauge).
     pub session_bytes_held: u64,
+    /// Sessions currently RAM-resident in the store (gauge; spilled
+    /// sessions are held on disk and not counted here).
+    pub sessions_resident: u64,
     /// Session-store evictions so far (gauge, mirrors the store).
     pub session_evictions: u64,
     /// Evictions persisted to the spill directory (gauge).
@@ -65,8 +68,15 @@ impl Metrics {
     }
 
     /// Mirror the session store's gauges after a snapshot/eviction.
-    pub fn set_session_store(&self, bytes_held: u64, evictions: u64, spills: u64) {
+    pub fn set_session_store(
+        &self,
+        resident: u64,
+        bytes_held: u64,
+        evictions: u64,
+        spills: u64,
+    ) {
         let mut m = self.0.lock().unwrap();
+        m.sessions_resident = resident;
         m.session_bytes_held = bytes_held;
         m.session_evictions = evictions;
         m.session_spills = spills;
@@ -96,6 +106,7 @@ impl Metrics {
             session_misses: m.session_misses,
             prefill_tokens_saved: m.prefill_tokens_saved,
             session_bytes_held: m.session_bytes_held,
+            sessions_resident: m.sessions_resident,
             session_evictions: m.session_evictions,
             session_spills: m.session_spills,
         }
@@ -121,10 +132,11 @@ impl Metrics {
         if m.session_hits + m.session_misses > 0 || m.session_bytes_held > 0 {
             line.push_str(&format!(
                 " | sessions hit/miss {}/{} | prefill tokens saved {} | \
-                 session bytes {} (evictions {}, spills {})",
+                 {} resident, {} session bytes (evictions {}, spills {})",
                 m.session_hits,
                 m.session_misses,
                 m.prefill_tokens_saved,
+                m.sessions_resident,
                 m.session_bytes_held,
                 m.session_evictions,
                 m.session_spills
@@ -162,11 +174,12 @@ mod tests {
         m.record_session_hit(120);
         m.record_session_hit(80);
         m.record_session_miss();
-        m.set_session_store(4096, 3, 2);
+        m.set_session_store(5, 4096, 3, 2);
         let s = m.snapshot();
         assert_eq!(s.session_hits, 2);
         assert_eq!(s.session_misses, 1);
         assert_eq!(s.prefill_tokens_saved, 200);
+        assert_eq!(s.sessions_resident, 5);
         assert_eq!(s.session_bytes_held, 4096);
         assert_eq!(s.session_evictions, 3);
         assert_eq!(s.session_spills, 2);

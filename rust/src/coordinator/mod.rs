@@ -13,4 +13,6 @@ pub mod server;
 pub mod state;
 
 pub use request::{GenRequest, GenResponse};
-pub use server::{CoordinatorClosed, CoordinatorHandle, SlotEngine};
+pub use server::{
+    CoordinatorClosed, CoordinatorHandle, SessionExport, SlotEngine, SubmitError,
+};

@@ -24,13 +24,37 @@ use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
 pub use super::state::SlotEngine;
 use crate::config::ServeConfig;
-use crate::session::{Store, StoreConfig};
+use crate::session::{SessionError, SessionState, Store, StoreConfig};
 
 enum Msg {
     Req(GenRequest),
     /// Drop a session's stored state and transcript.
     End(u64),
+    /// Move a session *out* of this coordinator: once the session is
+    /// quiescent, reply with its state + transcript and forget it locally.
+    Export(u64, Sender<Option<SessionExport>>),
+    /// Install a migrated session (state + transcript) into this
+    /// coordinator, as if every prior turn had been served here.
+    Import(u64, SessionExport, Sender<()>),
+    /// Whether this coordinator holds any trace of the session (stored or
+    /// spilled state, transcript, or an in-flight turn).
+    Query(u64, Sender<bool>),
     Shutdown,
+}
+
+/// Everything a session is, detached from a coordinator: the O(1)
+/// recurrence state blob (when the engine supports snapshots) plus the
+/// token transcript that backs the lossless re-prefill fallback.  This is
+/// the unit of cross-process migration — constant-size for the recurrent
+/// engine (Lemma 2.2), which is what makes shipping a live conversation to
+/// another shard cheap.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionExport {
+    /// Full token transcript (prompts + generated, every turn so far).
+    pub transcript: Vec<i32>,
+    /// Stored recurrence state; `None` when the engine cannot snapshot
+    /// (the transcript alone still migrates the session losslessly).
+    pub state: Option<SessionState>,
 }
 
 /// The engine thread is gone (shut down, or its construction panicked), so
@@ -45,6 +69,34 @@ impl std::fmt::Display for CoordinatorClosed {
 }
 
 impl std::error::Error for CoordinatorClosed {}
+
+/// Why a strict session resume was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The engine thread is gone.
+    Closed(CoordinatorClosed),
+    /// A typed session-level refusal — for a strict resume this is always
+    /// [`SessionError::Unknown`], so a router can tell "migrate the session
+    /// here first" apart from transport failures.
+    Session(SessionError),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed(e) => e.fmt(f),
+            SubmitError::Session(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<CoordinatorClosed> for SubmitError {
+    fn from(e: CoordinatorClosed) -> SubmitError {
+        SubmitError::Closed(e)
+    }
+}
 
 /// Client handle: submit prompts, read metrics, shut down.
 pub struct CoordinatorHandle {
@@ -113,6 +165,67 @@ impl CoordinatorHandle {
         self.tx.send(Msg::End(session_id)).map_err(|_| CoordinatorClosed)
     }
 
+    /// Strict variant of [`CoordinatorHandle::submit_in_session`]: refuses
+    /// with [`SessionError::Unknown`] when this coordinator holds no trace
+    /// of the session, instead of silently starting a fresh conversation.
+    /// A router uses the typed error to decide between migrating the
+    /// session here and re-prefilling from its own transcript.
+    ///
+    /// The existence check and the submit are two steps; a concurrent
+    /// `end_session` racing between them degrades to the non-strict
+    /// behaviour (a fresh session), never to an error.
+    pub fn resume_session(
+        &self,
+        session_id: u64,
+        tokens: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<Receiver<GenResponse>, SubmitError> {
+        if !self.session_known(session_id)? {
+            return Err(SubmitError::Session(SessionError::Unknown { id: session_id }));
+        }
+        Ok(self.submit_opt(Some(session_id), tokens, max_new_tokens)?)
+    }
+
+    /// Whether this coordinator holds any trace of the session: a stored
+    /// (or spilled) state, a transcript, or a queued/in-flight turn.
+    pub fn session_known(&self, session_id: u64) -> Result<bool, CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Query(session_id, tx)).map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
+    }
+
+    /// Quiesce and extract a session for migration: blocks until no turn
+    /// of the session is queued or in flight, then returns its state +
+    /// transcript and removes every local trace (store, spill, transcript)
+    /// — the session now lives wherever the export is imported.  Returns
+    /// `Ok(None)` when the session is unknown.
+    pub fn export_session(
+        &self,
+        session_id: u64,
+    ) -> Result<Option<SessionExport>, CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Export(session_id, tx)).map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
+    }
+
+    /// Install a migrated session, as if every turn of its transcript had
+    /// been served here.  An existing session under the same id is
+    /// replaced.  The state blob's engine tag is *not* validated here —
+    /// restore-time validation plus the serve-layer handshake guarantee a
+    /// foreign blob is never installed into a slot; an unusable blob only
+    /// costs the re-prefill fallback.
+    pub fn import_session(
+        &self,
+        session_id: u64,
+        export: SessionExport,
+    ) -> Result<(), CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Import(session_id, export, tx))
+            .map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
+    }
+
     /// Stop the engine thread after draining in-flight work.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
@@ -150,6 +263,11 @@ struct Sched {
     /// Sessions whose `end_session` arrived while a turn was queued or in
     /// flight; freed when their last turn retires.
     pending_end: HashSet<u64>,
+    /// Export requests that arrived while a turn was queued or in flight;
+    /// fulfilled when the session quiesces (its last turn retires) — the
+    /// same deferred machinery `end_session` uses, so an exported blob
+    /// always reflects the complete conversation.
+    pending_export: HashMap<u64, Vec<Sender<Option<SessionExport>>>>,
     shutdown: bool,
 }
 
@@ -164,11 +282,41 @@ impl Sched {
     fn free_session(&mut self, id: u64, m: &Metrics) {
         self.history.remove(&id);
         self.store.evict_session(id);
+        self.mirror_store(m);
+    }
+
+    /// Mirror the store gauges into the shared metrics.
+    fn mirror_store(&self, m: &Metrics) {
         m.set_session_store(
+            self.store.len() as u64,
             self.store.bytes_used(),
             self.store.stats.evictions,
             self.store.stats.spills,
         );
+    }
+
+    /// Detach a quiescent session (state + transcript) and forget it
+    /// locally.  `None` when nothing is known about the id.
+    fn detach_session(&mut self, id: u64, m: &Metrics) -> Option<SessionExport> {
+        let state = self.store.take(id);
+        let transcript = self.history.remove(&id);
+        self.mirror_store(m);
+        if state.is_none() && transcript.is_none() {
+            return None;
+        }
+        Some(SessionExport { transcript: transcript.unwrap_or_default(), state })
+    }
+
+    /// Fulfill every export waiting on `id` (the session must be
+    /// quiescent).  The first waiter receives the session; later waiters
+    /// get `None` — a session can only move to one place.
+    fn fulfill_exports(&mut self, id: u64, m: &Metrics) {
+        if let Some(waiters) = self.pending_export.remove(&id) {
+            let mut export = self.detach_session(id, m);
+            for tx in waiters {
+                let _ = tx.send(export.take());
+            }
+        }
     }
 
     /// Apply one channel message (the single intake site).
@@ -184,6 +332,28 @@ impl Sched {
                 } else {
                     self.free_session(id, m);
                 }
+            }
+            Msg::Export(id, reply) => {
+                if self.session_in_flight(id) {
+                    self.pending_export.entry(id).or_default().push(reply);
+                } else {
+                    let export = self.detach_session(id, m);
+                    let _ = reply.send(export);
+                }
+            }
+            Msg::Import(id, export, reply) => {
+                self.history.insert(id, export.transcript);
+                if let Some(state) = export.state {
+                    self.store.put(id, state);
+                }
+                self.mirror_store(m);
+                let _ = reply.send(());
+            }
+            Msg::Query(id, reply) => {
+                let known = self.session_in_flight(id)
+                    || self.history.contains_key(&id)
+                    || self.store.contains(id);
+                let _ = reply.send(known);
             }
             Msg::Shutdown => self.shutdown = true,
         }
@@ -210,6 +380,7 @@ where
             }),
             history: HashMap::new(),
             pending_end: HashSet::new(),
+            pending_export: HashMap::new(),
             shutdown: false,
         };
         loop {
@@ -300,11 +471,7 @@ where
                     full.extend_from_slice(&delta);
                     prefill_jobs.push((slot, full));
                 }
-                m.set_session_store(
-                    s.store.bytes_used(),
-                    s.store.stats.evictions,
-                    s.store.stats.spills,
-                );
+                s.mirror_store(&m);
                 if !resume_jobs.is_empty() {
                     // restored rows are independent: one pooled feed call
                     for (slot, tok) in engine.feed_slots(&resume_jobs) {
@@ -352,9 +519,13 @@ where
                         if let Some(id) = req.session {
                             if s.pending_end.contains(&id) && !s.session_in_flight(id) {
                                 // deferred end_session: the last turn just
-                                // retired, drop the transcript and state
+                                // retired, drop the transcript and state;
+                                // any export waiting on the same session
+                                // gets None (the end wins) instead of
+                                // blocking forever
                                 s.pending_end.remove(&id);
                                 s.free_session(id, &m);
+                                s.fulfill_exports(id, &m);
                             } else {
                                 let h = s.history.entry(id).or_default();
                                 h.extend_from_slice(&req.prompt);
@@ -366,11 +537,12 @@ where
                                     st.tokens_seen = h_len.saturating_sub(1) as u64;
                                     s.store.put(id, st);
                                 }
-                                m.set_session_store(
-                                    s.store.bytes_used(),
-                                    s.store.stats.evictions,
-                                    s.store.stats.spills,
-                                );
+                                s.mirror_store(&m);
+                                if !s.session_in_flight(id) {
+                                    // deferred export: the last turn just
+                                    // retired, detach and ship the session
+                                    s.fulfill_exports(id, &m);
+                                }
                             }
                         }
                         let total = req.enqueued.elapsed().as_secs_f64();
@@ -616,6 +788,108 @@ mod tests {
         let m = h.metrics.snapshot();
         assert_eq!(m.session_hits, 0, "turn after end must not resume");
         assert_eq!(m.session_misses, 0, "turn after end is a first turn, not a miss");
+        h.shutdown();
+    }
+
+    /// Satellite invariant: a strict resume of a session this coordinator
+    /// has never seen (or has ended) fails with the *typed*
+    /// [`SessionError::Unknown`] — the signal a router uses to distinguish
+    /// "migrate me" from "re-prefill from transcript".
+    #[test]
+    fn strict_resume_refuses_unknown_sessions_with_typed_error() {
+        let h = handle(2);
+        match h.resume_session(0xDEAD, vec![1, 2], 3) {
+            Err(SubmitError::Session(SessionError::Unknown { id })) => {
+                assert_eq!(id, 0xDEAD)
+            }
+            other => panic!("expected typed Unknown, got {other:?}"),
+        }
+        // a first (non-strict) turn establishes the session...
+        let g1 = turn(&h, 0xDEAD, vec![1, 2], 3);
+        // ...after which the strict path resumes it and produces exactly
+        // the tokens the non-strict path would
+        let g2 = h
+            .resume_session(0xDEAD, vec![5], 3)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .tokens;
+        let h2 = handle(2);
+        let a1 = turn(&h2, 7, vec![1, 2], 3);
+        let a2 = turn(&h2, 7, vec![5], 3);
+        assert_eq!(g1, a1);
+        assert_eq!(g2, a2, "strict resume diverged from submit_in_session");
+        // ending the session makes it unknown again (channel is FIFO, so
+        // the End is processed before the resume's existence query)
+        h.end_session(0xDEAD).unwrap();
+        assert!(matches!(
+            h.resume_session(0xDEAD, vec![1], 1),
+            Err(SubmitError::Session(SessionError::Unknown { .. }))
+        ));
+        h.shutdown();
+        h2.shutdown();
+    }
+
+    /// The migration primitive: export detaches state + transcript from
+    /// coordinator A; importing into coordinator B (same engine seed)
+    /// continues the conversation bit-identically to never having moved.
+    #[test]
+    fn exported_session_resumes_bit_identical_after_import() {
+        let h_a = handle(2);
+        let h_b = handle(2);
+        let h_ref = handle(2);
+        let (d1, d2, d3) = (vec![3, 1, 4], vec![1, 5, 9], vec![2, 6, 5]);
+        let (n1, n2, n3) = (4usize, 3usize, 4usize);
+        let g1 = turn(&h_a, 42, d1.clone(), n1);
+        let g2 = turn(&h_a, 42, d2.clone(), n2);
+        let r1 = turn(&h_ref, 42, d1.clone(), n1);
+        let r2 = turn(&h_ref, 42, d2.clone(), n2);
+        assert_eq!(g1, r1);
+        assert_eq!(g2, r2);
+        // move the session A -> B
+        let export = h_a.export_session(42).unwrap().expect("session known");
+        assert!(
+            !h_a.session_known(42).unwrap(),
+            "export must remove every local trace"
+        );
+        assert!(
+            h_a.export_session(42).unwrap().is_none(),
+            "a session can only be exported once"
+        );
+        assert!(export.state.is_some(), "recurrent engine snapshots O(1) state");
+        let mut want_transcript = d1.clone();
+        want_transcript.extend(&g1);
+        want_transcript.extend(&d2);
+        want_transcript.extend(&g2);
+        assert_eq!(export.transcript, want_transcript);
+        h_b.import_session(42, export).unwrap();
+        assert!(h_b.session_known(42).unwrap());
+        let g3 = turn(&h_b, 42, d3.clone(), n3);
+        let r3 = turn(&h_ref, 42, d3, n3);
+        assert_eq!(g3, r3, "migrated turn 3 diverged from uninterrupted run");
+        let m = h_b.metrics.snapshot();
+        assert!(m.session_hits >= 1, "imported turn must resume, not re-prefill");
+        assert_eq!(m.session_misses, 0);
+        h_a.shutdown();
+        h_b.shutdown();
+        h_ref.shutdown();
+    }
+
+    /// Export of a session with a turn still in flight must defer until
+    /// the turn retires, so the blob always carries the full conversation.
+    #[test]
+    fn export_defers_until_session_quiesces() {
+        let h = handle(2);
+        let rx = h.submit_in_session(9, vec![1, 2, 3], 6).unwrap();
+        // FIFO channel: the export arrives behind the turn, blocks until
+        // it retires, and then reflects it
+        let export = h.export_session(9).unwrap().expect("session exists");
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.tokens.len(), 6);
+        let mut want = vec![1, 2, 3];
+        want.extend(&resp.tokens);
+        assert_eq!(export.transcript, want, "export saw a partial conversation");
+        assert!(!h.session_known(9).unwrap());
         h.shutdown();
     }
 

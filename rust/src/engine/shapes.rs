@@ -123,6 +123,29 @@ impl LmShape {
         Ok(())
     }
 
+    /// Stable 64-bit fingerprint of every structural field (FNV-1a over
+    /// the field values, not the name — two differently-named but
+    /// structurally identical shapes interoperate).  The serve-layer
+    /// handshake compares fingerprints so a session blob is never shipped
+    /// toward an engine whose state layout cannot hold it.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(9 * 8);
+        for v in [
+            self.vocab,
+            self.d_model,
+            self.n_layer,
+            self.heads,
+            self.attn_heads,
+            self.mlp_mult,
+            self.short_kw,
+            self.d_state,
+            self.seq_len,
+        ] {
+            bytes.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        crate::util::bytes::fnv1a64(&bytes)
+    }
+
     /// Approximate parameter count (embeddings + per-layer projections).
     pub fn params(&self) -> u64 {
         let d = self.d_model as u64;
@@ -172,6 +195,31 @@ mod tests {
         for n in ["nano", "micro", "mini"] {
             LmShape::bench(n).unwrap().validate().unwrap();
         }
+    }
+
+    #[test]
+    fn fingerprint_separates_structures_not_names() {
+        let nano = LmShape::bench("nano").unwrap();
+        assert_eq!(nano.fingerprint(), LmShape::bench("nano").unwrap().fingerprint());
+        // structurally identical shapes under different names agree
+        let mut renamed = nano.clone();
+        renamed.name = "other";
+        assert_eq!(nano.fingerprint(), renamed.fingerprint());
+        // any structural change must move the fingerprint
+        for f in [
+            |s: &mut LmShape| s.d_model *= 2,
+            |s: &mut LmShape| s.n_layer += 1,
+            |s: &mut LmShape| s.d_state += 1,
+            |s: &mut LmShape| s.vocab += 1,
+        ] {
+            let mut changed = nano.clone();
+            f(&mut changed);
+            assert_ne!(nano.fingerprint(), changed.fingerprint());
+        }
+        assert_ne!(
+            nano.fingerprint(),
+            LmShape::bench("micro").unwrap().fingerprint()
+        );
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! Recurrences From Convolutions"* (Massaroli, Poli, Fu et al., NeurIPS
 //! 2023) as a three-layer Rust + JAX + Pallas system:
 //!
-//! * **L3 (this crate)** — serving coordinator, generation engines, and a
+//! * **L3 (this crate)** — serving coordinator (plus the sharded
+//!   [`serve`] layer: wire protocol, shard servers, a consistent-hash
+//!   router with live session migration), generation engines, and a
 //!   native implementation of the full distillery (modal interpolation,
 //!   Hankel-spectrum order selection, truncation baselines) plus every
 //!   numerical substrate it needs (FFT, eigen/SVD, polynomial algebra,
@@ -29,6 +31,7 @@ pub mod experiments;
 pub mod hankel;
 pub mod linalg;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod ssm;
 pub mod util;

@@ -6,7 +6,9 @@
 //! experiment <id>   regenerate a paper table/figure (or 'all')
 //! train <tag>       drive an AOT train_step artifact
 //! distill           distill synthetic or checkpoint filters, report errors
-//! serve             run the serving coordinator demo
+//! serve             run the serving coordinator demo; with --shards N > 1,
+//!                   a sharded cluster (router + N loopback shard servers)
+//!                   with optional live migration and drain
 //! info              environment and artifact inventory
 //! ```
 
@@ -39,6 +41,9 @@ fn main() {
                  repro serve --requests N        coordinator demo (native engine)\n\
                  repro serve --sessions N --turns T [--session-budget B --spill-dir D]\n\
                  \u{20}                               multi-turn session demo (state resume)\n\
+                 repro serve --shards K --sessions N --turns T [--migrate] [--drain I]\n\
+                 \u{20}                               sharded cluster demo: router + K loopback\n\
+                 \u{20}                               shards, live session migration, drain\n\
                  repro info",
                 experiments::ALL
             );
@@ -117,6 +122,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     serve_cfg.session_budget =
         args.get_u64("session-budget", serve_cfg.session_budget);
+    let n_shards = args.get_usize("shards", 1);
+    if n_shards > 1 {
+        return cmd_serve_cluster(args, serve_cfg, n_shards);
+    }
     let n_requests = args.get_usize("requests", 16);
     let slots = args.get_usize("slots", serve_cfg.max_batch);
     let shape_name = args.get("shape").unwrap_or("nano").to_string();
@@ -178,6 +187,59 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("{}", handle.metrics.report());
     println!("wall {wall:.2}s");
     handle.shutdown();
+    Ok(())
+}
+
+/// The sharded serving demo: a router over `n_shards` in-process shard
+/// servers on loopback sockets, interleaved multi-turn sessions with
+/// consistent-hash affinity, an optional live migration mid-conversation
+/// (`--migrate`) and an optional shard drain at the end (`--drain I`),
+/// closing with the per-shard + aggregated health report.
+fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Result<()> {
+    use laughing_hyena::serve::Cluster;
+    let shape_name = args.get_str("shape", "nano");
+    let shape = LmShape::bench(shape_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown bench shape '{shape_name}'"))?;
+    let slots = args.get_usize("slots", serve_cfg.max_batch);
+    let max_new = args.get_usize("tokens", serve_cfg.max_new_tokens.min(16));
+    let sessions = args.get_usize("sessions", 4);
+    let turns = args.get_usize("turns", 3);
+    let seed = args.get_u64("seed", 11);
+    let migrate = args.has_flag("migrate");
+    println!(
+        "sharded serve demo: {n_shards} shards x {slots} slots (shape {shape_name}), \
+         {sessions} sessions x {turns} turns{}",
+        if migrate { ", with live migration" } else { "" }
+    );
+    let mut cluster = Cluster::launch_native(n_shards, &shape, slots, seed, &serve_cfg)?;
+    let t0 = std::time::Instant::now();
+    for t in 0..turns {
+        for s in 0..sessions {
+            let sid = s as u64;
+            let delta = vec![1 + ((s + t) % 32) as i32; 6];
+            let toks = cluster.router.submit_in_session(sid, delta, max_new)?;
+            println!(
+                "session {s:>3} turn {t}: {} tokens on shard {}",
+                toks.len(),
+                cluster.router.shard_of(sid).map(|i| i.to_string()).unwrap_or_default()
+            );
+        }
+        if t == 0 && migrate && sessions > 0 {
+            // live-migrate session 0 between turns: the next turn resumes
+            // its O(1) state on another shard, bit-identical
+            let from = cluster.router.shard_of(0).unwrap_or(0);
+            let to = (from + 1) % n_shards;
+            let bytes = cluster.router.migrate(0, to)?;
+            println!("migrated session 0: shard {from} -> {to} ({bytes} state bytes shipped)");
+        }
+    }
+    if let Some(idx) = args.get("drain").and_then(|v| v.parse::<usize>().ok()) {
+        let moved = cluster.router.drain(idx)?;
+        println!("drained shard {idx}: migrated {} resident sessions away", moved.len());
+    }
+    println!("\nper-shard health:\n{}", cluster.report()?);
+    println!("wall {:.2}s", t0.elapsed().as_secs_f64());
+    cluster.shutdown();
     Ok(())
 }
 

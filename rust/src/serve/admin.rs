@@ -1,0 +1,153 @@
+//! Admin surface of the serve layer: aggregated health across shards and
+//! a convenience launcher that runs N in-process shard servers plus a
+//! router over loopback sockets (the CLI demo and the integration tests
+//! both drive this).
+
+use std::fmt;
+
+use super::router::{RouteError, Router};
+use super::shard::ShardServer;
+use super::wire::HealthReport;
+use crate::config::ServeConfig;
+use crate::engine::LmShape;
+
+/// Per-shard health plus cluster totals.
+#[derive(Clone, Debug, Default)]
+pub struct AdminReport {
+    pub per_shard: Vec<HealthReport>,
+    pub total: HealthReport,
+}
+
+impl AdminReport {
+    /// Sum the per-shard reports into cluster totals.
+    pub fn aggregate(per_shard: Vec<HealthReport>) -> AdminReport {
+        let mut total = HealthReport::default();
+        for h in &per_shard {
+            total.sessions_resident += h.sessions_resident;
+            total.session_bytes += h.session_bytes;
+            total.session_hits += h.session_hits;
+            total.session_misses += h.session_misses;
+            total.in_flight += h.in_flight;
+            total.requests_done += h.requests_done;
+            total.tokens_generated += h.tokens_generated;
+            total.prefill_tokens_saved += h.prefill_tokens_saved;
+        }
+        AdminReport { per_shard, total }
+    }
+}
+
+impl fmt::Display for AdminReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12}",
+            "shard", "sessions", "state bytes", "hits", "misses", "done", "tokens", "saved-toks"
+        )?;
+        let row = |f: &mut fmt::Formatter<'_>, name: &str, h: &HealthReport| {
+            writeln!(
+                f,
+                "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12}",
+                name,
+                h.sessions_resident,
+                h.session_bytes,
+                h.session_hits,
+                h.session_misses,
+                h.requests_done,
+                h.tokens_generated,
+                h.prefill_tokens_saved
+            )
+        };
+        for (i, h) in self.per_shard.iter().enumerate() {
+            row(f, &i.to_string(), h)?;
+        }
+        row(f, "total", &self.total)
+    }
+}
+
+/// N in-process shards (native recurrent engine, shared seed so every
+/// shard carries identical weights) behind one router on loopback sockets.
+pub struct Cluster {
+    pub shards: Vec<ShardServer>,
+    pub router: Router,
+}
+
+impl Cluster {
+    /// Launch `n` native shards + a router.  Every shard gets `slots`
+    /// engine slots and the same `seed` (identically-seeded shards are
+    /// what make cross-shard migration bit-identical).  When
+    /// `cfg.session_spill_dir` is set, each shard spills into its own
+    /// `shard<i>` subdirectory so shards never clobber each other.
+    pub fn launch_native(
+        n: usize,
+        shape: &LmShape,
+        slots: usize,
+        seed: u64,
+        cfg: &ServeConfig,
+    ) -> Result<Cluster, RouteError> {
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut shard_cfg = cfg.clone();
+            if let Some(dir) = &cfg.session_spill_dir {
+                shard_cfg.session_spill_dir = Some(format!("{dir}/shard{i}"));
+            }
+            shards.push(ShardServer::spawn_native(shape, slots, seed, shard_cfg)?);
+        }
+        let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+        let router = Router::new(&addrs)?;
+        Ok(Cluster { shards, router })
+    }
+
+    /// Aggregated health over the wire.
+    pub fn report(&self) -> Result<AdminReport, RouteError> {
+        Ok(AdminReport::aggregate(self.router.health()?))
+    }
+
+    /// Shut every shard down (in-flight work drains first).
+    pub fn shutdown(self) {
+        for s in self.shards {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_sums_and_renders() {
+        let a = HealthReport {
+            sessions_resident: 1,
+            session_bytes: 100,
+            session_hits: 2,
+            session_misses: 1,
+            in_flight: 0,
+            requests_done: 3,
+            tokens_generated: 12,
+            prefill_tokens_saved: 40,
+        };
+        let mut b = a.clone();
+        b.sessions_resident = 4;
+        let rep = AdminReport::aggregate(vec![a, b]);
+        assert_eq!(rep.total.sessions_resident, 5);
+        assert_eq!(rep.total.requests_done, 6);
+        assert_eq!(rep.total.tokens_generated, 24);
+        let text = format!("{rep}");
+        assert!(text.contains("total"), "{text}");
+        assert!(text.lines().count() >= 4, "{text}");
+    }
+
+    #[test]
+    fn cluster_launches_serves_and_reports() {
+        let shape = LmShape::bench("nano").unwrap();
+        let cfg = ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() };
+        let mut cluster = Cluster::launch_native(2, &shape, 2, 11, &cfg).unwrap();
+        let g = cluster.router.submit_in_session(1, vec![1, 2, 3], 3).unwrap();
+        assert_eq!(g.len(), 3);
+        let rep = cluster.report().unwrap();
+        assert_eq!(rep.per_shard.len(), 2);
+        assert_eq!(rep.total.requests_done, 1);
+        assert_eq!(rep.total.sessions_resident, 1);
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,35 @@
+//! The serve layer: horizontal sharding of the single-process coordinator.
+//!
+//! The paper's deployment claim (Lemma 2.2 / Prop. 3.2) is that a
+//! distilled model's per-sequence generation state is *constant-size* —
+//! which PR 2 materialized as a versioned, engine-tagged, byte-exact
+//! [`crate::session::SessionState`] blob.  A live conversation is
+//! therefore cheap to move between processes: ship O(state) bytes, not an
+//! O(t)-growing KV cache.  This module turns that property into a
+//! horizontally sharded service:
+//!
+//! * [`wire`] — a length-prefixed, versioned binary frame protocol over
+//!   TCP, with an engine-tag + shape- and weights-fingerprint handshake
+//!   so a session blob is never restored into a mismatched engine (or
+//!   into an identically-shaped engine carrying different weights).
+//! * [`shard`] — a shard server owning one
+//!   [`crate::coordinator::CoordinatorHandle`] + session store, serving
+//!   the protocol on a loopback socket and streaming generated tokens
+//!   back frame-by-frame.
+//! * [`router`] — the client-facing front door: consistent-hash session
+//!   affinity across N shards, plus **live session migration** (quiesce +
+//!   export on the source, wire transfer, import on the target,
+//!   bit-identical continuation).
+//! * [`admin`] — drain / add-shard / rebalance, per-shard health and
+//!   aggregated metrics, and the in-process cluster launcher behind
+//!   `repro serve --shards N`.
+
+pub mod admin;
+pub mod router;
+pub mod shard;
+pub mod wire;
+
+pub use admin::{AdminReport, Cluster};
+pub use router::{RouteError, Router};
+pub use shard::{ShardServer, ShardSpec};
+pub use wire::{ErrCode, Frame, HealthReport, PROTO_VERSION};

@@ -1,0 +1,700 @@
+//! The client-facing front door: consistent-hashes session ids across N
+//! shard servers for affinity, forwards turns over the wire protocol, and
+//! performs **live session migration** between shards.
+//!
+//! * **Placement.**  Session ids map onto a hash ring (every shard
+//!   contributes [`VNODES`] virtual points, hashed from its address with
+//!   the stable FNV so placement survives restarts); one-shot requests
+//!   round-robin.  A session served once is pinned in the router's
+//!   `resident` map, so affinity holds even after the ring changes — the
+//!   ring decides *initial* placement, residency decides routing.
+//! * **Migration.**  `migrate` quiesces the session on its source shard
+//!   (the coordinator's deferred-until-quiescent export), ships the state
+//!   blob + transcript over the wire, and installs it on the target.  The
+//!   handshake identities (engine tag + shape fingerprint from each
+//!   shard's Hello) are compared *before* the blob leaves the source —
+//!   a mismatched pair is refused without shipping anything, and if the
+//!   target still refuses the import, the session is re-imported into the
+//!   source so it is never lost.
+//! * **Admin.**  `drain` migrates every resident session off a shard and
+//!   stops placing new work there; `add_shard` extends the ring;
+//!   `rebalance` moves sessions whose ring target changed.
+//!
+//! The router is a plain struct driven by one thread (tests, the CLI
+//! demo); a concurrent front door wraps it in a `Mutex` — every wire
+//! conversation is a single connect/request/reply exchange, so the lock
+//! scope is one call.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use super::wire::{
+    self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, PROTO_VERSION,
+};
+
+/// Virtual ring points per shard: enough that removing one shard moves
+/// only ~1/N of the id space.
+pub const VNODES: usize = 32;
+
+/// How long the router waits for one reply frame.  Export waits for the
+/// session to quiesce, so this must comfortably exceed a turn's decode
+/// time.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Why a routed operation failed.
+#[derive(Debug)]
+pub enum RouteError {
+    Io(io::Error),
+    /// No live (non-draining) shard can take the work.
+    NoShards,
+    /// The explicit migration target is draining and takes no sessions.
+    Draining(usize),
+    /// The session is unknown — to the router, or to the shard a strict
+    /// resume was sent to.
+    UnknownSession(u64),
+    /// Migration refused: source and target shards disagree on engine tag
+    /// or shape fingerprint (or the target rejected the blob).  The
+    /// session still lives on its source shard.
+    Mismatch(String),
+    /// A shard replied with an error frame.
+    Shard(ErrCode, String),
+    /// A shard replied out of protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Io(e) => write!(f, "shard i/o: {e}"),
+            RouteError::NoShards => write!(f, "no live shards"),
+            RouteError::Draining(i) => {
+                write!(f, "shard {i} is draining and takes no sessions")
+            }
+            RouteError::UnknownSession(id) => write!(f, "session {id:#x} unknown"),
+            RouteError::Mismatch(msg) => write!(f, "migration mismatch: {msg}"),
+            RouteError::Shard(code, msg) => write!(f, "shard error {code:?}: {msg}"),
+            RouteError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+impl From<io::Error> for RouteError {
+    fn from(e: io::Error) -> RouteError {
+        RouteError::Io(e)
+    }
+}
+
+/// A shard's handshake identity (from its Hello frame): the triple a
+/// session blob must match end-to-end before migration ships it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Identity {
+    engine: String,
+    shape_fp: u64,
+    weights_fp: u64,
+}
+
+/// What the router knows about one shard.
+#[derive(Clone, Debug)]
+struct ShardInfo {
+    addr: SocketAddr,
+    /// Handshake identity from the shard's Hello.
+    id: Identity,
+    /// Draining shards serve their resident sessions but take no new
+    /// placements; `drain` empties them.
+    draining: bool,
+}
+
+/// One wire conversation with a shard (connect, Hello, then
+/// request/reply).  Connections are per-call: loopback connects are
+/// cheap, and every connection re-validates the handshake.
+struct Conn {
+    stream: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Result<(Conn, Identity), RouteError> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(REPLY_TIMEOUT))?;
+        match wire::read_frame(&mut stream)? {
+            Frame::Hello { proto, engine, shape_fp, weights_fp } => {
+                if proto != PROTO_VERSION {
+                    return Err(RouteError::Mismatch(format!(
+                        "shard {addr} speaks protocol {proto}, router speaks {PROTO_VERSION}"
+                    )));
+                }
+                Ok((Conn { stream }, Identity { engine, shape_fp, weights_fp }))
+            }
+            other => Err(RouteError::Protocol(format!("expected Hello, got {other:?}"))),
+        }
+    }
+
+    /// Send one request and read one reply frame (error frames become
+    /// [`RouteError::Shard`]).
+    fn request(&mut self, f: &Frame) -> Result<Frame, RouteError> {
+        wire::write_frame(&mut self.stream, f)?;
+        match wire::read_frame(&mut self.stream)? {
+            Frame::Error { code, msg } => Err(RouteError::Shard(code, msg)),
+            reply => Ok(reply),
+        }
+    }
+
+    /// Send one generation request and collect the streamed tokens.
+    fn generate(&mut self, f: &Frame) -> Result<Vec<i32>, RouteError> {
+        wire::write_frame(&mut self.stream, f)?;
+        let mut toks = Vec::new();
+        loop {
+            match wire::read_frame(&mut self.stream)? {
+                Frame::Token { token } => toks.push(token),
+                Frame::Done { .. } => return Ok(toks),
+                Frame::Error { code, msg } => return Err(RouteError::Shard(code, msg)),
+                other => {
+                    return Err(RouteError::Protocol(format!(
+                        "expected Token/Done, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+}
+
+/// The sharded front door.
+pub struct Router {
+    shards: Vec<ShardInfo>,
+    /// Sorted (point, shard) ring over the non-draining shards.
+    ring: Vec<(u64, usize)>,
+    /// Which shard currently owns each session (authoritative: the router
+    /// is the only front door, and migration updates it).
+    resident: HashMap<u64, usize>,
+    /// Round-robin cursor for one-shot requests.
+    rr: usize,
+}
+
+impl Router {
+    /// Connect to every shard, record its handshake identity, and build
+    /// the ring.  Shards may be heterogeneous (different engines); the
+    /// migration path is what insists on matching identities.
+    pub fn new(addrs: &[SocketAddr]) -> Result<Router, RouteError> {
+        if addrs.is_empty() {
+            return Err(RouteError::NoShards);
+        }
+        let mut shards = Vec::with_capacity(addrs.len());
+        for &addr in addrs {
+            let (_conn, id) = Conn::open(addr)?;
+            shards.push(ShardInfo { addr, id, draining: false });
+        }
+        let mut r = Router { shards, ring: Vec::new(), resident: HashMap::new(), rr: 0 };
+        r.rebuild_ring();
+        Ok(r)
+    }
+
+    /// Number of shards (including draining ones).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard currently owns a session, if the router has seen it.
+    pub fn shard_of(&self, session: u64) -> Option<usize> {
+        self.resident.get(&session).copied()
+    }
+
+    /// Sessions resident on one shard (router's view).
+    pub fn sessions_on(&self, shard: usize) -> Vec<u64> {
+        let mut ids: Vec<u64> = self
+            .resident
+            .iter()
+            .filter(|(_, &s)| s == shard)
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn rebuild_ring(&mut self) {
+        self.ring.clear();
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.draining {
+                continue;
+            }
+            for v in 0..VNODES {
+                let key = format!("{}#{v}", s.addr);
+                self.ring.push((fnv1a64(key.as_bytes()), i));
+            }
+        }
+        self.ring.sort_unstable();
+    }
+
+    /// Ring lookup: first point clockwise of the session's hash.
+    fn ring_target(&self, session: u64) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let h = splitmix64(session);
+        let idx = self.ring.partition_point(|&(p, _)| p < h);
+        let (_, shard) = self.ring[idx % self.ring.len()];
+        Some(shard)
+    }
+
+    /// Shard a session turn routes to: pinned residency first, ring
+    /// placement for sessions the router has not seen.
+    fn route_session(&self, session: u64) -> Result<usize, RouteError> {
+        if let Some(&s) = self.resident.get(&session) {
+            return Ok(s);
+        }
+        self.ring_target(session).ok_or(RouteError::NoShards)
+    }
+
+    /// One-shot generation, round-robined over the live shards.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>, RouteError> {
+        let live: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| !self.shards[i].draining)
+            .collect();
+        if live.is_empty() {
+            return Err(RouteError::NoShards);
+        }
+        let shard = live[self.rr % live.len()];
+        self.rr = self.rr.wrapping_add(1);
+        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
+        conn.generate(&Frame::Submit { max_new: max_new as u32, prompt })
+    }
+
+    /// One turn of a session, routed with affinity.  Turns after the first
+    /// are sent strict, so a shard that somehow lost the session surfaces
+    /// the typed [`RouteError::UnknownSession`] instead of silently
+    /// forking a fresh conversation.
+    pub fn submit_in_session(
+        &mut self,
+        session: u64,
+        delta: Vec<i32>,
+        max_new: usize,
+    ) -> Result<Vec<i32>, RouteError> {
+        let shard = self.route_session(session)?;
+        let strict = self.resident.contains_key(&session);
+        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
+        let toks = conn
+            .generate(&Frame::SubmitInSession {
+                session,
+                strict,
+                max_new: max_new as u32,
+                delta,
+            })
+            .map_err(|e| match e {
+                RouteError::Shard(ErrCode::UnknownSession, _) => {
+                    RouteError::UnknownSession(session)
+                }
+                other => other,
+            })?;
+        self.resident.insert(session, shard);
+        Ok(toks)
+    }
+
+    /// Drop a session everywhere the router knows about it.
+    pub fn end_session(&mut self, session: u64) -> Result<(), RouteError> {
+        let shard = self.route_session(session)?;
+        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
+        match conn.request(&Frame::EndSession { session })? {
+            Frame::Ok => {
+                self.resident.remove(&session);
+                Ok(())
+            }
+            other => Err(RouteError::Protocol(format!("expected Ok, got {other:?}"))),
+        }
+    }
+
+    /// Live-migrate one session to a target shard: quiesce + export on the
+    /// source, ship the blob, import on the target.  Identity (engine tag
+    /// + shape fingerprint, as advertised in each shard's handshake) is
+    /// compared before the blob is shipped; the target connection is opened
+    /// before the export, so an unreachable target fails the migration with
+    /// the session untouched; on a target-side refusal the session is
+    /// restored to its source.  Returns the shipped state-blob size in
+    /// bytes (0 when the engine exports no state).
+    ///
+    /// Known limit (no two-phase commit): if the import was *applied* but
+    /// its Ok reply was lost in transit, the restore-to-source leaves a
+    /// stale duplicate on the target — duplicates are garbage, never lost
+    /// conversations, and the router keeps routing to the source copy.
+    pub fn migrate(&mut self, session: u64, to: usize) -> Result<usize, RouteError> {
+        let from = *self
+            .resident
+            .get(&session)
+            .ok_or(RouteError::UnknownSession(session))?;
+        if to >= self.shards.len() {
+            return Err(RouteError::Protocol(format!("no shard {to}")));
+        }
+        if from == to {
+            return Ok(0);
+        }
+        if self.shards[to].draining {
+            // drain's whole point is to empty the shard; explicitly
+            // migrating a session onto it would pin traffic there
+            return Err(RouteError::Draining(to));
+        }
+        // handshake check FIRST: a mismatched blob is never even exported
+        let (src, dst) = (&self.shards[from], &self.shards[to]);
+        if src.id.engine != dst.id.engine {
+            return Err(RouteError::Mismatch(format!(
+                "engine '{}' (shard {from}) != '{}' (shard {to})",
+                src.id.engine, dst.id.engine
+            )));
+        }
+        if src.id.shape_fp != dst.id.shape_fp {
+            return Err(RouteError::Mismatch(format!(
+                "shape fingerprint {:#x} (shard {from}) != {:#x} (shard {to})",
+                src.id.shape_fp, dst.id.shape_fp
+            )));
+        }
+        if src.id.weights_fp != dst.id.weights_fp {
+            return Err(RouteError::Mismatch(format!(
+                "weights fingerprint {:#x} (shard {from}) != {:#x} (shard {to}) \
+                 — same shape but different weights would silently change tokens",
+                src.id.weights_fp, dst.id.weights_fp
+            )));
+        }
+        // connect to the TARGET before detaching anything from the source:
+        // a down or unreachable target must fail the migration while the
+        // session still lives untouched on its source shard
+        let (mut dst_conn, _) = Conn::open(dst.addr)?;
+        let (mut src_conn, _) = Conn::open(src.addr)?;
+        let (session_id, shape_fp, weights_fp, transcript, state) =
+            match src_conn.request(&Frame::Export { session }) {
+                Ok(Frame::Blob { session, shape_fp, weights_fp, transcript, state }) => {
+                    (session, shape_fp, weights_fp, transcript, state)
+                }
+                Ok(other) => {
+                    return Err(RouteError::Protocol(format!("expected Blob, got {other:?}")))
+                }
+                Err(RouteError::Shard(ErrCode::UnknownSession, _)) => {
+                    // the shard lost it (e.g. ended behind our back)
+                    self.resident.remove(&session);
+                    return Err(RouteError::UnknownSession(session));
+                }
+                Err(e) => return Err(e),
+            };
+        let bytes = state.as_ref().map(|b| b.len()).unwrap_or(0);
+        let import =
+            Frame::Import { session: session_id, shape_fp, weights_fp, transcript, state };
+        match dst_conn.request(&import) {
+            Ok(Frame::Ok) => {
+                self.resident.insert(session, to);
+                Ok(bytes)
+            }
+            refused => {
+                // put the session back where it came from — a failed
+                // migration must never lose the conversation.  If even the
+                // restore fails, say so loudly instead of propagating the
+                // transport error as if the session were merely unmoved.
+                let restored = Conn::open(src.addr)
+                    .and_then(|(mut back, _)| back.request(&import))
+                    .and_then(|reply| match reply {
+                        Frame::Ok => Ok(()),
+                        other => Err(RouteError::Protocol(format!(
+                            "restore reply was {other:?}"
+                        ))),
+                    });
+                if let Err(e) = restored {
+                    return Err(RouteError::Protocol(format!(
+                        "session {session:#x} may be lost: target refused the \
+                         import ({refused:?}) and restore-to-source failed: {e}"
+                    )));
+                }
+                match refused {
+                    Err(RouteError::Shard(ErrCode::Mismatch, msg)) => {
+                        Err(RouteError::Mismatch(msg))
+                    }
+                    Err(e) => Err(e),
+                    Ok(other) => Err(RouteError::Protocol(format!(
+                        "expected Ok from import, got {other:?}"
+                    ))),
+                }
+            }
+        }
+    }
+
+    /// Stop placing new work on a shard and migrate every session the
+    /// router has resident there to its new ring target.  Returns the
+    /// migrated session ids.
+    pub fn drain(&mut self, shard: usize) -> Result<Vec<u64>, RouteError> {
+        if shard >= self.shards.len() {
+            return Err(RouteError::Protocol(format!("no shard {shard}")));
+        }
+        self.shards[shard].draining = true;
+        self.rebuild_ring();
+        if self.ring.is_empty() {
+            // nowhere to put the sessions: undo
+            self.shards[shard].draining = false;
+            self.rebuild_ring();
+            return Err(RouteError::NoShards);
+        }
+        let mut moved = Vec::new();
+        for sid in self.sessions_on(shard) {
+            let target = self.ring_target(sid).ok_or(RouteError::NoShards)?;
+            self.migrate(sid, target)?;
+            moved.push(sid);
+        }
+        Ok(moved)
+    }
+
+    /// Add a shard to the ring (it starts taking new placements and
+    /// rebalance targets immediately).
+    pub fn add_shard(&mut self, addr: SocketAddr) -> Result<usize, RouteError> {
+        let (_conn, id) = Conn::open(addr)?;
+        self.shards.push(ShardInfo { addr, id, draining: false });
+        self.rebuild_ring();
+        Ok(self.shards.len() - 1)
+    }
+
+    /// Move every session whose ring target differs from where it lives
+    /// (after `add_shard` changed the ring).  Returns (session, from, to)
+    /// per move.  Sessions that cannot move because identities mismatch
+    /// are left in place and reported untouched.
+    pub fn rebalance(&mut self) -> Result<Vec<(u64, usize, usize)>, RouteError> {
+        let mut moves = Vec::new();
+        let plan: Vec<(u64, usize)> = self
+            .resident
+            .iter()
+            .map(|(&sid, &cur)| (sid, cur))
+            .collect();
+        for (sid, cur) in plan {
+            let want = match self.ring_target(sid) {
+                Some(w) => w,
+                None => return Err(RouteError::NoShards),
+            };
+            if want == cur {
+                continue;
+            }
+            match self.migrate(sid, want) {
+                Ok(_) => moves.push((sid, cur, want)),
+                Err(RouteError::Mismatch(_)) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        moves.sort_unstable();
+        Ok(moves)
+    }
+
+    /// Per-shard health, queried over the wire.
+    pub fn health(&self) -> Result<Vec<HealthReport>, RouteError> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (mut conn, _) = Conn::open(s.addr)?;
+            match conn.request(&Frame::Health)? {
+                Frame::HealthReport(h) => out.push(h),
+                other => {
+                    return Err(RouteError::Protocol(format!(
+                        "expected HealthReport, got {other:?}"
+                    )))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::coordinator::SlotEngine;
+    use crate::engine::transformer::TransformerEngine;
+    use crate::engine::LmShape;
+    use crate::serve::shard::{ShardServer, ShardSpec};
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+    }
+
+    fn native_shards(n: usize) -> Vec<ShardServer> {
+        let shape = LmShape::bench("nano").unwrap();
+        (0..n)
+            .map(|_| ShardServer::spawn_native(&shape, 2, 11, cfg()).unwrap())
+            .collect()
+    }
+
+    fn router_over(shards: &[ShardServer]) -> Router {
+        let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+        Router::new(&addrs).unwrap()
+    }
+
+    #[test]
+    fn ring_spreads_sessions_and_is_stable() {
+        let shards = native_shards(3);
+        let r = router_over(&shards);
+        let mut counts = [0usize; 3];
+        for sid in 0..300u64 {
+            let t = r.ring_target(sid).unwrap();
+            assert_eq!(t, r.ring_target(sid).unwrap(), "placement must be deterministic");
+            counts[t] += 1;
+        }
+        // with 32 vnodes each shard's expected share is ~100/300; require
+        // only >5% so kernel-assigned ports can never flake the test
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 15, "shard {i} got only {c}/300 sessions — ring is lopsided");
+        }
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn session_turns_keep_affinity_and_resume() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        // several interleaved sessions, two turns each
+        let sids: Vec<u64> = (0..6).collect();
+        for &sid in &sids {
+            let g = r.submit_in_session(sid, vec![1 + sid as i32, 2], 3).unwrap();
+            assert_eq!(g.len(), 3);
+        }
+        let homes: Vec<usize> = sids.iter().map(|&s| r.shard_of(s).unwrap()).collect();
+        for &sid in &sids {
+            let g = r.submit_in_session(sid, vec![9], 3).unwrap();
+            assert_eq!(g.len(), 3);
+            assert_eq!(
+                r.shard_of(sid).unwrap(),
+                homes[sid as usize],
+                "turn 2 must stay on the session's shard"
+            );
+        }
+        // every second turn resumed from stored state on its home shard
+        let health = r.health().unwrap();
+        let hits: u64 = health.iter().map(|h| h.session_hits).sum();
+        let misses: u64 = health.iter().map(|h| h.session_misses).sum();
+        assert_eq!(hits, sids.len() as u64, "every turn-2 must be a store hit");
+        assert_eq!(misses, 0, "a miss means a turn was routed to the wrong shard");
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn one_shots_round_robin_and_agree_across_shards() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        // same prompt, same seed on both shards -> identical tokens
+        let a = r.submit(vec![5, 6, 7], 4).unwrap();
+        let b = r.submit(vec![5, 6, 7], 4).unwrap();
+        assert_eq!(a, b, "identically-seeded shards must agree");
+        let health = r.health().unwrap();
+        assert_eq!(
+            health.iter().map(|h| h.requests_done).collect::<Vec<_>>(),
+            vec![1, 1],
+            "round robin must spread one-shots"
+        );
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn migrate_between_mismatched_engines_is_refused_at_the_handshake() {
+        let shape = LmShape::bench("nano").unwrap();
+        let native = ShardServer::spawn_native(&shape, 2, 11, cfg()).unwrap();
+        let spec = ShardSpec::native(&shape, crate::engine::transformer::STATE_TAG, 11);
+        let shape2 = shape.clone();
+        let baseline = ShardServer::spawn(spec, cfg(), move || {
+            Box::new(TransformerEngine::new(&shape2, 2, 11)) as Box<dyn SlotEngine>
+        })
+        .unwrap();
+        let mut r = Router::new(&[native.addr(), baseline.addr()]).unwrap();
+        // pin a session to the native shard (shard 0 may or may not be the
+        // ring target, so force residency through a served turn)
+        let sid = 77u64;
+        let g1 = r.submit_in_session(sid, vec![1, 2, 3], 3).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        let other = 1 - home;
+        match r.migrate(sid, other) {
+            Err(RouteError::Mismatch(msg)) => {
+                assert!(msg.contains("engine"), "mismatch must name the engine: {msg}")
+            }
+            other => panic!("expected Mismatch, got {other:?}"),
+        }
+        // the session is untouched and continues where it lives
+        assert_eq!(r.shard_of(sid), Some(home));
+        let g2 = r.submit_in_session(sid, vec![4], 3).unwrap();
+        assert_eq!(g2.len(), 3);
+        assert!(!g1.is_empty());
+        native.shutdown();
+        baseline.shutdown();
+    }
+
+    /// Same engine, same shape, different seed: the shapes fingerprint
+    /// identically, but the weights differ — a migrated state would decode
+    /// into silently wrong tokens, so the weights fingerprint must refuse
+    /// the pair before the blob is shipped.
+    #[test]
+    fn migrate_between_same_shape_different_seeds_is_refused() {
+        let shape = LmShape::bench("nano").unwrap();
+        let a = ShardServer::spawn_native(&shape, 2, 11, cfg()).unwrap();
+        let b = ShardServer::spawn_native(&shape, 2, 12, cfg()).unwrap();
+        let mut r = Router::new(&[a.addr(), b.addr()]).unwrap();
+        let sid = 5u64;
+        r.submit_in_session(sid, vec![1, 2, 3], 3).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        match r.migrate(sid, 1 - home) {
+            Err(RouteError::Mismatch(msg)) => {
+                assert!(msg.contains("weights"), "must name the cause: {msg}")
+            }
+            other => panic!("expected weights Mismatch, got {other:?}"),
+        }
+        // untouched: the session keeps serving from its home shard
+        assert_eq!(r.shard_of(sid), Some(home));
+        assert_eq!(r.submit_in_session(sid, vec![4], 2).unwrap().len(), 2);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    /// A draining shard must refuse to become an explicit migration
+    /// target — otherwise drain's "empty this shard" invariant breaks.
+    #[test]
+    fn migrate_onto_a_draining_shard_is_refused() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        let sid = 9u64;
+        r.submit_in_session(sid, vec![1, 2], 2).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        let other = 1 - home;
+        // drain the other shard (it holds no sessions, so this is a no-op
+        // migration-wise), then try to migrate onto it
+        r.drain(other).unwrap();
+        assert!(matches!(
+            r.migrate(sid, other),
+            Err(RouteError::Draining(i)) if i == other
+        ));
+        assert_eq!(r.shard_of(sid), Some(home));
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn migrating_an_unknown_session_is_a_typed_error() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        assert!(matches!(
+            r.migrate(0xBEEF, 1),
+            Err(RouteError::UnknownSession(0xBEEF))
+        ));
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn end_session_forgets_residency() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        let sid = 3u64;
+        r.submit_in_session(sid, vec![1, 2], 2).unwrap();
+        assert!(r.shard_of(sid).is_some());
+        r.end_session(sid).unwrap();
+        assert_eq!(r.shard_of(sid), None);
+        for s in shards {
+            s.shutdown();
+        }
+    }
+}

@@ -1,0 +1,711 @@
+//! A shard: one [`CoordinatorHandle`] (engine thread + session store)
+//! served over the wire protocol on a loopback TCP socket.
+//!
+//! The listener binds `127.0.0.1:0` (kernel-assigned port — sandbox-safe),
+//! greets every connection with [`Frame::Hello`] carrying the protocol
+//! version, engine state tag and shape fingerprint, then handles one
+//! request frame at a time per connection.  Generation replies stream one
+//! [`Frame::Token`] per token before the closing [`Frame::Done`].
+//!
+//! Import safety: a [`Frame::Import`] whose shape fingerprint, weights
+//! fingerprint, blob format version or engine tag does not match this
+//! shard is refused with [`ErrCode::Mismatch`] *before* anything reaches
+//! the coordinator — a mismatched blob is rejected at the handshake,
+//! never restored (and slot restore re-validates plane shapes as the
+//! last line of defense).
+
+use std::io::{self, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::wire::{self, ErrCode, Frame, HealthReport, MAX_FRAME_BYTES, PROTO_VERSION};
+use crate::config::ServeConfig;
+use crate::coordinator::server::{spawn, SessionExport, SubmitError};
+use crate::coordinator::{CoordinatorHandle, GenResponse, SlotEngine};
+use crate::engine::recurrent::{RecurrentEngine, STATE_TAG};
+use crate::engine::LmShape;
+use crate::session::{SessionError, SessionState};
+
+/// How often a blocked read wakes to check the stop flag.
+const STOP_POLL: Duration = Duration::from_millis(100);
+
+/// What a shard announces about its engine — the handshake identity a
+/// session blob must match before it is ever shipped here.  Shape alone
+/// is not identity: two identically-shaped engines built from different
+/// weights would decode a migrated state into silently wrong tokens, so
+/// the weights fingerprint participates in every check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Engine state tag ([`crate::coordinator::state::SlotEngine::state_tag`]).
+    pub engine: String,
+    /// [`LmShape::fingerprint`] of the engine's shape.
+    pub shape_fp: u64,
+    /// Fingerprint of the engine's *weights*.  For the native engines
+    /// (deterministically initialized from a seed) this is derived from
+    /// (shape, seed) via [`ShardSpec::native`]; engines with loaded
+    /// checkpoints should fingerprint the checkpoint instead.
+    pub weights_fp: u64,
+}
+
+impl ShardSpec {
+    /// Identity of a native engine: weights are fully determined by
+    /// (shape, seed), so the weights fingerprint hashes exactly those.
+    pub fn native(shape: &LmShape, engine: &str, seed: u64) -> ShardSpec {
+        let shape_fp = shape.fingerprint();
+        let mut id = shape_fp.to_le_bytes().to_vec();
+        id.extend_from_slice(&seed.to_le_bytes());
+        ShardSpec {
+            engine: engine.to_string(),
+            shape_fp,
+            weights_fp: crate::util::bytes::fnv1a64(&id),
+        }
+    }
+}
+
+/// A running shard server; dropping it (or calling
+/// [`ShardServer::shutdown`]) stops the listener, joins every connection
+/// thread, and shuts the coordinator down after draining in-flight work.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Kept so tests and the demo can read shard metrics in-process.
+    pub handle: Arc<CoordinatorHandle>,
+    spec: ShardSpec,
+}
+
+impl ShardServer {
+    /// Bind a loopback listener and serve `make_engine`'s coordinator on
+    /// it.  `spec` must describe the engine `make_engine` builds — it is
+    /// what the handshake advertises.
+    pub fn spawn<F>(spec: ShardSpec, cfg: ServeConfig, make_engine: F) -> io::Result<ShardServer>
+    where
+        F: FnOnce() -> Box<dyn SlotEngine> + Send + 'static,
+    {
+        let handle = Arc::new(spawn(make_engine, cfg));
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let handle = Arc::clone(&handle);
+            let spec = spec.clone();
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let stop = Arc::clone(&stop);
+                    let handle = Arc::clone(&handle);
+                    let spec = spec.clone();
+                    let join = std::thread::spawn(move || {
+                        let _ = serve_conn(stream, &handle, &spec, &stop);
+                    });
+                    // reap finished connection threads so a long-running
+                    // shard (per-call router connections) does not grow an
+                    // unbounded handle list; live ones are joined at stop
+                    let mut conns = conns.lock().unwrap();
+                    conns.retain(|j| !j.is_finished());
+                    conns.push(join);
+                }
+            })
+        };
+        Ok(ShardServer { addr, stop, accept: Some(accept), conns, handle, spec })
+    }
+
+    /// Convenience: a shard over the native recurrent engine (the O(1)
+    /// state path the serve layer exists for).
+    pub fn spawn_native(
+        shape: &LmShape,
+        slots: usize,
+        seed: u64,
+        cfg: ServeConfig,
+    ) -> io::Result<ShardServer> {
+        let spec = ShardSpec::native(shape, STATE_TAG, seed);
+        let shape = shape.clone();
+        ShardServer::spawn(spec, cfg, move || {
+            Box::new(RecurrentEngine::new(&shape, slots, seed)) as Box<dyn SlotEngine>
+        })
+    }
+
+    /// The bound loopback address clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The identity the handshake advertises.
+    pub fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    /// Stop accepting, join every connection thread (in-flight generations
+    /// finish first — they are bounded by their token budgets), then shut
+    /// the coordinator down.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        for j in self.conns.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+        // the coordinator itself shuts down when the last Arc drops
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Fill `buf` completely, waking every [`STOP_POLL`] to honor `stop`.
+/// `Ok(false)` = clean EOF before the first byte (only when `idle_ok`).
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    idle_ok: bool,
+) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            // the conn thread is being torn down; any mid-frame read aborts
+            return Err(io::ErrorKind::ConnectionAborted.into());
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && idle_ok {
+                    return Ok(false);
+                }
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Stop-aware frame read; `Ok(None)` on clean disconnect or shutdown
+/// between frames.
+fn read_frame_stoppable(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<Frame>> {
+    let mut len = [0u8; 4];
+    if !read_full(stream, &mut len, stop, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    let mut body = vec![0u8; len as usize];
+    read_full(stream, &mut body, stop, false)?;
+    wire::decode(&body).map(Some)
+}
+
+/// Serve one connection until the peer disconnects or the shard stops.
+fn serve_conn(
+    mut stream: TcpStream,
+    h: &CoordinatorHandle,
+    spec: &ShardSpec,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(STOP_POLL))?;
+    wire::write_frame(
+        &mut stream,
+        &Frame::Hello {
+            proto: PROTO_VERSION,
+            engine: spec.engine.clone(),
+            shape_fp: spec.shape_fp,
+            weights_fp: spec.weights_fp,
+        },
+    )?;
+    loop {
+        let frame = match read_frame_stoppable(&mut stream, stop)? {
+            Some(f) => f,
+            None => return Ok(()),
+        };
+        match frame {
+            Frame::Submit { max_new, prompt } => match h.submit(prompt, max_new as usize) {
+                Ok(rx) => stream_generation(&mut stream, rx.recv())?,
+                Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+            },
+            Frame::SubmitInSession { session, strict, max_new, delta } => {
+                if strict {
+                    match h.resume_session(session, delta, max_new as usize) {
+                        Ok(rx) => stream_generation(&mut stream, rx.recv())?,
+                        Err(SubmitError::Session(e)) => {
+                            send_err(&mut stream, ErrCode::UnknownSession, &e.to_string())?
+                        }
+                        Err(SubmitError::Closed(_)) => {
+                            send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
+                        }
+                    }
+                } else {
+                    match h.submit_in_session(session, delta, max_new as usize) {
+                        Ok(rx) => stream_generation(&mut stream, rx.recv())?,
+                        Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+                    }
+                }
+            }
+            Frame::EndSession { session } => match h.end_session(session) {
+                Ok(()) => wire::write_frame(&mut stream, &Frame::Ok)?,
+                Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+            },
+            Frame::Export { session } => match h.export_session(session) {
+                Ok(Some(exp)) => {
+                    // the export DETACHED the session; if the Blob reply
+                    // cannot be delivered (peer gone, frame oversized),
+                    // reinstall it before surfacing the error — a failed
+                    // export must never destroy the conversation
+                    let blob = Frame::Blob {
+                        session,
+                        shape_fp: spec.shape_fp,
+                        weights_fp: spec.weights_fp,
+                        transcript: exp.transcript.clone(),
+                        state: exp.state.as_ref().map(|s| s.to_wire_bytes()),
+                    };
+                    if let Err(e) = wire::write_frame(&mut stream, &blob) {
+                        let _ = h.import_session(session, exp);
+                        return Err(e);
+                    }
+                }
+                Ok(None) => send_err(
+                    &mut stream,
+                    ErrCode::UnknownSession,
+                    &SessionError::Unknown { id: session }.to_string(),
+                )?,
+                Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+            },
+            Frame::Import { session, shape_fp, weights_fp, transcript, state } => {
+                match check_import(spec, shape_fp, weights_fp, state) {
+                    Err(msg) => send_err(&mut stream, ErrCode::Mismatch, &msg)?,
+                    Ok(state) => {
+                        match h.import_session(session, SessionExport { transcript, state }) {
+                            Ok(()) => wire::write_frame(&mut stream, &Frame::Ok)?,
+                            Err(_) => {
+                                send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
+                            }
+                        }
+                    }
+                }
+            }
+            Frame::Health => {
+                let m = h.metrics.snapshot();
+                wire::write_frame(
+                    &mut stream,
+                    &Frame::HealthReport(HealthReport {
+                        sessions_resident: m.sessions_resident,
+                        session_bytes: m.session_bytes_held,
+                        session_hits: m.session_hits,
+                        session_misses: m.session_misses,
+                        in_flight: m.requests_in.saturating_sub(m.requests_done),
+                        requests_done: m.requests_done,
+                        tokens_generated: m.tokens_generated,
+                        prefill_tokens_saved: m.prefill_tokens_saved,
+                    }),
+                )?
+            }
+            // reply frames (or a client Hello) are not valid requests
+            _ => send_err(&mut stream, ErrCode::Protocol, "unexpected frame")?,
+        }
+    }
+}
+
+/// Validate an import against this shard's identity *before* the
+/// coordinator sees it: shape fingerprint, weights fingerprint, blob
+/// magic + format version, and engine tag all have to match.
+fn check_import(
+    spec: &ShardSpec,
+    shape_fp: u64,
+    weights_fp: u64,
+    state: Option<Vec<u8>>,
+) -> Result<Option<SessionState>, String> {
+    if shape_fp != spec.shape_fp {
+        return Err(format!(
+            "shape fingerprint {shape_fp:#x} != shard {:#x}",
+            spec.shape_fp
+        ));
+    }
+    if weights_fp != spec.weights_fp {
+        return Err(format!(
+            "weights fingerprint {weights_fp:#x} != shard {:#x} \
+             (same shape, different weights/seed?)",
+            spec.weights_fp
+        ));
+    }
+    match state {
+        None => Ok(None),
+        Some(bytes) => {
+            let st = SessionState::from_wire_bytes(&bytes).map_err(|e| e.to_string())?;
+            st.check_engine(&spec.engine).map_err(|e| e.to_string())?;
+            Ok(Some(st))
+        }
+    }
+}
+
+/// Stream one finished generation as Token frames + Done.
+fn stream_generation(
+    stream: &mut TcpStream,
+    resp: Result<GenResponse, std::sync::mpsc::RecvError>,
+) -> io::Result<()> {
+    match resp {
+        Ok(resp) => {
+            for &t in &resp.tokens {
+                wire::write_frame(stream, &Frame::Token { token: t })?;
+            }
+            wire::write_frame(
+                stream,
+                &Frame::Done {
+                    ttft_us: (resp.ttft_s * 1e6) as u64,
+                    total_us: (resp.total_s * 1e6) as u64,
+                },
+            )
+        }
+        Err(_) => send_err(stream, ErrCode::Closed, "generation reply lost"),
+    }
+}
+
+fn send_err(stream: &mut TcpStream, code: ErrCode, msg: &str) -> io::Result<()> {
+    wire::write_frame(stream, &Frame::Error { code, msg: msg.to_string() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+    }
+
+    fn native_shard() -> ShardServer {
+        let shape = LmShape::bench("nano").unwrap();
+        ShardServer::spawn_native(&shape, 2, 11, cfg()).unwrap()
+    }
+
+    /// Minimal raw client for the tests: connect, swallow the Hello,
+    /// exchange frames directly.
+    struct RawClient {
+        stream: TcpStream,
+        /// (proto, engine, shape_fp, weights_fp) from the Hello.
+        hello: (u32, String, u64, u64),
+    }
+
+    impl RawClient {
+        fn connect(addr: SocketAddr) -> RawClient {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(120)))
+                .unwrap();
+            let hello = match wire::read_frame(&mut stream).unwrap() {
+                Frame::Hello { proto, engine, shape_fp, weights_fp } => {
+                    (proto, engine, shape_fp, weights_fp)
+                }
+                other => panic!("expected Hello, got {other:?}"),
+            };
+            RawClient { stream, hello }
+        }
+
+        fn send(&mut self, f: &Frame) {
+            wire::write_frame(&mut self.stream, f).unwrap();
+        }
+
+        fn recv(&mut self) -> Frame {
+            wire::read_frame(&mut self.stream).unwrap()
+        }
+
+        /// Read Token* + Done and return the tokens.
+        fn collect_generation(&mut self) -> Vec<i32> {
+            let mut toks = Vec::new();
+            loop {
+                match self.recv() {
+                    Frame::Token { token } => toks.push(token),
+                    Frame::Done { ttft_us, total_us } => {
+                        assert!(ttft_us <= total_us);
+                        return toks;
+                    }
+                    other => panic!("expected Token/Done, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handshake_advertises_proto_engine_and_shape() {
+        let shard = native_shard();
+        let client = RawClient::connect(shard.addr());
+        let shape = LmShape::bench("nano").unwrap();
+        assert_eq!(client.hello.0, PROTO_VERSION);
+        assert_eq!(client.hello.1, STATE_TAG);
+        assert_eq!(client.hello.2, shape.fingerprint());
+        let spec = ShardSpec::native(&shape, STATE_TAG, 11);
+        assert_eq!(client.hello.3, spec.weights_fp);
+        // a different seed means different weights, and a different identity
+        assert_ne!(spec.weights_fp, ShardSpec::native(&shape, STATE_TAG, 12).weights_fp);
+        shard.shutdown();
+    }
+
+    #[test]
+    fn submit_streams_the_same_tokens_the_coordinator_produces() {
+        let shard = native_shard();
+        // reference coordinator with the same seed -> identical weights
+        let shape = LmShape::bench("nano").unwrap();
+        let h_ref = spawn(
+            move || Box::new(RecurrentEngine::new(&shape, 2, 11)) as Box<dyn SlotEngine>,
+            cfg(),
+        );
+        let want = h_ref
+            .submit(vec![4, 2, 4], 5)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .tokens;
+        let mut client = RawClient::connect(shard.addr());
+        client.send(&Frame::Submit { max_new: 5, prompt: vec![4, 2, 4] });
+        assert_eq!(client.collect_generation(), want);
+        // a second command reuses the same connection
+        client.send(&Frame::Submit { max_new: 5, prompt: vec![4, 2, 4] });
+        assert_eq!(client.collect_generation(), want);
+        h_ref.shutdown();
+        shard.shutdown();
+    }
+
+    #[test]
+    fn strict_resume_of_unknown_session_is_a_typed_wire_error() {
+        let shard = native_shard();
+        let mut client = RawClient::connect(shard.addr());
+        client.send(&Frame::SubmitInSession {
+            session: 99,
+            strict: true,
+            max_new: 3,
+            delta: vec![1, 2],
+        });
+        match client.recv() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::UnknownSession),
+            other => panic!("expected UnknownSession, got {other:?}"),
+        }
+        // non-strict starts the session; strict then succeeds
+        client.send(&Frame::SubmitInSession {
+            session: 99,
+            strict: false,
+            max_new: 3,
+            delta: vec![1, 2],
+        });
+        let g1 = client.collect_generation();
+        assert_eq!(g1.len(), 3);
+        client.send(&Frame::SubmitInSession {
+            session: 99,
+            strict: true,
+            max_new: 3,
+            delta: vec![3],
+        });
+        assert_eq!(client.collect_generation().len(), 3);
+        shard.shutdown();
+    }
+
+    #[test]
+    fn mismatched_imports_are_refused_before_restore() {
+        let shard = native_shard();
+        let mut client = RawClient::connect(shard.addr());
+        let (fp, wfp) = (client.hello.2, client.hello.3);
+        // wrong shape fingerprint: refused outright
+        client.send(&Frame::Import {
+            session: 1,
+            shape_fp: fp ^ 1,
+            weights_fp: wfp,
+            transcript: vec![1],
+            state: None,
+        });
+        assert!(matches!(
+            client.recv(),
+            Frame::Error { code: ErrCode::Mismatch, .. }
+        ));
+        // same shape but different weights (e.g. another seed): refused too
+        client.send(&Frame::Import {
+            session: 1,
+            shape_fp: fp,
+            weights_fp: wfp ^ 1,
+            transcript: vec![1],
+            state: None,
+        });
+        match client.recv() {
+            Frame::Error { code, msg } => {
+                assert_eq!(code, ErrCode::Mismatch);
+                assert!(msg.contains("weights"), "must name the cause: {msg}");
+            }
+            other => panic!("expected Mismatch, got {other:?}"),
+        }
+        // garbage state bytes: refused at blob validation
+        client.send(&Frame::Import {
+            session: 1,
+            shape_fp: fp,
+            weights_fp: wfp,
+            transcript: vec![1],
+            state: Some(vec![1, 2, 3, 4]),
+        });
+        assert!(matches!(
+            client.recv(),
+            Frame::Error { code: ErrCode::Mismatch, .. }
+        ));
+        // foreign engine tag: refused at the tag check
+        let foreign = SessionState::new("some-other-engine", 7);
+        client.send(&Frame::Import {
+            session: 1,
+            shape_fp: fp,
+            weights_fp: wfp,
+            transcript: vec![1],
+            state: Some(foreign.to_wire_bytes()),
+        });
+        assert!(matches!(
+            client.recv(),
+            Frame::Error { code: ErrCode::Mismatch, .. }
+        ));
+        // none of those refusals may have created the session
+        client.send(&Frame::SubmitInSession {
+            session: 1,
+            strict: true,
+            max_new: 1,
+            delta: vec![5],
+        });
+        assert!(matches!(
+            client.recv(),
+            Frame::Error { code: ErrCode::UnknownSession, .. }
+        ));
+        shard.shutdown();
+    }
+
+    #[test]
+    fn export_import_roundtrip_over_the_wire_continues_bit_identical() {
+        let shard_a = native_shard();
+        let shard_b = native_shard();
+        let shape = LmShape::bench("nano").unwrap();
+        let h_ref = spawn(
+            move || Box::new(RecurrentEngine::new(&shape, 2, 11)) as Box<dyn SlotEngine>,
+            cfg(),
+        );
+        let sid = 0xC0FFEE;
+        let turn_ref = |delta: Vec<i32>, n: usize| {
+            h_ref
+                .submit_in_session(sid, delta, n)
+                .unwrap()
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap()
+                .tokens
+        };
+        let mut a = RawClient::connect(shard_a.addr());
+        let mut b = RawClient::connect(shard_b.addr());
+        // turn 1 on shard A
+        a.send(&Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new: 4,
+            delta: vec![3, 1, 4],
+        });
+        let g1 = a.collect_generation();
+        assert_eq!(g1, turn_ref(vec![3, 1, 4], 4));
+        // migrate A -> B over the wire
+        a.send(&Frame::Export { session: sid });
+        let (fp, wfp, transcript, state) = match a.recv() {
+            Frame::Blob { session, shape_fp, weights_fp, transcript, state } => {
+                assert_eq!(session, sid);
+                (shape_fp, weights_fp, transcript, state)
+            }
+            other => panic!("expected Blob, got {other:?}"),
+        };
+        assert!(state.is_some(), "recurrent engine exports O(1) state");
+        b.send(&Frame::Import {
+            session: sid,
+            shape_fp: fp,
+            weights_fp: wfp,
+            transcript,
+            state,
+        });
+        assert_eq!(b.recv(), Frame::Ok);
+        // turn 2 on shard B must match the uninterrupted reference
+        b.send(&Frame::SubmitInSession {
+            session: sid,
+            strict: true,
+            max_new: 3,
+            delta: vec![1, 5],
+        });
+        assert_eq!(b.collect_generation(), turn_ref(vec![1, 5], 3));
+        // the session no longer exists on A
+        a.send(&Frame::Export { session: sid });
+        assert!(matches!(
+            a.recv(),
+            Frame::Error { code: ErrCode::UnknownSession, .. }
+        ));
+        h_ref.shutdown();
+        shard_a.shutdown();
+        shard_b.shutdown();
+    }
+
+    #[test]
+    fn health_reports_sessions_and_traffic() {
+        let shard = native_shard();
+        let mut client = RawClient::connect(shard.addr());
+        client.send(&Frame::SubmitInSession {
+            session: 5,
+            strict: false,
+            max_new: 4,
+            delta: vec![2, 7],
+        });
+        let _ = client.collect_generation();
+        client.send(&Frame::Health);
+        match client.recv() {
+            Frame::HealthReport(h) => {
+                assert_eq!(h.sessions_resident, 1);
+                assert!(h.session_bytes > 0);
+                assert_eq!(h.requests_done, 1);
+                assert_eq!(h.tokens_generated as usize + 1, 4);
+                assert_eq!(h.in_flight, 0);
+            }
+            other => panic!("expected HealthReport, got {other:?}"),
+        }
+        shard.shutdown();
+    }
+
+    #[test]
+    fn protocol_violations_get_a_typed_error_and_shutdown_is_clean() {
+        let shard = native_shard();
+        let mut client = RawClient::connect(shard.addr());
+        client.send(&Frame::Ok); // replies are not requests
+        assert!(matches!(
+            client.recv(),
+            Frame::Error { code: ErrCode::Protocol, .. }
+        ));
+        // dropping the client mid-connection must not wedge shutdown
+        drop(client);
+        let _idle = RawClient::connect(shard.addr());
+        shard.shutdown();
+    }
+}

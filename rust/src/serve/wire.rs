@@ -1,0 +1,607 @@
+//! The serve-layer wire protocol: length-prefixed, versioned binary frames
+//! over a byte stream (TCP between router and shards; loopback in tests).
+//!
+//! Framing: every frame is `[u32 len LE][u8 tag][payload]`, where `len`
+//! counts the tag byte plus the payload and is capped at
+//! [`MAX_FRAME_BYTES`] so a corrupt stream fails fast instead of
+//! allocating unboundedly.  Integers are little-endian; strings are
+//! `u32 len + UTF-8`; token vectors are `u32 count + i32 LE` each.
+//!
+//! Handshake: a shard greets every connection with [`Frame::Hello`]
+//! carrying the protocol version, its engine's state tag, its
+//! [`crate::engine::LmShape::fingerprint`], and a weights fingerprint
+//! (shape alone is not identity — same shape + different weights would
+//! decode a migrated state into silently wrong tokens).  The router
+//! refuses a shard whose protocol version differs, and refuses to *ship*
+//! a session blob toward a shard whose engine tag, shape fingerprint or
+//! weights fingerprint differs from the blob's source — a mismatched
+//! blob is rejected at the handshake, never restored (the shard
+//! re-validates on [`Frame::Import`] as defense in depth, and slot
+//! restore validates plane shapes a third time).
+//!
+//! One connection carries one command at a time: the client writes a
+//! request frame and reads reply frames until [`Frame::Done`],
+//! [`Frame::Blob`], [`Frame::Ok`], [`Frame::HealthReport`] or
+//! [`Frame::Error`].  Generation replies stream one [`Frame::Token`] per
+//! generated token before the closing [`Frame::Done`].
+
+use std::io::{self, Read, Write};
+
+use crate::util::bytes::{ByteReader, ReadErr};
+
+/// Protocol version; bump on any frame-layout change so mixed-version
+/// router/shard pairs refuse each other at the handshake.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on one frame's encoded size (tag + payload).
+pub const MAX_FRAME_BYTES: u32 = 64 << 20;
+
+/// Typed error codes carried by [`Frame::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The shard holds no trace of the session (the router should migrate
+    /// or re-prefill).
+    UnknownSession,
+    /// Engine tag / shape / blob version mismatch: the payload can never
+    /// be restored here.
+    Mismatch,
+    /// The shard's coordinator is gone.
+    Closed,
+    /// Malformed or out-of-order frame.
+    Protocol,
+    /// Anything else.
+    Internal,
+}
+
+impl ErrCode {
+    fn to_u16(self) -> u16 {
+        match self {
+            ErrCode::UnknownSession => 1,
+            ErrCode::Mismatch => 2,
+            ErrCode::Closed => 3,
+            ErrCode::Protocol => 4,
+            ErrCode::Internal => 5,
+        }
+    }
+
+    fn from_u16(v: u16) -> ErrCode {
+        match v {
+            1 => ErrCode::UnknownSession,
+            2 => ErrCode::Mismatch,
+            3 => ErrCode::Closed,
+            4 => ErrCode::Protocol,
+            _ => ErrCode::Internal,
+        }
+    }
+}
+
+/// Per-shard health snapshot (the serve-layer view of the coordinator
+/// metrics), aggregated across shards by `serve::admin`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Sessions RAM-resident in the shard's store.
+    pub sessions_resident: u64,
+    /// Bytes those sessions occupy.
+    pub session_bytes: u64,
+    /// Session turns resumed from stored state.
+    pub session_hits: u64,
+    /// Session turns that had to re-prefill their transcript.
+    pub session_misses: u64,
+    /// Requests accepted but not yet finished.
+    pub in_flight: u64,
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    /// Prefill tokens skipped by resuming stored state.
+    pub prefill_tokens_saved: u64,
+}
+
+/// One protocol frame.  Client-to-shard requests first, then shard
+/// replies; see the module docs for the conversation shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Server greeting: protocol version + engine tag + shape fingerprint
+    /// + weights fingerprint.  Shape alone is not identity: two
+    /// identically-shaped engines with different weights would decode a
+    /// migrated state into silently wrong tokens, so the weights
+    /// fingerprint participates in every migration check.
+    Hello { proto: u32, engine: String, shape_fp: u64, weights_fp: u64 },
+    /// One-shot generation.
+    Submit { max_new: u32, prompt: Vec<i32> },
+    /// One turn of a session.  `strict` asks for a typed
+    /// [`ErrCode::UnknownSession`] instead of silently starting a fresh
+    /// conversation when the shard does not hold the session.
+    SubmitInSession { session: u64, strict: bool, max_new: u32, delta: Vec<i32> },
+    /// Drop the session's state + transcript (deferred until quiescent).
+    EndSession { session: u64 },
+    /// Quiesce the session, detach it, and reply with [`Frame::Blob`].
+    Export { session: u64 },
+    /// Install a migrated session.  `shape_fp`/`weights_fp` are the
+    /// *source* shard's fingerprints; the receiving shard refuses any
+    /// mismatch before decoding the state bytes.
+    Import {
+        session: u64,
+        shape_fp: u64,
+        weights_fp: u64,
+        transcript: Vec<i32>,
+        state: Option<Vec<u8>>,
+    },
+    /// Ask for a [`Frame::HealthReport`].
+    Health,
+    /// One generated token of the current request.
+    Token { token: i32 },
+    /// End of a generation reply.
+    Done { ttft_us: u64, total_us: u64 },
+    /// Export reply: the detached session (wire-encoded
+    /// [`crate::session::SessionState`] bytes, when the engine snapshots),
+    /// stamped with the exporting shard's fingerprints.
+    Blob {
+        session: u64,
+        shape_fp: u64,
+        weights_fp: u64,
+        transcript: Vec<i32>,
+        state: Option<Vec<u8>>,
+    },
+    /// Generic success ack (EndSession / Import).
+    Ok,
+    HealthReport(HealthReport),
+    Error { code: ErrCode, msg: String },
+}
+
+// Frame tag bytes (requests low, replies from 16 up).
+const TAG_HELLO: u8 = 1;
+const TAG_SUBMIT: u8 = 2;
+const TAG_SUBMIT_IN_SESSION: u8 = 3;
+const TAG_END_SESSION: u8 = 4;
+const TAG_EXPORT: u8 = 5;
+const TAG_IMPORT: u8 = 6;
+const TAG_HEALTH: u8 = 7;
+const TAG_TOKEN: u8 = 16;
+const TAG_DONE: u8 = 17;
+const TAG_BLOB: u8 = 18;
+const TAG_OK: u8 = 19;
+const TAG_HEALTH_REPORT: u8 = 20;
+const TAG_ERROR: u8 = 21;
+
+fn bad_data(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Payload encoder: appends little-endian primitives to a byte buffer.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32(&mut self, v: i32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn tokens(&mut self, toks: &[i32]) {
+        self.u32(toks.len() as u32);
+        for &t in toks {
+            self.i32(t);
+        }
+    }
+
+    fn opt_bytes(&mut self, b: &Option<Vec<u8>>) {
+        match b {
+            None => self.u8(0),
+            Some(v) => {
+                self.u8(1);
+                self.u32(v.len() as u32);
+                self.0.extend_from_slice(v);
+            }
+        }
+    }
+}
+
+/// Maps the shared reader's typed errors into frame-decode `InvalidData`.
+fn read_err(e: ReadErr) -> io::Error {
+    bad_data(match e {
+        ReadErr::Truncated => "truncated frame",
+        ReadErr::Utf8 => "non-utf8 string in frame",
+    })
+}
+
+/// Payload decoder: thin io-error wrapper over the shared bounded reader
+/// ([`crate::util::bytes::ByteReader`] — one bounds-check implementation
+/// for every untrusted-bytes decoder in the crate), plus the wire-specific
+/// composites (token vectors, optional byte blobs).
+struct Dec<'a>(ByteReader<'a>);
+
+impl Dec<'_> {
+    fn u8(&mut self) -> io::Result<u8> {
+        self.0.u8().map_err(read_err)
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        self.0.u16().map_err(read_err)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        self.0.u32().map_err(read_err)
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        self.0.u64().map_err(read_err)
+    }
+
+    fn i32(&mut self) -> io::Result<i32> {
+        self.0.i32().map_err(read_err)
+    }
+
+    fn str(&mut self) -> io::Result<String> {
+        self.0.string().map_err(read_err)
+    }
+
+    fn tokens(&mut self) -> io::Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.0.take(4 * n).map_err(read_err)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn opt_bytes(&mut self) -> io::Result<Option<Vec<u8>>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => {
+                let len = self.u32()? as usize;
+                Ok(Some(self.0.take(len).map_err(read_err)?.to_vec()))
+            }
+            _ => Err(bad_data("bad option tag")),
+        }
+    }
+
+    fn finish(&self) -> io::Result<()> {
+        if self.0.is_exhausted() {
+            Ok(())
+        } else {
+            Err(bad_data("trailing bytes in frame"))
+        }
+    }
+}
+
+/// Encode one frame (tag + payload, without the length prefix).
+fn encode(frame: &Frame) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(32));
+    match frame {
+        Frame::Hello { proto, engine, shape_fp, weights_fp } => {
+            e.u8(TAG_HELLO);
+            e.u32(*proto);
+            e.str(engine);
+            e.u64(*shape_fp);
+            e.u64(*weights_fp);
+        }
+        Frame::Submit { max_new, prompt } => {
+            e.u8(TAG_SUBMIT);
+            e.u32(*max_new);
+            e.tokens(prompt);
+        }
+        Frame::SubmitInSession { session, strict, max_new, delta } => {
+            e.u8(TAG_SUBMIT_IN_SESSION);
+            e.u64(*session);
+            e.u8(*strict as u8);
+            e.u32(*max_new);
+            e.tokens(delta);
+        }
+        Frame::EndSession { session } => {
+            e.u8(TAG_END_SESSION);
+            e.u64(*session);
+        }
+        Frame::Export { session } => {
+            e.u8(TAG_EXPORT);
+            e.u64(*session);
+        }
+        Frame::Import { session, shape_fp, weights_fp, transcript, state } => {
+            e.u8(TAG_IMPORT);
+            e.u64(*session);
+            e.u64(*shape_fp);
+            e.u64(*weights_fp);
+            e.tokens(transcript);
+            e.opt_bytes(state);
+        }
+        Frame::Health => e.u8(TAG_HEALTH),
+        Frame::Token { token } => {
+            e.u8(TAG_TOKEN);
+            e.i32(*token);
+        }
+        Frame::Done { ttft_us, total_us } => {
+            e.u8(TAG_DONE);
+            e.u64(*ttft_us);
+            e.u64(*total_us);
+        }
+        Frame::Blob { session, shape_fp, weights_fp, transcript, state } => {
+            e.u8(TAG_BLOB);
+            e.u64(*session);
+            e.u64(*shape_fp);
+            e.u64(*weights_fp);
+            e.tokens(transcript);
+            e.opt_bytes(state);
+        }
+        Frame::Ok => e.u8(TAG_OK),
+        Frame::HealthReport(h) => {
+            e.u8(TAG_HEALTH_REPORT);
+            e.u64(h.sessions_resident);
+            e.u64(h.session_bytes);
+            e.u64(h.session_hits);
+            e.u64(h.session_misses);
+            e.u64(h.in_flight);
+            e.u64(h.requests_done);
+            e.u64(h.tokens_generated);
+            e.u64(h.prefill_tokens_saved);
+        }
+        Frame::Error { code, msg } => {
+            e.u8(TAG_ERROR);
+            e.u16(code.to_u16());
+            e.str(msg);
+        }
+    }
+    e.0
+}
+
+/// Decode one frame body (tag + payload, without the length prefix).
+/// `pub(crate)` so the shard's stop-aware reader can reuse it.
+pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
+    let mut d = Dec(ByteReader::new(body));
+    let tag = d.u8()?;
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello {
+            proto: d.u32()?,
+            engine: d.str()?,
+            shape_fp: d.u64()?,
+            weights_fp: d.u64()?,
+        },
+        TAG_SUBMIT => Frame::Submit { max_new: d.u32()?, prompt: d.tokens()? },
+        TAG_SUBMIT_IN_SESSION => Frame::SubmitInSession {
+            session: d.u64()?,
+            strict: d.u8()? != 0,
+            max_new: d.u32()?,
+            delta: d.tokens()?,
+        },
+        TAG_END_SESSION => Frame::EndSession { session: d.u64()? },
+        TAG_EXPORT => Frame::Export { session: d.u64()? },
+        TAG_IMPORT => Frame::Import {
+            session: d.u64()?,
+            shape_fp: d.u64()?,
+            weights_fp: d.u64()?,
+            transcript: d.tokens()?,
+            state: d.opt_bytes()?,
+        },
+        TAG_HEALTH => Frame::Health,
+        TAG_TOKEN => Frame::Token { token: d.i32()? },
+        TAG_DONE => Frame::Done { ttft_us: d.u64()?, total_us: d.u64()? },
+        TAG_BLOB => Frame::Blob {
+            session: d.u64()?,
+            shape_fp: d.u64()?,
+            weights_fp: d.u64()?,
+            transcript: d.tokens()?,
+            state: d.opt_bytes()?,
+        },
+        TAG_OK => Frame::Ok,
+        TAG_HEALTH_REPORT => Frame::HealthReport(HealthReport {
+            sessions_resident: d.u64()?,
+            session_bytes: d.u64()?,
+            session_hits: d.u64()?,
+            session_misses: d.u64()?,
+            in_flight: d.u64()?,
+            requests_done: d.u64()?,
+            tokens_generated: d.u64()?,
+            prefill_tokens_saved: d.u64()?,
+        }),
+        TAG_ERROR => Frame::Error { code: ErrCode::from_u16(d.u16()?), msg: d.str()? },
+        other => return Err(bad_data(&format!("unknown frame tag {other}"))),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let body = encode(frame);
+    if body.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(bad_data("frame exceeds MAX_FRAME_BYTES"));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame; blocks until a whole frame arrives.
+/// Errors with `UnexpectedEof` on a cleanly closed stream and
+/// `InvalidData` on an oversized or malformed frame.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(bad_data("bad frame length"));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode(&body)
+}
+
+// The stable hashes the router builds its ring from; one implementation,
+// shared with the shape/weights fingerprints (see `util::bytes`).
+pub use crate::util::bytes::{fnv1a64, splitmix64};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn every_frame_roundtrips() {
+        roundtrip(Frame::Hello {
+            proto: PROTO_VERSION,
+            engine: "laughing-hyena".into(),
+            shape_fp: 0xDEAD_BEEF_1234_5678,
+            weights_fp: 0x0123_4567_89AB_CDEF,
+        });
+        roundtrip(Frame::Submit { max_new: 16, prompt: vec![1, -2, 3] });
+        roundtrip(Frame::SubmitInSession {
+            session: u64::MAX,
+            strict: true,
+            max_new: 0,
+            delta: vec![],
+        });
+        roundtrip(Frame::SubmitInSession {
+            session: 7,
+            strict: false,
+            max_new: 3,
+            delta: vec![i32::MIN, i32::MAX],
+        });
+        roundtrip(Frame::EndSession { session: 9 });
+        roundtrip(Frame::Export { session: 0 });
+        roundtrip(Frame::Import {
+            session: 3,
+            shape_fp: 42,
+            weights_fp: 43,
+            transcript: vec![5, 6, 7],
+            state: Some(vec![0, 255, 128]),
+        });
+        roundtrip(Frame::Import {
+            session: 3,
+            shape_fp: 42,
+            weights_fp: 43,
+            transcript: vec![],
+            state: None,
+        });
+        roundtrip(Frame::Health);
+        roundtrip(Frame::Token { token: -1 });
+        roundtrip(Frame::Done { ttft_us: 1, total_us: 2 });
+        roundtrip(Frame::Blob {
+            session: 11,
+            shape_fp: 13,
+            weights_fp: 17,
+            transcript: vec![1],
+            state: Some(vec![9; 33]),
+        });
+        roundtrip(Frame::Ok);
+        roundtrip(Frame::HealthReport(HealthReport {
+            sessions_resident: 1,
+            session_bytes: 2,
+            session_hits: 3,
+            session_misses: 4,
+            in_flight: 5,
+            requests_done: 6,
+            tokens_generated: 7,
+            prefill_tokens_saved: 8,
+        }));
+        for code in [
+            ErrCode::UnknownSession,
+            ErrCode::Mismatch,
+            ErrCode::Closed,
+            ErrCode::Protocol,
+            ErrCode::Internal,
+        ] {
+            roundtrip(Frame::Error { code, msg: "why".into() });
+        }
+    }
+
+    #[test]
+    fn multiple_frames_stream_in_order() {
+        let mut buf = Vec::new();
+        let frames = [
+            Frame::Token { token: 4 },
+            Frame::Token { token: 5 },
+            Frame::Done { ttft_us: 10, total_us: 20 },
+        ];
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cur = Cursor::new(&buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cur).unwrap(), f);
+        }
+        // stream exhausted: clean EOF
+        assert_eq!(
+            read_frame(&mut cur).unwrap_err().kind(),
+            io::ErrorKind::UnexpectedEof
+        );
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_not_panicked() {
+        // oversized length prefix
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(&huge)).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+        // zero-length frame
+        let zero = 0u32.to_le_bytes().to_vec();
+        assert!(read_frame(&mut Cursor::new(&zero)).is_err());
+        // unknown tag
+        let mut unk = Vec::new();
+        unk.extend_from_slice(&1u32.to_le_bytes());
+        unk.push(250);
+        assert_eq!(
+            read_frame(&mut Cursor::new(&unk)).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+        // truncation at every cut of a real frame
+        let mut good = Vec::new();
+        write_frame(
+            &mut good,
+            &Frame::SubmitInSession { session: 1, strict: true, max_new: 4, delta: vec![1, 2] },
+        )
+        .unwrap();
+        for cut in 0..good.len() {
+            assert!(
+                read_frame(&mut Cursor::new(&good[..cut])).is_err(),
+                "cut at {cut} must error"
+            );
+        }
+        // trailing garbage inside the declared frame body
+        let mut long = good.clone();
+        let body_len = u32::from_le_bytes([long[0], long[1], long[2], long[3]]);
+        long.push(7);
+        long[0..4].copy_from_slice(&(body_len + 1).to_le_bytes());
+        assert_eq!(
+            read_frame(&mut Cursor::new(&long)).unwrap_err().kind(),
+            io::ErrorKind::InvalidData
+        );
+    }
+
+    #[test]
+    fn hashes_are_stable_and_spread() {
+        // pinned values: the ring layout must not move between builds
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // splitmix spreads consecutive ids apart
+        let a = splitmix64(1);
+        let b = splitmix64(2);
+        assert_ne!(a, b);
+        assert!(a.count_ones() > 8 && b.count_ones() > 8);
+    }
+}

@@ -24,5 +24,5 @@
 pub mod state;
 pub mod store;
 
-pub use state::{Plane, SessionError, SessionState, FORMAT_VERSION};
+pub use state::{Plane, SessionError, SessionState, FORMAT_VERSION, WIRE_MAGIC};
 pub use store::{Store, StoreConfig, StoreStats};

@@ -11,6 +11,7 @@
 //! pattern, and non-float metadata rides along via `f32::from_bits`.
 
 use crate::runtime::checkpoint::{Checkpoint, Tensor};
+use crate::util::bytes::{ByteReader, ReadErr};
 
 /// Blob format version; bump on any layout change so stale spills are
 /// rejected instead of misread.
@@ -167,7 +168,84 @@ impl SessionState {
             planes,
         })
     }
+
+    /// Encode as a self-contained little-endian byte blob for shipping over
+    /// a socket (cross-process session migration).  Bit-exact: plane floats
+    /// travel as raw `to_bits` words, so NaN payloads, signed zeros and
+    /// denormals survive the trip.  Layout: [`WIRE_MAGIC`], format version,
+    /// session id, pending token, tokens seen, engine tag, then the planes
+    /// (name + raw f32 words each).
+    pub fn to_wire_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.state_bytes() as usize);
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&self.session_id.to_le_bytes());
+        out.extend_from_slice(&self.last_token.to_le_bytes());
+        out.extend_from_slice(&self.tokens_seen.to_le_bytes());
+        out.extend_from_slice(&(self.engine.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.engine.as_bytes());
+        out.extend_from_slice(&(self.planes.len() as u32).to_le_bytes());
+        for p in &self.planes {
+            out.extend_from_slice(&(p.name.len() as u32).to_le_bytes());
+            out.extend_from_slice(p.name.as_bytes());
+            out.extend_from_slice(&(p.data.len() as u32).to_le_bytes());
+            for v in &p.data {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a wire blob produced by [`SessionState::to_wire_bytes`].  A
+    /// foreign magic or format version is rejected *before* anything else
+    /// is parsed, so a stale or mismatched blob can never be restored.
+    pub fn from_wire_bytes(bytes: &[u8]) -> Result<SessionState, SessionError> {
+        // the shared bounded reader; its typed errors map onto Corrupt
+        let corrupt = |e: ReadErr| {
+            SessionError::Corrupt(
+                match e {
+                    ReadErr::Truncated => "truncated session blob",
+                    ReadErr::Utf8 => "non-utf8 string in session blob",
+                }
+                .into(),
+            )
+        };
+        let mut r = ByteReader::new(bytes);
+        let magic = r.take(4).map_err(corrupt)?;
+        if magic != &WIRE_MAGIC[..] {
+            return Err(SessionError::Corrupt("bad session blob magic".into()));
+        }
+        let version = r.u32().map_err(corrupt)?;
+        if version != FORMAT_VERSION {
+            return Err(SessionError::Version { got: version });
+        }
+        let session_id = r.u64().map_err(corrupt)?;
+        let last_token = r.i32().map_err(corrupt)?;
+        let tokens_seen = r.u64().map_err(corrupt)?;
+        let engine = r.string().map_err(corrupt)?;
+        let n_planes = r.u32().map_err(corrupt)? as usize;
+        let mut planes = Vec::with_capacity(n_planes.min(1024));
+        for _ in 0..n_planes {
+            let name = r.string().map_err(corrupt)?;
+            let len = r.u32().map_err(corrupt)? as usize;
+            let raw = r.take(4 * len).map_err(corrupt)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes([c[0], c[1], c[2], c[3]])))
+                .collect();
+            planes.push(Plane { name, data });
+        }
+        if !r.is_exhausted() {
+            return Err(SessionError::Corrupt("trailing bytes after session blob".into()));
+        }
+        Ok(SessionState { version, session_id, engine, last_token, tokens_seen, planes })
+    }
 }
+
+/// Magic prefix of the socket blob format ("LHSB" = Laughing Hyena Session
+/// Blob); distinct from the checkpoint spill format so the two can never be
+/// confused.
+pub const WIRE_MAGIC: [u8; 4] = *b"LHSB";
 
 /// Why a snapshot could not be taken or reinstalled.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -183,6 +261,11 @@ pub enum SessionError {
     MissingPlane { plane: String },
     /// Spilled blob failed to parse.
     Corrupt(String),
+    /// The coordinator holds no trace of this session (no stored state, no
+    /// transcript, nothing in flight) — a strict resume refuses instead of
+    /// silently starting a fresh conversation, so a router can distinguish
+    /// "migrate the session here" from "re-prefill from transcript".
+    Unknown { id: u64 },
 }
 
 impl std::fmt::Display for SessionError {
@@ -200,6 +283,9 @@ impl std::fmt::Display for SessionError {
             }
             SessionError::MissingPlane { plane } => write!(f, "plane '{plane}' missing"),
             SessionError::Corrupt(msg) => write!(f, "corrupt session blob: {msg}"),
+            SessionError::Unknown { id } => {
+                write!(f, "session {id:#x} is unknown to this coordinator")
+            }
         }
     }
 }
@@ -275,6 +361,57 @@ mod tests {
         let mut old = st.clone();
         old.version = 999;
         assert!(matches!(old.check_engine("test-engine"), Err(SessionError::Version { .. })));
+    }
+
+    #[test]
+    fn wire_bytes_roundtrip_is_bit_exact() {
+        let mut st = sample();
+        st.last_token = -7; // negative pending tokens must survive the cast
+        let bytes = st.to_wire_bytes();
+        let back = SessionState::from_wire_bytes(&bytes).unwrap();
+        assert_eq!(back.version, st.version);
+        assert_eq!(back.session_id, st.session_id);
+        assert_eq!(back.engine, st.engine);
+        assert_eq!(back.last_token, -7);
+        assert_eq!(back.tokens_seen, st.tokens_seen);
+        assert_eq!(back.planes.len(), st.planes.len());
+        for (a, b) in st.planes.iter().zip(&back.planes) {
+            assert_eq!(a.name, b.name);
+            let bits_a: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "plane {} not bit-exact over the wire", a.name);
+        }
+    }
+
+    #[test]
+    fn wire_bytes_reject_bad_magic_version_and_truncation() {
+        let st = sample();
+        let good = st.to_wire_bytes();
+        // foreign magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            SessionState::from_wire_bytes(&bad),
+            Err(SessionError::Corrupt(_))
+        ));
+        // bumped format version: typed rejection before any plane is parsed
+        let mut newer = good.clone();
+        newer[4..8].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            SessionState::from_wire_bytes(&newer),
+            Err(SessionError::Version { got }) if got == FORMAT_VERSION + 1
+        ));
+        // truncation anywhere must error, never panic
+        for cut in [0, 3, 7, good.len() / 2, good.len() - 1] {
+            assert!(
+                SessionState::from_wire_bytes(&good[..cut]).is_err(),
+                "truncated at {cut} must be rejected"
+            );
+        }
+        // trailing garbage is rejected too
+        let mut long = good.clone();
+        long.push(0);
+        assert!(SessionState::from_wire_bytes(&long).is_err());
     }
 
     #[test]

@@ -97,6 +97,19 @@ impl Store {
         self.entries.contains_key(&id)
     }
 
+    /// Whether the store holds this session anywhere — RAM-resident or
+    /// spilled to disk.  Unlike [`Store::take`] this does not move the
+    /// state out and does not touch the hit/miss stats (it backs the
+    /// coordinator's `session_known` query, not the resume path).
+    pub fn contains(&self, id: u64) -> bool {
+        if self.entries.contains_key(&id) {
+            return true;
+        }
+        self.spill_base(id)
+            .map(|base| base.with_extension("bin").exists())
+            .unwrap_or(false)
+    }
+
     /// Insert (or replace) the state for a session, then enforce the byte
     /// budget by evicting least-recently-used sessions.
     pub fn put(&mut self, id: u64, mut state: SessionState) {
@@ -283,6 +296,15 @@ mod tests {
         let mut s = Store::new(StoreConfig { budget_bytes: one, spill_dir: Some(dir.clone()) });
         s.put(1, state(1, 32));
         s.put(2, state(2, 32)); // 1 spilled
+        let before = (s.stats.hits, s.stats.disk_hits, s.stats.misses);
+        assert!(s.contains(1), "spilled session still counts as held");
+        assert!(s.contains(2), "resident session counts as held");
+        assert!(!s.contains(3));
+        assert_eq!(
+            before,
+            (s.stats.hits, s.stats.disk_hits, s.stats.misses),
+            "contains must not touch the hit/miss stats"
+        );
         assert!(s.evict_session(1), "disk copy dropped");
         assert!(s.evict_session(2), "ram copy dropped");
         assert!(!s.evict_session(3));

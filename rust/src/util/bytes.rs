@@ -1,0 +1,145 @@
+//! Byte-level substrates shared across the crate: the bounded
+//! little-endian reader — the one implementation of "parse untrusted
+//! length-prefixed bytes without ever panicking", used by the session
+//! blob decoder ([`crate::session::SessionState`]) and the serve-layer
+//! frame decoder (`serve::wire`), each mapping [`ReadErr`] into its own
+//! error type — plus the stable byte hashes ([`fnv1a64`], [`splitmix64`])
+//! behind the router's consistent-hash ring and the shape fingerprint in
+//! the migration handshake.  One implementation each, so a fix lands in
+//! every user.
+
+/// Why a read failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadErr {
+    /// The input ended (or a length prefix pointed) past the buffer.
+    Truncated,
+    /// A length-prefixed string was not valid UTF-8.
+    Utf8,
+}
+
+/// Cursor over a byte slice; every read is bounds-checked (including
+/// against `pos + n` overflow) and advances the cursor.
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { bytes, pos: 0 }
+    }
+
+    /// Whether the cursor consumed the whole input.
+    pub fn is_exhausted(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], ReadErr> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or(ReadErr::Truncated)?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ReadErr> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, ReadErr> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ReadErr> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ReadErr> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn i32(&mut self) -> Result<i32, ReadErr> {
+        Ok(self.u32()? as i32)
+    }
+
+    /// `u32 len + UTF-8` string.
+    pub fn string(&mut self) -> Result<String, ReadErr> {
+        let len = self.u32()? as usize;
+        let b = self.take(len)?;
+        String::from_utf8(b.to_vec()).map_err(|_| ReadErr::Utf8)
+    }
+}
+
+/// FNV-1a over arbitrary bytes — stable across builds and processes
+/// (ring placement and handshake fingerprints must not depend on the
+/// per-process seeds `DefaultHasher` uses).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64: a fast, well-mixed permutation of a u64 — used to hash
+/// session ids onto the ring (small sequential ids must spread uniformly).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_primitives_and_tracks_exhaustion() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        buf.extend_from_slice(&0xBEEFu16.to_le_bytes());
+        buf.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&(-5i32).to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(b"hi");
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8(), Ok(7));
+        assert_eq!(r.u16(), Ok(0xBEEF));
+        assert_eq!(r.u32(), Ok(0xDEAD_BEEF));
+        assert_eq!(r.u64(), Ok(u64::MAX));
+        assert_eq!(r.i32(), Ok(-5));
+        assert_eq!(r.string(), Ok("hi".to_string()));
+        assert!(r.is_exhausted());
+        assert_eq!(r.u8(), Err(ReadErr::Truncated));
+    }
+
+    #[test]
+    fn truncation_and_bad_utf8_are_typed_never_panics() {
+        // length prefix pointing past the end
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.push(b'x');
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.string(), Err(ReadErr::Truncated));
+        // overflowing length prefix must not wrap
+        let max = u32::MAX.to_le_bytes();
+        let mut r = ByteReader::new(&max);
+        assert_eq!(r.u32(), Ok(u32::MAX));
+        assert_eq!(r.take(usize::MAX), Err(ReadErr::Truncated));
+        // invalid utf-8 in a well-framed string
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[0xFF, 0xFE]);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.string(), Err(ReadErr::Utf8));
+    }
+}

@@ -5,6 +5,7 @@
 //! (no `rand`, no `proptest`, no `criterion`, no `rayon`), so these
 //! substrates are implemented in-repo (see DESIGN.md §6 "Substitutions").
 
+pub mod bytes;
 pub mod pool;
 pub mod prng;
 pub mod prop;

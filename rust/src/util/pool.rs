@@ -37,7 +37,10 @@
 //!   unboundedly — so no lock-ordering deadlock can form through user
 //!   closures, and callers never convoy behind each other.  Fan-outs
 //!   smaller than the worker set wake and wait for only the lanes they
-//!   use; idle cores stay parked.
+//!   use; idle cores stay parked — and fan-outs of at most
+//!   [`INLINE_CUTOVER`] items skip the handoff entirely and run inline on
+//!   the caller (a 1-2 row decode step is cheaper than the condvar
+//!   round-trip it would buy).
 //!
 //! ```
 //! use laughing_hyena::util::pool::Pool;
@@ -73,6 +76,15 @@ thread_local! {
     /// [`Pool::map`]; nested `map` calls see it and run inline.
     static IN_POOL: Cell<bool> = const { Cell::new(false) };
 }
+
+/// Fan-outs of at most this many items run sequentially inline on the
+/// caller instead of paying the epoch handoff (condvar wakeup + two mutex
+/// round-trips).  At one token of work per row, a 1-2 row decode step
+/// finishes faster than the handoff costs; results are identical either
+/// way (the sequential path is the pool's own fallback), so this is a
+/// pure constant-factor choice.  Picked conservatively — the decode
+/// bench's per-batch `pool_speedup` column is the evidence for moving it.
+pub const INLINE_CUTOVER: usize = 2;
 
 /// Handle onto a worker pool, cheap to clone.  [`Pool::auto`] /
 /// [`Pool::new`] share the process-global workers; [`Pool::dedicated`]
@@ -344,9 +356,10 @@ impl Pool {
     /// original item order.
     ///
     /// Items are consumed by value so per-item `&mut` state bundles can be
-    /// distributed to workers.  With one lane (or zero/one items, or when
-    /// called from inside the pool) this degenerates to a plain sequential
-    /// map on the calling thread — same results, same order.
+    /// distributed to workers.  With one lane (or at most
+    /// [`INLINE_CUTOVER`] items, or when called from inside the pool) this
+    /// degenerates to a plain sequential map on the calling thread — same
+    /// results, same order, no handoff cost.
     ///
     /// Panics if a worker panics (the original payload is re-raised).
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
@@ -357,7 +370,7 @@ impl Pool {
     {
         let n = items.len();
         let lanes = self.threads().min(n);
-        if lanes <= 1 || IN_POOL.with(|g| g.get()) {
+        if lanes <= 1 || n <= INLINE_CUTOVER || IN_POOL.with(|g| g.get()) {
             return items.into_iter().map(f).collect();
         }
         // One epoch in flight per core.  If another thread is mid-map on
@@ -491,6 +504,49 @@ mod tests {
     #[test]
     fn auto_pool_has_at_least_one_thread() {
         assert!(Pool::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn tiny_maps_run_inline_without_touching_the_handoff() {
+        // white box: a map of <= INLINE_CUTOVER items must not publish an
+        // epoch (no condvar round-trip), while a bigger one must
+        let pool = Pool::dedicated(4);
+        assert_eq!(pool.map(vec![10u64], |x| x + 1), vec![11]);
+        assert_eq!(pool.map(vec![10u64, 20], |x| x + 1), vec![11, 21]);
+        assert_eq!(
+            lock(&pool.core.shared.slot).epoch,
+            0,
+            "tiny fan-outs must skip the epoch handoff"
+        );
+        let n = INLINE_CUTOVER + 1;
+        let got = pool.map((0..n as u64).collect::<Vec<_>>(), |x| x + 1);
+        assert_eq!(got, (1..=n as u64).collect::<Vec<_>>());
+        if pool.core.bg > 0 {
+            assert_eq!(
+                lock(&pool.core.shared.slot).epoch,
+                1,
+                "a fan-out past the cutover takes the handoff path"
+            );
+        }
+    }
+
+    #[test]
+    fn inline_cutover_results_match_the_pooled_path_bit_for_bit() {
+        // the decode hot path's correctness contract: 1-2 row steps (now
+        // inline) and wider steps (pooled) must agree exactly
+        let work = |seed: u64| {
+            let mut rng = crate::util::Prng::new(seed);
+            (0..50).map(|_| rng.normal()).sum::<f64>()
+        };
+        let wide = Pool::dedicated(4);
+        for n in 1..=INLINE_CUTOVER + 2 {
+            let items: Vec<u64> = (0..n as u64).collect();
+            let seq: Vec<f64> = items.iter().map(|&x| work(x)).collect();
+            let got = wide.map(items, work);
+            for (a, b) in seq.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Loopback integration test of the serve layer: a router over 2-3
+//! in-process shard servers on `127.0.0.1:0` sockets (kernel-assigned
+//! ports, no network beyond loopback — sandbox-safe).
+//!
+//! The acceptance invariants:
+//!
+//! * interleaved sessions route with affinity (every second turn is a
+//!   session-store *hit* on its home shard — a miss would mean a turn
+//!   landed on the wrong shard);
+//! * a **live-migrated** session's continuation is bit-identical to the
+//!   same conversation served uninterrupted by a single coordinator;
+//! * a version- or engine-tag-mismatched blob is rejected at the
+//!   handshake and never restored;
+//! * drain + add-shard + rebalance churn never changes any conversation's
+//!   tokens.
+
+use std::time::Duration;
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::spawn;
+use laughing_hyena::coordinator::{CoordinatorHandle, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::serve::wire;
+use laughing_hyena::serve::{Cluster, ErrCode, Frame, ShardServer};
+use laughing_hyena::session::{SessionState, FORMAT_VERSION};
+
+/// Every shard and the reference coordinator share this seed, so all
+/// engines carry identical weights — the precondition for bit-identical
+/// cross-shard continuation.
+const SEED: u64 = 11;
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// The uninterrupted baseline: one coordinator, never migrated.
+fn reference() -> CoordinatorHandle {
+    let shape = shape();
+    spawn(
+        move || Box::new(RecurrentEngine::new(&shape, 2, SEED)) as Box<dyn SlotEngine>,
+        cfg(),
+    )
+}
+
+fn turn(h: &CoordinatorHandle, sid: u64, delta: Vec<i32>, n: usize) -> Vec<i32> {
+    h.submit_in_session(sid, delta, n)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap()
+        .tokens
+}
+
+/// The tentpole invariant (and satellite 3): a 3-turn conversation with
+/// turns 1-2 answered on shard A, a live migration, and turn 3 answered
+/// on shard B is token-identical to the uninterrupted single-coordinator
+/// run — with interleaved noise sessions proving affinity along the way.
+#[test]
+fn migrated_session_continues_bit_identical_to_uninterrupted() {
+    let mut cluster = Cluster::launch_native(2, &shape(), 2, SEED, &cfg()).unwrap();
+    let h_ref = reference();
+    let sid = 0xA11CE;
+    let (d1, d2, d3) = (vec![3, 1, 4, 1, 5], vec![9, 2, 6], vec![5, 3, 5, 8]);
+    let (n1, n2, n3) = (4usize, 3usize, 5usize);
+    // interleaved noise sessions spread over both shards
+    for noise in 0..4u64 {
+        let g = cluster
+            .router
+            .submit_in_session(noise, vec![7 + noise as i32; 3], 2)
+            .unwrap();
+        assert_eq!(g.len(), 2);
+    }
+    let g1 = cluster.router.submit_in_session(sid, d1.clone(), n1).unwrap();
+    let g2 = cluster.router.submit_in_session(sid, d2.clone(), n2).unwrap();
+    // live migration to the other shard between turns 2 and 3
+    let home = cluster.router.shard_of(sid).unwrap();
+    let target = 1 - home;
+    let bytes = cluster.router.migrate(sid, target).unwrap();
+    assert!(bytes > 0, "the recurrent engine ships O(1) state bytes");
+    assert_eq!(cluster.router.shard_of(sid), Some(target));
+    assert!(
+        !cluster.router.sessions_on(home).contains(&sid),
+        "the source shard must forget the session"
+    );
+    let g3 = cluster.router.submit_in_session(sid, d3.clone(), n3).unwrap();
+    // second turns of the noise sessions, after the migration churn
+    for noise in 0..4u64 {
+        let g = cluster.router.submit_in_session(noise, vec![2], 2).unwrap();
+        assert_eq!(g.len(), 2);
+    }
+    // uninterrupted baseline
+    let r1 = turn(&h_ref, sid, d1, n1);
+    let r2 = turn(&h_ref, sid, d2, n2);
+    let r3 = turn(&h_ref, sid, d3, n3);
+    assert_eq!(g1, r1, "turn 1 diverged");
+    assert_eq!(g2, r2, "turn 2 diverged");
+    assert_eq!(
+        g3, r3,
+        "turn 3 after live migration diverged from the uninterrupted run"
+    );
+    // nothing anywhere fell back to re-prefill: every later turn resumed
+    // stored state on the shard it was routed to (affinity), including
+    // the migrated one
+    let health = cluster.router.health().unwrap();
+    assert_eq!(
+        health.iter().map(|h| h.session_misses).sum::<u64>(),
+        0,
+        "a session miss means a turn was routed to a shard without its state"
+    );
+    assert!(health[target].session_hits >= 1, "turn 3 must resume on the target");
+    let hits: u64 = health.iter().map(|h| h.session_hits).sum();
+    assert!(hits >= 6, "turn 2, turn 3 and the 4 noise second-turns all resume");
+    h_ref.shutdown();
+    cluster.shutdown();
+}
+
+/// Acceptance: a blob with a foreign format version is rejected at the
+/// import handshake with a typed error — and nothing is restored.
+#[test]
+fn version_mismatched_blob_is_rejected_never_restored() {
+    let shard = ShardServer::spawn_native(&shape(), 2, SEED, cfg()).unwrap();
+    let mut stream = std::net::TcpStream::connect(shard.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let (engine_tag, fp, wfp) = match wire::read_frame(&mut stream).unwrap() {
+        Frame::Hello { engine, shape_fp, weights_fp, .. } => (engine, shape_fp, weights_fp),
+        other => panic!("expected Hello, got {other:?}"),
+    };
+    // a blob claiming a future format version, but otherwise plausible
+    let mut st = SessionState::new(&engine_tag, 5);
+    st.push_plane("x_re", vec![0.0; 4]);
+    let mut bytes = st.to_wire_bytes();
+    bytes[4..8].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+    wire::write_frame(
+        &mut stream,
+        &Frame::Import {
+            session: 1,
+            shape_fp: fp,
+            weights_fp: wfp,
+            transcript: vec![1],
+            state: Some(bytes),
+        },
+    )
+    .unwrap();
+    match wire::read_frame(&mut stream).unwrap() {
+        Frame::Error { code, msg } => {
+            assert_eq!(code, ErrCode::Mismatch);
+            assert!(msg.contains("version"), "error must name the cause: {msg}");
+        }
+        other => panic!("expected Mismatch, got {other:?}"),
+    }
+    // the refused import must not have created the session
+    wire::write_frame(&mut stream, &Frame::Export { session: 1 }).unwrap();
+    assert!(matches!(
+        wire::read_frame(&mut stream).unwrap(),
+        Frame::Error { code: ErrCode::UnknownSession, .. }
+    ));
+    shard.shutdown();
+}
+
+/// Drain a shard, grow the cluster, rebalance — every conversation keeps
+/// producing exactly the tokens its uninterrupted baseline produces.
+#[test]
+fn drain_and_add_shard_keep_every_conversation_intact() {
+    let mut cluster = Cluster::launch_native(3, &shape(), 2, SEED, &cfg()).unwrap();
+    let h_ref = reference();
+    let sids: Vec<u64> = (100..106).collect();
+    for &sid in &sids {
+        let d = vec![(sid % 30) as i32 + 1, 2, 3];
+        let got = cluster.router.submit_in_session(sid, d.clone(), 3).unwrap();
+        let want = turn(&h_ref, sid, d, 3);
+        assert_eq!(got, want, "turn 1 of session {sid:#x} diverged");
+    }
+    // drain shard 0: its sessions migrate away and the shard empties
+    cluster.router.drain(0).unwrap();
+    assert!(cluster.router.sessions_on(0).is_empty());
+    let health = cluster.router.health().unwrap();
+    assert_eq!(health[0].sessions_resident, 0, "drained shard still holds sessions");
+    // grow the cluster; move sessions whose ring target changed
+    let extra = ShardServer::spawn_native(&shape(), 2, SEED, cfg()).unwrap();
+    cluster.router.add_shard(extra.addr()).unwrap();
+    cluster.router.rebalance().unwrap();
+    // after all that churn, every conversation continues bit-identically
+    // and never lands on the drained shard
+    for &sid in &sids {
+        let d = vec![(sid % 7) as i32, 9];
+        let got = cluster.router.submit_in_session(sid, d.clone(), 4).unwrap();
+        let want = turn(&h_ref, sid, d, 4);
+        assert_eq!(got, want, "session {sid:#x} diverged after drain/rebalance");
+        assert_ne!(
+            cluster.router.shard_of(sid),
+            Some(0),
+            "drained shard must not serve session turns"
+        );
+    }
+    let health = cluster.router.health().unwrap();
+    assert_eq!(
+        health.iter().map(|h| h.session_misses).sum::<u64>(),
+        0,
+        "every post-migration turn must resume shipped state, not re-prefill"
+    );
+    extra.shutdown();
+    h_ref.shutdown();
+    cluster.shutdown();
+}
