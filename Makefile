@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci lint doc bench bench-decode bench-smoke serve-demo artifacts clean
+.PHONY: help build test verify ci chaos lint doc bench bench-decode bench-smoke serve-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -12,7 +12,10 @@ help:
 	@echo "  test         cargo test -q"
 	@echo "  verify       tier-1 gate: build + test"
 	@echo "  ci           full gate: build + test (with and without --features simd)"
-	@echo "               + clippy + docs (warnings denied) + decode bench smoke"
+	@echo "               + bounded chaos suite + clippy + docs (warnings denied)"
+	@echo "               + decode bench smoke"
+	@echo "  chaos        fault-injection suite (tests/serve_chaos.rs) under a"
+	@echo "               wall-clock bound; loopback-only, port-0, sandbox-safe"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
@@ -36,20 +39,27 @@ test:
 verify: build test
 
 # full CI chain: tier-1 (default features AND the simd intrinsics path)
-# plus clippy, rustdoc with warnings denied, and the decode bench smoke.
-# `cargo test` includes the serve-layer loopback integration test
-# (tests/serve_router.rs): router + shard servers on 127.0.0.1 with
-# port-0 auto-assign, so it is sandbox-safe; clippy covers serve/ via
-# --all-targets.
+# plus the bounded chaos suite, clippy, rustdoc with warnings denied, and
+# the decode bench smoke.  `cargo test` includes the serve-layer loopback
+# integration tests (tests/serve_router.rs, tests/serve_chaos.rs): router
+# + shard servers on 127.0.0.1 with port-0 auto-assign, so everything is
+# sandbox-safe; clippy covers serve/ via --all-targets.
 ci:
 	$(CARGO) build --release
 	$(CARGO) build --release --features simd
 	$(CARGO) test -q
 	$(CARGO) test -q --features simd
+	$(MAKE) chaos
 	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
 	$(MAKE) bench-smoke
+
+# the fault-injection suite, explicitly wall-clock-bounded: every fault is
+# injected deterministically (no sleep-and-hope races), so a hang here is
+# a real recovery-path bug — fail it rather than wedge CI.
+chaos:
+	timeout 420 $(CARGO) test -q --test serve_chaos
 
 # 1-iteration run of the decode bench (keeps its correctness cross-checks,
 # skips the gate and the BENCH_decode.json/CSV writes): proves the bench

@@ -160,6 +160,7 @@ mod tests {
                 max_new_tokens: 4,
                 session: None,
                 reply: tx,
+                stream: None,
                 enqueued: Instant::now(),
             },
             rx,

@@ -15,8 +15,28 @@ pub struct GenRequest {
     pub session: Option<u64>,
     /// Channel the finished response is delivered on.
     pub reply: Sender<GenResponse>,
+    /// Optional per-token stream, fed from the decode loop the moment each
+    /// token is produced (the first from prefill/resume, the rest one per
+    /// decode step) — so a consumer's time-to-first-byte equals the
+    /// engine's time-to-first-token instead of the whole generation.  The
+    /// sender is dropped when the request retires, which is how a stream
+    /// consumer observes end-of-tokens; the buffered [`GenResponse`] on
+    /// `reply` always carries the identical full token vector.  A dropped
+    /// receiver never stalls or cancels the generation.
+    pub stream: Option<Sender<i32>>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+}
+
+impl GenRequest {
+    /// Emit one generated token to the per-token stream, if any.  Send
+    /// failures (consumer gone) are deliberately ignored: the generation
+    /// itself must finish so session snapshots stay consistent.
+    pub fn emit(&self, tok: i32) {
+        if let Some(tx) = &self.stream {
+            let _ = tx.send(tok);
+        }
+    }
 }
 
 /// The finished generation.

@@ -39,6 +39,12 @@ enum Msg {
     /// Whether this coordinator holds any trace of the session (stored or
     /// spilled state, transcript, or an in-flight turn).
     Query(u64, Sender<bool>),
+    /// Read a session's full transcript *without* detaching anything.
+    /// Deferred until the session quiesces (like Export), so the reply
+    /// always reflects every completed turn — the recovery primitive a
+    /// front door uses to reconcile after a token stream was severed
+    /// mid-turn.
+    Transcript(u64, Sender<Option<Vec<i32>>>),
     Shutdown,
 }
 
@@ -114,7 +120,7 @@ impl CoordinatorHandle {
         prompt: Vec<i32>,
         max_new_tokens: usize,
     ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
-        self.submit_opt(None, prompt, max_new_tokens)
+        self.submit_opt(None, prompt, max_new_tokens, None)
     }
 
     /// Submit one turn of a multi-turn session.  `tokens` is only this
@@ -131,7 +137,52 @@ impl CoordinatorHandle {
         tokens: Vec<i32>,
         max_new_tokens: usize,
     ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
-        self.submit_opt(Some(session_id), tokens, max_new_tokens)
+        self.submit_opt(Some(session_id), tokens, max_new_tokens, None)
+    }
+
+    /// Streaming variant of [`CoordinatorHandle::submit`]: the first
+    /// receiver yields each generated token the moment the decode loop
+    /// produces it (its sender is dropped at retire, ending the stream);
+    /// the second delivers the buffered [`GenResponse`] whose `tokens` are
+    /// always identical to the streamed sequence.
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<(Receiver<i32>, Receiver<GenResponse>), CoordinatorClosed> {
+        let (tok_tx, tok_rx) = channel();
+        let rx = self.submit_opt(None, prompt, max_new_tokens, Some(tok_tx))?;
+        Ok((tok_rx, rx))
+    }
+
+    /// Streaming variant of [`CoordinatorHandle::submit_in_session`].
+    pub fn submit_in_session_streaming(
+        &self,
+        session_id: u64,
+        tokens: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<(Receiver<i32>, Receiver<GenResponse>), CoordinatorClosed> {
+        let (tok_tx, tok_rx) = channel();
+        let rx =
+            self.submit_opt(Some(session_id), tokens, max_new_tokens, Some(tok_tx))?;
+        Ok((tok_rx, rx))
+    }
+
+    /// Streaming variant of [`CoordinatorHandle::resume_session`]: strict
+    /// (typed [`SessionError::Unknown`] refusal) plus a per-token stream.
+    pub fn resume_session_streaming(
+        &self,
+        session_id: u64,
+        tokens: Vec<i32>,
+        max_new_tokens: usize,
+    ) -> Result<(Receiver<i32>, Receiver<GenResponse>), SubmitError> {
+        if !self.session_known(session_id)? {
+            return Err(SubmitError::Session(SessionError::Unknown { id: session_id }));
+        }
+        let (tok_tx, tok_rx) = channel();
+        let rx =
+            self.submit_opt(Some(session_id), tokens, max_new_tokens, Some(tok_tx))?;
+        Ok((tok_rx, rx))
     }
 
     fn submit_opt(
@@ -139,6 +190,7 @@ impl CoordinatorHandle {
         session: Option<u64>,
         prompt: Vec<i32>,
         max_new_tokens: usize,
+        stream: Option<Sender<i32>>,
     ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
         let (tx, rx) = channel();
         let req = GenRequest {
@@ -150,6 +202,7 @@ impl CoordinatorHandle {
             max_new_tokens: max_new_tokens.max(1),
             session,
             reply: tx,
+            stream,
             enqueued: Instant::now(),
         };
         self.tx.send(Msg::Req(req)).map_err(|_| CoordinatorClosed)?;
@@ -183,7 +236,7 @@ impl CoordinatorHandle {
         if !self.session_known(session_id)? {
             return Err(SubmitError::Session(SessionError::Unknown { id: session_id }));
         }
-        Ok(self.submit_opt(Some(session_id), tokens, max_new_tokens)?)
+        Ok(self.submit_opt(Some(session_id), tokens, max_new_tokens, None)?)
     }
 
     /// Whether this coordinator holds any trace of the session: a stored
@@ -205,6 +258,21 @@ impl CoordinatorHandle {
     ) -> Result<Option<SessionExport>, CoordinatorClosed> {
         let (tx, rx) = channel();
         self.tx.send(Msg::Export(session_id, tx)).map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
+    }
+
+    /// Read a session's full transcript without detaching it.  Blocks
+    /// until the session quiesces (no turn queued or in flight), so the
+    /// reply reflects every completed turn.  Returns `Ok(None)` when this
+    /// coordinator holds no transcript for the session.
+    pub fn transcript_of(
+        &self,
+        session_id: u64,
+    ) -> Result<Option<Vec<i32>>, CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Transcript(session_id, tx))
+            .map_err(|_| CoordinatorClosed)?;
         rx.recv().map_err(|_| CoordinatorClosed)
     }
 
@@ -244,10 +312,13 @@ impl Drop for CoordinatorHandle {
     }
 }
 
-/// Record a slot's first generated token (prefill or session resume).
+/// Record a slot's first generated token (prefill or session resume) and
+/// emit it to the request's per-token stream — wire TTFB equals engine
+/// TTFT because this runs the moment prefill/resume returns.
 fn record_first_token(batcher: &mut Batcher, slot: usize, tok: i32) {
     if let Slot::Busy { req, generated, first_token_s } = &mut batcher.slots[slot] {
         generated.push(tok);
+        req.emit(tok);
         *first_token_s = Some(req.enqueued.elapsed().as_secs_f64());
     }
 }
@@ -268,6 +339,9 @@ struct Sched {
     /// same deferred machinery `end_session` uses, so an exported blob
     /// always reflects the complete conversation.
     pending_export: HashMap<u64, Vec<Sender<Option<SessionExport>>>>,
+    /// Transcript reads that arrived mid-turn; fulfilled (non-destructively)
+    /// when the session quiesces, so the reply reflects the whole turn.
+    pending_transcript: HashMap<u64, Vec<Sender<Option<Vec<i32>>>>>,
     shutdown: bool,
 }
 
@@ -319,6 +393,18 @@ impl Sched {
         }
     }
 
+    /// Fulfill every deferred transcript read waiting on `id` with the
+    /// current (complete) transcript.  Non-destructive, so every waiter
+    /// gets the same answer.
+    fn fulfill_transcripts(&mut self, id: u64) {
+        if let Some(waiters) = self.pending_transcript.remove(&id) {
+            let transcript = self.history.get(&id).cloned();
+            for tx in waiters {
+                let _ = tx.send(transcript.clone());
+            }
+        }
+    }
+
     /// Apply one channel message (the single intake site).
     fn apply_msg(&mut self, msg: Msg, m: &Metrics) {
         match msg {
@@ -355,6 +441,13 @@ impl Sched {
                     || self.store.contains(id);
                 let _ = reply.send(known);
             }
+            Msg::Transcript(id, reply) => {
+                if self.session_in_flight(id) {
+                    self.pending_transcript.entry(id).or_default().push(reply);
+                } else {
+                    let _ = reply.send(self.history.get(&id).cloned());
+                }
+            }
             Msg::Shutdown => self.shutdown = true,
         }
     }
@@ -381,6 +474,7 @@ where
             history: HashMap::new(),
             pending_end: HashSet::new(),
             pending_export: HashMap::new(),
+            pending_transcript: HashMap::new(),
             shutdown: false,
         };
         loop {
@@ -502,8 +596,11 @@ where
                 let toks = engine.decode_slots(&active);
                 m.record_decode(toks.len());
                 for (slot, tok) in toks {
-                    if let Slot::Busy { generated, .. } = &mut s.batcher.slots[slot] {
+                    if let Slot::Busy { req, generated, .. } = &mut s.batcher.slots[slot] {
                         generated.push(tok);
+                        // per-token streaming: each decode step's token goes
+                        // out the moment it exists, not at retire
+                        req.emit(tok);
                     }
                 }
             }
@@ -519,10 +616,15 @@ where
                         if let Some(id) = req.session {
                             if s.pending_end.contains(&id) && !s.session_in_flight(id) {
                                 // deferred end_session: the last turn just
-                                // retired, drop the transcript and state;
-                                // any export waiting on the same session
-                                // gets None (the end wins) instead of
-                                // blocking forever
+                                // retired.  Transcript readers see the final
+                                // transcript (this turn included) before it
+                                // is dropped; any export waiting on the same
+                                // session gets None (the end wins) instead
+                                // of blocking forever
+                                let h = s.history.entry(id).or_default();
+                                h.extend_from_slice(&req.prompt);
+                                h.extend_from_slice(&generated);
+                                s.fulfill_transcripts(id);
                                 s.pending_end.remove(&id);
                                 s.free_session(id, &m);
                                 s.fulfill_exports(id, &m);
@@ -539,8 +641,11 @@ where
                                 }
                                 s.mirror_store(&m);
                                 if !s.session_in_flight(id) {
-                                    // deferred export: the last turn just
-                                    // retired, detach and ship the session
+                                    // the last turn just retired: deferred
+                                    // transcript reads see the complete
+                                    // conversation, then any deferred export
+                                    // detaches and ships the session
+                                    s.fulfill_transcripts(id);
                                     s.fulfill_exports(id, &m);
                                 }
                             }
@@ -890,6 +995,71 @@ mod tests {
         want.extend(&resp.tokens);
         assert_eq!(export.transcript, want, "export saw a partial conversation");
         assert!(!h.session_known(9).unwrap());
+        h.shutdown();
+    }
+
+    /// The streaming contract: the per-token stream yields exactly the
+    /// buffered `GenResponse.tokens`, in order, and ends (sender dropped)
+    /// at retire.
+    #[test]
+    fn streamed_tokens_equal_buffered_response() {
+        let h = handle(2);
+        let (tok_rx, rx) = h.submit_streaming(vec![4, 2, 4], 6).unwrap();
+        let streamed: Vec<i32> = tok_rx.iter().collect();
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(streamed, resp.tokens, "stream diverged from buffered reply");
+        assert_eq!(streamed.len(), 6);
+        // session variant, across two turns
+        let (t1, r1) = h.submit_in_session_streaming(3, vec![1, 2], 4).unwrap();
+        let s1: Vec<i32> = t1.iter().collect();
+        assert_eq!(s1, r1.recv_timeout(Duration::from_secs(60)).unwrap().tokens);
+        let (t2, r2) = h.resume_session_streaming(3, vec![5], 3).unwrap();
+        let s2: Vec<i32> = t2.iter().collect();
+        assert_eq!(s2, r2.recv_timeout(Duration::from_secs(60)).unwrap().tokens);
+        // the streamed turns match a non-streamed coordinator exactly
+        let h2 = handle(2);
+        assert_eq!(s1, turn(&h2, 3, vec![1, 2], 4));
+        assert_eq!(s2, turn(&h2, 3, vec![5], 3));
+        h.shutdown();
+        h2.shutdown();
+    }
+
+    /// A consumer abandoning the token stream must not stall or cancel the
+    /// generation (session snapshots depend on the turn completing).
+    #[test]
+    fn dropped_stream_receiver_does_not_cancel_generation() {
+        let h = handle(2);
+        let (tok_rx, rx) = h.submit_in_session_streaming(9, vec![1, 2, 3], 5).unwrap();
+        drop(tok_rx);
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        // the session is intact and resumable
+        assert!(h.session_known(9).unwrap());
+        assert_eq!(turn(&h, 9, vec![4], 3).len(), 3);
+        h.shutdown();
+    }
+
+    /// `transcript_of` defers until the in-flight turn retires and then
+    /// reflects the complete conversation — without detaching the session.
+    #[test]
+    fn transcript_read_defers_until_quiescent_and_is_non_destructive() {
+        let h = handle(2);
+        assert_eq!(h.transcript_of(4).unwrap(), None, "unknown session");
+        let rx = h.submit_in_session(4, vec![1, 2, 3], 5).unwrap();
+        // FIFO channel: the read arrives behind the turn and must wait
+        let transcript = h.transcript_of(4).unwrap().expect("session exists");
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let mut want = vec![1, 2, 3];
+        want.extend(&resp.tokens);
+        assert_eq!(transcript, want, "transcript read saw a partial turn");
+        // non-destructive: the session still resumes afterwards
+        assert!(h.session_known(4).unwrap());
+        let g2 = turn(&h, 4, vec![9], 3);
+        let mut want2 = want;
+        want2.push(9);
+        want2.extend(&g2);
+        assert_eq!(h.transcript_of(4).unwrap().unwrap(), want2);
+        assert_eq!(h.metrics.snapshot().session_misses, 0);
         h.shutdown();
     }
 

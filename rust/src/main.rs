@@ -44,6 +44,8 @@ fn main() {
                  repro serve --shards K --sessions N --turns T [--migrate] [--drain I]\n\
                  \u{20}                               sharded cluster demo: router + K loopback\n\
                  \u{20}                               shards, live session migration, drain\n\
+                 repro serve --shards K --chaos  kill a shard mid-conversation and show\n\
+                 \u{20}                               transcript-mirror resurrection\n\
                  repro info",
                 experiments::ALL
             );
@@ -193,10 +195,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// The sharded serving demo: a router over `n_shards` in-process shard
 /// servers on loopback sockets, interleaved multi-turn sessions with
 /// consistent-hash affinity, an optional live migration mid-conversation
-/// (`--migrate`) and an optional shard drain at the end (`--drain I`),
-/// closing with the per-shard + aggregated health report.
+/// (`--migrate`), an optional injected shard kill with transcript-mirror
+/// resurrection (`--chaos`), and an optional shard drain at the end
+/// (`--drain I`), closing with the per-shard + aggregated health report.
 fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Result<()> {
-    use laughing_hyena::serve::Cluster;
+    use laughing_hyena::serve::{BreakerConfig, Cluster, FaultPlan};
     let shape_name = args.get_str("shape", "nano");
     let shape = LmShape::bench(shape_name)
         .ok_or_else(|| anyhow::anyhow!("unknown bench shape '{shape_name}'"))?;
@@ -206,12 +209,33 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
     let turns = args.get_usize("turns", 3);
     let seed = args.get_u64("seed", 11);
     let migrate = args.has_flag("migrate");
+    let chaos = args.has_flag("chaos");
+    if chaos && n_shards < 2 {
+        anyhow::bail!("--chaos needs at least 2 shards (one must survive the kill)");
+    }
     println!(
         "sharded serve demo: {n_shards} shards x {slots} slots (shape {shape_name}), \
-         {sessions} sessions x {turns} turns{}",
-        if migrate { ", with live migration" } else { "" }
+         {sessions} sessions x {turns} turns{}{}",
+        if migrate { ", with live migration" } else { "" },
+        if chaos { ", with an injected shard kill" } else { "" }
     );
-    let mut cluster = Cluster::launch_native(n_shards, &shape, slots, seed, &serve_cfg)?;
+    let faults = chaos.then(|| std::sync::Arc::new(FaultPlan::new()));
+    // chaos runs pin the breaker cooldown to zero so the revived shard can
+    // rejoin (via a half-open probe) within the demo's lifetime
+    let breaker_cfg = if chaos {
+        BreakerConfig { cooldown: std::time::Duration::ZERO, ..BreakerConfig::default() }
+    } else {
+        BreakerConfig::default()
+    };
+    let mut cluster = Cluster::launch_native_with(
+        n_shards,
+        &shape,
+        slots,
+        seed,
+        &serve_cfg,
+        breaker_cfg,
+        faults.clone(),
+    )?;
     let t0 = std::time::Instant::now();
     for t in 0..turns {
         for s in 0..sessions {
@@ -232,6 +256,29 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
             let bytes = cluster.router.migrate(0, to)?;
             println!("migrated session 0: shard {from} -> {to} ({bytes} state bytes shipped)");
         }
+        if t == 0 && sessions > 0 {
+            if let (Some(plan), Some(home)) = (&faults, cluster.router.shard_of(0)) {
+                // kill session 0's home shard between turns: the next
+                // turn is resurrected from the router's transcript
+                // mirror on a surviving shard, token-identical
+                plan.kill(cluster.shards[home].addr());
+                println!(
+                    "chaos: killed shard {home} (session 0's home) — the next turn \
+                     resurrects the session from the transcript mirror"
+                );
+            }
+        }
+    }
+    if let Some(plan) = &faults {
+        let states: Vec<_> = (0..n_shards)
+            .filter_map(|i| cluster.router.breaker_state(i))
+            .collect();
+        println!("circuit breakers after the kill: {states:?}");
+        for s in &cluster.shards {
+            plan.revive(s.addr());
+        }
+        let states = cluster.router.probe_all();
+        println!("revived all shards; circuits after a health probe: {states:?}");
     }
     if let Some(idx) = args.get("drain").and_then(|v| v.parse::<usize>().ok()) {
         let moved = cluster.router.drain(idx)?;

@@ -4,7 +4,10 @@
 //! both drive this).
 
 use std::fmt;
+use std::sync::Arc;
 
+use super::circuit::BreakerConfig;
+use super::faults::FaultPlan;
 use super::router::{RouteError, Router};
 use super::shard::ShardServer;
 use super::wire::HealthReport;
@@ -84,6 +87,22 @@ impl Cluster {
         seed: u64,
         cfg: &ServeConfig,
     ) -> Result<Cluster, RouteError> {
+        Cluster::launch_native_with(n, shape, slots, seed, cfg, BreakerConfig::default(), None)
+    }
+
+    /// [`Cluster::launch_native`] with explicit breaker tuning and an
+    /// optional fault plan threaded into the router (the chaos tests
+    /// stage shard kills and protocol-point faults through the plan).
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_native_with(
+        n: usize,
+        shape: &LmShape,
+        slots: usize,
+        seed: u64,
+        cfg: &ServeConfig,
+        breaker_cfg: BreakerConfig,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Cluster, RouteError> {
         let mut shards = Vec::with_capacity(n);
         for i in 0..n {
             let mut shard_cfg = cfg.clone();
@@ -93,12 +112,12 @@ impl Cluster {
             shards.push(ShardServer::spawn_native(shape, slots, seed, shard_cfg)?);
         }
         let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
-        let router = Router::new(&addrs)?;
+        let router = Router::new_with(&addrs, breaker_cfg, faults)?;
         Ok(Cluster { shards, router })
     }
 
     /// Aggregated health over the wire.
-    pub fn report(&self) -> Result<AdminReport, RouteError> {
+    pub fn report(&mut self) -> Result<AdminReport, RouteError> {
         Ok(AdminReport::aggregate(self.router.health()?))
     }
 

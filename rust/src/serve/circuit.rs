@@ -1,0 +1,174 @@
+//! Per-shard circuit breaker: the router's defense against hammering a
+//! dead or flapping shard with full connect timeouts on every request.
+//!
+//! Classic three-state machine:
+//!
+//! ```text
+//!             failure >= threshold
+//!   Closed ──────────────────────────▶ Open
+//!     ▲                                 │ cooldown elapses
+//!     │ success                         ▼
+//!     └────────────────────────────  HalfOpen
+//!                 ▲                     │ failure
+//!                 └─────────────────────┘ (straight back to Open)
+//! ```
+//!
+//! * **Closed** — requests flow; consecutive failures are counted and any
+//!   success resets the count.
+//! * **Open** — requests are refused *immediately* (the router surfaces a
+//!   typed `ShardUnavailable`, not an i/o timeout) until the cooldown
+//!   elapses.
+//! * **HalfOpen** — after the cooldown one probe request is let through;
+//!   success closes the circuit, failure re-opens it for another cooldown.
+//!
+//! The breaker itself is time-driven but deterministic: the only clock
+//! read is in [`Breaker::allow`], and tests pin `cooldown` to zero (always
+//! immediately half-open) or to hours (never half-open) so no test sleeps.
+
+use std::time::{Duration, Instant};
+
+/// Tuning for one shard's breaker.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures (connect errors, i/o errors mid-call) that
+    /// trip Closed → Open.
+    pub failure_threshold: u32,
+    /// How long an open circuit refuses requests before letting one probe
+    /// through.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, cooldown: Duration::from_secs(5) }
+    }
+}
+
+/// Observable breaker state (the internal Open variant also carries its
+/// reopen deadline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum State {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// One shard's circuit breaker.  Not internally synchronized — the router
+/// holds it under its own lock.
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    state: State,
+    consecutive_failures: u32,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Breaker { cfg, state: State::Closed, consecutive_failures: 0 }
+    }
+
+    /// May a request be attempted right now?  An elapsed-cooldown open
+    /// circuit transitions to half-open here (and admits the probe).
+    pub fn allow(&mut self) -> bool {
+        match self.state {
+            State::Closed | State::HalfOpen => true,
+            State::Open { until } => {
+                if Instant::now() >= until {
+                    self.state = State::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A request (or health probe) succeeded: close the circuit.
+    pub fn record_success(&mut self) {
+        self.state = State::Closed;
+        self.consecutive_failures = 0;
+    }
+
+    /// A request failed at the transport level.  A half-open probe failure
+    /// re-opens immediately; `failure_threshold` consecutive closed-state
+    /// failures trip the breaker.
+    pub fn record_failure(&mut self) {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        let trip = matches!(self.state, State::HalfOpen)
+            || self.consecutive_failures >= self.cfg.failure_threshold;
+        if trip {
+            self.state = State::Open { until: Instant::now() + self.cfg.cooldown };
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state {
+            State::Closed => BreakerState::Closed,
+            State::Open { .. } => BreakerState::Open,
+            State::HalfOpen => BreakerState::HalfOpen,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker::new(BreakerConfig { failure_threshold: threshold, cooldown })
+    }
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let mut b = breaker(3, Duration::from_secs(3600));
+        for _ in 0..2 {
+            b.record_failure();
+            assert_eq!(b.state(), BreakerState::Closed);
+            assert!(b.allow());
+        }
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(), "open circuit with a future deadline must refuse");
+        // and it stays open: the hour-long cooldown has not elapsed
+        assert!(!b.allow());
+    }
+
+    #[test]
+    fn success_resets_the_failure_count() {
+        let mut b = breaker(3, Duration::from_secs(3600));
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "count must reset on success");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn elapsed_cooldown_half_opens_and_probe_decides() {
+        // zero cooldown: the open circuit is immediately eligible to probe
+        let mut b = breaker(1, Duration::ZERO);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.allow(), "elapsed cooldown must admit a probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // probe failure: straight back to open (single failure, below any
+        // threshold — half-open failures trip unconditionally)
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // next probe succeeds: closed again
+        assert!(b.allow());
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+    }
+}

@@ -1,0 +1,266 @@
+//! Deterministic fault injection for the serve layer.
+//!
+//! Every failure path the router claims to survive — a shard dying
+//! mid-token-stream, a migration severed after the export but before its
+//! Ok, an import that never lands — is exercised by *injecting* the fault
+//! at a named protocol point rather than hoping a test can race a real
+//! crash.  The router threads an optional [`FaultPlan`] through its
+//! shard connections; at each hook point it asks the plan whether a rule
+//! fires and applies the returned [`FaultAction`].  With no plan (or no
+//! matching rule) the hooks are no-ops, so production builds pay one
+//! `Option` check per frame.
+//!
+//! Rules are consumed (`times` countdown) and logged, so a test can
+//! assert not only that the conversation survived, but that the fault it
+//! staged actually fired (a fault that never fires is a test of nothing).
+//!
+//! Semantics of the actions at a [`Point::Send`] / [`Point::RecvReplyTo`]
+//! hook, chosen so each distinct protocol window is reachable:
+//!
+//! | action         | at `Send(k)`                          | at `RecvReplyTo(k)`                   |
+//! |----------------|---------------------------------------|---------------------------------------|
+//! | `DropFrame`    | request never written; conn severed — the shard never saw it | request processed by the shard; its reply read and *discarded*; conn severed |
+//! | `SeverAfter`   | request written, conn severed before the reply is read | reply read and returned, then conn severed |
+//! | `Delay(d)`     | sleep `d`, then write normally        | sleep `d`, then read normally         |
+//! | `Corrupt`      | a byte of the encoded frame is flipped before writing (the shard's bounded decoder must reject it) | reply read, a byte flipped before decoding on the router side |
+//!
+//! `Point::Connect` refuses the TCP connect (any action), and
+//! [`FaultPlan::kill`] makes a shard address unreachable until
+//! [`FaultPlan::revive`] — the serve-layer stand-in for a crashed
+//! process, without un-listening the socket.
+
+use std::collections::HashSet;
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::wire::Frame;
+
+/// Which protocol frame a rule keys on (one variant per wire tag that a
+/// router ever sends or awaits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    Hello,
+    Submit,
+    SubmitInSession,
+    EndSession,
+    Export,
+    Import,
+    Health,
+    ExportCommit,
+    ExportAbort,
+    Transcript,
+    Token,
+    Done,
+    Blob,
+    Ok,
+    HealthReport,
+    TranscriptIs,
+    Error,
+}
+
+impl FrameKind {
+    /// The kind of a concrete frame (for request-tracking in the conn).
+    pub fn of(f: &Frame) -> FrameKind {
+        match f {
+            Frame::Hello { .. } => FrameKind::Hello,
+            Frame::Submit { .. } => FrameKind::Submit,
+            Frame::SubmitInSession { .. } => FrameKind::SubmitInSession,
+            Frame::EndSession { .. } => FrameKind::EndSession,
+            Frame::Export { .. } => FrameKind::Export,
+            Frame::Import { .. } => FrameKind::Import,
+            Frame::Health => FrameKind::Health,
+            Frame::ExportCommit { .. } => FrameKind::ExportCommit,
+            Frame::ExportAbort { .. } => FrameKind::ExportAbort,
+            Frame::Transcript { .. } => FrameKind::Transcript,
+            Frame::Token { .. } => FrameKind::Token,
+            Frame::Done { .. } => FrameKind::Done,
+            Frame::Blob { .. } => FrameKind::Blob,
+            Frame::Ok => FrameKind::Ok,
+            Frame::HealthReport(_) => FrameKind::HealthReport,
+            Frame::TranscriptIs { .. } => FrameKind::TranscriptIs,
+            Frame::Error { .. } => FrameKind::Error,
+        }
+    }
+}
+
+/// A named protocol point a rule can fire at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Point {
+    /// Establishing the TCP connection to the shard.
+    Connect,
+    /// Just before the router writes this request frame.
+    Send(FrameKind),
+    /// Just before the router reads the reply to this request kind
+    /// (`RecvReplyTo(Export)` is the canonical "after-export-before-ok"
+    /// window: the shard performed the export, the router never hears).
+    RecvReplyTo(FrameKind),
+    /// After exactly `after` streamed `Token` frames of one generation
+    /// have been relayed ("mid-token-stream").
+    TokenStream { after: u32 },
+}
+
+/// What happens when a rule fires; see the module-level table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    DropFrame,
+    SeverAfter,
+    Delay(Duration),
+    Corrupt,
+}
+
+/// One injection rule: fires `times` times at `point` (optionally only
+/// toward `shard`), then goes inert.
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    /// `None` matches any shard.
+    pub shard: Option<SocketAddr>,
+    pub point: Point,
+    pub action: FaultAction,
+    pub times: u32,
+}
+
+impl Rule {
+    /// A single-shot rule matching any shard.
+    pub fn once(point: Point, action: FaultAction) -> Rule {
+        Rule { shard: None, point, action, times: 1 }
+    }
+
+    /// A single-shot rule pinned to one shard address.
+    pub fn once_at(shard: SocketAddr, point: Point, action: FaultAction) -> Rule {
+        Rule { shard: Some(shard), point, action, times: 1 }
+    }
+}
+
+/// A fault that fired (for test assertions: staged faults must be hit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hit {
+    pub shard: SocketAddr,
+    pub point: Point,
+    pub action: FaultAction,
+}
+
+#[derive(Default)]
+struct Inner {
+    rules: Vec<Rule>,
+    killed: HashSet<SocketAddr>,
+    hits: Vec<Hit>,
+}
+
+/// The shared fault plan; internally synchronized so the router's
+/// per-connection threads consult it concurrently.
+#[derive(Default)]
+pub struct FaultPlan {
+    inner: Mutex<Inner>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn add_rule(&self, rule: Rule) {
+        self.inner.lock().unwrap().rules.push(rule);
+    }
+
+    /// Make a shard address unreachable (every connect refused) until
+    /// [`FaultPlan::revive`].
+    pub fn kill(&self, addr: SocketAddr) {
+        self.inner.lock().unwrap().killed.insert(addr);
+    }
+
+    pub fn revive(&self, addr: SocketAddr) {
+        self.inner.lock().unwrap().killed.remove(&addr);
+    }
+
+    pub fn is_killed(&self, addr: SocketAddr) -> bool {
+        self.inner.lock().unwrap().killed.contains(&addr)
+    }
+
+    /// Consult the plan at a protocol point: consumes and returns the
+    /// first matching live rule's action, recording a [`Hit`].
+    pub fn fire(&self, shard: SocketAddr, point: Point) -> Option<FaultAction> {
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner.rules.iter().position(|r| {
+            r.times > 0 && (r.shard.is_none() || r.shard == Some(shard)) && r.point == point
+        })?;
+        inner.rules[idx].times -= 1;
+        let action = inner.rules[idx].action;
+        inner.hits.push(Hit { shard, point, action });
+        Some(action)
+    }
+
+    /// Every fault that fired so far, in order.
+    pub fn hits(&self) -> Vec<Hit> {
+        self.inner.lock().unwrap().hits.clone()
+    }
+
+    /// How many staged rules have not (fully) fired yet.
+    pub fn rules_pending(&self) -> usize {
+        self.inner.lock().unwrap().rules.iter().filter(|r| r.times > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    #[test]
+    fn rule_fires_exactly_times_then_goes_inert() {
+        let plan = FaultPlan::new();
+        plan.add_rule(Rule {
+            shard: None,
+            point: Point::Send(FrameKind::Export),
+            action: FaultAction::DropFrame,
+            times: 2,
+        });
+        assert_eq!(plan.rules_pending(), 1);
+        let p = Point::Send(FrameKind::Export);
+        assert_eq!(plan.fire(addr(1), p), Some(FaultAction::DropFrame));
+        assert_eq!(plan.fire(addr(2), p), Some(FaultAction::DropFrame));
+        assert_eq!(plan.fire(addr(1), p), None, "rule must be consumed");
+        assert_eq!(plan.rules_pending(), 0);
+        assert_eq!(plan.hits().len(), 2);
+        assert_eq!(plan.hits()[0], Hit { shard: addr(1), point: p, action: FaultAction::DropFrame });
+    }
+
+    #[test]
+    fn shard_filter_and_point_matching_are_exact() {
+        let plan = FaultPlan::new();
+        plan.add_rule(Rule::once_at(
+            addr(9),
+            Point::RecvReplyTo(FrameKind::Import),
+            FaultAction::SeverAfter,
+        ));
+        plan.add_rule(Rule::once(Point::TokenStream { after: 3 }, FaultAction::SeverAfter));
+        // wrong shard, wrong point, wrong token count: no fire
+        assert_eq!(plan.fire(addr(8), Point::RecvReplyTo(FrameKind::Import)), None);
+        assert_eq!(plan.fire(addr(9), Point::RecvReplyTo(FrameKind::Export)), None);
+        assert_eq!(plan.fire(addr(9), Point::TokenStream { after: 2 }), None);
+        // exact matches fire
+        assert_eq!(
+            plan.fire(addr(9), Point::RecvReplyTo(FrameKind::Import)),
+            Some(FaultAction::SeverAfter)
+        );
+        assert_eq!(
+            plan.fire(addr(1), Point::TokenStream { after: 3 }),
+            Some(FaultAction::SeverAfter)
+        );
+        assert_eq!(plan.hits().len(), 2);
+    }
+
+    #[test]
+    fn kill_and_revive_toggle_reachability() {
+        let plan = FaultPlan::new();
+        assert!(!plan.is_killed(addr(5)));
+        plan.kill(addr(5));
+        assert!(plan.is_killed(addr(5)));
+        assert!(!plan.is_killed(addr(6)), "kill is per-address");
+        plan.revive(addr(5));
+        assert!(!plan.is_killed(addr(5)));
+    }
+}

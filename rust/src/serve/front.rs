@@ -1,0 +1,547 @@
+//! The concurrent, streaming front door: a wire server wrapped around the
+//! [`Router`].
+//!
+//! The router itself is a plain single-threaded struct; this module is
+//! what makes it a *server*.  A loopback listener accepts client
+//! connections (one thread each, same pattern as the shard server), greets
+//! them with the cluster's Hello, and dispatches request frames into the
+//! shared `Arc<Mutex<Router>>`:
+//!
+//! * **Streaming relay.**  Generation requests hold the router lock for
+//!   the whole call and write one [`Frame::Token`] to the client per
+//!   relayed token, as the shard decodes it — the client's
+//!   time-to-first-token is the engine's, not the turn's.  The closing
+//!   [`Frame::Done`] carries the front door's own ttft/total timings.
+//! * **Serialized admin.**  Because every routed call holds the same
+//!   lock, admin operations (drain, rebalance, migrate — driven through
+//!   [`FrontServer::router`]) interleave *between* calls, never inside
+//!   one: a drain issued mid-stream waits for the stream to finish.  This
+//!   is a deliberate throughput-for-correctness trade at the front door;
+//!   the shards themselves stay concurrent.
+//! * **Backpressure.**  At most `max_inflight` generation requests are
+//!   admitted; the rest are refused immediately with a typed
+//!   [`ErrCode::Unavailable`] error frame (retryable) instead of queueing
+//!   unboundedly on the lock.
+//! * **Health probing.**  A background thread calls
+//!   [`Router::probe_all`] every `probe_interval`, which is what lets an
+//!   open circuit half-open and a recovered shard rejoin service without
+//!   waiting for client traffic to find it.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::router::{RouteError, Router};
+use super::wire::{self, ErrCode, Frame, MAX_FRAME_BYTES};
+
+/// How often blocked reads wake to check the stop flag.
+const STOP_POLL: Duration = Duration::from_millis(50);
+
+/// Tuning for the front server.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontConfig {
+    /// Generation requests admitted concurrently; excess requests get a
+    /// typed `Unavailable` refusal instead of queueing without bound.
+    pub max_inflight: usize,
+    /// Health-probe cadence (`None` disables the probe thread — tests
+    /// that drive [`Router::probe_all`] by hand use this).
+    pub probe_interval: Option<Duration>,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig { max_inflight: 32, probe_interval: Some(Duration::from_millis(500)) }
+    }
+}
+
+/// Counting gate for in-flight generation requests.
+struct Gate {
+    cur: AtomicUsize,
+    max: usize,
+}
+
+impl Gate {
+    fn try_enter(&self) -> bool {
+        loop {
+            let c = self.cur.load(Ordering::Acquire);
+            if c >= self.max {
+                return false;
+            }
+            if self
+                .cur
+                .compare_exchange(c, c + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    fn leave(&self) {
+        self.cur.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// The router, served over the wire protocol on a loopback socket.
+pub struct FrontServer {
+    addr: SocketAddr,
+    router: Arc<Mutex<Router>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    gate: Arc<Gate>,
+}
+
+impl FrontServer {
+    /// Bind a loopback listener and serve the router on it.
+    pub fn spawn(router: Router, cfg: FrontConfig) -> io::Result<FrontServer> {
+        let hello = router.front_hello();
+        let router = Arc::new(Mutex::new(router));
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new(Gate { cur: AtomicUsize::new(0), max: cfg.max_inflight.max(1) });
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let router = Arc::clone(&router);
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let stop = Arc::clone(&stop);
+                    let router = Arc::clone(&router);
+                    let gate = Arc::clone(&gate);
+                    let hello = hello.clone();
+                    let join = std::thread::spawn(move || {
+                        let _ = serve_conn(stream, &router, &hello, &gate, &stop);
+                    });
+                    let mut conns = conns.lock().unwrap();
+                    conns.retain(|j| !j.is_finished());
+                    conns.push(join);
+                }
+            })
+        };
+        let prober = cfg.probe_interval.map(|interval| {
+            let stop = Arc::clone(&stop);
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(interval);
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    router.lock().unwrap().probe_all();
+                }
+            })
+        });
+        Ok(FrontServer { addr, router, stop, accept: Some(accept), prober, conns, gate })
+    }
+
+    /// The bound loopback address clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared router, for admin operations (drain, migrate, health).
+    /// Taking this lock serializes with in-flight client calls — an admin
+    /// action never interrupts a stream halfway.
+    pub fn router(&self) -> Arc<Mutex<Router>> {
+        Arc::clone(&self.router)
+    }
+
+    /// Generation requests currently admitted past the gate.
+    pub fn in_flight(&self) -> usize {
+        self.gate.cur.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, join every connection thread (in-flight streams
+    /// finish first), then the probe thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept loop
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        for j in self.conns.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+        if let Some(j) = self.prober.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for FrontServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Map a routing failure onto the wire's typed error codes.
+fn err_frame(e: &RouteError) -> Frame {
+    let code = match e {
+        RouteError::UnknownSession(_) => ErrCode::UnknownSession,
+        RouteError::Mismatch(_) => ErrCode::Mismatch,
+        RouteError::ShardUnavailable { .. }
+        | RouteError::NoShards
+        | RouteError::Draining(_) => ErrCode::Unavailable,
+        RouteError::Shard(code, _) => *code,
+        RouteError::Io(_) | RouteError::Protocol(_) => ErrCode::Internal,
+    };
+    Frame::Error { code, msg: e.to_string() }
+}
+
+/// Run one generation under the router lock, relaying each token to the
+/// client as it arrives.  A relay write failure (client went away) aborts
+/// the connection but never the generation — the router still completes
+/// the turn and keeps its mirror consistent.
+fn relay_generation<F>(
+    stream: &mut TcpStream,
+    router: &Mutex<Router>,
+    run: F,
+) -> io::Result<()>
+where
+    F: FnOnce(&mut Router, &mut dyn FnMut(i32)) -> Result<Vec<i32>, RouteError>,
+{
+    let start = Instant::now();
+    let mut first: Option<Duration> = None;
+    let mut relay_err: Option<io::Error> = None;
+    let result = {
+        let mut r = router.lock().unwrap();
+        run(&mut r, &mut |t| {
+            if first.is_none() {
+                first = Some(start.elapsed());
+            }
+            if relay_err.is_none() {
+                if let Err(e) = wire::write_frame(stream, &Frame::Token { token: t }) {
+                    relay_err = Some(e);
+                }
+            }
+        })
+    };
+    if let Some(e) = relay_err {
+        return Err(e);
+    }
+    match result {
+        Ok(_) => {
+            let total = start.elapsed();
+            let ttft = first.unwrap_or(total);
+            wire::write_frame(
+                stream,
+                &Frame::Done {
+                    ttft_us: ttft.as_micros() as u64,
+                    total_us: total.as_micros() as u64,
+                },
+            )
+        }
+        Err(e) => wire::write_frame(stream, &err_frame(&e)),
+    }
+}
+
+/// Serve one client connection until it disconnects or the front stops.
+fn serve_conn(
+    mut stream: TcpStream,
+    router: &Mutex<Router>,
+    hello: &Frame,
+    gate: &Gate,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(STOP_POLL))?;
+    wire::write_frame(&mut stream, hello)?;
+    loop {
+        let frame = match read_frame_stoppable(&mut stream, stop)? {
+            Some(f) => f,
+            None => return Ok(()),
+        };
+        match frame {
+            Frame::Submit { max_new, prompt } => {
+                if !gate.try_enter() {
+                    write_over_capacity(&mut stream, gate.max)?;
+                    continue;
+                }
+                let res = relay_generation(&mut stream, router, |r, on_tok| {
+                    r.submit_streaming(prompt, max_new as usize, |t| on_tok(t))
+                });
+                gate.leave();
+                res?;
+            }
+            Frame::SubmitInSession { session, strict: _, max_new, delta } => {
+                // the front door decides strictness itself: residency in
+                // the router is what distinguishes turn 1 from a resume
+                if !gate.try_enter() {
+                    write_over_capacity(&mut stream, gate.max)?;
+                    continue;
+                }
+                let res = relay_generation(&mut stream, router, |r, on_tok| {
+                    r.submit_in_session_streaming(session, delta, max_new as usize, |t| {
+                        on_tok(t)
+                    })
+                });
+                gate.leave();
+                res?;
+            }
+            Frame::EndSession { session } => {
+                let reply = match router.lock().unwrap().end_session(session) {
+                    Ok(()) => Frame::Ok,
+                    Err(e) => err_frame(&e),
+                };
+                wire::write_frame(&mut stream, &reply)?;
+            }
+            Frame::Health => {
+                // cluster totals: the per-shard reports summed
+                let reply = match router.lock().unwrap().health() {
+                    Ok(reports) => {
+                        let mut total = wire::HealthReport::default();
+                        for h in &reports {
+                            total.sessions_resident += h.sessions_resident;
+                            total.session_bytes += h.session_bytes;
+                            total.session_hits += h.session_hits;
+                            total.session_misses += h.session_misses;
+                            total.in_flight += h.in_flight;
+                            total.requests_done += h.requests_done;
+                            total.tokens_generated += h.tokens_generated;
+                            total.prefill_tokens_saved += h.prefill_tokens_saved;
+                        }
+                        Frame::HealthReport(total)
+                    }
+                    Err(e) => err_frame(&e),
+                };
+                wire::write_frame(&mut stream, &reply)?;
+            }
+            other => {
+                wire::write_frame(
+                    &mut stream,
+                    &Frame::Error {
+                        code: ErrCode::Protocol,
+                        msg: format!("front door does not serve {other:?}"),
+                    },
+                )?;
+            }
+        }
+    }
+}
+
+fn write_over_capacity(stream: &mut TcpStream, max: usize) -> io::Result<()> {
+    wire::write_frame(
+        stream,
+        &Frame::Error {
+            code: ErrCode::Unavailable,
+            msg: format!("front door at capacity ({max} in flight) — retry"),
+        },
+    )
+}
+
+/// Fill `buf` completely, waking every [`STOP_POLL`] to honor `stop`.
+/// `Ok(false)` = clean EOF before the first byte (only when `idle_ok`).
+fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    idle_ok: bool,
+) -> io::Result<bool> {
+    use std::io::Read;
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Err(io::ErrorKind::ConnectionAborted.into());
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && idle_ok {
+                    return Ok(false);
+                }
+                return Err(io::ErrorKind::UnexpectedEof.into());
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Stop-aware frame read; `Ok(None)` on clean disconnect or shutdown
+/// between frames.
+fn read_frame_stoppable(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> io::Result<Option<Frame>> {
+    let mut len = [0u8; 4];
+    if !read_full(stream, &mut len, stop, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    let mut body = vec![0u8; len as usize];
+    read_full(stream, &mut body, stop, false)?;
+    wire::decode(&body).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::engine::LmShape;
+    use crate::serve::shard::ShardServer;
+    use crate::serve::wire::PROTO_VERSION;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+    }
+
+    fn front_over(n: usize, fc: FrontConfig) -> (Vec<ShardServer>, FrontServer) {
+        let shape = LmShape::bench("nano").unwrap();
+        let shards: Vec<ShardServer> = (0..n)
+            .map(|_| ShardServer::spawn_native(&shape, 2, 11, cfg()).unwrap())
+            .collect();
+        let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+        let router = Router::new(&addrs).unwrap();
+        let front = FrontServer::spawn(router, fc).unwrap();
+        (shards, front)
+    }
+
+    struct Client {
+        stream: TcpStream,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(120)))
+                .unwrap();
+            match wire::read_frame(&mut stream).unwrap() {
+                Frame::Hello { proto, .. } => assert_eq!(proto, PROTO_VERSION),
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            Client { stream }
+        }
+
+        fn send(&mut self, f: &Frame) {
+            wire::write_frame(&mut self.stream, f).unwrap();
+        }
+
+        fn recv(&mut self) -> Frame {
+            wire::read_frame(&mut self.stream).unwrap()
+        }
+
+        /// Collect one generation: (tokens, saw_done).
+        fn collect(&mut self) -> (Vec<i32>, bool) {
+            let mut toks = Vec::new();
+            loop {
+                match self.recv() {
+                    Frame::Token { token } => toks.push(token),
+                    Frame::Done { .. } => return (toks, true),
+                    Frame::Error { code, msg } => panic!("shard error {code:?}: {msg}"),
+                    other => panic!("expected Token/Done, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn front_serves_streamed_sessions_end_to_end() {
+        let (shards, front) = front_over(2, FrontConfig::default());
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::SubmitInSession { session: 5, strict: false, max_new: 4, delta: vec![1, 2, 3] });
+        let (t1, done) = c.collect();
+        assert_eq!(t1.len(), 4);
+        assert!(done);
+        // second turn on the same connection resumes the same session
+        c.send(&Frame::SubmitInSession { session: 5, strict: true, max_new: 3, delta: vec![7] });
+        let (t2, _) = c.collect();
+        assert_eq!(t2.len(), 3);
+        // health aggregates across both shards
+        c.send(&Frame::Health);
+        match c.recv() {
+            Frame::HealthReport(h) => {
+                assert_eq!(h.requests_done, 2);
+                assert_eq!(h.sessions_resident, 1);
+            }
+            other => panic!("expected HealthReport, got {other:?}"),
+        }
+        // end the session through the front
+        c.send(&Frame::EndSession { session: 5 });
+        assert!(matches!(c.recv(), Frame::Ok));
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn over_capacity_requests_get_a_typed_unavailable() {
+        // a zero-size gate (clamped to 1) refuses the second concurrent
+        // request; with one slot and a held lock the refusal path is
+        // easiest to pin by just filling the gate ourselves
+        let (shards, front) = front_over(1, FrontConfig { max_inflight: 1, probe_interval: None });
+        assert!(front.gate.try_enter(), "gate must admit the first request");
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::Submit { max_new: 2, prompt: vec![1, 2] });
+        match c.recv() {
+            Frame::Error { code, msg } => {
+                assert_eq!(code, ErrCode::Unavailable, "{msg}");
+                assert!(msg.contains("capacity"), "{msg}");
+            }
+            other => panic!("expected Unavailable, got {other:?}"),
+        }
+        front.gate.leave();
+        // with the gate free the same request is served
+        c.send(&Frame::Submit { max_new: 2, prompt: vec![1, 2] });
+        let (toks, _) = c.collect();
+        assert_eq!(toks.len(), 2);
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn unserved_frames_are_refused_in_protocol() {
+        let (shards, front) = front_over(1, FrontConfig { probe_interval: None, ..FrontConfig::default() });
+        let mut c = Client::connect(front.addr());
+        // Export is a shard-internal frame; the front must refuse it with
+        // a typed error, not hang or die
+        c.send(&Frame::Export { session: 1 });
+        match c.recv() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::Protocol),
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // the connection survives the refusal
+        c.send(&Frame::Submit { max_new: 1, prompt: vec![3] });
+        let (toks, _) = c.collect();
+        assert_eq!(toks.len(), 1);
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+}

@@ -16,20 +16,34 @@
 //!   [`crate::coordinator::CoordinatorHandle`] + session store, serving
 //!   the protocol on a loopback socket and streaming generated tokens
 //!   back frame-by-frame.
-//! * [`router`] — the client-facing front door: consistent-hash session
-//!   affinity across N shards, plus **live session migration** (quiesce +
-//!   export on the source, wire transfer, import on the target,
-//!   bit-identical continuation).
+//! * [`router`] — the routing core: consistent-hash session affinity
+//!   across N shards, token-stream relay, **two-phase live session
+//!   migration** (export stash + commit/abort settlement), per-shard
+//!   circuit breaking, and transcript-mirror **resurrection** of sessions
+//!   whose shard died.
+//! * [`front`] — the router as a concurrent wire server: per-connection
+//!   threads, streamed `Token` relay, bounded in-flight backpressure, and
+//!   a background health-probe thread.
+//! * [`circuit`] — the three-state (closed/open/half-open) breaker the
+//!   router keeps per shard.
+//! * [`faults`] — deterministic fault injection at named protocol points
+//!   (drop/sever/delay/corrupt), the machinery behind the chaos tests.
 //! * [`admin`] — drain / add-shard / rebalance, per-shard health and
 //!   aggregated metrics, and the in-process cluster launcher behind
 //!   `repro serve --shards N`.
 
 pub mod admin;
+pub mod circuit;
+pub mod faults;
+pub mod front;
 pub mod router;
 pub mod shard;
 pub mod wire;
 
 pub use admin::{AdminReport, Cluster};
+pub use circuit::{Breaker, BreakerConfig, BreakerState};
+pub use faults::{FaultAction, FaultPlan, FrameKind, Point, Rule};
+pub use front::{FrontConfig, FrontServer};
 pub use router::{RouteError, Router};
 pub use shard::{ShardServer, ShardSpec};
 pub use wire::{ErrCode, Frame, HealthReport, PROTO_VERSION};

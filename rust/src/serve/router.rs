@@ -1,6 +1,7 @@
 //! The client-facing front door: consistent-hashes session ids across N
-//! shard servers for affinity, forwards turns over the wire protocol, and
-//! performs **live session migration** between shards.
+//! shard servers for affinity, relays token streams as they are decoded,
+//! performs **two-phase live session migration**, and survives shard
+//! failure by resurrecting sessions from its transcript mirror.
 //!
 //! * **Placement.**  Session ids map onto a hash ring (every shard
 //!   contributes [`VNODES`] virtual points, hashed from its address with
@@ -8,30 +9,52 @@
 //!   round-robin.  A session served once is pinned in the router's
 //!   `resident` map, so affinity holds even after the ring changes — the
 //!   ring decides *initial* placement, residency decides routing.
+//! * **Streaming.**  Generation requests are relayed token-by-token: the
+//!   shard writes a `Token` frame per decode step and the router invokes
+//!   the caller's `on_token` as each arrives, so wire time-to-first-token
+//!   equals the engine's.  The buffered `submit*` wrappers collect the
+//!   same stream into a `Vec`.
+//! * **Circuit breaking.**  Each shard has a [`Breaker`]; transport
+//!   failures trip it and an open circuit refuses requests *immediately*
+//!   with the typed [`RouteError::ShardUnavailable`] instead of eating a
+//!   connect timeout per call.  [`Router::probe_all`] (driven by the
+//!   front server's probe thread) doubles as the half-open prober.
 //! * **Migration.**  `migrate` quiesces the session on its source shard
-//!   (the coordinator's deferred-until-quiescent export), ships the state
-//!   blob + transcript over the wire, and installs it on the target.  The
-//!   handshake identities (engine tag + shape fingerprint from each
-//!   shard's Hello) are compared *before* the blob leaves the source —
-//!   a mismatched pair is refused without shipping anything, and if the
-//!   target still refuses the import, the session is re-imported into the
-//!   source so it is never lost.
-//! * **Admin.**  `drain` migrates every resident session off a shard and
-//!   stops placing new work there; `add_shard` extends the ring;
-//!   `rebalance` moves sessions whose ring target changed.
+//!   (the coordinator's deferred-until-quiescent export), which *stashes*
+//!   it source-side, ships the blob + transcript, and imports it on the
+//!   target.  The router then settles the stash with an explicit
+//!   `ExportCommit` (landed) or `ExportAbort` (did not land); when the
+//!   import's Ok is lost in transit the router probes the target's
+//!   transcript and the answer decides commit vs abort — closing the
+//!   lost-Ok duplicate window the old one-shot handshake documented.
+//!   Settlement is idempotent, so every retry is safe.
+//! * **Resurrection.**  The router mirrors every session's transcript
+//!   (it sees every turn).  When a shard dies mid-conversation the next
+//!   turn re-imports the mirror onto a healthy shard (transcript-only:
+//!   re-prefill rebuilds the O(1) recurrence state) and strictly replays
+//!   the turn — greedy decode is deterministic, so the regenerated tokens
+//!   are identical and only the suffix the client has not seen is
+//!   emitted.  Lossy in latency, lossless in tokens.
+//! * **Fault injection.**  All shard i/o funnels through [`Conn`], whose
+//!   send/recv/stream hooks consult an optional [`FaultPlan`] — the chaos
+//!   tests sever, drop, delay, or corrupt frames at named protocol points
+//!   deterministically.
 //!
 //! The router is a plain struct driven by one thread (tests, the CLI
-//! demo); a concurrent front door wraps it in a `Mutex` — every wire
-//! conversation is a single connect/request/reply exchange, so the lock
-//! scope is one call.
+//! demo); the concurrent front door ([`super::front`]) wraps it in a
+//! `Mutex` held for the whole relayed call — which is also what makes a
+//! mid-stream drain wait for the stream to finish.
 
 use std::collections::HashMap;
-use std::io;
-use std::net::{SocketAddr, TcpStream};
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
+use super::circuit::{Breaker, BreakerConfig, BreakerState};
+use super::faults::{FaultAction, FaultPlan, FrameKind, Point};
 use super::wire::{
-    self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, PROTO_VERSION,
+    self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, MAX_FRAME_BYTES, PROTO_VERSION,
 };
 
 /// Virtual ring points per shard: enough that removing one shard moves
@@ -43,6 +66,10 @@ pub const VNODES: usize = 32;
 /// time.
 const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
 
+/// How long a TCP connect to a shard may take before it counts as a
+/// breaker failure.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// Why a routed operation failed.
 #[derive(Debug)]
 pub enum RouteError {
@@ -52,12 +79,16 @@ pub enum RouteError {
     /// The explicit migration target is draining and takes no sessions.
     Draining(usize),
     /// The session is unknown — to the router, or to the shard a strict
-    /// resume was sent to.
+    /// resume was sent to (and no transcript mirror exists to resurrect
+    /// it from).
     UnknownSession(u64),
     /// Migration refused: source and target shards disagree on engine tag
     /// or shape fingerprint (or the target rejected the blob).  The
     /// session still lives on its source shard.
     Mismatch(String),
+    /// The shard's circuit breaker is open: the request was refused
+    /// immediately, without a connect attempt.
+    ShardUnavailable { shard: usize },
     /// A shard replied with an error frame.
     Shard(ErrCode, String),
     /// A shard replied out of protocol.
@@ -74,6 +105,9 @@ impl std::fmt::Display for RouteError {
             }
             RouteError::UnknownSession(id) => write!(f, "session {id:#x} unknown"),
             RouteError::Mismatch(msg) => write!(f, "migration mismatch: {msg}"),
+            RouteError::ShardUnavailable { shard } => {
+                write!(f, "shard {shard} unavailable: circuit open, refused without a connect")
+            }
             RouteError::Shard(code, msg) => write!(f, "shard error {code:?}: {msg}"),
             RouteError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
         }
@@ -108,16 +142,41 @@ struct ShardInfo {
     draining: bool,
 }
 
-/// One wire conversation with a shard (connect, Hello, then
+/// One wire conversation with a shard (connect, Hello, then pipelined
 /// request/reply).  Connections are per-call: loopback connects are
 /// cheap, and every connection re-validates the handshake.
+///
+/// Every read and write passes through a fault hook: with a [`FaultPlan`]
+/// attached, the plan may drop, sever, delay, or corrupt at that point;
+/// without one each hook is a single `Option` check.
 struct Conn {
     stream: TcpStream,
+    addr: SocketAddr,
+    faults: Option<Arc<FaultPlan>>,
+    /// Kind of the last request written (keys the `RecvReplyTo` hook).
+    last_req: Option<FrameKind>,
 }
 
 impl Conn {
-    fn open(addr: SocketAddr) -> Result<(Conn, Identity), RouteError> {
-        let mut stream = TcpStream::connect(addr)?;
+    fn open(
+        addr: SocketAddr,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<(Conn, Identity), RouteError> {
+        if let Some(plan) = &faults {
+            if plan.is_killed(addr) {
+                return Err(RouteError::Io(io::Error::new(
+                    io::ErrorKind::ConnectionRefused,
+                    format!("shard {addr} is down (injected kill)"),
+                )));
+            }
+            if plan.fire(addr, Point::Connect).is_some() {
+                return Err(RouteError::Io(io::Error::new(
+                    io::ErrorKind::ConnectionRefused,
+                    format!("connect to {addr} refused (injected fault)"),
+                )));
+            }
+        }
+        let mut stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(REPLY_TIMEOUT))?;
         match wire::read_frame(&mut stream)? {
@@ -127,29 +186,144 @@ impl Conn {
                         "shard {addr} speaks protocol {proto}, router speaks {PROTO_VERSION}"
                     )));
                 }
-                Ok((Conn { stream }, Identity { engine, shape_fp, weights_fp }))
+                let conn = Conn { stream, addr, faults, last_req: None };
+                Ok((conn, Identity { engine, shape_fp, weights_fp }))
             }
             other => Err(RouteError::Protocol(format!("expected Hello, got {other:?}"))),
+        }
+    }
+
+    fn sever(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    /// Write one request frame through the `Send` fault hook.
+    fn send(&mut self, f: &Frame) -> io::Result<()> {
+        let kind = FrameKind::of(f);
+        self.last_req = Some(kind);
+        let action =
+            self.faults.as_ref().and_then(|p| p.fire(self.addr, Point::Send(kind)));
+        match action {
+            None => wire::write_frame(&mut self.stream, f),
+            Some(FaultAction::DropFrame) => {
+                // the shard never sees the request
+                self.sever();
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "connection reset (injected: request dropped)",
+                ))
+            }
+            Some(FaultAction::SeverAfter) => {
+                // the shard sees (and acts on) the request; the reply
+                // will never be read
+                wire::write_frame(&mut self.stream, f)?;
+                self.sever();
+                Ok(())
+            }
+            Some(FaultAction::Delay(d)) => {
+                std::thread::sleep(d);
+                wire::write_frame(&mut self.stream, f)
+            }
+            Some(FaultAction::Corrupt) => {
+                let mut framed = Vec::new();
+                wire::write_frame(&mut framed, f)?;
+                if let Some(b) = framed.last_mut() {
+                    *b ^= 0x01;
+                }
+                self.stream.write_all(&framed)
+            }
+        }
+    }
+
+    /// Read one reply frame through the `RecvReplyTo` fault hook.
+    fn recv_reply(&mut self) -> io::Result<Frame> {
+        let action = match (&self.faults, self.last_req) {
+            (Some(p), Some(kind)) => p.fire(self.addr, Point::RecvReplyTo(kind)),
+            _ => None,
+        };
+        match action {
+            None => wire::read_frame(&mut self.stream),
+            Some(FaultAction::DropFrame) => {
+                // the canonical "applied but unacknowledged" window: the
+                // shard processed the request and answered; the reply is
+                // consumed and discarded so the router never hears
+                let _ = wire::read_frame(&mut self.stream);
+                self.sever();
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "connection reset (injected: reply dropped)",
+                ))
+            }
+            Some(FaultAction::SeverAfter) => {
+                let reply = wire::read_frame(&mut self.stream)?;
+                self.sever();
+                Ok(reply)
+            }
+            Some(FaultAction::Delay(d)) => {
+                std::thread::sleep(d);
+                wire::read_frame(&mut self.stream)
+            }
+            Some(FaultAction::Corrupt) => {
+                let mut len = [0u8; 4];
+                self.stream.read_exact(&mut len)?;
+                let len = u32::from_le_bytes(len);
+                if len as u64 > MAX_FRAME_BYTES as u64 {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "reply frame exceeds MAX_FRAME_BYTES",
+                    ));
+                }
+                let mut body = vec![0u8; len as usize];
+                self.stream.read_exact(&mut body)?;
+                if let Some(b) = body.last_mut() {
+                    *b ^= 0x01;
+                }
+                wire::decode(&body)
+            }
         }
     }
 
     /// Send one request and read one reply frame (error frames become
     /// [`RouteError::Shard`]).
     fn request(&mut self, f: &Frame) -> Result<Frame, RouteError> {
-        wire::write_frame(&mut self.stream, f)?;
-        match wire::read_frame(&mut self.stream)? {
+        self.send(f)?;
+        match self.recv_reply()? {
             Frame::Error { code, msg } => Err(RouteError::Shard(code, msg)),
             reply => Ok(reply),
         }
     }
 
-    /// Send one generation request and collect the streamed tokens.
-    fn generate(&mut self, f: &Frame) -> Result<Vec<i32>, RouteError> {
-        wire::write_frame(&mut self.stream, f)?;
-        let mut toks = Vec::new();
+    /// Send one generation request and relay the streamed tokens:
+    /// `on_token` runs per `Token` frame, as it arrives.  The collected
+    /// tokens are returned when the shard's `Done` frame lands.
+    fn generate_streaming(
+        &mut self,
+        f: &Frame,
+        mut on_token: impl FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
+        self.send(f)?;
+        let mut toks: Vec<i32> = Vec::new();
         loop {
+            let action = self.faults.as_ref().and_then(|p| {
+                p.fire(self.addr, Point::TokenStream { after: toks.len() as u32 })
+            });
+            if let Some(action) = action {
+                match action {
+                    FaultAction::Delay(d) => std::thread::sleep(d),
+                    _ => {
+                        self.sever();
+                        return Err(RouteError::Io(io::Error::new(
+                            io::ErrorKind::ConnectionReset,
+                            "token stream severed (injected fault)",
+                        )));
+                    }
+                }
+            }
             match wire::read_frame(&mut self.stream)? {
-                Frame::Token { token } => toks.push(token),
+                Frame::Token { token } => {
+                    toks.push(token);
+                    on_token(token);
+                }
                 Frame::Done { .. } => return Ok(toks),
                 Frame::Error { code, msg } => return Err(RouteError::Shard(code, msg)),
                 other => {
@@ -170,6 +344,16 @@ pub struct Router {
     /// Which shard currently owns each session (authoritative: the router
     /// is the only front door, and migration updates it).
     resident: HashMap<u64, usize>,
+    /// Full transcript per session, as relayed through this router: the
+    /// raw material for resurrection when a shard dies.  Cheap — tokens,
+    /// not state blobs.
+    mirror: HashMap<u64, Vec<i32>>,
+    /// One circuit breaker per shard, indexed like `shards`.
+    breakers: Vec<Breaker>,
+    /// Breaker tuning, kept so `add_shard` can mint matching breakers.
+    breaker_cfg: BreakerConfig,
+    /// Optional fault-injection plan threaded into every [`Conn`].
+    faults: Option<Arc<FaultPlan>>,
     /// Round-robin cursor for one-shot requests.
     rr: usize,
 }
@@ -179,15 +363,35 @@ impl Router {
     /// the ring.  Shards may be heterogeneous (different engines); the
     /// migration path is what insists on matching identities.
     pub fn new(addrs: &[SocketAddr]) -> Result<Router, RouteError> {
+        Router::new_with(addrs, BreakerConfig::default(), None)
+    }
+
+    /// [`Router::new`] with explicit breaker tuning and an optional fault
+    /// plan (chaos tests pin cooldowns and stage faults through these).
+    pub fn new_with(
+        addrs: &[SocketAddr],
+        breaker_cfg: BreakerConfig,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> Result<Router, RouteError> {
         if addrs.is_empty() {
             return Err(RouteError::NoShards);
         }
         let mut shards = Vec::with_capacity(addrs.len());
         for &addr in addrs {
-            let (_conn, id) = Conn::open(addr)?;
+            let (_conn, id) = Conn::open(addr, faults.clone())?;
             shards.push(ShardInfo { addr, id, draining: false });
         }
-        let mut r = Router { shards, ring: Vec::new(), resident: HashMap::new(), rr: 0 };
+        let breakers = addrs.iter().map(|_| Breaker::new(breaker_cfg)).collect();
+        let mut r = Router {
+            shards,
+            ring: Vec::new(),
+            resident: HashMap::new(),
+            mirror: HashMap::new(),
+            breakers,
+            breaker_cfg,
+            faults,
+            rr: 0,
+        };
         r.rebuild_ring();
         Ok(r)
     }
@@ -212,6 +416,30 @@ impl Router {
             .collect();
         ids.sort_unstable();
         ids
+    }
+
+    /// Observable circuit state of one shard's breaker.
+    pub fn breaker_state(&self, shard: usize) -> Option<BreakerState> {
+        self.breakers.get(shard).map(|b| b.state())
+    }
+
+    /// The Hello the front door greets clients with: the cluster launcher
+    /// seeds every shard identically, so shard 0's identity speaks for
+    /// the cluster (heterogeneous clusters advertise their first shard).
+    pub(crate) fn front_hello(&self) -> Frame {
+        let id = &self.shards[0].id;
+        Frame::Hello {
+            proto: PROTO_VERSION,
+            engine: id.engine.clone(),
+            shape_fp: id.shape_fp,
+            weights_fp: id.weights_fp,
+        }
+    }
+
+    /// The router's transcript mirror for a session (what resurrection
+    /// would rebuild from).
+    pub fn mirror_of(&self, session: u64) -> Option<&[i32]> {
+        self.mirror.get(&session).map(|v| v.as_slice())
     }
 
     fn rebuild_ring(&mut self) {
@@ -248,76 +476,460 @@ impl Router {
         self.ring_target(session).ok_or(RouteError::NoShards)
     }
 
-    /// One-shot generation, round-robined over the live shards.
+    /// Open a breaker-guarded connection to a shard.  An open circuit
+    /// refuses immediately with the typed error; connect failures are the
+    /// caller's to record (exactly once per logical attempt).
+    fn open_shard(&mut self, shard: usize) -> Result<Conn, RouteError> {
+        if !self.breakers[shard].allow() {
+            return Err(RouteError::ShardUnavailable { shard });
+        }
+        let (conn, _id) = Conn::open(self.shards[shard].addr, self.faults.clone())?;
+        Ok(conn)
+    }
+
+    /// Record the outcome of one attempt against a shard on its breaker.
+    /// Only transport-level failures count — a typed shard error (e.g.
+    /// `UnknownSession`) means the shard is alive and answering.
+    fn note_outcome(&mut self, shard: usize, err: Option<&RouteError>) {
+        match err {
+            None => self.breakers[shard].record_success(),
+            Some(RouteError::Io(_)) => self.breakers[shard].record_failure(),
+            Some(_) => {}
+        }
+    }
+
+    /// Record a completed turn: extend the transcript mirror and pin
+    /// residency.  The mirror tracks exactly what the shard's store holds:
+    /// prompt ++ generated, per turn.
+    fn note_turn(&mut self, session: u64, shard: usize, delta: &[i32], toks: &[i32]) {
+        let m = self.mirror.entry(session).or_default();
+        m.extend_from_slice(delta);
+        m.extend_from_slice(toks);
+        self.resident.insert(session, shard);
+    }
+
+    /// One-shot generation, round-robined over the live shards.  Fails
+    /// over to the next live shard only while zero tokens have been
+    /// emitted (a half-streamed one-shot cannot be transparently retried).
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<Vec<i32>, RouteError> {
+        self.submit_streaming(prompt, max_new, |_| {})
+    }
+
+    /// Streaming one-shot: `on_token` runs per relayed token.
+    pub fn submit_streaming(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        mut on_token: impl FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
         let live: Vec<usize> = (0..self.shards.len())
             .filter(|&i| !self.shards[i].draining)
             .collect();
         if live.is_empty() {
             return Err(RouteError::NoShards);
         }
-        let shard = live[self.rr % live.len()];
+        let base = self.rr;
         self.rr = self.rr.wrapping_add(1);
-        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
-        conn.generate(&Frame::Submit { max_new: max_new as u32, prompt })
+        let mut last = RouteError::NoShards;
+        for k in 0..live.len() {
+            let shard = live[(base + k) % live.len()];
+            let mut conn = match self.open_shard(shard) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.note_outcome(shard, Some(&e));
+                    last = e;
+                    continue;
+                }
+            };
+            let mut emitted = 0usize;
+            let req = Frame::Submit { max_new: max_new as u32, prompt: prompt.clone() };
+            match conn.generate_streaming(&req, |t| {
+                emitted += 1;
+                on_token(t);
+            }) {
+                Ok(toks) => {
+                    self.note_outcome(shard, None);
+                    return Ok(toks);
+                }
+                Err(e @ RouteError::Io(_)) if emitted == 0 => {
+                    self.note_outcome(shard, Some(&e));
+                    last = e;
+                }
+                Err(e) => {
+                    self.note_outcome(shard, Some(&e));
+                    return Err(e);
+                }
+            }
+        }
+        Err(last)
     }
 
     /// One turn of a session, routed with affinity.  Turns after the first
     /// are sent strict, so a shard that somehow lost the session surfaces
     /// the typed [`RouteError::UnknownSession`] instead of silently
-    /// forking a fresh conversation.
+    /// forking a fresh conversation — unless the router holds a transcript
+    /// mirror, in which case the session is resurrected and the turn
+    /// replayed (token-identical: greedy decode is deterministic).
     pub fn submit_in_session(
         &mut self,
         session: u64,
         delta: Vec<i32>,
         max_new: usize,
     ) -> Result<Vec<i32>, RouteError> {
+        self.submit_in_session_streaming(session, delta, max_new, |_| {})
+    }
+
+    /// Streaming session turn: `on_token` runs per relayed token.  Across
+    /// a mid-stream failure + recovery, each token is emitted exactly
+    /// once (replays skip the prefix the caller already saw).
+    pub fn submit_in_session_streaming(
+        &mut self,
+        session: u64,
+        delta: Vec<i32>,
+        max_new: usize,
+        mut on_token: impl FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
         let shard = self.route_session(session)?;
         let strict = self.resident.contains_key(&session);
-        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
-        let toks = conn
-            .generate(&Frame::SubmitInSession {
-                session,
-                strict,
-                max_new: max_new as u32,
-                delta,
-            })
-            .map_err(|e| match e {
-                RouteError::Shard(ErrCode::UnknownSession, _) => {
-                    RouteError::UnknownSession(session)
+        let mut emitted = 0usize;
+        let req = Frame::SubmitInSession {
+            session,
+            strict,
+            max_new: max_new as u32,
+            delta: delta.clone(),
+        };
+        let attempt = match self.open_shard(shard) {
+            Ok(mut conn) => conn.generate_streaming(&req, |t| {
+                emitted += 1;
+                on_token(t);
+            }),
+            Err(e) => Err(e),
+        };
+        match attempt {
+            Ok(toks) => {
+                self.note_outcome(shard, None);
+                self.note_turn(session, shard, &delta, &toks);
+                Ok(toks)
+            }
+            Err(RouteError::Shard(ErrCode::UnknownSession, _)) => {
+                // a strict resume the shard refused: resurrect from the
+                // mirror if we hold one, else surface the typed error
+                if strict && self.mirror.contains_key(&session) {
+                    self.resurrect_turn(session, &delta, max_new, emitted, &mut on_token)
+                } else {
+                    Err(RouteError::UnknownSession(session))
                 }
-                other => other,
-            })?;
-        self.resident.insert(session, shard);
+            }
+            Err(e)
+                if strict
+                    && matches!(
+                        e,
+                        RouteError::Io(_) | RouteError::ShardUnavailable { .. }
+                    ) =>
+            {
+                self.note_outcome(shard, Some(&e));
+                self.recover_turn(session, shard, &delta, max_new, emitted, &mut on_token, e)
+            }
+            Err(e) => {
+                self.note_outcome(shard, Some(&e));
+                Err(e)
+            }
+        }
+    }
+
+    /// A strict turn died at the transport level.  Three escalating
+    /// recoveries:
+    ///
+    /// 1. **Reconcile** — the shard may have finished the turn even though
+    ///    our stream died (the coordinator keeps decoding when the relay
+    ///    drops).  The transcript probe defers until the session is
+    ///    quiescent, so it reflects the finished turn; if it lines up,
+    ///    emit the unseen suffix and accept without replaying.
+    /// 2. **Retry in place** — the transcript is exactly the pre-turn
+    ///    mirror, so the request never reached the coordinator and the
+    ///    session is intact: send the turn again.
+    /// 3. **Resurrect** — the shard is gone (or inconsistent): rebuild
+    ///    the session elsewhere from the mirror and replay.
+    #[allow(clippy::too_many_arguments)]
+    fn recover_turn(
+        &mut self,
+        session: u64,
+        shard: usize,
+        delta: &[i32],
+        max_new: usize,
+        emitted: usize,
+        on_token: &mut dyn FnMut(i32),
+        cause: RouteError,
+    ) -> Result<Vec<i32>, RouteError> {
+        let pre_len = self.mirror.get(&session).map(|m| m.len()).unwrap_or(0);
+        let mut want = self.mirror.get(&session).cloned().unwrap_or_default();
+        want.extend_from_slice(delta);
+        if let Ok(Some(tokens)) = self.fetch_transcript(shard, session) {
+            if tokens.len() == want.len() + max_new && tokens.starts_with(&want) {
+                // the turn completed server-side; deliver what the client
+                // has not yet seen
+                let generated = tokens[want.len()..].to_vec();
+                for &t in &generated[emitted..] {
+                    on_token(t);
+                }
+                self.note_outcome(shard, None);
+                self.mirror.insert(session, tokens);
+                self.resident.insert(session, shard);
+                return Ok(generated);
+            }
+            if emitted == 0 && tokens.len() == pre_len && tokens[..] == want[..pre_len] {
+                // the turn never reached the coordinator: retry in place
+                if let Ok(mut conn) = self.open_shard(shard) {
+                    let req = Frame::SubmitInSession {
+                        session,
+                        strict: true,
+                        max_new: max_new as u32,
+                        delta: delta.to_vec(),
+                    };
+                    if let Ok(toks) = conn.generate_streaming(&req, &mut *on_token) {
+                        self.note_outcome(shard, None);
+                        self.note_turn(session, shard, delta, &toks);
+                        return Ok(toks);
+                    }
+                }
+            }
+        }
+        let toks = match self.resurrect_turn(session, delta, max_new, emitted, on_token) {
+            Ok(t) => t,
+            Err(RouteError::NoShards) => return Err(cause),
+            Err(e) => return Err(e),
+        };
+        // the old shard may still hold a now-superseded copy (e.g. the
+        // request never arrived but its transcript probe also failed);
+        // best-effort end it so the session lives in exactly one place
+        if self.resident.get(&session) != Some(&shard) {
+            if let Ok(mut conn) = self.open_shard(shard) {
+                let _ = conn.request(&Frame::EndSession { session });
+            }
+        }
         Ok(toks)
+    }
+
+    /// Rebuild a lost session from the transcript mirror on a healthy
+    /// shard and strictly replay the interrupted turn, emitting only the
+    /// tokens the client has not already seen.  Candidates: the ring
+    /// target first (where the session would naturally land), then every
+    /// other live shard.
+    fn resurrect_turn(
+        &mut self,
+        session: u64,
+        delta: &[i32],
+        max_new: usize,
+        emitted: usize,
+        on_token: &mut dyn FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
+        let pre = self.mirror.get(&session).cloned().unwrap_or_default();
+        let mut candidates: Vec<usize> = Vec::new();
+        if let Some(t) = self.ring_target(session) {
+            candidates.push(t);
+        }
+        for i in 0..self.shards.len() {
+            if !self.shards[i].draining && !candidates.contains(&i) {
+                candidates.push(i);
+            }
+        }
+        let mut last = RouteError::NoShards;
+        for target in candidates {
+            let mut conn = match self.open_shard(target) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.note_outcome(target, Some(&e));
+                    last = e;
+                    continue;
+                }
+            };
+            // transcript-only import: replay re-prefills on the target's
+            // own weights, so the target's advertised fingerprints are the
+            // right ones to claim (no state blob carries provenance here)
+            let id = self.shards[target].id.clone();
+            let import = Frame::Import {
+                session,
+                shape_fp: id.shape_fp,
+                weights_fp: id.weights_fp,
+                transcript: pre.clone(),
+                state: None,
+            };
+            match conn.request(&import) {
+                Ok(Frame::Ok) => {}
+                Ok(other) => {
+                    last = RouteError::Protocol(format!("expected Ok from import, got {other:?}"));
+                    continue;
+                }
+                Err(e) => {
+                    self.note_outcome(target, Some(&e));
+                    last = e;
+                    continue;
+                }
+            }
+            // strict replay: deterministic greedy decode regenerates the
+            // identical tokens; emit only the unseen suffix
+            let req = Frame::SubmitInSession {
+                session,
+                strict: true,
+                max_new: max_new as u32,
+                delta: delta.to_vec(),
+            };
+            let mut replayed = 0usize;
+            match conn.generate_streaming(&req, |t| {
+                replayed += 1;
+                if replayed > emitted {
+                    on_token(t);
+                }
+            }) {
+                Ok(toks) => {
+                    self.note_outcome(target, None);
+                    self.note_turn(session, target, delta, &toks);
+                    return Ok(toks);
+                }
+                Err(e) => {
+                    self.note_outcome(target, Some(&e));
+                    last = e;
+                    continue;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Ask a shard for a session's transcript (`Ok(None)` = shard answers
+    /// but does not know the session).  The shard defers the read until
+    /// the session is quiescent, so an in-flight turn is reflected fully
+    /// or not at all — never half.
+    fn fetch_transcript(
+        &mut self,
+        shard: usize,
+        session: u64,
+    ) -> Result<Option<Vec<i32>>, RouteError> {
+        let mut conn = self.open_shard(shard)?;
+        match conn.request(&Frame::Transcript { session }) {
+            Ok(Frame::TranscriptIs { tokens }) => Ok(Some(tokens)),
+            Ok(other) => Err(RouteError::Protocol(format!(
+                "expected TranscriptIs, got {other:?}"
+            ))),
+            Err(RouteError::Shard(ErrCode::UnknownSession, _)) => Ok(None),
+            Err(e) => {
+                self.note_outcome(shard, Some(&e));
+                Err(e)
+            }
+        }
+    }
+
+    /// Does a shard hold this session?  (Transcript probe, presence only.)
+    fn probe_session(&mut self, shard: usize, session: u64) -> Result<bool, RouteError> {
+        self.fetch_transcript(shard, session).map(|t| t.is_some())
+    }
+
+    /// Settle a source shard's export stash: `ExportCommit` (discard) or
+    /// `ExportAbort` (re-import).  Settlement is idempotent server-side —
+    /// an absent stash answers Ok — so the blind retry is safe.
+    fn settle_export(
+        &mut self,
+        shard: usize,
+        session: u64,
+        commit: bool,
+    ) -> Result<(), RouteError> {
+        let frame = if commit {
+            Frame::ExportCommit { session }
+        } else {
+            Frame::ExportAbort { session }
+        };
+        let mut last: Option<RouteError> = None;
+        for _attempt in 0..2 {
+            match self.open_shard(shard) {
+                Ok(mut conn) => match conn.request(&frame) {
+                    Ok(Frame::Ok) => {
+                        self.note_outcome(shard, None);
+                        return Ok(());
+                    }
+                    Ok(other) => {
+                        last = Some(RouteError::Protocol(format!(
+                            "expected Ok from settlement, got {other:?}"
+                        )));
+                    }
+                    Err(e) => {
+                        self.note_outcome(shard, Some(&e));
+                        last = Some(e);
+                    }
+                },
+                Err(e) => {
+                    self.note_outcome(shard, Some(&e));
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or(RouteError::NoShards))
+    }
+
+    /// Abort a migration: settle the source's stash back into its
+    /// coordinator, then surface `cause`.  If even the abort fails the
+    /// session may be stranded (stashed on an unreachable source) — say
+    /// so loudly instead of pretending it is merely unmoved.
+    fn abort_and<T>(
+        &mut self,
+        from: usize,
+        session: u64,
+        cause: RouteError,
+    ) -> Result<T, RouteError> {
+        match self.settle_export(from, session, false) {
+            Ok(()) => Err(cause),
+            Err(abort_err) => Err(RouteError::Protocol(format!(
+                "session {session:#x} may be stranded in shard {from}'s export stash: \
+                 import did not land ({cause}) and the abort also failed: {abort_err}"
+            ))),
+        }
+    }
+
+    fn finish_migration(
+        &mut self,
+        from: usize,
+        to: usize,
+        session: u64,
+        bytes: usize,
+    ) -> Result<usize, RouteError> {
+        self.resident.insert(session, to);
+        // commit releases the source's inactive stash.  Best-effort: a
+        // failed commit leaves a stale stash entry, never a live duplicate
+        // (the stash is invisible to the coordinator), and settlement is
+        // idempotent so any later retry is safe.
+        let _ = self.settle_export(from, session, true);
+        Ok(bytes)
     }
 
     /// Drop a session everywhere the router knows about it.
     pub fn end_session(&mut self, session: u64) -> Result<(), RouteError> {
         let shard = self.route_session(session)?;
-        let (mut conn, _) = Conn::open(self.shards[shard].addr)?;
+        let mut conn = self.open_shard(shard)?;
         match conn.request(&Frame::EndSession { session })? {
             Frame::Ok => {
                 self.resident.remove(&session);
+                self.mirror.remove(&session);
                 Ok(())
             }
             other => Err(RouteError::Protocol(format!("expected Ok, got {other:?}"))),
         }
     }
 
-    /// Live-migrate one session to a target shard: quiesce + export on the
-    /// source, ship the blob, import on the target.  Identity (engine tag
-    /// + shape fingerprint, as advertised in each shard's handshake) is
-    /// compared before the blob is shipped; the target connection is opened
-    /// before the export, so an unreachable target fails the migration with
-    /// the session untouched; on a target-side refusal the session is
-    /// restored to its source.  Returns the shipped state-blob size in
-    /// bytes (0 when the engine exports no state).
+    /// Live-migrate one session to a target shard, two-phase: quiesce +
+    /// export on the source (which stashes the session source-side), ship
+    /// the blob, import on the target, then settle the stash with an
+    /// explicit commit (landed) or abort (did not land).  Identity (engine
+    /// tag + shape + weights fingerprints, as advertised in each shard's
+    /// handshake) is compared before the blob is shipped; the target
+    /// connection is opened before the export, so an unreachable target
+    /// fails the migration with the session untouched.  Returns the
+    /// shipped state-blob size in bytes (0 when the engine exports no
+    /// state).
     ///
-    /// Known limit (no two-phase commit): if the import was *applied* but
-    /// its Ok reply was lost in transit, the restore-to-source leaves a
-    /// stale duplicate on the target — duplicates are garbage, never lost
-    /// conversations, and the router keeps routing to the source copy.
+    /// When the import's Ok is lost in transit the router probes the
+    /// target's transcript: present → the import landed, commit; absent
+    /// or unreachable → abort, restoring the source.  Either way the
+    /// session lives in exactly one coordinator — the lost-Ok duplicate
+    /// the pre-2PC handshake documented cannot happen.
     pub fn migrate(&mut self, session: u64, to: usize) -> Result<usize, RouteError> {
         let from = *self
             .resident
@@ -358,8 +970,8 @@ impl Router {
         // connect to the TARGET before detaching anything from the source:
         // a down or unreachable target must fail the migration while the
         // session still lives untouched on its source shard
-        let (mut dst_conn, _) = Conn::open(dst.addr)?;
-        let (mut src_conn, _) = Conn::open(src.addr)?;
+        let mut dst_conn = self.open_shard(to)?;
+        let mut src_conn = self.open_shard(from)?;
         let (session_id, shape_fp, weights_fp, transcript, state) =
             match src_conn.request(&Frame::Export { session }) {
                 Ok(Frame::Blob { session, shape_fp, weights_fp, transcript, state }) => {
@@ -373,45 +985,42 @@ impl Router {
                     self.resident.remove(&session);
                     return Err(RouteError::UnknownSession(session));
                 }
-                Err(e) => return Err(e),
+                Err(e) => {
+                    // the export reply was lost: the source holds the
+                    // session either live in its coordinator or detached
+                    // in its stash.  Abort settles both cases (idempotent:
+                    // stashed → re-imported, live → no-op Ok).
+                    self.note_outcome(from, Some(&e));
+                    return self.abort_and(from, session, e);
+                }
             };
         let bytes = state.as_ref().map(|b| b.len()).unwrap_or(0);
+        // the exported transcript is authoritative — refresh the mirror
+        self.mirror.insert(session, transcript.clone());
         let import =
             Frame::Import { session: session_id, shape_fp, weights_fp, transcript, state };
         match dst_conn.request(&import) {
-            Ok(Frame::Ok) => {
-                self.resident.insert(session, to);
-                Ok(bytes)
+            Ok(Frame::Ok) => self.finish_migration(from, to, session, bytes),
+            Ok(other) => self.abort_and(
+                from,
+                session,
+                RouteError::Protocol(format!("expected Ok from import, got {other:?}")),
+            ),
+            Err(RouteError::Shard(ErrCode::Mismatch, msg)) => {
+                self.abort_and(from, session, RouteError::Mismatch(msg))
             }
-            refused => {
-                // put the session back where it came from — a failed
-                // migration must never lose the conversation.  If even the
-                // restore fails, say so loudly instead of propagating the
-                // transport error as if the session were merely unmoved.
-                let restored = Conn::open(src.addr)
-                    .and_then(|(mut back, _)| back.request(&import))
-                    .and_then(|reply| match reply {
-                        Frame::Ok => Ok(()),
-                        other => Err(RouteError::Protocol(format!(
-                            "restore reply was {other:?}"
-                        ))),
-                    });
-                if let Err(e) = restored {
-                    return Err(RouteError::Protocol(format!(
-                        "session {session:#x} may be lost: target refused the \
-                         import ({refused:?}) and restore-to-source failed: {e}"
-                    )));
-                }
-                match refused {
-                    Err(RouteError::Shard(ErrCode::Mismatch, msg)) => {
-                        Err(RouteError::Mismatch(msg))
-                    }
-                    Err(e) => Err(e),
-                    Ok(other) => Err(RouteError::Protocol(format!(
-                        "expected Ok from import, got {other:?}"
-                    ))),
+            Err(e @ RouteError::Io(_)) => {
+                // ambiguous: the import may have been applied with its Ok
+                // lost in transit.  Probe the target; the answer decides
+                // commit vs abort.
+                self.note_outcome(to, Some(&e));
+                if matches!(self.probe_session(to, session), Ok(true)) {
+                    self.finish_migration(from, to, session, bytes)
+                } else {
+                    self.abort_and(from, session, e)
                 }
             }
+            Err(e) => self.abort_and(from, session, e),
         }
     }
 
@@ -442,8 +1051,9 @@ impl Router {
     /// Add a shard to the ring (it starts taking new placements and
     /// rebalance targets immediately).
     pub fn add_shard(&mut self, addr: SocketAddr) -> Result<usize, RouteError> {
-        let (_conn, id) = Conn::open(addr)?;
+        let (_conn, id) = Conn::open(addr, self.faults.clone())?;
         self.shards.push(ShardInfo { addr, id, draining: false });
+        self.breakers.push(Breaker::new(self.breaker_cfg));
         self.rebuild_ring();
         Ok(self.shards.len() - 1)
     }
@@ -477,13 +1087,17 @@ impl Router {
         Ok(moves)
     }
 
-    /// Per-shard health, queried over the wire.
-    pub fn health(&self) -> Result<Vec<HealthReport>, RouteError> {
+    /// Per-shard health, queried over the wire.  Fails on the first shard
+    /// that cannot answer (including a typed refusal for an open circuit).
+    pub fn health(&mut self) -> Result<Vec<HealthReport>, RouteError> {
         let mut out = Vec::with_capacity(self.shards.len());
-        for s in &self.shards {
-            let (mut conn, _) = Conn::open(s.addr)?;
+        for i in 0..self.shards.len() {
+            let mut conn = self.open_shard(i)?;
             match conn.request(&Frame::Health)? {
-                Frame::HealthReport(h) => out.push(h),
+                Frame::HealthReport(h) => {
+                    self.note_outcome(i, None);
+                    out.push(h);
+                }
                 other => {
                     return Err(RouteError::Protocol(format!(
                         "expected HealthReport, got {other:?}"
@@ -492,6 +1106,30 @@ impl Router {
             }
         }
         Ok(out)
+    }
+
+    /// Probe every shard once and feed the result to its breaker; returns
+    /// the post-probe circuit states.  Open circuits whose cooldown has
+    /// not elapsed are skipped (no hammering); an elapsed one half-opens
+    /// and this probe decides whether it closes — so a periodic
+    /// `probe_all` (the front server's probe thread) is the mechanism by
+    /// which a recovered shard rejoins service.
+    pub fn probe_all(&mut self) -> Vec<BreakerState> {
+        for i in 0..self.shards.len() {
+            if !self.breakers[i].allow() {
+                continue;
+            }
+            let ok = Conn::open(self.shards[i].addr, self.faults.clone())
+                .and_then(|(mut c, _)| c.request(&Frame::Health))
+                .map(|f| matches!(f, Frame::HealthReport(_)))
+                .unwrap_or(false);
+            if ok {
+                self.breakers[i].record_success();
+            } else {
+                self.breakers[i].record_failure();
+            }
+        }
+        self.breakers.iter().map(|b| b.state()).collect()
     }
 }
 
@@ -518,6 +1156,16 @@ mod tests {
     fn router_over(shards: &[ShardServer]) -> Router {
         let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
         Router::new(&addrs).unwrap()
+    }
+
+    fn router_with_faults(
+        shards: &[ShardServer],
+        cfg: BreakerConfig,
+    ) -> (Router, Arc<FaultPlan>) {
+        let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+        let faults = Arc::new(FaultPlan::new());
+        let r = Router::new_with(&addrs, cfg, Some(faults.clone())).unwrap();
+        (r, faults)
     }
 
     #[test]
@@ -691,8 +1339,156 @@ mod tests {
         let sid = 3u64;
         r.submit_in_session(sid, vec![1, 2], 2).unwrap();
         assert!(r.shard_of(sid).is_some());
+        assert!(r.mirror_of(sid).is_some());
         r.end_session(sid).unwrap();
         assert_eq!(r.shard_of(sid), None);
+        assert_eq!(r.mirror_of(sid), None, "end_session must drop the mirror too");
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// The streamed tokens (via `on_token`) must be exactly the buffered
+    /// return value, in order, for both one-shots and session turns.
+    #[test]
+    fn streamed_tokens_match_the_buffered_return() {
+        let shards = native_shards(1);
+        let mut r = router_over(&shards);
+        let mut seen = Vec::new();
+        let toks = r.submit_streaming(vec![3, 4, 5], 4, |t| seen.push(t)).unwrap();
+        assert_eq!(seen, toks, "one-shot stream must equal the return value");
+        seen.clear();
+        let t1 = r
+            .submit_in_session_streaming(7, vec![1, 2], 4, |t| seen.push(t))
+            .unwrap();
+        assert_eq!(seen, t1, "session stream must equal the return value");
+        // and the mirror tracks prompt ++ generated
+        let mut want = vec![1, 2];
+        want.extend_from_slice(&t1);
+        assert_eq!(r.mirror_of(7).unwrap(), &want[..]);
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// Three connect failures trip the breaker; the fourth request is
+    /// refused with the typed `ShardUnavailable`, not a raw i/o error —
+    /// and without touching the network (the hour-long cooldown means no
+    /// half-open probe can sneak through).
+    #[test]
+    fn open_circuit_refuses_with_typed_shard_unavailable() {
+        let shards = native_shards(1);
+        let bc = BreakerConfig {
+            failure_threshold: 3,
+            cooldown: Duration::from_secs(3600),
+        };
+        let (mut r, faults) = router_with_faults(&shards, bc);
+        faults.kill(shards[0].addr());
+        for i in 0..3 {
+            match r.submit(vec![1, 2], 2) {
+                Err(RouteError::Io(_)) => {}
+                other => panic!("attempt {i}: expected Io while closed, got {other:?}"),
+            }
+        }
+        assert_eq!(r.breaker_state(0), Some(BreakerState::Open));
+        match r.submit(vec![1, 2], 2) {
+            Err(RouteError::ShardUnavailable { shard: 0 }) => {}
+            other => panic!("expected typed ShardUnavailable, got {other:?}"),
+        }
+        // revive + probe: the breaker is the only gate, and probe_all with
+        // an unelapsed cooldown must not reset it behind the clock's back
+        faults.revive(shards[0].addr());
+        assert_eq!(r.probe_all()[0], BreakerState::Open, "cooldown has not elapsed");
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// A zero cooldown lets `probe_all` half-open and close the circuit as
+    /// soon as the shard is reachable again.
+    #[test]
+    fn probe_all_recovers_a_revived_shard() {
+        let shards = native_shards(1);
+        let bc = BreakerConfig { failure_threshold: 1, cooldown: Duration::ZERO };
+        let (mut r, faults) = router_with_faults(&shards, bc);
+        faults.kill(shards[0].addr());
+        assert!(r.submit(vec![1], 1).is_err());
+        assert_eq!(r.breaker_state(0), Some(BreakerState::Open));
+        // still dead: the probe re-opens
+        assert_eq!(r.probe_all()[0], BreakerState::Open);
+        faults.revive(shards[0].addr());
+        assert_eq!(r.probe_all()[0], BreakerState::Closed, "probe must close the circuit");
+        assert_eq!(r.submit(vec![1, 2], 2).unwrap().len(), 2);
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// Kill a session's home shard between turns: the next turn must be
+    /// served anyway — resurrected from the router's transcript mirror on
+    /// the surviving shard — with tokens identical to a never-interrupted
+    /// run of the same conversation.
+    #[test]
+    fn killed_home_shard_resurrects_the_session_token_identically() {
+        let shards = native_shards(2);
+        let (mut r, faults) = router_with_faults(&shards, BreakerConfig::default());
+        let sid = 42u64;
+        let t1 = r.submit_in_session(sid, vec![1, 2, 3], 4).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        // reference: the same two turns, uninterrupted, on a fresh
+        // identically-seeded shard
+        let reference = {
+            let ref_shards = native_shards(1);
+            let mut rr = router_over(&ref_shards);
+            let a = rr.submit_in_session(sid, vec![1, 2, 3], 4).unwrap();
+            assert_eq!(a, t1, "identically-seeded turn 1 must agree");
+            let b = rr.submit_in_session(sid, vec![9, 9], 4).unwrap();
+            for s in ref_shards {
+                s.shutdown();
+            }
+            b
+        };
+        faults.kill(shards[home].addr());
+        let mut streamed = Vec::new();
+        let t2 = r
+            .submit_in_session_streaming(sid, vec![9, 9], 4, |t| streamed.push(t))
+            .unwrap();
+        assert_eq!(t2, reference, "resurrected turn must be token-identical");
+        assert_eq!(streamed, reference, "and streamed exactly once each");
+        let new_home = r.shard_of(sid).unwrap();
+        assert_ne!(new_home, home, "the session must have moved off the dead shard");
+        // the resurrected session is a first-class resident: another turn
+        // keeps working without any further recovery
+        assert_eq!(r.submit_in_session(sid, vec![4], 2).unwrap().len(), 2);
+        assert!(shards[new_home].handle.session_known(sid).unwrap());
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// A clean 2PC migration must leave the source with an empty stash
+    /// (commit settled it) and the session live in exactly one
+    /// coordinator.
+    #[test]
+    fn migrate_commits_the_source_stash_and_keeps_one_copy() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        let sid = 21u64;
+        r.submit_in_session(sid, vec![1, 2, 3], 3).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        let other = 1 - home;
+        r.migrate(sid, other).unwrap();
+        assert_eq!(r.shard_of(sid), Some(other));
+        assert_eq!(shards[home].pending_exports(), 0, "commit must drain the stash");
+        assert!(
+            !shards[home].handle.session_known(sid).unwrap(),
+            "source coordinator must have let go"
+        );
+        assert!(
+            shards[other].handle.session_known(sid).unwrap(),
+            "target coordinator must hold the session"
+        );
+        assert_eq!(r.submit_in_session(sid, vec![4], 3).unwrap().len(), 3);
         for s in shards {
             s.shutdown();
         }

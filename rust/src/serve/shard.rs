@@ -13,10 +13,22 @@
 //! the coordinator — a mismatched blob is rejected at the handshake,
 //! never restored (and slot restore re-validates plane shapes as the
 //! last line of defense).
+//!
+//! Migration is two-phase on the source side: [`Frame::Export`] detaches
+//! the session from the coordinator but *stashes* it shard-locally
+//! (inactive — it cannot serve turns) until the router settles the move
+//! with [`Frame::ExportCommit`] (discard the stash; the target has it) or
+//! [`Frame::ExportAbort`] (re-import the stash; the move failed).  Both
+//! are idempotent, so a router whose connection was severed mid-protocol
+//! can probe the target ([`Frame::Transcript`]) and retry whichever
+//! settlement is correct — at every severed point the session is live on
+//! exactly one shard, never zero, never two.
 
+use std::collections::HashMap;
 use std::io::{self, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -75,6 +87,10 @@ pub struct ShardServer {
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     /// Kept so tests and the demo can read shard metrics in-process.
     pub handle: Arc<CoordinatorHandle>,
+    /// Sessions exported but not yet committed/aborted (shared with every
+    /// connection thread — the commit may arrive on a different connection
+    /// than the export after a router reconnect).
+    pending: Arc<Mutex<HashMap<u64, SessionExport>>>,
     spec: ShardSpec,
 }
 
@@ -91,10 +107,13 @@ impl ShardServer {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let pending: Arc<Mutex<HashMap<u64, SessionExport>>> =
+            Arc::new(Mutex::new(HashMap::new()));
         let accept = {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             let handle = Arc::clone(&handle);
+            let pending = Arc::clone(&pending);
             let spec = spec.clone();
             std::thread::spawn(move || {
                 for stream in listener.incoming() {
@@ -107,9 +126,10 @@ impl ShardServer {
                     };
                     let stop = Arc::clone(&stop);
                     let handle = Arc::clone(&handle);
+                    let pending = Arc::clone(&pending);
                     let spec = spec.clone();
                     let join = std::thread::spawn(move || {
-                        let _ = serve_conn(stream, &handle, &spec, &stop);
+                        let _ = serve_conn(stream, &handle, &pending, &spec, &stop);
                     });
                     // reap finished connection threads so a long-running
                     // shard (per-call router connections) does not grow an
@@ -120,7 +140,7 @@ impl ShardServer {
                 }
             })
         };
-        Ok(ShardServer { addr, stop, accept: Some(accept), conns, handle, spec })
+        Ok(ShardServer { addr, stop, accept: Some(accept), conns, handle, pending, spec })
     }
 
     /// Convenience: a shard over the native recurrent engine (the O(1)
@@ -146,6 +166,12 @@ impl ShardServer {
     /// The identity the handshake advertises.
     pub fn spec(&self) -> &ShardSpec {
         &self.spec
+    }
+
+    /// How many exported sessions await commit/abort (tests assert the
+    /// stash never leaks across a settled migration).
+    pub fn pending_exports(&self) -> usize {
+        self.pending.lock().unwrap().len()
     }
 
     /// Stop accepting, join every connection thread (in-flight generations
@@ -235,6 +261,7 @@ fn read_frame_stoppable(
 fn serve_conn(
     mut stream: TcpStream,
     h: &CoordinatorHandle,
+    pending: &Mutex<HashMap<u64, SessionExport>>,
     spec: &ShardSpec,
     stop: &AtomicBool,
 ) -> io::Result<()> {
@@ -255,14 +282,16 @@ fn serve_conn(
             None => return Ok(()),
         };
         match frame {
-            Frame::Submit { max_new, prompt } => match h.submit(prompt, max_new as usize) {
-                Ok(rx) => stream_generation(&mut stream, rx.recv())?,
-                Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
-            },
+            Frame::Submit { max_new, prompt } => {
+                match h.submit_streaming(prompt, max_new as usize) {
+                    Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
+                    Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+                }
+            }
             Frame::SubmitInSession { session, strict, max_new, delta } => {
                 if strict {
-                    match h.resume_session(session, delta, max_new as usize) {
-                        Ok(rx) => stream_generation(&mut stream, rx.recv())?,
+                    match h.resume_session_streaming(session, delta, max_new as usize) {
+                        Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
                         Err(SubmitError::Session(e)) => {
                             send_err(&mut stream, ErrCode::UnknownSession, &e.to_string())?
                         }
@@ -271,8 +300,8 @@ fn serve_conn(
                         }
                     }
                 } else {
-                    match h.submit_in_session(session, delta, max_new as usize) {
-                        Ok(rx) => stream_generation(&mut stream, rx.recv())?,
+                    match h.submit_in_session_streaming(session, delta, max_new as usize) {
+                        Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
                         Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
                     }
                 }
@@ -283,10 +312,10 @@ fn serve_conn(
             },
             Frame::Export { session } => match h.export_session(session) {
                 Ok(Some(exp)) => {
-                    // the export DETACHED the session; if the Blob reply
-                    // cannot be delivered (peer gone, frame oversized),
-                    // reinstall it before surfacing the error — a failed
-                    // export must never destroy the conversation
+                    // the export DETACHED the session; stash it (inactive)
+                    // until the router settles with commit or abort, so a
+                    // connection severed anywhere past this point can be
+                    // recovered: the session is here, just not serving.
                     let blob = Frame::Blob {
                         session,
                         shape_fp: spec.shape_fp,
@@ -294,10 +323,51 @@ fn serve_conn(
                         transcript: exp.transcript.clone(),
                         state: exp.state.as_ref().map(|s| s.to_wire_bytes()),
                     };
+                    pending.lock().unwrap().insert(session, exp);
                     if let Err(e) = wire::write_frame(&mut stream, &blob) {
-                        let _ = h.import_session(session, exp);
+                        // the peer never saw the blob and this conn is dead:
+                        // roll back eagerly rather than await an abort that
+                        // may never come (a failed export must never destroy
+                        // the conversation)
+                        if let Some(exp) = pending.lock().unwrap().remove(&session) {
+                            let _ = h.import_session(session, exp);
+                        }
                         return Err(e);
                     }
+                }
+                Ok(None) => send_err(
+                    &mut stream,
+                    ErrCode::UnknownSession,
+                    &SessionError::Unknown { id: session }.to_string(),
+                )?,
+                Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
+            },
+            Frame::ExportCommit { session } => {
+                // the move landed on the target: discard the stash.  An
+                // absent stash (duplicate commit after a retry) is still Ok
+                // — idempotence is what makes retry-after-sever safe.
+                pending.lock().unwrap().remove(&session);
+                wire::write_frame(&mut stream, &Frame::Ok)?
+            }
+            Frame::ExportAbort { session } => {
+                // the move failed before the target had the session:
+                // re-import the stash so the conversation lives on here.
+                // An absent stash (duplicate abort, or the eager rollback
+                // above already ran) is likewise Ok.
+                let stashed = pending.lock().unwrap().remove(&session);
+                match stashed {
+                    Some(exp) => match h.import_session(session, exp) {
+                        Ok(()) => wire::write_frame(&mut stream, &Frame::Ok)?,
+                        Err(_) => {
+                            send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
+                        }
+                    },
+                    None => wire::write_frame(&mut stream, &Frame::Ok)?,
+                }
+            }
+            Frame::Transcript { session } => match h.transcript_of(session) {
+                Ok(Some(tokens)) => {
+                    wire::write_frame(&mut stream, &Frame::TranscriptIs { tokens })?
                 }
                 Ok(None) => send_err(
                     &mut stream,
@@ -373,24 +443,30 @@ fn check_import(
     }
 }
 
-/// Stream one finished generation as Token frames + Done.
+/// Stream one generation *live*: each Token frame is written the moment
+/// the decode loop emits it (wire TTFB = engine TTFT), then the buffered
+/// response closes the reply with Done.  A write error (peer gone
+/// mid-stream) aborts the relay but never the generation — the
+/// coordinator finishes the turn regardless, so the session snapshot and
+/// transcript stay complete and a front door can reconcile from them.
 fn stream_generation(
     stream: &mut TcpStream,
-    resp: Result<GenResponse, std::sync::mpsc::RecvError>,
+    tokens: Receiver<i32>,
+    resp: Receiver<GenResponse>,
 ) -> io::Result<()> {
-    match resp {
-        Ok(resp) => {
-            for &t in &resp.tokens {
-                wire::write_frame(stream, &Frame::Token { token: t })?;
-            }
-            wire::write_frame(
-                stream,
-                &Frame::Done {
-                    ttft_us: (resp.ttft_s * 1e6) as u64,
-                    total_us: (resp.total_s * 1e6) as u64,
-                },
-            )
-        }
+    for t in tokens.iter() {
+        wire::write_frame(stream, &Frame::Token { token: t })?;
+    }
+    // the token sender dropped: the request retired and the response is
+    // already (or imminently) in the reply channel
+    match resp.recv() {
+        Ok(resp) => wire::write_frame(
+            stream,
+            &Frame::Done {
+                ttft_us: (resp.ttft_s * 1e6) as u64,
+                total_us: (resp.total_s * 1e6) as u64,
+            },
+        ),
         Err(_) => send_err(stream, ErrCode::Closed, "generation reply lost"),
     }
 }
@@ -667,6 +743,105 @@ mod tests {
         h_ref.shutdown();
         shard_a.shutdown();
         shard_b.shutdown();
+    }
+
+    /// The source-side two-phase export: a stashed session is inactive
+    /// but recoverable; abort restores it bit-identically, commit discards
+    /// it, and both settlements are idempotent across reconnects.
+    #[test]
+    fn export_stash_abort_restores_and_commit_discards() {
+        let shard = native_shard();
+        let shape = LmShape::bench("nano").unwrap();
+        let h_ref = spawn(
+            move || Box::new(RecurrentEngine::new(&shape, 2, 11)) as Box<dyn SlotEngine>,
+            cfg(),
+        );
+        let sid = 7;
+        let turn_ref = |delta: Vec<i32>, n: usize| {
+            h_ref
+                .submit_in_session(sid, delta, n)
+                .unwrap()
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap()
+                .tokens
+        };
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new: 4,
+            delta: vec![2, 7, 1],
+        });
+        assert_eq!(c.collect_generation(), turn_ref(vec![2, 7, 1], 4));
+        // export: the session leaves the coordinator and sits in the stash
+        c.send(&Frame::Export { session: sid });
+        assert!(matches!(c.recv(), Frame::Blob { .. }));
+        assert_eq!(shard.pending_exports(), 1);
+        assert!(
+            !shard.handle.session_known(sid).unwrap(),
+            "a stashed session must not be able to serve turns"
+        );
+        c.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, delta: vec![9] });
+        assert!(matches!(c.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
+        // abort on a NEW connection: settlement survives a reconnect
+        let mut c2 = RawClient::connect(shard.addr());
+        c2.send(&Frame::ExportAbort { session: sid });
+        assert_eq!(c2.recv(), Frame::Ok);
+        assert_eq!(shard.pending_exports(), 0);
+        assert!(shard.handle.session_known(sid).unwrap());
+        // duplicate abort: idempotent Ok, session still exactly once
+        c2.send(&Frame::ExportAbort { session: sid });
+        assert_eq!(c2.recv(), Frame::Ok);
+        // continuation after the rollback is bit-identical to uninterrupted
+        c2.send(&Frame::SubmitInSession {
+            session: sid,
+            strict: true,
+            max_new: 3,
+            delta: vec![5, 5],
+        });
+        assert_eq!(c2.collect_generation(), turn_ref(vec![5, 5], 3));
+        // export again, commit this time: gone for good
+        c2.send(&Frame::Export { session: sid });
+        assert!(matches!(c2.recv(), Frame::Blob { .. }));
+        c2.send(&Frame::ExportCommit { session: sid });
+        assert_eq!(c2.recv(), Frame::Ok);
+        assert_eq!(shard.pending_exports(), 0);
+        c2.send(&Frame::ExportCommit { session: sid }); // duplicate commit
+        assert_eq!(c2.recv(), Frame::Ok);
+        c2.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, delta: vec![1] });
+        assert!(matches!(c2.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
+        h_ref.shutdown();
+        shard.shutdown();
+    }
+
+    /// The transcript probe: typed UnknownSession for an absent session,
+    /// the full prompt+generated history for a live one — and reading it
+    /// never detaches anything.
+    #[test]
+    fn transcript_probe_is_nondestructive_and_typed_for_unknown() {
+        let shard = native_shard();
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::Transcript { session: 42 });
+        assert!(matches!(c.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
+        c.send(&Frame::SubmitInSession {
+            session: 42,
+            strict: false,
+            max_new: 3,
+            delta: vec![1, 2],
+        });
+        let g = c.collect_generation();
+        c.send(&Frame::Transcript { session: 42 });
+        match c.recv() {
+            Frame::TranscriptIs { tokens } => {
+                let mut want = vec![1, 2];
+                want.extend(&g);
+                assert_eq!(tokens, want, "transcript must be prompt + generated, in order");
+            }
+            other => panic!("expected TranscriptIs, got {other:?}"),
+        }
+        c.send(&Frame::SubmitInSession { session: 42, strict: true, max_new: 2, delta: vec![3] });
+        assert_eq!(c.collect_generation().len(), 2);
+        shard.shutdown();
     }
 
     #[test]

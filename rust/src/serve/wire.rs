@@ -30,8 +30,11 @@ use std::io::{self, Read, Write};
 use crate::util::bytes::{ByteReader, ReadErr};
 
 /// Protocol version; bump on any frame-layout change so mixed-version
-/// router/shard pairs refuse each other at the handshake.
-pub const PROTO_VERSION: u32 = 1;
+/// router/shard pairs refuse each other at the handshake.  v2 added the
+/// commit/abort migration pair ([`Frame::ExportCommit`] /
+/// [`Frame::ExportAbort`]), the transcript probe ([`Frame::Transcript`] /
+/// [`Frame::TranscriptIs`]) and [`ErrCode::Unavailable`].
+pub const PROTO_VERSION: u32 = 2;
 
 /// Upper bound on one frame's encoded size (tag + payload).
 pub const MAX_FRAME_BYTES: u32 = 64 << 20;
@@ -51,6 +54,10 @@ pub enum ErrCode {
     Protocol,
     /// Anything else.
     Internal,
+    /// The target cannot take the request right now (open circuit breaker,
+    /// in-flight cap, draining).  Retryable — unlike [`ErrCode::Closed`],
+    /// nothing is wrong with the request itself.
+    Unavailable,
 }
 
 impl ErrCode {
@@ -61,6 +68,7 @@ impl ErrCode {
             ErrCode::Closed => 3,
             ErrCode::Protocol => 4,
             ErrCode::Internal => 5,
+            ErrCode::Unavailable => 6,
         }
     }
 
@@ -70,6 +78,7 @@ impl ErrCode {
             2 => ErrCode::Mismatch,
             3 => ErrCode::Closed,
             4 => ErrCode::Protocol,
+            6 => ErrCode::Unavailable,
             _ => ErrCode::Internal,
         }
     }
@@ -127,6 +136,26 @@ pub enum Frame {
     },
     /// Ask for a [`Frame::HealthReport`].
     Health,
+    /// Second phase of a migration: the export landed on the target, so
+    /// the source shard may discard its stashed copy of the session.  The
+    /// session survives on exactly one shard at every point of this
+    /// protocol because [`Frame::Export`] only *stashes* the detached
+    /// session at the source (inactive, unable to serve turns) — commit
+    /// discards the stash, [`Frame::ExportAbort`] restores it.  Both are
+    /// idempotent: committing or aborting an absent stash is [`Frame::Ok`],
+    /// so the router can retry either after a severed connection.
+    ExportCommit { session: u64 },
+    /// Roll back an export: re-install the stashed session at the source
+    /// (the import never landed on the target).  Idempotent, see
+    /// [`Frame::ExportCommit`].
+    ExportAbort { session: u64 },
+    /// Ask for the session's full transcript (prompt + generated tokens,
+    /// deferred until the session is quiescent).  Replies
+    /// [`Frame::TranscriptIs`], or [`ErrCode::UnknownSession`] — which is
+    /// how the router probes "did my severed import land?" without side
+    /// effects, and how it reconciles its transcript mirror after a
+    /// severed token stream.
+    Transcript { session: u64 },
     /// One generated token of the current request.
     Token { token: i32 },
     /// End of a generation reply.
@@ -141,9 +170,13 @@ pub enum Frame {
         transcript: Vec<i32>,
         state: Option<Vec<u8>>,
     },
-    /// Generic success ack (EndSession / Import).
+    /// Generic success ack (EndSession / Import / ExportCommit /
+    /// ExportAbort).
     Ok,
     HealthReport(HealthReport),
+    /// Reply to [`Frame::Transcript`]: the session's complete token
+    /// history in order.
+    TranscriptIs { tokens: Vec<i32> },
     Error { code: ErrCode, msg: String },
 }
 
@@ -155,12 +188,16 @@ const TAG_END_SESSION: u8 = 4;
 const TAG_EXPORT: u8 = 5;
 const TAG_IMPORT: u8 = 6;
 const TAG_HEALTH: u8 = 7;
+const TAG_EXPORT_COMMIT: u8 = 8;
+const TAG_EXPORT_ABORT: u8 = 9;
+const TAG_TRANSCRIPT: u8 = 10;
 const TAG_TOKEN: u8 = 16;
 const TAG_DONE: u8 = 17;
 const TAG_BLOB: u8 = 18;
 const TAG_OK: u8 = 19;
 const TAG_HEALTH_REPORT: u8 = 20;
 const TAG_ERROR: u8 = 21;
+const TAG_TRANSCRIPT_IS: u8 = 22;
 
 fn bad_data(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -322,6 +359,18 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.opt_bytes(state);
         }
         Frame::Health => e.u8(TAG_HEALTH),
+        Frame::ExportCommit { session } => {
+            e.u8(TAG_EXPORT_COMMIT);
+            e.u64(*session);
+        }
+        Frame::ExportAbort { session } => {
+            e.u8(TAG_EXPORT_ABORT);
+            e.u64(*session);
+        }
+        Frame::Transcript { session } => {
+            e.u8(TAG_TRANSCRIPT);
+            e.u64(*session);
+        }
         Frame::Token { token } => {
             e.u8(TAG_TOKEN);
             e.i32(*token);
@@ -340,6 +389,10 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.opt_bytes(state);
         }
         Frame::Ok => e.u8(TAG_OK),
+        Frame::TranscriptIs { tokens } => {
+            e.u8(TAG_TRANSCRIPT_IS);
+            e.tokens(tokens);
+        }
         Frame::HealthReport(h) => {
             e.u8(TAG_HEALTH_REPORT);
             e.u64(h.sessions_resident);
@@ -389,6 +442,9 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             state: d.opt_bytes()?,
         },
         TAG_HEALTH => Frame::Health,
+        TAG_EXPORT_COMMIT => Frame::ExportCommit { session: d.u64()? },
+        TAG_EXPORT_ABORT => Frame::ExportAbort { session: d.u64()? },
+        TAG_TRANSCRIPT => Frame::Transcript { session: d.u64()? },
         TAG_TOKEN => Frame::Token { token: d.i32()? },
         TAG_DONE => Frame::Done { ttft_us: d.u64()?, total_us: d.u64()? },
         TAG_BLOB => Frame::Blob {
@@ -399,6 +455,7 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             state: d.opt_bytes()?,
         },
         TAG_OK => Frame::Ok,
+        TAG_TRANSCRIPT_IS => Frame::TranscriptIs { tokens: d.tokens()? },
         TAG_HEALTH_REPORT => Frame::HealthReport(HealthReport {
             sessions_resident: d.u64()?,
             session_bytes: d.u64()?,
@@ -496,6 +553,11 @@ mod tests {
             state: None,
         });
         roundtrip(Frame::Health);
+        roundtrip(Frame::ExportCommit { session: 21 });
+        roundtrip(Frame::ExportAbort { session: u64::MAX });
+        roundtrip(Frame::Transcript { session: 0 });
+        roundtrip(Frame::TranscriptIs { tokens: vec![] });
+        roundtrip(Frame::TranscriptIs { tokens: vec![1, -2, i32::MAX] });
         roundtrip(Frame::Token { token: -1 });
         roundtrip(Frame::Done { ttft_us: 1, total_us: 2 });
         roundtrip(Frame::Blob {
@@ -522,6 +584,7 @@ mod tests {
             ErrCode::Closed,
             ErrCode::Protocol,
             ErrCode::Internal,
+            ErrCode::Unavailable,
         ] {
             roundtrip(Frame::Error { code, msg: "why".into() });
         }
@@ -591,6 +654,170 @@ mod tests {
             read_frame(&mut Cursor::new(&long)).unwrap_err().kind(),
             io::ErrorKind::InvalidData
         );
+    }
+
+    use crate::util::prop::check;
+    use crate::util::Prng;
+
+    fn arb_tokens(rng: &mut Prng, max: usize) -> Vec<i32> {
+        let n = rng.below(max + 1);
+        (0..n).map(|_| rng.next_u64() as i32).collect()
+    }
+
+    fn arb_bytes(rng: &mut Prng, max: usize) -> Option<Vec<u8>> {
+        match rng.below(3) {
+            0 => None,
+            _ => {
+                let n = rng.below(max + 1);
+                Some((0..n).map(|_| rng.next_u64() as u8).collect())
+            }
+        }
+    }
+
+    /// A random instance of every frame kind — the generator behind the
+    /// wire property tests, so fuzzing covers each tag's payload layout.
+    fn arb_frame(rng: &mut Prng) -> Frame {
+        match rng.below(17) {
+            0 => Frame::Hello {
+                proto: rng.next_u64() as u32,
+                engine: "hyena".into(),
+                shape_fp: rng.next_u64(),
+                weights_fp: rng.next_u64(),
+            },
+            1 => Frame::Submit {
+                max_new: rng.below(64) as u32,
+                prompt: arb_tokens(rng, 8),
+            },
+            2 => Frame::SubmitInSession {
+                session: rng.next_u64(),
+                strict: rng.below(2) == 1,
+                max_new: rng.below(64) as u32,
+                delta: arb_tokens(rng, 8),
+            },
+            3 => Frame::EndSession { session: rng.next_u64() },
+            4 => Frame::Export { session: rng.next_u64() },
+            5 => Frame::Import {
+                session: rng.next_u64(),
+                shape_fp: rng.next_u64(),
+                weights_fp: rng.next_u64(),
+                transcript: arb_tokens(rng, 8),
+                state: arb_bytes(rng, 48),
+            },
+            6 => Frame::Health,
+            7 => Frame::ExportCommit { session: rng.next_u64() },
+            8 => Frame::ExportAbort { session: rng.next_u64() },
+            9 => Frame::Transcript { session: rng.next_u64() },
+            10 => Frame::Token { token: rng.next_u64() as i32 },
+            11 => Frame::Done { ttft_us: rng.next_u64(), total_us: rng.next_u64() },
+            12 => Frame::Blob {
+                session: rng.next_u64(),
+                shape_fp: rng.next_u64(),
+                weights_fp: rng.next_u64(),
+                transcript: arb_tokens(rng, 8),
+                state: arb_bytes(rng, 48),
+            },
+            13 => Frame::Ok,
+            14 => Frame::TranscriptIs { tokens: arb_tokens(rng, 12) },
+            15 => Frame::HealthReport(HealthReport {
+                sessions_resident: rng.next_u64(),
+                session_bytes: rng.next_u64(),
+                session_hits: rng.next_u64(),
+                session_misses: rng.next_u64(),
+                in_flight: rng.next_u64(),
+                requests_done: rng.next_u64(),
+                tokens_generated: rng.next_u64(),
+                prefill_tokens_saved: rng.next_u64(),
+            }),
+            _ => Frame::Error {
+                code: ErrCode::from_u16(rng.below(8) as u16),
+                msg: "m".repeat(rng.below(16)),
+            },
+        }
+    }
+
+    /// Property: every generatable frame survives encode → decode intact.
+    #[test]
+    fn prop_every_arbitrary_frame_roundtrips() {
+        check("frame roundtrip", 256, |rng| {
+            let f = arb_frame(rng);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            match read_frame(&mut Cursor::new(&buf)) {
+                Ok(got) if got == f => Ok(()),
+                Ok(got) => Err(format!("{got:?} != {f:?}")),
+                Err(e) => Err(format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    /// Property: a strict prefix of any encoded frame is always a typed
+    /// error (`UnexpectedEof` mid-header / mid-body, `InvalidData` on a
+    /// mangled body) — never a panic, never a bogus decode.
+    #[test]
+    fn prop_truncation_of_every_frame_kind_is_typed_error() {
+        check("truncation is typed", 256, |rng| {
+            let f = arb_frame(rng);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            let cut = rng.below(buf.len());
+            match read_frame(&mut Cursor::new(&buf[..cut])) {
+                Ok(got) => Err(format!("cut {cut}/{} decoded {got:?}", buf.len())),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::UnexpectedEof | io::ErrorKind::InvalidData
+                    ) =>
+                {
+                    Ok(())
+                }
+                Err(e) => Err(format!("untyped error kind {:?}", e.kind())),
+            }
+        });
+    }
+
+    /// Property: flipping random bytes anywhere in the framed bytes
+    /// (length prefix included) either decodes as *some* frame or fails
+    /// with a typed error — the bounded reader never panics and never
+    /// allocates past [`MAX_FRAME_BYTES`].
+    #[test]
+    fn prop_corruption_of_every_frame_kind_never_panics() {
+        check("corruption is contained", 256, |rng| {
+            let f = arb_frame(rng);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            for _ in 0..1 + rng.below(4) {
+                let i = rng.below(buf.len());
+                buf[i] ^= (1 + rng.below(255)) as u8;
+            }
+            match read_frame(&mut Cursor::new(&buf)) {
+                Ok(_) => Ok(()), // mutated into another valid frame: fine
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::UnexpectedEof | io::ErrorKind::InvalidData
+                    ) =>
+                {
+                    Ok(())
+                }
+                Err(e) => Err(format!("untyped error kind {:?}", e.kind())),
+            }
+        });
+    }
+
+    /// Property: a declared length past the cap is refused before any
+    /// body allocation, whatever tag byte follows.
+    #[test]
+    fn prop_oversize_declared_length_is_rejected() {
+        check("oversize is rejected", 64, |rng| {
+            let mut buf = Vec::new();
+            let over = MAX_FRAME_BYTES + 1 + (rng.next_u64() as u32 % 0x10000);
+            buf.extend_from_slice(&over.to_le_bytes());
+            buf.push(rng.next_u64() as u8);
+            match read_frame(&mut Cursor::new(&buf)) {
+                Err(e) if e.kind() == io::ErrorKind::InvalidData => Ok(()),
+                other => Err(format!("expected InvalidData, got {other:?}")),
+            }
+        });
     }
 
     #[test]

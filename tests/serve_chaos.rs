@@ -1,0 +1,319 @@
+//! Chaos suite for the serve layer: deterministic fault injection at
+//! named protocol points (no sleeps, no real crashes, no racing).
+//!
+//! Every scenario compares the surviving conversation against an
+//! uninterrupted single-coordinator baseline, so "survived" always means
+//! *bit-identical tokens*, and every staged fault is asserted to have
+//! actually fired (`rules_pending() == 0`) — a fault that never fires is
+//! a test of nothing.
+//!
+//! The invariants under fire:
+//!
+//! * a shard killed mid-conversation → the session is resurrected from
+//!   the router's transcript mirror on a survivor, token-identically;
+//! * a token stream severed mid-turn → the router reconciles against the
+//!   shard's transcript and the client still sees every token exactly
+//!   once, with no replayed turn;
+//! * a migration severed at *each* commit/abort protocol window → the
+//!   session ends up live in exactly one coordinator (never zero, never
+//!   two) and keeps producing the baseline's tokens.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::spawn;
+use laughing_hyena::coordinator::{CoordinatorHandle, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::serve::{
+    BreakerConfig, Cluster, FaultAction, FaultPlan, FrameKind, Point, Rule,
+};
+
+/// Every shard and the reference coordinator share this seed, so all
+/// engines carry identical weights — the precondition for bit-identical
+/// recovery anywhere in the cluster.
+const SEED: u64 = 11;
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// The uninterrupted baseline: one coordinator, never faulted.
+fn reference() -> CoordinatorHandle {
+    let shape = shape();
+    spawn(
+        move || Box::new(RecurrentEngine::new(&shape, 2, SEED)) as Box<dyn SlotEngine>,
+        cfg(),
+    )
+}
+
+fn turn(h: &CoordinatorHandle, sid: u64, delta: Vec<i32>, n: usize) -> Vec<i32> {
+    h.submit_in_session(sid, delta, n)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap()
+        .tokens
+}
+
+/// An `n`-shard cluster with a shared fault plan threaded into the router.
+fn chaos_cluster(n: usize) -> (Cluster, Arc<FaultPlan>) {
+    let faults = Arc::new(FaultPlan::new());
+    let cluster = Cluster::launch_native_with(
+        n,
+        &shape(),
+        2,
+        SEED,
+        &cfg(),
+        BreakerConfig::default(),
+        Some(faults.clone()),
+    )
+    .unwrap();
+    (cluster, faults)
+}
+
+/// Tentpole: kill a session's home shard mid-conversation.  The next
+/// (streamed) turn must be answered anyway — resurrected from the
+/// router's transcript mirror on the surviving shard — and be
+/// token-identical to the uninterrupted baseline, with every token
+/// delivered to the streaming callback exactly once.
+#[test]
+fn killed_shard_mid_conversation_resurrects_token_identically() {
+    let (mut cluster, faults) = chaos_cluster(2);
+    let h_ref = reference();
+    let sid = 0xDEAD5EED;
+    let (d1, d2, d3, d4) = (vec![3, 1, 4], vec![1, 5, 9], vec![2, 6], vec![5, 3]);
+
+    let g1 = cluster.router.submit_in_session(sid, d1.clone(), 4).unwrap();
+    let g2 = cluster.router.submit_in_session(sid, d2.clone(), 3).unwrap();
+    assert_eq!(g1, turn(&h_ref, sid, d1, 4));
+    assert_eq!(g2, turn(&h_ref, sid, d2, 3));
+
+    // the home shard "crashes": every connect to it is refused from here on
+    let home = cluster.router.shard_of(sid).unwrap();
+    faults.kill(cluster.shards[home].addr());
+
+    let mut streamed = Vec::new();
+    let g3 = cluster
+        .router
+        .submit_in_session_streaming(sid, d3.clone(), 5, |t| streamed.push(t))
+        .unwrap();
+    let r3 = turn(&h_ref, sid, d3, 5);
+    assert_eq!(g3, r3, "resurrected turn diverged from the uninterrupted run");
+    assert_eq!(streamed, r3, "stream must carry every token exactly once");
+
+    // the session now lives on a survivor, and that shard truly holds it
+    let new_home = cluster.router.shard_of(sid).unwrap();
+    assert_ne!(new_home, home, "the session cannot stay on the killed shard");
+    assert!(
+        cluster.shards[new_home].handle.session_known(sid).unwrap(),
+        "the surviving shard's coordinator must hold the resurrected session"
+    );
+
+    // and the conversation just keeps going on the new home
+    let g4 = cluster.router.submit_in_session(sid, d4.clone(), 3).unwrap();
+    assert_eq!(g4, turn(&h_ref, sid, d4, 3), "post-resurrection turn diverged");
+    assert_eq!(cluster.router.shard_of(sid), Some(new_home));
+
+    h_ref.shutdown();
+    cluster.shutdown();
+}
+
+/// A token stream severed mid-turn while the shard stays up: the
+/// coordinator finishes the turn even though the relay died, so the
+/// router must *reconcile* (fetch the transcript, deliver the unseen
+/// suffix) rather than replay — and the client sees each token once.
+#[test]
+fn severed_token_stream_reconciles_without_replaying_the_turn() {
+    let (mut cluster, faults) = chaos_cluster(2);
+    let h_ref = reference();
+    let sid = 0x5EED;
+    let (d1, d2) = (vec![4, 2, 4], vec![8, 1]);
+
+    let g1 = cluster.router.submit_in_session(sid, d1.clone(), 3).unwrap();
+    assert_eq!(g1, turn(&h_ref, sid, d1, 3));
+    let home = cluster.router.shard_of(sid).unwrap();
+
+    // sever the relay connection after exactly 2 streamed tokens
+    faults.add_rule(Rule::once(Point::TokenStream { after: 2 }, FaultAction::SeverAfter));
+
+    let mut streamed = Vec::new();
+    let g2 = cluster
+        .router
+        .submit_in_session_streaming(sid, d2.clone(), 6, |t| streamed.push(t))
+        .unwrap();
+    let r2 = turn(&h_ref, sid, d2, 6);
+    assert_eq!(g2, r2, "reconciled turn diverged from the uninterrupted run");
+    assert_eq!(
+        streamed, r2,
+        "the client must see every token exactly once across the sever"
+    );
+    assert_eq!(faults.rules_pending(), 0, "the staged sever never fired");
+    assert_eq!(
+        cluster.router.shard_of(sid),
+        Some(home),
+        "reconcile must keep the session where it is"
+    );
+
+    // reconcile accepted the finished turn: two generation requests total
+    // (turn 1 + the severed-but-completed turn), no replayed third
+    let health = cluster.router.health().unwrap();
+    let done: u64 = health.iter().map(|h| h.requests_done).sum();
+    assert_eq!(done, 2, "a replay would have run a third generation");
+    assert_eq!(health.iter().map(|h| h.session_misses).sum::<u64>(), 0);
+
+    h_ref.shutdown();
+    cluster.shutdown();
+}
+
+/// One protocol window of the 2PC migration under injected failure.
+struct SeverCase {
+    name: &'static str,
+    rules: Vec<Rule>,
+    /// Expected `migrate` outcome (`Ok` when the probe proves the import
+    /// landed, `Err` when the migration was aborted back to the source).
+    migrate_ok: bool,
+    /// Where the session must be live afterwards.
+    lands_on_target: bool,
+    /// Stale (inactive, coordinator-invisible) entries left in the
+    /// source's export stash — only the commit-lost-forever window leaves
+    /// one, and it must never be a live duplicate.
+    stale_stash: usize,
+}
+
+/// Satellite: sever a live migration at *each* point of the export /
+/// import / commit / abort protocol.  After every single one: the session
+/// is live in exactly one coordinator (asserted against both shards'
+/// coordinators directly, not just the router's bookkeeping), the export
+/// stash settles as specified, and the conversation's next turn is
+/// bit-identical to the uninterrupted baseline.
+#[test]
+fn migration_severed_at_every_protocol_point_keeps_exactly_one_live_copy() {
+    let drop_at = |p: Point| Rule::once(p, FaultAction::DropFrame);
+    let cases = vec![
+        SeverCase {
+            name: "export request dropped — source never sees it",
+            rules: vec![drop_at(Point::Send(FrameKind::Export))],
+            migrate_ok: false,
+            lands_on_target: false,
+            stale_stash: 0,
+        },
+        SeverCase {
+            name: "export reply lost — abort re-imports the stash",
+            rules: vec![drop_at(Point::RecvReplyTo(FrameKind::Export))],
+            migrate_ok: false,
+            lands_on_target: false,
+            stale_stash: 0,
+        },
+        SeverCase {
+            name: "import request dropped — probe finds nothing, abort",
+            rules: vec![drop_at(Point::Send(FrameKind::Import))],
+            migrate_ok: false,
+            lands_on_target: false,
+            stale_stash: 0,
+        },
+        SeverCase {
+            name: "import Ok lost — probe proves it landed, commit",
+            rules: vec![drop_at(Point::RecvReplyTo(FrameKind::Import))],
+            migrate_ok: true,
+            lands_on_target: true,
+            stale_stash: 0,
+        },
+        SeverCase {
+            name: "commit dropped once — settlement retry clears the stash",
+            rules: vec![drop_at(Point::Send(FrameKind::ExportCommit))],
+            migrate_ok: true,
+            lands_on_target: true,
+            stale_stash: 0,
+        },
+        SeverCase {
+            name: "commit lost for good — stale stash, never a duplicate",
+            rules: vec![Rule {
+                shard: None,
+                point: Point::Send(FrameKind::ExportCommit),
+                action: FaultAction::DropFrame,
+                times: 2,
+            }],
+            migrate_ok: true,
+            lands_on_target: true,
+            stale_stash: 1,
+        },
+        SeverCase {
+            name: "abort dropped once — settlement retry restores the source",
+            rules: vec![
+                drop_at(Point::RecvReplyTo(FrameKind::Export)),
+                drop_at(Point::Send(FrameKind::ExportAbort)),
+            ],
+            migrate_ok: false,
+            lands_on_target: false,
+            stale_stash: 0,
+        },
+    ];
+
+    for case in cases {
+        let name = case.name;
+        let (mut cluster, faults) = chaos_cluster(2);
+        let h_ref = reference();
+        let sid = 0xC0FFEE;
+        let (d1, d2, d3) = (vec![3, 1, 4, 1], vec![5, 9, 2], vec![6, 5]);
+
+        let g1 = cluster.router.submit_in_session(sid, d1.clone(), 3).unwrap();
+        let g2 = cluster.router.submit_in_session(sid, d2.clone(), 4).unwrap();
+        assert_eq!(g1, turn(&h_ref, sid, d1, 3), "turn 1 diverged before the fault ({name})");
+        assert_eq!(g2, turn(&h_ref, sid, d2, 4), "turn 2 diverged before the fault ({name})");
+
+        let home = cluster.router.shard_of(sid).unwrap();
+        let target = 1 - home;
+        for rule in &case.rules {
+            faults.add_rule(*rule);
+        }
+
+        let res = cluster.router.migrate(sid, target);
+        assert_eq!(
+            res.is_ok(),
+            case.migrate_ok,
+            "unexpected migrate outcome ({name}): {res:?}"
+        );
+        assert_eq!(faults.rules_pending(), 0, "a staged fault never fired ({name})");
+        assert!(!faults.hits().is_empty(), "no fault hit was recorded ({name})");
+
+        // exactly one live copy — asked of the coordinators themselves
+        let on_home = cluster.shards[home].handle.session_known(sid).unwrap();
+        let on_target = cluster.shards[target].handle.session_known(sid).unwrap();
+        assert!(
+            on_home ^ on_target,
+            "session must be live in exactly one coordinator ({name}): \
+             home={on_home} target={on_target}"
+        );
+        assert_eq!(on_target, case.lands_on_target, "session on the wrong side ({name})");
+        let owner = if case.lands_on_target { target } else { home };
+        assert_eq!(
+            cluster.router.shard_of(sid),
+            Some(owner),
+            "router residency out of sync with the coordinators ({name})"
+        );
+        assert_eq!(
+            cluster.shards[home].pending_exports(),
+            case.stale_stash,
+            "unexpected export-stash residue on the source ({name})"
+        );
+        assert_eq!(cluster.shards[target].pending_exports(), 0, "target stash dirty ({name})");
+
+        // whichever side it landed on, the conversation is intact
+        let g3 = cluster.router.submit_in_session(sid, d3.clone(), 5).unwrap();
+        assert_eq!(g3, turn(&h_ref, sid, d3, 5), "turn 3 diverged after the fault ({name})");
+        let health = cluster.router.health().unwrap();
+        assert_eq!(
+            health.iter().map(|h| h.session_misses).sum::<u64>(),
+            0,
+            "a recovery fell back to re-prefill instead of stored state ({name})"
+        );
+
+        h_ref.shutdown();
+        cluster.shutdown();
+    }
+}

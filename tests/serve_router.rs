@@ -12,8 +12,16 @@
 //! * a version- or engine-tag-mismatched blob is rejected at the
 //!   handshake and never restored;
 //! * drain + add-shard + rebalance churn never changes any conversation's
-//!   tokens.
+//!   tokens;
+//! * streamed turns keep session affinity (the per-token relay runs
+//!   against the home shard) and the stream always equals the buffered
+//!   return;
+//! * an admin drain issued mid-token-stream defers until the stream
+//!   completes — the session is never yanked out from under a live turn.
 
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::thread;
 use std::time::Duration;
 
 use laughing_hyena::config::ServeConfig;
@@ -22,7 +30,10 @@ use laughing_hyena::coordinator::{CoordinatorHandle, SlotEngine};
 use laughing_hyena::engine::recurrent::RecurrentEngine;
 use laughing_hyena::engine::LmShape;
 use laughing_hyena::serve::wire;
-use laughing_hyena::serve::{Cluster, ErrCode, Frame, ShardServer};
+use laughing_hyena::serve::{
+    BreakerConfig, Cluster, ErrCode, FaultAction, FaultPlan, Frame, FrontConfig, FrontServer,
+    Point, Router, Rule, ShardServer,
+};
 use laughing_hyena::session::{SessionState, FORMAT_VERSION};
 
 /// Every shard and the reference coordinator share this seed, so all
@@ -205,4 +216,152 @@ fn drain_and_add_shard_keep_every_conversation_intact() {
     extra.shutdown();
     h_ref.shutdown();
     cluster.shutdown();
+}
+
+/// One wire-level turn through the front door: connect, swallow the
+/// greeting, submit, collect the streamed tokens until `Done`.
+fn front_turn(addr: std::net::SocketAddr, sid: u64, delta: Vec<i32>, max_new: u32) -> Vec<i32> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    match wire::read_frame(&mut s).unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello greeting, got {other:?}"),
+    }
+    wire::write_frame(&mut s, &Frame::SubmitInSession { session: sid, strict: false, max_new, delta })
+        .unwrap();
+    let mut toks = Vec::new();
+    loop {
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Token { token } => toks.push(token),
+            Frame::Done { .. } => return toks,
+            other => panic!("expected Token/Done, got {other:?}"),
+        }
+    }
+}
+
+/// Streamed turns keep session affinity: turn 2's per-token relay runs
+/// against turn 1's shard (a resume hit there, zero misses anywhere),
+/// and in both turns the stream equals the buffered return.
+#[test]
+fn streamed_turns_keep_affinity_and_match_their_buffered_return() {
+    let mut cluster = Cluster::launch_native(2, &shape(), 2, SEED, &cfg()).unwrap();
+    let h_ref = reference();
+    let sid = 0xAF11;
+    let (d1, d2) = (vec![1, 2, 3], vec![9]);
+    let mut s1 = Vec::new();
+    let g1 = cluster
+        .router
+        .submit_in_session_streaming(sid, d1.clone(), 4, |t| s1.push(t))
+        .unwrap();
+    assert_eq!(s1, g1, "turn 1's stream diverged from its return");
+    let home = cluster.router.shard_of(sid).unwrap();
+    let mut s2 = Vec::new();
+    let g2 = cluster
+        .router
+        .submit_in_session_streaming(sid, d2.clone(), 3, |t| s2.push(t))
+        .unwrap();
+    assert_eq!(s2, g2, "turn 2's stream diverged from its return");
+    assert_eq!(
+        cluster.router.shard_of(sid),
+        Some(home),
+        "turn 2 must stream from turn 1's shard"
+    );
+    assert_eq!(g1, turn(&h_ref, sid, d1, 4), "turn 1 diverged");
+    assert_eq!(g2, turn(&h_ref, sid, d2, 3), "turn 2 diverged");
+    let health = cluster.router.health().unwrap();
+    assert_eq!(
+        health[home].session_hits, 1,
+        "turn 2 must resume stored state on the home shard"
+    );
+    assert_eq!(health.iter().map(|h| h.session_misses).sum::<u64>(), 0);
+    h_ref.shutdown();
+    cluster.shutdown();
+}
+
+/// An admin drain issued while a turn is streaming must defer until the
+/// stream completes: the front serializes admin calls behind the same
+/// router the relay holds, so the client sees its full uninterrupted
+/// token stream, and only then does the session migrate off the shard.
+#[test]
+fn mid_stream_drain_defers_until_the_stream_completes() {
+    let shape = shape();
+    let shards: Vec<ShardServer> = (0..2)
+        .map(|_| ShardServer::spawn_native(&shape, 2, SEED, cfg()).unwrap())
+        .collect();
+    let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+    let faults = Arc::new(FaultPlan::new());
+    let router = Router::new_with(&addrs, BreakerConfig::default(), Some(faults.clone())).unwrap();
+    let front =
+        FrontServer::spawn(router, FrontConfig { max_inflight: 4, probe_interval: None }).unwrap();
+    let h_ref = reference();
+    let sid = 0xD8A1;
+    let (d1, d2) = (vec![2, 7, 1], vec![8, 2]);
+
+    // hold the token relay open mid-stream so the drain demonstrably
+    // arrives while the streamed turn is still in flight
+    faults.add_rule(Rule {
+        shard: None,
+        point: Point::TokenStream { after: 2 },
+        action: FaultAction::Delay(Duration::from_millis(300)),
+        times: 1,
+    });
+
+    let (tx, rx) = mpsc::channel();
+    let addr = front.addr();
+    let d1c = d1.clone();
+    let client = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Hello { .. } => {}
+            other => panic!("expected Hello greeting, got {other:?}"),
+        }
+        wire::write_frame(
+            &mut s,
+            &Frame::SubmitInSession { session: sid, strict: false, max_new: 5, delta: d1c },
+        )
+        .unwrap();
+        let mut toks = Vec::new();
+        loop {
+            match wire::read_frame(&mut s).unwrap() {
+                Frame::Token { token } => {
+                    toks.push(token);
+                    let _ = tx.send(());
+                }
+                Frame::Done { .. } => return toks,
+                other => panic!("expected Token/Done, got {other:?}"),
+            }
+        }
+    });
+
+    // first streamed token seen → the turn is in flight; now ask for the
+    // drain.  The lock blocks until the relay finishes, so by the time we
+    // hold the router the turn must be complete and resident.
+    rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let router = front.router();
+    let mut r = router.lock().unwrap();
+    let home = r
+        .shard_of(sid)
+        .expect("the streamed turn must have completed before the drain ran");
+    let moved = r.drain(home).unwrap();
+    assert_eq!(moved, vec![sid], "the drain must migrate the streamed session");
+    assert!(r.sessions_on(home).is_empty(), "drained shard still lists the session");
+    let new_home = r.shard_of(sid).unwrap();
+    assert_ne!(new_home, home, "the session must move off the drained shard");
+    drop(r);
+
+    // the stream was never cut: the client saw the full turn
+    let g1 = client.join().unwrap();
+    assert_eq!(g1, turn(&h_ref, sid, d1, 5), "the streamed-through-drain turn diverged");
+    assert_eq!(faults.rules_pending(), 0, "the staged mid-stream delay never fired");
+
+    // and the conversation continues on the new home, bit-identically
+    let g2 = front_turn(addr, sid, d2.clone(), 4);
+    assert_eq!(g2, turn(&h_ref, sid, d2, 4), "post-drain turn diverged");
+
+    h_ref.shutdown();
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
 }
