@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci chaos lint doc bench bench-decode bench-smoke serve-demo artifacts clean
+.PHONY: help build test verify ci chaos metrics lint doc bench bench-decode bench-smoke serve-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -16,6 +16,8 @@ help:
 	@echo "               + decode bench smoke"
 	@echo "  chaos        fault-injection suite (tests/serve_chaos.rs) under a"
 	@echo "               wall-clock bound; loopback-only, port-0, sandbox-safe"
+	@echo "  metrics      observability suite: obs unit tests + the live-cluster"
+	@echo "               /metrics scrape integration test (tests/serve_metrics.rs)"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
@@ -50,6 +52,7 @@ ci:
 	$(CARGO) test -q
 	$(CARGO) test -q --features simd
 	$(MAKE) chaos
+	$(MAKE) metrics
 	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
@@ -60,6 +63,15 @@ ci:
 # a real recovery-path bug — fail it rather than wedge CI.
 chaos:
 	timeout 420 $(CARGO) test -q --test serve_chaos
+
+# the observability suite: histogram/registry/trace unit tests plus the
+# live-cluster scrape integration test (2 shards + front door, HTTP GET
+# /metrics over a real loopback socket, mid-generation scrape included).
+# Wall-clock-bounded like chaos: a wedged scrape is a routing-lock bug,
+# not something to wait out.  Also the fast loop for obs-layer work.
+metrics:
+	$(CARGO) test -q --lib obs::
+	timeout 420 $(CARGO) test -q --test serve_metrics
 
 # 1-iteration run of the decode bench (keeps its correctness cross-checks,
 # skips the gate and the BENCH_decode.json/CSV writes): proves the bench

@@ -43,8 +43,8 @@ fn main() {
             n_req.to_string(),
             fmt_time(wall),
             format!("{:.0}", (n_req * max_new) as f64 / wall),
-            fmt_time(laughing_hyena::util::stats::percentile(&m.ttft_s, 50.0)),
-            fmt_time(laughing_hyena::util::stats::percentile(&m.total_s, 99.0)),
+            fmt_time(m.ttft.quantile(0.50)),
+            fmt_time(m.e2e.quantile(0.99)),
             format!("{util:.0}"),
         ]);
         handle.shutdown();

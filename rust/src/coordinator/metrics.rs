@@ -1,8 +1,19 @@
-//! Coordinator metrics: counters and latency reservoirs, shared behind a
-//! mutex (the request path touches them once per token batch, not per
-//! request, so contention is negligible — measured in benches/coordinator).
+//! Coordinator metrics: counters and bounded latency histograms, shared
+//! behind a mutex (the request path touches them once per token batch,
+//! not per request, so contention is negligible — measured in
+//! benches/coordinator).
+//!
+//! Latencies live in [`crate::obs::Hist`] — a fixed-bucket log-spaced
+//! histogram — instead of the unbounded `Vec<f64>` reservoirs this
+//! module used to keep, so a coordinator that serves millions of
+//! requests holds the same few kilobytes of metric state as one that
+//! served ten. [`Metrics::export_entries`] flattens everything into the
+//! named-metric form the wire's `MetricsReport` frame ships to the
+//! router for exact cluster-wide merging.
 
 use std::sync::Mutex;
+
+use crate::obs::{Hist, MetricValue};
 
 #[derive(Default, Debug)]
 pub struct MetricsInner {
@@ -11,8 +22,19 @@ pub struct MetricsInner {
     pub tokens_generated: u64,
     pub prefills: u64,
     pub decode_steps: u64,
-    pub ttft_s: Vec<f64>,
-    pub total_s: Vec<f64>,
+    /// Enqueue → first token, bounded histogram.
+    pub ttft: Hist,
+    /// Enqueue → final token, bounded histogram.
+    pub e2e: Hist,
+    /// Enqueue → slot admission, bounded histogram.
+    pub queue_wait: Hist,
+    /// Per-request mean time per output token after the first (TPOT),
+    /// recorded once per finished request with ≥ 2 tokens.
+    pub tpot: Hist,
+    /// Wall time of each prefill batch.
+    pub prefill_time: Hist,
+    /// Requests waiting for a slot right now (gauge).
+    pub queue_depth: u64,
     pub queue_peak: usize,
     /// Session turns resumed from a stored state (no transcript re-prefill).
     pub session_hits: u64,
@@ -40,12 +62,27 @@ impl Metrics {
     pub fn record_enqueue(&self, queue_len: usize) {
         let mut m = self.0.lock().unwrap();
         m.requests_in += 1;
+        m.queue_depth = queue_len as u64;
         m.queue_peak = m.queue_peak.max(queue_len);
+    }
+
+    /// A request left the queue for a slot after `queue_wait` seconds;
+    /// `queue_len` is the depth it left behind.
+    pub fn record_admitted(&self, queue_wait: f64, queue_len: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.queue_wait.record(queue_wait);
+        m.queue_depth = queue_len as u64;
     }
 
     pub fn record_prefill(&self, n: usize) {
         let mut m = self.0.lock().unwrap();
         m.prefills += n as u64;
+    }
+
+    /// Wall time of one prefill batch.
+    pub fn observe_prefill(&self, seconds: f64) {
+        let mut m = self.0.lock().unwrap();
+        m.prefill_time.record(seconds);
     }
 
     pub fn record_decode(&self, tokens: usize) {
@@ -82,13 +119,18 @@ impl Metrics {
         m.session_spills = spills;
     }
 
-    pub fn record_done(&self, ttft: Option<f64>, total: f64) {
+    /// A request finished: `ttft`/`total` are seconds since enqueue,
+    /// `tokens` the generation length (drives the TPOT sample).
+    pub fn record_done(&self, ttft: Option<f64>, total: f64, tokens: usize) {
         let mut m = self.0.lock().unwrap();
         m.requests_done += 1;
         if let Some(t) = ttft {
-            m.ttft_s.push(t);
+            m.ttft.record(t);
+            if tokens > 1 {
+                m.tpot.record((total - t).max(0.0) / (tokens - 1) as f64);
+            }
         }
-        m.total_s.push(total);
+        m.e2e.record(total);
     }
 
     pub fn snapshot(&self) -> MetricsInner {
@@ -99,8 +141,12 @@ impl Metrics {
             tokens_generated: m.tokens_generated,
             prefills: m.prefills,
             decode_steps: m.decode_steps,
-            ttft_s: m.ttft_s.clone(),
-            total_s: m.total_s.clone(),
+            ttft: m.ttft.clone(),
+            e2e: m.e2e.clone(),
+            queue_wait: m.queue_wait.clone(),
+            tpot: m.tpot.clone(),
+            prefill_time: m.prefill_time.clone(),
+            queue_depth: m.queue_depth,
             queue_peak: m.queue_peak,
             session_hits: m.session_hits,
             session_misses: m.session_misses,
@@ -112,9 +158,39 @@ impl Metrics {
         }
     }
 
+    /// Flatten the shard's metrics into `(name, value)` entries under
+    /// the stable `lh_*` names from [`crate::obs::SCHEMA`] — the payload
+    /// of the wire's `MetricsReport` frame. Counters/gauges/histograms
+    /// from different shards merge exactly on the router.
+    pub fn export_entries(&self) -> Vec<(String, MetricValue)> {
+        let m = self.0.lock().unwrap();
+        let c = MetricValue::Counter;
+        let g = MetricValue::Gauge;
+        vec![
+            ("lh_requests_total".into(), c(m.requests_in)),
+            ("lh_requests_done_total".into(), c(m.requests_done)),
+            ("lh_tokens_generated_total".into(), c(m.tokens_generated)),
+            ("lh_prefills_total".into(), c(m.prefills)),
+            ("lh_decode_steps_total".into(), c(m.decode_steps)),
+            ("lh_queue_depth".into(), g(m.queue_depth)),
+            ("lh_queue_peak".into(), g(m.queue_peak as u64)),
+            ("lh_ttft_seconds".into(), MetricValue::Hist(m.ttft.clone())),
+            ("lh_e2e_seconds".into(), MetricValue::Hist(m.e2e.clone())),
+            ("lh_queue_wait_seconds".into(), MetricValue::Hist(m.queue_wait.clone())),
+            ("lh_tpot_seconds".into(), MetricValue::Hist(m.tpot.clone())),
+            ("lh_prefill_seconds".into(), MetricValue::Hist(m.prefill_time.clone())),
+            ("lh_session_hits_total".into(), c(m.session_hits)),
+            ("lh_session_misses_total".into(), c(m.session_misses)),
+            ("lh_prefill_tokens_saved_total".into(), c(m.prefill_tokens_saved)),
+            ("lh_sessions_resident".into(), g(m.sessions_resident)),
+            ("lh_session_bytes".into(), g(m.session_bytes_held)),
+            ("lh_session_evictions_total".into(), c(m.session_evictions)),
+            ("lh_session_spills_total".into(), c(m.session_spills)),
+        ]
+    }
+
     pub fn report(&self) -> String {
         let m = self.snapshot();
-        let p = |v: &Vec<f64>, q| crate::util::stats::percentile(v, q);
         let mut line = format!(
             "requests {}/{} | tokens {} | prefills {} | decode steps {} | \
              ttft p50 {:.1}ms p99 {:.1}ms | e2e p50 {:.1}ms p99 {:.1}ms | queue peak {}",
@@ -123,10 +199,10 @@ impl Metrics {
             m.tokens_generated,
             m.prefills,
             m.decode_steps,
-            p(&m.ttft_s, 50.0) * 1e3,
-            p(&m.ttft_s, 99.0) * 1e3,
-            p(&m.total_s, 50.0) * 1e3,
-            p(&m.total_s, 99.0) * 1e3,
+            m.ttft.quantile(0.50) * 1e3,
+            m.ttft.quantile(0.99) * 1e3,
+            m.e2e.quantile(0.50) * 1e3,
+            m.e2e.quantile(0.99) * 1e3,
             m.queue_peak
         );
         if m.session_hits + m.session_misses > 0 || m.session_bytes_held > 0 {
@@ -157,7 +233,7 @@ mod tests {
         m.record_enqueue(5);
         m.record_prefill(2);
         m.record_decode(8);
-        m.record_done(Some(0.01), 0.05);
+        m.record_done(Some(0.01), 0.05, 8);
         let s = m.snapshot();
         assert_eq!(s.requests_in, 2);
         assert_eq!(s.queue_peak, 5);
@@ -186,5 +262,57 @@ mod tests {
         let r = m.report();
         assert!(r.contains("sessions hit/miss 2/1"), "{r}");
         assert!(r.contains("prefill tokens saved 200"), "{r}");
+    }
+
+    #[test]
+    fn latency_memory_is_bounded() {
+        // the old reservoirs grew a Vec entry per request; histograms
+        // keep the struct size fixed no matter the traffic
+        let m = Metrics::default();
+        for i in 0..50_000 {
+            m.record_done(Some(0.002 + (i % 7) as f64 * 1e-4), 0.04, 16);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.ttft.count(), 50_000);
+        assert_eq!(s.e2e.count(), 50_000);
+        assert_eq!(s.tpot.count(), 50_000);
+        assert!(std::mem::size_of::<MetricsInner>() < 4096);
+        // quantiles stay in range of the recorded values
+        let p50 = s.ttft.quantile(0.5);
+        assert!(p50 > 1e-3 && p50 < 1e-2, "{p50}");
+    }
+
+    #[test]
+    fn queue_and_tpot_instrumentation() {
+        let m = Metrics::default();
+        m.record_enqueue(4);
+        m.record_admitted(0.003, 3);
+        m.observe_prefill(0.010);
+        // 9 tokens over (0.1 - 0.01) s after the first token -> TPOT
+        // samples land near 11.25 ms
+        m.record_done(Some(0.01), 0.1, 9);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 3);
+        assert_eq!(s.queue_wait.count(), 1);
+        assert_eq!(s.prefill_time.count(), 1);
+        assert_eq!(s.tpot.count(), 1);
+        let tpot = s.tpot.quantile(0.5);
+        assert!(tpot > 0.009 && tpot < 0.020, "{tpot}");
+        // single-token requests contribute no TPOT sample
+        m.record_done(Some(0.01), 0.01, 1);
+        assert_eq!(m.snapshot().tpot.count(), 1);
+    }
+
+    #[test]
+    fn export_entries_use_schema_names() {
+        let m = Metrics::default();
+        m.record_enqueue(1);
+        m.record_done(Some(0.01), 0.05, 4);
+        for (name, value) in m.export_entries() {
+            let family = name.split('{').next().unwrap();
+            let declared = crate::obs::registry::schema_kind(family)
+                .unwrap_or_else(|| panic!("{family} missing from obs SCHEMA"));
+            assert_eq!(value.kind(), declared, "{family}");
+        }
     }
 }

@@ -24,6 +24,7 @@ use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
 pub use super::state::SlotEngine;
 use crate::config::ServeConfig;
+use crate::obs::{Trace, TraceRing};
 use crate::session::{SessionError, SessionState, Store, StoreConfig};
 
 enum Msg {
@@ -109,6 +110,9 @@ pub struct CoordinatorHandle {
     tx: Sender<Msg>,
     join: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// Bounded ring of per-request stage traces (enqueue → admit →
+    /// prefill → first token → done), pushed at retire.
+    pub traces: Arc<TraceRing>,
     next_id: AtomicU64,
 }
 
@@ -342,6 +346,10 @@ struct Sched {
     /// Transcript reads that arrived mid-turn; fulfilled (non-destructively)
     /// when the session quiesces, so the reply reflects the whole turn.
     pending_transcript: HashMap<u64, Vec<Sender<Option<Vec<i32>>>>>,
+    /// Stage offsets (admit µs, prefill µs) per in-flight request id,
+    /// captured at admission/prefill and drained into the trace ring at
+    /// retire — bounded by the slot count, never by traffic.
+    stage_us: HashMap<u64, (u64, u64)>,
     shutdown: bool,
 }
 
@@ -461,7 +469,9 @@ where
 {
     let (tx, rx) = channel::<Msg>();
     let metrics = Arc::new(Metrics::default());
+    let traces = Arc::new(TraceRing::default());
     let m = metrics.clone();
+    let tr = traces.clone();
     let join = std::thread::spawn(move || {
         let mut engine = make_engine();
         let n_slots = engine.n_slots();
@@ -475,6 +485,7 @@ where
             pending_end: HashSet::new(),
             pending_export: HashMap::new(),
             pending_transcript: HashMap::new(),
+            stage_us: HashMap::new(),
             shutdown: false,
         };
         loop {
@@ -535,6 +546,13 @@ where
                 let mut prefill_jobs: Vec<(usize, Vec<i32>)> = Vec::new();
                 let mut resume_jobs: Vec<(usize, Vec<i32>)> = Vec::new();
                 for (slot, delta) in admitted {
+                    // queue wait ends the moment the slot is taken; the
+                    // offset is remembered for the retire-time trace
+                    if let Slot::Busy { req, .. } = &s.batcher.slots[slot] {
+                        let wait = req.enqueued.elapsed().as_secs_f64();
+                        m.record_admitted(wait, s.batcher.queue_len());
+                        s.stage_us.insert(req.id, ((wait * 1e6) as u64, 0));
+                    }
                     let id = match s.batcher.slots[slot].session() {
                         Some(id) => id,
                         None => {
@@ -574,9 +592,16 @@ where
                 }
                 if !prefill_jobs.is_empty() {
                     m.record_prefill(prefill_jobs.len());
+                    let t_prefill = Instant::now();
                     let firsts = engine.prefill_slots(&prefill_jobs);
+                    m.observe_prefill(t_prefill.elapsed().as_secs_f64());
                     for (slot, tok) in firsts {
                         record_first_token(&mut s.batcher, slot, tok);
+                        if let Slot::Busy { req, .. } = &s.batcher.slots[slot] {
+                            if let Some(st) = s.stage_us.get_mut(&req.id) {
+                                st.1 = req.enqueued.elapsed().as_micros() as u64;
+                            }
+                        }
                     }
                 }
             }
@@ -651,7 +676,19 @@ where
                             }
                         }
                         let total = req.enqueued.elapsed().as_secs_f64();
-                        m.record_done(ttft, total);
+                        m.record_done(ttft, total, generated.len());
+                        let (admit_us, prefill_us) =
+                            s.stage_us.remove(&req.id).unwrap_or_default();
+                        tr.push(Trace {
+                            id: req.id,
+                            session: req.session,
+                            admit_us,
+                            prefill_us,
+                            first_token_us: (ttft.unwrap_or(total) * 1e6) as u64,
+                            done_us: (total * 1e6) as u64,
+                            tokens: generated.len() as u32,
+                            ok: true,
+                        });
                         let _ = req.reply.send(GenResponse {
                             id: req.id,
                             tokens: generated,
@@ -664,7 +701,7 @@ where
             }
         }
     });
-    CoordinatorHandle { tx, join: Some(join), metrics, next_id: AtomicU64::new(0) }
+    CoordinatorHandle { tx, join: Some(join), metrics, traces, next_id: AtomicU64::new(0) }
 }
 
 #[cfg(test)]
@@ -704,6 +741,28 @@ mod tests {
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(resp.tokens.len(), 5);
         assert!(resp.ttft_s <= resp.total_s);
+        h.shutdown();
+    }
+
+    #[test]
+    fn traces_record_stage_offsets_per_request() {
+        let h = handle(2);
+        let rx = h.submit(vec![1, 2, 3], 4).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let traces = h.traces.recent();
+        assert_eq!(traces.len(), 1, "retire pushes exactly one trace");
+        let t = &traces[0];
+        assert_eq!(t.id, resp.id);
+        assert_eq!(t.session, None);
+        assert_eq!(t.tokens, 4);
+        assert!(t.ok);
+        assert!(t.admit_us <= t.done_us, "{t:?}");
+        assert!(t.first_token_us <= t.done_us, "{t:?}");
+        assert!(t.prefill_us > 0, "one-shot prompts go through prefill: {t:?}");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.queue_wait.count(), 1);
+        assert_eq!(m.prefill_time.count(), 1);
+        assert_eq!(m.queue_depth, 0, "queue drained after admission");
         h.shutdown();
     }
 

@@ -193,13 +193,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// The sharded serving demo: a router over `n_shards` in-process shard
-/// servers on loopback sockets, interleaved multi-turn sessions with
+/// servers on loopback sockets, fronted by a [`FrontServer`] whose HTTP
+/// sibling listener exposes `/metrics`, `/admin` and `/traces` for the
+/// demo's lifetime.  Interleaved multi-turn sessions with
 /// consistent-hash affinity, an optional live migration mid-conversation
 /// (`--migrate`), an optional injected shard kill with transcript-mirror
 /// resurrection (`--chaos`), and an optional shard drain at the end
 /// (`--drain I`), closing with the per-shard + aggregated health report.
 fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Result<()> {
-    use laughing_hyena::serve::{BreakerConfig, Cluster, FaultPlan};
+    use laughing_hyena::serve::{
+        AdminReport, BreakerConfig, Cluster, FaultPlan, FrontConfig, FrontServer,
+    };
     let shape_name = args.get_str("shape", "nano");
     let shape = LmShape::bench(shape_name)
         .ok_or_else(|| anyhow::anyhow!("unknown bench shape '{shape_name}'"))?;
@@ -227,7 +231,7 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
     } else {
         BreakerConfig::default()
     };
-    let mut cluster = Cluster::launch_native_with(
+    let cluster = Cluster::launch_native_with(
         n_shards,
         &shape,
         slots,
@@ -236,32 +240,45 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
         breaker_cfg,
         faults.clone(),
     )?;
+    // hand the router to a front server so the demo cluster is scrapeable
+    // while it runs; the demo itself drives turns through the same router
+    // lock the front's wire connections use
+    let (shards, cluster_router) = cluster.into_parts();
+    let front = FrontServer::spawn(cluster_router, FrontConfig::default())?;
+    println!(
+        "observability: scrape http://{addr}/metrics (Prometheus text); \
+         dashboard at http://{addr}/admin, recent traces at http://{addr}/traces",
+        addr = front.http_addr()
+    );
+    let router = front.router();
     let t0 = std::time::Instant::now();
     for t in 0..turns {
         for s in 0..sessions {
             let sid = s as u64;
             let delta = vec![1 + ((s + t) % 32) as i32; 6];
-            let toks = cluster.router.submit_in_session(sid, delta, max_new)?;
+            let mut r = router.lock().unwrap();
+            let toks = r.submit_in_session(sid, delta, max_new)?;
             println!(
                 "session {s:>3} turn {t}: {} tokens on shard {}",
                 toks.len(),
-                cluster.router.shard_of(sid).map(|i| i.to_string()).unwrap_or_default()
+                r.shard_of(sid).map(|i| i.to_string()).unwrap_or_default()
             );
         }
         if t == 0 && migrate && sessions > 0 {
             // live-migrate session 0 between turns: the next turn resumes
             // its O(1) state on another shard, bit-identical
-            let from = cluster.router.shard_of(0).unwrap_or(0);
+            let mut r = router.lock().unwrap();
+            let from = r.shard_of(0).unwrap_or(0);
             let to = (from + 1) % n_shards;
-            let bytes = cluster.router.migrate(0, to)?;
+            let bytes = r.migrate(0, to)?;
             println!("migrated session 0: shard {from} -> {to} ({bytes} state bytes shipped)");
         }
         if t == 0 && sessions > 0 {
-            if let (Some(plan), Some(home)) = (&faults, cluster.router.shard_of(0)) {
+            if let (Some(plan), Some(home)) = (&faults, router.lock().unwrap().shard_of(0)) {
                 // kill session 0's home shard between turns: the next
                 // turn is resurrected from the router's transcript
                 // mirror on a surviving shard, token-identical
-                plan.kill(cluster.shards[home].addr());
+                plan.kill(shards[home].addr());
                 println!(
                     "chaos: killed shard {home} (session 0's home) — the next turn \
                      resurrects the session from the transcript mirror"
@@ -270,23 +287,26 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
         }
     }
     if let Some(plan) = &faults {
-        let states: Vec<_> = (0..n_shards)
-            .filter_map(|i| cluster.router.breaker_state(i))
-            .collect();
+        let mut r = router.lock().unwrap();
+        let states: Vec<_> = (0..n_shards).filter_map(|i| r.breaker_state(i)).collect();
         println!("circuit breakers after the kill: {states:?}");
-        for s in &cluster.shards {
+        for s in &shards {
             plan.revive(s.addr());
         }
-        let states = cluster.router.probe_all();
+        let states = r.probe_all();
         println!("revived all shards; circuits after a health probe: {states:?}");
     }
     if let Some(idx) = args.get("drain").and_then(|v| v.parse::<usize>().ok()) {
-        let moved = cluster.router.drain(idx)?;
+        let moved = router.lock().unwrap().drain(idx)?;
         println!("drained shard {idx}: migrated {} resident sessions away", moved.len());
     }
-    println!("\nper-shard health:\n{}", cluster.report()?);
+    println!("\nper-shard health:\n{}", AdminReport::collect(&mut router.lock().unwrap())?);
     println!("wall {:.2}s", t0.elapsed().as_secs_f64());
-    cluster.shutdown();
+    drop(router);
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
     Ok(())
 }
 

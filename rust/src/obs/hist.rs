@@ -1,0 +1,268 @@
+//! Fixed-bucket log-spaced latency histogram with exact merge.
+//!
+//! Every latency the serving stack records (TTFT, per-token TPOT, queue
+//! wait, prefill time, route round trips) lands in a [`Hist`]: a fixed
+//! array of [`BUCKETS`] counters whose upper edges grow geometrically
+//! (factor √2) from [`LOWEST`] seconds. Memory is bounded regardless of
+//! how many requests are observed — this replaces the unbounded
+//! `Vec<f64>` latency reservoirs the coordinator used to keep — and two
+//! histograms recorded on different shards merge *exactly*: bucket
+//! counts, totals, and sums are plain additions, never re-sampling, so
+//! the router can sum per-shard histograms into one cluster histogram
+//! whose quantiles are as sharp as any single shard's.
+//!
+//! Quantiles are read by a cumulative walk and resolve to the target
+//! bucket's upper edge: the reported p99 is an upper bound that is tight
+//! to within one bucket width (a factor of √2 ≈ 1.41). The bucket edges
+//! are a compile-time constant of this module, identical on every shard
+//! and on the router, which is what makes the merge well-defined.
+
+/// Number of buckets. With √2 growth from [`LOWEST`] the finite edges
+/// span 10 µs … ~1342 s (2^27 × 10 µs) before the overflow bucket; 56
+/// `u64` counters keep a histogram under half a kilobyte.
+pub const BUCKETS: usize = 56;
+
+/// Upper edge of bucket 0, in seconds (10 µs).
+const LOWEST: f64 = 1e-5;
+
+/// Geometric growth factor between consecutive bucket upper edges.
+const GROWTH: f64 = std::f64::consts::SQRT_2;
+
+/// Upper edge (in seconds) of bucket `i`. The last bucket is the
+/// overflow bucket and reports `+∞`. Computed by repeated
+/// multiplication so every caller (bucketing, quantiles, Prometheus
+/// rendering) sees bit-identical edges.
+pub fn bucket_upper(i: usize) -> f64 {
+    if i + 1 >= BUCKETS {
+        return f64::INFINITY;
+    }
+    let mut u = LOWEST;
+    for _ in 0..i {
+        u *= GROWTH;
+    }
+    u
+}
+
+/// Bucket index for a sample. Zero, negative, and NaN samples clamp
+/// into bucket 0; anything above the top finite edge lands in the
+/// overflow bucket.
+fn bucket_of(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let mut upper = LOWEST;
+    for i in 0..BUCKETS - 1 {
+        if v <= upper {
+            return i;
+        }
+        upper *= GROWTH;
+    }
+    BUCKETS - 1
+}
+
+/// Representative value reported for a quantile landing in bucket `i`:
+/// the bucket's upper edge, except the overflow bucket, which reports
+/// its (finite) lower edge so quantiles never return infinity.
+fn representative(i: usize) -> f64 {
+    if i + 1 >= BUCKETS {
+        let mut u = LOWEST;
+        for _ in 0..BUCKETS - 2 {
+            u *= GROWTH;
+        }
+        u
+    } else {
+        bucket_upper(i)
+    }
+}
+
+/// A mergeable latency histogram over the fixed log-spaced bucket grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0; BUCKETS], count: 0, sum: 0.0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample, in seconds.
+    pub fn record(&mut self, seconds: f64) {
+        self.counts[bucket_of(seconds)] += 1;
+        self.count += 1;
+        if seconds.is_finite() {
+            self.sum += seconds.max(0.0);
+        }
+    }
+
+    /// Fold another histogram into this one. Exact: per-bucket counts
+    /// and the total count add as integers (the sum adds as a float, so
+    /// it is exact up to addition order).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded samples, in seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]`: the upper edge of the first bucket at
+    /// which the cumulative count reaches `ceil(q · count)`. Returns
+    /// `0.0` on an empty histogram (matching what the old reservoir
+    /// percentile reported before any traffic).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return representative(i);
+            }
+        }
+        representative(BUCKETS - 1)
+    }
+
+    /// Raw per-bucket counts, for wire encoding and rendering.
+    pub fn bucket_counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Rebuild a histogram from wire-decoded parts.
+    pub fn from_raw(counts: [u64; BUCKETS], count: u64, sum: f64) -> Hist {
+        Hist { counts, count, sum }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_is_bounded_and_small() {
+        // the whole point of the satellite fix: a histogram's footprint
+        // is a compile-time constant, not a function of traffic
+        assert!(std::mem::size_of::<Hist>() <= 512);
+        let mut h = Hist::new();
+        for i in 0..100_000 {
+            h.record(1e-4 * (1 + i % 97) as f64);
+        }
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn quantile_brackets_the_true_value_within_one_bucket() {
+        let mut h = Hist::new();
+        for _ in 0..1000 {
+            h.record(0.010);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        // conservative upper bound, tight to within the √2 growth factor
+        assert!(p50 >= 0.010 && p50 <= 0.010 * GROWTH * 1.0001, "{p50}");
+        assert_eq!(p50, p99);
+    }
+
+    #[test]
+    fn outliers_clamp_instead_of_panicking() {
+        let mut h = Hist::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        h.record(1e12);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bucket_counts()[0], 3);
+        assert_eq!(h.bucket_counts()[BUCKETS - 1], 2);
+        // sum skips non-finite and negative values
+        assert_eq!(h.sum(), 1e12);
+        assert!(h.quantile(1.0).is_finite());
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn edges_are_monotone_and_shared() {
+        let mut prev = 0.0;
+        for i in 0..BUCKETS - 1 {
+            let u = bucket_upper(i);
+            assert!(u > prev, "bucket {i}: {u} <= {prev}");
+            prev = u;
+        }
+        assert!(bucket_upper(BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        // merging shard histograms must equal one histogram that saw the
+        // concatenated stream: identical bucket counts and totals
+        crate::util::prop::check("hist merge is exact", 64, |rng| {
+            let mut a = Hist::new();
+            let mut b = Hist::new();
+            let mut whole = Hist::new();
+            for _ in 0..rng.below(200) {
+                let v = rng.uniform() * 10.0;
+                a.record(v);
+                whole.record(v);
+            }
+            for _ in 0..rng.below(200) {
+                let v = rng.uniform() * 0.01;
+                b.record(v);
+                whole.record(v);
+            }
+            let mut merged = a.clone();
+            merged.merge(&b);
+            if merged.bucket_counts() != whole.bucket_counts() {
+                return Err("bucket counts differ".into());
+            }
+            if merged.count() != whole.count() {
+                return Err("totals differ".into());
+            }
+            let ds = (merged.sum() - whole.sum()).abs();
+            if ds > 1e-9 * (1.0 + whole.sum().abs()) {
+                return Err(format!("sums differ by {ds}"));
+            }
+            for q in [0.5, 0.9, 0.99] {
+                if merged.quantile(q) != whole.quantile(q) {
+                    return Err(format!("q{q} differs"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

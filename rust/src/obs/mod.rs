@@ -1,0 +1,28 @@
+//! Dependency-free observability core for the serving stack.
+//!
+//! Three pieces, threaded through every serving layer:
+//!
+//! * [`hist`] — a mergeable fixed-bucket log-spaced latency histogram:
+//!   bounded memory per metric, p50/p90/p99 extraction, and *exact*
+//!   merge so per-shard histograms sum into cluster histograms.
+//! * [`registry`] — named counters/gauges/histograms behind stable
+//!   `lh_*` metric names (declared once in [`registry::SCHEMA`]),
+//!   snapshotable, mergeable, and renderable as Prometheus text.
+//! * [`trace`] — per-request stage timelines (enqueue → admit →
+//!   prefill → first token → done) in a bounded ring, rendered as JSON
+//!   lines.
+//!
+//! The flow: each shard's coordinator records into its own counters and
+//! histograms; a `Metrics` wire frame pulls a shard's snapshot to the
+//! router, which merges all shards exactly and folds in its own
+//! routing/breaker/migration metrics; the front door serves the merged
+//! snapshot at `GET /metrics` (Prometheus text), a human dashboard at
+//! `GET /admin`, and recent traces at `GET /traces`.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{bucket_upper, Hist, BUCKETS};
+pub use registry::{render_prometheus, MetricKind, MetricValue, Registry, Snapshot, SCHEMA};
+pub use trace::{Trace, TraceRing, DEFAULT_TRACE_CAP};

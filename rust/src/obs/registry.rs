@@ -1,0 +1,451 @@
+//! Named metric registry: counters, gauges, and histograms keyed by
+//! stable metric names, with exact snapshot merging and Prometheus text
+//! exposition.
+//!
+//! The registry is deliberately schema-first: every metric name the
+//! codebase emits is declared once in [`SCHEMA`] with its kind and help
+//! text, and a unit test fails if the table ever carries a duplicate.
+//! At runtime the registry is forgiving instead of panicking — an
+//! operation against a name that already holds a different kind is
+//! dropped and the name is remembered in a conflict set, so a
+//! mis-registered metric shows up in tests (and in `/metrics` as a
+//! `lh_metric_conflicts` gauge) without ever taking down a serving
+//! process.
+//!
+//! Keys may carry one Prometheus label inline, e.g.
+//! `lh_route_seconds{shard="0"}`: everything before the first `{` is the
+//! metric family name (used for `# TYPE` lines and schema lookup), the
+//! braced remainder is emitted verbatim as the label set. Snapshots are
+//! `BTreeMap`-backed so iteration — and therefore the rendered text —
+//! is deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::obs::hist::{bucket_upper, Hist, BUCKETS};
+
+/// The kind of a metric family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone event count; rendered as a Prometheus counter.
+    Counter,
+    /// Point-in-time level; rendered as a Prometheus gauge.
+    Gauge,
+    /// Log-bucketed latency distribution; rendered as a Prometheus
+    /// histogram (`_bucket`/`_sum`/`_count` series).
+    Hist,
+}
+
+impl MetricKind {
+    fn prom_type(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Hist => "histogram",
+        }
+    }
+}
+
+/// One metric's current value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Hist(Hist),
+}
+
+impl MetricValue {
+    pub fn kind(&self) -> MetricKind {
+        match self {
+            MetricValue::Counter(_) => MetricKind::Counter,
+            MetricValue::Gauge(_) => MetricKind::Gauge,
+            MetricValue::Hist(_) => MetricKind::Hist,
+        }
+    }
+}
+
+/// Every metric family the crate emits: `(family name, kind, help)`.
+/// One row per name — `schema_is_duplicate_free` enforces it — so two
+/// call sites can never ship the same name with different kinds.
+pub const SCHEMA: &[(&str, MetricKind, &str)] = &[
+    // coordinator (per shard, merged by the router)
+    ("lh_requests_total", MetricKind::Counter, "requests accepted by the coordinator"),
+    ("lh_requests_done_total", MetricKind::Counter, "requests fully generated"),
+    ("lh_tokens_generated_total", MetricKind::Counter, "tokens emitted by the decode loop"),
+    ("lh_prefills_total", MetricKind::Counter, "prompt prefill jobs run"),
+    ("lh_decode_steps_total", MetricKind::Counter, "batched decode steps run"),
+    ("lh_queue_depth", MetricKind::Gauge, "requests waiting for a slot right now"),
+    ("lh_queue_peak", MetricKind::Gauge, "deepest admission queue seen"),
+    ("lh_ttft_seconds", MetricKind::Hist, "enqueue to first token"),
+    ("lh_e2e_seconds", MetricKind::Hist, "enqueue to final token"),
+    ("lh_queue_wait_seconds", MetricKind::Hist, "enqueue to slot admission"),
+    ("lh_tpot_seconds", MetricKind::Hist, "per-request mean time per output token after the first"),
+    ("lh_prefill_seconds", MetricKind::Hist, "wall time of each prefill batch"),
+    // session store (per shard, merged by the router)
+    ("lh_session_hits_total", MetricKind::Counter, "turns resumed from stored O(1) state"),
+    ("lh_session_misses_total", MetricKind::Counter, "turns that re-prefilled a lost state"),
+    ("lh_prefill_tokens_saved_total", MetricKind::Counter, "prefill tokens skipped via state resume"),
+    ("lh_sessions_resident", MetricKind::Gauge, "sessions RAM-resident in the store"),
+    ("lh_session_bytes", MetricKind::Gauge, "bytes resident in the session store"),
+    ("lh_session_evictions_total", MetricKind::Counter, "session-store evictions"),
+    ("lh_session_spills_total", MetricKind::Counter, "evictions persisted to the spill dir"),
+    // router
+    ("lh_route_seconds", MetricKind::Hist, "router-observed round trip per routed turn"),
+    ("lh_migration_attempts_total", MetricKind::Counter, "live session migrations started"),
+    ("lh_migration_commits_total", MetricKind::Counter, "migrations committed on the target"),
+    ("lh_migration_aborts_total", MetricKind::Counter, "migrations rolled back to the source"),
+    ("lh_resurrections_total", MetricKind::Counter, "sessions rebuilt from the transcript mirror"),
+    ("lh_breaker_state", MetricKind::Gauge, "circuit state per shard: 0 closed, 1 half-open, 2 open"),
+    ("lh_breaker_opened_total", MetricKind::Counter, "circuit transitions into open"),
+    ("lh_breaker_half_opened_total", MetricKind::Counter, "open circuits that admitted a probe"),
+    ("lh_breaker_closed_total", MetricKind::Counter, "circuits re-closed by a success"),
+    ("lh_fault_hits_total", MetricKind::Counter, "fault-injection rules fired (chaos runs)"),
+    ("lh_scrape_errors_total", MetricKind::Counter, "shards that failed to answer a metrics pull"),
+    // front door
+    ("lh_front_requests_total", MetricKind::Counter, "generation requests reaching the front door"),
+    ("lh_front_over_capacity_total", MetricKind::Counter, "requests refused by the in-flight gate"),
+    ("lh_front_errors_total", MetricKind::Counter, "generation relays that ended in an error frame"),
+    ("lh_front_in_flight", MetricKind::Gauge, "generations currently relayed by the front door"),
+    ("lh_stream_token_seconds", MetricKind::Hist, "front-door inter-token gap on streamed replies"),
+    ("lh_metric_conflicts", MetricKind::Gauge, "metric names used with conflicting kinds"),
+];
+
+/// Kind declared in [`SCHEMA`] for a family name, if any.
+pub fn schema_kind(family: &str) -> Option<MetricKind> {
+    SCHEMA.iter().find(|(n, _, _)| *n == family).map(|(_, k, _)| *k)
+}
+
+fn schema_help(family: &str) -> Option<&'static str> {
+    SCHEMA.iter().find(|(n, _, _)| *n == family).map(|(_, _, h)| *h)
+}
+
+/// Split a key into `(family, labels)`: `lh_x{shard="0"}` →
+/// `("lh_x", Some("shard=\"0\""))`.
+fn split_key(key: &str) -> (&str, Option<&str>) {
+    match key.find('{') {
+        Some(i) => {
+            let rest = &key[i + 1..];
+            (&key[..i], Some(rest.strip_suffix('}').unwrap_or(rest)))
+        }
+        None => (key, None),
+    }
+}
+
+/// A point-in-time set of named metric values. Mergeable: counters and
+/// gauges add, histograms merge bucket-exactly, so per-shard snapshots
+/// sum into a cluster snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub entries: BTreeMap<String, MetricValue>,
+}
+
+impl Snapshot {
+    /// Add `delta` to a counter. Returns `false` (and changes nothing)
+    /// if the name already holds a non-counter.
+    pub fn add_counter(&mut self, name: &str, delta: u64) -> bool {
+        match self.entries.get_mut(name) {
+            None => {
+                self.entries.insert(name.to_string(), MetricValue::Counter(delta));
+                true
+            }
+            Some(MetricValue::Counter(c)) => {
+                *c += delta;
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    /// Set a gauge to `v`. Returns `false` on a kind conflict.
+    pub fn set_gauge(&mut self, name: &str, v: u64) -> bool {
+        match self.entries.get_mut(name) {
+            None => {
+                self.entries.insert(name.to_string(), MetricValue::Gauge(v));
+                true
+            }
+            Some(MetricValue::Gauge(g)) => {
+                *g = v;
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    /// Record a latency sample into a histogram. Returns `false` on a
+    /// kind conflict.
+    pub fn observe(&mut self, name: &str, seconds: f64) -> bool {
+        match self.entries.get_mut(name) {
+            None => {
+                let mut h = Hist::new();
+                h.record(seconds);
+                self.entries.insert(name.to_string(), MetricValue::Hist(h));
+                true
+            }
+            Some(MetricValue::Hist(h)) => {
+                h.record(seconds);
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    /// Merge one entry: counters add, gauges add (so per-shard levels
+    /// sum into a cluster level), histograms merge. Returns `false` on
+    /// a kind conflict.
+    pub fn merge_entry(&mut self, name: &str, v: MetricValue) -> bool {
+        match (self.entries.get_mut(name), v) {
+            (None, v) => {
+                self.entries.insert(name.to_string(), v);
+                true
+            }
+            (Some(MetricValue::Counter(a)), MetricValue::Counter(b)) => {
+                *a += b;
+                true
+            }
+            (Some(MetricValue::Gauge(a)), MetricValue::Gauge(b)) => {
+                *a += b;
+                true
+            }
+            (Some(MetricValue::Hist(a)), MetricValue::Hist(b)) => {
+                a.merge(&b);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Merge a whole snapshot; returns the names that conflicted (and
+    /// were skipped).
+    pub fn merge(&mut self, other: &Snapshot) -> Vec<String> {
+        let mut conflicts = Vec::new();
+        for (name, v) in &other.entries {
+            if !self.merge_entry(name, v.clone()) {
+                conflicts.push(name.clone());
+            }
+        }
+        conflicts
+    }
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    snap: Snapshot,
+    conflicts: BTreeSet<String>,
+}
+
+/// Thread-safe live registry: the mutable front end over a [`Snapshot`].
+/// Kind conflicts never panic; they are recorded and surfaced via
+/// [`Registry::conflicts`] and the `lh_metric_conflicts` gauge.
+#[derive(Default)]
+pub struct Registry(Mutex<RegistryInner>);
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, delta: u64) {
+        let mut r = self.0.lock().unwrap();
+        if !r.snap.add_counter(name, delta) {
+            r.conflicts.insert(name.to_string());
+        }
+    }
+
+    pub fn set_gauge(&self, name: &str, v: u64) {
+        let mut r = self.0.lock().unwrap();
+        if !r.snap.set_gauge(name, v) {
+            r.conflicts.insert(name.to_string());
+        }
+    }
+
+    pub fn observe(&self, name: &str, seconds: f64) {
+        let mut r = self.0.lock().unwrap();
+        if !r.snap.observe(name, seconds) {
+            r.conflicts.insert(name.to_string());
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let r = self.0.lock().unwrap();
+        let mut s = r.snap.clone();
+        if !r.conflicts.is_empty() {
+            s.set_gauge("lh_metric_conflicts", r.conflicts.len() as u64);
+        }
+        s
+    }
+
+    /// Names that were ever used with two different kinds.
+    pub fn conflicts(&self) -> Vec<String> {
+        self.0.lock().unwrap().conflicts.iter().cloned().collect()
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format (v0.0.4):
+/// `# HELP`/`# TYPE` per family, `_bucket{le=...}`/`_sum`/`_count`
+/// series for histograms, cumulative bucket counts, `+Inf` last.
+/// Deterministic for a given snapshot.
+pub fn render_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut typed: BTreeSet<String> = BTreeSet::new();
+    for (key, val) in &snap.entries {
+        let (family, labels) = split_key(key);
+        if typed.insert(family.to_string()) {
+            if let Some(help) = schema_help(family) {
+                out.push_str(&format!("# HELP {family} {help}\n"));
+            }
+            out.push_str(&format!("# TYPE {family} {}\n", val.kind().prom_type()));
+        }
+        let label_sample = |extra: &str| -> String {
+            match (labels, extra.is_empty()) {
+                (Some(l), true) => format!("{{{l}}}"),
+                (Some(l), false) => format!("{{{l},{extra}}}"),
+                (None, true) => String::new(),
+                (None, false) => format!("{{{extra}}}"),
+            }
+        };
+        match val {
+            MetricValue::Counter(c) | MetricValue::Gauge(c) => {
+                out.push_str(&format!("{family}{} {c}\n", label_sample("")));
+            }
+            MetricValue::Hist(h) => {
+                let mut cum = 0u64;
+                for (i, &c) in h.bucket_counts().iter().enumerate() {
+                    cum += c;
+                    let le = if i + 1 >= BUCKETS {
+                        "+Inf".to_string()
+                    } else {
+                        format!("{}", bucket_upper(i))
+                    };
+                    out.push_str(&format!(
+                        "{family}_bucket{} {cum}\n",
+                        label_sample(&format!("le=\"{le}\""))
+                    ));
+                }
+                out.push_str(&format!("{family}_sum{} {}\n", label_sample(""), h.sum()));
+                out.push_str(&format!("{family}_count{} {}\n", label_sample(""), h.count()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_is_duplicate_free() {
+        // the registry-uniqueness gate: two call sites can only collide
+        // on a name by adding a duplicate row here, which this rejects
+        let mut seen = BTreeSet::new();
+        for (name, _, help) in SCHEMA {
+            assert!(seen.insert(*name), "metric name declared twice in SCHEMA: {name}");
+            assert!(!help.is_empty(), "empty help for {name}");
+            assert!(name.starts_with("lh_"), "metric outside the lh_ namespace: {name}");
+        }
+    }
+
+    #[test]
+    fn kind_conflicts_are_detected_not_panics() {
+        let r = Registry::new();
+        r.inc("lh_requests_total", 1);
+        // same name, different kind: dropped and remembered
+        r.observe("lh_requests_total", 0.5);
+        assert_eq!(r.conflicts(), vec!["lh_requests_total".to_string()]);
+        // the original counter survives untouched, and the conflict is
+        // itself visible as a gauge in the snapshot
+        let s = r.snapshot();
+        assert_eq!(s.entries.get("lh_requests_total"), Some(&MetricValue::Counter(1)));
+        assert_eq!(s.entries.get("lh_metric_conflicts"), Some(&MetricValue::Gauge(1)));
+    }
+
+    #[test]
+    fn merge_is_exact_across_snapshots() {
+        let mut a = Snapshot::default();
+        a.add_counter("lh_requests_total", 3);
+        a.set_gauge("lh_sessions_resident", 2);
+        a.observe("lh_ttft_seconds", 0.01);
+        a.observe("lh_ttft_seconds", 0.02);
+        let mut b = Snapshot::default();
+        b.add_counter("lh_requests_total", 4);
+        b.set_gauge("lh_sessions_resident", 5);
+        b.observe("lh_ttft_seconds", 0.04);
+        let mut total = Snapshot::default();
+        let conflicts = total.merge(&a);
+        assert!(conflicts.is_empty());
+        let conflicts = total.merge(&b);
+        assert!(conflicts.is_empty());
+        assert_eq!(
+            total.entries.get("lh_requests_total"),
+            Some(&MetricValue::Counter(7))
+        );
+        assert_eq!(
+            total.entries.get("lh_sessions_resident"),
+            Some(&MetricValue::Gauge(7))
+        );
+        match total.entries.get("lh_ttft_seconds") {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count(), 3),
+            other => panic!("expected hist, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prometheus_rendering_matches_golden_text() {
+        let mut s = Snapshot::default();
+        s.add_counter("lh_requests_total", 7);
+        s.set_gauge("lh_queue_depth", 2);
+        let mut h = Hist::new();
+        h.record(0.25); // mid-grid bucket
+        h.record(1e9); // overflow bucket
+        s.entries.insert("lh_ttft_seconds".into(), MetricValue::Hist(h));
+        let text = render_prometheus(&s);
+        // spot-check the exact exposition lines (BTreeMap order: depth,
+        // requests, ttft)
+        assert!(text.starts_with("# HELP lh_queue_depth "), "{text}");
+        assert!(text.contains("# TYPE lh_queue_depth gauge\nlh_queue_depth 2\n"), "{text}");
+        assert!(
+            text.contains("# TYPE lh_requests_total counter\nlh_requests_total 7\n"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE lh_ttft_seconds histogram\n"), "{text}");
+        // cumulative buckets: 0 until the 0.25 sample's bucket, then 1
+        // until +Inf picks up the overflow sample
+        assert!(text.contains("lh_ttft_seconds_bucket{le=\"0.00001\"} 0\n"), "{text}");
+        assert!(text.contains("lh_ttft_seconds_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        // 1e9 + 0.25 is exactly representable, so the sum line is stable
+        assert!(text.contains("lh_ttft_seconds_sum 1000000000.25\n"), "{text}");
+        assert!(text.contains("lh_ttft_seconds_count 2\n"), "{text}");
+        // rendering is deterministic
+        assert_eq!(text, render_prometheus(&s));
+    }
+
+    #[test]
+    fn labeled_keys_render_family_type_once() {
+        let mut s = Snapshot::default();
+        s.set_gauge("lh_breaker_state{shard=\"0\"}", 0);
+        s.set_gauge("lh_breaker_state{shard=\"1\"}", 2);
+        s.observe("lh_route_seconds{shard=\"0\"}", 0.02);
+        let text = render_prometheus(&s);
+        assert_eq!(text.matches("# TYPE lh_breaker_state gauge").count(), 1, "{text}");
+        assert!(text.contains("lh_breaker_state{shard=\"0\"} 0\n"), "{text}");
+        assert!(text.contains("lh_breaker_state{shard=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("lh_route_seconds_bucket{shard=\"0\",le=\"+Inf\"} 1\n"), "{text}");
+        assert!(text.contains("lh_route_seconds_count{shard=\"0\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn all_schema_kinds_accept_their_op() {
+        // every declared family accepts the operation its kind implies,
+        // so instrumentation sites can be checked against SCHEMA
+        let r = Registry::new();
+        for (name, kind, _) in SCHEMA {
+            match kind {
+                MetricKind::Counter => r.inc(name, 1),
+                MetricKind::Gauge => r.set_gauge(name, 1),
+                MetricKind::Hist => r.observe(name, 0.001),
+            }
+        }
+        assert!(r.conflicts().is_empty());
+        assert_eq!(r.snapshot().entries.len(), SCHEMA.len());
+    }
+}

@@ -1,0 +1,161 @@
+//! Per-request trace records in a bounded ring.
+//!
+//! A [`Trace`] pins down where one request's latency went as stage
+//! offsets from its enqueue instant: queue wait until admission, the
+//! prefill batch it rode (if it could not resume a stored state), the
+//! first emitted token, and completion. The coordinator pushes one
+//! record per retired request into a [`TraceRing`]; the front door
+//! keeps its own ring of relayed turns. Rings are fixed-capacity
+//! `VecDeque`s — the observability layer never holds unbounded
+//! per-request memory — and render as JSON lines for `GET /traces`.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One request's stage timeline, offsets in µs from enqueue. A stage
+/// that did not happen (e.g. prefill on a state-resume turn) is 0.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub id: u64,
+    pub session: Option<u64>,
+    /// Enqueue → slot admission (queue wait).
+    pub admit_us: u64,
+    /// Enqueue → end of the prefill batch that processed this prompt;
+    /// 0 when the turn resumed a stored state and skipped prefill.
+    pub prefill_us: u64,
+    /// Enqueue → first token emitted.
+    pub first_token_us: u64,
+    /// Enqueue → final token (end-to-end latency).
+    pub done_us: u64,
+    /// Tokens generated.
+    pub tokens: u32,
+    /// False when the request ended in an error instead of a reply.
+    pub ok: bool,
+}
+
+impl Trace {
+    /// One JSON object, no trailing newline. Field order is fixed so
+    /// the output is line-diffable.
+    pub fn to_json(&self) -> String {
+        let session = match self.session {
+            Some(s) => s.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"id\":{},\"session\":{},\"admit_us\":{},\"prefill_us\":{},\
+             \"first_token_us\":{},\"done_us\":{},\"tokens\":{},\"ok\":{}}}",
+            self.id,
+            session,
+            self.admit_us,
+            self.prefill_us,
+            self.first_token_us,
+            self.done_us,
+            self.tokens,
+            self.ok
+        )
+    }
+}
+
+/// Capacity of a ring unless the caller picks one: enough recent
+/// context to debug a latency spike, small enough to never matter.
+pub const DEFAULT_TRACE_CAP: usize = 256;
+
+/// Bounded ring of recent traces, oldest evicted first.
+pub struct TraceRing {
+    inner: Mutex<VecDeque<Trace>>,
+    cap: usize,
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAP)
+    }
+}
+
+impl TraceRing {
+    pub fn with_capacity(cap: usize) -> Self {
+        TraceRing { inner: Mutex::new(VecDeque::with_capacity(cap.max(1))), cap: cap.max(1) }
+    }
+
+    pub fn push(&self, t: Trace) {
+        let mut r = self.inner.lock().unwrap();
+        if r.len() == self.cap {
+            r.pop_front();
+        }
+        r.push_back(t);
+    }
+
+    /// Most recent traces, oldest first.
+    pub fn recent(&self) -> Vec<Trace> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// JSON-lines rendering for `GET /traces`: one object per line,
+    /// oldest first, trailing newline when non-empty.
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for t in self.inner.lock().unwrap().iter() {
+            out.push_str(&t.to_json());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let ring = TraceRing::with_capacity(3);
+        for i in 0..10u64 {
+            ring.push(Trace { id: i, ok: true, ..Trace::default() });
+        }
+        let recent = ring.recent();
+        assert_eq!(recent.len(), 3);
+        assert_eq!(
+            recent.iter().map(|t| t.id).collect::<Vec<_>>(),
+            vec![7, 8, 9],
+            "oldest evicted first"
+        );
+    }
+
+    #[test]
+    fn json_lines_are_stable() {
+        let ring = TraceRing::with_capacity(8);
+        ring.push(Trace {
+            id: 1,
+            session: Some(42),
+            admit_us: 10,
+            prefill_us: 200,
+            first_token_us: 250,
+            done_us: 900,
+            tokens: 8,
+            ok: true,
+        });
+        ring.push(Trace { id: 2, ok: false, ..Trace::default() });
+        assert_eq!(
+            ring.to_json_lines(),
+            "{\"id\":1,\"session\":42,\"admit_us\":10,\"prefill_us\":200,\
+             \"first_token_us\":250,\"done_us\":900,\"tokens\":8,\"ok\":true}\n\
+             {\"id\":2,\"session\":null,\"admit_us\":0,\"prefill_us\":0,\
+             \"first_token_us\":0,\"done_us\":0,\"tokens\":0,\"ok\":false}\n"
+        );
+    }
+
+    #[test]
+    fn empty_ring_renders_empty() {
+        let ring = TraceRing::default();
+        assert!(ring.is_empty());
+        assert_eq!(ring.to_json_lines(), "");
+    }
+}

@@ -6,23 +6,31 @@
 use std::fmt;
 use std::sync::Arc;
 
-use super::circuit::BreakerConfig;
+use super::circuit::{BreakerConfig, BreakerState};
 use super::faults::FaultPlan;
-use super::router::{RouteError, Router};
+use super::router::{MigrationStats, RouteError, Router};
 use super::shard::ShardServer;
 use super::wire::HealthReport;
 use crate::config::ServeConfig;
 use crate::engine::LmShape;
 
-/// Per-shard health plus cluster totals.
+/// Per-shard health plus cluster totals, with the router-side view
+/// (circuit states, migration counters) alongside the shard-side sums.
 #[derive(Clone, Debug, Default)]
 pub struct AdminReport {
     pub per_shard: Vec<HealthReport>,
     pub total: HealthReport,
+    /// Circuit state per shard, indexed like `per_shard`.  Empty when
+    /// the report was built by [`AdminReport::aggregate`] alone (no
+    /// router at hand).
+    pub breakers: Vec<BreakerState>,
+    /// Lifetime migration/resurrection counts from the router.
+    pub migrations: MigrationStats,
 }
 
 impl AdminReport {
-    /// Sum the per-shard reports into cluster totals.
+    /// Sum the per-shard reports into cluster totals.  Shard-side only —
+    /// [`AdminReport::collect`] is what fills the router-side fields.
     pub fn aggregate(per_shard: Vec<HealthReport>) -> AdminReport {
         let mut total = HealthReport::default();
         for h in &per_shard {
@@ -34,8 +42,18 @@ impl AdminReport {
             total.requests_done += h.requests_done;
             total.tokens_generated += h.tokens_generated;
             total.prefill_tokens_saved += h.prefill_tokens_saved;
+            total.queue_depth += h.queue_depth;
         }
-        AdminReport { per_shard, total }
+        AdminReport { per_shard, total, ..AdminReport::default() }
+    }
+
+    /// Full cluster report: per-shard health over the wire plus the
+    /// router's breaker states and migration counters.
+    pub fn collect(router: &mut Router) -> Result<AdminReport, RouteError> {
+        let mut rep = AdminReport::aggregate(router.health()?);
+        rep.breakers = router.breaker_states();
+        rep.migrations = router.migration_stats();
+        Ok(rep)
     }
 }
 
@@ -43,13 +61,22 @@ impl fmt::Display for AdminReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(
             f,
-            "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12}",
-            "shard", "sessions", "state bytes", "hits", "misses", "done", "tokens", "saved-toks"
+            "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12} {:>6} {:>9}",
+            "shard",
+            "sessions",
+            "state bytes",
+            "hits",
+            "misses",
+            "done",
+            "tokens",
+            "saved-toks",
+            "queue",
+            "breaker"
         )?;
-        let row = |f: &mut fmt::Formatter<'_>, name: &str, h: &HealthReport| {
+        let row = |f: &mut fmt::Formatter<'_>, name: &str, h: &HealthReport, brk: &str| {
             writeln!(
                 f,
-                "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12}",
+                "{:>6} {:>9} {:>12} {:>10} {:>10} {:>9} {:>8} {:>12} {:>6} {:>9}",
                 name,
                 h.sessions_resident,
                 h.session_bytes,
@@ -57,13 +84,27 @@ impl fmt::Display for AdminReport {
                 h.session_misses,
                 h.requests_done,
                 h.tokens_generated,
-                h.prefill_tokens_saved
+                h.prefill_tokens_saved,
+                h.queue_depth,
+                brk
             )
         };
         for (i, h) in self.per_shard.iter().enumerate() {
-            row(f, &i.to_string(), h)?;
+            let brk = match self.breakers.get(i) {
+                Some(BreakerState::Closed) => "closed",
+                Some(BreakerState::HalfOpen) => "half-open",
+                Some(BreakerState::Open) => "open",
+                None => "-",
+            };
+            row(f, &i.to_string(), h, brk)?;
         }
-        row(f, "total", &self.total)
+        row(f, "total", &self.total, "-")?;
+        let m = self.migrations;
+        writeln!(
+            f,
+            "migrations: {} attempted, {} committed, {} aborted; {} resurrections",
+            m.attempts, m.commits, m.aborts, m.resurrections
+        )
     }
 }
 
@@ -116,9 +157,16 @@ impl Cluster {
         Ok(Cluster { shards, router })
     }
 
-    /// Aggregated health over the wire.
+    /// Aggregated health over the wire, including the router-side view.
     pub fn report(&mut self) -> Result<AdminReport, RouteError> {
-        Ok(AdminReport::aggregate(self.router.health()?))
+        AdminReport::collect(&mut self.router)
+    }
+
+    /// Split the cluster into its shards and router — what the CLI does
+    /// to hand the router to a [`super::front::FrontServer`] while
+    /// keeping ownership of the shard servers for shutdown.
+    pub fn into_parts(self) -> (Vec<ShardServer>, Router) {
+        (self.shards, self.router)
     }
 
     /// Shut every shard down (in-flight work drains first).
@@ -144,6 +192,7 @@ mod tests {
             requests_done: 3,
             tokens_generated: 12,
             prefill_tokens_saved: 40,
+            queue_depth: 2,
         };
         let mut b = a.clone();
         b.sessions_resident = 4;
@@ -151,9 +200,83 @@ mod tests {
         assert_eq!(rep.total.sessions_resident, 5);
         assert_eq!(rep.total.requests_done, 6);
         assert_eq!(rep.total.tokens_generated, 24);
+        assert_eq!(rep.total.queue_depth, 4);
         let text = format!("{rep}");
         assert!(text.contains("total"), "{text}");
-        assert!(text.lines().count() >= 4, "{text}");
+        assert!(text.contains("queue"), "{text}");
+        assert!(text.contains("migrations:"), "{text}");
+        assert!(text.lines().count() >= 5, "{text}");
+    }
+
+    /// Aggregation is exact field-by-field — every u64 is the sum of the
+    /// inputs, nothing sampled or approximated — and the same holds for
+    /// metric snapshots: merged histograms carry exactly the union of
+    /// the per-shard samples.
+    #[test]
+    fn aggregation_is_exact_including_histogram_merge() {
+        use crate::obs::{MetricValue, Snapshot};
+        let mk = |k: u64| HealthReport {
+            sessions_resident: k,
+            session_bytes: 10 * k,
+            session_hits: 100 * k,
+            session_misses: k + 1,
+            in_flight: k,
+            requests_done: 7 * k,
+            tokens_generated: 13 * k,
+            prefill_tokens_saved: 17 * k,
+            queue_depth: 3 * k,
+        };
+        let rep = AdminReport::aggregate(vec![mk(1), mk(2), mk(4)]);
+        let want = mk(7); // sums are exact: 1 + 2 + 4, field by field
+        assert_eq!(rep.total.sessions_resident, want.sessions_resident);
+        assert_eq!(rep.total.session_bytes, want.session_bytes);
+        assert_eq!(rep.total.session_hits, want.session_hits);
+        assert_eq!(rep.total.session_misses, 2 + 3 + 5);
+        assert_eq!(rep.total.in_flight, want.in_flight);
+        assert_eq!(rep.total.requests_done, want.requests_done);
+        assert_eq!(rep.total.tokens_generated, want.tokens_generated);
+        assert_eq!(rep.total.prefill_tokens_saved, want.prefill_tokens_saved);
+        assert_eq!(rep.total.queue_depth, want.queue_depth);
+        // the metric-side analogue: two per-shard snapshots merge into
+        // bucket-exact cluster histograms alongside summed counters
+        let mut shard_a = Snapshot::default();
+        shard_a.add_counter("lh_requests_done_total", 3);
+        for v in [0.001, 0.01, 0.1] {
+            shard_a.observe("lh_ttft_seconds", v);
+        }
+        let mut shard_b = Snapshot::default();
+        shard_b.add_counter("lh_requests_done_total", 4);
+        for v in [0.001, 1.0] {
+            shard_b.observe("lh_ttft_seconds", v);
+        }
+        let mut cluster = Snapshot::default();
+        assert!(cluster.merge(&shard_a).is_empty());
+        assert!(cluster.merge(&shard_b).is_empty());
+        assert_eq!(
+            cluster.entries.get("lh_requests_done_total"),
+            Some(&MetricValue::Counter(7))
+        );
+        match (
+            cluster.entries.get("lh_ttft_seconds"),
+            shard_a.entries.get("lh_ttft_seconds"),
+            shard_b.entries.get("lh_ttft_seconds"),
+        ) {
+            (
+                Some(MetricValue::Hist(merged)),
+                Some(MetricValue::Hist(ha)),
+                Some(MetricValue::Hist(hb)),
+            ) => {
+                assert_eq!(merged.count(), 5);
+                for i in 0..crate::obs::BUCKETS {
+                    assert_eq!(
+                        merged.bucket_counts()[i],
+                        ha.bucket_counts()[i] + hb.bucket_counts()[i],
+                        "bucket {i} must be the exact sum"
+                    );
+                }
+            }
+            other => panic!("expected three histograms, got {other:?}"),
+        }
     }
 
     #[test]
@@ -167,6 +290,9 @@ mod tests {
         assert_eq!(rep.per_shard.len(), 2);
         assert_eq!(rep.total.requests_done, 1);
         assert_eq!(rep.total.sessions_resident, 1);
+        // report() goes through collect(): the router-side view rides along
+        assert_eq!(rep.breakers, vec![BreakerState::Closed, BreakerState::Closed]);
+        assert_eq!(rep.migrations, MigrationStats::default());
         cluster.shutdown();
     }
 }

@@ -60,6 +60,21 @@ enum State {
     HalfOpen,
 }
 
+/// Lifetime transition counts for one breaker — how many times each edge
+/// of the state machine fired.  Observability-only: the breaker's
+/// behavior never reads these.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BreakerStats {
+    /// Transitions into Open (trips from Closed and re-opens from a
+    /// failed HalfOpen probe; staying Open does not count).
+    pub opened: u64,
+    /// Transitions Open → HalfOpen (cooldown elapsed, probe admitted).
+    pub half_opened: u64,
+    /// Transitions into Closed from a non-Closed state (recoveries;
+    /// successes while already Closed do not count).
+    pub closed: u64,
+}
+
 /// One shard's circuit breaker.  Not internally synchronized — the router
 /// holds it under its own lock.
 #[derive(Debug)]
@@ -67,11 +82,17 @@ pub struct Breaker {
     cfg: BreakerConfig,
     state: State,
     consecutive_failures: u32,
+    stats: BreakerStats,
 }
 
 impl Breaker {
     pub fn new(cfg: BreakerConfig) -> Self {
-        Breaker { cfg, state: State::Closed, consecutive_failures: 0 }
+        Breaker {
+            cfg,
+            state: State::Closed,
+            consecutive_failures: 0,
+            stats: BreakerStats::default(),
+        }
     }
 
     /// May a request be attempted right now?  An elapsed-cooldown open
@@ -82,6 +103,7 @@ impl Breaker {
             State::Open { until } => {
                 if Instant::now() >= until {
                     self.state = State::HalfOpen;
+                    self.stats.half_opened += 1;
                     true
                 } else {
                     false
@@ -92,6 +114,9 @@ impl Breaker {
 
     /// A request (or health probe) succeeded: close the circuit.
     pub fn record_success(&mut self) {
+        if !matches!(self.state, State::Closed) {
+            self.stats.closed += 1;
+        }
         self.state = State::Closed;
         self.consecutive_failures = 0;
     }
@@ -104,6 +129,9 @@ impl Breaker {
         let trip = matches!(self.state, State::HalfOpen)
             || self.consecutive_failures >= self.cfg.failure_threshold;
         if trip {
+            if !matches!(self.state, State::Open { .. }) {
+                self.stats.opened += 1;
+            }
             self.state = State::Open { until: Instant::now() + self.cfg.cooldown };
         }
     }
@@ -114,6 +142,11 @@ impl Breaker {
             State::Open { .. } => BreakerState::Open,
             State::HalfOpen => BreakerState::HalfOpen,
         }
+    }
+
+    /// Lifetime transition counts (for the observability layer).
+    pub fn stats(&self) -> BreakerStats {
+        self.stats
     }
 }
 
@@ -170,5 +203,29 @@ mod tests {
         b.record_success();
         assert_eq!(b.state(), BreakerState::Closed);
         assert!(b.allow());
+    }
+
+    #[test]
+    fn stats_count_each_edge_exactly_once() {
+        let mut b = breaker(1, Duration::ZERO);
+        assert_eq!(b.stats(), BreakerStats::default());
+        // Closed successes are not "recoveries"
+        b.record_success();
+        assert_eq!(b.stats().closed, 0);
+        // trip: one opened
+        b.record_failure();
+        assert_eq!(b.stats(), BreakerStats { opened: 1, half_opened: 0, closed: 0 });
+        // cooldown elapsed: one half_opened (allow() again while half-open
+        // must not double-count)
+        assert!(b.allow());
+        assert!(b.allow());
+        assert_eq!(b.stats().half_opened, 1);
+        // probe failure: back to open — second opened
+        b.record_failure();
+        assert_eq!(b.stats().opened, 2);
+        // probe success after another half-open: one closed
+        assert!(b.allow());
+        b.record_success();
+        assert_eq!(b.stats(), BreakerStats { opened: 2, half_opened: 2, closed: 1 });
     }
 }

@@ -26,16 +26,28 @@
 //!   [`Router::probe_all`] every `probe_interval`, which is what lets an
 //!   open circuit half-open and a recovered shard rejoin service without
 //!   waiting for client traffic to find it.
+//! * **Observability.**  A second loopback listener speaks just enough
+//!   GET-only HTTP/1.1 for a scraper: `/metrics` renders the merged
+//!   cluster snapshot ([`Router::cluster_metrics`] plus the front door's
+//!   own registry) as Prometheus text, `/admin` a human-readable
+//!   dashboard, `/traces` recent per-request timelines as JSON lines.
+//!   Anything else gets a typed status (400 malformed, 404 unknown path,
+//!   405 non-GET, 431 oversized head) — never a panic, never a hang.
+//!   Because `/metrics` takes the router lock, a scrape concurrent with
+//!   a streamed generation waits for the turn to finish; scrapes are
+//!   cheap but not lock-free by design.
 
-use std::io;
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::admin::AdminReport;
 use super::router::{RouteError, Router};
 use super::wire::{self, ErrCode, Frame, MAX_FRAME_BYTES};
+use crate::obs::{render_prometheus, MetricValue, Registry, Snapshot, Trace, TraceRing};
 
 /// How often blocked reads wake to check the stop flag.
 const STOP_POLL: Duration = Duration::from_millis(50);
@@ -85,15 +97,28 @@ impl Gate {
     }
 }
 
-/// The router, served over the wire protocol on a loopback socket.
+/// Observability state shared by every front-door connection: the front
+/// door's own metric registry, the per-request trace ring, and the
+/// request-id counter that names traces.
+struct FrontShared {
+    reg: Registry,
+    traces: TraceRing,
+    next_req: AtomicU64,
+}
+
+/// The router, served over the wire protocol on a loopback socket, with
+/// a sibling HTTP listener for `/metrics`, `/admin` and `/traces`.
 pub struct FrontServer {
     addr: SocketAddr,
+    http_addr: SocketAddr,
     router: Arc<Mutex<Router>>,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    http_accept: Option<JoinHandle<()>>,
     prober: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
     gate: Arc<Gate>,
+    shared: Arc<FrontShared>,
 }
 
 impl FrontServer {
@@ -103,14 +128,22 @@ impl FrontServer {
         let router = Arc::new(Mutex::new(router));
         let listener = TcpListener::bind(("127.0.0.1", 0))?;
         let addr = listener.local_addr()?;
+        let http_listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let http_addr = http_listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let gate = Arc::new(Gate { cur: AtomicUsize::new(0), max: cfg.max_inflight.max(1) });
+        let shared = Arc::new(FrontShared {
+            reg: Registry::new(),
+            traces: TraceRing::default(),
+            next_req: AtomicU64::new(1),
+        });
         let accept = {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             let router = Arc::clone(&router);
             let gate = Arc::clone(&gate);
+            let shared = Arc::clone(&shared);
             std::thread::spawn(move || {
                 for stream in listener.incoming() {
                     if stop.load(Ordering::SeqCst) {
@@ -123,9 +156,38 @@ impl FrontServer {
                     let stop = Arc::clone(&stop);
                     let router = Arc::clone(&router);
                     let gate = Arc::clone(&gate);
+                    let shared = Arc::clone(&shared);
                     let hello = hello.clone();
                     let join = std::thread::spawn(move || {
-                        let _ = serve_conn(stream, &router, &hello, &gate, &stop);
+                        let _ = serve_conn(stream, &router, &hello, &gate, &shared, &stop);
+                    });
+                    let mut conns = conns.lock().unwrap();
+                    conns.retain(|j| !j.is_finished());
+                    conns.push(join);
+                }
+            })
+        };
+        let http_accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let router = Arc::clone(&router);
+            let gate = Arc::clone(&gate);
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                for stream in http_listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let stop = Arc::clone(&stop);
+                    let router = Arc::clone(&router);
+                    let gate = Arc::clone(&gate);
+                    let shared = Arc::clone(&shared);
+                    let join = std::thread::spawn(move || {
+                        let _ = serve_http_conn(stream, &router, &shared, &gate, &stop);
                     });
                     let mut conns = conns.lock().unwrap();
                     conns.retain(|j| !j.is_finished());
@@ -146,12 +208,36 @@ impl FrontServer {
                 }
             })
         });
-        Ok(FrontServer { addr, router, stop, accept: Some(accept), prober, conns, gate })
+        Ok(FrontServer {
+            addr,
+            http_addr,
+            router,
+            stop,
+            accept: Some(accept),
+            http_accept: Some(http_accept),
+            prober,
+            conns,
+            gate,
+            shared,
+        })
     }
 
     /// The bound loopback address clients connect to.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound loopback address of the HTTP observability endpoint
+    /// (`/metrics`, `/admin`, `/traces`).
+    pub fn http_addr(&self) -> SocketAddr {
+        self.http_addr
+    }
+
+    /// Snapshot of the front door's own registry (requests, refusals,
+    /// relay errors, inter-token gaps) — shard and router metrics are
+    /// served via `/metrics`, not here.
+    pub fn front_metrics(&self) -> Snapshot {
+        self.shared.reg.snapshot()
     }
 
     /// The shared router, for admin operations (drain, migrate, health).
@@ -176,9 +262,13 @@ impl FrontServer {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
         }
-        // unblock the accept loop
+        // unblock both accept loops
         let _ = TcpStream::connect(self.addr);
+        let _ = TcpStream::connect(self.http_addr);
         if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.http_accept.take() {
             let _ = j.join();
         }
         for j in self.conns.lock().unwrap().drain(..) {
@@ -214,9 +304,16 @@ fn err_frame(e: &RouteError) -> Frame {
 /// client as it arrives.  A relay write failure (client went away) aborts
 /// the connection but never the generation — the router still completes
 /// the turn and keeps its mirror consistent.
+///
+/// Every relay leaves a [`Trace`] in the front door's ring (front-door
+/// traces clock from relay start, so the coordinator-side admit/prefill
+/// offsets are zero here) and feeds the front registry: inter-token gaps
+/// into `lh_stream_token_seconds`, failures into `lh_front_errors_total`.
 fn relay_generation<F>(
     stream: &mut TcpStream,
     router: &Mutex<Router>,
+    shared: &FrontShared,
+    session: Option<u64>,
     run: F,
 ) -> io::Result<()>
 where
@@ -224,13 +321,22 @@ where
 {
     let start = Instant::now();
     let mut first: Option<Duration> = None;
+    let mut prev_tok: Option<Instant> = None;
+    let mut n_tokens: u32 = 0;
     let mut relay_err: Option<io::Error> = None;
     let result = {
         let mut r = router.lock().unwrap();
         run(&mut r, &mut |t| {
+            let now = Instant::now();
             if first.is_none() {
                 first = Some(start.elapsed());
+            } else if let Some(prev) = prev_tok {
+                shared
+                    .reg
+                    .observe("lh_stream_token_seconds", (now - prev).as_secs_f64());
             }
+            prev_tok = Some(now);
+            n_tokens += 1;
             if relay_err.is_none() {
                 if let Err(e) = wire::write_frame(stream, &Frame::Token { token: t }) {
                     relay_err = Some(e);
@@ -238,21 +344,32 @@ where
             }
         })
     };
+    let total = start.elapsed();
+    let ttft = first.unwrap_or(total);
+    shared.traces.push(Trace {
+        id: shared.next_req.fetch_add(1, Ordering::Relaxed),
+        session,
+        admit_us: 0,
+        prefill_us: 0,
+        first_token_us: ttft.as_micros() as u64,
+        done_us: total.as_micros() as u64,
+        tokens: n_tokens,
+        ok: result.is_ok(),
+    });
+    if result.is_err() {
+        shared.reg.inc("lh_front_errors_total", 1);
+    }
     if let Some(e) = relay_err {
         return Err(e);
     }
     match result {
-        Ok(_) => {
-            let total = start.elapsed();
-            let ttft = first.unwrap_or(total);
-            wire::write_frame(
-                stream,
-                &Frame::Done {
-                    ttft_us: ttft.as_micros() as u64,
-                    total_us: total.as_micros() as u64,
-                },
-            )
-        }
+        Ok(_) => wire::write_frame(
+            stream,
+            &Frame::Done {
+                ttft_us: ttft.as_micros() as u64,
+                total_us: total.as_micros() as u64,
+            },
+        ),
         Err(e) => wire::write_frame(stream, &err_frame(&e)),
     }
 }
@@ -263,6 +380,7 @@ fn serve_conn(
     router: &Mutex<Router>,
     hello: &Frame,
     gate: &Gate,
+    shared: &FrontShared,
     stop: &AtomicBool,
 ) -> io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -275,11 +393,13 @@ fn serve_conn(
         };
         match frame {
             Frame::Submit { max_new, prompt } => {
+                shared.reg.inc("lh_front_requests_total", 1);
                 if !gate.try_enter() {
+                    shared.reg.inc("lh_front_over_capacity_total", 1);
                     write_over_capacity(&mut stream, gate.max)?;
                     continue;
                 }
-                let res = relay_generation(&mut stream, router, |r, on_tok| {
+                let res = relay_generation(&mut stream, router, shared, None, |r, on_tok| {
                     r.submit_streaming(prompt, max_new as usize, |t| on_tok(t))
                 });
                 gate.leave();
@@ -288,15 +408,18 @@ fn serve_conn(
             Frame::SubmitInSession { session, strict: _, max_new, delta } => {
                 // the front door decides strictness itself: residency in
                 // the router is what distinguishes turn 1 from a resume
+                shared.reg.inc("lh_front_requests_total", 1);
                 if !gate.try_enter() {
+                    shared.reg.inc("lh_front_over_capacity_total", 1);
                     write_over_capacity(&mut stream, gate.max)?;
                     continue;
                 }
-                let res = relay_generation(&mut stream, router, |r, on_tok| {
-                    r.submit_in_session_streaming(session, delta, max_new as usize, |t| {
-                        on_tok(t)
-                    })
-                });
+                let res =
+                    relay_generation(&mut stream, router, shared, Some(session), |r, on_tok| {
+                        r.submit_in_session_streaming(session, delta, max_new as usize, |t| {
+                            on_tok(t)
+                        })
+                    });
                 gate.leave();
                 res?;
             }
@@ -321,6 +444,7 @@ fn serve_conn(
                             total.requests_done += h.requests_done;
                             total.tokens_generated += h.tokens_generated;
                             total.prefill_tokens_saved += h.prefill_tokens_saved;
+                            total.queue_depth += h.queue_depth;
                         }
                         Frame::HealthReport(total)
                     }
@@ -351,6 +475,205 @@ fn write_over_capacity(stream: &mut TcpStream, max: usize) -> io::Result<()> {
     )
 }
 
+/// Largest HTTP request head the observability endpoint accepts; more
+/// than enough for any scraper and a hard cap on per-connection memory.
+const MAX_HTTP_HEAD: usize = 8 * 1024;
+
+/// Typed verdict on one HTTP request head.  Everything a peer can throw
+/// at the endpoint maps onto one of these — the handler never panics.
+#[derive(Debug, PartialEq, Eq)]
+enum HttpParse {
+    /// A well-formed `GET`: the path, query string stripped.
+    Get(String),
+    /// Well-formed HTTP but a method other than GET → 405.
+    NotGet,
+    /// The head never terminated within [`MAX_HTTP_HEAD`] → 431.
+    TooLarge,
+    /// Not parseable as an HTTP/1.x request → 400.
+    Malformed,
+}
+
+/// Byte offset just past the head terminator (`\r\n\r\n` or bare
+/// `\n\n`), if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| i + 4)
+        .or_else(|| buf.windows(2).position(|w| w == b"\n\n").map(|i| i + 2))
+}
+
+/// Parse a complete request head down to a typed verdict.  Pure — the
+/// unit tests drive it directly with malformed and hostile inputs.
+fn parse_http_head(head: &[u8]) -> HttpParse {
+    let text = match std::str::from_utf8(head) {
+        Ok(t) => t,
+        Err(_) => return HttpParse::Malformed,
+    };
+    let line = text.lines().next().unwrap_or("");
+    let mut parts = line.split(' ');
+    match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(method), Some(path), Some(version), None)
+            if !method.is_empty() && version.starts_with("HTTP/1.") =>
+        {
+            if method != "GET" {
+                HttpParse::NotGet
+            } else if !path.starts_with('/') {
+                HttpParse::Malformed
+            } else {
+                let path = path.split('?').next().unwrap_or(path);
+                HttpParse::Get(path.to_string())
+            }
+        }
+        _ => HttpParse::Malformed,
+    }
+}
+
+/// A complete HTTP/1.1 response with the body framed by content-length
+/// (the connection closes after one exchange).
+fn http_response(status: u16, reason: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\n\
+         content-type: {content_type}\r\n\
+         content-length: {}\r\n\
+         connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Route one GET.  `/metrics` merges the cluster pull with the front
+/// door's own registry (taking the router lock — a scrape waits out any
+/// in-flight turn); `/admin` renders the aggregated dashboard;
+/// `/traces` dumps the recent request timelines as JSON lines.
+fn respond_get(
+    path: &str,
+    router: &Mutex<Router>,
+    shared: &FrontShared,
+    gate: &Gate,
+) -> Vec<u8> {
+    match path {
+        "/metrics" => {
+            let mut snap = router.lock().unwrap().cluster_metrics();
+            snap.merge(&shared.reg.snapshot());
+            snap.merge_entry(
+                "lh_front_in_flight",
+                MetricValue::Gauge(gate.cur.load(Ordering::Acquire) as u64),
+            );
+            http_response(
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                &render_prometheus(&snap),
+            )
+        }
+        "/admin" => {
+            let mut r = router.lock().unwrap();
+            let body = match AdminReport::collect(&mut r) {
+                Ok(rep) => format!("{rep}"),
+                Err(e) => format!("admin report unavailable: {e}\n"),
+            };
+            http_response(200, "OK", "text/plain; charset=utf-8", &body)
+        }
+        "/traces" => http_response(
+            200,
+            "OK",
+            "application/x-ndjson",
+            &shared.traces.to_json_lines(),
+        ),
+        _ => http_response(
+            404,
+            "Not Found",
+            "text/plain",
+            "try /metrics, /admin or /traces\n",
+        ),
+    }
+}
+
+/// Serve one HTTP connection: read a bounded request head, answer once,
+/// close.  Malformed, oversized and non-GET requests get their typed
+/// status instead of a panic or a hang.
+fn serve_http_conn(
+    mut stream: TcpStream,
+    router: &Mutex<Router>,
+    shared: &FrontShared,
+    gate: &Gate,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(STOP_POLL))?;
+    let mut head: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 1024];
+    let verdict = loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let n = match stream.read(&mut buf) {
+            // EOF before the head terminator: whatever arrived, it is
+            // not a complete HTTP request
+            Ok(0) => break HttpParse::Malformed,
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        };
+        head.extend_from_slice(&buf[..n]);
+        if let Some(end) = find_head_end(&head) {
+            break parse_http_head(&head[..end]);
+        }
+        if head.len() > MAX_HTTP_HEAD {
+            break HttpParse::TooLarge;
+        }
+    };
+    let response = match verdict {
+        HttpParse::Get(path) => respond_get(&path, router, shared, gate),
+        HttpParse::NotGet => http_response(
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            "only GET is served here\n",
+        ),
+        HttpParse::TooLarge => http_response(
+            431,
+            "Request Header Fields Too Large",
+            "text/plain",
+            "request head exceeds 8 KiB\n",
+        ),
+        HttpParse::Malformed => {
+            http_response(400, "Bad Request", "text/plain", "malformed HTTP request\n")
+        }
+    };
+    stream.write_all(&response)?;
+    // Closing with unread request bytes still queued makes TCP reset the
+    // connection, which can discard the queued response before the client
+    // reads it (the oversized-head path always leaves unread bytes).
+    // Drain, bounded, until the client shuts its half down.
+    let deadline = Instant::now() + Duration::from_secs(1);
+    let mut drained = 0usize;
+    while Instant::now() < deadline && drained < 256 * 1024 && !stop.load(Ordering::SeqCst) {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => drained += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock
+                        | io::ErrorKind::TimedOut
+                        | io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => break,
+        }
+    }
+    Ok(())
+}
+
 /// Fill `buf` completely, waking every [`STOP_POLL`] to honor `stop`.
 /// `Ok(false)` = clean EOF before the first byte (only when `idle_ok`).
 fn read_full(
@@ -359,7 +682,6 @@ fn read_full(
     stop: &AtomicBool,
     idle_ok: bool,
 ) -> io::Result<bool> {
-    use std::io::Read;
     let mut got = 0;
     while got < buf.len() {
         if stop.load(Ordering::SeqCst) {
@@ -539,6 +861,105 @@ mod tests {
         c.send(&Frame::Submit { max_new: 1, prompt: vec![3] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 1);
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    #[test]
+    fn http_head_parser_is_typed_and_total() {
+        use HttpParse::*;
+        assert_eq!(
+            parse_http_head(b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n"),
+            Get("/metrics".into())
+        );
+        // query strings are stripped, HTTP/1.0 is accepted
+        assert_eq!(parse_http_head(b"GET /traces?n=5 HTTP/1.0\r\n\r\n"), Get("/traces".into()));
+        assert_eq!(parse_http_head(b"POST /metrics HTTP/1.1\r\n\r\n"), NotGet);
+        assert_eq!(parse_http_head(b"DELETE / HTTP/1.1\r\n\r\n"), NotGet);
+        assert_eq!(parse_http_head(b"this is not http\r\n\r\n"), Malformed);
+        assert_eq!(parse_http_head(b"GET relative-path HTTP/1.1\r\n\r\n"), Malformed);
+        assert_eq!(parse_http_head(b"GET /x SMTP/1.1\r\n\r\n"), Malformed);
+        assert_eq!(parse_http_head(b"GET /x HTTP/1.1 extra\r\n\r\n"), Malformed);
+        assert_eq!(parse_http_head(b"\xff\xfe\r\n\r\n"), Malformed);
+        assert_eq!(parse_http_head(b""), Malformed);
+    }
+
+    /// Raw one-shot HTTP exchange against the observability listener.
+    /// Half-closes after writing so a truncated request is seen as EOF,
+    /// not a stalled read.
+    fn http_exchange(addr: SocketAddr, raw: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        s.write_all(raw).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    #[test]
+    fn http_metrics_admin_and_traces_serve_the_cluster_view() {
+        let (shards, front) =
+            front_over(1, FrontConfig { probe_interval: None, ..FrontConfig::default() });
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::SubmitInSession {
+            session: 5,
+            strict: false,
+            max_new: 4,
+            delta: vec![1, 2, 3],
+        });
+        let (toks, _) = c.collect();
+        assert_eq!(toks.len(), 4);
+        let metrics =
+            http_exchange(front.http_addr(), b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"), "{metrics}");
+        // shard-side histogram, router-side breaker gauge, front-side
+        // counters — all in one exposition
+        assert!(metrics.contains("# TYPE lh_ttft_seconds histogram"), "{metrics}");
+        assert!(metrics.contains("lh_ttft_seconds_count 1\n"), "{metrics}");
+        assert!(metrics.contains("lh_breaker_state{shard=\"0\"} 0\n"), "{metrics}");
+        assert!(metrics.contains("lh_front_requests_total 1\n"), "{metrics}");
+        assert!(metrics.contains("lh_front_in_flight 0\n"), "{metrics}");
+        assert!(metrics.contains("lh_requests_done_total 1\n"), "{metrics}");
+        let admin = http_exchange(front.http_addr(), b"GET /admin HTTP/1.1\r\n\r\n");
+        assert!(admin.starts_with("HTTP/1.1 200 OK\r\n"), "{admin}");
+        assert!(admin.contains("shard"), "{admin}");
+        let traces = http_exchange(front.http_addr(), b"GET /traces HTTP/1.1\r\n\r\n");
+        assert!(traces.starts_with("HTTP/1.1 200 OK\r\n"), "{traces}");
+        assert!(traces.contains("\"session\":5"), "{traces}");
+        assert!(traces.contains("\"ok\":true"), "{traces}");
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// Hostile HTTP input gets its typed status — 400/404/405/431 — and
+    /// the endpoint keeps serving afterwards.
+    #[test]
+    fn http_errors_are_typed_and_never_kill_the_endpoint() {
+        let (shards, front) =
+            front_over(1, FrontConfig { probe_interval: None, ..FrontConfig::default() });
+        let addr = front.http_addr();
+        let bad = http_exchange(addr, b"complete garbage\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400 "), "{bad}");
+        let post = http_exchange(addr, b"POST /metrics HTTP/1.1\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.1 405 "), "{post}");
+        let lost = http_exchange(addr, b"GET /nope HTTP/1.1\r\n\r\n");
+        assert!(lost.starts_with("HTTP/1.1 404 "), "{lost}");
+        // a head that never terminates within the cap
+        let mut huge = b"GET /metrics HTTP/1.1\r\n".to_vec();
+        huge.extend(vec![b'a'; MAX_HTTP_HEAD + 1024]);
+        let big = http_exchange(addr, &huge);
+        assert!(big.starts_with("HTTP/1.1 431 "), "{big}");
+        // EOF mid-head (no terminator at all) is malformed, not a hang
+        let cut = http_exchange(addr, b"GET /metr");
+        assert!(cut.starts_with("HTTP/1.1 400 "), "{cut}");
+        // and a well-formed scrape still works after all of that
+        let ok = http_exchange(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
         front.shutdown();
         for s in shards {
             s.shutdown();

@@ -49,13 +49,14 @@ use std::collections::HashMap;
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::circuit::{Breaker, BreakerConfig, BreakerState};
+use super::circuit::{Breaker, BreakerConfig, BreakerState, BreakerStats};
 use super::faults::{FaultAction, FaultPlan, FrameKind, Point};
 use super::wire::{
     self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, MAX_FRAME_BYTES, PROTO_VERSION,
 };
+use crate::obs::{Hist, MetricValue, Snapshot};
 
 /// Virtual ring points per shard: enough that removing one shard moves
 /// only ~1/N of the id space.
@@ -336,6 +337,22 @@ impl Conn {
     }
 }
 
+/// Lifetime counts of the router's session-movement machinery.  An
+/// attempt that fails before commit/abort settlement (e.g. the export
+/// itself was refused) counts only as an attempt, so
+/// `attempts >= commits + aborts` always holds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Migrations that passed the identity checks and started moving.
+    pub attempts: u64,
+    /// Migrations whose import landed (source stash discarded).
+    pub commits: u64,
+    /// Migrations rolled back to the source (stash re-imported).
+    pub aborts: u64,
+    /// Sessions rebuilt from the transcript mirror after shard loss.
+    pub resurrections: u64,
+}
+
 /// The sharded front door.
 pub struct Router {
     shards: Vec<ShardInfo>,
@@ -356,6 +373,13 @@ pub struct Router {
     faults: Option<Arc<FaultPlan>>,
     /// Round-robin cursor for one-shot requests.
     rr: usize,
+    /// Router-observed round-trip latency per shard, indexed like
+    /// `shards` (bounded: one fixed-bucket histogram per shard).
+    route_hist: Vec<Hist>,
+    /// Lifetime migration/resurrection counts.
+    migrations: MigrationStats,
+    /// Shards that failed to answer a metrics pull (cumulative).
+    scrape_errors: u64,
 }
 
 impl Router {
@@ -382,6 +406,7 @@ impl Router {
             shards.push(ShardInfo { addr, id, draining: false });
         }
         let breakers = addrs.iter().map(|_| Breaker::new(breaker_cfg)).collect();
+        let route_hist = addrs.iter().map(|_| Hist::new()).collect();
         let mut r = Router {
             shards,
             ring: Vec::new(),
@@ -391,6 +416,9 @@ impl Router {
             breaker_cfg,
             faults,
             rr: 0,
+            route_hist,
+            migrations: MigrationStats::default(),
+            scrape_errors: 0,
         };
         r.rebuild_ring();
         Ok(r)
@@ -543,11 +571,13 @@ impl Router {
             };
             let mut emitted = 0usize;
             let req = Frame::Submit { max_new: max_new as u32, prompt: prompt.clone() };
+            let t0 = Instant::now();
             match conn.generate_streaming(&req, |t| {
                 emitted += 1;
                 on_token(t);
             }) {
                 Ok(toks) => {
+                    self.route_hist[shard].record(t0.elapsed().as_secs_f64());
                     self.note_outcome(shard, None);
                     return Ok(toks);
                 }
@@ -598,6 +628,7 @@ impl Router {
             max_new: max_new as u32,
             delta: delta.clone(),
         };
+        let t0 = Instant::now();
         let attempt = match self.open_shard(shard) {
             Ok(mut conn) => conn.generate_streaming(&req, |t| {
                 emitted += 1;
@@ -607,6 +638,7 @@ impl Router {
         };
         match attempt {
             Ok(toks) => {
+                self.route_hist[shard].record(t0.elapsed().as_secs_f64());
                 self.note_outcome(shard, None);
                 self.note_turn(session, shard, &delta, &toks);
                 Ok(toks)
@@ -775,6 +807,7 @@ impl Router {
                 delta: delta.to_vec(),
             };
             let mut replayed = 0usize;
+            let t0 = Instant::now();
             match conn.generate_streaming(&req, |t| {
                 replayed += 1;
                 if replayed > emitted {
@@ -782,6 +815,8 @@ impl Router {
                 }
             }) {
                 Ok(toks) => {
+                    self.route_hist[target].record(t0.elapsed().as_secs_f64());
+                    self.migrations.resurrections += 1;
                     self.note_outcome(target, None);
                     self.note_turn(session, target, delta, &toks);
                     return Ok(toks);
@@ -875,6 +910,7 @@ impl Router {
         session: u64,
         cause: RouteError,
     ) -> Result<T, RouteError> {
+        self.migrations.aborts += 1;
         match self.settle_export(from, session, false) {
             Ok(()) => Err(cause),
             Err(abort_err) => Err(RouteError::Protocol(format!(
@@ -891,6 +927,7 @@ impl Router {
         session: u64,
         bytes: usize,
     ) -> Result<usize, RouteError> {
+        self.migrations.commits += 1;
         self.resident.insert(session, to);
         // commit releases the source's inactive stash.  Best-effort: a
         // failed commit leaves a stale stash entry, never a live duplicate
@@ -967,6 +1004,8 @@ impl Router {
                 src.id.weights_fp, dst.id.weights_fp
             )));
         }
+        // identity checks passed: the move is actually starting
+        self.migrations.attempts += 1;
         // connect to the TARGET before detaching anything from the source:
         // a down or unreachable target must fail the migration while the
         // session still lives untouched on its source shard
@@ -1054,6 +1093,7 @@ impl Router {
         let (_conn, id) = Conn::open(addr, self.faults.clone())?;
         self.shards.push(ShardInfo { addr, id, draining: false });
         self.breakers.push(Breaker::new(self.breaker_cfg));
+        self.route_hist.push(Hist::new());
         self.rebuild_ring();
         Ok(self.shards.len() - 1)
     }
@@ -1130,6 +1170,88 @@ impl Router {
             }
         }
         self.breakers.iter().map(|b| b.state()).collect()
+    }
+
+    /// Lifetime migration/resurrection counts.
+    pub fn migration_stats(&self) -> MigrationStats {
+        self.migrations
+    }
+
+    /// Observable circuit state of every shard's breaker, indexed like
+    /// the shards.
+    pub fn breaker_states(&self) -> Vec<BreakerState> {
+        self.breakers.iter().map(|b| b.state()).collect()
+    }
+
+    /// Pull every shard's metric snapshot over the wire, merge them
+    /// exactly (counters/gauges sum, histograms merge bucket-wise), and
+    /// fold in the router's own routing/breaker/migration metrics.
+    ///
+    /// Scrape-tolerant: a shard that cannot answer is skipped — its
+    /// numbers are simply absent from this scrape — and counted in
+    /// `lh_scrape_errors_total`, so a dead shard degrades the scrape
+    /// instead of failing it.
+    pub fn cluster_metrics(&mut self) -> Snapshot {
+        let mut snap = Snapshot::default();
+        for i in 0..self.shards.len() {
+            let pulled = self
+                .open_shard(i)
+                .and_then(|mut conn| conn.request(&Frame::Metrics));
+            match pulled {
+                Ok(Frame::MetricsReport { entries }) => {
+                    self.note_outcome(i, None);
+                    for (name, v) in entries {
+                        snap.merge_entry(&name, v);
+                    }
+                }
+                Ok(_) => self.scrape_errors += 1,
+                Err(e) => {
+                    self.note_outcome(i, Some(&e));
+                    self.scrape_errors += 1;
+                }
+            }
+        }
+        let mut transitions = BreakerStats::default();
+        for (i, b) in self.breakers.iter().enumerate() {
+            let level = match b.state() {
+                BreakerState::Closed => 0,
+                BreakerState::HalfOpen => 1,
+                BreakerState::Open => 2,
+            };
+            snap.merge_entry(
+                &format!("lh_breaker_state{{shard=\"{i}\"}}"),
+                MetricValue::Gauge(level),
+            );
+            let st = b.stats();
+            transitions.opened += st.opened;
+            transitions.half_opened += st.half_opened;
+            transitions.closed += st.closed;
+        }
+        for (i, h) in self.route_hist.iter().enumerate() {
+            if h.count() > 0 {
+                snap.merge_entry(
+                    &format!("lh_route_seconds{{shard=\"{i}\"}}"),
+                    MetricValue::Hist(h.clone()),
+                );
+            }
+        }
+        let m = self.migrations;
+        let fault_hits =
+            self.faults.as_ref().map(|p| p.hits().len() as u64).unwrap_or(0);
+        for (name, v) in [
+            ("lh_breaker_opened_total", transitions.opened),
+            ("lh_breaker_half_opened_total", transitions.half_opened),
+            ("lh_breaker_closed_total", transitions.closed),
+            ("lh_migration_attempts_total", m.attempts),
+            ("lh_migration_commits_total", m.commits),
+            ("lh_migration_aborts_total", m.aborts),
+            ("lh_resurrections_total", m.resurrections),
+            ("lh_fault_hits_total", fault_hits),
+            ("lh_scrape_errors_total", self.scrape_errors),
+        ] {
+            snap.merge_entry(name, MetricValue::Counter(v));
+        }
+        snap
     }
 }
 
@@ -1489,6 +1611,71 @@ mod tests {
             "target coordinator must hold the session"
         );
         assert_eq!(r.submit_in_session(sid, vec![4], 3).unwrap().len(), 3);
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// The cluster scrape merges per-shard snapshots exactly and carries
+    /// the router's own routing/breaker/migration metrics; migrations
+    /// and resurrections are counted on the stats struct.
+    #[test]
+    fn cluster_metrics_merge_shards_and_count_migrations() {
+        let shards = native_shards(2);
+        let mut r = router_over(&shards);
+        let sid = 21u64;
+        r.submit_in_session(sid, vec![1, 2, 3], 3).unwrap();
+        r.submit_in_session(sid, vec![4], 3).unwrap();
+        let home = r.shard_of(sid).unwrap();
+        r.migrate(sid, 1 - home).unwrap();
+        assert_eq!(
+            r.migration_stats(),
+            MigrationStats { attempts: 1, commits: 1, aborts: 0, resurrections: 0 }
+        );
+        let snap = r.cluster_metrics();
+        let e = &snap.entries;
+        // shard-side counters merged across both shards
+        assert_eq!(e.get("lh_requests_done_total"), Some(&MetricValue::Counter(2)));
+        match e.get("lh_ttft_seconds") {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count(), 2),
+            other => panic!("expected merged ttft hist, got {other:?}"),
+        }
+        // router-side: both turns landed on the home shard's route hist
+        match e.get(&format!("lh_route_seconds{{shard=\"{home}\"}}")) {
+            Some(MetricValue::Hist(h)) => assert_eq!(h.count(), 2),
+            other => panic!("expected route hist for shard {home}, got {other:?}"),
+        }
+        assert_eq!(
+            e.get("lh_breaker_state{shard=\"0\"}"),
+            Some(&MetricValue::Gauge(0))
+        );
+        assert_eq!(e.get("lh_migration_commits_total"), Some(&MetricValue::Counter(1)));
+        assert_eq!(e.get("lh_scrape_errors_total"), Some(&MetricValue::Counter(0)));
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// A dead shard degrades the scrape (its numbers are absent, the
+    /// error is counted) instead of failing it.
+    #[test]
+    fn cluster_metrics_tolerate_a_dead_shard() {
+        let shards = native_shards(2);
+        let (mut r, faults) = router_with_faults(&shards, BreakerConfig::default());
+        r.submit(vec![1, 2], 2).unwrap();
+        r.submit(vec![1, 2], 2).unwrap();
+        faults.kill(shards[0].addr());
+        let snap = r.cluster_metrics();
+        let e = &snap.entries;
+        // exactly one shard answered
+        assert_eq!(e.get("lh_requests_done_total"), Some(&MetricValue::Counter(1)));
+        assert_eq!(e.get("lh_scrape_errors_total"), Some(&MetricValue::Counter(1)));
+        // the failed pull fed the breaker, and a second scrape still works
+        let again = r.cluster_metrics();
+        assert_eq!(
+            again.entries.get("lh_requests_done_total"),
+            Some(&MetricValue::Counter(1))
+        );
         for s in shards {
             s.shutdown();
         }

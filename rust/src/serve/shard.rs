@@ -402,7 +402,17 @@ fn serve_conn(
                         requests_done: m.requests_done,
                         tokens_generated: m.tokens_generated,
                         prefill_tokens_saved: m.prefill_tokens_saved,
+                        queue_depth: m.queue_depth,
                     }),
+                )?
+            }
+            Frame::Metrics => {
+                // full snapshot under stable schema names — the router
+                // merges these exactly across shards (hist merge is exact,
+                // counters/gauges sum)
+                wire::write_frame(
+                    &mut stream,
+                    &Frame::MetricsReport { entries: h.metrics.export_entries() },
                 )?
             }
             // reply frames (or a client Hello) are not valid requests
@@ -865,6 +875,43 @@ mod tests {
                 assert_eq!(h.in_flight, 0);
             }
             other => panic!("expected HealthReport, got {other:?}"),
+        }
+        shard.shutdown();
+    }
+
+    #[test]
+    fn metrics_frame_returns_schema_named_snapshot() {
+        use crate::obs::MetricValue;
+        let shard = native_shard();
+        let mut client = RawClient::connect(shard.addr());
+        client.send(&Frame::SubmitInSession {
+            session: 5,
+            strict: false,
+            max_new: 4,
+            delta: vec![2, 7],
+        });
+        let _ = client.collect_generation();
+        client.send(&Frame::Metrics);
+        match client.recv() {
+            Frame::MetricsReport { entries } => {
+                let get = |name: &str| {
+                    entries
+                        .iter()
+                        .find(|(n, _)| n == name)
+                        .map(|(_, v)| v.clone())
+                        .unwrap_or_else(|| panic!("missing metric {name}"))
+                };
+                assert_eq!(get("lh_requests_done_total"), MetricValue::Counter(1));
+                match get("lh_ttft_seconds") {
+                    MetricValue::Hist(h) => assert_eq!(h.count(), 1),
+                    other => panic!("lh_ttft_seconds must be a hist, got {other:?}"),
+                }
+                match get("lh_queue_depth") {
+                    MetricValue::Gauge(0) => {}
+                    other => panic!("queue must be drained, got {other:?}"),
+                }
+            }
+            other => panic!("expected MetricsReport, got {other:?}"),
         }
         shard.shutdown();
     }

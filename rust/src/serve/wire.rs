@@ -27,14 +27,17 @@
 
 use std::io::{self, Read, Write};
 
+use crate::obs::{Hist, MetricValue, BUCKETS};
 use crate::util::bytes::{ByteReader, ReadErr};
 
 /// Protocol version; bump on any frame-layout change so mixed-version
 /// router/shard pairs refuse each other at the handshake.  v2 added the
 /// commit/abort migration pair ([`Frame::ExportCommit`] /
 /// [`Frame::ExportAbort`]), the transcript probe ([`Frame::Transcript`] /
-/// [`Frame::TranscriptIs`]) and [`ErrCode::Unavailable`].
-pub const PROTO_VERSION: u32 = 2;
+/// [`Frame::TranscriptIs`]) and [`ErrCode::Unavailable`].  v3 added the
+/// observability pull ([`Frame::Metrics`] / [`Frame::MetricsReport`]) and
+/// the `queue_depth` field of [`HealthReport`].
+pub const PROTO_VERSION: u32 = 3;
 
 /// Upper bound on one frame's encoded size (tag + payload).
 pub const MAX_FRAME_BYTES: u32 = 64 << 20;
@@ -102,6 +105,8 @@ pub struct HealthReport {
     pub tokens_generated: u64,
     /// Prefill tokens skipped by resuming stored state.
     pub prefill_tokens_saved: u64,
+    /// Requests waiting for a slot right now.
+    pub queue_depth: u64,
 }
 
 /// One protocol frame.  Client-to-shard requests first, then shard
@@ -136,6 +141,9 @@ pub enum Frame {
     },
     /// Ask for a [`Frame::HealthReport`].
     Health,
+    /// Ask for a [`Frame::MetricsReport`]: the shard's full named-metric
+    /// snapshot (counters, gauges, latency histograms).
+    Metrics,
     /// Second phase of a migration: the export landed on the target, so
     /// the source shard may discard its stashed copy of the session.  The
     /// session survives on exactly one shard at every point of this
@@ -174,6 +182,11 @@ pub enum Frame {
     /// ExportAbort).
     Ok,
     HealthReport(HealthReport),
+    /// Reply to [`Frame::Metrics`]: the shard's named-metric snapshot.
+    /// Histograms ship sparsely (only non-zero buckets) over the shared
+    /// fixed bucket grid, so the router can merge shard histograms
+    /// exactly into cluster histograms.
+    MetricsReport { entries: Vec<(String, MetricValue)> },
     /// Reply to [`Frame::Transcript`]: the session's complete token
     /// history in order.
     TranscriptIs { tokens: Vec<i32> },
@@ -191,6 +204,7 @@ const TAG_HEALTH: u8 = 7;
 const TAG_EXPORT_COMMIT: u8 = 8;
 const TAG_EXPORT_ABORT: u8 = 9;
 const TAG_TRANSCRIPT: u8 = 10;
+const TAG_METRICS: u8 = 11;
 const TAG_TOKEN: u8 = 16;
 const TAG_DONE: u8 = 17;
 const TAG_BLOB: u8 = 18;
@@ -198,6 +212,7 @@ const TAG_OK: u8 = 19;
 const TAG_HEALTH_REPORT: u8 = 20;
 const TAG_ERROR: u8 = 21;
 const TAG_TRANSCRIPT_IS: u8 = 22;
+const TAG_METRICS_REPORT: u8 = 23;
 
 fn bad_data(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -246,6 +261,43 @@ impl Enc {
                 self.u8(1);
                 self.u32(v.len() as u32);
                 self.0.extend_from_slice(v);
+            }
+        }
+    }
+
+    /// Sparse histogram: only non-zero buckets travel (the grid is a
+    /// compile-time constant shared by both ends), then total count and
+    /// the sum's raw bits.
+    fn hist(&mut self, h: &Hist) {
+        let nonzero: Vec<(usize, u64)> = h
+            .bucket_counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect();
+        self.u8(nonzero.len() as u8);
+        for (i, c) in nonzero {
+            self.u8(i as u8);
+            self.u64(c);
+        }
+        self.u64(h.count());
+        self.u64(h.sum().to_bits());
+    }
+
+    fn metric(&mut self, v: &MetricValue) {
+        match v {
+            MetricValue::Counter(c) => {
+                self.u8(0);
+                self.u64(*c);
+            }
+            MetricValue::Gauge(g) => {
+                self.u8(1);
+                self.u64(*g);
+            }
+            MetricValue::Hist(h) => {
+                self.u8(2);
+                self.hist(h);
             }
         }
     }
@@ -310,6 +362,31 @@ impl Dec<'_> {
         }
     }
 
+    fn hist(&mut self) -> io::Result<Hist> {
+        let n = self.u8()? as usize;
+        let mut counts = [0u64; BUCKETS];
+        for _ in 0..n {
+            let idx = self.u8()? as usize;
+            if idx >= BUCKETS {
+                return Err(bad_data("histogram bucket index out of range"));
+            }
+            // wrapping: corrupt duplicate pairs must not panic the decoder
+            counts[idx] = counts[idx].wrapping_add(self.u64()?);
+        }
+        let count = self.u64()?;
+        let sum = f64::from_bits(self.u64()?);
+        Ok(Hist::from_raw(counts, count, sum))
+    }
+
+    fn metric(&mut self) -> io::Result<MetricValue> {
+        match self.u8()? {
+            0 => Ok(MetricValue::Counter(self.u64()?)),
+            1 => Ok(MetricValue::Gauge(self.u64()?)),
+            2 => Ok(MetricValue::Hist(self.hist()?)),
+            _ => Err(bad_data("bad metric kind tag")),
+        }
+    }
+
     fn finish(&self) -> io::Result<()> {
         if self.0.is_exhausted() {
             Ok(())
@@ -359,6 +436,15 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.opt_bytes(state);
         }
         Frame::Health => e.u8(TAG_HEALTH),
+        Frame::Metrics => e.u8(TAG_METRICS),
+        Frame::MetricsReport { entries } => {
+            e.u8(TAG_METRICS_REPORT);
+            e.u32(entries.len() as u32);
+            for (name, v) in entries {
+                e.str(name);
+                e.metric(v);
+            }
+        }
         Frame::ExportCommit { session } => {
             e.u8(TAG_EXPORT_COMMIT);
             e.u64(*session);
@@ -403,6 +489,7 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u64(h.requests_done);
             e.u64(h.tokens_generated);
             e.u64(h.prefill_tokens_saved);
+            e.u64(h.queue_depth);
         }
         Frame::Error { code, msg } => {
             e.u8(TAG_ERROR);
@@ -442,6 +529,17 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             state: d.opt_bytes()?,
         },
         TAG_HEALTH => Frame::Health,
+        TAG_METRICS => Frame::Metrics,
+        TAG_METRICS_REPORT => {
+            let n = d.u32()? as usize;
+            let mut entries = Vec::new();
+            for _ in 0..n {
+                let name = d.str()?;
+                let v = d.metric()?;
+                entries.push((name, v));
+            }
+            Frame::MetricsReport { entries }
+        }
         TAG_EXPORT_COMMIT => Frame::ExportCommit { session: d.u64()? },
         TAG_EXPORT_ABORT => Frame::ExportAbort { session: d.u64()? },
         TAG_TRANSCRIPT => Frame::Transcript { session: d.u64()? },
@@ -465,6 +563,7 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             requests_done: d.u64()?,
             tokens_generated: d.u64()?,
             prefill_tokens_saved: d.u64()?,
+            queue_depth: d.u64()?,
         }),
         TAG_ERROR => Frame::Error { code: ErrCode::from_u16(d.u16()?), msg: d.str()? },
         other => return Err(bad_data(&format!("unknown frame tag {other}"))),
@@ -553,6 +652,19 @@ mod tests {
             state: None,
         });
         roundtrip(Frame::Health);
+        roundtrip(Frame::Metrics);
+        roundtrip(Frame::MetricsReport { entries: vec![] });
+        let mut h = Hist::new();
+        h.record(0.001);
+        h.record(0.002);
+        h.record(1e9); // overflow bucket must survive the sparse encoding
+        roundtrip(Frame::MetricsReport {
+            entries: vec![
+                ("lh_requests_total".into(), MetricValue::Counter(7)),
+                ("lh_queue_depth".into(), MetricValue::Gauge(0)),
+                ("lh_ttft_seconds".into(), MetricValue::Hist(h)),
+            ],
+        });
         roundtrip(Frame::ExportCommit { session: 21 });
         roundtrip(Frame::ExportAbort { session: u64::MAX });
         roundtrip(Frame::Transcript { session: 0 });
@@ -577,6 +689,7 @@ mod tests {
             requests_done: 6,
             tokens_generated: 7,
             prefill_tokens_saved: 8,
+            queue_depth: 9,
         }));
         for code in [
             ErrCode::UnknownSession,
@@ -674,10 +787,26 @@ mod tests {
         }
     }
 
+    fn arb_hist(rng: &mut Prng) -> Hist {
+        let mut h = Hist::new();
+        for _ in 0..rng.below(32) {
+            h.record(rng.uniform() * 100.0);
+        }
+        h
+    }
+
+    fn arb_metric(rng: &mut Prng) -> MetricValue {
+        match rng.below(3) {
+            0 => MetricValue::Counter(rng.next_u64()),
+            1 => MetricValue::Gauge(rng.next_u64()),
+            _ => MetricValue::Hist(arb_hist(rng)),
+        }
+    }
+
     /// A random instance of every frame kind — the generator behind the
     /// wire property tests, so fuzzing covers each tag's payload layout.
     fn arb_frame(rng: &mut Prng) -> Frame {
-        match rng.below(17) {
+        match rng.below(19) {
             0 => Frame::Hello {
                 proto: rng.next_u64() as u32,
                 engine: "hyena".into(),
@@ -727,7 +856,14 @@ mod tests {
                 requests_done: rng.next_u64(),
                 tokens_generated: rng.next_u64(),
                 prefill_tokens_saved: rng.next_u64(),
+                queue_depth: rng.next_u64(),
             }),
+            16 => Frame::Metrics,
+            17 => Frame::MetricsReport {
+                entries: (0..rng.below(5))
+                    .map(|i| (format!("lh_arb_{i}"), arb_metric(rng)))
+                    .collect(),
+            },
             _ => Frame::Error {
                 code: ErrCode::from_u16(rng.below(8) as u16),
                 msg: "m".repeat(rng.below(16)),

@@ -1,0 +1,256 @@
+//! Loopback integration test of the cluster observability layer: a
+//! 2-shard cluster behind a [`FrontServer`] whose HTTP sibling listener
+//! is scraped over a real socket while the cluster serves traffic.
+//!
+//! The acceptance invariants:
+//!
+//! * `GET /metrics` on a live cluster returns Prometheus text carrying
+//!   the **merged** TTFT/TPOT histograms (shard samples summed
+//!   bucket-exactly, `_count` equal to the total turns served), the
+//!   per-shard breaker states, and the router's migration counters;
+//! * a scrape issued **mid-generation** (a streamed turn held open by an
+//!   injected token-stream delay) waits out the in-flight turn and then
+//!   succeeds — the turn's stream is never cut and the scrape observes
+//!   the completed request;
+//! * malformed, oversized and non-GET requests get typed HTTP errors
+//!   (400/431/405) and never take the endpoint down.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::serve::wire;
+use laughing_hyena::serve::{
+    BreakerConfig, FaultAction, FaultPlan, Frame, FrontConfig, FrontServer, Point, Router, Rule,
+    ShardServer,
+};
+
+/// Shared seed: every shard carries identical weights, the precondition
+/// for cross-shard migration (and for migrating mid-test here).
+const SEED: u64 = 11;
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// N native shards behind a front server, with a fault plan threaded in
+/// and the background prober disabled (tests drive probes by hand so
+/// breaker counters stay deterministic).
+fn launch(n: usize) -> (Vec<ShardServer>, FrontServer, Arc<FaultPlan>) {
+    let shape = shape();
+    let shards: Vec<ShardServer> =
+        (0..n).map(|_| ShardServer::spawn_native(&shape, 2, SEED, cfg()).unwrap()).collect();
+    let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+    let faults = Arc::new(FaultPlan::new());
+    let router = Router::new_with(&addrs, BreakerConfig::default(), Some(faults.clone())).unwrap();
+    let front =
+        FrontServer::spawn(router, FrontConfig { max_inflight: 4, probe_interval: None }).unwrap();
+    (shards, front, faults)
+}
+
+/// One blocking HTTP/1.1 exchange: write the request, half-close, read
+/// the full response, return (status, body).
+fn http_get_raw(addr: SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(raw).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable status line in {text:?}"));
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    http_get_raw(addr, format!("GET {path} HTTP/1.1\r\nhost: t\r\n\r\n").as_bytes())
+}
+
+/// One wire-level turn through the front door: connect, swallow the
+/// greeting, submit, collect the streamed tokens until `Done`.
+fn front_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, max_new: u32) -> Vec<i32> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    match wire::read_frame(&mut s).unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello greeting, got {other:?}"),
+    }
+    wire::write_frame(
+        &mut s,
+        &Frame::SubmitInSession { session: sid, strict: false, max_new, delta },
+    )
+    .unwrap();
+    let mut toks = Vec::new();
+    loop {
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Token { token } => toks.push(token),
+            Frame::Done { .. } => return toks,
+            other => panic!("expected Token/Done, got {other:?}"),
+        }
+    }
+}
+
+/// The acceptance scrape: drive 4 sessions x 2 turns plus one live
+/// migration and a post-migration turn, then `GET /metrics` and check
+/// the Prometheus text carries the merged latency histograms, both
+/// breaker states and the migration counters — with `/admin` and
+/// `/traces` serving the same cluster.
+#[test]
+fn live_two_shard_scrape_merges_hists_breakers_and_migrations() {
+    let (shards, front, _faults) = launch(2);
+    let addr = front.addr();
+    // 4 sessions x 2 turns over the wire: 8 requests spread across both
+    // shards by consistent hashing
+    for t in 0..2 {
+        for sid in 0..4u64 {
+            let toks = front_turn(addr, sid, vec![1 + (sid + t) as i32; 5], 3);
+            assert_eq!(toks.len(), 3);
+        }
+    }
+    // live-migrate session 0 and serve one more turn on its new home
+    let router = front.router();
+    {
+        let mut r = router.lock().unwrap();
+        let home = r.shard_of(0).unwrap();
+        r.migrate(0, 1 - home).unwrap();
+    }
+    let toks = front_turn(addr, 0, vec![9, 9], 3);
+    assert_eq!(toks.len(), 3);
+
+    let (status, body) = http_get(front.http_addr(), "/metrics");
+    assert_eq!(status, 200, "scrape failed: {body}");
+    // merged latency histograms: 9 turns total, every sample present in
+    // the cluster-wide _count regardless of which shard served it
+    assert!(body.contains("# TYPE lh_ttft_seconds histogram"), "{body}");
+    assert!(body.contains("lh_ttft_seconds_count 9\n"), "{body}");
+    assert!(body.contains("lh_ttft_seconds_bucket{le=\"+Inf\"} 9\n"), "{body}");
+    assert!(body.contains("# TYPE lh_tpot_seconds histogram"), "{body}");
+    assert!(body.contains("lh_tpot_seconds_count 9\n"), "{body}");
+    assert!(body.contains("lh_e2e_seconds_count 9\n"), "{body}");
+    // shard-side counters sum across the cluster
+    assert!(body.contains("lh_requests_done_total 9\n"), "{body}");
+    // both breakers closed, reported per shard
+    assert!(body.contains("lh_breaker_state{shard=\"0\"} 0\n"), "{body}");
+    assert!(body.contains("lh_breaker_state{shard=\"1\"} 0\n"), "{body}");
+    // the migration shows up in the router-side counters
+    assert!(body.contains("lh_migration_attempts_total 1\n"), "{body}");
+    assert!(body.contains("lh_migration_commits_total 1\n"), "{body}");
+    assert!(body.contains("lh_migration_aborts_total 0\n"), "{body}");
+    assert!(body.contains("lh_scrape_errors_total 0\n"), "{body}");
+    // front-door instrumentation rode along in the same snapshot
+    assert!(body.contains("lh_front_requests_total 9\n"), "{body}");
+    assert!(body.contains("lh_front_in_flight 0\n"), "{body}");
+
+    // the dashboard and the trace ring serve the same cluster
+    let (status, admin) = http_get(front.http_addr(), "/admin");
+    assert_eq!(status, 200);
+    assert!(admin.contains("migrations: 1 attempted, 1 committed"), "{admin}");
+    let (status, traces) = http_get(front.http_addr(), "/traces");
+    assert_eq!(status, 200);
+    assert_eq!(traces.lines().count(), 9, "one trace per front turn: {traces}");
+    assert!(traces.contains("\"ok\":true"), "{traces}");
+
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// A scrape issued while a streamed turn is in flight (held open by an
+/// injected token-stream delay) must wait the turn out and then succeed:
+/// the stream is never cut, and the scrape observes the completed
+/// request.
+#[test]
+fn mid_generation_scrape_waits_out_the_stream_and_succeeds() {
+    let (shards, front, faults) = launch(2);
+    // hold the token relay open mid-stream so the scrape demonstrably
+    // arrives while the turn is still streaming
+    faults.add_rule(Rule {
+        shard: None,
+        point: Point::TokenStream { after: 2 },
+        action: FaultAction::Delay(Duration::from_millis(300)),
+        times: 1,
+    });
+    let (tx, rx) = mpsc::channel();
+    let addr = front.addr();
+    let client = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Hello { .. } => {}
+            other => panic!("expected Hello greeting, got {other:?}"),
+        }
+        wire::write_frame(
+            &mut s,
+            &Frame::SubmitInSession { session: 7, strict: false, max_new: 5, delta: vec![3, 1, 4] },
+        )
+        .unwrap();
+        let mut toks = Vec::new();
+        loop {
+            match wire::read_frame(&mut s).unwrap() {
+                Frame::Token { token } => {
+                    toks.push(token);
+                    let _ = tx.send(());
+                }
+                Frame::Done { .. } => return toks,
+                other => panic!("expected Token/Done, got {other:?}"),
+            }
+        }
+    });
+    // first streamed token seen → the turn is in flight; scrape now.
+    // The /metrics handler blocks on the router lock the relay holds, so
+    // by the time the response arrives the turn must be complete.
+    rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let (status, body) = http_get(front.http_addr(), "/metrics");
+    assert_eq!(status, 200, "mid-generation scrape failed: {body}");
+    assert!(
+        body.contains("lh_requests_done_total 1\n"),
+        "the scrape waits out the in-flight turn, so it sees it done: {body}"
+    );
+    let toks = client.join().unwrap();
+    assert_eq!(toks.len(), 5, "the scrape must never cut a live stream");
+    assert_eq!(faults.rules_pending(), 0, "the staged mid-stream delay never fired");
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// Malformed, oversized and non-GET requests each get their typed HTTP
+/// error over a real socket — and the endpoint keeps serving afterward.
+#[test]
+fn http_error_paths_are_typed_and_leave_the_endpoint_alive() {
+    let (shards, front, _faults) = launch(2);
+    let http = front.http_addr();
+    let (status, _) = http_get_raw(http, b"POST /metrics HTTP/1.1\r\nhost: t\r\n\r\n");
+    assert_eq!(status, 405, "non-GET must be refused as method-not-allowed");
+    let (status, _) = http_get_raw(http, b"\x00\xff garbage\r\n\r\n");
+    assert_eq!(status, 400, "malformed head must be a bad request");
+    let (status, _) = http_get(http, "/nope");
+    assert_eq!(status, 404);
+    let mut huge = b"GET /metrics HTTP/1.1\r\n".to_vec();
+    huge.extend(vec![b'a'; 64 * 1024]);
+    let (status, _) = http_get_raw(http, &huge);
+    assert_eq!(status, 431, "an unbounded header must be refused, not buffered");
+    // none of that killed the listener: a well-formed scrape still works
+    let (status, body) = http_get(http, "/metrics");
+    assert_eq!(status, 200);
+    assert!(body.contains("lh_requests_done_total 0\n"), "{body}");
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
