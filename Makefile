@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci chaos metrics lint doc bench bench-decode bench-smoke serve-demo artifacts clean
+.PHONY: help build test verify ci chaos metrics load lint doc bench bench-decode bench-smoke serve-demo loadgen-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -18,6 +18,9 @@ help:
 	@echo "               wall-clock bound; loopback-only, port-0, sandbox-safe"
 	@echo "  metrics      observability suite: obs unit tests + the live-cluster"
 	@echo "               /metrics scrape integration test (tests/serve_metrics.rs)"
+	@echo "  load         chaos-under-load harness (tests/serve_load.rs): 200-session"
+	@echo "               loadgen over the wire front door with a mid-run shard kill,"
+	@echo "               revival, bulk drain, typed-shed and TTL-resume acceptance"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
@@ -28,6 +31,8 @@ help:
 	@echo "               no file writes) so bench code cannot rot"
 	@echo "  serve-demo   2-shard serving cluster on loopback sockets with a"
 	@echo "               live mid-conversation session migration"
+	@echo "  loadgen-demo closed-loop loadgen against an in-process 2-shard cluster;"
+	@echo "               writes BENCH_load.json at the repo root"
 	@echo "  artifacts    lower the L2 graphs to HLO under rust/artifacts/ (needs JAX)"
 	@echo "  clean        cargo clean + remove results/"
 
@@ -53,6 +58,7 @@ ci:
 	$(CARGO) test -q --features simd
 	$(MAKE) chaos
 	$(MAKE) metrics
+	$(MAKE) load
 	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
@@ -73,6 +79,14 @@ metrics:
 	$(CARGO) test -q --lib obs::
 	timeout 420 $(CARGO) test -q --test serve_metrics
 
+# the overload/robustness acceptance harness: deterministic loadgen
+# workload (rust/src/loadgen.rs) over real loopback wire connections with
+# kill/revive/drain chaos underneath, exactly-once bit-identical delivery
+# checked against an uninterrupted baseline.  Wall-clock-bounded: a hang
+# is an admission/recovery deadlock, not something to wait out.
+load:
+	timeout 420 $(CARGO) test -q --test serve_load
+
 # 1-iteration run of the decode bench (keeps its correctness cross-checks,
 # skips the gate and the BENCH_decode.json/CSV writes): proves the bench
 # still compiles and agrees without touching the recorded perf point.
@@ -84,6 +98,11 @@ bench-smoke:
 # loopback sockets, 4 sessions x 3 turns, one live migration in between
 serve-demo:
 	$(CARGO) run --release -- serve --shards 2 --sessions 4 --turns 3 --migrate
+
+# closed-loop loadgen demo against an in-process 2-shard cluster; writes
+# BENCH_load.json at the repo root
+loadgen-demo:
+	$(CARGO) run --release -- loadgen --shards 2 --sessions 16 --turns 3
 
 lint:
 	$(CARGO) clippy --all-targets -- -D warnings

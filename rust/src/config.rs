@@ -180,6 +180,17 @@ pub struct ServeConfig {
     /// Directory evicted session states spill to (None = drop on evict and
     /// re-prefill the transcript on the next turn).
     pub session_spill_dir: Option<String>,
+    /// Byte cap of the disk spill tier's live records (0 = unbounded);
+    /// past it the least-recently-spilled sessions are dropped from disk.
+    pub session_spill_budget: u64,
+    /// Idle-session TTL in milliseconds (0 = never expire).  A session
+    /// untouched this long is fully forgotten — state, spill record, and
+    /// coordinator-resident transcript — so abandoned conversations cost
+    /// zero RAM.
+    pub session_ttl_ms: u64,
+    /// Admission-queue length cap (0 = unbounded); arrivals past it are
+    /// refused with a typed `Overloaded` instead of queued.
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
@@ -191,6 +202,9 @@ impl Default for ServeConfig {
             mem_budget: 2 << 30,
             session_budget: 256 << 20,
             session_spill_dir: None,
+            session_spill_budget: 0,
+            session_ttl_ms: 0,
+            max_queue: 0,
         }
     }
 }
@@ -210,6 +224,13 @@ impl ServeConfig {
                 .get("serve", "session_spill_dir")
                 .filter(|s| !s.is_empty())
                 .map(|s| s.to_string()),
+            session_spill_budget: raw
+                .get_usize("serve", "session_spill_budget", d.session_spill_budget as usize)
+                as u64,
+            session_ttl_ms: raw
+                .get_usize("serve", "session_ttl_ms", d.session_ttl_ms as usize)
+                as u64,
+            max_queue: raw.get_usize("serve", "max_queue", d.max_queue),
         }
     }
 }
@@ -238,12 +259,22 @@ mod tests {
     #[test]
     fn parses_session_settings() {
         let raw = RawConfig::parse(
-            "[serve]\nsession_budget = 1024\nsession_spill_dir = \"/tmp/spill\"\n",
+            "[serve]\nsession_budget = 1024\nsession_spill_dir = \"/tmp/spill\"\n\
+             session_spill_budget = 4096\nsession_ttl_ms = 60000\nmax_queue = 128\n",
         )
         .unwrap();
         let sc = ServeConfig::from_raw(&raw);
         assert_eq!(sc.session_budget, 1024);
         assert_eq!(sc.session_spill_dir.as_deref(), Some("/tmp/spill"));
+        assert_eq!(sc.session_spill_budget, 4096);
+        assert_eq!(sc.session_ttl_ms, 60_000);
+        assert_eq!(sc.max_queue, 128);
+        // overload knobs default to "off" (0) so existing setups behave
+        // exactly as before
+        let d = ServeConfig::default();
+        assert_eq!(d.session_spill_budget, 0);
+        assert_eq!(d.session_ttl_ms, 0);
+        assert_eq!(d.max_queue, 0);
     }
 
     #[test]

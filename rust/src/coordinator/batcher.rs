@@ -61,6 +61,24 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Remove every queued request whose admission deadline has passed and
+    /// hand them back for typed refusal — run before each admission round
+    /// so overload sheds stale work instead of serving it late.  Requests
+    /// already in a slot are never shed (accepted work runs to
+    /// completion); relative queue order of survivors is preserved.
+    pub fn shed_expired(&mut self, now: std::time::Instant) -> Vec<GenRequest> {
+        let mut shed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for req in self.queue.drain(..) {
+            match req.deadline {
+                Some(d) if d <= now => shed.push(req),
+                _ => kept.push_back(req),
+            }
+        }
+        self.queue = kept;
+        shed
+    }
+
     pub fn queue_len(&self) -> usize {
         self.queue.len()
     }
@@ -162,6 +180,7 @@ mod tests {
                 reply: tx,
                 stream: None,
                 enqueued: Instant::now(),
+                deadline: None,
             },
             rx,
         )
@@ -359,6 +378,39 @@ mod tests {
         let next = b.admit();
         assert_eq!(next.len(), 1);
         assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn shed_expired_drops_only_stale_queued_work_preserving_order() {
+        use std::time::Duration;
+        let mut b = Batcher::new(1, 10, 1000);
+        let now = Instant::now();
+        // occupy the only slot with an expired-deadline request: admitted
+        // work is never shed
+        let (mut r, _rx0) = req(0, 2);
+        r.deadline = Some(now - Duration::from_millis(1));
+        b.enqueue(r);
+        assert_eq!(b.admit().len(), 1);
+        // queue: expired(1), live(2), no-deadline(3), expired(4)
+        let mut rxs = vec![];
+        for (id, dl) in [
+            (1u64, Some(now - Duration::from_millis(1))),
+            (2, Some(now + Duration::from_secs(3600))),
+            (3, None),
+            (4, Some(now)),
+        ] {
+            let (mut r, rx) = req(id, 2);
+            r.deadline = dl;
+            b.enqueue(r);
+            rxs.push(rx);
+        }
+        let shed = b.shed_expired(now);
+        let shed_ids: Vec<u64> = shed.iter().map(|r| r.id).collect();
+        assert_eq!(shed_ids, vec![1, 4], "exactly the expired queued requests");
+        let kept: Vec<u64> = b.queue.iter().map(|r| r.id).collect();
+        assert_eq!(kept, vec![2, 3], "survivors keep their order");
+        assert_eq!(b.busy_slots().len(), 1, "in-slot request untouched");
+        assert!(b.shed_expired(now).is_empty(), "idempotent once drained");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use std::sync::Mutex;
 
+use super::request::Refusal;
 use crate::obs::{Hist, MetricValue};
 
 #[derive(Default, Debug)]
@@ -52,6 +53,19 @@ pub struct MetricsInner {
     pub session_evictions: u64,
     /// Evictions persisted to the spill directory (gauge).
     pub session_spills: u64,
+    /// Idle sessions fully forgotten by the TTL sweep (transcript + state).
+    pub session_ttl_evictions: u64,
+    /// Live bytes currently held by the disk spill tier (gauge).
+    pub spill_bytes: u64,
+    /// Sessions the spill tier dropped to honor its byte cap (gauge,
+    /// mirrors the store).
+    pub spill_evictions: u64,
+    /// Spill segments compacted so far (gauge, mirrors the store).
+    pub spill_compactions: u64,
+    /// Queued requests shed because their deadline budget expired.
+    pub shed_deadline: u64,
+    /// Requests refused at the door because the queue was at capacity.
+    pub shed_overload: u64,
 }
 
 /// Shared metrics handle.
@@ -119,6 +133,30 @@ impl Metrics {
         m.session_spills = spills;
     }
 
+    /// Mirror the disk spill tier's gauges (live bytes, cap evictions,
+    /// compactions) after store maintenance or mutation.
+    pub fn set_spill_tier(&self, bytes: u64, evictions: u64, compactions: u64) {
+        let mut m = self.0.lock().unwrap();
+        m.spill_bytes = bytes;
+        m.spill_evictions = evictions;
+        m.spill_compactions = compactions;
+    }
+
+    /// The TTL sweep fully forgot one idle session.
+    pub fn record_ttl_eviction(&self) {
+        let mut m = self.0.lock().unwrap();
+        m.session_ttl_evictions += 1;
+    }
+
+    /// A request was refused instead of served (typed shed).
+    pub fn record_shed(&self, why: Refusal) {
+        let mut m = self.0.lock().unwrap();
+        match why {
+            Refusal::DeadlineExceeded => m.shed_deadline += 1,
+            Refusal::Overloaded => m.shed_overload += 1,
+        }
+    }
+
     /// A request finished: `ttft`/`total` are seconds since enqueue,
     /// `tokens` the generation length (drives the TPOT sample).
     pub fn record_done(&self, ttft: Option<f64>, total: f64, tokens: usize) {
@@ -155,6 +193,12 @@ impl Metrics {
             sessions_resident: m.sessions_resident,
             session_evictions: m.session_evictions,
             session_spills: m.session_spills,
+            session_ttl_evictions: m.session_ttl_evictions,
+            spill_bytes: m.spill_bytes,
+            spill_evictions: m.spill_evictions,
+            spill_compactions: m.spill_compactions,
+            shed_deadline: m.shed_deadline,
+            shed_overload: m.shed_overload,
         }
     }
 
@@ -186,6 +230,12 @@ impl Metrics {
             ("lh_session_bytes".into(), g(m.session_bytes_held)),
             ("lh_session_evictions_total".into(), c(m.session_evictions)),
             ("lh_session_spills_total".into(), c(m.session_spills)),
+            ("lh_session_ttl_evictions_total".into(), c(m.session_ttl_evictions)),
+            ("lh_spill_bytes".into(), g(m.spill_bytes)),
+            ("lh_spill_evictions_total".into(), c(m.spill_evictions)),
+            ("lh_spill_compactions_total".into(), c(m.spill_compactions)),
+            ("lh_shed_deadline_total".into(), c(m.shed_deadline)),
+            ("lh_shed_overload_total".into(), c(m.shed_overload)),
         ]
     }
 
@@ -301,6 +351,23 @@ mod tests {
         // single-token requests contribute no TPOT sample
         m.record_done(Some(0.01), 0.01, 1);
         assert_eq!(m.snapshot().tpot.count(), 1);
+    }
+
+    #[test]
+    fn overload_and_spill_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_shed(Refusal::DeadlineExceeded);
+        m.record_shed(Refusal::DeadlineExceeded);
+        m.record_shed(Refusal::Overloaded);
+        m.record_ttl_eviction();
+        m.set_spill_tier(8192, 3, 1);
+        let s = m.snapshot();
+        assert_eq!(s.shed_deadline, 2);
+        assert_eq!(s.shed_overload, 1);
+        assert_eq!(s.session_ttl_evictions, 1);
+        assert_eq!(s.spill_bytes, 8192);
+        assert_eq!(s.spill_evictions, 3);
+        assert_eq!(s.spill_compactions, 1);
     }
 
     #[test]

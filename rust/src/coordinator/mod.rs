@@ -12,7 +12,8 @@ pub mod request;
 pub mod server;
 pub mod state;
 
-pub use request::{GenRequest, GenResponse};
+pub use request::{GenRequest, GenResponse, Refusal};
 pub use server::{
-    CoordinatorClosed, CoordinatorHandle, SessionExport, SlotEngine, SubmitError,
+    CoordinatorClosed, CoordinatorHandle, SessionCensus, SessionExport, SlotEngine,
+    SubmitError,
 };

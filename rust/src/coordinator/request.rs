@@ -26,6 +26,11 @@ pub struct GenRequest {
     pub stream: Option<Sender<i32>>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+    /// Absolute admission deadline.  A request still *queued* past it is
+    /// shed with a typed [`Refusal::DeadlineExceeded`] instead of running
+    /// late; once admitted a turn always runs to completion (exactly-once
+    /// semantics for accepted work).  `None` = never shed.
+    pub deadline: Option<Instant>,
 }
 
 impl GenRequest {
@@ -39,7 +44,21 @@ impl GenRequest {
     }
 }
 
-/// The finished generation.
+/// Why the coordinator refused a request instead of generating.  A
+/// refused turn was **never applied**: no tokens ran, the session's
+/// transcript and state are untouched, so a client may safely retry the
+/// identical turn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Refusal {
+    /// The admission queue was at capacity when the request arrived.
+    Overloaded,
+    /// The request's deadline budget expired while it was still queued.
+    DeadlineExceeded,
+}
+
+/// The finished generation — or a typed refusal (`refusal` set, `tokens`
+/// empty).  Work is never silently dropped: every submitted request gets
+/// exactly one `GenResponse`.
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub id: u64,
@@ -48,6 +67,8 @@ pub struct GenResponse {
     pub ttft_s: f64,
     /// Seconds from enqueue to completion.
     pub total_s: f64,
+    /// Set when the request was shed instead of served.
+    pub refusal: Option<Refusal>,
 }
 
 /// Why a sequence left its slot.

@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, Slot};
 use super::metrics::Metrics;
-use super::request::{GenRequest, GenResponse};
+use super::request::{GenRequest, GenResponse, Refusal};
 pub use super::state::SlotEngine;
 use crate::config::ServeConfig;
 use crate::obs::{Trace, TraceRing};
@@ -40,13 +40,39 @@ enum Msg {
     /// Whether this coordinator holds any trace of the session (stored or
     /// spilled state, transcript, or an in-flight turn).
     Query(u64, Sender<bool>),
+    /// Every session id this coordinator holds any trace of (the
+    /// enumeration behind a bulk drain).
+    List(Sender<Vec<u64>>),
     /// Read a session's full transcript *without* detaching anything.
     /// Deferred until the session quiesces (like Export), so the reply
     /// always reflects every completed turn — the recovery primitive a
     /// front door uses to reconcile after a token stream was severed
     /// mid-turn.
     Transcript(u64, Sender<Option<Vec<i32>>>),
+    /// Exact footprint of every session this coordinator still holds.
+    Census(Sender<SessionCensus>),
     Shutdown,
+}
+
+/// Exact accounting of what sessions cost this coordinator right now —
+/// the observable behind the TTL guarantee that an idle session past its
+/// TTL holds *zero* RAM (state, spill index, and transcript included).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionCensus {
+    /// Sessions with a coordinator-resident transcript.
+    pub transcripts: u64,
+    /// Total tokens across all held transcripts.
+    pub transcript_tokens: u64,
+    /// Session states resident in store RAM.
+    pub resident_states: u64,
+    /// Bytes of store-RAM-resident states.
+    pub resident_bytes: u64,
+    /// Session states held by the disk spill tier.
+    pub spilled_states: u64,
+    /// Live bytes in the disk spill tier.
+    pub spilled_bytes: u64,
+    /// Session turns currently queued or occupying a slot.
+    pub in_flight: u64,
 }
 
 /// Everything a session is, detached from a coordinator: the O(1)
@@ -196,6 +222,22 @@ impl CoordinatorHandle {
         max_new_tokens: usize,
         stream: Option<Sender<i32>>,
     ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
+        self.submit_full(session, prompt, max_new_tokens, stream, None)
+    }
+
+    /// The fully-general submit: session tag, per-token stream, and an
+    /// absolute admission deadline.  A request still queued past its
+    /// deadline is refused with a typed
+    /// [`Refusal::DeadlineExceeded`][crate::coordinator::Refusal] response
+    /// (empty tokens) instead of running late; `None` never sheds.
+    pub fn submit_full(
+        &self,
+        session: Option<u64>,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        stream: Option<Sender<i32>>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
         let (tx, rx) = channel();
         let req = GenRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -208,9 +250,19 @@ impl CoordinatorHandle {
             reply: tx,
             stream,
             enqueued: Instant::now(),
+            deadline,
         };
         self.tx.send(Msg::Req(req)).map_err(|_| CoordinatorClosed)?;
         Ok(rx)
+    }
+
+    /// Exact per-session RAM/disk footprint of this coordinator (states,
+    /// spill tier, transcripts, in-flight turns) — the fixed-size census
+    /// behind the TTL zero-RAM guarantee and fleet-level leak checks.
+    pub fn session_census(&self) -> Result<SessionCensus, CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Census(tx)).map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
     }
 
     /// Drop a session's stored state and transcript (RAM and spill), so
@@ -248,6 +300,15 @@ impl CoordinatorHandle {
     pub fn session_known(&self, session_id: u64) -> Result<bool, CoordinatorClosed> {
         let (tx, rx) = channel();
         self.tx.send(Msg::Query(session_id, tx)).map_err(|_| CoordinatorClosed)?;
+        rx.recv().map_err(|_| CoordinatorClosed)
+    }
+
+    /// Every session id this coordinator holds any trace of — stored or
+    /// spilled state, transcript, or a queued/in-flight turn — sorted.
+    /// A bulk drain enumerates with this, then exports each id.
+    pub fn session_list(&self) -> Result<Vec<u64>, CoordinatorClosed> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::List(tx)).map_err(|_| CoordinatorClosed)?;
         rx.recv().map_err(|_| CoordinatorClosed)
     }
 
@@ -350,6 +411,14 @@ struct Sched {
     /// captured at admission/prefill and drained into the trace ring at
     /// retire — bounded by the slot count, never by traffic.
     stage_us: HashMap<u64, (u64, u64)>,
+    /// Last time each known session was touched (turn intake, retire, or
+    /// import) — drives the TTL sweep.
+    last_active: HashMap<u64, Instant>,
+    /// Idle-session TTL (`None` = TTL sweeping disabled).
+    ttl: Option<Duration>,
+    /// Queue-length admission cap (0 = unbounded): requests arriving at a
+    /// full queue are refused with a typed `Overloaded` instead of queued.
+    max_queue: usize,
     shutdown: bool,
 }
 
@@ -363,6 +432,7 @@ impl Sched {
     /// Drop a session's transcript and stored state (RAM and spill).
     fn free_session(&mut self, id: u64, m: &Metrics) {
         self.history.remove(&id);
+        self.last_active.remove(&id);
         self.store.evict_session(id);
         self.mirror_store(m);
     }
@@ -375,6 +445,92 @@ impl Sched {
             self.store.stats.evictions,
             self.store.stats.spills,
         );
+        m.set_spill_tier(
+            self.store.spill_bytes(),
+            self.store.stats.spill_evictions,
+            self.store.stats.compactions,
+        );
+    }
+
+    /// TTL sweep: fully forget sessions idle past the TTL — transcript,
+    /// stored state, and spill record all go, so an abandoned session
+    /// costs zero RAM.  A session with a turn queued or in flight (or a
+    /// pending export/transcript read) is deferred until it quiesces; the
+    /// serve layer's transcript mirror + re-prefill path keeps a
+    /// TTL-evicted session answerable without token drift.
+    fn sweep_ttl(&mut self, now: Instant, m: &Metrics) {
+        let ttl = match self.ttl {
+            Some(t) => t,
+            None => return,
+        };
+        let expired: Vec<u64> = self
+            .last_active
+            .iter()
+            .filter(|(_, &at)| now.duration_since(at) >= ttl)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            if self.session_in_flight(id)
+                || self.pending_export.contains_key(&id)
+                || self.pending_transcript.contains_key(&id)
+            {
+                continue; // mid-turn: defer until quiescent
+            }
+            self.pending_end.remove(&id);
+            self.free_session(id, m);
+            m.record_ttl_eviction();
+        }
+    }
+
+    /// Refuse a request with a typed refusal response (empty tokens) and
+    /// run the same quiescence bookkeeping a retire would — a shed turn
+    /// may have been the last thing keeping an export or deferred end
+    /// waiting.
+    fn refuse(&mut self, req: GenRequest, why: Refusal, m: &Metrics, tr: &TraceRing) {
+        m.record_shed(why);
+        let total = req.enqueued.elapsed().as_secs_f64();
+        tr.push(Trace {
+            id: req.id,
+            session: req.session,
+            admit_us: 0,
+            prefill_us: 0,
+            first_token_us: 0,
+            done_us: (total * 1e6) as u64,
+            tokens: 0,
+            ok: false,
+        });
+        let _ = req.reply.send(GenResponse {
+            id: req.id,
+            tokens: vec![],
+            ttft_s: total,
+            total_s: total,
+            refusal: Some(why),
+        });
+        if let Some(id) = req.session {
+            if !self.session_in_flight(id) {
+                self.fulfill_transcripts(id);
+                if self.pending_end.remove(&id) {
+                    self.free_session(id, m);
+                }
+                self.fulfill_exports(id, m);
+            }
+        }
+    }
+
+    /// Exact session footprint (the TTL zero-RAM observable).
+    fn census(&self) -> SessionCensus {
+        let queued = self.batcher.queue.iter().filter(|r| r.session.is_some()).count();
+        let slotted =
+            self.batcher.slots.iter().filter(|s| s.session().is_some()).count();
+        SessionCensus {
+            transcripts: self.history.len() as u64,
+            transcript_tokens: self.history.values().map(|h| h.len() as u64).sum(),
+            resident_states: self.store.len() as u64,
+            resident_bytes: self.store.bytes_used(),
+            spilled_states: self.store.spilled_len() as u64,
+            spilled_bytes: self.store.spill_bytes(),
+            in_flight: (queued + slotted) as u64,
+        }
     }
 
     /// Detach a quiescent session (state + transcript) and forget it
@@ -382,6 +538,7 @@ impl Sched {
     fn detach_session(&mut self, id: u64, m: &Metrics) -> Option<SessionExport> {
         let state = self.store.take(id);
         let transcript = self.history.remove(&id);
+        self.last_active.remove(&id);
         self.mirror_store(m);
         if state.is_none() && transcript.is_none() {
             return None;
@@ -414,9 +571,18 @@ impl Sched {
     }
 
     /// Apply one channel message (the single intake site).
-    fn apply_msg(&mut self, msg: Msg, m: &Metrics) {
+    fn apply_msg(&mut self, msg: Msg, m: &Metrics, tr: &TraceRing) {
         match msg {
             Msg::Req(r) => {
+                if self.max_queue > 0 && self.batcher.queue_len() >= self.max_queue {
+                    // admission cap: refuse at the door instead of letting
+                    // the queue grow without bound under overload
+                    self.refuse(r, Refusal::Overloaded, m, tr);
+                    return;
+                }
+                if let Some(id) = r.session {
+                    self.last_active.insert(id, Instant::now());
+                }
                 m.record_enqueue(self.batcher.queue_len() + 1);
                 self.batcher.enqueue(r);
             }
@@ -437,6 +603,7 @@ impl Sched {
             }
             Msg::Import(id, export, reply) => {
                 self.history.insert(id, export.transcript);
+                self.last_active.insert(id, Instant::now());
                 if let Some(state) = export.state {
                     self.store.put(id, state);
                 }
@@ -449,12 +616,24 @@ impl Sched {
                     || self.store.contains(id);
                 let _ = reply.send(known);
             }
+            Msg::List(reply) => {
+                let mut ids = self.store.ids();
+                ids.extend(self.history.keys().copied());
+                ids.extend(self.batcher.queue.iter().filter_map(|r| r.session));
+                ids.extend(self.batcher.slots.iter().filter_map(|s| s.session()));
+                ids.sort_unstable();
+                ids.dedup();
+                let _ = reply.send(ids);
+            }
             Msg::Transcript(id, reply) => {
                 if self.session_in_flight(id) {
                     self.pending_transcript.entry(id).or_default().push(reply);
                 } else {
                     let _ = reply.send(self.history.get(&id).cloned());
                 }
+            }
+            Msg::Census(reply) => {
+                let _ = reply.send(self.census());
             }
             Msg::Shutdown => self.shutdown = true,
         }
@@ -480,14 +659,21 @@ where
             store: Store::new(StoreConfig {
                 budget_bytes: cfg.session_budget,
                 spill_dir: cfg.session_spill_dir.as_ref().map(PathBuf::from),
+                spill_budget_bytes: cfg.session_spill_budget,
+                ..StoreConfig::default()
             }),
             history: HashMap::new(),
             pending_end: HashSet::new(),
             pending_export: HashMap::new(),
             pending_transcript: HashMap::new(),
             stage_us: HashMap::new(),
+            last_active: HashMap::new(),
+            ttl: (cfg.session_ttl_ms > 0)
+                .then(|| Duration::from_millis(cfg.session_ttl_ms)),
+            max_queue: cfg.max_queue,
             shutdown: false,
         };
+        let mut last_sweep = Instant::now();
         loop {
             // 1) intake: block briefly when there is nothing to run — no
             // busy slots and nothing admissible (an empty queue, or one
@@ -495,10 +681,23 @@ where
             let idle = s.batcher.busy_slots().is_empty() && !s.batcher.has_admissible();
             if idle && !s.shutdown {
                 match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(msg) => s.apply_msg(msg, &m),
+                    Ok(msg) => s.apply_msg(msg, &m, &tr),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => s.shutdown = true,
                 }
+                // idle housekeeping, off any turn's critical path: compact
+                // spill segments whose live ratio decayed
+                if s.store.maintain() > 0 {
+                    s.mirror_store(&m);
+                }
+            }
+            // TTL sweep on a coarse cadence (the loop always spins at
+            // >= 20 Hz when idle, so idle sessions are reaped promptly
+            // even while other sessions keep the batch busy)
+            let now = Instant::now();
+            if now.duration_since(last_sweep) >= Duration::from_millis(100) {
+                last_sweep = now;
+                s.sweep_ttl(now, &m);
             }
             // 1b) fast drain + opportunistic linger for batch formation:
             // while an admissible request is queued and slots remain free,
@@ -510,7 +709,7 @@ where
             while !s.shutdown {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        s.apply_msg(msg, &m);
+                        s.apply_msg(msg, &m, &tr);
                         continue;
                     }
                     Err(TryRecvError::Disconnected) => {
@@ -527,7 +726,7 @@ where
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(msg) => s.apply_msg(msg, &m),
+                    Ok(msg) => s.apply_msg(msg, &m, &tr),
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => {
                         s.shutdown = true;
@@ -538,9 +737,15 @@ where
             if s.shutdown && s.batcher.busy_slots().is_empty() && s.batcher.queue_len() == 0 {
                 break;
             }
-            // 2) admission: session turns with a stored state resume in
-            // O(delta); everything else (one-shots, first turns, store
-            // misses) goes through prefill
+            // 2) admission: first shed queued work whose deadline already
+            // passed (it would finish late anyway — refusing now frees the
+            // slot for work that can still meet its budget), then admit.
+            // Session turns with a stored state resume in O(delta);
+            // everything else (one-shots, first turns, store misses) goes
+            // through prefill
+            for req in s.batcher.shed_expired(Instant::now()) {
+                s.refuse(req, Refusal::DeadlineExceeded, &m, &tr);
+            }
             let admitted = s.batcher.admit();
             if !admitted.is_empty() {
                 let mut prefill_jobs: Vec<(usize, Vec<i32>)> = Vec::new();
@@ -658,6 +863,7 @@ where
                                 h.extend_from_slice(&req.prompt);
                                 h.extend_from_slice(&generated);
                                 let h_len = h.len();
+                                s.last_active.insert(id, Instant::now());
                                 if let Some(mut st) = engine.snapshot_slot(slot) {
                                     // the state has consumed everything
                                     // except the final pending greedy token
@@ -694,6 +900,7 @@ where
                             tokens: generated,
                             ttft_s: ttft.unwrap_or(total),
                             total_s: total,
+                            refusal: None,
                         });
                     }
                     engine.clear_slot(slot);
@@ -1139,6 +1346,124 @@ mod tests {
             let _ = noise.recv_timeout(Duration::from_secs(60)).unwrap();
         }
         assert_eq!(a, b, "sessions with equal transcripts diverged");
+        h.shutdown();
+    }
+
+    /// The TTL acceptance invariant: an idle session past its TTL holds
+    /// *zero* coordinator RAM — transcript, stored state, and spill index
+    /// all gone — proven by the fixed-size census, and a later turn under
+    /// the same id behaves exactly like a fresh session.
+    #[test]
+    fn ttl_sweep_frees_idle_session_to_zero_ram() {
+        let h = handle_cfg(2, ServeConfig { session_ttl_ms: 50, ..cfg(2) });
+        let g1 = turn(&h, 5, vec![1, 2, 3], 4);
+        let c = h.session_census().unwrap();
+        assert_eq!(c.transcripts, 1);
+        assert!(c.transcript_tokens >= 7, "prompt + generated held: {c:?}");
+        assert!(c.resident_states == 1 && c.resident_bytes > 0, "{c:?}");
+        // wait out TTL + sweep cadence
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while h.session_known(5).unwrap() {
+            assert!(Instant::now() < deadline, "TTL sweep never fired");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(
+            h.session_census().unwrap(),
+            SessionCensus::default(),
+            "an idle session past its TTL must cost zero RAM"
+        );
+        assert!(h.metrics.snapshot().session_ttl_evictions >= 1);
+        // the id is usable again, as a brand-new conversation
+        let g2 = turn(&h, 5, vec![1, 2, 3], 4);
+        assert_eq!(g1, g2, "post-TTL turn must equal a fresh first turn");
+        h.shutdown();
+    }
+
+    /// Satellite edge case: a TTL shorter than a turn must not fire
+    /// mid-conversation — eviction defers while any turn of the session
+    /// is queued or in flight, then reaps once quiescent.
+    #[test]
+    fn ttl_defers_mid_turn_until_quiescent() {
+        let h = handle_cfg(2, ServeConfig { session_ttl_ms: 1, ..cfg(2) });
+        // two pipelined turns: the session stays in flight continuously
+        // (turn 2 queued until turn 1 retires), spanning many TTL periods
+        let r1 = h.submit_in_session(9, vec![1, 2], 6).unwrap();
+        let r2 = h.submit_in_session(9, vec![3], 6).unwrap();
+        let g1 = r1.recv_timeout(Duration::from_secs(60)).unwrap().tokens;
+        let g2 = r2.recv_timeout(Duration::from_secs(60)).unwrap().tokens;
+        let h_ref = handle(2);
+        assert_eq!(g1, turn(&h_ref, 9, vec![1, 2], 6));
+        assert_eq!(
+            g2,
+            turn(&h_ref, 9, vec![3], 6),
+            "TTL fired mid-conversation: turn 2 lost turn 1's transcript"
+        );
+        // once quiescent, the sweep reaps it down to zero
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while h.session_known(9).unwrap() {
+            assert!(Instant::now() < deadline, "TTL sweep never fired");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(h.session_census().unwrap(), SessionCensus::default());
+        h.shutdown();
+        h_ref.shutdown();
+    }
+
+    /// Queued work whose deadline budget ran out is shed with a typed
+    /// `DeadlineExceeded` refusal — never served late, never hung.
+    #[test]
+    fn expired_deadline_sheds_queued_work_with_typed_refusal() {
+        let h = handle_cfg(1, ServeConfig { max_batch: 1, ..cfg(1) });
+        // pin the only slot (streaming first token proves it's admitted)
+        let (tok_rx, busy_rx) = h.submit_streaming(vec![1, 2, 3], 64).unwrap();
+        let _ = tok_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        // this request's budget is already gone; it can only wait in queue
+        let rx = h
+            .submit_full(None, vec![4, 5], 4, None, Some(Instant::now()))
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.refusal, Some(Refusal::DeadlineExceeded));
+        assert!(resp.tokens.is_empty(), "a refused turn must not generate");
+        assert_eq!(h.metrics.snapshot().shed_deadline, 1);
+        let busy = busy_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(busy.tokens.len(), 64, "in-slot work is never shed");
+        // an ample budget is honored end-to-end
+        let rx = h
+            .submit_full(
+                None,
+                vec![4, 5],
+                4,
+                None,
+                Some(Instant::now() + Duration::from_secs(600)),
+            )
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.refusal, None);
+        assert_eq!(resp.tokens.len(), 4);
+        h.shutdown();
+    }
+
+    /// With a queue cap, arrivals past capacity get a typed `Overloaded`
+    /// refusal at the door; everything accepted still completes.
+    #[test]
+    fn queue_cap_refuses_overflow_with_typed_overloaded() {
+        let h = handle_cfg(
+            1,
+            ServeConfig { max_batch: 1, max_queue: 1, ..cfg(1) },
+        );
+        let (tok_rx, busy_rx) = h.submit_streaming(vec![1, 2, 3], 64).unwrap();
+        let _ = tok_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let queued_rx = h.submit(vec![9], 2).unwrap(); // fills the queue
+        let refused_rx = h.submit(vec![8], 2).unwrap(); // over capacity
+        let refused = refused_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(refused.refusal, Some(Refusal::Overloaded));
+        assert!(refused.tokens.is_empty());
+        assert_eq!(h.metrics.snapshot().shed_overload, 1);
+        // accepted work is unaffected by the refusal
+        assert_eq!(busy_rx.recv_timeout(Duration::from_secs(60)).unwrap().tokens.len(), 64);
+        let queued = queued_rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(queued.refusal, None);
+        assert_eq!(queued.tokens.len(), 2);
         h.shutdown();
     }
 }

@@ -30,6 +30,7 @@ pub mod engine;
 pub mod experiments;
 pub mod hankel;
 pub mod linalg;
+pub mod loadgen;
 pub mod obs;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,603 @@
+//! Deterministic load generator for the sharded serving front door.
+//!
+//! `repro loadgen` (and the `serve_load` chaos harness) drive a
+//! [`crate::serve::FrontServer`] over real loopback TCP wire frames with a
+//! workload whose *content* is a pure function of one seed: session
+//! arrival order, per-session turn counts, think times, prompt lengths and
+//! prompt tokens all come from per-stream splitmix64 generators — no
+//! ambient entropy, so two runs with the same [`LoadConfig`] submit the
+//! same prompts in the same per-session order.  (Wall-clock timing is of
+//! course not deterministic; only the workload is.)
+//!
+//! Two driving modes:
+//!
+//! * **closed loop** (`rate_hz == 0`): every session starts immediately
+//!   and each runs its turns back-to-back (with think-time pauses), so
+//!   concurrency equals the live session count;
+//! * **open loop** (`rate_hz > 0`): sessions *arrive* at the configured
+//!   rate with exponentially distributed inter-arrival gaps, regardless
+//!   of whether the cluster keeps up — the mode that actually exposes
+//!   overload behavior, since arrivals do not slow down when the server
+//!   does.
+//!
+//! Every turn is measured client-side into [`Hist`] latency histograms
+//! (TTFT, mean TPOT, end-to-end) and every typed refusal
+//! ([`ErrCode::Overloaded`], [`ErrCode::DeadlineExceeded`]) is counted
+//! rather than treated as a failure: under deliberate overload a typed
+//! shed is the *correct* answer.  [`bench_doc`] renders the report plus
+//! the cluster's own counters (retries, TTL evictions, spill evictions,
+//! sheds) into the checked-in `BENCH_load.json` shape.
+
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::benchkit::Json;
+use crate::obs::hist::Hist;
+use crate::obs::registry::{MetricValue, Snapshot};
+use crate::serve::wire::{self, ErrCode, Frame};
+
+/// Read timeout on loadgen client sockets: generous, because under
+/// deliberate overload a queued turn legitimately waits a long time.
+const CLIENT_READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Think-time samples are exponential with the configured mean but capped
+/// at this multiple of it, so one unlucky draw cannot stall a bounded
+/// test run.
+const THINK_CAP: f64 = 4.0;
+
+/// Workload shape for one loadgen run.  Everything the generator submits
+/// derives from `seed` alone.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadConfig {
+    /// Total sessions driven over the run.
+    pub sessions: usize,
+    /// Mean turns per session (per-session counts are uniform on
+    /// `1..=2*turns-1`, so the mean is exactly `turns`).
+    pub turns: usize,
+    /// Session arrival rate in sessions/second; `0.0` selects the closed
+    /// loop (all sessions start at once).
+    pub rate_hz: f64,
+    /// Mean think time between a session's turns, in milliseconds
+    /// (exponentially distributed, capped at [`THINK_CAP`]× the mean).
+    pub think_ms: u64,
+    /// Mean prompt (delta) length per turn, in tokens (uniform on
+    /// `1..=2*prompt_len-1`).
+    pub prompt_len: usize,
+    /// Tokens requested per turn.
+    pub max_new: usize,
+    /// Deadline budget stamped on every submitted turn (0 = none; without
+    /// a budget the front door refuses at capacity instead of queueing).
+    pub deadline_ms: u32,
+    /// Root of every workload stream.
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            sessions: 32,
+            turns: 3,
+            rate_hz: 0.0,
+            think_ms: 0,
+            prompt_len: 8,
+            max_new: 8,
+            deadline_ms: 0,
+            seed: 7,
+        }
+    }
+}
+
+/// One planned turn: the pause before it and the prompt delta it sends.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TurnPlan {
+    pub think: Duration,
+    pub delta: Vec<i32>,
+}
+
+/// One planned session: its id, its arrival offset from the run start,
+/// and its turns in order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionPlan {
+    pub sid: u64,
+    pub start: Duration,
+    pub turns: Vec<TurnPlan>,
+}
+
+/// splitmix64 step: the only entropy source in this module.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Independent stream for `(seed, key)`: one warm-up step decorrelates
+/// streams whose keys differ by small deltas.
+fn stream(seed: u64, key: u64) -> u64 {
+    let mut s = seed ^ key.wrapping_mul(0x2545_f491_4f6c_dd1d);
+    let _ = splitmix64(&mut s);
+    s
+}
+
+/// Uniform in `[0, 1)` from one splitmix64 draw.
+fn unit(state: &mut u64) -> f64 {
+    (splitmix64(state) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Exponential sample with the given mean, capped at [`THINK_CAP`]× mean.
+fn exp_capped(state: &mut u64, mean: f64) -> f64 {
+    let u = unit(state);
+    (-mean * (1.0 - u).ln()).min(THINK_CAP * mean)
+}
+
+/// Uniform integer on `1..=2*mean-1` (mean exactly `mean`); 0 stays 0.
+fn around(state: &mut u64, mean: usize) -> usize {
+    if mean == 0 {
+        return 0;
+    }
+    1 + (splitmix64(state) % (2 * mean as u64 - 1)) as usize
+}
+
+/// Expand a [`LoadConfig`] into the full deterministic workload: every
+/// session's arrival offset, turn count, think times and prompt deltas.
+/// Pure — calling it twice yields identical plans.
+pub fn plan(cfg: &LoadConfig) -> Vec<SessionPlan> {
+    let mut arrivals = stream(cfg.seed, u64::MAX);
+    let mut at = 0.0f64;
+    (0..cfg.sessions)
+        .map(|i| {
+            let sid = i as u64;
+            if cfg.rate_hz > 0.0 && i > 0 {
+                at += exp_capped(&mut arrivals, 1.0 / cfg.rate_hz);
+            }
+            let mut rng = stream(cfg.seed, sid);
+            let n_turns = around(&mut rng, cfg.turns);
+            let turns = (0..n_turns)
+                .map(|t| {
+                    let think = if t > 0 && cfg.think_ms > 0 {
+                        Duration::from_secs_f64(exp_capped(&mut rng, cfg.think_ms as f64) / 1e3)
+                    } else {
+                        Duration::ZERO
+                    };
+                    let len = around(&mut rng, cfg.prompt_len).max(1);
+                    let delta: Vec<i32> =
+                        (0..len).map(|_| 1 + (splitmix64(&mut rng) % 32) as i32).collect();
+                    TurnPlan { think, delta }
+                })
+                .collect();
+            SessionPlan { sid, start: Duration::from_secs_f64(at), turns }
+        })
+        .collect()
+}
+
+/// What one submitted turn came back as.
+enum TurnOutcome {
+    /// Completed generation: token count plus client-side timings.
+    Done { toks: usize, ttft_s: f64, e2e_s: f64 },
+    /// Typed refusal frame — the request was shed, session untouched.
+    Refused(ErrCode),
+    /// Connection-level failure (connect, framing, unexpected frame).
+    Transport,
+}
+
+/// Aggregated result of a run (mergeable across session workers).
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    /// Turns that streamed to `Done`.
+    pub turns_ok: u64,
+    /// Tokens received across completed turns.
+    pub tokens: u64,
+    /// Typed [`ErrCode::Overloaded`] refusals (capacity / queue shed).
+    pub refused_overloaded: u64,
+    /// Typed [`ErrCode::DeadlineExceeded`] refusals.
+    pub refused_deadline: u64,
+    /// Any other typed error frame.
+    pub refused_other: u64,
+    /// Transport-level failures (no typed reply at all).
+    pub transport_errors: u64,
+    /// Client-observed submit → first token.
+    pub ttft: Hist,
+    /// Client-observed mean inter-token time after the first.
+    pub tpot: Hist,
+    /// Client-observed submit → final token.
+    pub e2e: Hist,
+    /// Wall time of the whole run, seconds.
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    /// Fold another worker's report into this one (hists merge exactly).
+    pub fn absorb(&mut self, other: &LoadReport) {
+        self.turns_ok += other.turns_ok;
+        self.tokens += other.tokens;
+        self.refused_overloaded += other.refused_overloaded;
+        self.refused_deadline += other.refused_deadline;
+        self.refused_other += other.refused_other;
+        self.transport_errors += other.transport_errors;
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+    }
+
+    /// Total turns submitted (completed + refused + failed).
+    pub fn turns_submitted(&self) -> u64 {
+        self.turns_ok
+            + self.refused_overloaded
+            + self.refused_deadline
+            + self.refused_other
+            + self.transport_errors
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn summary(&self) -> String {
+        let q = |h: &Hist, p: f64| h.quantile(p) * 1e3;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "turns: {} ok, {} shed overloaded, {} shed deadline, {} other errors, \
+             {} transport failures ({} submitted)\n",
+            self.turns_ok,
+            self.refused_overloaded,
+            self.refused_deadline,
+            self.refused_other,
+            self.transport_errors,
+            self.turns_submitted(),
+        ));
+        s.push_str(&format!(
+            "tokens: {} in {:.2}s ({:.1} tok/s)\n",
+            self.tokens,
+            self.wall_s,
+            if self.wall_s > 0.0 { self.tokens as f64 / self.wall_s } else { 0.0 },
+        ));
+        s.push_str(&format!(
+            "ttft  ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  mean {:.2}\n",
+            q(&self.ttft, 0.50),
+            q(&self.ttft, 0.90),
+            q(&self.ttft, 0.99),
+            self.ttft.mean() * 1e3,
+        ));
+        s.push_str(&format!(
+            "tpot  ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  mean {:.2}\n",
+            q(&self.tpot, 0.50),
+            q(&self.tpot, 0.90),
+            q(&self.tpot, 0.99),
+            self.tpot.mean() * 1e3,
+        ));
+        s.push_str(&format!(
+            "e2e   ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  mean {:.2}\n",
+            q(&self.e2e, 0.50),
+            q(&self.e2e, 0.90),
+            q(&self.e2e, 0.99),
+            self.e2e.mean() * 1e3,
+        ));
+        s
+    }
+}
+
+/// One wire-level turn: connect, swallow the greeting, submit, collect.
+fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> TurnOutcome {
+    let t0 = Instant::now();
+    let mut s = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => return TurnOutcome::Transport,
+    };
+    if s.set_read_timeout(Some(CLIENT_READ_TIMEOUT)).is_err() {
+        return TurnOutcome::Transport;
+    }
+    match wire::read_frame(&mut s) {
+        Ok(Frame::Hello { .. }) => {}
+        _ => return TurnOutcome::Transport,
+    }
+    let submit = Frame::SubmitInSession {
+        session: sid,
+        strict: false,
+        max_new: cfg.max_new as u32,
+        deadline_ms: cfg.deadline_ms,
+        delta,
+    };
+    if wire::write_frame(&mut s, &submit).is_err() {
+        return TurnOutcome::Transport;
+    }
+    let mut toks = 0usize;
+    let mut ttft_s = None;
+    loop {
+        match wire::read_frame(&mut s) {
+            Ok(Frame::Token { .. }) => {
+                if ttft_s.is_none() {
+                    ttft_s = Some(t0.elapsed().as_secs_f64());
+                }
+                toks += 1;
+            }
+            Ok(Frame::Done { .. }) => {
+                let e2e_s = t0.elapsed().as_secs_f64();
+                return TurnOutcome::Done { toks, ttft_s: ttft_s.unwrap_or(e2e_s), e2e_s };
+            }
+            Ok(Frame::Error { code, .. }) => return TurnOutcome::Refused(code),
+            _ => return TurnOutcome::Transport,
+        }
+    }
+}
+
+/// Drive one planned session to completion, classifying every outcome.
+fn run_session(addr: SocketAddr, cfg: &LoadConfig, sp: &SessionPlan) -> LoadReport {
+    let mut rep = LoadReport::default();
+    for turn in &sp.turns {
+        if turn.think > Duration::ZERO {
+            thread::sleep(turn.think);
+        }
+        match one_turn(addr, sp.sid, turn.delta.clone(), cfg) {
+            TurnOutcome::Done { toks, ttft_s, e2e_s } => {
+                rep.turns_ok += 1;
+                rep.tokens += toks as u64;
+                rep.ttft.record(ttft_s);
+                rep.e2e.record(e2e_s);
+                if toks > 1 {
+                    rep.tpot.record((e2e_s - ttft_s) / (toks - 1) as f64);
+                }
+            }
+            TurnOutcome::Refused(ErrCode::Overloaded) => rep.refused_overloaded += 1,
+            TurnOutcome::Refused(ErrCode::DeadlineExceeded) => rep.refused_deadline += 1,
+            TurnOutcome::Refused(_) => rep.refused_other += 1,
+            TurnOutcome::Transport => rep.transport_errors += 1,
+        }
+    }
+    rep
+}
+
+/// Run the full workload against a front door at `addr`: one worker
+/// thread per session, arrivals staggered per the plan, all reports
+/// merged into one.
+pub fn run(addr: SocketAddr, cfg: &LoadConfig) -> LoadReport {
+    let plans = plan(cfg);
+    let t0 = Instant::now();
+    let workers: Vec<_> = plans
+        .into_iter()
+        .map(|sp| {
+            let cfg = *cfg;
+            thread::spawn(move || {
+                // hold the arrival schedule against the common start, not
+                // against thread-spawn jitter
+                if sp.start > Duration::ZERO {
+                    thread::sleep(sp.start);
+                }
+                run_session(addr, &cfg, &sp)
+            })
+        })
+        .collect();
+    let mut rep = LoadReport::default();
+    for w in workers {
+        if let Ok(r) = w.join() {
+            rep.absorb(&r);
+        } else {
+            rep.transport_errors += 1;
+        }
+    }
+    rep.wall_s = t0.elapsed().as_secs_f64();
+    rep
+}
+
+/// Counter/gauge value by name from a metrics snapshot (0 when absent).
+fn metric(snap: &Snapshot, name: &str) -> u64 {
+    match snap.entries.get(name) {
+        Some(MetricValue::Counter(v)) | Some(MetricValue::Gauge(v)) => *v,
+        _ => 0,
+    }
+}
+
+/// Quantile summary of one latency histogram as a JSON object (ms).
+fn hist_json(h: &Hist) -> Json {
+    let ms = |v: f64| Json::Num(v * 1e3);
+    Json::obj(vec![
+        ("count", Json::Int(h.count() as i64)),
+        ("mean_ms", ms(h.mean())),
+        ("p50_ms", ms(h.quantile(0.50))),
+        ("p90_ms", ms(h.quantile(0.90))),
+        ("p99_ms", ms(h.quantile(0.99))),
+    ])
+}
+
+/// Render the run into the checked-in `BENCH_load.json` document:
+/// the workload config, client-side latency quantiles and outcome
+/// counters, plus the cluster- and front-door-side counters that tell
+/// the overload story (retries spent, TTL/spill evictions, sheds).
+pub fn bench_doc(
+    cfg: &LoadConfig,
+    rep: &LoadReport,
+    cluster: &Snapshot,
+    front: &Snapshot,
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("load".into())),
+        (
+            "config",
+            Json::obj(vec![
+                ("sessions", Json::Int(cfg.sessions as i64)),
+                ("turns_mean", Json::Int(cfg.turns as i64)),
+                ("rate_hz", Json::Num(cfg.rate_hz)),
+                ("think_ms_mean", Json::Int(cfg.think_ms as i64)),
+                ("prompt_len_mean", Json::Int(cfg.prompt_len as i64)),
+                ("max_new", Json::Int(cfg.max_new as i64)),
+                ("deadline_ms", Json::Int(cfg.deadline_ms as i64)),
+                ("seed", Json::Int(cfg.seed as i64)),
+                (
+                    "mode",
+                    Json::Str(if cfg.rate_hz > 0.0 { "open" } else { "closed" }.into()),
+                ),
+            ]),
+        ),
+        (
+            "client",
+            Json::obj(vec![
+                ("turns_ok", Json::Int(rep.turns_ok as i64)),
+                ("turns_submitted", Json::Int(rep.turns_submitted() as i64)),
+                ("tokens", Json::Int(rep.tokens as i64)),
+                ("refused_overloaded", Json::Int(rep.refused_overloaded as i64)),
+                ("refused_deadline", Json::Int(rep.refused_deadline as i64)),
+                ("refused_other", Json::Int(rep.refused_other as i64)),
+                ("transport_errors", Json::Int(rep.transport_errors as i64)),
+                ("wall_s", Json::Num(rep.wall_s)),
+                (
+                    "tokens_per_s",
+                    Json::Num(if rep.wall_s > 0.0 {
+                        rep.tokens as f64 / rep.wall_s
+                    } else {
+                        0.0
+                    }),
+                ),
+                ("ttft", hist_json(&rep.ttft)),
+                ("tpot", hist_json(&rep.tpot)),
+                ("e2e", hist_json(&rep.e2e)),
+            ]),
+        ),
+        (
+            "cluster",
+            Json::obj(vec![
+                ("retries_total", Json::Int(metric(cluster, "lh_retries_total") as i64)),
+                (
+                    "session_ttl_evictions_total",
+                    Json::Int(metric(cluster, "lh_session_ttl_evictions_total") as i64),
+                ),
+                (
+                    "session_evictions_total",
+                    Json::Int(metric(cluster, "lh_session_evictions_total") as i64),
+                ),
+                (
+                    "spill_evictions_total",
+                    Json::Int(metric(cluster, "lh_spill_evictions_total") as i64),
+                ),
+                (
+                    "shed_deadline_total",
+                    Json::Int(metric(cluster, "lh_shed_deadline_total") as i64),
+                ),
+                (
+                    "shed_overload_total",
+                    Json::Int(metric(cluster, "lh_shed_overload_total") as i64),
+                ),
+                ("session_hits_total", Json::Int(metric(cluster, "lh_session_hits_total") as i64)),
+                (
+                    "session_misses_total",
+                    Json::Int(metric(cluster, "lh_session_misses_total") as i64),
+                ),
+            ]),
+        ),
+        (
+            "front",
+            Json::obj(vec![
+                ("requests_total", Json::Int(metric(front, "lh_front_requests_total") as i64)),
+                (
+                    "shed_deadline_total",
+                    Json::Int(metric(front, "lh_front_shed_deadline_total") as i64),
+                ),
+                (
+                    "over_capacity_total",
+                    Json::Int(metric(front, "lh_front_over_capacity_total") as i64),
+                ),
+                ("errors_total", Json::Int(metric(front, "lh_front_errors_total") as i64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LoadConfig {
+        LoadConfig {
+            sessions: 6,
+            turns: 3,
+            rate_hz: 8.0,
+            think_ms: 20,
+            prompt_len: 5,
+            max_new: 4,
+            deadline_ms: 250,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        let a = plan(&cfg());
+        let b = plan(&cfg());
+        assert_eq!(a, b, "same config must yield the identical workload");
+        let c = plan(&LoadConfig { seed: 100, ..cfg() });
+        assert_ne!(a, c, "a different seed must yield a different workload");
+        assert_eq!(a.len(), 6);
+        for (i, sp) in a.iter().enumerate() {
+            assert_eq!(sp.sid, i as u64);
+            // turn count uniform on 1..=5 for mean 3
+            assert!((1..=5).contains(&sp.turns.len()), "turns {}", sp.turns.len());
+            for (t, turn) in sp.turns.iter().enumerate() {
+                assert!((1..=9).contains(&turn.delta.len()));
+                assert!(turn.delta.iter().all(|&v| (1..=32).contains(&v)));
+                if t == 0 {
+                    assert_eq!(turn.think, Duration::ZERO, "no think pause before turn 0");
+                }
+            }
+        }
+        // open loop: arrivals strictly staggered after session 0
+        assert_eq!(a[0].start, Duration::ZERO);
+        assert!(a.windows(2).all(|w| w[0].start <= w[1].start));
+        assert!(a[5].start > Duration::ZERO);
+    }
+
+    #[test]
+    fn closed_loop_plans_start_everyone_at_once() {
+        let a = plan(&LoadConfig { rate_hz: 0.0, ..cfg() });
+        assert!(a.iter().all(|sp| sp.start == Duration::ZERO));
+    }
+
+    #[test]
+    fn reports_merge_exactly() {
+        let mut a = LoadReport::default();
+        a.turns_ok = 2;
+        a.tokens = 8;
+        a.refused_deadline = 1;
+        a.ttft.record(0.01);
+        a.e2e.record(0.05);
+        let mut b = LoadReport::default();
+        b.turns_ok = 3;
+        b.tokens = 12;
+        b.refused_overloaded = 2;
+        b.transport_errors = 1;
+        b.ttft.record(0.02);
+        b.e2e.record(0.06);
+        let mut total = LoadReport::default();
+        total.absorb(&a);
+        total.absorb(&b);
+        assert_eq!(total.turns_ok, 5);
+        assert_eq!(total.tokens, 20);
+        assert_eq!(total.turns_submitted(), 9);
+        assert_eq!(total.ttft.count(), 2);
+        assert_eq!(total.e2e.count(), 2);
+        let s = total.summary();
+        assert!(s.contains("5 ok"), "{s}");
+        assert!(s.contains("2 shed overloaded"), "{s}");
+        assert!(s.contains("1 shed deadline"), "{s}");
+    }
+
+    #[test]
+    fn bench_doc_carries_config_client_and_cluster_sections() {
+        let mut rep = LoadReport::default();
+        rep.turns_ok = 4;
+        rep.tokens = 16;
+        rep.wall_s = 2.0;
+        rep.ttft.record(0.01);
+        let mut cluster = Snapshot::default();
+        cluster.add_counter("lh_retries_total", 3);
+        cluster.add_counter("lh_session_ttl_evictions_total", 2);
+        let mut front = Snapshot::default();
+        front.add_counter("lh_front_shed_deadline_total", 5);
+        let s = bench_doc(&cfg(), &rep, &cluster, &front).to_string_pretty();
+        assert!(s.contains("\"bench\": \"load\""), "{s}");
+        assert!(s.contains("\"mode\": \"open\""), "{s}");
+        assert!(s.contains("\"turns_ok\": 4"), "{s}");
+        assert!(s.contains("\"tokens_per_s\": 8"), "{s}");
+        assert!(s.contains("\"retries_total\": 3"), "{s}");
+        assert!(s.contains("\"session_ttl_evictions_total\": 2"), "{s}");
+        assert!(s.contains("\"shed_deadline_total\": 5"), "{s}");
+        // a counter missing from the snapshot reads 0, not an error
+        assert!(s.contains("\"spill_evictions_total\": 0"), "{s}");
+    }
+}

@@ -9,6 +9,9 @@
 //! serve             run the serving coordinator demo; with --shards N > 1,
 //!                   a sharded cluster (router + N loopback shard servers)
 //!                   with optional live migration and drain
+//! loadgen           drive a loadgen workload (closed or open loop) against
+//!                   an in-process sharded cluster's wire front door and
+//!                   write BENCH_load.json
 //! info              environment and artifact inventory
 //! ```
 
@@ -30,6 +33,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("distill") => cmd_distill(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
@@ -46,6 +50,13 @@ fn main() {
                  \u{20}                               shards, live session migration, drain\n\
                  repro serve --shards K --chaos  kill a shard mid-conversation and show\n\
                  \u{20}                               transcript-mirror resurrection\n\
+                 repro loadgen --shards K --sessions N --turns T [--rate R --think-ms M\n\
+                 \u{20}                               --prompt P --tokens G --deadline-ms D\n\
+                 \u{20}                               --max-inflight F --load-seed S --out PATH]\n\
+                 \u{20}                               closed (default) or open-loop (--rate > 0)\n\
+                 \u{20}                               load over the wire front door; reports\n\
+                 \u{20}                               TTFT/TPOT/e2e percentiles + refusal counts\n\
+                 \u{20}                               and writes BENCH_load.json\n\
                  repro info",
                 experiments::ALL
             );
@@ -303,6 +314,83 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
     println!("\nper-shard health:\n{}", AdminReport::collect(&mut router.lock().unwrap())?);
     println!("wall {:.2}s", t0.elapsed().as_secs_f64());
     drop(router);
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+    Ok(())
+}
+
+/// `repro loadgen`: launch an in-process sharded cluster behind a wire
+/// front door, drive the deterministic loadgen workload against it
+/// (closed loop by default, open loop with `--rate R` sessions/sec),
+/// print client-side latency percentiles + refusal counts, and write the
+/// machine-readable `BENCH_load.json` next to the repo root.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use laughing_hyena::loadgen::{self, LoadConfig};
+    use laughing_hyena::serve::{BreakerConfig, Cluster, FrontConfig, FrontServer};
+    let raw = match args.get("config") {
+        Some(p) => RawConfig::load(p)?,
+        None => RawConfig::parse("")?,
+    };
+    let mut serve_cfg = ServeConfig::from_raw(&raw);
+    if let Some(dir) = args.get("spill-dir") {
+        serve_cfg.session_spill_dir = Some(dir.to_string());
+    }
+    serve_cfg.session_budget = args.get_u64("session-budget", serve_cfg.session_budget);
+    let n_shards = args.get_usize("shards", 2).max(1);
+    let slots = args.get_usize("slots", serve_cfg.max_batch);
+    let shape_name = args.get_str("shape", "nano");
+    let shape = LmShape::bench(shape_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown bench shape '{shape_name}'"))?;
+    let seed = args.get_u64("seed", 11);
+    let cfg = LoadConfig {
+        sessions: args.get_usize("sessions", 32),
+        turns: args.get_usize("turns", 3),
+        rate_hz: args.get_f64("rate", 0.0),
+        think_ms: args.get_u64("think-ms", 0),
+        prompt_len: args.get_usize("prompt", 8),
+        max_new: args.get_usize("tokens", 8),
+        deadline_ms: args.get_u64("deadline-ms", 0) as u32,
+        seed: args.get_u64("load-seed", 7),
+    };
+    let cluster = Cluster::launch_native_with(
+        n_shards,
+        &shape,
+        slots,
+        seed,
+        &serve_cfg,
+        BreakerConfig::default(),
+        None,
+    )?;
+    let (shards, cluster_router) = cluster.into_parts();
+    let front_cfg = FrontConfig {
+        max_inflight: args.get_usize("max-inflight", 32),
+        ..FrontConfig::default()
+    };
+    let front = FrontServer::spawn(cluster_router, front_cfg)?;
+    println!(
+        "loadgen: {} sessions x ~{} turns, {} mode, {n_shards} shards x {slots} slots \
+         (shape {shape_name}), front door at {}",
+        cfg.sessions,
+        cfg.turns,
+        if cfg.rate_hz > 0.0 {
+            format!("open loop at {:.1} sessions/s", cfg.rate_hz)
+        } else {
+            "closed loop".to_string()
+        },
+        front.addr()
+    );
+    let report = loadgen::run(front.addr(), &cfg);
+    print!("{}", report.summary());
+    let cluster_snap = front.router().lock().unwrap().cluster_metrics();
+    let front_snap = front.front_metrics();
+    let doc = loadgen::bench_doc(&cfg, &report, &cluster_snap, &front_snap);
+    let out = args
+        .get_str("out", concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_load.json"))
+        .to_string();
+    doc.save(&out)?;
+    println!("wrote {out}");
     front.shutdown();
     for s in shards {
         s.shutdown();

@@ -89,12 +89,19 @@ pub const SCHEMA: &[(&str, MetricKind, &str)] = &[
     ("lh_session_bytes", MetricKind::Gauge, "bytes resident in the session store"),
     ("lh_session_evictions_total", MetricKind::Counter, "session-store evictions"),
     ("lh_session_spills_total", MetricKind::Counter, "evictions persisted to the spill dir"),
+    ("lh_session_ttl_evictions_total", MetricKind::Counter, "idle sessions fully forgotten by the TTL sweep"),
+    ("lh_spill_bytes", MetricKind::Gauge, "live bytes held by the disk spill tier"),
+    ("lh_spill_evictions_total", MetricKind::Counter, "sessions dropped by the spill tier to honor its byte cap"),
+    ("lh_spill_compactions_total", MetricKind::Counter, "spill segments compacted"),
+    ("lh_shed_deadline_total", MetricKind::Counter, "queued requests shed past their deadline budget"),
+    ("lh_shed_overload_total", MetricKind::Counter, "requests refused at a full admission queue"),
     // router
     ("lh_route_seconds", MetricKind::Hist, "router-observed round trip per routed turn"),
     ("lh_migration_attempts_total", MetricKind::Counter, "live session migrations started"),
     ("lh_migration_commits_total", MetricKind::Counter, "migrations committed on the target"),
     ("lh_migration_aborts_total", MetricKind::Counter, "migrations rolled back to the source"),
     ("lh_resurrections_total", MetricKind::Counter, "sessions rebuilt from the transcript mirror"),
+    ("lh_retries_total", MetricKind::Counter, "router retries spent from per-request retry budgets"),
     ("lh_breaker_state", MetricKind::Gauge, "circuit state per shard: 0 closed, 1 half-open, 2 open"),
     ("lh_breaker_opened_total", MetricKind::Counter, "circuit transitions into open"),
     ("lh_breaker_half_opened_total", MetricKind::Counter, "open circuits that admitted a probe"),
@@ -106,6 +113,8 @@ pub const SCHEMA: &[(&str, MetricKind, &str)] = &[
     ("lh_front_over_capacity_total", MetricKind::Counter, "requests refused by the in-flight gate"),
     ("lh_front_errors_total", MetricKind::Counter, "generation relays that ended in an error frame"),
     ("lh_front_in_flight", MetricKind::Gauge, "generations currently relayed by the front door"),
+    ("lh_front_shed_deadline_total", MetricKind::Counter, "queued front-door requests shed when their deadline budget ran out"),
+    ("lh_front_queue_wait_seconds", MetricKind::Hist, "time a deadline-budgeted request waited in the front admission queue"),
     ("lh_stream_token_seconds", MetricKind::Hist, "front-door inter-token gap on streamed replies"),
     ("lh_metric_conflicts", MetricKind::Gauge, "metric names used with conflicting kinds"),
 ];

@@ -47,15 +47,22 @@ pub enum FrameKind {
     Export,
     Import,
     Health,
+    Metrics,
+    MetricsReport,
     ExportCommit,
     ExportAbort,
     Transcript,
+    BulkExport,
+    BulkImport,
+    BulkCommit,
+    BulkAbort,
     Token,
     Done,
     Blob,
     Ok,
     HealthReport,
     TranscriptIs,
+    BulkBlob,
     Error,
 }
 
@@ -70,9 +77,16 @@ impl FrameKind {
             Frame::Export { .. } => FrameKind::Export,
             Frame::Import { .. } => FrameKind::Import,
             Frame::Health => FrameKind::Health,
+            Frame::Metrics => FrameKind::Metrics,
+            Frame::MetricsReport { .. } => FrameKind::MetricsReport,
             Frame::ExportCommit { .. } => FrameKind::ExportCommit,
             Frame::ExportAbort { .. } => FrameKind::ExportAbort,
             Frame::Transcript { .. } => FrameKind::Transcript,
+            Frame::BulkExport => FrameKind::BulkExport,
+            Frame::BulkImport { .. } => FrameKind::BulkImport,
+            Frame::BulkCommit { .. } => FrameKind::BulkCommit,
+            Frame::BulkAbort { .. } => FrameKind::BulkAbort,
+            Frame::BulkBlob { .. } => FrameKind::BulkBlob,
             Frame::Token { .. } => FrameKind::Token,
             Frame::Done { .. } => FrameKind::Done,
             Frame::Blob { .. } => FrameKind::Blob,

@@ -18,10 +18,15 @@
 //!   one: a drain issued mid-stream waits for the stream to finish.  This
 //!   is a deliberate throughput-for-correctness trade at the front door;
 //!   the shards themselves stay concurrent.
-//! * **Backpressure.**  At most `max_inflight` generation requests are
-//!   admitted; the rest are refused immediately with a typed
-//!   [`ErrCode::Unavailable`] error frame (retryable) instead of queueing
-//!   unboundedly on the lock.
+//! * **Admission.**  At most `max_inflight` generation requests run
+//!   concurrently.  A request carrying a `deadline_ms` budget queues in
+//!   a two-priority admission gate — turns for RAM-resident sessions
+//!   are admitted strictly before the rest, since their state is
+//!   already paid for — for up to its budget, then is shed with a typed
+//!   [`ErrCode::Overloaded`].  A request without a budget keeps the
+//!   legacy contract: refused immediately with a typed
+//!   [`ErrCode::Unavailable`] error frame (retryable) instead of
+//!   queueing unboundedly on the lock.
 //! * **Health probing.**  A background thread calls
 //!   [`Router::probe_all`] every `probe_interval`, which is what lets an
 //!   open circuit half-open and a recovered shard rejoin service without
@@ -33,14 +38,17 @@
 //!   dashboard, `/traces` recent per-request timelines as JSON lines.
 //!   Anything else gets a typed status (400 malformed, 404 unknown path,
 //!   405 non-GET, 431 oversized head) — never a panic, never a hang.
-//!   Because `/metrics` takes the router lock, a scrape concurrent with
-//!   a streamed generation waits for the turn to finish; scrapes are
-//!   cheap but not lock-free by design.
+//!   `/metrics` serves the cluster portion from a cached snapshot no
+//!   older than `metrics_max_age` (the probe thread refreshes it in the
+//!   background), so a scrape storm never piles up on the router lock;
+//!   only a stale-or-empty cache makes a scrape wait out an in-flight
+//!   turn.  Front-door-local metrics bypass the cache and are always
+//!   live.
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -55,45 +63,118 @@ const STOP_POLL: Duration = Duration::from_millis(50);
 /// Tuning for the front server.
 #[derive(Clone, Copy, Debug)]
 pub struct FrontConfig {
-    /// Generation requests admitted concurrently; excess requests get a
-    /// typed `Unavailable` refusal instead of queueing without bound.
+    /// Generation requests admitted concurrently; excess requests queue
+    /// within their deadline budget, or get a typed refusal.
     pub max_inflight: usize,
     /// Health-probe cadence (`None` disables the probe thread — tests
     /// that drive [`Router::probe_all`] by hand use this).
     pub probe_interval: Option<Duration>,
+    /// Staleness bound on the `/metrics` cluster snapshot: scrapes are
+    /// served from cache up to this age instead of taking the router
+    /// lock per scrape.
+    pub metrics_max_age: Duration,
 }
 
 impl Default for FrontConfig {
     fn default() -> Self {
-        FrontConfig { max_inflight: 32, probe_interval: Some(Duration::from_millis(500)) }
+        FrontConfig {
+            max_inflight: 32,
+            probe_interval: Some(Duration::from_millis(500)),
+            metrics_max_age: Duration::from_secs(2),
+        }
     }
 }
 
-/// Counting gate for in-flight generation requests.
+/// Two-priority admission gate for in-flight generation requests.
+///
+/// [`Gate::try_enter`] is the immediate path for requests without a
+/// deadline budget: full means refused, nothing queues.
+/// [`Gate::enter_within`] queues the caller until a slot frees or its
+/// budget runs out; high-priority waiters (turns for RAM-resident
+/// sessions, whose state is already paid for) are admitted strictly
+/// before low-priority ones, and the immediate path never jumps a
+/// waiting high-priority turn.
 struct Gate {
-    cur: AtomicUsize,
+    state: Mutex<GateState>,
+    cv: Condvar,
     max: usize,
 }
 
+#[derive(Default)]
+struct GateState {
+    cur: usize,
+    hi_waiting: usize,
+    lo_waiting: usize,
+}
+
 impl Gate {
+    fn new(max: usize) -> Gate {
+        Gate { state: Mutex::new(GateState::default()), cv: Condvar::new(), max }
+    }
+
+    /// Immediate admission (no queueing); refused while any resident
+    /// turn waits.
     fn try_enter(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.cur < self.max && st.hi_waiting == 0 {
+            st.cur += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Queue for a slot until `deadline`; `false` means the budget ran
+    /// out first and nothing was admitted.
+    fn enter_within(&self, deadline: Instant, hi: bool) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if hi {
+            st.hi_waiting += 1;
+        } else {
+            st.lo_waiting += 1;
+        }
         loop {
-            let c = self.cur.load(Ordering::Acquire);
-            if c >= self.max {
-                return false;
-            }
-            if self
-                .cur
-                .compare_exchange(c, c + 1, Ordering::AcqRel, Ordering::Acquire)
-                .is_ok()
-            {
+            if st.cur < self.max && (hi || st.hi_waiting == 0) {
+                if hi {
+                    st.hi_waiting -= 1;
+                } else {
+                    st.lo_waiting -= 1;
+                }
+                st.cur += 1;
                 return true;
             }
+            let now = Instant::now();
+            if now >= deadline {
+                if hi {
+                    st.hi_waiting -= 1;
+                } else {
+                    st.lo_waiting -= 1;
+                }
+                drop(st);
+                // a departing hi waiter may unblock lo waiters
+                self.cv.notify_all();
+                return false;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
         }
     }
 
     fn leave(&self) {
-        self.cur.fetch_sub(1, Ordering::AcqRel);
+        let mut st = self.state.lock().unwrap();
+        st.cur -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn in_flight(&self) -> usize {
+        self.state.lock().unwrap().cur
+    }
+
+    /// `(hi, lo)` waiter counts — test introspection.
+    #[cfg(test)]
+    fn waiting(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.hi_waiting, st.lo_waiting)
     }
 }
 
@@ -104,6 +185,10 @@ struct FrontShared {
     reg: Registry,
     traces: TraceRing,
     next_req: AtomicU64,
+    /// Cached cluster snapshot and when it was pulled — what lets
+    /// `/metrics` answer inside the freshness bound without the router
+    /// lock.
+    metrics_cache: Mutex<Option<(Instant, Snapshot)>>,
 }
 
 /// The router, served over the wire protocol on a loopback socket, with
@@ -132,11 +217,12 @@ impl FrontServer {
         let http_addr = http_listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-        let gate = Arc::new(Gate { cur: AtomicUsize::new(0), max: cfg.max_inflight.max(1) });
+        let gate = Arc::new(Gate::new(cfg.max_inflight.max(1)));
         let shared = Arc::new(FrontShared {
             reg: Registry::new(),
             traces: TraceRing::default(),
             next_req: AtomicU64::new(1),
+            metrics_cache: Mutex::new(None),
         });
         let accept = {
             let stop = Arc::clone(&stop);
@@ -173,6 +259,7 @@ impl FrontServer {
             let router = Arc::clone(&router);
             let gate = Arc::clone(&gate);
             let shared = Arc::clone(&shared);
+            let max_age = cfg.metrics_max_age;
             std::thread::spawn(move || {
                 for stream in http_listener.incoming() {
                     if stop.load(Ordering::SeqCst) {
@@ -187,7 +274,7 @@ impl FrontServer {
                     let gate = Arc::clone(&gate);
                     let shared = Arc::clone(&shared);
                     let join = std::thread::spawn(move || {
-                        let _ = serve_http_conn(stream, &router, &shared, &gate, &stop);
+                        let _ = serve_http_conn(stream, &router, &shared, &gate, max_age, &stop);
                     });
                     let mut conns = conns.lock().unwrap();
                     conns.retain(|j| !j.is_finished());
@@ -198,13 +285,22 @@ impl FrontServer {
         let prober = cfg.probe_interval.map(|interval| {
             let stop = Arc::clone(&stop);
             let router = Arc::clone(&router);
+            let shared = Arc::clone(&shared);
             std::thread::spawn(move || {
                 while !stop.load(Ordering::SeqCst) {
                     std::thread::sleep(interval);
                     if stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    router.lock().unwrap().probe_all();
+                    // probe, and refresh the metrics cache while the
+                    // lock is held anyway — steady-state scrapes then
+                    // never touch the router at all
+                    let snap = {
+                        let mut r = router.lock().unwrap();
+                        r.probe_all();
+                        r.cluster_metrics()
+                    };
+                    *shared.metrics_cache.lock().unwrap() = Some((Instant::now(), snap));
                 }
             })
         });
@@ -249,7 +345,7 @@ impl FrontServer {
 
     /// Generation requests currently admitted past the gate.
     pub fn in_flight(&self) -> usize {
-        self.gate.cur.load(Ordering::Acquire)
+        self.gate.in_flight()
     }
 
     /// Stop accepting, join every connection thread (in-flight streams
@@ -294,10 +390,58 @@ fn err_frame(e: &RouteError) -> Frame {
         RouteError::ShardUnavailable { .. }
         | RouteError::NoShards
         | RouteError::Draining(_) => ErrCode::Unavailable,
+        RouteError::Overloaded => ErrCode::Overloaded,
+        RouteError::DeadlineExceeded => ErrCode::DeadlineExceeded,
         RouteError::Shard(code, _) => *code,
         RouteError::Io(_) | RouteError::Protocol(_) => ErrCode::Internal,
     };
     Frame::Error { code, msg: e.to_string() }
+}
+
+/// The client's remaining budget, as an absolute deadline on this hop's
+/// clock (0 on the wire = no budget).
+fn wire_deadline(deadline_ms: u32) -> Option<Instant> {
+    (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64))
+}
+
+/// Pass the admission gate, or write the typed refusal and report
+/// `Ok(false)`.  A deadline-carrying request queues (two-priority) until
+/// its budget runs out → [`ErrCode::Overloaded`]; a request without a
+/// budget keeps the legacy immediate [`ErrCode::Unavailable`].
+fn admit_or_refuse(
+    stream: &mut TcpStream,
+    gate: &Gate,
+    shared: &FrontShared,
+    deadline: Option<Instant>,
+    hi: bool,
+) -> io::Result<bool> {
+    let Some(d) = deadline else {
+        if gate.try_enter() {
+            return Ok(true);
+        }
+        shared.reg.inc("lh_front_over_capacity_total", 1);
+        write_over_capacity(stream, gate.max)?;
+        return Ok(false);
+    };
+    let t0 = Instant::now();
+    let admitted = gate.enter_within(d, hi);
+    shared.reg.observe("lh_front_queue_wait_seconds", t0.elapsed().as_secs_f64());
+    if admitted {
+        return Ok(true);
+    }
+    shared.reg.inc("lh_front_shed_deadline_total", 1);
+    wire::write_frame(
+        stream,
+        &Frame::Error {
+            code: ErrCode::Overloaded,
+            msg: format!(
+                "front door at capacity ({} in flight) and the deadline budget ran out \
+                 queueing — shed",
+                gate.max
+            ),
+        },
+    )?;
+    Ok(false)
 }
 
 /// Run one generation under the router lock, relaying each token to the
@@ -392,33 +536,45 @@ fn serve_conn(
             None => return Ok(()),
         };
         match frame {
-            Frame::Submit { max_new, prompt } => {
+            Frame::Submit { max_new, deadline_ms, prompt } => {
                 shared.reg.inc("lh_front_requests_total", 1);
-                if !gate.try_enter() {
-                    shared.reg.inc("lh_front_over_capacity_total", 1);
-                    write_over_capacity(&mut stream, gate.max)?;
+                let deadline = wire_deadline(deadline_ms);
+                if !admit_or_refuse(&mut stream, gate, shared, deadline, false)? {
                     continue;
                 }
                 let res = relay_generation(&mut stream, router, shared, None, |r, on_tok| {
-                    r.submit_streaming(prompt, max_new as usize, |t| on_tok(t))
+                    r.submit_streaming_deadline(prompt, max_new as usize, deadline, |t| {
+                        on_tok(t)
+                    })
                 });
                 gate.leave();
                 res?;
             }
-            Frame::SubmitInSession { session, strict: _, max_new, delta } => {
+            Frame::SubmitInSession { session, strict: _, max_new, deadline_ms, delta } => {
                 // the front door decides strictness itself: residency in
                 // the router is what distinguishes turn 1 from a resume
                 shared.reg.inc("lh_front_requests_total", 1);
-                if !gate.try_enter() {
-                    shared.reg.inc("lh_front_over_capacity_total", 1);
-                    write_over_capacity(&mut stream, gate.max)?;
+                let deadline = wire_deadline(deadline_ms);
+                // resident turns queue at high priority — their state is
+                // already paid for, so serving them first frees RAM
+                // soonest.  A router busy mid-stream can't be asked;
+                // bias toward affinity rather than wait to classify.
+                let hi = match router.try_lock() {
+                    Ok(r) => r.is_resident(session),
+                    Err(_) => true,
+                };
+                if !admit_or_refuse(&mut stream, gate, shared, deadline, hi)? {
                     continue;
                 }
                 let res =
                     relay_generation(&mut stream, router, shared, Some(session), |r, on_tok| {
-                        r.submit_in_session_streaming(session, delta, max_new as usize, |t| {
-                            on_tok(t)
-                        })
+                        r.submit_in_session_streaming_deadline(
+                            session,
+                            delta,
+                            max_new as usize,
+                            deadline,
+                            |t| on_tok(t),
+                        )
                     });
                 gate.leave();
                 res?;
@@ -541,23 +697,43 @@ fn http_response(status: u16, reason: &str, content_type: &str, body: &str) -> V
     .into_bytes()
 }
 
-/// Route one GET.  `/metrics` merges the cluster pull with the front
-/// door's own registry (taking the router lock — a scrape waits out any
-/// in-flight turn); `/admin` renders the aggregated dashboard;
-/// `/traces` dumps the recent request timelines as JSON lines.
+/// The cluster snapshot, served from the cache when it is no older than
+/// `max_age` (the probe thread refreshes it in the background).  A stale
+/// or absent cache falls back to pulling under the router lock — the
+/// freshness bound holds either way.
+fn cluster_snapshot(
+    router: &Mutex<Router>,
+    shared: &FrontShared,
+    max_age: Duration,
+) -> Snapshot {
+    if let Some((at, snap)) = &*shared.metrics_cache.lock().unwrap() {
+        if at.elapsed() <= max_age {
+            return snap.clone();
+        }
+    }
+    let snap = router.lock().unwrap().cluster_metrics();
+    *shared.metrics_cache.lock().unwrap() = Some((Instant::now(), snap.clone()));
+    snap
+}
+
+/// Route one GET.  `/metrics` merges the (cached, freshness-bounded)
+/// cluster snapshot with the front door's own live registry; `/admin`
+/// renders the aggregated dashboard; `/traces` dumps the recent
+/// per-request timelines as JSON lines.
 fn respond_get(
     path: &str,
     router: &Mutex<Router>,
     shared: &FrontShared,
     gate: &Gate,
+    max_age: Duration,
 ) -> Vec<u8> {
     match path {
         "/metrics" => {
-            let mut snap = router.lock().unwrap().cluster_metrics();
+            let mut snap = cluster_snapshot(router, shared, max_age);
             snap.merge(&shared.reg.snapshot());
             snap.merge_entry(
                 "lh_front_in_flight",
-                MetricValue::Gauge(gate.cur.load(Ordering::Acquire) as u64),
+                MetricValue::Gauge(gate.in_flight() as u64),
             );
             http_response(
                 200,
@@ -597,6 +773,7 @@ fn serve_http_conn(
     router: &Mutex<Router>,
     shared: &FrontShared,
     gate: &Gate,
+    max_age: Duration,
     stop: &AtomicBool,
 ) -> io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -633,7 +810,7 @@ fn serve_http_conn(
         }
     };
     let response = match verdict {
-        HttpParse::Get(path) => respond_get(&path, router, shared, gate),
+        HttpParse::Get(path) => respond_get(&path, router, shared, gate, max_age),
         HttpParse::NotGet => http_response(
             405,
             "Method Not Allowed",
@@ -793,12 +970,24 @@ mod tests {
     fn front_serves_streamed_sessions_end_to_end() {
         let (shards, front) = front_over(2, FrontConfig::default());
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::SubmitInSession { session: 5, strict: false, max_new: 4, delta: vec![1, 2, 3] });
+        c.send(&Frame::SubmitInSession {
+            session: 5,
+            strict: false,
+            max_new: 4,
+            deadline_ms: 0,
+            delta: vec![1, 2, 3],
+        });
         let (t1, done) = c.collect();
         assert_eq!(t1.len(), 4);
         assert!(done);
         // second turn on the same connection resumes the same session
-        c.send(&Frame::SubmitInSession { session: 5, strict: true, max_new: 3, delta: vec![7] });
+        c.send(&Frame::SubmitInSession {
+            session: 5,
+            strict: true,
+            max_new: 3,
+            deadline_ms: 0,
+            delta: vec![7],
+        });
         let (t2, _) = c.collect();
         assert_eq!(t2.len(), 3);
         // health aggregates across both shards
@@ -824,10 +1013,13 @@ mod tests {
         // a zero-size gate (clamped to 1) refuses the second concurrent
         // request; with one slot and a held lock the refusal path is
         // easiest to pin by just filling the gate ourselves
-        let (shards, front) = front_over(1, FrontConfig { max_inflight: 1, probe_interval: None });
+        let (shards, front) = front_over(
+            1,
+            FrontConfig { max_inflight: 1, probe_interval: None, ..FrontConfig::default() },
+        );
         assert!(front.gate.try_enter(), "gate must admit the first request");
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::Submit { max_new: 2, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
         match c.recv() {
             Frame::Error { code, msg } => {
                 assert_eq!(code, ErrCode::Unavailable, "{msg}");
@@ -837,7 +1029,7 @@ mod tests {
         }
         front.gate.leave();
         // with the gate free the same request is served
-        c.send(&Frame::Submit { max_new: 2, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 2);
         front.shutdown();
@@ -858,7 +1050,7 @@ mod tests {
             other => panic!("expected Error, got {other:?}"),
         }
         // the connection survives the refusal
-        c.send(&Frame::Submit { max_new: 1, prompt: vec![3] });
+        c.send(&Frame::Submit { max_new: 1, deadline_ms: 0, prompt: vec![3] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 1);
         front.shutdown();
@@ -908,6 +1100,7 @@ mod tests {
             session: 5,
             strict: false,
             max_new: 4,
+            deadline_ms: 0,
             delta: vec![1, 2, 3],
         });
         let (toks, _) = c.collect();
@@ -960,6 +1153,137 @@ mod tests {
         // and a well-formed scrape still works after all of that
         let ok = http_exchange(addr, b"GET /metrics HTTP/1.1\r\n\r\n");
         assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// The gate's two-priority contract, driven deterministically: a
+    /// high-priority (resident-session) waiter is admitted strictly
+    /// before a low-priority one that queued first, and the immediate
+    /// path never jumps a waiting resident turn.
+    #[test]
+    fn gate_admits_resident_waiters_before_one_shots() {
+        let gate = Arc::new(Gate::new(1));
+        assert!(gate.try_enter());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let lo = {
+            let (gate, order) = (Arc::clone(&gate), Arc::clone(&order));
+            std::thread::spawn(move || {
+                assert!(gate.enter_within(deadline, false));
+                order.lock().unwrap().push("lo");
+                gate.leave();
+            })
+        };
+        let t0 = Instant::now();
+        while gate.waiting() != (0, 1) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "lo never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let hi = {
+            let (gate, order) = (Arc::clone(&gate), Arc::clone(&order));
+            std::thread::spawn(move || {
+                assert!(gate.enter_within(deadline, true));
+                order.lock().unwrap().push("hi");
+                gate.leave();
+            })
+        };
+        while gate.waiting() != (1, 1) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "hi never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // the immediate path must not jump the waiting resident turn
+        assert!(!gate.try_enter());
+        gate.leave();
+        hi.join().unwrap();
+        lo.join().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec!["hi", "lo"]);
+        assert_eq!(gate.in_flight(), 0);
+    }
+
+    /// A request carrying a deadline budget queues at a full gate
+    /// instead of being refused, and is served once a slot frees.
+    #[test]
+    fn deadline_budget_waits_out_a_full_gate_then_succeeds() {
+        let (shards, front) = front_over(
+            1,
+            FrontConfig { max_inflight: 1, probe_interval: None, ..FrontConfig::default() },
+        );
+        assert!(front.gate.try_enter(), "fill the only slot");
+        let freer = {
+            let gate = Arc::clone(&front.gate);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(100));
+                gate.leave();
+            })
+        };
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 30_000, prompt: vec![1, 2] });
+        let (toks, done) = c.collect();
+        assert_eq!(toks.len(), 2);
+        assert!(done);
+        freer.join().unwrap();
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// When the budget runs out still queued, the shed is the typed
+    /// `Overloaded` — and the connection survives to try again.
+    #[test]
+    fn exhausted_deadline_budget_in_the_queue_is_a_typed_overloaded() {
+        let (shards, front) = front_over(
+            1,
+            FrontConfig { max_inflight: 1, probe_interval: None, ..FrontConfig::default() },
+        );
+        assert!(front.gate.try_enter(), "fill the only slot");
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 50, prompt: vec![1, 2] });
+        match c.recv() {
+            Frame::Error { code, msg } => assert_eq!(code, ErrCode::Overloaded, "{msg}"),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let shed = render_prometheus(&front.front_metrics());
+        assert!(shed.contains("lh_front_shed_deadline_total 1\n"), "{shed}");
+        front.gate.leave();
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 5_000, prompt: vec![1, 2] });
+        let (toks, _) = c.collect();
+        assert_eq!(toks.len(), 2);
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// Scrapes inside the freshness bound serve the cached cluster
+    /// snapshot (no router lock); front-door-local metrics stay live.
+    #[test]
+    fn metrics_scrapes_within_the_freshness_bound_reuse_the_cache() {
+        let (shards, front) = front_over(
+            1,
+            FrontConfig {
+                probe_interval: None,
+                metrics_max_age: Duration::from_secs(600),
+                ..FrontConfig::default()
+            },
+        );
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
+        assert_eq!(c.collect().0.len(), 2);
+        // first scrape pulls under the router lock and fills the cache
+        let first = http_exchange(front.http_addr(), b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(first.contains("lh_requests_done_total 1\n"), "{first}");
+        // another turn lands on the cluster...
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![3] });
+        assert_eq!(c.collect().0.len(), 2);
+        // ...but a scrape inside the bound serves the cached cluster
+        // view, while the front door's own counters are live
+        let second = http_exchange(front.http_addr(), b"GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(second.contains("lh_requests_done_total 1\n"), "{second}");
+        assert!(second.contains("lh_front_requests_total 2\n"), "{second}");
         front.shutdown();
         for s in shards {
             s.shutdown();

@@ -22,10 +22,13 @@
 //!   circuit breaking, and transcript-mirror **resurrection** of sessions
 //!   whose shard died.
 //! * [`front`] — the router as a concurrent wire server: per-connection
-//!   threads, streamed `Token` relay, bounded in-flight backpressure, a
-//!   background health-probe thread, and a GET-only HTTP sibling
-//!   listener serving `/metrics` (Prometheus text of the merged cluster
-//!   snapshot), `/admin` (dashboard) and `/traces` (JSON lines).
+//!   threads, streamed `Token` relay, deadline-budgeted two-priority
+//!   admission (resident sessions first; budget exhaustion is a typed
+//!   shed, capacity without a budget a typed refusal), a background
+//!   health-probe thread, and a GET-only HTTP sibling listener serving
+//!   `/metrics` (Prometheus text of the merged cluster snapshot, served
+//!   from a freshness-bounded cache), `/admin` (dashboard) and
+//!   `/traces` (JSON lines).
 //! * [`circuit`] — the three-state (closed/open/half-open) breaker the
 //!   router keeps per shard.
 //! * [`faults`] — deterministic fault injection at named protocol points
@@ -46,6 +49,6 @@ pub use admin::{AdminReport, Cluster};
 pub use circuit::{Breaker, BreakerConfig, BreakerState, BreakerStats};
 pub use faults::{FaultAction, FaultPlan, FrameKind, Point, Rule};
 pub use front::{FrontConfig, FrontServer};
-pub use router::{MigrationStats, RouteError, Router};
+pub use router::{MigrationStats, RetryPolicy, RouteError, Router};
 pub use shard::{ShardServer, ShardSpec};
-pub use wire::{ErrCode, Frame, HealthReport, PROTO_VERSION};
+pub use wire::{ErrCode, Frame, HealthReport, SessionBlob, PROTO_VERSION};

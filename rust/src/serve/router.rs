@@ -45,7 +45,7 @@
 //! `Mutex` held for the whole relayed call — which is also what makes a
 //! mid-stream drain wait for the stream to finish.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream};
 use std::sync::Arc;
@@ -54,7 +54,8 @@ use std::time::{Duration, Instant};
 use super::circuit::{Breaker, BreakerConfig, BreakerState, BreakerStats};
 use super::faults::{FaultAction, FaultPlan, FrameKind, Point};
 use super::wire::{
-    self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, MAX_FRAME_BYTES, PROTO_VERSION,
+    self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, SessionBlob, MAX_FRAME_BYTES,
+    PROTO_VERSION,
 };
 use crate::obs::{Hist, MetricValue, Snapshot};
 
@@ -70,6 +71,10 @@ const REPLY_TIMEOUT: Duration = Duration::from_secs(300);
 /// How long a TCP connect to a shard may take before it counts as a
 /// breaker failure.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long one frame write to a shard may block before it counts as a
+/// transport failure (a wedged peer must not hang the router forever).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Why a routed operation failed.
 #[derive(Debug)]
@@ -94,6 +99,14 @@ pub enum RouteError {
     Shard(ErrCode, String),
     /// A shard replied out of protocol.
     Protocol(String),
+    /// Admission refused: the shard's queue is full (or every failover
+    /// candidate's was).  The turn was never applied, so retrying after
+    /// backoff is safe.
+    Overloaded,
+    /// The request's deadline budget ran out — shed from a shard's queue,
+    /// or caught router-side before a send or retry.  Never retried: the
+    /// client's budget is spent no matter which hop noticed first.
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for RouteError {
@@ -111,6 +124,8 @@ impl std::fmt::Display for RouteError {
             }
             RouteError::Shard(code, msg) => write!(f, "shard error {code:?}: {msg}"),
             RouteError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+            RouteError::Overloaded => write!(f, "overloaded: admission queue full, retry later"),
+            RouteError::DeadlineExceeded => write!(f, "deadline budget exhausted"),
         }
     }
 }
@@ -180,6 +195,7 @@ impl Conn {
         let mut stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(REPLY_TIMEOUT))?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
         match wire::read_frame(&mut stream)? {
             Frame::Hello { proto, engine, shape_fp, weights_fp } => {
                 if proto != PROTO_VERSION {
@@ -353,6 +369,84 @@ pub struct MigrationStats {
     pub resurrections: u64,
 }
 
+/// Per-request retry budget with jittered exponential backoff, applied
+/// to the router's idempotent retry paths (export settlement, retry-in-
+/// place after a severed stream, bulk-drain settlement).  The jitter is
+/// deterministic — [`splitmix64`] over an internal counter — so replayed
+/// runs pause identically and no ambient entropy leaks into tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries *beyond* the first attempt (0 = never retry).
+    pub max_attempts: u32,
+    /// Backoff before retry k is `base * 2^k`, jittered, capped below.
+    pub base: Duration,
+    /// Upper bound on any single backoff pause.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The pause before retry `attempt` (0-based), using `seq` as the
+    /// jitter source: full exponential value, then uniformly jittered to
+    /// [half, full] so synchronized retriers decorrelate without ever
+    /// collapsing to zero wait.
+    fn backoff(&self, attempt: u32, seq: u64) -> Duration {
+        let exp_ms = (self.base.as_millis() as u64)
+            .saturating_mul(1u64 << attempt.min(16))
+            .min(self.cap.as_millis() as u64)
+            .max(1);
+        let jitter = splitmix64(seq) % (exp_ms / 2 + 1);
+        Duration::from_millis(exp_ms - jitter)
+    }
+}
+
+/// Is this failure worth spending retry budget on?  Transport failures
+/// and open circuits may heal; `Overloaded` clears when queues drain.
+/// `DeadlineExceeded` never retries — the budget is spent regardless of
+/// which hop noticed.
+fn retryable(e: &RouteError) -> bool {
+    matches!(
+        e,
+        RouteError::Io(_) | RouteError::ShardUnavailable { .. } | RouteError::Overloaded
+    )
+}
+
+/// Collapse typed shard error frames into the router's own typed
+/// variants, so callers match on `RouteError::Overloaded` /
+/// `RouteError::DeadlineExceeded` regardless of which hop refused.
+fn lift_refusal(e: RouteError) -> RouteError {
+    match e {
+        RouteError::Shard(ErrCode::Overloaded, _) => RouteError::Overloaded,
+        RouteError::Shard(ErrCode::DeadlineExceeded, _) => RouteError::DeadlineExceeded,
+        other => other,
+    }
+}
+
+/// Remaining deadline budget in whole milliseconds for the wire
+/// (`deadline_ms`; 0 = no deadline).  A budget that has already expired
+/// is refused here, before any bytes move.
+fn remaining_ms(deadline: Option<Instant>) -> Result<u32, RouteError> {
+    match deadline {
+        None => Ok(0),
+        Some(d) => {
+            let left = d.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(RouteError::DeadlineExceeded);
+            }
+            Ok(left.as_millis().clamp(1, u32::MAX as u128) as u32)
+        }
+    }
+}
+
 /// The sharded front door.
 pub struct Router {
     shards: Vec<ShardInfo>,
@@ -380,6 +474,12 @@ pub struct Router {
     migrations: MigrationStats,
     /// Shards that failed to answer a metrics pull (cumulative).
     scrape_errors: u64,
+    /// Retry budget + backoff tuning for the idempotent retry paths.
+    retry: RetryPolicy,
+    /// Monotone jitter counter: each backoff pause consumes one value.
+    retry_seq: u64,
+    /// Lifetime retries spent from per-request budgets (`lh_retries_total`).
+    retries: u64,
 }
 
 impl Router {
@@ -419,6 +519,9 @@ impl Router {
             route_hist,
             migrations: MigrationStats::default(),
             scrape_errors: 0,
+            retry: RetryPolicy::default(),
+            retry_seq: 0,
+            retries: 0,
         };
         r.rebuild_ring();
         Ok(r)
@@ -468,6 +571,42 @@ impl Router {
     /// would rebuild from).
     pub fn mirror_of(&self, session: u64) -> Option<&[i32]> {
         self.mirror.get(&session).map(|v| v.as_slice())
+    }
+
+    /// Is the session pinned to a shard (served at least once and not
+    /// ended)?  The front door's two-priority admission gate prefers
+    /// resident sessions: their next turn is a cheap state resume, while
+    /// a cold session costs a full prefill.
+    pub fn is_resident(&self, session: u64) -> bool {
+        self.resident.contains_key(&session)
+    }
+
+    /// Replace the retry budget / backoff tuning (tests pin this to
+    /// zero-wait or zero-budget policies).
+    pub fn set_retry_policy(&mut self, p: RetryPolicy) {
+        self.retry = p;
+    }
+
+    /// Lifetime retries spent from per-request retry budgets.
+    pub fn retries_spent(&self) -> u64 {
+        self.retries
+    }
+
+    /// Spend one unit of retry budget: pause for the jittered backoff
+    /// (deterministic: the jitter source is an internal counter) and
+    /// count the retry.  Refuses with [`RouteError::DeadlineExceeded`]
+    /// instead of pausing across the caller's deadline.
+    fn backoff_pause(&mut self, attempt: u32, deadline: Option<Instant>) -> Result<(), RouteError> {
+        let pause = self.retry.backoff(attempt, self.retry_seq);
+        self.retry_seq = self.retry_seq.wrapping_add(1);
+        if let Some(d) = deadline {
+            if Instant::now() + pause >= d {
+                return Err(RouteError::DeadlineExceeded);
+            }
+        }
+        self.retries += 1;
+        std::thread::sleep(pause);
+        Ok(())
     }
 
     fn rebuild_ring(&mut self) {
@@ -548,6 +687,22 @@ impl Router {
         &mut self,
         prompt: Vec<i32>,
         max_new: usize,
+        on_token: impl FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
+        self.submit_streaming_deadline(prompt, max_new, None, on_token)
+    }
+
+    /// [`Router::submit_streaming`] under a deadline: the remaining
+    /// budget is re-derived immediately before each attempt and travels
+    /// as `deadline_ms` so the shard's admission queue can shed the work
+    /// if it goes stale there.  An `Overloaded` shard is failed over like
+    /// a dead one (the turn was never applied); `DeadlineExceeded` is
+    /// surfaced immediately — the budget is spent wherever we'd go next.
+    pub fn submit_streaming_deadline(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        deadline: Option<Instant>,
         mut on_token: impl FnMut(i32),
     ) -> Result<Vec<i32>, RouteError> {
         let live: Vec<usize> = (0..self.shards.len())
@@ -560,6 +715,7 @@ impl Router {
         self.rr = self.rr.wrapping_add(1);
         let mut last = RouteError::NoShards;
         for k in 0..live.len() {
+            let deadline_ms = remaining_ms(deadline)?;
             let shard = live[(base + k) % live.len()];
             let mut conn = match self.open_shard(shard) {
                 Ok(c) => c,
@@ -570,7 +726,8 @@ impl Router {
                 }
             };
             let mut emitted = 0usize;
-            let req = Frame::Submit { max_new: max_new as u32, prompt: prompt.clone() };
+            let req =
+                Frame::Submit { max_new: max_new as u32, deadline_ms, prompt: prompt.clone() };
             let t0 = Instant::now();
             match conn.generate_streaming(&req, |t| {
                 emitted += 1;
@@ -581,11 +738,19 @@ impl Router {
                     self.note_outcome(shard, None);
                     return Ok(toks);
                 }
-                Err(e @ RouteError::Io(_)) if emitted == 0 => {
+                Err(e) if emitted == 0 => {
+                    let e = lift_refusal(e);
                     self.note_outcome(shard, Some(&e));
+                    if matches!(e, RouteError::DeadlineExceeded) {
+                        return Err(e);
+                    }
+                    if !retryable(&e) {
+                        return Err(e);
+                    }
                     last = e;
                 }
                 Err(e) => {
+                    let e = lift_refusal(e);
                     self.note_outcome(shard, Some(&e));
                     return Err(e);
                 }
@@ -617,55 +782,92 @@ impl Router {
         session: u64,
         delta: Vec<i32>,
         max_new: usize,
+        on_token: impl FnMut(i32),
+    ) -> Result<Vec<i32>, RouteError> {
+        self.submit_in_session_streaming_deadline(session, delta, max_new, None, on_token)
+    }
+
+    /// [`Router::submit_in_session_streaming`] under a deadline.  The
+    /// remaining budget is re-derived before each attempt and shipped as
+    /// `deadline_ms`; a shard-side `Overloaded` refusal (the turn was
+    /// never applied — the session is intact) is retried in place against
+    /// the session's own shard, spending the per-request retry budget
+    /// with jittered backoff.  `DeadlineExceeded` is never retried.
+    pub fn submit_in_session_streaming_deadline(
+        &mut self,
+        session: u64,
+        delta: Vec<i32>,
+        max_new: usize,
+        deadline: Option<Instant>,
         mut on_token: impl FnMut(i32),
     ) -> Result<Vec<i32>, RouteError> {
         let shard = self.route_session(session)?;
         let strict = self.resident.contains_key(&session);
-        let mut emitted = 0usize;
-        let req = Frame::SubmitInSession {
-            session,
-            strict,
-            max_new: max_new as u32,
-            delta: delta.clone(),
-        };
-        let t0 = Instant::now();
-        let attempt = match self.open_shard(shard) {
-            Ok(mut conn) => conn.generate_streaming(&req, |t| {
-                emitted += 1;
-                on_token(t);
-            }),
-            Err(e) => Err(e),
-        };
-        match attempt {
-            Ok(toks) => {
-                self.route_hist[shard].record(t0.elapsed().as_secs_f64());
-                self.note_outcome(shard, None);
-                self.note_turn(session, shard, &delta, &toks);
-                Ok(toks)
-            }
-            Err(RouteError::Shard(ErrCode::UnknownSession, _)) => {
-                // a strict resume the shard refused: resurrect from the
-                // mirror if we hold one, else surface the typed error
-                if strict && self.mirror.contains_key(&session) {
-                    self.resurrect_turn(session, &delta, max_new, emitted, &mut on_token)
-                } else {
-                    Err(RouteError::UnknownSession(session))
+        let mut attempt_no = 0u32;
+        loop {
+            let deadline_ms = remaining_ms(deadline)?;
+            let mut emitted = 0usize;
+            let req = Frame::SubmitInSession {
+                session,
+                strict,
+                max_new: max_new as u32,
+                deadline_ms,
+                delta: delta.clone(),
+            };
+            let t0 = Instant::now();
+            let attempt = match self.open_shard(shard) {
+                Ok(mut conn) => conn.generate_streaming(&req, |t| {
+                    emitted += 1;
+                    on_token(t);
+                }),
+                Err(e) => Err(e),
+            };
+            return match attempt {
+                Ok(toks) => {
+                    self.route_hist[shard].record(t0.elapsed().as_secs_f64());
+                    self.note_outcome(shard, None);
+                    self.note_turn(session, shard, &delta, &toks);
+                    Ok(toks)
                 }
-            }
-            Err(e)
-                if strict
-                    && matches!(
-                        e,
-                        RouteError::Io(_) | RouteError::ShardUnavailable { .. }
-                    ) =>
-            {
-                self.note_outcome(shard, Some(&e));
-                self.recover_turn(session, shard, &delta, max_new, emitted, &mut on_token, e)
-            }
-            Err(e) => {
-                self.note_outcome(shard, Some(&e));
+                Err(RouteError::Shard(ErrCode::UnknownSession, _)) => {
+                    // a strict resume the shard refused: resurrect from the
+                    // mirror if we hold one, else surface the typed error
+                    if strict && self.mirror.contains_key(&session) {
+                        self.resurrect_turn(
+                            session, &delta, max_new, deadline, emitted, &mut on_token,
+                        )
+                    } else {
+                        Err(RouteError::UnknownSession(session))
+                    }
+                }
+                Err(RouteError::Shard(ErrCode::Overloaded, _)) if emitted == 0 => {
+                    // admission refused: the session is untouched on its
+                    // shard, so an in-place retry after backoff is safe
+                    if attempt_no < self.retry.max_attempts {
+                        self.backoff_pause(attempt_no, deadline)?;
+                        attempt_no += 1;
+                        continue;
+                    }
+                    Err(RouteError::Overloaded)
+                }
                 Err(e)
-            }
+                    if strict
+                        && matches!(
+                            e,
+                            RouteError::Io(_) | RouteError::ShardUnavailable { .. }
+                        ) =>
+                {
+                    self.note_outcome(shard, Some(&e));
+                    self.recover_turn(
+                        session, shard, &delta, max_new, deadline, emitted, &mut on_token, e,
+                    )
+                }
+                Err(e) => {
+                    let e = lift_refusal(e);
+                    self.note_outcome(shard, Some(&e));
+                    Err(e)
+                }
+            };
         }
     }
 
@@ -679,7 +881,8 @@ impl Router {
     ///    emit the unseen suffix and accept without replaying.
     /// 2. **Retry in place** — the transcript is exactly the pre-turn
     ///    mirror, so the request never reached the coordinator and the
-    ///    session is intact: send the turn again.
+    ///    session is intact: send the turn again (up to the per-request
+    ///    retry budget, with jittered backoff between attempts).
     /// 3. **Resurrect** — the shard is gone (or inconsistent): rebuild
     ///    the session elsewhere from the mirror and replay.
     #[allow(clippy::too_many_arguments)]
@@ -689,6 +892,7 @@ impl Router {
         shard: usize,
         delta: &[i32],
         max_new: usize,
+        deadline: Option<Instant>,
         emitted: usize,
         on_token: &mut dyn FnMut(i32),
         cause: RouteError,
@@ -710,27 +914,66 @@ impl Router {
                 return Ok(generated);
             }
             if emitted == 0 && tokens.len() == pre_len && tokens[..] == want[..pre_len] {
-                // the turn never reached the coordinator: retry in place
-                if let Ok(mut conn) = self.open_shard(shard) {
+                // the turn never reached the coordinator: the session is
+                // intact in place, so retry there — budgeted, backed off.
+                // Greedy decode is deterministic, so a replay regenerates
+                // the identical tokens and only the unseen suffix is
+                // forwarded — a retry that died mid-stream never causes a
+                // duplicate emission.
+                let mut seen = 0usize;
+                for attempt in 0..=self.retry.max_attempts {
+                    if attempt > 0 && self.backoff_pause(attempt - 1, deadline).is_err() {
+                        return Err(RouteError::DeadlineExceeded);
+                    }
+                    let deadline_ms = remaining_ms(deadline)?;
+                    let Ok(mut conn) = self.open_shard(shard) else { continue };
                     let req = Frame::SubmitInSession {
                         session,
                         strict: true,
                         max_new: max_new as u32,
+                        deadline_ms,
                         delta: delta.to_vec(),
                     };
-                    if let Ok(toks) = conn.generate_streaming(&req, &mut *on_token) {
-                        self.note_outcome(shard, None);
-                        self.note_turn(session, shard, delta, &toks);
-                        return Ok(toks);
+                    let mut streamed = 0usize;
+                    match conn.generate_streaming(&req, |t| {
+                        streamed += 1;
+                        if streamed > seen {
+                            on_token(t);
+                        }
+                    }) {
+                        Ok(toks) => {
+                            self.note_outcome(shard, None);
+                            self.note_turn(session, shard, delta, &toks);
+                            return Ok(toks);
+                        }
+                        Err(_) => seen = seen.max(streamed),
                     }
+                }
+                // the in-place retries themselves half-streamed: the
+                // resurrection replay below must skip what the caller saw
+                if seen > 0 {
+                    let toks = match self
+                        .resurrect_turn(session, delta, max_new, deadline, seen, on_token)
+                    {
+                        Ok(t) => t,
+                        Err(RouteError::NoShards) => return Err(cause),
+                        Err(e) => return Err(e),
+                    };
+                    if self.resident.get(&session) != Some(&shard) {
+                        if let Ok(mut conn) = self.open_shard(shard) {
+                            let _ = conn.request(&Frame::EndSession { session });
+                        }
+                    }
+                    return Ok(toks);
                 }
             }
         }
-        let toks = match self.resurrect_turn(session, delta, max_new, emitted, on_token) {
-            Ok(t) => t,
-            Err(RouteError::NoShards) => return Err(cause),
-            Err(e) => return Err(e),
-        };
+        let toks =
+            match self.resurrect_turn(session, delta, max_new, deadline, emitted, on_token) {
+                Ok(t) => t,
+                Err(RouteError::NoShards) => return Err(cause),
+                Err(e) => return Err(e),
+            };
         // the old shard may still hold a now-superseded copy (e.g. the
         // request never arrived but its transcript probe also failed);
         // best-effort end it so the session lives in exactly one place
@@ -752,6 +995,7 @@ impl Router {
         session: u64,
         delta: &[i32],
         max_new: usize,
+        deadline: Option<Instant>,
         emitted: usize,
         on_token: &mut dyn FnMut(i32),
     ) -> Result<Vec<i32>, RouteError> {
@@ -800,10 +1044,12 @@ impl Router {
             }
             // strict replay: deterministic greedy decode regenerates the
             // identical tokens; emit only the unseen suffix
+            let deadline_ms = remaining_ms(deadline)?;
             let req = Frame::SubmitInSession {
                 session,
                 strict: true,
                 max_new: max_new as u32,
+                deadline_ms,
                 delta: delta.to_vec(),
             };
             let mut replayed = 0usize;
@@ -874,7 +1120,12 @@ impl Router {
             Frame::ExportAbort { session }
         };
         let mut last: Option<RouteError> = None;
-        for _attempt in 0..2 {
+        // settlement is idempotent, so every retry in the budget is safe;
+        // backoff gives a restarting shard a beat to come back
+        for attempt in 0..=self.retry.max_attempts {
+            if attempt > 0 {
+                let _ = self.backoff_pause(attempt - 1, None);
+            }
             match self.open_shard(shard) {
                 Ok(mut conn) => match conn.request(&frame) {
                     Ok(Frame::Ok) => {
@@ -888,7 +1139,11 @@ impl Router {
                     }
                     Err(e) => {
                         self.note_outcome(shard, Some(&e));
+                        let give_up = !retryable(&e);
                         last = Some(e);
+                        if give_up {
+                            break;
+                        }
                     }
                 },
                 Err(e) => {
@@ -1063,9 +1318,64 @@ impl Router {
         }
     }
 
-    /// Stop placing new work on a shard and migrate every session the
-    /// router has resident there to its new ring target.  Returns the
-    /// migrated session ids.
+    /// Settle a batch of export stashes in one round trip:
+    /// `BulkCommit` (discard) or `BulkAbort` (re-import).  An *empty* id
+    /// list on abort means "restore every stash" — the recovery for a
+    /// lost `BulkBlob` reply, where the router cannot name what was
+    /// stashed.  Idempotent per id, retried on the same budget as
+    /// [`Router::settle_export`].
+    fn settle_bulk(
+        &mut self,
+        shard: usize,
+        sessions: &[u64],
+        commit: bool,
+    ) -> Result<(), RouteError> {
+        let frame = if commit {
+            Frame::BulkCommit { sessions: sessions.to_vec() }
+        } else {
+            Frame::BulkAbort { sessions: sessions.to_vec() }
+        };
+        let mut last: Option<RouteError> = None;
+        for attempt in 0..=self.retry.max_attempts {
+            if attempt > 0 {
+                let _ = self.backoff_pause(attempt - 1, None);
+            }
+            match self.open_shard(shard) {
+                Ok(mut conn) => match conn.request(&frame) {
+                    Ok(Frame::Ok) => {
+                        self.note_outcome(shard, None);
+                        return Ok(());
+                    }
+                    Ok(other) => {
+                        last = Some(RouteError::Protocol(format!(
+                            "expected Ok from bulk settlement, got {other:?}"
+                        )));
+                    }
+                    Err(e) => {
+                        self.note_outcome(shard, Some(&e));
+                        let give_up = !retryable(&e);
+                        last = Some(e);
+                        if give_up {
+                            break;
+                        }
+                    }
+                },
+                Err(e) => {
+                    self.note_outcome(shard, Some(&e));
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or(RouteError::NoShards))
+    }
+
+    /// Stop placing new work on a shard and move every session it holds
+    /// to its new ring target — **bulk**: one `BulkExport` round trip on
+    /// the source, one `BulkImport` per target shard, then batched 2PC
+    /// settlement, instead of a per-session quiesce/ship/settle cycle.
+    /// Sessions whose target's identity mismatches the source's are
+    /// aborted back in place (the drain moves what it can and reports
+    /// only the moved ids).  Returns the moved session ids, sorted.
     pub fn drain(&mut self, shard: usize) -> Result<Vec<u64>, RouteError> {
         if shard >= self.shards.len() {
             return Err(RouteError::Protocol(format!("no shard {shard}")));
@@ -1078,12 +1388,107 @@ impl Router {
             self.rebuild_ring();
             return Err(RouteError::NoShards);
         }
-        let mut moved = Vec::new();
-        for sid in self.sessions_on(shard) {
-            let target = self.ring_target(sid).ok_or(RouteError::NoShards)?;
-            self.migrate(sid, target)?;
-            moved.push(sid);
+        // phase 1, one round trip: quiesce + detach + stash everything
+        // the shard holds and ship it all back
+        let undo = |r: &mut Router, e: RouteError| {
+            r.shards[shard].draining = false;
+            r.rebuild_ring();
+            Err(e)
+        };
+        let mut conn = match self.open_shard(shard) {
+            Ok(c) => c,
+            Err(e) => return undo(self, e),
+        };
+        let (shape_fp, weights_fp, blobs) = match conn.request(&Frame::BulkExport) {
+            Ok(Frame::BulkBlob { shape_fp, weights_fp, sessions }) => {
+                self.note_outcome(shard, None);
+                (shape_fp, weights_fp, sessions)
+            }
+            Ok(other) => {
+                return undo(
+                    self,
+                    RouteError::Protocol(format!("expected BulkBlob, got {other:?}")),
+                )
+            }
+            Err(e) => {
+                // the reply may be lost with every session stashed: an
+                // empty BulkAbort restores all stashes (idempotent, so a
+                // reply lost *before* the stash is also fine)
+                self.note_outcome(shard, Some(&e));
+                let _ = self.settle_bulk(shard, &[], false);
+                return undo(self, e);
+            }
+        };
+        drop(conn);
+        if blobs.is_empty() {
+            return Ok(Vec::new());
         }
+        // phase 2: partition by ring target, one BulkImport per peer
+        let mut groups: BTreeMap<usize, Vec<SessionBlob>> = BTreeMap::new();
+        for b in blobs {
+            let t = self.ring_target(b.session).ok_or(RouteError::NoShards)?;
+            groups.entry(t).or_default().push(b);
+        }
+        let src_engine = self.shards[shard].id.engine.clone();
+        let mut moved = Vec::new();
+        for (target, group) in groups {
+            let ids: Vec<u64> = group.iter().map(|b| b.session).collect();
+            self.migrations.attempts += ids.len() as u64;
+            let tgt = &self.shards[target].id;
+            if tgt.engine != src_engine
+                || tgt.shape_fp != shape_fp
+                || tgt.weights_fp != weights_fp
+            {
+                // mismatched peer: these sessions stay on the draining
+                // source rather than decode into silently wrong tokens
+                self.migrations.aborts += ids.len() as u64;
+                self.settle_bulk(shard, &ids, false)?;
+                continue;
+            }
+            let import =
+                Frame::BulkImport { shape_fp, weights_fp, sessions: group.clone() };
+            let landed = match self.open_shard(target).and_then(|mut c| c.request(&import)) {
+                Ok(Frame::Ok) => {
+                    self.note_outcome(target, None);
+                    true
+                }
+                Ok(_) => false,
+                Err(e @ RouteError::Io(_)) => {
+                    // ambiguous lost-Ok: the bulk install is atomic
+                    // server-side (validate everything, then install
+                    // everything), so one session's presence answers for
+                    // the whole batch
+                    self.note_outcome(target, Some(&e));
+                    matches!(self.probe_session(target, ids[0]), Ok(true))
+                }
+                Err(e) => {
+                    self.note_outcome(target, Some(&e));
+                    false
+                }
+            };
+            if landed {
+                self.migrations.commits += ids.len() as u64;
+                for b in &group {
+                    self.resident.insert(b.session, target);
+                    self.mirror.insert(b.session, b.transcript.clone());
+                }
+                // best-effort, like finish_migration: a failed commit
+                // leaves a stale (invisible, idempotent) stash, never a
+                // live duplicate
+                let _ = self.settle_bulk(shard, &ids, true);
+                moved.extend(ids);
+            } else {
+                self.migrations.aborts += ids.len() as u64;
+                if let Err(abort_err) = self.settle_bulk(shard, &ids, false) {
+                    return Err(RouteError::Protocol(format!(
+                        "{} session(s) may be stranded in shard {shard}'s export stash: \
+                         bulk import did not land and the abort also failed: {abort_err}",
+                        ids.len()
+                    )));
+                }
+            }
+        }
+        moved.sort_unstable();
         Ok(moved)
     }
 
@@ -1246,6 +1651,7 @@ impl Router {
             ("lh_migration_commits_total", m.commits),
             ("lh_migration_aborts_total", m.aborts),
             ("lh_resurrections_total", m.resurrections),
+            ("lh_retries_total", self.retries),
             ("lh_fault_hits_total", fault_hits),
             ("lh_scrape_errors_total", self.scrape_errors),
         ] {

@@ -28,21 +28,36 @@ use std::collections::HashMap;
 use std::io::{self, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::wire::{self, ErrCode, Frame, HealthReport, MAX_FRAME_BYTES, PROTO_VERSION};
+use super::wire::{
+    self, ErrCode, Frame, HealthReport, SessionBlob, MAX_FRAME_BYTES, PROTO_VERSION,
+};
 use crate::config::ServeConfig;
-use crate::coordinator::server::{spawn, SessionExport, SubmitError};
-use crate::coordinator::{CoordinatorHandle, GenResponse, SlotEngine};
+use crate::coordinator::server::{spawn, SessionExport};
+use crate::coordinator::{CoordinatorHandle, GenResponse, Refusal, SlotEngine};
 use crate::engine::recurrent::{RecurrentEngine, STATE_TAG};
 use crate::engine::LmShape;
 use crate::session::{SessionError, SessionState};
 
 /// How often a blocked read wakes to check the stop flag.
 const STOP_POLL: Duration = Duration::from_millis(100);
+
+/// How long one frame write may stall before the connection is declared
+/// dead.  A client that stops draining its socket mid-stream otherwise
+/// parks the connection thread forever; the generation itself is never
+/// aborted — the coordinator finishes the turn regardless.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Re-derive the absolute admission deadline from the wire's *relative*
+/// budget (0 = none).  Each hop anchors the budget to its own clock, so
+/// clock skew between peers never compounds into the deadline.
+fn wire_deadline(deadline_ms: u32) -> Option<Instant> {
+    (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64))
+}
 
 /// What a shard announces about its engine — the handshake identity a
 /// session blob must match before it is ever shipped here.  Shape alone
@@ -267,6 +282,7 @@ fn serve_conn(
 ) -> io::Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(STOP_POLL))?;
+    stream.set_write_timeout(Some(WRITE_TIMEOUT))?;
     wire::write_frame(
         &mut stream,
         &Frame::Hello {
@@ -282,28 +298,39 @@ fn serve_conn(
             None => return Ok(()),
         };
         match frame {
-            Frame::Submit { max_new, prompt } => {
-                match h.submit_streaming(prompt, max_new as usize) {
-                    Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
+            Frame::Submit { max_new, deadline_ms, prompt } => {
+                let deadline = wire_deadline(deadline_ms);
+                let (tok_tx, tok_rx) = channel();
+                match h.submit_full(None, prompt, max_new as usize, Some(tok_tx), deadline) {
+                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx)?,
                     Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
                 }
             }
-            Frame::SubmitInSession { session, strict, max_new, delta } => {
-                if strict {
-                    match h.resume_session_streaming(session, delta, max_new as usize) {
-                        Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
-                        Err(SubmitError::Session(e)) => {
-                            send_err(&mut stream, ErrCode::UnknownSession, &e.to_string())?
-                        }
-                        Err(SubmitError::Closed(_)) => {
-                            send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
-                        }
-                    }
-                } else {
-                    match h.submit_in_session_streaming(session, delta, max_new as usize) {
-                        Ok((toks, rx)) => stream_generation(&mut stream, toks, rx)?,
-                        Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
-                    }
+            Frame::SubmitInSession { session, strict, max_new, deadline_ms, delta } => {
+                let deadline = wire_deadline(deadline_ms);
+                // strict resume: refuse with the typed UnknownSession
+                // instead of silently forking a fresh conversation.  (The
+                // check and the submit are two steps; a concurrent end
+                // racing between them degrades to a fresh session, never
+                // to an error — same contract as resume_session.)
+                if strict && !h.session_known(session).unwrap_or(false) {
+                    send_err(
+                        &mut stream,
+                        ErrCode::UnknownSession,
+                        &SessionError::Unknown { id: session }.to_string(),
+                    )?;
+                    continue;
+                }
+                let (tok_tx, tok_rx) = channel();
+                match h.submit_full(
+                    Some(session),
+                    delta,
+                    max_new as usize,
+                    Some(tok_tx),
+                    deadline,
+                ) {
+                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx)?,
+                    Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
                 }
             }
             Frame::EndSession { session } => match h.end_session(session) {
@@ -415,6 +442,123 @@ fn serve_conn(
                     &Frame::MetricsReport { entries: h.metrics.export_entries() },
                 )?
             }
+            Frame::BulkExport => {
+                // quiesce + detach + stash EVERY session this shard holds
+                // (resident, spilled, transcript-only), reply with one
+                // BulkBlob — the source half of a one-round-trip drain
+                let ids = match h.session_list() {
+                    Ok(ids) => ids,
+                    Err(_) => {
+                        send_err(&mut stream, ErrCode::Closed, "coordinator closed")?;
+                        continue;
+                    }
+                };
+                let mut blobs = Vec::with_capacity(ids.len());
+                let mut stashed: Vec<u64> = Vec::new();
+                for id in ids {
+                    match h.export_session(id) {
+                        Ok(Some(exp)) => {
+                            blobs.push(SessionBlob {
+                                session: id,
+                                transcript: exp.transcript.clone(),
+                                state: exp.state.as_ref().map(|s| s.to_wire_bytes()),
+                            });
+                            pending.lock().unwrap().insert(id, exp);
+                            stashed.push(id);
+                        }
+                        // ended between the list and the export: fine
+                        Ok(None) => {}
+                        Err(_) => break,
+                    }
+                }
+                let reply = Frame::BulkBlob {
+                    shape_fp: spec.shape_fp,
+                    weights_fp: spec.weights_fp,
+                    sessions: blobs,
+                };
+                if let Err(e) = wire::write_frame(&mut stream, &reply) {
+                    // the peer never saw the blob and this conn is dead:
+                    // roll every stash back eagerly (same reasoning as the
+                    // per-session export — a failed export must never
+                    // destroy conversations)
+                    let mut p = pending.lock().unwrap();
+                    for id in stashed {
+                        if let Some(exp) = p.remove(&id) {
+                            let _ = h.import_session(id, exp);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+            Frame::BulkImport { shape_fp, weights_fp, sessions } => {
+                // atomic: validate every blob before installing any, so a
+                // mismatched batch installs nothing — and the router's
+                // lost-Ok probe of one session answers for the whole batch
+                let mut checked = Vec::with_capacity(sessions.len());
+                let mut bad: Option<String> = None;
+                for b in sessions {
+                    match check_import(spec, shape_fp, weights_fp, b.state) {
+                        Ok(st) => checked.push((
+                            b.session,
+                            SessionExport { transcript: b.transcript, state: st },
+                        )),
+                        Err(msg) => {
+                            bad = Some(msg);
+                            break;
+                        }
+                    }
+                }
+                if let Some(msg) = bad {
+                    send_err(&mut stream, ErrCode::Mismatch, &msg)?;
+                    continue;
+                }
+                let mut closed = false;
+                for (id, exp) in checked {
+                    if h.import_session(id, exp).is_err() {
+                        closed = true;
+                        break;
+                    }
+                }
+                if closed {
+                    send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
+                } else {
+                    wire::write_frame(&mut stream, &Frame::Ok)?
+                }
+            }
+            Frame::BulkCommit { sessions } => {
+                // idempotent per id, exactly like ExportCommit
+                let mut p = pending.lock().unwrap();
+                for id in sessions {
+                    p.remove(&id);
+                }
+                drop(p);
+                wire::write_frame(&mut stream, &Frame::Ok)?
+            }
+            Frame::BulkAbort { sessions } => {
+                // an EMPTY id list restores every stash — the recovery for
+                // a lost BulkBlob reply, where the peer cannot name what
+                // was stashed.  Idempotent per id, like ExportAbort.
+                let victims: Vec<u64> = if sessions.is_empty() {
+                    pending.lock().unwrap().keys().copied().collect()
+                } else {
+                    sessions
+                };
+                let mut closed = false;
+                for id in victims {
+                    let stashed = pending.lock().unwrap().remove(&id);
+                    if let Some(exp) = stashed {
+                        if h.import_session(id, exp).is_err() {
+                            closed = true;
+                            break;
+                        }
+                    }
+                }
+                if closed {
+                    send_err(&mut stream, ErrCode::Closed, "coordinator closed")?
+                } else {
+                    wire::write_frame(&mut stream, &Frame::Ok)?
+                }
+            }
             // reply frames (or a client Hello) are not valid requests
             _ => send_err(&mut stream, ErrCode::Protocol, "unexpected frame")?,
         }
@@ -470,13 +614,27 @@ fn stream_generation(
     // the token sender dropped: the request retired and the response is
     // already (or imminently) in the reply channel
     match resp.recv() {
-        Ok(resp) => wire::write_frame(
-            stream,
-            &Frame::Done {
-                ttft_us: (resp.ttft_s * 1e6) as u64,
-                total_us: (resp.total_s * 1e6) as u64,
-            },
-        ),
+        // a refused turn was never applied (no tokens, session untouched):
+        // surface the coordinator's typed refusal as a typed wire error so
+        // the client can back off / respect the spent budget — never a
+        // silent hang, never a half-reply
+        Ok(resp) => match resp.refusal {
+            Some(Refusal::Overloaded) => {
+                send_err(stream, ErrCode::Overloaded, "admission queue full")
+            }
+            Some(Refusal::DeadlineExceeded) => send_err(
+                stream,
+                ErrCode::DeadlineExceeded,
+                "deadline budget exhausted before admission",
+            ),
+            None => wire::write_frame(
+                stream,
+                &Frame::Done {
+                    ttft_us: (resp.ttft_s * 1e6) as u64,
+                    total_us: (resp.total_s * 1e6) as u64,
+                },
+            ),
+        },
         Err(_) => send_err(stream, ErrCode::Closed, "generation reply lost"),
     }
 }
@@ -576,10 +734,10 @@ mod tests {
             .unwrap()
             .tokens;
         let mut client = RawClient::connect(shard.addr());
-        client.send(&Frame::Submit { max_new: 5, prompt: vec![4, 2, 4] });
+        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, prompt: vec![4, 2, 4] });
         assert_eq!(client.collect_generation(), want);
         // a second command reuses the same connection
-        client.send(&Frame::Submit { max_new: 5, prompt: vec![4, 2, 4] });
+        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, prompt: vec![4, 2, 4] });
         assert_eq!(client.collect_generation(), want);
         h_ref.shutdown();
         shard.shutdown();
@@ -593,6 +751,7 @@ mod tests {
             session: 99,
             strict: true,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![1, 2],
         });
         match client.recv() {
@@ -604,6 +763,7 @@ mod tests {
             session: 99,
             strict: false,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![1, 2],
         });
         let g1 = client.collect_generation();
@@ -612,6 +772,7 @@ mod tests {
             session: 99,
             strict: true,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![3],
         });
         assert_eq!(client.collect_generation().len(), 3);
@@ -680,6 +841,7 @@ mod tests {
             session: 1,
             strict: true,
             max_new: 1,
+            deadline_ms: 0,
             delta: vec![5],
         });
         assert!(matches!(
@@ -714,6 +876,7 @@ mod tests {
             session: sid,
             strict: false,
             max_new: 4,
+            deadline_ms: 0,
             delta: vec![3, 1, 4],
         });
         let g1 = a.collect_generation();
@@ -741,6 +904,7 @@ mod tests {
             session: sid,
             strict: true,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![1, 5],
         });
         assert_eq!(b.collect_generation(), turn_ref(vec![1, 5], 3));
@@ -780,6 +944,7 @@ mod tests {
             session: sid,
             strict: false,
             max_new: 4,
+            deadline_ms: 0,
             delta: vec![2, 7, 1],
         });
         assert_eq!(c.collect_generation(), turn_ref(vec![2, 7, 1], 4));
@@ -791,7 +956,7 @@ mod tests {
             !shard.handle.session_known(sid).unwrap(),
             "a stashed session must not be able to serve turns"
         );
-        c.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, delta: vec![9] });
+        c.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, delta: vec![9] });
         assert!(matches!(c.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
         // abort on a NEW connection: settlement survives a reconnect
         let mut c2 = RawClient::connect(shard.addr());
@@ -807,6 +972,7 @@ mod tests {
             session: sid,
             strict: true,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![5, 5],
         });
         assert_eq!(c2.collect_generation(), turn_ref(vec![5, 5], 3));
@@ -818,7 +984,7 @@ mod tests {
         assert_eq!(shard.pending_exports(), 0);
         c2.send(&Frame::ExportCommit { session: sid }); // duplicate commit
         assert_eq!(c2.recv(), Frame::Ok);
-        c2.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, delta: vec![1] });
+        c2.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, delta: vec![1] });
         assert!(matches!(c2.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
         h_ref.shutdown();
         shard.shutdown();
@@ -837,6 +1003,7 @@ mod tests {
             session: 42,
             strict: false,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![1, 2],
         });
         let g = c.collect_generation();
@@ -849,7 +1016,7 @@ mod tests {
             }
             other => panic!("expected TranscriptIs, got {other:?}"),
         }
-        c.send(&Frame::SubmitInSession { session: 42, strict: true, max_new: 2, delta: vec![3] });
+        c.send(&Frame::SubmitInSession { session: 42, strict: true, max_new: 2, deadline_ms: 0, delta: vec![3] });
         assert_eq!(c.collect_generation().len(), 2);
         shard.shutdown();
     }
@@ -862,6 +1029,7 @@ mod tests {
             session: 5,
             strict: false,
             max_new: 4,
+            deadline_ms: 0,
             delta: vec![2, 7],
         });
         let _ = client.collect_generation();
@@ -888,6 +1056,7 @@ mod tests {
             session: 5,
             strict: false,
             max_new: 4,
+            deadline_ms: 0,
             delta: vec![2, 7],
         });
         let _ = client.collect_generation();
@@ -913,6 +1082,221 @@ mod tests {
             }
             other => panic!("expected MetricsReport, got {other:?}"),
         }
+        shard.shutdown();
+    }
+
+    /// The bulk drain path: one BulkExport stashes every session and
+    /// ships them all; BulkImport installs the batch atomically on the
+    /// peer; BulkCommit settles the source stash.  Conversations continue
+    /// on the peer bit-identically to an uninterrupted run.
+    #[test]
+    fn bulk_export_import_commit_moves_every_session_in_one_round_trip() {
+        let shard_a = native_shard();
+        let shard_b = native_shard();
+        let shape = LmShape::bench("nano").unwrap();
+        let h_ref = spawn(
+            move || Box::new(RecurrentEngine::new(&shape, 2, 11)) as Box<dyn SlotEngine>,
+            cfg(),
+        );
+        let sids = [3u64, 7, 9];
+        let mut a = RawClient::connect(shard_a.addr());
+        for &sid in &sids {
+            a.send(&Frame::SubmitInSession {
+                session: sid,
+                strict: false,
+                max_new: 3,
+                deadline_ms: 0,
+                delta: vec![1 + sid as i32, 2],
+            });
+            let got = a.collect_generation();
+            let want = h_ref
+                .submit_in_session(sid, vec![1 + sid as i32, 2], 3)
+                .unwrap()
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap()
+                .tokens;
+            assert_eq!(got, want, "turn 1 of session {sid} must agree with reference");
+        }
+        // one round trip detaches and ships everything
+        a.send(&Frame::BulkExport);
+        let (fp, wfp, blobs) = match a.recv() {
+            Frame::BulkBlob { shape_fp, weights_fp, sessions } => {
+                (shape_fp, weights_fp, sessions)
+            }
+            other => panic!("expected BulkBlob, got {other:?}"),
+        };
+        assert_eq!(blobs.len(), sids.len());
+        assert_eq!(shard_a.pending_exports(), sids.len());
+        for &sid in &sids {
+            assert!(
+                !shard_a.handle.session_known(sid).unwrap(),
+                "a stashed session must not be able to serve turns"
+            );
+        }
+        // install the batch on the peer, then settle the source stash
+        let mut b = RawClient::connect(shard_b.addr());
+        b.send(&Frame::BulkImport { shape_fp: fp, weights_fp: wfp, sessions: blobs });
+        assert_eq!(b.recv(), Frame::Ok);
+        a.send(&Frame::BulkCommit { sessions: sids.to_vec() });
+        assert_eq!(a.recv(), Frame::Ok);
+        assert_eq!(shard_a.pending_exports(), 0, "commit must drain the stash");
+        // turn 2 on the peer matches the uninterrupted reference
+        for &sid in &sids {
+            b.send(&Frame::SubmitInSession {
+                session: sid,
+                strict: true,
+                max_new: 3,
+                deadline_ms: 0,
+                delta: vec![9],
+            });
+            let got = b.collect_generation();
+            let want = h_ref
+                .submit_in_session(sid, vec![9], 3)
+                .unwrap()
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap()
+                .tokens;
+            assert_eq!(got, want, "post-drain turn of session {sid} must be bit-identical");
+        }
+        h_ref.shutdown();
+        shard_a.shutdown();
+        shard_b.shutdown();
+    }
+
+    /// A BulkAbort with an EMPTY id list restores every stash — the
+    /// recovery a router uses when the BulkBlob reply was lost and it
+    /// cannot name what was stashed.
+    #[test]
+    fn bulk_abort_with_empty_list_restores_every_stash() {
+        let shard = native_shard();
+        let mut c = RawClient::connect(shard.addr());
+        for sid in [1u64, 2] {
+            c.send(&Frame::SubmitInSession {
+                session: sid,
+                strict: false,
+                max_new: 2,
+                deadline_ms: 0,
+                delta: vec![sid as i32],
+            });
+            let _ = c.collect_generation();
+        }
+        c.send(&Frame::BulkExport);
+        assert!(matches!(c.recv(), Frame::BulkBlob { .. }));
+        assert_eq!(shard.pending_exports(), 2);
+        c.send(&Frame::BulkAbort { sessions: vec![] });
+        assert_eq!(c.recv(), Frame::Ok);
+        assert_eq!(shard.pending_exports(), 0);
+        for sid in [1u64, 2] {
+            assert!(shard.handle.session_known(sid).unwrap(), "session {sid} must be back");
+        }
+        // and they still serve strict turns
+        c.send(&Frame::SubmitInSession {
+            session: 1,
+            strict: true,
+            max_new: 2,
+            deadline_ms: 0,
+            delta: vec![5],
+        });
+        assert_eq!(c.collect_generation().len(), 2);
+        shard.shutdown();
+    }
+
+    /// A queued request whose wire deadline budget expires is refused
+    /// with the typed DeadlineExceeded error frame — never a silent hang,
+    /// never a late generation.
+    #[test]
+    fn expired_wire_deadline_is_a_typed_error_frame() {
+        let shape = LmShape::bench("nano").unwrap();
+        let shard = ShardServer::spawn_native(
+            &shape,
+            1,
+            11,
+            ServeConfig { max_batch: 1, linger_ms: 1, ..ServeConfig::default() },
+        )
+        .unwrap();
+        // pin the single slot with a long generation: read the first token
+        // to prove admission, leaving the rest of the stream in flight
+        let mut busy = RawClient::connect(shard.addr());
+        busy.send(&Frame::Submit { max_new: 20_000, deadline_ms: 0, prompt: vec![1, 2] });
+        match busy.recv() {
+            Frame::Token { .. } => {}
+            other => panic!("expected first token, got {other:?}"),
+        }
+        // a 1ms budget expires in the queue behind the busy slot
+        let mut late = RawClient::connect(shard.addr());
+        late.send(&Frame::Submit { max_new: 4, deadline_ms: 1, prompt: vec![3] });
+        match late.recv() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::DeadlineExceeded),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // the pinned request still completes in full
+        let mut toks = 1;
+        loop {
+            match busy.recv() {
+                Frame::Token { .. } => toks += 1,
+                Frame::Done { .. } => break,
+                other => panic!("expected Token/Done, got {other:?}"),
+            }
+        }
+        assert_eq!(toks, 20_000, "accepted work always runs to completion");
+        shard.shutdown();
+    }
+
+    /// Arrivals past the admission-queue cap get the typed Overloaded
+    /// error frame immediately.
+    #[test]
+    fn queue_cap_overflow_is_a_typed_overloaded_frame() {
+        let shape = LmShape::bench("nano").unwrap();
+        let shard = ShardServer::spawn_native(
+            &shape,
+            1,
+            11,
+            ServeConfig { max_batch: 1, linger_ms: 1, max_queue: 1, ..ServeConfig::default() },
+        )
+        .unwrap();
+        // a long session turn pins the single slot
+        let mut busy = RawClient::connect(shard.addr());
+        busy.send(&Frame::SubmitInSession {
+            session: 6,
+            strict: false,
+            max_new: 20_000,
+            deadline_ms: 0,
+            delta: vec![1, 2],
+        });
+        match busy.recv() {
+            Frame::Token { .. } => {}
+            other => panic!("expected first token, got {other:?}"),
+        }
+        // a second session turn fills the queue (no deadline: it will
+        // simply wait its turn); the census counts session turns that are
+        // queued or slotted, so in_flight == 2 proves the queue is full
+        let mut queued = RawClient::connect(shard.addr());
+        queued.send(&Frame::SubmitInSession {
+            session: 7,
+            strict: false,
+            max_new: 2,
+            deadline_ms: 0,
+            delta: vec![3],
+        });
+        let t0 = Instant::now();
+        while shard.handle.session_census().unwrap().in_flight < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "turn never queued");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // past the cap: typed refusal, immediately
+        let mut extra = RawClient::connect(shard.addr());
+        extra.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![4] });
+        match extra.recv() {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::Overloaded),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // drain the pinned stream; the queued request then completes
+        loop {
+            if matches!(busy.recv(), Frame::Done { .. }) {
+                break;
+            }
+        }
+        assert_eq!(queued.collect_generation().len(), 2);
         shard.shutdown();
     }
 

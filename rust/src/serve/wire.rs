@@ -1,11 +1,15 @@
 //! The serve-layer wire protocol: length-prefixed, versioned binary frames
 //! over a byte stream (TCP between router and shards; loopback in tests).
 //!
-//! Framing: every frame is `[u32 len LE][u8 tag][payload]`, where `len`
-//! counts the tag byte plus the payload and is capped at
-//! [`MAX_FRAME_BYTES`] so a corrupt stream fails fast instead of
-//! allocating unboundedly.  Integers are little-endian; strings are
-//! `u32 len + UTF-8`; token vectors are `u32 count + i32 LE` each.
+//! Framing: every frame is `[u32 len LE][u8 tag][payload][u64 fnv1a64]`,
+//! where `len` counts the tag byte plus the payload (not the trailing
+//! checksum) and is capped at [`MAX_FRAME_BYTES`] so a corrupt stream
+//! fails fast instead of allocating unboundedly.  The trailing checksum
+//! is the fnv1a64 of the tag + payload bytes, verified by the bounded
+//! reader before any decoding, so a frame corrupted on the wire is a
+//! typed `InvalidData` error rather than a silently mis-decoded command.
+//! Integers are little-endian; strings are `u32 len + UTF-8`; token
+//! vectors are `u32 count + i32 LE` each.
 //!
 //! Handshake: a shard greets every connection with [`Frame::Hello`]
 //! carrying the protocol version, its engine's state tag, its
@@ -21,9 +25,18 @@
 //!
 //! One connection carries one command at a time: the client writes a
 //! request frame and reads reply frames until [`Frame::Done`],
-//! [`Frame::Blob`], [`Frame::Ok`], [`Frame::HealthReport`] or
-//! [`Frame::Error`].  Generation replies stream one [`Frame::Token`] per
-//! generated token before the closing [`Frame::Done`].
+//! [`Frame::Blob`], [`Frame::BulkBlob`], [`Frame::Ok`],
+//! [`Frame::HealthReport`] or [`Frame::Error`].  Generation replies
+//! stream one [`Frame::Token`] per generated token before the closing
+//! [`Frame::Done`].
+//!
+//! Deadlines: generation requests carry a `deadline_ms` budget — the
+//! milliseconds the *client* is still willing to wait when the frame is
+//! written (0 = no deadline).  Every hop re-derives its own absolute
+//! deadline from the budget on receipt, so clock skew between peers
+//! never matters; work whose budget expires in a queue is shed with a
+//! typed [`ErrCode::DeadlineExceeded`] instead of being silently served
+//! to a client that already gave up.
 
 use std::io::{self, Read, Write};
 
@@ -36,8 +49,13 @@ use crate::util::bytes::{ByteReader, ReadErr};
 /// [`Frame::ExportAbort`]), the transcript probe ([`Frame::Transcript`] /
 /// [`Frame::TranscriptIs`]) and [`ErrCode::Unavailable`].  v3 added the
 /// observability pull ([`Frame::Metrics`] / [`Frame::MetricsReport`]) and
-/// the `queue_depth` field of [`HealthReport`].
-pub const PROTO_VERSION: u32 = 3;
+/// the `queue_depth` field of [`HealthReport`].  v4 added the trailing
+/// fnv1a64 frame checksum, the `deadline_ms` budget on [`Frame::Submit`]
+/// / [`Frame::SubmitInSession`], the typed [`ErrCode::Overloaded`] /
+/// [`ErrCode::DeadlineExceeded`] refusals, and the bulk-drain family
+/// ([`Frame::BulkExport`], [`Frame::BulkImport`], [`Frame::BulkCommit`],
+/// [`Frame::BulkAbort`], [`Frame::BulkBlob`]).
+pub const PROTO_VERSION: u32 = 4;
 
 /// Upper bound on one frame's encoded size (tag + payload).
 pub const MAX_FRAME_BYTES: u32 = 64 << 20;
@@ -61,6 +79,14 @@ pub enum ErrCode {
     /// in-flight cap, draining).  Retryable — unlike [`ErrCode::Closed`],
     /// nothing is wrong with the request itself.
     Unavailable,
+    /// Admission refused under load: the request waited out its deadline
+    /// budget (or the bounded queue was full) without reaching a slot.
+    /// The request was never applied — session state is untouched.
+    Overloaded,
+    /// The request's deadline budget expired while it was queued, so it
+    /// was shed before running.  Like [`ErrCode::Overloaded`], the
+    /// session state is untouched.
+    DeadlineExceeded,
 }
 
 impl ErrCode {
@@ -72,6 +98,8 @@ impl ErrCode {
             ErrCode::Protocol => 4,
             ErrCode::Internal => 5,
             ErrCode::Unavailable => 6,
+            ErrCode::Overloaded => 7,
+            ErrCode::DeadlineExceeded => 8,
         }
     }
 
@@ -82,6 +110,8 @@ impl ErrCode {
             3 => ErrCode::Closed,
             4 => ErrCode::Protocol,
             6 => ErrCode::Unavailable,
+            7 => ErrCode::Overloaded,
+            8 => ErrCode::DeadlineExceeded,
             _ => ErrCode::Internal,
         }
     }
@@ -109,6 +139,16 @@ pub struct HealthReport {
     pub queue_depth: u64,
 }
 
+/// One exported session inside a bulk drain frame: the same payload a
+/// per-session [`Frame::Blob`] carries, minus the fingerprints (they are
+/// per-shard and travel once per bulk frame).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionBlob {
+    pub session: u64,
+    pub transcript: Vec<i32>,
+    pub state: Option<Vec<u8>>,
+}
+
 /// One protocol frame.  Client-to-shard requests first, then shard
 /// replies; see the module docs for the conversation shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -119,12 +159,20 @@ pub enum Frame {
     /// migrated state into silently wrong tokens, so the weights
     /// fingerprint participates in every migration check.
     Hello { proto: u32, engine: String, shape_fp: u64, weights_fp: u64 },
-    /// One-shot generation.
-    Submit { max_new: u32, prompt: Vec<i32> },
+    /// One-shot generation.  `deadline_ms` is the client's remaining
+    /// deadline budget in milliseconds at send time (0 = none).
+    Submit { max_new: u32, deadline_ms: u32, prompt: Vec<i32> },
     /// One turn of a session.  `strict` asks for a typed
     /// [`ErrCode::UnknownSession`] instead of silently starting a fresh
     /// conversation when the shard does not hold the session.
-    SubmitInSession { session: u64, strict: bool, max_new: u32, delta: Vec<i32> },
+    /// `deadline_ms` as on [`Frame::Submit`].
+    SubmitInSession {
+        session: u64,
+        strict: bool,
+        max_new: u32,
+        deadline_ms: u32,
+        delta: Vec<i32>,
+    },
     /// Drop the session's state + transcript (deferred until quiescent).
     EndSession { session: u64 },
     /// Quiesce the session, detach it, and reply with [`Frame::Blob`].
@@ -164,6 +212,26 @@ pub enum Frame {
     /// effects, and how it reconciles its transcript mirror after a
     /// severed token stream.
     Transcript { session: u64 },
+    /// Export *every* session the shard holds (resident, spilled, and
+    /// transcript-only) in one round trip: each is detached and stashed
+    /// exactly like a per-session [`Frame::Export`], and the reply is one
+    /// [`Frame::BulkBlob`].  Settlement is [`Frame::BulkCommit`] /
+    /// [`Frame::BulkAbort`] over the stashed ids.
+    BulkExport,
+    /// Install a batch of migrated sessions in one round trip (the
+    /// receiving side of a bulk drain).  Fingerprint validation is
+    /// identical to [`Frame::Import`] and happens before any session in
+    /// the batch is installed, so a mismatched batch installs nothing.
+    BulkImport { shape_fp: u64, weights_fp: u64, sessions: Vec<SessionBlob> },
+    /// Discard the listed export stashes (idempotent per id, like
+    /// [`Frame::ExportCommit`] but one round trip for the whole batch).
+    BulkCommit { sessions: Vec<u64> },
+    /// Restore the listed export stashes (idempotent per id, like
+    /// [`Frame::ExportAbort`] but one round trip for the whole batch).
+    /// An EMPTY id list means "restore every stash" — the recovery a
+    /// router uses when the [`Frame::BulkBlob`] reply was lost and it
+    /// cannot name what was stashed.
+    BulkAbort { sessions: Vec<u64> },
     /// One generated token of the current request.
     Token { token: i32 },
     /// End of a generation reply.
@@ -179,7 +247,7 @@ pub enum Frame {
         state: Option<Vec<u8>>,
     },
     /// Generic success ack (EndSession / Import / ExportCommit /
-    /// ExportAbort).
+    /// ExportAbort / BulkImport / BulkCommit / BulkAbort).
     Ok,
     HealthReport(HealthReport),
     /// Reply to [`Frame::Metrics`]: the shard's named-metric snapshot.
@@ -190,6 +258,9 @@ pub enum Frame {
     /// Reply to [`Frame::Transcript`]: the session's complete token
     /// history in order.
     TranscriptIs { tokens: Vec<i32> },
+    /// Reply to [`Frame::BulkExport`]: every stashed session, stamped
+    /// with the exporting shard's fingerprints.
+    BulkBlob { shape_fp: u64, weights_fp: u64, sessions: Vec<SessionBlob> },
     Error { code: ErrCode, msg: String },
 }
 
@@ -205,6 +276,10 @@ const TAG_EXPORT_COMMIT: u8 = 8;
 const TAG_EXPORT_ABORT: u8 = 9;
 const TAG_TRANSCRIPT: u8 = 10;
 const TAG_METRICS: u8 = 11;
+const TAG_BULK_EXPORT: u8 = 12;
+const TAG_BULK_IMPORT: u8 = 13;
+const TAG_BULK_COMMIT: u8 = 14;
+const TAG_BULK_ABORT: u8 = 15;
 const TAG_TOKEN: u8 = 16;
 const TAG_DONE: u8 = 17;
 const TAG_BLOB: u8 = 18;
@@ -213,6 +288,7 @@ const TAG_HEALTH_REPORT: u8 = 20;
 const TAG_ERROR: u8 = 21;
 const TAG_TRANSCRIPT_IS: u8 = 22;
 const TAG_METRICS_REPORT: u8 = 23;
+const TAG_BULK_BLOB: u8 = 24;
 
 fn bad_data(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -262,6 +338,15 @@ impl Enc {
                 self.u32(v.len() as u32);
                 self.0.extend_from_slice(v);
             }
+        }
+    }
+
+    fn session_blobs(&mut self, blobs: &[SessionBlob]) {
+        self.u32(blobs.len() as u32);
+        for b in blobs {
+            self.u64(b.session);
+            self.tokens(&b.transcript);
+            self.opt_bytes(&b.state);
         }
     }
 
@@ -362,6 +447,30 @@ impl Dec<'_> {
         }
     }
 
+    fn session_blobs(&mut self) -> io::Result<Vec<SessionBlob>> {
+        let n = self.u32()? as usize;
+        let mut blobs = Vec::new();
+        for _ in 0..n {
+            blobs.push(SessionBlob {
+                session: self.u64()?,
+                transcript: self.tokens()?,
+                state: self.opt_bytes()?,
+            });
+        }
+        Ok(blobs)
+    }
+
+    fn sessions(&mut self) -> io::Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        let raw = self.0.take(8 * n).map_err(read_err)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+            })
+            .collect())
+    }
+
     fn hist(&mut self) -> io::Result<Hist> {
         let n = self.u8()? as usize;
         let mut counts = [0u64; BUCKETS];
@@ -407,16 +516,18 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u64(*shape_fp);
             e.u64(*weights_fp);
         }
-        Frame::Submit { max_new, prompt } => {
+        Frame::Submit { max_new, deadline_ms, prompt } => {
             e.u8(TAG_SUBMIT);
             e.u32(*max_new);
+            e.u32(*deadline_ms);
             e.tokens(prompt);
         }
-        Frame::SubmitInSession { session, strict, max_new, delta } => {
+        Frame::SubmitInSession { session, strict, max_new, deadline_ms, delta } => {
             e.u8(TAG_SUBMIT_IN_SESSION);
             e.u64(*session);
             e.u8(*strict as u8);
             e.u32(*max_new);
+            e.u32(*deadline_ms);
             e.tokens(delta);
         }
         Frame::EndSession { session } => {
@@ -457,6 +568,27 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u8(TAG_TRANSCRIPT);
             e.u64(*session);
         }
+        Frame::BulkExport => e.u8(TAG_BULK_EXPORT),
+        Frame::BulkImport { shape_fp, weights_fp, sessions } => {
+            e.u8(TAG_BULK_IMPORT);
+            e.u64(*shape_fp);
+            e.u64(*weights_fp);
+            e.session_blobs(sessions);
+        }
+        Frame::BulkCommit { sessions } => {
+            e.u8(TAG_BULK_COMMIT);
+            e.u32(sessions.len() as u32);
+            for &s in sessions {
+                e.u64(s);
+            }
+        }
+        Frame::BulkAbort { sessions } => {
+            e.u8(TAG_BULK_ABORT);
+            e.u32(sessions.len() as u32);
+            for &s in sessions {
+                e.u64(s);
+            }
+        }
         Frame::Token { token } => {
             e.u8(TAG_TOKEN);
             e.i32(*token);
@@ -478,6 +610,12 @@ fn encode(frame: &Frame) -> Vec<u8> {
         Frame::TranscriptIs { tokens } => {
             e.u8(TAG_TRANSCRIPT_IS);
             e.tokens(tokens);
+        }
+        Frame::BulkBlob { shape_fp, weights_fp, sessions } => {
+            e.u8(TAG_BULK_BLOB);
+            e.u64(*shape_fp);
+            e.u64(*weights_fp);
+            e.session_blobs(sessions);
         }
         Frame::HealthReport(h) => {
             e.u8(TAG_HEALTH_REPORT);
@@ -512,11 +650,16 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             shape_fp: d.u64()?,
             weights_fp: d.u64()?,
         },
-        TAG_SUBMIT => Frame::Submit { max_new: d.u32()?, prompt: d.tokens()? },
+        TAG_SUBMIT => Frame::Submit {
+            max_new: d.u32()?,
+            deadline_ms: d.u32()?,
+            prompt: d.tokens()?,
+        },
         TAG_SUBMIT_IN_SESSION => Frame::SubmitInSession {
             session: d.u64()?,
             strict: d.u8()? != 0,
             max_new: d.u32()?,
+            deadline_ms: d.u32()?,
             delta: d.tokens()?,
         },
         TAG_END_SESSION => Frame::EndSession { session: d.u64()? },
@@ -543,6 +686,14 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
         TAG_EXPORT_COMMIT => Frame::ExportCommit { session: d.u64()? },
         TAG_EXPORT_ABORT => Frame::ExportAbort { session: d.u64()? },
         TAG_TRANSCRIPT => Frame::Transcript { session: d.u64()? },
+        TAG_BULK_EXPORT => Frame::BulkExport,
+        TAG_BULK_IMPORT => Frame::BulkImport {
+            shape_fp: d.u64()?,
+            weights_fp: d.u64()?,
+            sessions: d.session_blobs()?,
+        },
+        TAG_BULK_COMMIT => Frame::BulkCommit { sessions: d.sessions()? },
+        TAG_BULK_ABORT => Frame::BulkAbort { sessions: d.sessions()? },
         TAG_TOKEN => Frame::Token { token: d.i32()? },
         TAG_DONE => Frame::Done { ttft_us: d.u64()?, total_us: d.u64()? },
         TAG_BLOB => Frame::Blob {
@@ -554,6 +705,11 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
         },
         TAG_OK => Frame::Ok,
         TAG_TRANSCRIPT_IS => Frame::TranscriptIs { tokens: d.tokens()? },
+        TAG_BULK_BLOB => Frame::BulkBlob {
+            shape_fp: d.u64()?,
+            weights_fp: d.u64()?,
+            sessions: d.session_blobs()?,
+        },
         TAG_HEALTH_REPORT => Frame::HealthReport(HealthReport {
             sessions_resident: d.u64()?,
             session_bytes: d.u64()?,
@@ -572,7 +728,7 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
     Ok(frame)
 }
 
-/// Write one length-prefixed frame and flush it.
+/// Write one length-prefixed, checksummed frame and flush it.
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
     let body = encode(frame);
     if body.len() as u64 > MAX_FRAME_BYTES as u64 {
@@ -580,12 +736,15 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
     }
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(&body)?;
+    w.write_all(&fnv1a64(&body).to_le_bytes())?;
     w.flush()
 }
 
 /// Read one length-prefixed frame; blocks until a whole frame arrives.
-/// Errors with `UnexpectedEof` on a cleanly closed stream and
-/// `InvalidData` on an oversized or malformed frame.
+/// The trailing fnv1a64 checksum is verified before decoding, so a
+/// frame corrupted in transit fails as `InvalidData` instead of
+/// mis-decoding.  Errors with `UnexpectedEof` on a cleanly closed stream
+/// and `InvalidData` on an oversized, corrupted or malformed frame.
 pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
@@ -595,6 +754,11 @@ pub fn read_frame(r: &mut impl Read) -> io::Result<Frame> {
     }
     let mut body = vec![0u8; len as usize];
     r.read_exact(&mut body)?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)?;
+    if u64::from_le_bytes(sum) != fnv1a64(&body) {
+        return Err(bad_data("frame checksum mismatch"));
+    }
     decode(&body)
 }
 
@@ -622,17 +786,20 @@ mod tests {
             shape_fp: 0xDEAD_BEEF_1234_5678,
             weights_fp: 0x0123_4567_89AB_CDEF,
         });
-        roundtrip(Frame::Submit { max_new: 16, prompt: vec![1, -2, 3] });
+        roundtrip(Frame::Submit { max_new: 16, deadline_ms: 0, prompt: vec![1, -2, 3] });
+        roundtrip(Frame::Submit { max_new: 16, deadline_ms: 2500, prompt: vec![] });
         roundtrip(Frame::SubmitInSession {
             session: u64::MAX,
             strict: true,
             max_new: 0,
+            deadline_ms: u32::MAX,
             delta: vec![],
         });
         roundtrip(Frame::SubmitInSession {
             session: 7,
             strict: false,
             max_new: 3,
+            deadline_ms: 0,
             delta: vec![i32::MIN, i32::MAX],
         });
         roundtrip(Frame::EndSession { session: 9 });
@@ -670,6 +837,28 @@ mod tests {
         roundtrip(Frame::Transcript { session: 0 });
         roundtrip(Frame::TranscriptIs { tokens: vec![] });
         roundtrip(Frame::TranscriptIs { tokens: vec![1, -2, i32::MAX] });
+        roundtrip(Frame::BulkExport);
+        roundtrip(Frame::BulkImport { shape_fp: 1, weights_fp: 2, sessions: vec![] });
+        roundtrip(Frame::BulkImport {
+            shape_fp: 1,
+            weights_fp: 2,
+            sessions: vec![
+                SessionBlob { session: 5, transcript: vec![1, 2], state: Some(vec![7; 9]) },
+                SessionBlob { session: u64::MAX, transcript: vec![], state: None },
+            ],
+        });
+        roundtrip(Frame::BulkCommit { sessions: vec![] });
+        roundtrip(Frame::BulkCommit { sessions: vec![1, u64::MAX, 0] });
+        roundtrip(Frame::BulkAbort { sessions: vec![3, 1, 4] });
+        roundtrip(Frame::BulkBlob {
+            shape_fp: 9,
+            weights_fp: 10,
+            sessions: vec![SessionBlob {
+                session: 2,
+                transcript: vec![-1],
+                state: Some(vec![0, 1]),
+            }],
+        });
         roundtrip(Frame::Token { token: -1 });
         roundtrip(Frame::Done { ttft_us: 1, total_us: 2 });
         roundtrip(Frame::Blob {
@@ -698,6 +887,8 @@ mod tests {
             ErrCode::Protocol,
             ErrCode::Internal,
             ErrCode::Unavailable,
+            ErrCode::Overloaded,
+            ErrCode::DeadlineExceeded,
         ] {
             roundtrip(Frame::Error { code, msg: "why".into() });
         }
@@ -737,10 +928,12 @@ mod tests {
         // zero-length frame
         let zero = 0u32.to_le_bytes().to_vec();
         assert!(read_frame(&mut Cursor::new(&zero)).is_err());
-        // unknown tag
+        // unknown tag (checksummed correctly, so the tag itself is what
+        // gets rejected)
         let mut unk = Vec::new();
         unk.extend_from_slice(&1u32.to_le_bytes());
         unk.push(250);
+        unk.extend_from_slice(&fnv1a64(&[250]).to_le_bytes());
         assert_eq!(
             read_frame(&mut Cursor::new(&unk)).unwrap_err().kind(),
             io::ErrorKind::InvalidData
@@ -749,7 +942,13 @@ mod tests {
         let mut good = Vec::new();
         write_frame(
             &mut good,
-            &Frame::SubmitInSession { session: 1, strict: true, max_new: 4, delta: vec![1, 2] },
+            &Frame::SubmitInSession {
+                session: 1,
+                strict: true,
+                max_new: 4,
+                deadline_ms: 0,
+                delta: vec![1, 2],
+            },
         )
         .unwrap();
         for cut in 0..good.len() {
@@ -758,7 +957,14 @@ mod tests {
                 "cut at {cut} must error"
             );
         }
-        // trailing garbage inside the declared frame body
+        // a single flipped payload bit is caught by the checksum
+        let mut flipped = good.clone();
+        flipped[5] ^= 0x40;
+        let err = read_frame(&mut Cursor::new(&flipped)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // trailing garbage inside the declared frame body: the checksum
+        // no longer matches the (shifted) body bytes
         let mut long = good.clone();
         let body_len = u32::from_le_bytes([long[0], long[1], long[2], long[3]]);
         long.push(7);
@@ -767,6 +973,22 @@ mod tests {
             read_frame(&mut Cursor::new(&long)).unwrap_err().kind(),
             io::ErrorKind::InvalidData
         );
+    }
+
+    /// Trailing bytes *inside* a correctly-checksummed body are still a
+    /// decode error: the checksum authenticates transport, `finish()`
+    /// still rejects over-long payloads.
+    #[test]
+    fn trailing_bytes_in_checksummed_body_rejected() {
+        let mut body = encode(&Frame::Ok);
+        body.push(9); // garbage past the frame's own payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("trailing"), "{err}");
     }
 
     use crate::util::prop::check;
@@ -803,10 +1025,20 @@ mod tests {
         }
     }
 
+    fn arb_session_blobs(rng: &mut Prng) -> Vec<SessionBlob> {
+        (0..rng.below(4))
+            .map(|_| SessionBlob {
+                session: rng.next_u64(),
+                transcript: arb_tokens(rng, 6),
+                state: arb_bytes(rng, 24),
+            })
+            .collect()
+    }
+
     /// A random instance of every frame kind — the generator behind the
     /// wire property tests, so fuzzing covers each tag's payload layout.
     fn arb_frame(rng: &mut Prng) -> Frame {
-        match rng.below(19) {
+        match rng.below(24) {
             0 => Frame::Hello {
                 proto: rng.next_u64() as u32,
                 engine: "hyena".into(),
@@ -815,12 +1047,14 @@ mod tests {
             },
             1 => Frame::Submit {
                 max_new: rng.below(64) as u32,
+                deadline_ms: rng.next_u64() as u32,
                 prompt: arb_tokens(rng, 8),
             },
             2 => Frame::SubmitInSession {
                 session: rng.next_u64(),
                 strict: rng.below(2) == 1,
                 max_new: rng.below(64) as u32,
+                deadline_ms: rng.next_u64() as u32,
                 delta: arb_tokens(rng, 8),
             },
             3 => Frame::EndSession { session: rng.next_u64() },
@@ -864,8 +1098,25 @@ mod tests {
                     .map(|i| (format!("lh_arb_{i}"), arb_metric(rng)))
                     .collect(),
             },
+            18 => Frame::BulkExport,
+            19 => Frame::BulkImport {
+                shape_fp: rng.next_u64(),
+                weights_fp: rng.next_u64(),
+                sessions: arb_session_blobs(rng),
+            },
+            20 => Frame::BulkCommit {
+                sessions: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+            },
+            21 => Frame::BulkAbort {
+                sessions: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+            },
+            22 => Frame::BulkBlob {
+                shape_fp: rng.next_u64(),
+                weights_fp: rng.next_u64(),
+                sessions: arb_session_blobs(rng),
+            },
             _ => Frame::Error {
-                code: ErrCode::from_u16(rng.below(8) as u16),
+                code: ErrCode::from_u16(rng.below(10) as u16),
                 msg: "m".repeat(rng.below(16)),
             },
         }
@@ -887,8 +1138,9 @@ mod tests {
     }
 
     /// Property: a strict prefix of any encoded frame is always a typed
-    /// error (`UnexpectedEof` mid-header / mid-body, `InvalidData` on a
-    /// mangled body) — never a panic, never a bogus decode.
+    /// error (`UnexpectedEof` mid-header / mid-body / mid-checksum,
+    /// `InvalidData` on a mangled body) — never a panic, never a bogus
+    /// decode.
     #[test]
     fn prop_truncation_of_every_frame_kind_is_typed_error() {
         check("truncation is typed", 256, |rng| {
@@ -912,9 +1164,9 @@ mod tests {
     }
 
     /// Property: flipping random bytes anywhere in the framed bytes
-    /// (length prefix included) either decodes as *some* frame or fails
-    /// with a typed error — the bounded reader never panics and never
-    /// allocates past [`MAX_FRAME_BYTES`].
+    /// (length prefix and checksum included) either decodes as *some*
+    /// frame or fails with a typed error — the bounded reader never
+    /// panics and never allocates past [`MAX_FRAME_BYTES`].
     #[test]
     fn prop_corruption_of_every_frame_kind_never_panics() {
         check("corruption is contained", 256, |rng| {
@@ -935,6 +1187,30 @@ mod tests {
                 {
                     Ok(())
                 }
+                Err(e) => Err(format!("untyped error kind {:?}", e.kind())),
+            }
+        });
+    }
+
+    /// Property: any corruption confined to the frame *body* (length
+    /// prefix intact) is caught — either by the checksum or, for the
+    /// astronomically unlikely collision, by the decoder — never served
+    /// as a silently different frame of the same kind and length.
+    #[test]
+    fn prop_body_corruption_is_caught_by_checksum() {
+        check("body corruption detected", 256, |rng| {
+            let f = arb_frame(rng);
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            let body_end = buf.len() - 8; // trailing checksum
+            if body_end <= 4 {
+                return Ok(()); // no body bytes to corrupt
+            }
+            let i = 4 + rng.below(body_end - 4);
+            buf[i] ^= (1 + rng.below(255)) as u8;
+            match read_frame(&mut Cursor::new(&buf)) {
+                Err(e) if e.kind() == io::ErrorKind::InvalidData => Ok(()),
+                Ok(got) => Err(format!("corrupted body decoded as {got:?}")),
                 Err(e) => Err(format!("untyped error kind {:?}", e.kind())),
             }
         });

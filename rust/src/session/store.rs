@@ -1,21 +1,37 @@
-//! Byte-budgeted LRU session store with optional spill-to-disk.
+//! Tiered byte-budgeted LRU session store: RAM tier + capped disk tier.
 //!
 //! Holds [`SessionState`] blobs between turns of a conversation.  RAM
-//! residency is bounded by `budget_bytes`; least-recently-used sessions are
-//! evicted first, and — when a spill directory is configured — written to
-//! disk through the checkpoint serialization instead of being dropped, so a
-//! later turn can still resume in O(state) I/O rather than re-prefilling
-//! the whole transcript.
+//! residency is bounded by `budget_bytes`; least-recently-used sessions
+//! are evicted first, and — when a spill directory is configured —
+//! written into the disk tier instead of being dropped, so a later turn
+//! can still resume in O(state) I/O rather than re-prefilling the whole
+//! transcript.
 //!
-//! `take` removes the state (it moves into an engine slot); the coordinator
-//! `put`s a fresh snapshot back at retire.  Hit/miss/eviction/spill
-//! accounting feeds the coordinator metrics.
+//! The disk tier is a **segmented spill log** with its own LRU and byte
+//! cap (`spill_budget_bytes`): evicted states append as self-describing
+//! records (`[u64 id][u32 len][wire blob]`) into segment files
+//! (`spill_%08u.seg`), capped at `segment_bytes` each.  Deletes are
+//! logical (the in-RAM index forgets the record); [`Store::maintain`]
+//! compacts sealed segments whose live ratio fell below one half by
+//! rewriting the surviving records into the active segment — run it from
+//! the coordinator's idle ticks so reclamation never sits on a turn's
+//! critical path.  When the disk tier itself exceeds its cap, its
+//! least-recently-spilled sessions are dropped entirely; the transcript
+//! re-prefill path makes that loss graceful rather than fatal.  On
+//! construction the tier re-indexes any segments a previous process left
+//! behind, so spilled sessions survive a coordinator restart.
+//!
+//! `take` removes the state (it moves into an engine slot); the
+//! coordinator `put`s a fresh snapshot back at retire.  Hit / miss /
+//! eviction / spill / compaction accounting feeds the coordinator
+//! metrics.
 
 use std::collections::{BTreeMap, HashMap};
-use std::path::PathBuf;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 use super::state::SessionState;
-use crate::runtime::checkpoint::Checkpoint;
 
 /// Store configuration.
 #[derive(Clone, Debug)]
@@ -24,11 +40,21 @@ pub struct StoreConfig {
     pub budget_bytes: u64,
     /// Evicted states spill here instead of being dropped (None = drop).
     pub spill_dir: Option<PathBuf>,
+    /// Byte cap of the disk tier's *live* records (0 = unbounded).  Past
+    /// it, the least-recently-spilled sessions are dropped from disk.
+    pub spill_budget_bytes: u64,
+    /// Roll the active spill segment once it grows past this many bytes.
+    pub segment_bytes: u64,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { budget_bytes: 256 << 20, spill_dir: None }
+        StoreConfig {
+            budget_bytes: 256 << 20,
+            spill_dir: None,
+            spill_budget_bytes: 0,
+            segment_bytes: 4 << 20,
+        }
     }
 }
 
@@ -43,8 +69,12 @@ pub struct StoreStats {
     pub misses: u64,
     pub inserts: u64,
     pub evictions: u64,
-    /// Evictions that were persisted to the spill directory.
+    /// Evictions that were persisted to the spill tier.
     pub spills: u64,
+    /// Sessions the disk tier dropped to stay under its byte cap.
+    pub spill_evictions: u64,
+    /// Sealed segments rewritten by [`Store::maintain`].
+    pub compactions: u64,
 }
 
 struct Entry {
@@ -53,7 +83,275 @@ struct Entry {
     tick: u64,
 }
 
-/// The LRU session store.
+/// Where one spilled record lives.
+struct DiskEntry {
+    seg: u64,
+    off: u64,
+    len: u64,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Segment {
+    /// Bytes of records still referenced by the index.
+    live: u64,
+    /// Bytes ever appended (file size).
+    total: u64,
+}
+
+/// Per-record header: session id + payload length.
+const REC_HEADER: u64 = 8 + 4;
+
+/// The segmented spill log (disk tier).  All bookkeeping is in RAM;
+/// segment files hold only the blob records.
+struct DiskTier {
+    dir: PathBuf,
+    budget: u64,
+    segment_bytes: u64,
+    index: HashMap<u64, DiskEntry>,
+    segments: BTreeMap<u64, Segment>,
+    next_seg: u64,
+    /// Live record bytes across all segments (headers included).
+    live_bytes: u64,
+    /// recency index: spill tick -> session id (oldest first).
+    recency: BTreeMap<u64, u64>,
+}
+
+impl DiskTier {
+    fn seg_path(dir: &Path, seg: u64) -> PathBuf {
+        dir.join(format!("spill_{seg:08}.seg"))
+    }
+
+    /// Open the tier, re-indexing any segments left by a previous
+    /// process (later records for the same session win; a truncated tail
+    /// record ends that segment's scan).
+    fn open(dir: PathBuf, budget: u64, segment_bytes: u64) -> DiskTier {
+        let _ = std::fs::create_dir_all(&dir);
+        let mut tier = DiskTier {
+            dir,
+            budget,
+            segment_bytes,
+            index: HashMap::new(),
+            segments: BTreeMap::new(),
+            next_seg: 0,
+            live_bytes: 0,
+            recency: BTreeMap::new(),
+        };
+        let mut seg_ids = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&tier.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if let Some(num) = name.strip_prefix("spill_").and_then(|s| s.strip_suffix(".seg"))
+                {
+                    if let Ok(seg) = num.parse::<u64>() {
+                        seg_ids.push(seg);
+                    }
+                }
+            }
+        }
+        seg_ids.sort_unstable();
+        let mut tick = 0u64;
+        for seg in seg_ids {
+            let path = Self::seg_path(&tier.dir, seg);
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            let mut segment = Segment::default();
+            let mut off = 0u64;
+            while (off + REC_HEADER) as usize <= bytes.len() {
+                let o = off as usize;
+                let id = u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+                let len = u32::from_le_bytes(bytes[o + 8..o + 12].try_into().unwrap()) as u64;
+                if (off + REC_HEADER + len) as usize > bytes.len() {
+                    break; // truncated tail record: ignore it and stop
+                }
+                tick += 1;
+                // a later record for the same id supersedes the earlier one
+                if let Some(old) = tier.index.remove(&id) {
+                    let dead = REC_HEADER + old.len;
+                    if let Some(s) = tier.segments.get_mut(&old.seg) {
+                        s.live -= dead;
+                    } else if old.seg == seg {
+                        segment.live -= dead;
+                    }
+                    tier.live_bytes -= dead;
+                    tier.recency.remove(&old.tick);
+                }
+                tier.index.insert(id, DiskEntry { seg, off, len, tick });
+                tier.recency.insert(tick, id);
+                segment.live += REC_HEADER + len;
+                tier.live_bytes += REC_HEADER + len;
+                off += REC_HEADER + len;
+            }
+            segment.total = off;
+            tier.segments.insert(seg, segment);
+            tier.next_seg = tier.next_seg.max(seg + 1);
+        }
+        tier
+    }
+
+    fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// The active (append) segment id, rolling if the current one is full.
+    fn active_segment(&mut self) -> u64 {
+        if let Some((&seg, s)) = self.segments.iter().next_back() {
+            if s.total < self.segment_bytes {
+                return seg;
+            }
+        }
+        let seg = self.next_seg;
+        self.next_seg += 1;
+        self.segments.insert(seg, Segment::default());
+        seg
+    }
+
+    /// Forget a record (logical delete).  The bytes stay in the segment
+    /// file until [`DiskTier::maintain`] compacts it away.
+    fn forget(&mut self, id: u64) -> bool {
+        match self.index.remove(&id) {
+            None => false,
+            Some(e) => {
+                let dead = REC_HEADER + e.len;
+                if let Some(s) = self.segments.get_mut(&e.seg) {
+                    s.live -= dead;
+                }
+                self.live_bytes -= dead;
+                self.recency.remove(&e.tick);
+                true
+            }
+        }
+    }
+
+    /// Append one spilled blob; returns false (and spills nothing) on an
+    /// I/O error.  `evictions` counts sessions dropped to honor the cap.
+    fn put(&mut self, id: u64, blob: &[u8], tick: u64, evictions: &mut u64) -> bool {
+        self.forget(id);
+        let seg = self.active_segment();
+        let path = Self::seg_path(&self.dir, seg);
+        let appended = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| {
+                f.write_all(&id.to_le_bytes())?;
+                f.write_all(&(blob.len() as u32).to_le_bytes())?;
+                f.write_all(blob)
+            });
+        if appended.is_err() {
+            return false;
+        }
+        let s = self.segments.get_mut(&seg).expect("active segment exists");
+        let off = s.total;
+        let rec = REC_HEADER + blob.len() as u64;
+        s.total += rec;
+        s.live += rec;
+        self.live_bytes += rec;
+        self.index.insert(id, DiskEntry { seg, off, len: blob.len() as u64, tick });
+        self.recency.insert(tick, id);
+        // disk-tier LRU: drop the least-recently-spilled sessions past
+        // the cap (never the record just written — it is the newest)
+        while self.budget > 0 && self.live_bytes > self.budget && self.index.len() > 1 {
+            let oldest = match self.recency.iter().next() {
+                Some((_, &sid)) if sid != id => sid,
+                _ => break,
+            };
+            self.forget(oldest);
+            *evictions += 1;
+        }
+        true
+    }
+
+    /// Read one record's payload at its indexed position; the record's
+    /// own header must agree with the index (id and length), otherwise
+    /// the segment is out of sync and the record is treated as lost.
+    fn read_record(&self, id: u64, e: &DiskEntry) -> Option<Vec<u8>> {
+        let path = Self::seg_path(&self.dir, e.seg);
+        let mut f = File::open(path).ok()?;
+        f.seek(SeekFrom::Start(e.off)).ok()?;
+        let mut header = [0u8; REC_HEADER as usize];
+        f.read_exact(&mut header).ok()?;
+        let rec_id = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as u64;
+        if rec_id != id || len != e.len {
+            return None;
+        }
+        let mut blob = vec![0u8; len as usize];
+        f.read_exact(&mut blob).ok()?;
+        Some(blob)
+    }
+
+    /// Remove and return a spilled blob.
+    fn take(&mut self, id: u64) -> Option<Vec<u8>> {
+        let blob = {
+            let e = self.index.get(&id)?;
+            self.read_record(id, e)
+        };
+        self.forget(id);
+        blob
+    }
+
+    /// Compact sealed segments whose live ratio fell below one half:
+    /// surviving records are re-appended to the active segment, the old
+    /// file is deleted.  Returns the number of segments compacted.
+    fn maintain(&mut self) -> u64 {
+        let active = match self.segments.iter().next_back() {
+            Some((&seg, _)) => seg,
+            None => return 0,
+        };
+        let victims: Vec<u64> = self
+            .segments
+            .iter()
+            .filter(|(&seg, s)| seg != active && s.live * 2 < s.total)
+            .map(|(&seg, _)| seg)
+            .collect();
+        let mut compacted = 0;
+        for seg in victims {
+            // collect the survivors (id, tick, payload) before mutating
+            let residents: Vec<(u64, u64)> = self
+                .index
+                .iter()
+                .filter(|(_, e)| e.seg == seg)
+                .map(|(&id, e)| (id, e.tick))
+                .collect();
+            let mut survivors = Vec::with_capacity(residents.len());
+            for &(id, tick) in &residents {
+                let blob = self.index.get(&id).and_then(|e| self.read_record(id, e));
+                match blob {
+                    Some(b) => survivors.push((id, tick, b)),
+                    // a read failure loses that record; the transcript
+                    // re-prefill path covers the session
+                    None => {
+                        self.forget(id);
+                    }
+                }
+            }
+            for (id, tick, blob) in &survivors {
+                // preserve the original recency tick across the rewrite
+                let mut scratch = 0u64;
+                if self.put(*id, blob, *tick, &mut scratch) {
+                    debug_assert_eq!(scratch, 0, "compaction must not evict");
+                }
+            }
+            self.segments.remove(&seg);
+            let _ = std::fs::remove_file(Self::seg_path(&self.dir, seg));
+            compacted += 1;
+        }
+        compacted
+    }
+}
+
+/// The tiered LRU session store.
 pub struct Store {
     cfg: StoreConfig,
     entries: HashMap<u64, Entry>,
@@ -61,20 +359,29 @@ pub struct Store {
     recency: BTreeMap<u64, u64>,
     used: u64,
     tick: u64,
+    disk: Option<DiskTier>,
     pub stats: StoreStats,
 }
 
 impl Store {
     pub fn new(cfg: StoreConfig) -> Store {
-        if let Some(dir) = &cfg.spill_dir {
-            let _ = std::fs::create_dir_all(dir);
-        }
+        let disk = cfg
+            .spill_dir
+            .clone()
+            .map(|dir| DiskTier::open(dir, cfg.spill_budget_bytes, cfg.segment_bytes.max(1)));
+        // keep ticks monotone across a restart that re-indexed old spill
+        // segments, so RAM recency never collides with disk recency
+        let tick = disk
+            .as_ref()
+            .and_then(|d| d.recency.keys().next_back().copied())
+            .unwrap_or(0);
         Store {
             cfg,
             entries: HashMap::new(),
             recency: BTreeMap::new(),
             used: 0,
-            tick: 0,
+            tick,
+            disk,
             stats: StoreStats::default(),
         }
     }
@@ -93,8 +400,30 @@ impl Store {
         self.used
     }
 
+    /// Live bytes held by the disk tier (0 without a spill dir).
+    pub fn spill_bytes(&self) -> u64 {
+        self.disk.as_ref().map(|d| d.live_bytes()).unwrap_or(0)
+    }
+
+    /// Sessions currently held by the disk tier.
+    pub fn spilled_len(&self) -> usize {
+        self.disk.as_ref().map(|d| d.len()).unwrap_or(0)
+    }
+
     pub fn contains_resident(&self, id: u64) -> bool {
         self.entries.contains_key(&id)
+    }
+
+    /// Every session id the store holds state for, RAM-resident or
+    /// spilled, sorted (bulk export enumerates with this).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.entries.keys().copied().collect();
+        if let Some(d) = &self.disk {
+            out.extend(d.index.keys().copied());
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Whether the store holds this session anywhere — RAM-resident or
@@ -102,12 +431,8 @@ impl Store {
     /// state out and does not touch the hit/miss stats (it backs the
     /// coordinator's `session_known` query, not the resume path).
     pub fn contains(&self, id: u64) -> bool {
-        if self.entries.contains_key(&id) {
-            return true;
-        }
-        self.spill_base(id)
-            .map(|base| base.with_extension("bin").exists())
-            .unwrap_or(false)
+        self.entries.contains_key(&id)
+            || self.disk.as_ref().map(|d| d.contains(id)).unwrap_or(false)
     }
 
     /// Insert (or replace) the state for a session, then enforce the byte
@@ -115,6 +440,10 @@ impl Store {
     pub fn put(&mut self, id: u64, mut state: SessionState) {
         state.session_id = id;
         self.remove_resident(id);
+        // a fresher snapshot supersedes any stale disk copy
+        if let Some(d) = &mut self.disk {
+            d.forget(id);
+        }
         let bytes = state.state_bytes();
         self.tick += 1;
         self.recency.insert(self.tick, id);
@@ -125,7 +454,7 @@ impl Store {
     }
 
     /// Remove and return the state for a session: RAM first, then the spill
-    /// directory.  The state moves into an engine slot, so on success it no
+    /// tier.  The state moves into an engine slot, so on success it no
     /// longer lives in the store (the coordinator re-`put`s at retire).
     pub fn take(&mut self, id: u64) -> Option<SessionState> {
         if let Some(e) = self.entries.remove(&id) {
@@ -134,15 +463,11 @@ impl Store {
             self.stats.hits += 1;
             return Some(e.state);
         }
-        if let Some(base) = self.spill_base(id) {
-            if base.with_extension("bin").exists() {
-                if let Ok(ck) = Checkpoint::load(&base) {
-                    if let Ok(state) = SessionState::from_checkpoint(&ck) {
-                        let _ = std::fs::remove_file(base.with_extension("bin"));
-                        let _ = std::fs::remove_file(base.with_extension("manifest.txt"));
-                        self.stats.disk_hits += 1;
-                        return Some(state);
-                    }
+        if let Some(d) = &mut self.disk {
+            if let Some(blob) = d.take(id) {
+                if let Ok(state) = SessionState::from_wire_bytes(&blob) {
+                    self.stats.disk_hits += 1;
+                    return Some(state);
                 }
             }
         }
@@ -153,15 +478,18 @@ impl Store {
     /// Drop a session entirely (RAM and disk); returns whether anything
     /// existed.
     pub fn evict_session(&mut self, id: u64) -> bool {
-        let mut found = self.remove_resident(id);
-        if let Some(base) = self.spill_base(id) {
-            if base.with_extension("bin").exists() {
-                let _ = std::fs::remove_file(base.with_extension("bin"));
-                let _ = std::fs::remove_file(base.with_extension("manifest.txt"));
-                found = true;
-            }
-        }
-        found
+        let resident = self.remove_resident(id);
+        let spilled = self.disk.as_mut().map(|d| d.forget(id)).unwrap_or(false);
+        resident || spilled
+    }
+
+    /// Off-critical-path housekeeping: compact spill segments whose live
+    /// ratio fell below one half.  Run from the coordinator's idle ticks.
+    /// Returns the number of segments compacted.
+    pub fn maintain(&mut self) -> u64 {
+        let compacted = self.disk.as_mut().map(|d| d.maintain()).unwrap_or(0);
+        self.stats.compactions += compacted;
+        compacted
     }
 
     fn remove_resident(&mut self, id: u64) -> bool {
@@ -172,10 +500,6 @@ impl Store {
         } else {
             false
         }
-    }
-
-    fn spill_base(&self, id: u64) -> Option<PathBuf> {
-        self.cfg.spill_dir.as_ref().map(|d| d.join(format!("session_{id:016x}")))
     }
 
     fn evict_to_budget(&mut self) {
@@ -189,8 +513,9 @@ impl Store {
             let e = self.entries.remove(&id).expect("recency/entries in sync");
             self.used -= e.bytes;
             self.stats.evictions += 1;
-            if let Some(base) = self.spill_base(id) {
-                if e.state.to_checkpoint().save(&base).is_ok() {
+            if let Some(d) = &mut self.disk {
+                let blob = e.state.to_wire_bytes();
+                if d.put(id, &blob, tick, &mut self.stats.spill_evictions) {
                     self.stats.spills += 1;
                 } else {
                     eprintln!("session store: failed to spill session {id:#x}");
@@ -203,112 +528,213 @@ impl Store {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::session::state::SessionState;
 
-    fn state(tag: i32, floats: usize) -> SessionState {
-        let mut st = SessionState::new("test", tag);
-        st.push_plane("x", (0..floats).map(|i| i as f32 + tag as f32).collect());
-        st
+    fn state(tag: i32, floats: &[f32]) -> SessionState {
+        let mut s = SessionState::new("test-engine", tag);
+        s.tokens_seen = tag as u64 + 100;
+        s.push_plane("h", floats.to_vec());
+        s
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("lh_store_{}_{}", name, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// On-disk record size of one `state()` blob (independent of tag/id:
+    /// both are fixed-width in the wire format).
+    fn rec_bytes(floats: &[f32]) -> u64 {
+        REC_HEADER + state(1, floats).to_wire_bytes().len() as u64
     }
 
     #[test]
     fn put_take_roundtrip_and_stats() {
-        let mut s = Store::new(StoreConfig { budget_bytes: 1 << 20, spill_dir: None });
-        s.put(1, state(10, 100));
-        s.put(2, state(20, 100));
-        assert_eq!(s.len(), 2);
-        let a = s.take(1).unwrap();
-        assert_eq!(a.last_token, 10);
-        assert_eq!(a.session_id, 1);
-        assert!(s.take(1).is_none()); // moved out
-        assert_eq!(s.stats.hits, 1);
-        assert_eq!(s.stats.misses, 1);
-        assert_eq!(s.len(), 1);
+        let mut st = Store::new(StoreConfig::default());
+        assert!(st.is_empty());
+        st.put(7, state(1, &[1.0, 2.0]));
+        assert_eq!(st.len(), 1);
+        assert!(st.contains(7));
+        assert!(st.contains_resident(7));
+        let got = st.take(7).expect("resident hit");
+        assert_eq!(got.session_id, 7, "store stamps the owning id");
+        assert_eq!(got.plane("h").unwrap(), &[1.0, 2.0]);
+        assert!(st.take(7).is_none(), "take moves the state out");
+        assert_eq!(st.bytes_used(), 0);
+        assert_eq!(st.stats.hits, 1);
+        assert_eq!(st.stats.misses, 1);
+        assert_eq!(st.stats.inserts, 1);
     }
 
     #[test]
     fn lru_eviction_respects_byte_budget_and_recency() {
-        let one = state(0, 100).state_bytes();
-        // room for exactly two states
-        let mut s = Store::new(StoreConfig { budget_bytes: 2 * one, spill_dir: None });
-        s.put(1, state(1, 100));
-        s.put(2, state(2, 100));
-        // touch 1 so 2 becomes LRU
-        let st1 = s.take(1).unwrap();
-        s.put(1, st1);
-        s.put(3, state(3, 100));
-        assert_eq!(s.stats.evictions, 1);
-        assert!(s.contains_resident(1), "recently-touched survives");
-        assert!(!s.contains_resident(2), "LRU evicted");
-        assert!(s.contains_resident(3));
-        assert!(s.bytes_used() <= 2 * one);
+        let floats = [0.5f32; 64];
+        let one = state(1, &floats).state_bytes();
+        let mut st = Store::new(StoreConfig {
+            budget_bytes: 2 * one,
+            ..StoreConfig::default()
+        });
+        st.put(1, state(1, &floats));
+        st.put(2, state(2, &floats));
+        // refresh 1 so 2 becomes the LRU victim
+        let s1 = st.take(1).unwrap();
+        st.put(1, s1);
+        st.put(3, state(3, &floats));
+        assert!(st.contains_resident(1));
+        assert!(!st.contains_resident(2), "LRU victim evicted");
+        assert!(st.contains_resident(3));
+        assert_eq!(st.stats.evictions, 1);
+        assert!(st.bytes_used() <= 2 * one);
+        assert!(st.take(2).is_none(), "no spill dir: eviction drops");
     }
 
     #[test]
     fn eviction_spills_to_disk_and_take_restores_bit_exact() {
-        let dir = std::env::temp_dir().join(format!("lh_sess_store_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let one = state(0, 64).state_bytes();
-        let mut s = Store::new(StoreConfig { budget_bytes: one, spill_dir: Some(dir.clone()) });
-        let mut a = state(7, 64);
-        a.planes[0].data[0] = f32::NAN; // must survive the disk trip bit-exactly
-        let want_bits = a.planes[0].data[0].to_bits();
-        s.put(1, a);
-        s.put(2, state(8, 64)); // evicts 1 -> disk
-        assert_eq!(s.stats.spills, 1);
-        assert!(!s.contains_resident(1));
-        let back = s.take(1).expect("disk hit");
-        assert_eq!(s.stats.disk_hits, 1);
-        assert_eq!(back.last_token, 7);
-        assert_eq!(back.planes[0].data[0].to_bits(), want_bits);
-        // the spill file is consumed by take
-        assert!(s.take(1).is_none());
-        assert_eq!(s.stats.misses, 1);
+        let dir = tmp("spill");
+        let weird = [f32::from_bits(0x7fc0_0123), -0.0, 1.5e-39];
+        let one = state(1, &weird).state_bytes();
+        let mut st = Store::new(StoreConfig {
+            budget_bytes: one, // second put evicts the first
+            spill_dir: Some(dir.clone()),
+            ..StoreConfig::default()
+        });
+        st.put(1, state(1, &weird));
+        st.put(2, state(2, &[9.0, 9.0, 9.0]));
+        assert!(!st.contains_resident(1));
+        assert!(st.contains(1), "spilled session still known");
+        assert_eq!(st.stats.spills, 1);
+        assert!(st.spill_bytes() > 0);
+        assert_eq!(st.spilled_len(), 1);
+        let got = st.take(1).expect("disk hit");
+        let bits: Vec<u32> = got.plane("h").unwrap().iter().map(|f| f.to_bits()).collect();
+        let want: Vec<u32> = weird.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(bits, want, "spill round-trip must be bit-exact");
+        assert_eq!(got.tokens_seen, 101);
+        assert_eq!(st.stats.disk_hits, 1);
+        assert_eq!(st.spill_bytes(), 0, "take removes the spilled record");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn oversized_state_is_evicted_immediately() {
-        let mut s = Store::new(StoreConfig { budget_bytes: 8, spill_dir: None });
-        s.put(1, state(1, 1000)); // bigger than the whole budget
-        assert_eq!(s.len(), 0);
-        assert_eq!(s.stats.evictions, 1);
-        assert_eq!(s.bytes_used(), 0);
+        let mut st = Store::new(StoreConfig { budget_bytes: 16, ..StoreConfig::default() });
+        st.put(1, state(1, &[0.0; 128]));
+        assert_eq!(st.len(), 0);
+        assert_eq!(st.bytes_used(), 0);
+        assert_eq!(st.stats.evictions, 1);
     }
 
     #[test]
     fn replacing_a_session_does_not_leak_bytes() {
-        let mut s = Store::new(StoreConfig { budget_bytes: 1 << 20, spill_dir: None });
-        s.put(1, state(1, 100));
-        let b = s.bytes_used();
-        s.put(1, state(2, 100));
-        assert_eq!(s.bytes_used(), b);
-        assert_eq!(s.len(), 1);
-        assert_eq!(s.take(1).unwrap().last_token, 2);
-        assert_eq!(s.bytes_used(), 0);
+        let mut st = Store::new(StoreConfig::default());
+        st.put(5, state(1, &[0.0; 100]));
+        st.put(5, state(2, &[0.0; 10]));
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.bytes_used(), state(2, &[0.0; 10]).state_bytes());
+        assert_eq!(st.take(5).unwrap().tokens_seen, 102, "newest snapshot wins");
     }
 
     #[test]
     fn evict_session_drops_ram_and_disk() {
-        let dir = std::env::temp_dir().join(format!("lh_sess_evict_{}", std::process::id()));
+        let dir = tmp("evict");
+        let one = state(1, &[1.0; 16]).state_bytes();
+        let mut st = Store::new(StoreConfig {
+            budget_bytes: one,
+            spill_dir: Some(dir.clone()),
+            ..StoreConfig::default()
+        });
+        st.put(1, state(1, &[1.0; 16]));
+        st.put(2, state(2, &[2.0; 16])); // spills 1
+        assert!(st.evict_session(1), "spilled session existed");
+        assert!(st.evict_session(2), "resident session existed");
+        assert!(!st.evict_session(3), "unknown session");
+        assert!(!st.contains(1));
+        assert!(!st.contains(2));
+        assert_eq!(st.spilled_len(), 0);
+        assert_eq!(st.spill_bytes(), 0);
+        assert_eq!(st.bytes_used(), 0);
         let _ = std::fs::remove_dir_all(&dir);
-        let one = state(0, 32).state_bytes();
-        let mut s = Store::new(StoreConfig { budget_bytes: one, spill_dir: Some(dir.clone()) });
-        s.put(1, state(1, 32));
-        s.put(2, state(2, 32)); // 1 spilled
-        let before = (s.stats.hits, s.stats.disk_hits, s.stats.misses);
-        assert!(s.contains(1), "spilled session still counts as held");
-        assert!(s.contains(2), "resident session counts as held");
-        assert!(!s.contains(3));
-        assert_eq!(
-            before,
-            (s.stats.hits, s.stats.disk_hits, s.stats.misses),
-            "contains must not touch the hit/miss stats"
-        );
-        assert!(s.evict_session(1), "disk copy dropped");
-        assert!(s.evict_session(2), "ram copy dropped");
-        assert!(!s.evict_session(3));
-        assert!(s.take(1).is_none() && s.take(2).is_none());
+    }
+
+    #[test]
+    fn spill_cap_drops_least_recently_spilled_first() {
+        let dir = tmp("cap");
+        let floats = [3.25f32; 8];
+        let rec = rec_bytes(&floats);
+        let mut st = Store::new(StoreConfig {
+            budget_bytes: 0, // every put spills immediately
+            spill_dir: Some(dir.clone()),
+            spill_budget_bytes: 2 * rec,
+            ..StoreConfig::default()
+        });
+        st.put(1, state(1, &floats));
+        st.put(2, state(2, &floats));
+        assert_eq!(st.spilled_len(), 2);
+        st.put(3, state(3, &floats));
+        // cap fits two records: the least recently spilled (1) is dropped
+        assert!(!st.contains(1));
+        assert!(st.contains(2));
+        assert!(st.contains(3));
+        assert_eq!(st.stats.spill_evictions, 1);
+        assert_eq!(st.spill_bytes(), 2 * rec);
+        assert!(st.take(2).is_some(), "survivor restores");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_reclaims_dead_segments_and_preserves_blobs_bit_exact() {
+        let dir = tmp("compact");
+        let weird = [f32::from_bits(0xff80_0001), f32::MIN_POSITIVE, -0.0];
+        let rec = rec_bytes(&weird);
+        let mut st = Store::new(StoreConfig {
+            budget_bytes: 0,
+            spill_dir: Some(dir.clone()),
+            spill_budget_bytes: 0,
+            segment_bytes: 3 * rec, // three records per segment
+        });
+        for id in 1..=6u64 {
+            st.put(id, state(id as i32, &weird));
+        }
+        // segment 0 holds {1,2,3}; drop two of three -> live ratio 1/3
+        assert!(st.evict_session(1));
+        assert!(st.evict_session(2));
+        let seg0 = DiskTier::seg_path(&dir, 0);
+        assert!(seg0.exists());
+        assert_eq!(st.maintain(), 1, "exactly the dead-heavy sealed segment");
+        assert_eq!(st.stats.compactions, 1);
+        assert!(!seg0.exists(), "compacted segment file deleted");
+        assert_eq!(st.spilled_len(), 4);
+        assert_eq!(st.spill_bytes(), 4 * rec);
+        // the survivor that was rewritten restores bit-exactly
+        let got = st.take(3).expect("survivor restores after compaction");
+        let bits: Vec<u32> = got.plane("h").unwrap().iter().map(|f| f.to_bits()).collect();
+        let want: Vec<u32> = weird.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(bits, want);
+        assert_eq!(st.maintain(), 0, "nothing left to compact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_reindexes_spilled_sessions_latest_record_wins() {
+        let dir = tmp("reopen");
+        let cfg = StoreConfig {
+            budget_bytes: 0,
+            spill_dir: Some(dir.clone()),
+            ..StoreConfig::default()
+        };
+        {
+            let mut st = Store::new(cfg.clone());
+            st.put(1, state(1, &[1.0, 2.0]));
+            st.put(1, state(9, &[7.0, 8.0])); // supersedes the first record
+            st.put(2, state(2, &[4.0; 4]));
+        }
+        let mut st = Store::new(cfg);
+        assert_eq!(st.spilled_len(), 2, "restart re-indexes spill segments");
+        let got = st.take(1).expect("survives restart");
+        assert_eq!(got.tokens_seen, 109, "latest record for the id wins");
+        assert_eq!(got.plane("h").unwrap(), &[7.0, 8.0]);
+        assert!(st.take(2).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

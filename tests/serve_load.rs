@@ -1,0 +1,489 @@
+//! Chaos-under-load acceptance harness: the deterministic loadgen
+//! workload driven over real loopback wire connections against a sharded
+//! cluster while shards are killed, revived and drained underneath it.
+//!
+//! The overload-hardening invariants under fire:
+//!
+//! * every **accepted** turn is delivered exactly once and bit-identical
+//!   to an uninterrupted single-coordinator baseline replaying the same
+//!   accepted-turn sequence — across a mid-run shard kill, its revival,
+//!   and a bulk drain of a third shard;
+//! * every **shed** turn is a *typed* refusal
+//!   ([`ErrCode::Overloaded`] / [`ErrCode::DeadlineExceeded`]), never a
+//!   hung or severed connection, and a shed turn is never applied to
+//!   session state;
+//! * sessions TTL-evicted to **zero shard RAM** (state, spill index and
+//!   transcript all gone — the census is compared against the all-zero
+//!   [`SessionCensus`]) resume losslessly via transcript re-prefill from
+//!   the router's mirror, bit-identical to a never-evicted baseline;
+//! * after the storm the **session census reconciles**: every session is
+//!   live in exactly one coordinator, no export stash holds residue, and
+//!   nothing is left in flight.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::coordinator::server::spawn;
+use laughing_hyena::coordinator::{CoordinatorHandle, SessionCensus, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::loadgen::{self, LoadConfig};
+use laughing_hyena::obs::registry::{MetricValue, Snapshot};
+use laughing_hyena::serve::wire;
+use laughing_hyena::serve::{
+    BreakerConfig, Cluster, ErrCode, FaultAction, FaultPlan, Frame, FrontConfig, FrontServer,
+    Point, Rule, ShardServer,
+};
+
+/// Every shard and the reference coordinator share this seed, so all
+/// engines carry identical weights — the precondition for bit-identical
+/// recovery anywhere in the cluster.
+const SEED: u64 = 11;
+
+/// Tokens requested per load turn.
+const MAX_NEW: usize = 3;
+
+/// Deadline budget on patient load turns: generous, so under this test's
+/// load nothing *patient* is ever shed and every refusal is deliberate.
+const PATIENT_MS: u32 = 120_000;
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 4, linger_ms: 1, ..ServeConfig::default() }
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// The uninterrupted baseline: one coordinator, never faulted, no TTL.
+fn reference(serve_cfg: ServeConfig) -> CoordinatorHandle {
+    let shape = shape();
+    spawn(
+        move || Box::new(RecurrentEngine::new(&shape, 4, SEED)) as Box<dyn SlotEngine>,
+        serve_cfg,
+    )
+}
+
+fn ref_turn(h: &CoordinatorHandle, sid: u64, delta: Vec<i32>, n: usize) -> Vec<i32> {
+    h.submit_in_session(sid, delta, n)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap()
+        .tokens
+}
+
+/// An `n`-shard cluster + front door with a shared fault plan and zero
+/// breaker cooldown (so a revived shard can rejoin within the test).
+fn launch(
+    n: usize,
+    serve_cfg: &ServeConfig,
+    max_inflight: usize,
+) -> (Vec<ShardServer>, FrontServer, Arc<FaultPlan>) {
+    let faults = Arc::new(FaultPlan::new());
+    let cluster = Cluster::launch_native_with(
+        n,
+        &shape(),
+        4,
+        SEED,
+        serve_cfg,
+        BreakerConfig { cooldown: Duration::ZERO, ..BreakerConfig::default() },
+        Some(faults.clone()),
+    )
+    .unwrap();
+    let (shards, router) = cluster.into_parts();
+    let front = FrontServer::spawn(
+        router,
+        FrontConfig { max_inflight, probe_interval: None, ..FrontConfig::default() },
+    )
+    .unwrap();
+    (shards, front, faults)
+}
+
+/// One wire-level turn through the front door.  `Ok(tokens)` for a
+/// completed generation, `Err(code)` for a typed refusal frame; anything
+/// else (transport failure, protocol surprise) panics the worker — under
+/// this harness a non-typed failure is a bug, not load.
+fn wire_turn(
+    addr: SocketAddr,
+    sid: u64,
+    delta: &[i32],
+    max_new: u32,
+    deadline_ms: u32,
+) -> Result<Vec<i32>, ErrCode> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    match wire::read_frame(&mut s).unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello greeting, got {other:?}"),
+    }
+    wire::write_frame(
+        &mut s,
+        &Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new,
+            deadline_ms,
+            delta: delta.to_vec(),
+        },
+    )
+    .unwrap();
+    let mut toks = Vec::new();
+    loop {
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Token { token } => toks.push(token),
+            Frame::Done { .. } => return Ok(toks),
+            Frame::Error { code, .. } => return Err(code),
+            other => panic!("expected Token/Done/Error, got {other:?}"),
+        }
+    }
+}
+
+fn counter(snap: &Snapshot, name: &str) -> u64 {
+    match snap.entries.get(name) {
+        Some(MetricValue::Counter(v)) | Some(MetricValue::Gauge(v)) => *v,
+        _ => 0,
+    }
+}
+
+/// Poll until `pred` holds or the timeout elapses (then panic with `what`).
+fn wait_until(what: &str, timeout: Duration, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The tentpole: 200 concurrent sessions drive the deterministic loadgen
+/// workload over the wire while the test kills a shard mid-run, revives
+/// it, then bulk-drains another shard — and afterwards replays every
+/// *accepted* turn on an uninterrupted baseline coordinator, demanding
+/// bit-identical tokens turn by turn.  Deliberately shed work (tiny
+/// deadline budgets submitted against a verifiably full admission gate)
+/// must come back as typed refusals and leave no trace in any session.
+/// Finally the census reconciles: each session live in exactly one
+/// coordinator, empty export stashes, nothing in flight.
+#[test]
+fn chaos_under_load_delivers_accepted_turns_exactly_once_bit_identically() {
+    let n_shards = 3;
+    let (shards, front, faults) = launch(n_shards, &cfg(), 4);
+    let addr = front.addr();
+    let router = front.router();
+
+    // the deterministic workload: 200 sessions, ~2 turns each
+    let load_cfg = LoadConfig {
+        sessions: 200,
+        turns: 2,
+        rate_hz: 0.0,
+        think_ms: 1,
+        prompt_len: 4,
+        max_new: MAX_NEW,
+        deadline_ms: PATIENT_MS,
+        seed: 42,
+    };
+    let plans = loadgen::plan(&load_cfg);
+    let total_turns: usize = plans.iter().map(|p| p.turns.len()).sum();
+    assert!(total_turns >= 200, "workload too small to call this load");
+
+    let done = Arc::new(AtomicU64::new(0));
+    let workers: Vec<_> = plans
+        .into_iter()
+        .map(|sp| {
+            let done = Arc::clone(&done);
+            thread::spawn(move || {
+                let mut log: Vec<(Vec<i32>, Option<Vec<i32>>)> = Vec::new();
+                for t in &sp.turns {
+                    if t.think > Duration::ZERO {
+                        thread::sleep(t.think);
+                    }
+                    match wire_turn(addr, sp.sid, &t.delta, MAX_NEW as u32, PATIENT_MS) {
+                        Ok(toks) => {
+                            assert_eq!(toks.len(), MAX_NEW, "short generation accepted");
+                            log.push((t.delta.clone(), Some(toks)));
+                        }
+                        Err(code) => {
+                            assert!(
+                                matches!(
+                                    code,
+                                    ErrCode::Overloaded | ErrCode::DeadlineExceeded
+                                ),
+                                "shed work must be typed Overloaded/DeadlineExceeded, \
+                                 got {code:?}"
+                            );
+                            log.push((t.delta.clone(), None));
+                        }
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }
+                (sp.sid, log)
+            })
+        })
+        .collect();
+
+    // chaos choreography, keyed to load progress: kill shard 0 a third of
+    // the way in, revive it two thirds in — turns homed there in between
+    // are resurrected from the router's transcript mirror on survivors
+    let third = (total_turns / 3) as u64;
+    wait_until("one third of the load", Duration::from_secs(180), || {
+        done.load(Ordering::SeqCst) >= third
+    });
+    faults.kill(shards[0].addr());
+    wait_until("two thirds of the load", Duration::from_secs(180), || {
+        done.load(Ordering::SeqCst) >= 2 * third
+    });
+    faults.revive(shards[0].addr());
+    router.lock().unwrap().probe_all();
+
+    let mut logs: HashMap<u64, Vec<(Vec<i32>, Option<Vec<i32>>)>> = HashMap::new();
+    for w in workers {
+        let (sid, log) = w.join().expect("load worker panicked");
+        logs.insert(sid, log);
+    }
+    let shed_under_load: u64 =
+        logs.values().flatten().filter(|(_, toks)| toks.is_none()).count() as u64;
+
+    // drain churn under the same cluster: bulk-move everything off shard
+    // 1, then keep conversing on a sample of the moved sessions
+    let moved = router.lock().unwrap().drain(1).unwrap();
+    assert!(!moved.is_empty(), "a 200-session load left shard 1 empty?");
+    for &sid in moved.iter().take(8) {
+        let home = router.lock().unwrap().shard_of(sid);
+        assert_ne!(home, Some(1), "session {sid:#x} still routed at the drained shard");
+        let delta = vec![7, 3];
+        let toks = wire_turn(addr, sid, &delta, MAX_NEW as u32, PATIENT_MS)
+            .expect("post-drain turn refused");
+        logs.get_mut(&sid).unwrap().push((delta, Some(toks)));
+    }
+
+    // deliberate shed phase: four streams held open mid-token (gate
+    // verifiably full) while impatient turns with a 1 ms budget queue
+    // behind them — every one must come back a typed refusal
+    faults.add_rule(Rule {
+        shard: None,
+        point: Point::TokenStream { after: 1 },
+        action: FaultAction::Delay(Duration::from_millis(1500)),
+        times: 4,
+    });
+    let blockers: Vec<_> = (0..4u64)
+        .map(|i| {
+            thread::spawn(move || {
+                wire_turn(addr, 0x9000 + i, &[1 + i as i32, 2], MAX_NEW as u32, PATIENT_MS)
+                    .expect("blocker turn refused")
+            })
+        })
+        .collect();
+    wait_until("the admission gate to fill", Duration::from_secs(60), || {
+        front.in_flight() == 4
+    });
+    let impatient = 6u64;
+    for i in 0..impatient {
+        assert_eq!(front.in_flight(), 4, "a blocker finished early; gate not provably full");
+        let got = wire_turn(addr, 0xA000 + i, &[9, 9, 9], MAX_NEW as u32, 1);
+        assert_eq!(
+            got,
+            Err(ErrCode::Overloaded),
+            "an impatient turn against a full gate must shed typed"
+        );
+    }
+    for b in blockers {
+        let toks = b.join().expect("blocker panicked");
+        assert_eq!(toks.len(), MAX_NEW);
+    }
+    assert_eq!(faults.rules_pending(), 0, "a staged stream delay never fired");
+    // shed turns were never applied: the impatient sessions do not exist
+    for shard in &shards {
+        for i in 0..impatient {
+            assert!(
+                !shard.handle.session_known(0xA000 + i).unwrap(),
+                "a typed-shed turn leaked session state onto a shard"
+            );
+        }
+    }
+    let front_snap = front.front_metrics();
+    assert_eq!(
+        counter(&front_snap, "lh_front_shed_deadline_total"),
+        shed_under_load + impatient,
+        "every shed must be counted exactly once"
+    );
+
+    // exactly-once, bit-identical: replay each session's accepted turns
+    // (and only those — shed turns were never applied) on the baseline
+    let h_ref = reference(cfg());
+    let mut accepted = 0u64;
+    let mut sids: Vec<u64> = logs.keys().copied().collect();
+    sids.sort_unstable();
+    for sid in sids {
+        for (turn_no, (delta, toks)) in logs[&sid].iter().enumerate() {
+            if let Some(toks) = toks {
+                let expect = ref_turn(&h_ref, sid, delta.clone(), MAX_NEW);
+                assert_eq!(
+                    toks, &expect,
+                    "session {sid:#x} accepted turn {turn_no} diverged from the \
+                     uninterrupted baseline"
+                );
+                accepted += 1;
+            }
+        }
+    }
+    assert_eq!(
+        accepted + shed_under_load,
+        total_turns as u64 + 8,
+        "accepted + shed must account for every load turn plus the 8 post-drain turns \
+         (the 4 blocker turns live on 0x9000+ sessions outside the logs)"
+    );
+
+    // the kill left stale copies on shard 0 for sessions resurrected
+    // elsewhere; retire them, then demand a fully reconciled census
+    {
+        let r = router.lock().unwrap();
+        for sid in logs.keys().copied() {
+            if r.shard_of(sid) != Some(0) && shards[0].handle.session_known(sid).unwrap() {
+                shards[0].handle.end_session(sid).unwrap();
+            }
+        }
+    }
+    for sid in logs.keys().copied() {
+        wait_until("stale copies to retire", Duration::from_secs(30), || {
+            let live: usize = shards
+                .iter()
+                .map(|s| s.handle.session_known(sid).unwrap() as usize)
+                .sum();
+            live == 1
+        });
+        let home = router.lock().unwrap().shard_of(sid).expect("session unplaced");
+        assert!(
+            shards[home].handle.session_known(sid).unwrap(),
+            "session {sid:#x} not live on its routed home {home}"
+        );
+    }
+    let snap = router.lock().unwrap().cluster_metrics();
+    assert!(
+        counter(&snap, "lh_resurrections_total") >= 1,
+        "the kill window never exercised transcript-mirror resurrection"
+    );
+    for (i, shard) in shards.iter().enumerate() {
+        let census = shard.handle.session_census().unwrap();
+        assert_eq!(census.in_flight, 0, "shard {i} still has turns in flight");
+        assert_eq!(
+            census.transcripts,
+            shard.handle.session_list().unwrap().len() as u64,
+            "shard {i} census out of sync with its own session list"
+        );
+        assert_eq!(shard.pending_exports(), 0, "shard {i} export stash holds residue");
+    }
+
+    h_ref.shutdown();
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// TTL under load: sessions served once, idled past the TTL so the sweep
+/// frees them to *zero shard RAM* (the census equals the all-zero
+/// [`SessionCensus`] — state, spill index and transcript all gone), then
+/// resumed through the front door.  The resumed turns must be
+/// bit-identical to a baseline that never evicted anything: the router's
+/// transcript mirror re-prefills losslessly.
+#[test]
+fn ttl_evicted_sessions_resume_bit_identically_from_zero_shard_ram() {
+    let serve_cfg = ServeConfig { session_ttl_ms: 150, ..cfg() };
+    let (shards, front, _faults) = launch(2, &serve_cfg, 32);
+    let addr = front.addr();
+    let n_sessions = 24u64;
+
+    let h_ref = reference(cfg());
+    let delta1 = |sid: u64| vec![2 + (sid % 9) as i32; 5];
+    let delta2 = |sid: u64| vec![1 + (sid % 6) as i32, 8];
+
+    let mut first: Vec<Vec<i32>> = Vec::new();
+    for sid in 0..n_sessions {
+        let toks = wire_turn(addr, sid, &delta1(sid), MAX_NEW as u32, PATIENT_MS).unwrap();
+        assert_eq!(toks, ref_turn(&h_ref, sid, delta1(sid), MAX_NEW), "turn 1 diverged");
+        first.push(toks);
+    }
+
+    // idle past the TTL: the sweep must free every shard to zero RAM
+    wait_until("the TTL sweep to zero both shards", Duration::from_secs(30), || {
+        shards
+            .iter()
+            .all(|s| s.handle.session_census().unwrap() == SessionCensus::default())
+    });
+    let snap = front.router().lock().unwrap().cluster_metrics();
+    assert!(
+        counter(&snap, "lh_session_ttl_evictions_total") >= n_sessions,
+        "every idle session must be TTL-evicted"
+    );
+
+    // resume every session: the shard holds nothing, so the router must
+    // re-prefill from its transcript mirror — losslessly
+    for sid in 0..n_sessions {
+        let toks = wire_turn(addr, sid, &delta2(sid), MAX_NEW as u32, PATIENT_MS).unwrap();
+        assert_eq!(
+            toks,
+            ref_turn(&h_ref, sid, delta2(sid), MAX_NEW),
+            "session {sid:#x} post-TTL turn diverged: the re-prefill lost context"
+        );
+    }
+    let snap = front.router().lock().unwrap().cluster_metrics();
+    assert!(
+        counter(&snap, "lh_resurrections_total") >= n_sessions,
+        "post-TTL resumes must go through the transcript-mirror rebuild"
+    );
+
+    h_ref.shutdown();
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// The loadgen module end-to-end: an open-loop run over a live cluster
+/// completes every turn (generous budgets, no injected faults), its
+/// client-side histograms account for exactly the completed turns, and
+/// the workload size matches the deterministic plan.
+#[test]
+fn loadgen_open_loop_accounts_for_every_planned_turn() {
+    let (shards, front, _faults) = launch(2, &cfg(), 16);
+    let load_cfg = LoadConfig {
+        sessions: 24,
+        turns: 2,
+        rate_hz: 200.0,
+        think_ms: 1,
+        prompt_len: 4,
+        max_new: MAX_NEW,
+        deadline_ms: PATIENT_MS,
+        seed: 5,
+    };
+    let planned: usize = loadgen::plan(&load_cfg).iter().map(|p| p.turns.len()).sum();
+    let report = loadgen::run(front.addr(), &load_cfg);
+
+    assert_eq!(report.turns_submitted(), planned as u64);
+    assert_eq!(report.turns_ok, planned as u64, "nothing should shed under this load");
+    assert_eq!(report.transport_errors, 0);
+    assert_eq!(report.tokens, (planned * MAX_NEW) as u64);
+    assert_eq!(report.ttft.count(), planned as u64);
+    assert_eq!(report.e2e.count(), planned as u64);
+    assert!(report.e2e.mean() > 0.0, "completed turns must have recorded latencies");
+
+    // the bench document renders the same accounting
+    let doc = loadgen::bench_doc(
+        &load_cfg,
+        &report,
+        &front.router().lock().unwrap().cluster_metrics(),
+        &front.front_metrics(),
+    )
+    .to_string_pretty();
+    assert!(doc.contains(&format!("\"turns_ok\": {planned}")), "{doc}");
+    assert!(doc.contains("\"mode\": \"open\""), "{doc}");
+
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}

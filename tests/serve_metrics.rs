@@ -52,7 +52,11 @@ fn launch(n: usize) -> (Vec<ShardServer>, FrontServer, Arc<FaultPlan>) {
     let faults = Arc::new(FaultPlan::new());
     let router = Router::new_with(&addrs, BreakerConfig::default(), Some(faults.clone())).unwrap();
     let front =
-        FrontServer::spawn(router, FrontConfig { max_inflight: 4, probe_interval: None }).unwrap();
+        FrontServer::spawn(
+            router,
+            FrontConfig { max_inflight: 4, probe_interval: None, ..FrontConfig::default() },
+        )
+        .unwrap();
     (shards, front, faults)
 }
 
@@ -90,7 +94,7 @@ fn front_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, max_new: u32) -> Vec<
     }
     wire::write_frame(
         &mut s,
-        &Frame::SubmitInSession { session: sid, strict: false, max_new, delta },
+        &Frame::SubmitInSession { session: sid, strict: false, max_new, deadline_ms: 0, delta },
     )
     .unwrap();
     let mut toks = Vec::new();
@@ -195,7 +199,13 @@ fn mid_generation_scrape_waits_out_the_stream_and_succeeds() {
         }
         wire::write_frame(
             &mut s,
-            &Frame::SubmitInSession { session: 7, strict: false, max_new: 5, delta: vec![3, 1, 4] },
+            &Frame::SubmitInSession {
+                session: 7,
+                strict: false,
+                max_new: 5,
+                deadline_ms: 0,
+                delta: vec![3, 1, 4],
+            },
         )
         .unwrap();
         let mut toks = Vec::new();

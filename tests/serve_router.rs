@@ -227,8 +227,11 @@ fn front_turn(addr: std::net::SocketAddr, sid: u64, delta: Vec<i32>, max_new: u3
         Frame::Hello { .. } => {}
         other => panic!("expected Hello greeting, got {other:?}"),
     }
-    wire::write_frame(&mut s, &Frame::SubmitInSession { session: sid, strict: false, max_new, delta })
-        .unwrap();
+    wire::write_frame(
+        &mut s,
+        &Frame::SubmitInSession { session: sid, strict: false, max_new, deadline_ms: 0, delta },
+    )
+    .unwrap();
     let mut toks = Vec::new();
     loop {
         match wire::read_frame(&mut s).unwrap() {
@@ -292,7 +295,11 @@ fn mid_stream_drain_defers_until_the_stream_completes() {
     let faults = Arc::new(FaultPlan::new());
     let router = Router::new_with(&addrs, BreakerConfig::default(), Some(faults.clone())).unwrap();
     let front =
-        FrontServer::spawn(router, FrontConfig { max_inflight: 4, probe_interval: None }).unwrap();
+        FrontServer::spawn(
+            router,
+            FrontConfig { max_inflight: 4, probe_interval: None, ..FrontConfig::default() },
+        )
+        .unwrap();
     let h_ref = reference();
     let sid = 0xD8A1;
     let (d1, d2) = (vec![2, 7, 1], vec![8, 2]);
@@ -318,7 +325,13 @@ fn mid_stream_drain_defers_until_the_stream_completes() {
         }
         wire::write_frame(
             &mut s,
-            &Frame::SubmitInSession { session: sid, strict: false, max_new: 5, delta: d1c },
+            &Frame::SubmitInSession {
+                session: sid,
+                strict: false,
+                max_new: 5,
+                deadline_ms: 0,
+                delta: d1c,
+            },
         )
         .unwrap();
         let mut toks = Vec::new();
