@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci chaos metrics load lint doc bench bench-decode bench-smoke serve-demo loadgen-demo artifacts clean
+.PHONY: help build test verify ci chaos metrics load crash lint doc bench bench-decode bench-smoke serve-demo loadgen-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -21,6 +21,9 @@ help:
 	@echo "  load         chaos-under-load harness (tests/serve_load.rs): 200-session"
 	@echo "               loadgen over the wire front door with a mid-run shard kill,"
 	@echo "               revival, bulk drain, typed-shed and TTL-resume acceptance"
+	@echo "  crash        crash-durability harness (tests/serve_crash.rs): router kill"
+	@echo "               mid-load + journal-replay restart, full-cluster cold restart,"
+	@echo "               torn-tail/corrupt-record refusal; wall-clock-bounded"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
@@ -59,6 +62,7 @@ ci:
 	$(MAKE) chaos
 	$(MAKE) metrics
 	$(MAKE) load
+	$(MAKE) crash
 	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
@@ -86,6 +90,15 @@ metrics:
 # is an admission/recovery deadlock, not something to wait out.
 load:
 	timeout 420 $(CARGO) test -q --test serve_load
+
+# the crash-durability acceptance harness: a router "process death" (the
+# instance is dropped mid-load, its in-memory mirror gone) followed by a
+# journal-replay restart, a full-cluster cold restart from --journal-dir,
+# and torn-tail / flipped-bit refusal checks — every acked turn must
+# resume bit-identically, exactly once, against an uninterrupted
+# reference.  Wall-clock-bounded like the other fault suites.
+crash:
+	timeout 420 $(CARGO) test -q --test serve_crash
 
 # 1-iteration run of the decode bench (keeps its correctness cross-checks,
 # skips the gate and the BENCH_decode.json/CSV writes): proves the bench

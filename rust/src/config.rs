@@ -164,6 +164,42 @@ impl ModelConfig {
     }
 }
 
+/// When the write-ahead turn journal forces its appends to disk — the
+/// durability/throughput ladder (`crate::session::journal`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `fsync` after every appended record: an acked turn survives power
+    /// loss, at one disk sync per turn.
+    PerRecord,
+    /// `fsync` at most once per window of this many milliseconds: a crash
+    /// can lose at most the last window of acked turns (process crashes
+    /// lose nothing — the bytes are in the page cache either way).
+    Batched(u64),
+    /// Never `fsync` (the OS flushes when it pleases).  Survives process
+    /// crashes, not power loss.
+    Off,
+}
+
+impl FsyncPolicy {
+    /// Parse the config-file spelling: `per-record`, `batched:<ms>`, `off`.
+    pub fn parse(s: &str) -> Option<FsyncPolicy> {
+        match s {
+            "per-record" => Some(FsyncPolicy::PerRecord),
+            "off" => Some(FsyncPolicy::Off),
+            _ => s
+                .strip_prefix("batched:")
+                .and_then(|ms| ms.parse().ok())
+                .map(FsyncPolicy::Batched),
+        }
+    }
+}
+
+impl Default for FsyncPolicy {
+    fn default() -> Self {
+        FsyncPolicy::Batched(10)
+    }
+}
+
 /// Serving coordinator config.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -191,6 +227,20 @@ pub struct ServeConfig {
     /// Admission-queue length cap (0 = unbounded); arrivals past it are
     /// refused with a typed `Overloaded` instead of queued.
     pub max_queue: usize,
+    /// Directory the router's write-ahead turn journal lives in (None =
+    /// no journal: a router crash forgets the transcript mirror, exactly
+    /// the pre-journal behavior).
+    pub journal_dir: Option<String>,
+    /// When journal appends are forced to disk; see [`FsyncPolicy`].
+    pub journal_fsync: FsyncPolicy,
+    /// Shared-secret handshake token (None = open, the default).  With a
+    /// token set, a shard requires the first frame after its Hello to be
+    /// an `Auth` carrying the same token (compared in constant time) and
+    /// refuses everything else with the typed `AuthFailed`.
+    pub auth_token: Option<String>,
+    /// Listener bind address (None = loopback `127.0.0.1`, the default).
+    /// Non-loopback binds are opt-in and should travel with `auth_token`.
+    pub bind_addr: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -205,6 +255,10 @@ impl Default for ServeConfig {
             session_spill_budget: 0,
             session_ttl_ms: 0,
             max_queue: 0,
+            journal_dir: None,
+            journal_fsync: FsyncPolicy::default(),
+            auth_token: None,
+            bind_addr: None,
         }
     }
 }
@@ -231,6 +285,22 @@ impl ServeConfig {
                 .get_usize("serve", "session_ttl_ms", d.session_ttl_ms as usize)
                 as u64,
             max_queue: raw.get_usize("serve", "max_queue", d.max_queue),
+            journal_dir: raw
+                .get("serve", "journal_dir")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+            journal_fsync: raw
+                .get("serve", "journal_fsync")
+                .and_then(FsyncPolicy::parse)
+                .unwrap_or(d.journal_fsync),
+            auth_token: raw
+                .get("serve", "auth_token")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+            bind_addr: raw
+                .get("serve", "bind_addr")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
         }
     }
 }
@@ -275,6 +345,38 @@ mod tests {
         assert_eq!(d.session_spill_budget, 0);
         assert_eq!(d.session_ttl_ms, 0);
         assert_eq!(d.max_queue, 0);
+    }
+
+    #[test]
+    fn parses_durability_and_transport_settings() {
+        let raw = RawConfig::parse(
+            "[serve]\njournal_dir = \"/tmp/wal\"\njournal_fsync = \"per-record\"\n\
+             auth_token = \"hunter2\"\nbind_addr = \"0.0.0.0\"\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_raw(&raw);
+        assert_eq!(sc.journal_dir.as_deref(), Some("/tmp/wal"));
+        assert_eq!(sc.journal_fsync, FsyncPolicy::PerRecord);
+        assert_eq!(sc.auth_token.as_deref(), Some("hunter2"));
+        assert_eq!(sc.bind_addr.as_deref(), Some("0.0.0.0"));
+        // defaults: no journal, batched fsync, open auth, loopback bind
+        let d = ServeConfig::default();
+        assert_eq!(d.journal_dir, None);
+        assert_eq!(d.journal_fsync, FsyncPolicy::Batched(10));
+        assert_eq!(d.auth_token, None);
+        assert_eq!(d.bind_addr, None);
+    }
+
+    #[test]
+    fn fsync_policy_parses_the_ladder_and_rejects_garbage() {
+        assert_eq!(FsyncPolicy::parse("per-record"), Some(FsyncPolicy::PerRecord));
+        assert_eq!(FsyncPolicy::parse("off"), Some(FsyncPolicy::Off));
+        assert_eq!(FsyncPolicy::parse("batched:25"), Some(FsyncPolicy::Batched(25)));
+        assert_eq!(FsyncPolicy::parse("batched:0"), Some(FsyncPolicy::Batched(0)));
+        assert_eq!(FsyncPolicy::parse("batched:"), None);
+        assert_eq!(FsyncPolicy::parse("batched:x"), None);
+        assert_eq!(FsyncPolicy::parse("always"), None);
+        assert_eq!(FsyncPolicy::parse(""), None);
     }
 
     #[test]

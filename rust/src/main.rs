@@ -48,6 +48,9 @@ fn main() {
                  repro serve --shards K --sessions N --turns T [--migrate] [--drain I]\n\
                  \u{20}                               sharded cluster demo: router + K loopback\n\
                  \u{20}                               shards, live session migration, drain\n\
+                 \u{20}                               [--journal-dir D] write-ahead turn journal:\n\
+                 \u{20}                               replayed on start, so a restarted router\n\
+                 \u{20}                               resumes every acked turn\n\
                  repro serve --shards K --chaos  kill a shard mid-conversation and show\n\
                  \u{20}                               transcript-mirror resurrection\n\
                  repro loadgen --shards K --sessions N --turns T [--rate R --think-ms M\n\
@@ -132,6 +135,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let _model_cfg = ModelConfig::from_raw(&raw);
     if let Some(dir) = args.get("spill-dir") {
         serve_cfg.session_spill_dir = Some(dir.to_string());
+    }
+    if let Some(dir) = args.get("journal-dir") {
+        serve_cfg.journal_dir = Some(dir.to_string());
     }
     serve_cfg.session_budget =
         args.get_u64("session-budget", serve_cfg.session_budget);
@@ -255,12 +261,19 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
     // while it runs; the demo itself drives turns through the same router
     // lock the front's wire connections use
     let (shards, cluster_router) = cluster.into_parts();
-    let front = FrontServer::spawn(cluster_router, FrontConfig::default())?;
+    let bind_host = serve_cfg.bind_addr.clone().unwrap_or_else(|| "127.0.0.1".to_string());
+    let front = FrontServer::spawn_on(cluster_router, FrontConfig::default(), &bind_host)?;
     println!(
         "observability: scrape http://{addr}/metrics (Prometheus text); \
          dashboard at http://{addr}/admin, recent traces at http://{addr}/traces",
         addr = front.http_addr()
     );
+    if let Some(dir) = &serve_cfg.journal_dir {
+        println!(
+            "durability: write-ahead turn journal at {dir} — restart with the same \
+             --journal-dir and every acked turn replays"
+        );
+    }
     let router = front.router();
     let t0 = std::time::Instant::now();
     for t in 0..turns {

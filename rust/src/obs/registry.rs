@@ -116,6 +116,13 @@ pub const SCHEMA: &[(&str, MetricKind, &str)] = &[
     ("lh_front_shed_deadline_total", MetricKind::Counter, "queued front-door requests shed when their deadline budget ran out"),
     ("lh_front_queue_wait_seconds", MetricKind::Hist, "time a deadline-budgeted request waited in the front admission queue"),
     ("lh_stream_token_seconds", MetricKind::Hist, "front-door inter-token gap on streamed replies"),
+    // write-ahead turn journal (router-side crash durability)
+    ("lh_journal_appended_total", MetricKind::Counter, "journal records durably appended"),
+    ("lh_journal_replayed_total", MetricKind::Counter, "journal records applied during cold-start replay"),
+    ("lh_journal_deduped_total", MetricKind::Counter, "duplicate turns absorbed by the journal's dedup window"),
+    ("lh_journal_truncated_tails_total", MetricKind::Counter, "torn journal tails truncated at open"),
+    ("lh_journal_compactions_total", MetricKind::Counter, "journal live-ratio compactions"),
+    ("lh_journal_append_errors_total", MetricKind::Counter, "journal appends that failed (turn still served)"),
     ("lh_metric_conflicts", MetricKind::Gauge, "metric names used with conflicting kinds"),
 ];
 

@@ -13,6 +13,7 @@ use super::shard::ShardServer;
 use super::wire::HealthReport;
 use crate::config::ServeConfig;
 use crate::engine::LmShape;
+use crate::session::{Journal, JournalConfig, JournalError};
 
 /// Per-shard health plus cluster totals, with the router-side view
 /// (circuit states, migration counters) alongside the shard-side sums.
@@ -120,7 +121,11 @@ impl Cluster {
     /// engine slots and the same `seed` (identically-seeded shards are
     /// what make cross-shard migration bit-identical).  When
     /// `cfg.session_spill_dir` is set, each shard spills into its own
-    /// `shard<i>` subdirectory so shards never clobber each other.
+    /// `shard<i>` subdirectory so shards never clobber each other.  When
+    /// `cfg.journal_dir` is set, the router opens (and replays) the
+    /// write-ahead turn journal there — the cold-restart path.  When
+    /// `cfg.auth_token` is set, every shard requires it and the router
+    /// presents it.
     pub fn launch_native(
         n: usize,
         shape: &LmShape,
@@ -153,7 +158,17 @@ impl Cluster {
             shards.push(ShardServer::spawn_native(shape, slots, seed, shard_cfg)?);
         }
         let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
-        let router = Router::new_with(&addrs, breaker_cfg, faults)?;
+        let mut router =
+            Router::new_with_auth(&addrs, breaker_cfg, faults, cfg.auth_token.clone())?;
+        if let Some(dir) = &cfg.journal_dir {
+            let mut jcfg = JournalConfig::new(dir.as_str());
+            jcfg.fsync = cfg.journal_fsync;
+            let (journal, replay) = Journal::open(jcfg).map_err(|e| match e {
+                JournalError::Io(io) => RouteError::Io(io),
+                corrupt => RouteError::Protocol(corrupt.to_string()),
+            })?;
+            router.attach_journal(journal, replay);
+        }
         Ok(Cluster { shards, router })
     }
 

@@ -41,6 +41,7 @@ use super::wire::Frame;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameKind {
     Hello,
+    Auth,
     Submit,
     SubmitInSession,
     EndSession,
@@ -71,6 +72,7 @@ impl FrameKind {
     pub fn of(f: &Frame) -> FrameKind {
         match f {
             Frame::Hello { .. } => FrameKind::Hello,
+            Frame::Auth { .. } => FrameKind::Auth,
             Frame::Submit { .. } => FrameKind::Submit,
             Frame::SubmitInSession { .. } => FrameKind::SubmitInSession,
             Frame::EndSession { .. } => FrameKind::EndSession,
@@ -112,6 +114,23 @@ pub enum Point {
     /// After exactly `after` streamed `Token` frames of one generation
     /// have been relayed ("mid-token-stream").
     TokenStream { after: u32 },
+    /// The write-ahead turn journal is about to append a record.  Any
+    /// action = the process dies *before* the record reaches the file:
+    /// the shard applied the turn, the journal never heard (the residual
+    /// at-least-once window the crash-window table documents).
+    JournalBeforeAppend,
+    /// The journal finished (and synced) an append but the process dies
+    /// before the turn is acked — the window replay-dedup closes.  Any
+    /// action = the append succeeds, then errors out of the caller.
+    JournalAfterAppend,
+    /// The append is torn mid-record: only a prefix of the encoded record
+    /// reaches the file before the process dies.  Replay must truncate
+    /// the tail at the last complete record.
+    JournalTornWrite,
+    /// The fsync the policy called for is silently skipped (a lying disk
+    /// / power-loss model): the record is written but its durability is
+    /// not forced.
+    JournalLostFsync,
 }
 
 /// What happens when a rule fires; see the module-level table.
@@ -201,6 +220,22 @@ impl FaultPlan {
         inner.rules[idx].times -= 1;
         let action = inner.rules[idx].action;
         inner.hits.push(Hit { shard, point, action });
+        Some(action)
+    }
+
+    /// [`FaultPlan::fire`] for process-local points (the journal's crash
+    /// hooks) that have no shard address: rules match via `shard: None`,
+    /// and hits record the sentinel unspecified address.
+    pub fn fire_local(&self, point: Point) -> Option<FaultAction> {
+        let local: SocketAddr = ([0, 0, 0, 0], 0).into();
+        let mut inner = self.inner.lock().unwrap();
+        let idx = inner
+            .rules
+            .iter()
+            .position(|r| r.times > 0 && r.shard.is_none() && r.point == point)?;
+        inner.rules[idx].times -= 1;
+        let action = inner.rules[idx].action;
+        inner.hits.push(Hit { shard: local, point, action });
         Some(action)
     }
 

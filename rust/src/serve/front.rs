@@ -209,11 +209,19 @@ pub struct FrontServer {
 impl FrontServer {
     /// Bind a loopback listener and serve the router on it.
     pub fn spawn(router: Router, cfg: FrontConfig) -> io::Result<FrontServer> {
+        FrontServer::spawn_on(router, cfg, "127.0.0.1")
+    }
+
+    /// [`FrontServer::spawn`] with an explicit bind host for both the
+    /// wire and HTTP listeners.  Loopback is the default everywhere;
+    /// binding wider is an explicit opt-in (`ServeConfig::bind_addr`) and
+    /// belongs behind the shared-secret handshake.
+    pub fn spawn_on(router: Router, cfg: FrontConfig, bind_host: &str) -> io::Result<FrontServer> {
         let hello = router.front_hello();
         let router = Arc::new(Mutex::new(router));
-        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let listener = TcpListener::bind((bind_host, 0))?;
         let addr = listener.local_addr()?;
-        let http_listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let http_listener = TcpListener::bind((bind_host, 0))?;
         let http_addr = http_listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -372,6 +380,11 @@ impl FrontServer {
         }
         if let Some(j) = self.prober.take() {
             let _ = j.join();
+        }
+        // a clean shutdown leaves no batched-but-unsynced journal bytes
+        // behind (per-record and off policies make this a no-op)
+        if let Ok(mut r) = self.router.lock() {
+            let _ = r.flush_journal();
         }
     }
 }

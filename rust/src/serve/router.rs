@@ -35,6 +35,13 @@
 //!   the turn — greedy decode is deterministic, so the regenerated tokens
 //!   are identical and only the suffix the client has not seen is
 //!   emitted.  Lossy in latency, lossless in tokens.
+//! * **Durability.**  With a write-ahead journal attached
+//!   ([`Router::attach_journal`]) every completed turn is appended to a
+//!   checksummed log *before* it is acked, and a restarted router replays
+//!   the journal to rebuild its transcript mirror — so acked turns
+//!   survive a router crash, and a retried turn from the
+//!   crash-after-append-before-ack window is answered from the journal
+//!   exactly once instead of forking the transcript.
 //! * **Fault injection.**  All shard i/o funnels through [`Conn`], whose
 //!   send/recv/stream hooks consult an optional [`FaultPlan`] — the chaos
 //!   tests sever, drop, delay, or corrupt frames at named protocol points
@@ -58,6 +65,7 @@ use super::wire::{
     PROTO_VERSION,
 };
 use crate::obs::{Hist, MetricValue, Snapshot};
+use crate::session::{Journal, JournalStats, Replay};
 
 /// Virtual ring points per shard: enough that removing one shard moves
 /// only ~1/N of the id space.
@@ -177,6 +185,7 @@ impl Conn {
     fn open(
         addr: SocketAddr,
         faults: Option<Arc<FaultPlan>>,
+        auth: Option<&str>,
     ) -> Result<(Conn, Identity), RouteError> {
         if let Some(plan) = &faults {
             if plan.is_killed(addr) {
@@ -203,7 +212,13 @@ impl Conn {
                         "shard {addr} speaks protocol {proto}, router speaks {PROTO_VERSION}"
                     )));
                 }
-                let conn = Conn { stream, addr, faults, last_req: None };
+                let mut conn = Conn { stream, addr, faults, last_req: None };
+                // shared-secret handshake (fire-and-forget): success earns
+                // no reply, so no round trip is spent here; a mismatch is
+                // refused with the typed AuthFailed, read at the next reply
+                if let Some(token) = auth {
+                    wire::write_frame(&mut conn.stream, &Frame::Auth { token: token.to_string() })?;
+                }
                 Ok((conn, Identity { engine, shape_fp, weights_fp }))
             }
             other => Err(RouteError::Protocol(format!("expected Hello, got {other:?}"))),
@@ -480,6 +495,19 @@ pub struct Router {
     retry_seq: u64,
     /// Lifetime retries spent from per-request budgets (`lh_retries_total`).
     retries: u64,
+    /// Optional write-ahead turn journal: every completed turn is
+    /// appended (durable per the configured fsync policy) *before* the
+    /// mirror is extended and the turn acked, and the mirror is rebuilt
+    /// from it on cold start ([`Router::attach_journal`]).
+    journal: Option<Journal>,
+    /// Per-session duplicate-turn window rebuilt from journal replay:
+    /// the last journaled (delta, gen) per session.  A post-restart turn
+    /// whose delta matches is a client retry of a turn that was appended
+    /// but never acked (the crash landed between the two); it is answered
+    /// from here without re-applying to any shard.
+    replay_dedup: HashMap<u64, (Vec<i32>, Vec<i32>)>,
+    /// Shared-secret token presented on every shard connection.
+    auth: Option<Arc<String>>,
 }
 
 impl Router {
@@ -497,12 +525,25 @@ impl Router {
         breaker_cfg: BreakerConfig,
         faults: Option<Arc<FaultPlan>>,
     ) -> Result<Router, RouteError> {
+        Router::new_with_auth(addrs, breaker_cfg, faults, None)
+    }
+
+    /// [`Router::new_with`] plus a shared-secret token presented to every
+    /// shard right after its Hello (see [`super::shard`] for the server
+    /// side of the v5 handshake).
+    pub fn new_with_auth(
+        addrs: &[SocketAddr],
+        breaker_cfg: BreakerConfig,
+        faults: Option<Arc<FaultPlan>>,
+        auth: Option<String>,
+    ) -> Result<Router, RouteError> {
+        let auth: Option<Arc<String>> = auth.map(Arc::new);
         if addrs.is_empty() {
             return Err(RouteError::NoShards);
         }
         let mut shards = Vec::with_capacity(addrs.len());
         for &addr in addrs {
-            let (_conn, id) = Conn::open(addr, faults.clone())?;
+            let (_conn, id) = Conn::open(addr, faults.clone(), auth.as_ref().map(|a| a.as_str()))?;
             shards.push(ShardInfo { addr, id, draining: false });
         }
         let breakers = addrs.iter().map(|_| Breaker::new(breaker_cfg)).collect();
@@ -522,9 +563,42 @@ impl Router {
             retry: RetryPolicy::default(),
             retry_seq: 0,
             retries: 0,
+            journal: None,
+            replay_dedup: HashMap::new(),
+            auth,
         };
         r.rebuild_ring();
         Ok(r)
+    }
+
+    /// Attach a write-ahead journal together with the replay of whatever
+    /// it already holds: the transcript mirror is seeded from the replayed
+    /// sessions (so strict routing and resurrection work across a process
+    /// restart with zero acked turns lost), and each session's last
+    /// journaled turn arms the duplicate-turn window that closes the
+    /// crash-after-append-before-ack gap.  The router's fault plan is
+    /// threaded into the journal so chaos tests drive its crash points.
+    pub fn attach_journal(&mut self, mut journal: Journal, replay: Replay) {
+        journal.set_faults(self.faults.clone());
+        self.replay_dedup = replay.last_turn;
+        for (sid, transcript) in replay.sessions {
+            self.mirror.insert(sid, transcript);
+        }
+        self.journal = Some(journal);
+    }
+
+    /// Lifetime journal counters (`None` when no journal is attached).
+    pub fn journal_stats(&self) -> Option<JournalStats> {
+        self.journal.as_ref().map(|j| j.stats())
+    }
+
+    /// Force any batched-but-unsynced journal bytes to disk (shutdown
+    /// path; with `FsyncPolicy::PerRecord` this is a no-op).
+    pub fn flush_journal(&mut self) -> io::Result<()> {
+        if let Some(j) = self.journal.as_mut() {
+            j.flush().map_err(|e| io::Error::new(io::ErrorKind::BrokenPipe, e.to_string()))?;
+        }
+        Ok(())
     }
 
     /// Number of shards (including draining ones).
@@ -650,7 +724,11 @@ impl Router {
         if !self.breakers[shard].allow() {
             return Err(RouteError::ShardUnavailable { shard });
         }
-        let (conn, _id) = Conn::open(self.shards[shard].addr, self.faults.clone())?;
+        let (conn, _id) = Conn::open(
+            self.shards[shard].addr,
+            self.faults.clone(),
+            self.auth.as_ref().map(|a| a.as_str()),
+        )?;
         Ok(conn)
     }
 
@@ -665,14 +743,46 @@ impl Router {
         }
     }
 
-    /// Record a completed turn: extend the transcript mirror and pin
-    /// residency.  The mirror tracks exactly what the shard's store holds:
-    /// prompt ++ generated, per turn.
+    /// Record a completed turn: journal it, extend the transcript mirror,
+    /// and pin residency.  The mirror tracks exactly what the shard's
+    /// store holds: prompt ++ generated, per turn.
+    ///
+    /// Ordering is the durability contract: the journal append (durable
+    /// per the configured fsync policy) happens *before* this method
+    /// returns and the turn is acked to the caller.  A crash after the
+    /// append replays the turn on restart; a crash before it means the
+    /// caller never saw an ack — at-least-once either way, and the
+    /// replayed dedup window upgrades the append-but-no-ack case to
+    /// exactly-once.  An append *error* is absorbed (counted in
+    /// `lh_journal_append_errors_total`): the turn already happened on the
+    /// shard, so refusing the ack would only manufacture a divergence.
     fn note_turn(&mut self, session: u64, shard: usize, delta: &[i32], toks: &[i32]) {
+        if let Some(j) = self.journal.as_mut() {
+            let prior = self.mirror.get(&session).map(|m| m.len()).unwrap_or(0);
+            let _ = j.append_turn(session, prior as u32, delta, toks);
+        }
         let m = self.mirror.entry(session).or_default();
         m.extend_from_slice(delta);
         m.extend_from_slice(toks);
         self.resident.insert(session, shard);
+        self.replay_dedup.remove(&session);
+        if let Some(mut j) = self.journal.take() {
+            let _ = j.maybe_compact(&self.mirror);
+            self.journal = Some(j);
+        }
+    }
+
+    /// Journal the mirror's current transcript as an absolute `Set`
+    /// record — used wherever the mirror is *replaced* rather than
+    /// extended by a turn (migration landing, recovery reconcile, drain).
+    fn journal_set(&mut self, session: u64) {
+        self.replay_dedup.remove(&session);
+        if let Some(mut j) = self.journal.take() {
+            if let Some(m) = self.mirror.get(&session) {
+                let _ = j.append_set(session, m);
+            }
+            self.journal = Some(j);
+        }
     }
 
     /// One-shot generation, round-robined over the live shards.  Fails
@@ -801,8 +911,32 @@ impl Router {
         deadline: Option<Instant>,
         mut on_token: impl FnMut(i32),
     ) -> Result<Vec<i32>, RouteError> {
+        // crash-window closure: when the last journaled turn for this
+        // session was appended but the process died before the ack reached
+        // the client, the client retries the identical turn after restart.
+        // Re-applying it would fork the transcript (the shard — or the
+        // replayed mirror — already holds its effect), so a matching delta
+        // is answered from the journal's own record.  The window is one
+        // turn deep and disarms on any other activity for the session.
+        if let Some((last_delta, gen)) = self.replay_dedup.remove(&session) {
+            if last_delta == delta {
+                if let Some(j) = self.journal.as_mut() {
+                    j.note_dedup();
+                }
+                for &t in &gen {
+                    on_token(t);
+                }
+                return Ok(gen);
+            }
+        }
         let shard = self.route_session(session)?;
-        let strict = self.resident.contains_key(&session);
+        // strict when the router knows the session — resident on a shard,
+        // or mirrored (e.g. rebuilt by journal replay after a restart,
+        // when `resident` is empty).  A mirrored-only session must NOT be
+        // sent lax: the shard would silently fork a fresh conversation
+        // instead of surfacing UnknownSession for the resurrection path.
+        let strict =
+            self.resident.contains_key(&session) || self.mirror.contains_key(&session);
         let mut attempt_no = 0u32;
         loop {
             let deadline_ms = remaining_ms(deadline)?;
@@ -911,6 +1045,7 @@ impl Router {
                 self.note_outcome(shard, None);
                 self.mirror.insert(session, tokens);
                 self.resident.insert(session, shard);
+                self.journal_set(session);
                 return Ok(generated);
             }
             if emitted == 0 && tokens.len() == pre_len && tokens[..] == want[..pre_len] {
@@ -1200,6 +1335,10 @@ impl Router {
             Frame::Ok => {
                 self.resident.remove(&session);
                 self.mirror.remove(&session);
+                self.replay_dedup.remove(&session);
+                if let Some(j) = self.journal.as_mut() {
+                    let _ = j.append_end(session);
+                }
                 Ok(())
             }
             other => Err(RouteError::Protocol(format!("expected Ok, got {other:?}"))),
@@ -1291,6 +1430,7 @@ impl Router {
         let bytes = state.as_ref().map(|b| b.len()).unwrap_or(0);
         // the exported transcript is authoritative — refresh the mirror
         self.mirror.insert(session, transcript.clone());
+        self.journal_set(session);
         let import =
             Frame::Import { session: session_id, shape_fp, weights_fp, transcript, state };
         match dst_conn.request(&import) {
@@ -1471,6 +1611,7 @@ impl Router {
                 for b in &group {
                     self.resident.insert(b.session, target);
                     self.mirror.insert(b.session, b.transcript.clone());
+                    self.journal_set(b.session);
                 }
                 // best-effort, like finish_migration: a failed commit
                 // leaves a stale (invisible, idempotent) stash, never a
@@ -1495,7 +1636,8 @@ impl Router {
     /// Add a shard to the ring (it starts taking new placements and
     /// rebalance targets immediately).
     pub fn add_shard(&mut self, addr: SocketAddr) -> Result<usize, RouteError> {
-        let (_conn, id) = Conn::open(addr, self.faults.clone())?;
+        let (_conn, id) =
+            Conn::open(addr, self.faults.clone(), self.auth.as_ref().map(|a| a.as_str()))?;
         self.shards.push(ShardInfo { addr, id, draining: false });
         self.breakers.push(Breaker::new(self.breaker_cfg));
         self.route_hist.push(Hist::new());
@@ -1564,8 +1706,12 @@ impl Router {
             if !self.breakers[i].allow() {
                 continue;
             }
-            let ok = Conn::open(self.shards[i].addr, self.faults.clone())
-                .and_then(|(mut c, _)| c.request(&Frame::Health))
+            let ok = Conn::open(
+                self.shards[i].addr,
+                self.faults.clone(),
+                self.auth.as_ref().map(|a| a.as_str()),
+            )
+            .and_then(|(mut c, _)| c.request(&Frame::Health))
                 .map(|f| matches!(f, Frame::HealthReport(_)))
                 .unwrap_or(false);
             if ok {
@@ -1643,6 +1789,7 @@ impl Router {
         let m = self.migrations;
         let fault_hits =
             self.faults.as_ref().map(|p| p.hits().len() as u64).unwrap_or(0);
+        let js = self.journal_stats().unwrap_or_default();
         for (name, v) in [
             ("lh_breaker_opened_total", transitions.opened),
             ("lh_breaker_half_opened_total", transitions.half_opened),
@@ -1654,6 +1801,12 @@ impl Router {
             ("lh_retries_total", self.retries),
             ("lh_fault_hits_total", fault_hits),
             ("lh_scrape_errors_total", self.scrape_errors),
+            ("lh_journal_appended_total", js.appended),
+            ("lh_journal_replayed_total", js.replayed),
+            ("lh_journal_deduped_total", js.deduped),
+            ("lh_journal_truncated_tails_total", js.truncated_tails),
+            ("lh_journal_compactions_total", js.compactions),
+            ("lh_journal_append_errors_total", js.append_errors),
         ] {
             snap.merge_entry(name, MetricValue::Counter(v));
         }
@@ -2060,6 +2213,76 @@ mod tests {
         for s in shards {
             s.shutdown();
         }
+    }
+
+    /// A "restarted" router (fresh instance, same journal dir) must
+    /// rebuild its transcript mirror by replay, serve the next turn of an
+    /// old session bit-identically to an uninterrupted run, and answer a
+    /// client retry of the last pre-crash turn from the journal's dedup
+    /// window without re-applying it to any shard.
+    #[test]
+    fn journal_replay_restores_sessions_and_dedups_the_retried_turn() {
+        use crate::session::JournalConfig;
+        let dir = std::env::temp_dir()
+            .join(format!("lh_router_journal_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shards = native_shards(2);
+        let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+        let sid = 63u64;
+        // uninterrupted reference for the same three-turn conversation
+        let reference = {
+            let ref_shards = native_shards(1);
+            let mut rr = router_over(&ref_shards);
+            rr.submit_in_session(sid, vec![1, 2, 3], 4).unwrap();
+            rr.submit_in_session(sid, vec![9], 4).unwrap();
+            let t3 = rr.submit_in_session(sid, vec![5, 5], 4).unwrap();
+            for s in ref_shards {
+                s.shutdown();
+            }
+            t3
+        };
+        // journaled router serves two turns, then "crashes" (is dropped)
+        let (t2, mirror_before) = {
+            let mut r = Router::new(&addrs).unwrap();
+            let (j, replay) = Journal::open(JournalConfig::new(&dir)).unwrap();
+            assert!(replay.sessions.is_empty(), "fresh dir must replay empty");
+            r.attach_journal(j, replay);
+            r.submit_in_session(sid, vec![1, 2, 3], 4).unwrap();
+            let t2 = r.submit_in_session(sid, vec![9], 4).unwrap();
+            (t2, r.mirror_of(sid).unwrap().to_vec())
+        };
+        // restart: a fresh router over the same shards + journal dir
+        let mut r = Router::new(&addrs).unwrap();
+        let (j, replay) = Journal::open(JournalConfig::new(&dir)).unwrap();
+        r.attach_journal(j, replay);
+        assert_eq!(
+            r.mirror_of(sid),
+            Some(&mirror_before[..]),
+            "replay must rebuild the mirror byte-for-byte"
+        );
+        assert!(r.journal_stats().unwrap().replayed >= 2);
+        // the client never saw turn 2's ack and retries it: answered from
+        // the dedup window, bit-identically, without touching a shard
+        let requests_before: u64 =
+            r.health().unwrap().iter().map(|h| h.requests_done).sum();
+        let mut streamed = Vec::new();
+        let retried = r
+            .submit_in_session_streaming(sid, vec![9], 4, |t| streamed.push(t))
+            .unwrap();
+        assert_eq!(retried, t2, "deduped retry must return the journaled tokens");
+        assert_eq!(streamed, t2, "and stream them exactly once each");
+        let requests_after: u64 =
+            r.health().unwrap().iter().map(|h| h.requests_done).sum();
+        assert_eq!(requests_after, requests_before, "dedup must not touch a shard");
+        assert_eq!(r.journal_stats().unwrap().deduped, 1);
+        // a genuinely new turn continues the conversation bit-identically
+        // to the uninterrupted reference (strict + mirror resurrection)
+        let t3 = r.submit_in_session(sid, vec![5, 5], 4).unwrap();
+        assert_eq!(t3, reference, "post-restart turn must match the reference");
+        for s in shards {
+            s.shutdown();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// A dead shard degrades the scrape (its numbers are absent, the

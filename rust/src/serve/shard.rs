@@ -1,11 +1,17 @@
 //! A shard: one [`CoordinatorHandle`] (engine thread + session store)
-//! served over the wire protocol on a loopback TCP socket.
+//! served over the wire protocol on a TCP socket.
 //!
-//! The listener binds `127.0.0.1:0` (kernel-assigned port — sandbox-safe),
-//! greets every connection with [`Frame::Hello`] carrying the protocol
-//! version, engine state tag and shape fingerprint, then handles one
-//! request frame at a time per connection.  Generation replies stream one
-//! [`Frame::Token`] per token before the closing [`Frame::Done`].
+//! The listener binds `127.0.0.1:0` by default (kernel-assigned port —
+//! sandbox-safe); a non-loopback bind is opt-in via
+//! [`ServeConfig::bind_addr`].  When [`ServeConfig::auth_token`] is set,
+//! every connection must present that shared secret in a [`Frame::Auth`]
+//! as its first frame (compared in constant time) or its first command is
+//! refused with a typed [`ErrCode::AuthFailed`] and the connection is
+//! closed.  The shard greets every connection with [`Frame::Hello`]
+//! carrying the protocol version, engine state tag and shape fingerprint,
+//! then handles one request frame at a time per connection.  Generation
+//! replies stream one [`Frame::Token`] per token before the closing
+//! [`Frame::Done`].
 //!
 //! Import safety: a [`Frame::Import`] whose shape fingerprint, weights
 //! fingerprint, blob format version or engine tag does not match this
@@ -117,8 +123,11 @@ impl ShardServer {
     where
         F: FnOnce() -> Box<dyn SlotEngine> + Send + 'static,
     {
+        // cfg moves into the coordinator; keep the transport settings out
+        let bind_host = cfg.bind_addr.clone().unwrap_or_else(|| "127.0.0.1".to_string());
+        let auth: Option<Arc<String>> = cfg.auth_token.clone().map(Arc::new);
         let handle = Arc::new(spawn(make_engine, cfg));
-        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let listener = TcpListener::bind((bind_host.as_str(), 0))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
@@ -143,8 +152,16 @@ impl ShardServer {
                     let handle = Arc::clone(&handle);
                     let pending = Arc::clone(&pending);
                     let spec = spec.clone();
+                    let auth = auth.clone();
                     let join = std::thread::spawn(move || {
-                        let _ = serve_conn(stream, &handle, &pending, &spec, &stop);
+                        let _ = serve_conn(
+                            stream,
+                            &handle,
+                            &pending,
+                            &spec,
+                            auth.as_ref().map(|a| a.as_str()),
+                            &stop,
+                        );
                     });
                     // reap finished connection threads so a long-running
                     // shard (per-call router connections) does not grow an
@@ -273,11 +290,15 @@ fn read_frame_stoppable(
 }
 
 /// Serve one connection until the peer disconnects or the shard stops.
+/// When `auth` is set, the first client frame must be a matching
+/// [`Frame::Auth`] (constant-time compare) or the connection gets one
+/// typed [`ErrCode::AuthFailed`] and is closed.
 fn serve_conn(
     mut stream: TcpStream,
     h: &CoordinatorHandle,
     pending: &Mutex<HashMap<u64, SessionExport>>,
     spec: &ShardSpec,
+    auth: Option<&str>,
     stop: &AtomicBool,
 ) -> io::Result<()> {
     stream.set_nodelay(true).ok();
@@ -292,6 +313,18 @@ fn serve_conn(
             weights_fp: spec.weights_fp,
         },
     )?;
+    if let Some(token) = auth {
+        match read_frame_stoppable(&mut stream, stop)? {
+            None => return Ok(()),
+            Some(Frame::Auth { token: presented })
+                if crate::util::bytes::ct_eq(presented.as_bytes(), token.as_bytes()) => {}
+            Some(_) => {
+                // never say whether the token or the frame kind was wrong
+                send_err(&mut stream, ErrCode::AuthFailed, "shared-secret token required")?;
+                return Ok(());
+            }
+        }
+    }
     loop {
         let frame = match read_frame_stoppable(&mut stream, stop)? {
             Some(f) => f,
@@ -559,6 +592,9 @@ fn serve_conn(
                     wire::write_frame(&mut stream, &Frame::Ok)?
                 }
             }
+            // a credential presented to an open shard is accepted silently
+            // (a token-configured client may talk to a token-less shard)
+            Frame::Auth { .. } => {}
             // reply frames (or a client Hello) are not valid requests
             _ => send_err(&mut stream, ErrCode::Protocol, "unexpected frame")?,
         }
@@ -1298,6 +1334,48 @@ mod tests {
         }
         assert_eq!(queued.collect_generation().len(), 2);
         shard.shutdown();
+    }
+
+    /// The shared-secret handshake: a token-configured shard refuses the
+    /// first command of any connection that did not present the exact
+    /// token, and an open shard silently accepts a presented credential.
+    #[test]
+    fn auth_token_gates_every_command() {
+        let shape = LmShape::bench("nano").unwrap();
+        let shard = ShardServer::spawn_native(
+            &shape,
+            2,
+            11,
+            ServeConfig {
+                max_batch: 2,
+                linger_ms: 1,
+                auth_token: Some("hunter2".into()),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        // no token: the first command is refused, typed
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        assert!(matches!(c.recv(), Frame::Error { code: ErrCode::AuthFailed, .. }));
+        // wrong token: refused too
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::Auth { token: "hunter3".into() });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        assert!(matches!(c.recv(), Frame::Error { code: ErrCode::AuthFailed, .. }));
+        // the right token admits the connection for all further commands
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::Auth { token: "hunter2".into() });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        assert_eq!(c.collect_generation().len(), 2);
+        shard.shutdown();
+        // an open (token-less) shard ignores a presented credential
+        let open = native_shard();
+        let mut c = RawClient::connect(open.addr());
+        c.send(&Frame::Auth { token: "whatever".into() });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        assert_eq!(c.collect_generation().len(), 2);
+        open.shutdown();
     }
 
     #[test]

@@ -54,8 +54,11 @@ use crate::util::bytes::{ByteReader, ReadErr};
 /// / [`Frame::SubmitInSession`], the typed [`ErrCode::Overloaded`] /
 /// [`ErrCode::DeadlineExceeded`] refusals, and the bulk-drain family
 /// ([`Frame::BulkExport`], [`Frame::BulkImport`], [`Frame::BulkCommit`],
-/// [`Frame::BulkAbort`], [`Frame::BulkBlob`]).
-pub const PROTO_VERSION: u32 = 4;
+/// [`Frame::BulkAbort`], [`Frame::BulkBlob`]).  v5 added the optional
+/// shared-secret handshake ([`Frame::Auth`], sent by the client right
+/// after validating the server's [`Frame::Hello`]) and the typed
+/// [`ErrCode::AuthFailed`] refusal.
+pub const PROTO_VERSION: u32 = 5;
 
 /// Upper bound on one frame's encoded size (tag + payload).
 pub const MAX_FRAME_BYTES: u32 = 64 << 20;
@@ -87,6 +90,10 @@ pub enum ErrCode {
     /// was shed before running.  Like [`ErrCode::Overloaded`], the
     /// session state is untouched.
     DeadlineExceeded,
+    /// The connection did not present the server's shared-secret token
+    /// (missing, wrong, or a non-[`Frame::Auth`] first frame) before its
+    /// first command.  The connection is closed after this refusal.
+    AuthFailed,
 }
 
 impl ErrCode {
@@ -100,6 +107,7 @@ impl ErrCode {
             ErrCode::Unavailable => 6,
             ErrCode::Overloaded => 7,
             ErrCode::DeadlineExceeded => 8,
+            ErrCode::AuthFailed => 9,
         }
     }
 
@@ -112,6 +120,7 @@ impl ErrCode {
             6 => ErrCode::Unavailable,
             7 => ErrCode::Overloaded,
             8 => ErrCode::DeadlineExceeded,
+            9 => ErrCode::AuthFailed,
             _ => ErrCode::Internal,
         }
     }
@@ -159,6 +168,12 @@ pub enum Frame {
     /// migrated state into silently wrong tokens, so the weights
     /// fingerprint participates in every migration check.
     Hello { proto: u32, engine: String, shape_fp: u64, weights_fp: u64 },
+    /// Client credential: the shared-secret token, sent as the first
+    /// client frame when the server requires one.  The server compares
+    /// it in constant time ([`crate::util::bytes::ct_eq`]) and answers
+    /// any mismatch — or any other first frame — with a typed
+    /// [`ErrCode::AuthFailed`] before processing commands.
+    Auth { token: String },
     /// One-shot generation.  `deadline_ms` is the client's remaining
     /// deadline budget in milliseconds at send time (0 = none).
     Submit { max_new: u32, deadline_ms: u32, prompt: Vec<i32> },
@@ -289,6 +304,7 @@ const TAG_ERROR: u8 = 21;
 const TAG_TRANSCRIPT_IS: u8 = 22;
 const TAG_METRICS_REPORT: u8 = 23;
 const TAG_BULK_BLOB: u8 = 24;
+const TAG_AUTH: u8 = 25;
 
 fn bad_data(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -516,6 +532,10 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u64(*shape_fp);
             e.u64(*weights_fp);
         }
+        Frame::Auth { token } => {
+            e.u8(TAG_AUTH);
+            e.str(token);
+        }
         Frame::Submit { max_new, deadline_ms, prompt } => {
             e.u8(TAG_SUBMIT);
             e.u32(*max_new);
@@ -650,6 +670,7 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             shape_fp: d.u64()?,
             weights_fp: d.u64()?,
         },
+        TAG_AUTH => Frame::Auth { token: d.str()? },
         TAG_SUBMIT => Frame::Submit {
             max_new: d.u32()?,
             deadline_ms: d.u32()?,
@@ -786,6 +807,8 @@ mod tests {
             shape_fp: 0xDEAD_BEEF_1234_5678,
             weights_fp: 0x0123_4567_89AB_CDEF,
         });
+        roundtrip(Frame::Auth { token: "".into() });
+        roundtrip(Frame::Auth { token: "hunter2".into() });
         roundtrip(Frame::Submit { max_new: 16, deadline_ms: 0, prompt: vec![1, -2, 3] });
         roundtrip(Frame::Submit { max_new: 16, deadline_ms: 2500, prompt: vec![] });
         roundtrip(Frame::SubmitInSession {
@@ -889,6 +912,7 @@ mod tests {
             ErrCode::Unavailable,
             ErrCode::Overloaded,
             ErrCode::DeadlineExceeded,
+            ErrCode::AuthFailed,
         ] {
             roundtrip(Frame::Error { code, msg: "why".into() });
         }
@@ -1038,7 +1062,7 @@ mod tests {
     /// A random instance of every frame kind — the generator behind the
     /// wire property tests, so fuzzing covers each tag's payload layout.
     fn arb_frame(rng: &mut Prng) -> Frame {
-        match rng.below(24) {
+        match rng.below(25) {
             0 => Frame::Hello {
                 proto: rng.next_u64() as u32,
                 engine: "hyena".into(),
@@ -1115,6 +1139,7 @@ mod tests {
                 weights_fp: rng.next_u64(),
                 sessions: arb_session_blobs(rng),
             },
+            23 => Frame::Auth { token: "t".repeat(rng.below(8)) },
             _ => Frame::Error {
                 code: ErrCode::from_u16(rng.below(10) as u16),
                 msg: "m".repeat(rng.below(16)),

@@ -1,0 +1,1038 @@
+//! Append-only write-ahead turn journal — the durability substrate the
+//! serve layer was missing.
+//!
+//! Every recovery path the cluster had before this module (shard
+//! resurrection, TTL zero-RAM resume) bottoms out in the router's in-RAM
+//! transcript mirror: one SIGKILL and every conversation is forgotten.
+//! The journal closes that hole for a few KiB per turn — cheap precisely
+//! because distillation makes per-session state constant-size, so a turn
+//! record is `O(delta)` tokens, not an `O(t)` KV cache.
+//!
+//! ## Record format
+//!
+//! The on-disk framing deliberately mirrors the wire protocol
+//! (`[u32 len][body][u64 fnv1a64(body)]`, little-endian throughout):
+//!
+//! ```text
+//! [u32 len][u8 kind][payload; len-1 bytes][u64 fnv1a64(kind ++ payload)]
+//! ```
+//!
+//! | kind | name | payload |
+//! |------|------|---------|
+//! | 1 | `Turn` | `[u64 session][u32 prior_len][tokens delta][tokens generated]` |
+//! | 2 | `Set`  | `[u64 session][tokens transcript]` (snapshot / reconcile) |
+//! | 3 | `End`  | `[u64 session]` |
+//!
+//! where `tokens` is `u32 count` followed by `count` `i32`s.  A `Turn`
+//! record carries `prior_len` — the transcript length it extends — so
+//! replay can detect both gaps (a turn whose prefix never landed: typed
+//! corruption) and duplicates (the same turn appended twice because the
+//! process crashed between append and ack: deduped, not double-applied).
+//!
+//! ## Torn tails vs corruption
+//!
+//! A crash mid-append leaves a *prefix* of a record at the end of the
+//! **last** segment.  Replay truncates the file back to the last valid
+//! record and carries on — that is expected physics, not an error.  The
+//! same damage anywhere else (a short record in a sealed segment, a bad
+//! checksum that is not the final bytes of the last segment, a length
+//! field that no append could have produced) is surfaced as a typed
+//! [`JournalError::Corrupt`] and never a panic: refusing to serve from a
+//! journal that lies beats silently resurrecting the wrong transcript.
+//!
+//! ## Fsync ladder and compaction
+//!
+//! Appends sync per [`crate::config::FsyncPolicy`]: every record, at most
+//! once per batched window (piggybacked on appends — no timer threads),
+//! or never.  Segments rotate at a byte threshold; when sealed bytes
+//! dwarf the live transcript set (the same live-ratio rule as the spill
+//! tier's compaction) the journal rewrites itself as one snapshot
+//! segment of `Set` records — plus a trailing `Turn` for each session's
+//! last turn, so the crash-between-append-and-ack dedup window survives
+//! compaction.  The snapshot goes tmp-file → `sync_all` → atomic rename
+//! → directory fsync, so a crash mid-compaction leaves either the old
+//! segments or the new snapshot, never a half state.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::FsyncPolicy;
+use crate::serve::faults::{FaultPlan, Point};
+use crate::util::bytes::{fnv1a64, ByteReader};
+
+const REC_TURN: u8 = 1;
+const REC_SET: u8 = 2;
+const REC_END: u8 = 3;
+
+/// Hard cap on one record's `len` field — matches the wire layer's frame
+/// cap.  A torn append produces a *short* file, never a garbage length,
+/// so an oversized length is always corruption, even at the tail.
+const MAX_RECORD_BYTES: usize = 64 << 20;
+
+/// Smallest possible record: 4 (len) + 1 (kind) + 8 (checksum).
+const REC_MIN: usize = 13;
+
+/// Why the journal failed.
+#[derive(Debug)]
+pub enum JournalError {
+    Io(io::Error),
+    /// A sealed record failed validation — not a torn tail.  The journal
+    /// refuses to replay past it rather than guess at transcripts.
+    Corrupt {
+        segment: String,
+        offset: u64,
+        reason: String,
+    },
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::Io(e) => write!(f, "journal io: {e}"),
+            JournalError::Corrupt { segment, offset, reason } => {
+                write!(f, "journal corrupt: {segment} at byte {offset}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+impl From<io::Error> for JournalError {
+    fn from(e: io::Error) -> JournalError {
+        JournalError::Io(e)
+    }
+}
+
+/// Where and how the journal lives.
+#[derive(Clone, Debug)]
+pub struct JournalConfig {
+    pub dir: PathBuf,
+    pub fsync: FsyncPolicy,
+    /// Rotate the active segment once it reaches this many bytes.
+    pub segment_bytes: u64,
+}
+
+impl JournalConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> JournalConfig {
+        JournalConfig { dir: dir.into(), fsync: FsyncPolicy::default(), segment_bytes: 1 << 20 }
+    }
+}
+
+/// Counters the `obs` registry scrapes (`lh_journal_*`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Records durably appended by this process.
+    pub appended: u64,
+    /// Records applied during replay at open.
+    pub replayed: u64,
+    /// Duplicate turn records skipped (replay dedup + router retry dedup).
+    pub deduped: u64,
+    /// Torn tails truncated at open.
+    pub truncated_tails: u64,
+    /// Live-ratio compactions performed.
+    pub compactions: u64,
+    /// Appends that failed (including injected crash faults).
+    pub append_errors: u64,
+}
+
+/// What replay reconstructed: the full transcript per live session, plus
+/// each session's last `(delta, generated)` turn — the dedup window a
+/// restarted router consults when a client retries a turn that was
+/// journaled but never acked.
+#[derive(Clone, Debug, Default)]
+pub struct Replay {
+    pub sessions: HashMap<u64, Vec<i32>>,
+    pub last_turn: HashMap<u64, (Vec<i32>, Vec<i32>)>,
+}
+
+/// The append-only journal.  Single-writer by construction (`&mut self`
+/// appends); the router serializes access behind its own lock.
+pub struct Journal {
+    dir: PathBuf,
+    fsync: FsyncPolicy,
+    segment_bytes: u64,
+    file: File,
+    seg_index: u64,
+    seg_bytes: u64,
+    /// Bytes in sealed (non-active) segments — the compaction trigger.
+    sealed_bytes: u64,
+    last_turn: HashMap<u64, (Vec<i32>, Vec<i32>)>,
+    last_sync: Instant,
+    dirty: bool,
+    faults: Option<Arc<FaultPlan>>,
+    stats: JournalStats,
+}
+
+fn segment_name(k: u64) -> String {
+    format!("wal{k}.log")
+}
+
+fn parse_segment_name(name: &str) -> Option<u64> {
+    name.strip_prefix("wal")?.strip_suffix(".log")?.parse().ok()
+}
+
+/// fsync the directory so renames / new files are themselves durable.
+fn sync_dir(dir: &Path) -> io::Result<()> {
+    #[cfg(unix)]
+    {
+        File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = dir;
+    }
+    Ok(())
+}
+
+fn encode_record(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(REC_MIN + payload.len());
+    buf.extend_from_slice(&((1 + payload.len()) as u32).to_le_bytes());
+    buf.push(kind);
+    buf.extend_from_slice(payload);
+    let mut body = Vec::with_capacity(1 + payload.len());
+    body.push(kind);
+    body.extend_from_slice(payload);
+    buf.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    buf
+}
+
+fn push_tokens(buf: &mut Vec<u8>, toks: &[i32]) {
+    buf.extend_from_slice(&(toks.len() as u32).to_le_bytes());
+    for &t in toks {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+fn read_tokens(r: &mut ByteReader<'_>) -> Result<Vec<i32>, String> {
+    let n = r.u32().map_err(|_| "truncated token count".to_string())? as usize;
+    let bytes = n
+        .checked_mul(4)
+        .ok_or_else(|| "token count overflows".to_string())?;
+    let raw = r.take(bytes).map_err(|_| "truncated token list".to_string())?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// One decoded record.
+enum Record {
+    Turn { session: u64, prior_len: u32, delta: Vec<i32>, gen: Vec<i32> },
+    Set { session: u64, transcript: Vec<i32> },
+    End { session: u64 },
+}
+
+fn decode_record(kind: u8, payload: &[u8]) -> Result<Record, String> {
+    let mut r = ByteReader::new(payload);
+    let rec = match kind {
+        REC_TURN => {
+            let session = r.u64().map_err(|_| "truncated session id")?;
+            let prior_len = r.u32().map_err(|_| "truncated prior length")?;
+            let delta = read_tokens(&mut r)?;
+            let gen = read_tokens(&mut r)?;
+            Record::Turn { session, prior_len, delta, gen }
+        }
+        REC_SET => {
+            let session = r.u64().map_err(|_| "truncated session id")?;
+            let transcript = read_tokens(&mut r)?;
+            Record::Set { session, transcript }
+        }
+        REC_END => {
+            let session = r.u64().map_err(|_| "truncated session id")?;
+            Record::End { session }
+        }
+        other => return Err(format!("unknown record kind {other}")),
+    };
+    if !r.is_exhausted() {
+        return Err("trailing bytes after record payload".to_string());
+    }
+    Ok(rec)
+}
+
+impl Journal {
+    /// Open (or create) the journal at `cfg.dir`, replaying every segment
+    /// in order.  Returns the journal ready for appends plus the replayed
+    /// session set.  A torn tail on the *last* segment is truncated in
+    /// place (counted in [`JournalStats::truncated_tails`]); any other
+    /// invalid record is a typed [`JournalError::Corrupt`].
+    pub fn open(cfg: JournalConfig) -> Result<(Journal, Replay), JournalError> {
+        fs::create_dir_all(&cfg.dir)?;
+        let mut segments: Vec<u64> = Vec::new();
+        for entry in fs::read_dir(&cfg.dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".tmp") {
+                // Leftover of an interrupted compaction: never renamed,
+                // so never authoritative.  Discard.
+                let _ = fs::remove_file(entry.path());
+                continue;
+            }
+            if let Some(k) = parse_segment_name(&name) {
+                segments.push(k);
+            }
+        }
+        segments.sort_unstable();
+
+        let mut replay = Replay::default();
+        let mut stats = JournalStats::default();
+        let mut sealed_bytes = 0u64;
+        let mut active_bytes = 0u64;
+        let n = segments.len();
+        for (i, &k) in segments.iter().enumerate() {
+            let last = i + 1 == n;
+            let path = cfg.dir.join(segment_name(k));
+            let kept = replay_segment(&path, last, &mut replay, &mut stats)?;
+            if last {
+                active_bytes = kept;
+            } else {
+                sealed_bytes += kept;
+            }
+        }
+
+        let seg_index = segments.last().copied().unwrap_or(0);
+        let path = cfg.dir.join(segment_name(seg_index));
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        sync_dir(&cfg.dir)?;
+
+        let mut journal = Journal {
+            dir: cfg.dir,
+            fsync: cfg.fsync,
+            segment_bytes: cfg.segment_bytes.max(1),
+            file,
+            seg_index,
+            seg_bytes: active_bytes,
+            sealed_bytes,
+            last_turn: replay.last_turn.clone(),
+            last_sync: Instant::now(),
+            dirty: false,
+            faults: None,
+            stats,
+        };
+        if journal.seg_bytes >= journal.segment_bytes {
+            journal.rotate()?;
+        }
+        Ok((journal, replay))
+    }
+
+    /// Attach a fault plan so tests can drive the four crash windows
+    /// (`JournalBeforeAppend` / `JournalAfterAppend` / `JournalTornWrite`
+    /// / `JournalLostFsync`).
+    pub fn set_faults(&mut self, faults: Option<Arc<FaultPlan>>) {
+        self.faults = faults;
+    }
+
+    pub fn stats(&self) -> JournalStats {
+        self.stats
+    }
+
+    /// Record a completed turn: the transcript for `session` was
+    /// `prior_len` tokens and grew by `delta ++ gen`.  Must be called
+    /// *before* the turn is acked to the client — that ordering is the
+    /// whole durability contract.
+    pub fn append_turn(
+        &mut self,
+        session: u64,
+        prior_len: u32,
+        delta: &[i32],
+        gen: &[i32],
+    ) -> Result<(), JournalError> {
+        let mut payload = Vec::with_capacity(16 + 4 * (delta.len() + gen.len()));
+        payload.extend_from_slice(&session.to_le_bytes());
+        payload.extend_from_slice(&prior_len.to_le_bytes());
+        push_tokens(&mut payload, delta);
+        push_tokens(&mut payload, gen);
+        self.append(REC_TURN, &payload)?;
+        self.last_turn.insert(session, (delta.to_vec(), gen.to_vec()));
+        Ok(())
+    }
+
+    /// Record the full transcript for `session` (migration landings,
+    /// recovery reconciles — anywhere the mirror is *set*, not extended).
+    pub fn append_set(&mut self, session: u64, transcript: &[i32]) -> Result<(), JournalError> {
+        let mut payload = Vec::with_capacity(12 + 4 * transcript.len());
+        payload.extend_from_slice(&session.to_le_bytes());
+        push_tokens(&mut payload, transcript);
+        self.append(REC_SET, &payload)?;
+        self.last_turn.remove(&session);
+        Ok(())
+    }
+
+    /// Record that `session` ended; replay forgets it.
+    pub fn append_end(&mut self, session: u64) -> Result<(), JournalError> {
+        self.append(REC_END, &session.to_le_bytes())?;
+        self.last_turn.remove(&session);
+        Ok(())
+    }
+
+    /// Count a router-side retry dedup (the replayed last-turn window
+    /// answered a duplicate without touching a shard).
+    pub fn note_dedup(&mut self) {
+        self.stats.deduped += 1;
+    }
+
+    /// Force any batched-but-unsynced bytes to disk.
+    pub fn flush(&mut self) -> Result<(), JournalError> {
+        if self.dirty {
+            self.file.sync_all()?;
+            self.dirty = false;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+
+    fn append(&mut self, kind: u8, payload: &[u8]) -> Result<(), JournalError> {
+        let bytes = encode_record(kind, payload);
+        if let Some(action) = self.faults.as_ref().and_then(|f| f.fire_local(Point::JournalBeforeAppend)) {
+            let _ = action;
+            self.stats.append_errors += 1;
+            return Err(JournalError::Io(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "injected crash before journal append",
+            )));
+        }
+        if let Some(action) = self.faults.as_ref().and_then(|f| f.fire_local(Point::JournalTornWrite)) {
+            let _ = action;
+            // Half the record reaches the file — the torn-tail physics a
+            // real crash mid-write produces — then the process "dies".
+            let half = bytes.len() / 2;
+            self.file.write_all(&bytes[..half])?;
+            self.file.sync_all()?;
+            self.stats.append_errors += 1;
+            return Err(JournalError::Io(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "injected torn write during journal append",
+            )));
+        }
+        if let Err(e) = self.file.write_all(&bytes) {
+            self.stats.append_errors += 1;
+            return Err(JournalError::Io(e));
+        }
+        self.seg_bytes += bytes.len() as u64;
+        self.stats.appended += 1;
+        self.dirty = true;
+        self.maybe_sync()?;
+        if let Some(action) = self.faults.as_ref().and_then(|f| f.fire_local(Point::JournalAfterAppend)) {
+            let _ = action;
+            // The record IS durable — force it — but the caller never
+            // hears, so the turn is journaled-but-unacked.
+            self.file.sync_all()?;
+            self.dirty = false;
+            self.stats.append_errors += 1;
+            return Err(JournalError::Io(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "injected crash after journal append, before ack",
+            )));
+        }
+        if self.seg_bytes >= self.segment_bytes {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    fn maybe_sync(&mut self) -> Result<(), JournalError> {
+        let due = match self.fsync {
+            FsyncPolicy::PerRecord => true,
+            FsyncPolicy::Batched(ms) => self.last_sync.elapsed() >= Duration::from_millis(ms),
+            FsyncPolicy::Off => false,
+        };
+        if due && self.dirty {
+            if self.faults.as_ref().and_then(|f| f.fire_local(Point::JournalLostFsync)).is_some() {
+                // Lying disk: pretend the sync happened.
+                self.last_sync = Instant::now();
+                return Ok(());
+            }
+            self.file.sync_all()?;
+            self.dirty = false;
+            self.last_sync = Instant::now();
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<(), JournalError> {
+        self.file.sync_all()?;
+        self.dirty = false;
+        self.sealed_bytes += self.seg_bytes;
+        self.seg_index += 1;
+        let path = self.dir.join(segment_name(self.seg_index));
+        self.file = OpenOptions::new().create(true).append(true).open(path)?;
+        self.seg_bytes = 0;
+        sync_dir(&self.dir)?;
+        Ok(())
+    }
+
+    /// Compact when sealed bytes exceed twice the live set (the spill
+    /// tier's live-ratio rule), given the authoritative live transcripts.
+    /// Returns whether a compaction ran.
+    pub fn maybe_compact(
+        &mut self,
+        sessions: &HashMap<u64, Vec<i32>>,
+    ) -> Result<bool, JournalError> {
+        if self.sealed_bytes <= self.segment_bytes {
+            return Ok(false);
+        }
+        let live: u64 = sessions.values().map(|t| 25 + 4 * t.len() as u64).sum();
+        if self.sealed_bytes <= live.saturating_mul(2) {
+            return Ok(false);
+        }
+        self.compact(sessions)?;
+        Ok(true)
+    }
+
+    /// Rewrite the journal as one snapshot segment.  Each session becomes
+    /// a `Set` of its transcript — except when its remembered last turn
+    /// still forms the transcript's suffix, in which case we write
+    /// `Set(prefix)` + `Turn(last)` so the append-vs-ack dedup window
+    /// survives the rewrite.
+    pub fn compact(&mut self, sessions: &HashMap<u64, Vec<i32>>) -> Result<(), JournalError> {
+        self.file.sync_all()?;
+        self.dirty = false;
+        let snap_index = self.seg_index + 1;
+        let snap_name = segment_name(snap_index);
+        let tmp_path = self.dir.join(format!("{snap_name}.tmp"));
+        let final_path = self.dir.join(&snap_name);
+
+        let mut snap = File::create(&tmp_path)?;
+        let mut snap_bytes = 0u64;
+        let mut ids: Vec<u64> = sessions.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let transcript = &sessions[&id];
+            let records = match self.last_turn.get(&id) {
+                Some((delta, gen))
+                    if {
+                        let tail = delta.len() + gen.len();
+                        transcript.len() >= tail
+                            && transcript[transcript.len() - tail..transcript.len() - gen.len()]
+                                == delta[..]
+                            && transcript[transcript.len() - gen.len()..] == gen[..]
+                    } =>
+                {
+                    let prior = transcript.len() - delta.len() - gen.len();
+                    let mut set_payload = Vec::new();
+                    set_payload.extend_from_slice(&id.to_le_bytes());
+                    push_tokens(&mut set_payload, &transcript[..prior]);
+                    let mut turn_payload = Vec::new();
+                    turn_payload.extend_from_slice(&id.to_le_bytes());
+                    turn_payload.extend_from_slice(&(prior as u32).to_le_bytes());
+                    push_tokens(&mut turn_payload, delta);
+                    push_tokens(&mut turn_payload, gen);
+                    vec![
+                        encode_record(REC_SET, &set_payload),
+                        encode_record(REC_TURN, &turn_payload),
+                    ]
+                }
+                _ => {
+                    let mut payload = Vec::new();
+                    payload.extend_from_slice(&id.to_le_bytes());
+                    push_tokens(&mut payload, transcript);
+                    vec![encode_record(REC_SET, &payload)]
+                }
+            };
+            for rec in records {
+                snap.write_all(&rec)?;
+                snap_bytes += rec.len() as u64;
+            }
+        }
+        snap.sync_all()?;
+        drop(snap);
+        fs::rename(&tmp_path, &final_path)?;
+        sync_dir(&self.dir)?;
+
+        // Old segments (everything below the snapshot) are now dead.
+        for k in 0..snap_index {
+            let p = self.dir.join(segment_name(k));
+            if p.exists() {
+                fs::remove_file(p)?;
+            }
+        }
+        self.seg_index = snap_index + 1;
+        let active = self.dir.join(segment_name(self.seg_index));
+        self.file = OpenOptions::new().create(true).append(true).open(active)?;
+        self.seg_bytes = 0;
+        self.sealed_bytes = snap_bytes;
+        sync_dir(&self.dir)?;
+        self.stats.compactions += 1;
+        Ok(())
+    }
+}
+
+/// Replay one segment file into `replay`.  Returns how many bytes of the
+/// file are valid (the truncation point when a torn tail is found on the
+/// last segment).
+fn replay_segment(
+    path: &Path,
+    last: bool,
+    replay: &mut Replay,
+    stats: &mut JournalStats,
+) -> Result<u64, JournalError> {
+    let data = match fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(JournalError::Io(e)),
+    };
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let total = data.len();
+    let mut off = 0usize;
+    let mut torn = false;
+    while off < total {
+        let rem = total - off;
+        if rem < REC_MIN {
+            if last {
+                torn = true;
+                break;
+            }
+            return Err(JournalError::Corrupt {
+                segment: name,
+                offset: off as u64,
+                reason: format!("{rem} trailing bytes, too short for any record"),
+            });
+        }
+        let len =
+            u32::from_le_bytes([data[off], data[off + 1], data[off + 2], data[off + 3]]) as usize;
+        if len == 0 || len > MAX_RECORD_BYTES {
+            // A torn append writes a short file, never a garbage length:
+            // always corruption.
+            return Err(JournalError::Corrupt {
+                segment: name,
+                offset: off as u64,
+                reason: format!("record length {len} out of range"),
+            });
+        }
+        let full = 4 + len + 8;
+        if rem < full {
+            if last {
+                torn = true;
+                break;
+            }
+            return Err(JournalError::Corrupt {
+                segment: name,
+                offset: off as u64,
+                reason: "record extends past end of sealed segment".to_string(),
+            });
+        }
+        let body = &data[off + 4..off + 4 + len];
+        let want = u64::from_le_bytes(
+            data[off + 4 + len..off + full].try_into().expect("8-byte checksum slice"),
+        );
+        if fnv1a64(body) != want {
+            // A bad checksum is a torn write only if it is the very last
+            // record of the last segment (its tail bytes simply never
+            // landed); anywhere else the segment is lying.
+            if last && off + full == total {
+                torn = true;
+                break;
+            }
+            return Err(JournalError::Corrupt {
+                segment: name,
+                offset: off as u64,
+                reason: "record checksum mismatch".to_string(),
+            });
+        }
+        let kind = body[0];
+        let rec = decode_record(kind, &body[1..]).map_err(|reason| JournalError::Corrupt {
+            segment: name.clone(),
+            offset: off as u64,
+            reason,
+        })?;
+        apply(rec, replay, stats, &name, off as u64)?;
+        off += full;
+    }
+    if torn {
+        stats.truncated_tails += 1;
+        let f = OpenOptions::new().write(true).open(path)?;
+        f.set_len(off as u64)?;
+        f.sync_all()?;
+    }
+    Ok(off as u64)
+}
+
+fn apply(
+    rec: Record,
+    replay: &mut Replay,
+    stats: &mut JournalStats,
+    segment: &str,
+    offset: u64,
+) -> Result<(), JournalError> {
+    match rec {
+        Record::Turn { session, prior_len, delta, gen } => {
+            let m = replay.sessions.entry(session).or_default();
+            let prior = prior_len as usize;
+            if prior > m.len() {
+                return Err(JournalError::Corrupt {
+                    segment: segment.to_string(),
+                    offset,
+                    reason: format!(
+                        "turn record expects transcript length {prior}, have {}",
+                        m.len()
+                    ),
+                });
+            }
+            let tail = delta.len() + gen.len();
+            let dup = m.len() == prior + tail
+                && m[prior..prior + delta.len()] == delta[..]
+                && m[prior + delta.len()..] == gen[..];
+            if dup {
+                // The same turn journaled twice — the process crashed
+                // between append and ack, the client retried, and both
+                // appends landed.  Apply once.
+                stats.deduped += 1;
+            } else {
+                m.truncate(prior);
+                m.extend_from_slice(&delta);
+                m.extend_from_slice(&gen);
+                stats.replayed += 1;
+            }
+            replay.last_turn.insert(session, (delta, gen));
+        }
+        Record::Set { session, transcript } => {
+            replay.sessions.insert(session, transcript);
+            replay.last_turn.remove(&session);
+            stats.replayed += 1;
+        }
+        Record::End { session } => {
+            replay.sessions.remove(&session);
+            replay.last_turn.remove(&session);
+            stats.replayed += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::faults::{FaultAction, Rule};
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lh_journal_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg(dir: &Path) -> JournalConfig {
+        JournalConfig { dir: dir.to_path_buf(), fsync: FsyncPolicy::PerRecord, segment_bytes: 1 << 20 }
+    }
+
+    #[test]
+    fn empty_journal_opens_clean() {
+        let dir = scratch("empty");
+        let (j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert!(replay.sessions.is_empty());
+        assert!(replay.last_turn.is_empty());
+        assert_eq!(j.stats(), JournalStats::default());
+    }
+
+    #[test]
+    fn turns_survive_reopen_bit_exact() {
+        let dir = scratch("reopen");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(7, 0, &[1, 2], &[3, 4, 5]).unwrap();
+            j.append_turn(7, 5, &[6], &[7, 8]).unwrap();
+            j.append_turn(9, 0, &[-1], &[-2]).unwrap();
+            assert_eq!(j.stats().appended, 3);
+        }
+        let (j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&7], vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(replay.sessions[&9], vec![-1, -2]);
+        assert_eq!(replay.last_turn[&7], (vec![6], vec![7, 8]));
+        assert_eq!(j.stats().replayed, 3);
+        assert_eq!(j.stats().truncated_tails, 0);
+    }
+
+    #[test]
+    fn duplicate_turn_record_is_deduped_on_replay() {
+        let dir = scratch("dedup");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(1, 0, &[10], &[11, 12]).unwrap();
+            // The crash-between-append-and-ack retry: same turn again.
+            j.append_turn(1, 0, &[10], &[11, 12]).unwrap();
+        }
+        let (j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&1], vec![10, 11, 12], "applied exactly once");
+        assert_eq!(j.stats().deduped, 1);
+        assert_eq!(j.stats().replayed, 1);
+    }
+
+    #[test]
+    fn end_record_removes_the_session() {
+        let dir = scratch("end");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(4, 0, &[1], &[2]).unwrap();
+            j.append_end(4).unwrap();
+            j.append_turn(5, 0, &[3], &[4]).unwrap();
+        }
+        let (_, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert!(!replay.sessions.contains_key(&4));
+        assert!(!replay.last_turn.contains_key(&4));
+        assert_eq!(replay.sessions[&5], vec![3, 4]);
+    }
+
+    #[test]
+    fn set_record_replaces_and_clears_dedup_window() {
+        let dir = scratch("set");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(2, 0, &[1], &[2]).unwrap();
+            j.append_set(2, &[9, 9, 9]).unwrap();
+        }
+        let (_, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&2], vec![9, 9, 9]);
+        assert!(!replay.last_turn.contains_key(&2), "set clears the turn window");
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_exactly_at_last_valid_record() {
+        let dir = scratch("torn");
+        let valid_len;
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(3, 0, &[1, 2, 3], &[4]).unwrap();
+            valid_len = fs::metadata(dir.join("wal0.log")).unwrap().len();
+            j.append_turn(3, 4, &[5], &[6]).unwrap();
+        }
+        // Crash mid-second-append: only part of the record landed.
+        let full = fs::metadata(dir.join("wal0.log")).unwrap().len();
+        let f = OpenOptions::new().write(true).open(dir.join("wal0.log")).unwrap();
+        f.set_len(valid_len + (full - valid_len) / 2).unwrap();
+        drop(f);
+
+        let (mut j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&3], vec![1, 2, 3, 4], "only the complete turn survives");
+        assert_eq!(j.stats().truncated_tails, 1);
+        assert_eq!(
+            fs::metadata(dir.join("wal0.log")).unwrap().len(),
+            valid_len,
+            "file truncated back to the last valid record"
+        );
+        // The journal keeps working after truncation.
+        j.append_turn(3, 4, &[5], &[6]).unwrap();
+        let (_, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&3], vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn flipped_bit_in_sealed_record_is_a_typed_error() {
+        let dir = scratch("flip");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(6, 0, &[1], &[2]).unwrap();
+            j.append_turn(6, 2, &[3], &[4]).unwrap();
+        }
+        // Flip a payload byte of the FIRST record: not the tail, so this
+        // must be corruption, not a torn write.
+        let mut data = fs::read(dir.join("wal0.log")).unwrap();
+        data[6] ^= 0x40;
+        fs::write(dir.join("wal0.log"), &data).unwrap();
+        match Journal::open(cfg(&dir)) {
+            Err(JournalError::Corrupt { offset, reason, .. }) => {
+                assert_eq!(offset, 0);
+                assert!(reason.contains("checksum"), "reason: {reason}");
+            }
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn flipped_bit_in_final_record_reads_as_torn_tail() {
+        // A checksum failure on the very last bytes of the last segment
+        // is indistinguishable from a write whose tail never landed, so
+        // the journal takes the forgiving branch: truncate, don't refuse.
+        let dir = scratch("flip_tail");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(6, 0, &[1], &[2]).unwrap();
+            j.append_turn(6, 2, &[3], &[4]).unwrap();
+        }
+        let path = dir.join("wal0.log");
+        let mut data = fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0x01;
+        fs::write(&path, &data).unwrap();
+        let (j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&6], vec![1, 2], "damaged final record dropped");
+        assert_eq!(j.stats().truncated_tails, 1);
+    }
+
+    #[test]
+    fn garbage_length_field_is_corruption_even_at_the_tail() {
+        let dir = scratch("badlen");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            j.append_turn(8, 0, &[1], &[2]).unwrap();
+        }
+        let path = dir.join("wal0.log");
+        let mut data = fs::read(&path).unwrap();
+        // Append a full-size bogus header claiming an absurd record.
+        data.extend_from_slice(&u32::MAX.to_le_bytes());
+        data.extend_from_slice(&[0u8; 16]);
+        fs::write(&path, &data).unwrap();
+        match Journal::open(cfg(&dir)) {
+            Err(JournalError::Corrupt { reason, .. }) => {
+                assert!(reason.contains("out of range"), "reason: {reason}");
+            }
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn gap_in_turn_chain_is_a_typed_error() {
+        let dir = scratch("gap");
+        {
+            let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+            // prior_len 5 on an empty transcript: the prefix never landed.
+            j.append_turn(1, 5, &[1], &[2]).unwrap();
+        }
+        match Journal::open(cfg(&dir)) {
+            Err(JournalError::Corrupt { reason, .. }) => {
+                assert!(reason.contains("expects transcript length"), "reason: {reason}");
+            }
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn replay_crosses_segment_rotation_boundary() {
+        let dir = scratch("rotate");
+        {
+            let mut c = cfg(&dir);
+            c.segment_bytes = 64; // force rotation every record or two
+            let (mut j, _) = Journal::open(c).unwrap();
+            for t in 0..10i32 {
+                j.append_turn(1, (2 * t) as u32, &[t], &[t + 100]).unwrap();
+            }
+        }
+        let segs = fs::read_dir(&dir).unwrap().count();
+        assert!(segs > 2, "expected multiple segments, found {segs}");
+        let (_, replay) = Journal::open(cfg(&dir)).unwrap();
+        let want: Vec<i32> = (0..10).flat_map(|t| [t, t + 100]).collect();
+        assert_eq!(replay.sessions[&1], want);
+        assert_eq!(replay.last_turn[&1], (vec![9], vec![109]));
+    }
+
+    #[test]
+    fn compaction_reclaims_bytes_and_preserves_replay() {
+        let dir = scratch("compact");
+        let mut c = cfg(&dir);
+        c.segment_bytes = 128;
+        let (mut j, _) = Journal::open(c.clone()).unwrap();
+        let mut live: HashMap<u64, Vec<i32>> = HashMap::new();
+        for t in 0..40i32 {
+            let sess = (t % 2) as u64;
+            let m = live.entry(sess).or_default();
+            let prior = m.len() as u32;
+            j.append_turn(sess, prior, &[t], &[t * 10]).unwrap();
+            m.extend_from_slice(&[t, t * 10]);
+        }
+        // Overwrite-heavy history: sealed bytes dwarf the live set only
+        // after enough turns; force the decision explicitly.
+        assert!(j.maybe_compact(&live).unwrap(), "live-ratio trigger should fire");
+        assert_eq!(j.stats().compactions, 1);
+        let disk: u64 = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().metadata().unwrap().len())
+            .sum();
+        let live_bytes: u64 = live.values().map(|t| 25 + 4 * t.len() as u64).sum();
+        assert!(
+            disk <= live_bytes * 3,
+            "compacted journal should be near the live set: disk={disk} live={live_bytes}"
+        );
+        // Appends continue after compaction and replay sees everything.
+        j.append_turn(0, live[&0].len() as u32, &[777], &[778]).unwrap();
+        drop(j);
+        let (_, replay) = Journal::open(c).unwrap();
+        let mut want0 = live[&0].clone();
+        want0.extend_from_slice(&[777, 778]);
+        assert_eq!(replay.sessions[&0], want0);
+        assert_eq!(replay.sessions[&1], live[&1]);
+    }
+
+    #[test]
+    fn compaction_preserves_the_dedup_window() {
+        let dir = scratch("compact_dedup");
+        let c = cfg(&dir);
+        let (mut j, _) = Journal::open(c.clone()).unwrap();
+        let mut live: HashMap<u64, Vec<i32>> = HashMap::new();
+        j.append_turn(1, 0, &[1, 2], &[3]).unwrap();
+        live.insert(1, vec![1, 2, 3]);
+        j.compact(&live).unwrap();
+        drop(j);
+        let (_, replay) = Journal::open(c).unwrap();
+        assert_eq!(replay.sessions[&1], vec![1, 2, 3]);
+        assert_eq!(
+            replay.last_turn.get(&1),
+            Some(&(vec![1, 2], vec![3])),
+            "the last-turn dedup window must survive compaction"
+        );
+    }
+
+    #[test]
+    fn fault_points_drive_the_four_crash_windows() {
+        let dir = scratch("faults");
+        let (mut j, _) = Journal::open(cfg(&dir)).unwrap();
+        let plan = Arc::new(FaultPlan::new());
+        j.set_faults(Some(plan.clone()));
+
+        // (a) crash before append: nothing reaches the file.
+        plan.add_rule(Rule::once(Point::JournalBeforeAppend, FaultAction::SeverAfter));
+        assert!(j.append_turn(1, 0, &[1], &[2]).is_err());
+        assert_eq!(fs::metadata(dir.join("wal0.log")).unwrap().len(), 0);
+
+        // (b) torn write: half a record lands; replay truncates it away.
+        plan.add_rule(Rule::once(Point::JournalTornWrite, FaultAction::SeverAfter));
+        assert!(j.append_turn(1, 0, &[1], &[2]).is_err());
+        assert!(fs::metadata(dir.join("wal0.log")).unwrap().len() > 0);
+        drop(j);
+        let (mut j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert!(replay.sessions.is_empty(), "torn record must not replay");
+        assert_eq!(j.stats().truncated_tails, 1);
+
+        // (c) crash after append, before ack: the record IS durable.
+        j.set_faults(Some(plan.clone()));
+        plan.add_rule(Rule::once(Point::JournalAfterAppend, FaultAction::SeverAfter));
+        assert!(j.append_turn(1, 0, &[1], &[2]).is_err());
+        drop(j);
+        let (mut j, replay) = Journal::open(cfg(&dir)).unwrap();
+        assert_eq!(replay.sessions[&1], vec![1, 2], "append-before-ack record survives");
+        assert_eq!(replay.last_turn[&1], (vec![1], vec![2]), "and feeds the dedup window");
+
+        // (d) lost fsync: the append "succeeds" but durability was never
+        // forced — observable only as the skipped sync (the data may
+        // still reach disk on a clean close; the point is the hook).
+        j.set_faults(Some(plan.clone()));
+        plan.add_rule(Rule::once(Point::JournalLostFsync, FaultAction::SeverAfter));
+        j.append_turn(1, 2, &[3], &[4]).unwrap();
+        assert_eq!(plan.rules_pending(), 0, "every staged fault fired");
+        assert_eq!(plan.hits().len(), 4);
+    }
+
+    #[test]
+    fn fsync_ladder_smoke() {
+        for (name, policy) in [
+            ("per_record", FsyncPolicy::PerRecord),
+            ("batched", FsyncPolicy::Batched(5)),
+            ("off", FsyncPolicy::Off),
+        ] {
+            let dir = scratch(&format!("ladder_{name}"));
+            let mut c = cfg(&dir);
+            c.fsync = policy;
+            let (mut j, _) = Journal::open(c.clone()).unwrap();
+            for t in 0..5i32 {
+                j.append_turn(1, (2 * t) as u32, &[t], &[t]).unwrap();
+            }
+            j.flush().unwrap();
+            drop(j);
+            let (_, replay) = Journal::open(c).unwrap();
+            assert_eq!(replay.sessions[&1].len(), 10, "policy {name} lost records");
+        }
+    }
+}

@@ -14,6 +14,9 @@
 //! * [`store::Store`] — a byte-budgeted LRU session store with hit/miss
 //!   accounting and optional spill-to-disk through the existing
 //!   [`crate::runtime::checkpoint`] serialization.
+//! * [`journal::Journal`] — an append-only, checksummed write-ahead turn
+//!   journal: the crash-durability substrate the serve layer replays on
+//!   cold restart so acked turns survive a process death.
 //!
 //! The coordinator (`coordinator/server.rs`) wires both into
 //! `submit_in_session`: a resumed turn restores the stored state into a
@@ -21,8 +24,10 @@
 //! the whole transcript — while guaranteeing bit-identical tokens to a
 //! single uninterrupted generation (asserted in the server tests).
 
+pub mod journal;
 pub mod state;
 pub mod store;
 
+pub use journal::{Journal, JournalConfig, JournalError, JournalStats, Replay};
 pub use state::{Plane, SessionError, SessionState, FORMAT_VERSION, WIRE_MAGIC};
 pub use store::{Store, StoreConfig, StoreStats};

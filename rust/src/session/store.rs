@@ -8,9 +8,14 @@
 //! transcript.
 //!
 //! The disk tier is a **segmented spill log** with its own LRU and byte
-//! cap (`spill_budget_bytes`): evicted states append as self-describing
-//! records (`[u64 id][u32 len][wire blob]`) into segment files
-//! (`spill_%08u.seg`), capped at `segment_bytes` each.  Deletes are
+//! cap (`spill_budget_bytes`): evicted states append as self-describing,
+//! checksummed records (`[u64 id][u32 len][wire blob][u64 fnv1a64]`)
+//! into segment files (`spill_%08u.seg`), capped at `segment_bytes`
+//! each.  Each append is one buffered write followed by `sync_all`, so a
+//! process crash can tear at most the final record of the active segment
+//! — and re-index *quarantines* any record whose length or checksum does
+//! not verify (counted in [`StoreStats::quarantined`]) instead of
+//! serving a torn blob as session state.  Deletes are
 //! logical (the in-RAM index forgets the record); [`Store::maintain`]
 //! compacts sealed segments whose live ratio fell below one half by
 //! rewriting the surviving records into the active segment — run it from
@@ -32,6 +37,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use super::state::SessionState;
+use crate::util::bytes::fnv1a64;
 
 /// Store configuration.
 #[derive(Clone, Debug)]
@@ -75,6 +81,9 @@ pub struct StoreStats {
     pub spill_evictions: u64,
     /// Sealed segments rewritten by [`Store::maintain`].
     pub compactions: u64,
+    /// Spill records refused at re-index (length or checksum failed to
+    /// verify) — torn or corrupted blobs that were never served.
+    pub quarantined: u64,
 }
 
 struct Entry {
@@ -102,6 +111,9 @@ struct Segment {
 /// Per-record header: session id + payload length.
 const REC_HEADER: u64 = 8 + 4;
 
+/// Per-record trailer: fnv1a64 of the payload bytes.
+const REC_TRAILER: u64 = 8;
+
 /// The segmented spill log (disk tier).  All bookkeeping is in RAM;
 /// segment files hold only the blob records.
 struct DiskTier {
@@ -115,11 +127,24 @@ struct DiskTier {
     live_bytes: u64,
     /// recency index: spill tick -> session id (oldest first).
     recency: BTreeMap<u64, u64>,
+    /// Records refused at re-index (bad length or checksum).
+    quarantined: u64,
 }
 
 impl DiskTier {
     fn seg_path(dir: &Path, seg: u64) -> PathBuf {
         dir.join(format!("spill_{seg:08}.seg"))
+    }
+
+    /// fsync the spill directory so newly created / deleted segment files
+    /// are themselves durable (best-effort on non-unix).
+    fn sync_dir(dir: &Path) {
+        #[cfg(unix)]
+        if let Ok(f) = File::open(dir) {
+            let _ = f.sync_all();
+        }
+        #[cfg(not(unix))]
+        let _ = dir;
     }
 
     /// Open the tier, re-indexing any segments left by a previous
@@ -136,6 +161,7 @@ impl DiskTier {
             next_seg: 0,
             live_bytes: 0,
             recency: BTreeMap::new(),
+            quarantined: 0,
         };
         let mut seg_ids = Vec::new();
         if let Ok(rd) = std::fs::read_dir(&tier.dir) {
@@ -159,17 +185,30 @@ impl DiskTier {
             };
             let mut segment = Segment::default();
             let mut off = 0u64;
-            while (off + REC_HEADER) as usize <= bytes.len() {
+            while (off + REC_HEADER + REC_TRAILER) as usize <= bytes.len() {
                 let o = off as usize;
                 let id = u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
                 let len = u32::from_le_bytes(bytes[o + 8..o + 12].try_into().unwrap()) as u64;
-                if (off + REC_HEADER + len) as usize > bytes.len() {
+                let rec = REC_HEADER + len + REC_TRAILER;
+                if (off + rec) as usize > bytes.len() {
                     break; // truncated tail record: ignore it and stop
+                }
+                let blob = &bytes[o + 12..o + 12 + len as usize];
+                let sum_off = o + 12 + len as usize;
+                let sum =
+                    u64::from_le_bytes(bytes[sum_off..sum_off + 8].try_into().unwrap());
+                if fnv1a64(blob) != sum {
+                    // well-framed but its payload does not verify:
+                    // quarantine (never serve it) and keep scanning —
+                    // later records are still correctly framed.
+                    tier.quarantined += 1;
+                    off += rec;
+                    continue;
                 }
                 tick += 1;
                 // a later record for the same id supersedes the earlier one
                 if let Some(old) = tier.index.remove(&id) {
-                    let dead = REC_HEADER + old.len;
+                    let dead = REC_HEADER + old.len + REC_TRAILER;
                     if let Some(s) = tier.segments.get_mut(&old.seg) {
                         s.live -= dead;
                     } else if old.seg == seg {
@@ -180,9 +219,9 @@ impl DiskTier {
                 }
                 tier.index.insert(id, DiskEntry { seg, off, len, tick });
                 tier.recency.insert(tick, id);
-                segment.live += REC_HEADER + len;
-                tier.live_bytes += REC_HEADER + len;
-                off += REC_HEADER + len;
+                segment.live += rec;
+                tier.live_bytes += rec;
+                off += rec;
             }
             segment.total = off;
             tier.segments.insert(seg, segment);
@@ -222,7 +261,7 @@ impl DiskTier {
         match self.index.remove(&id) {
             None => false,
             Some(e) => {
-                let dead = REC_HEADER + e.len;
+                let dead = REC_HEADER + e.len + REC_TRAILER;
                 if let Some(s) = self.segments.get_mut(&e.seg) {
                     s.live -= dead;
                 }
@@ -239,21 +278,32 @@ impl DiskTier {
         self.forget(id);
         let seg = self.active_segment();
         let path = Self::seg_path(&self.dir, seg);
+        let mut record =
+            Vec::with_capacity((REC_HEADER + REC_TRAILER) as usize + blob.len());
+        record.extend_from_slice(&id.to_le_bytes());
+        record.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+        record.extend_from_slice(blob);
+        record.extend_from_slice(&fnv1a64(blob).to_le_bytes());
+        let new_file = self.segments.get(&seg).map(|s| s.total == 0).unwrap_or(true);
         let appended = OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .and_then(|mut f| {
-                f.write_all(&id.to_le_bytes())?;
-                f.write_all(&(blob.len() as u32).to_le_bytes())?;
-                f.write_all(blob)
+                // one write + one sync per spill: a crash can tear at
+                // most the final record, which re-index quarantines
+                f.write_all(&record)?;
+                f.sync_all()
             });
         if appended.is_err() {
             return false;
         }
+        if new_file {
+            Self::sync_dir(&self.dir);
+        }
         let s = self.segments.get_mut(&seg).expect("active segment exists");
         let off = s.total;
-        let rec = REC_HEADER + blob.len() as u64;
+        let rec = record.len() as u64;
         s.total += rec;
         s.live += rec;
         self.live_bytes += rec;
@@ -288,6 +338,11 @@ impl DiskTier {
         }
         let mut blob = vec![0u8; len as usize];
         f.read_exact(&mut blob).ok()?;
+        let mut sum = [0u8; REC_TRAILER as usize];
+        f.read_exact(&mut sum).ok()?;
+        if u64::from_le_bytes(sum) != fnv1a64(&blob) {
+            return None; // corrupted on disk: a miss, never garbage state
+        }
         Some(blob)
     }
 
@@ -345,6 +400,7 @@ impl DiskTier {
             }
             self.segments.remove(&seg);
             let _ = std::fs::remove_file(Self::seg_path(&self.dir, seg));
+            Self::sync_dir(&self.dir);
             compacted += 1;
         }
         compacted
@@ -375,15 +431,11 @@ impl Store {
             .as_ref()
             .and_then(|d| d.recency.keys().next_back().copied())
             .unwrap_or(0);
-        Store {
-            cfg,
-            entries: HashMap::new(),
-            recency: BTreeMap::new(),
-            used: 0,
-            tick,
-            disk,
-            stats: StoreStats::default(),
-        }
+        let stats = StoreStats {
+            quarantined: disk.as_ref().map(|d| d.quarantined).unwrap_or(0),
+            ..StoreStats::default()
+        };
+        Store { cfg, entries: HashMap::new(), recency: BTreeMap::new(), used: 0, tick, disk, stats }
     }
 
     /// Resident states (excludes spilled-to-disk sessions).
@@ -546,7 +598,7 @@ mod tests {
     /// On-disk record size of one `state()` blob (independent of tag/id:
     /// both are fixed-width in the wire format).
     fn rec_bytes(floats: &[f32]) -> u64 {
-        REC_HEADER + state(1, floats).to_wire_bytes().len() as u64
+        REC_HEADER + REC_TRAILER + state(1, floats).to_wire_bytes().len() as u64
     }
 
     #[test]
@@ -712,6 +764,52 @@ mod tests {
         let want: Vec<u32> = weird.iter().map(|f| f.to_bits()).collect();
         assert_eq!(bits, want);
         assert_eq!(st.maintain(), 0, "nothing left to compact");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_record_is_quarantined_on_reindex() {
+        let dir = tmp("quarantine");
+        let cfg = StoreConfig {
+            budget_bytes: 0, // every put spills immediately
+            spill_dir: Some(dir.clone()),
+            ..StoreConfig::default()
+        };
+        {
+            let mut st = Store::new(cfg.clone());
+            st.put(1, state(1, &[1.0; 8]));
+            st.put(2, state(2, &[2.0; 8]));
+        }
+        // flip a payload byte of the FIRST record on disk
+        let seg0 = DiskTier::seg_path(&dir, 0);
+        let mut bytes = std::fs::read(&seg0).unwrap();
+        bytes[REC_HEADER as usize + 3] ^= 0x10;
+        std::fs::write(&seg0, &bytes).unwrap();
+        let mut st = Store::new(cfg);
+        assert_eq!(st.stats.quarantined, 1);
+        assert!(!st.contains(1), "corrupt blob must never be served");
+        let got = st.take(2).expect("well-framed later record still restores");
+        assert_eq!(got.tokens_seen, 102);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn take_refuses_a_blob_corrupted_after_indexing() {
+        let dir = tmp("take_corrupt");
+        let cfg = StoreConfig {
+            budget_bytes: 0,
+            spill_dir: Some(dir.clone()),
+            ..StoreConfig::default()
+        };
+        let mut st = Store::new(cfg);
+        st.put(1, state(1, &[1.0; 8]));
+        let seg0 = DiskTier::seg_path(&dir, 0);
+        let mut bytes = std::fs::read(&seg0).unwrap();
+        let cut = bytes.len() - (REC_TRAILER as usize + 4); // inside the blob
+        bytes[cut] ^= 0x01;
+        std::fs::write(&seg0, &bytes).unwrap();
+        assert!(st.take(1).is_none(), "checksum mismatch is a miss, not garbage state");
+        assert_eq!(st.stats.misses, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -97,6 +97,22 @@ pub fn splitmix64(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Constant-time byte-slice equality for secret comparison (the serve
+/// handshake's shared-secret token): the comparison touches every byte of
+/// equal-length inputs regardless of where they first differ, so response
+/// timing does not leak a prefix-match oracle.  Lengths are compared
+/// first — length is not secret here (tokens are operator-chosen).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut acc: u8 = 0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc |= x ^ y;
+    }
+    acc == 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +136,15 @@ mod tests {
         assert_eq!(r.string(), Ok("hi".to_string()));
         assert!(r.is_exhausted());
         assert_eq!(r.u8(), Err(ReadErr::Truncated));
+    }
+
+    #[test]
+    fn ct_eq_matches_plain_equality() {
+        assert!(ct_eq(b"", b""));
+        assert!(ct_eq(b"secret", b"secret"));
+        assert!(!ct_eq(b"secret", b"secret "), "length mismatch");
+        assert!(!ct_eq(b"secret", b"secreT"), "last byte differs");
+        assert!(!ct_eq(b"Xecret", b"secret"), "first byte differs");
     }
 
     #[test]

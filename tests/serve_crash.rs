@@ -1,0 +1,485 @@
+//! Crash-durability acceptance harness: the write-ahead turn journal
+//! under process death.
+//!
+//! Three crash shapes, each checked against an uninterrupted reference
+//! coordinator carrying the same seed (so every engine in play is
+//! bit-identical):
+//!
+//! * **Router death mid-load** — the router instance (and its in-memory
+//!   transcript mirror) is dropped while concurrent sessions are
+//!   mid-conversation, the shards keep running, and a fresh router is
+//!   rebuilt solely from journal replay.  Every acked turn must survive
+//!   bit-identically, a retry of the last acked turn must be served from
+//!   the replay-dedup window *without touching any shard* (exactly-once),
+//!   and the conversations must continue as if nothing happened.
+//! * **Full-cluster cold restart** — front, router and every shard shut
+//!   down; the whole cluster relaunches from `--journal-dir` with empty
+//!   shards.  The census must reconcile (each journaled session resumes
+//!   on exactly one shard via transcript re-prefill) with zero lost
+//!   acked turns.
+//! * **Torn tail / flipped bit** — a partial record appended by a crash
+//!   mid-write is truncated at open (and counted); a checksum-corrupted
+//!   record in the sealed region is a *typed* [`JournalError::Corrupt`]
+//!   refusal — at the journal layer and surfaced through the serve-layer
+//!   launcher — never a panic, never silently served.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use laughing_hyena::config::{FsyncPolicy, ServeConfig};
+use laughing_hyena::coordinator::server::spawn;
+use laughing_hyena::coordinator::{CoordinatorHandle, SlotEngine};
+use laughing_hyena::engine::recurrent::RecurrentEngine;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::obs::registry::{MetricValue, Snapshot};
+use laughing_hyena::serve::wire;
+use laughing_hyena::serve::{
+    BreakerConfig, Cluster, ErrCode, Frame, FrontConfig, FrontServer, RouteError, Router,
+    ShardServer,
+};
+use laughing_hyena::session::{Journal, JournalConfig, JournalError};
+
+/// Every shard, every restarted shard, and the reference coordinator
+/// share this seed — identical weights are what make "resumes
+/// bit-identically" a meaningful claim.
+const SEED: u64 = 11;
+
+/// Tokens requested per turn.
+const MAX_NEW: usize = 3;
+
+/// Deadline budget: generous, nothing in this harness is meant to shed.
+const PATIENT_MS: u32 = 120_000;
+
+/// A fresh scratch directory under the system temp dir, cleared of any
+/// residue from a previous run of the same test.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lh_crash_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 4, linger_ms: 1, ..ServeConfig::default() }
+}
+
+/// The journaled variant: every acked turn is durable before the ack
+/// (per-record fsync keeps the crash windows exact for the test).
+fn journaled_cfg(jdir: &Path) -> ServeConfig {
+    ServeConfig {
+        journal_dir: Some(jdir.to_string_lossy().into_owned()),
+        journal_fsync: FsyncPolicy::PerRecord,
+        ..cfg()
+    }
+}
+
+fn jcfg(jdir: &Path) -> JournalConfig {
+    let mut c = JournalConfig::new(jdir);
+    c.fsync = FsyncPolicy::PerRecord;
+    c
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// The uninterrupted baseline: one coordinator, never crashed.
+fn reference() -> CoordinatorHandle {
+    let shape = shape();
+    spawn(move || Box::new(RecurrentEngine::new(&shape, 4, SEED)) as Box<dyn SlotEngine>, cfg())
+}
+
+fn ref_turn(h: &CoordinatorHandle, sid: u64, delta: Vec<i32>, n: usize) -> Vec<i32> {
+    h.submit_in_session(sid, delta, n)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(120))
+        .unwrap()
+        .tokens
+}
+
+/// An `n`-shard journaled cluster + front door.
+fn launch(n: usize, serve_cfg: &ServeConfig) -> (Vec<ShardServer>, FrontServer) {
+    let cluster = Cluster::launch_native_with(
+        n,
+        &shape(),
+        4,
+        SEED,
+        serve_cfg,
+        BreakerConfig { cooldown: Duration::ZERO, ..BreakerConfig::default() },
+        None,
+    )
+    .unwrap();
+    let (shards, router) = cluster.into_parts();
+    let front = FrontServer::spawn(
+        router,
+        FrontConfig { max_inflight: 32, probe_interval: None, ..FrontConfig::default() },
+    )
+    .unwrap();
+    (shards, front)
+}
+
+/// One wire-level turn through the front door; a non-typed failure is a
+/// harness bug, not chaos.
+fn wire_turn(addr: SocketAddr, sid: u64, delta: &[i32]) -> Result<Vec<i32>, ErrCode> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    match wire::read_frame(&mut s).unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello greeting, got {other:?}"),
+    }
+    wire::write_frame(
+        &mut s,
+        &Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new: MAX_NEW as u32,
+            deadline_ms: PATIENT_MS,
+            delta: delta.to_vec(),
+        },
+    )
+    .unwrap();
+    let mut toks = Vec::new();
+    loop {
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Token { token } => toks.push(token),
+            Frame::Done { .. } => return Ok(toks),
+            Frame::Error { code, .. } => return Err(code),
+            other => panic!("expected Token/Done/Error, got {other:?}"),
+        }
+    }
+}
+
+fn counter(snap: &Snapshot, name: &str) -> u64 {
+    match snap.entries.get(name) {
+        Some(MetricValue::Counter(v)) | Some(MetricValue::Gauge(v)) => *v,
+        _ => 0,
+    }
+}
+
+/// Poll until `pred` holds or the timeout elapses (then panic with `what`).
+fn wait_until(what: &str, timeout: Duration, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + timeout;
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// deterministic per-session turn deltas (the reference replays the same)
+fn turn1(sid: u64) -> Vec<i32> {
+    vec![2 + (sid % 9) as i32; 4]
+}
+fn turn2(sid: u64) -> Vec<i32> {
+    vec![1 + (sid % 6) as i32, 8]
+}
+fn turn3(sid: u64) -> Vec<i32> {
+    vec![5, 1 + (sid % 4) as i32]
+}
+
+/// The tentpole: 24 concurrent sessions converse through the front door,
+/// then the router "process" dies mid-load — the instance is dropped,
+/// its in-memory mirror and dedup state gone, while every shard keeps
+/// running.  A fresh router is rebuilt *solely* from journal replay and
+/// must (a) hold every acked turn byte-for-byte in its rebuilt mirror,
+/// (b) serve a client retry of the last acked turn from the replay-dedup
+/// window bit-identically *without contacting any shard* — the
+/// crash-between-append-and-ack window closed exactly once — and
+/// (c) continue every conversation bit-identically against an
+/// uninterrupted reference coordinator.
+#[test]
+fn router_death_mid_load_resumes_every_acked_turn_exactly_once() {
+    let jdir = tmp("router_death");
+    let serve_cfg = journaled_cfg(&jdir);
+    let (shards, front) = launch(2, &serve_cfg);
+    let addr = front.addr();
+    let n_sessions = 24u64;
+
+    // phase 1, concurrent: every session opens; even sessions get two
+    // turns deep, odd sessions one — the crash lands mid-conversation at
+    // mixed depths
+    let workers: Vec<_> = (1..=n_sessions)
+        .map(|sid| {
+            thread::spawn(move || {
+                let mut log: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+                let d1 = turn1(sid);
+                let g1 = wire_turn(addr, sid, &d1).expect("turn 1 refused");
+                assert_eq!(g1.len(), MAX_NEW);
+                log.push((d1, g1));
+                if sid % 2 == 0 {
+                    let d2 = turn2(sid);
+                    let g2 = wire_turn(addr, sid, &d2).expect("turn 2 refused");
+                    assert_eq!(g2.len(), MAX_NEW);
+                    log.push((d2, g2));
+                }
+                (sid, log)
+            })
+        })
+        .collect();
+    let mut logs: HashMap<u64, Vec<(Vec<i32>, Vec<i32>)>> = HashMap::new();
+    for w in workers {
+        let (sid, log) = w.join().expect("load worker panicked");
+        logs.insert(sid, log);
+    }
+    let phase1_turns: u64 = logs.values().map(|l| l.len() as u64).sum();
+
+    // the crash: drop the front and with it the router — mirror, resident
+    // pins and dedup state all gone.  The shards never notice.
+    front.shutdown();
+
+    // the restart: a fresh router over the same shard addresses, state
+    // rebuilt solely by replaying the journal
+    let addrs: Vec<SocketAddr> = shards.iter().map(|s| s.addr()).collect();
+    let mut router = Router::new(&addrs).unwrap();
+    let (journal, replay) = Journal::open(jcfg(&jdir)).unwrap();
+    assert!(
+        journal.stats().replayed >= phase1_turns,
+        "replay applied {} records for {phase1_turns} acked turns",
+        journal.stats().replayed
+    );
+    assert_eq!(journal.stats().truncated_tails, 0, "a clean drop must leave no torn tail");
+
+    // (a) the rebuilt mirror holds every acked turn byte-for-byte
+    for (sid, log) in &logs {
+        let expect: Vec<i32> =
+            log.iter().flat_map(|(d, g)| d.iter().chain(g.iter()).copied()).collect();
+        assert_eq!(
+            replay.sessions.get(sid),
+            Some(&expect),
+            "session {sid:#x} transcript lost or mangled across the crash"
+        );
+        let (last_delta, last_gen) = log.last().unwrap();
+        assert_eq!(
+            replay.last_turn.get(sid),
+            Some(&(last_delta.clone(), last_gen.clone())),
+            "session {sid:#x} dedup window not rebuilt from replay"
+        );
+    }
+    router.attach_journal(journal, replay);
+
+    // (b) exactly-once: a client that never saw the ack retries its last
+    // turn verbatim — the restarted router must answer bit-identically
+    // from the dedup window without contacting any shard
+    let retry_sid = 2u64;
+    let (retry_delta, retry_gen) = logs[&retry_sid].last().unwrap().clone();
+    let before: u64 = router.health().unwrap().iter().map(|h| h.requests_done).sum();
+    let again = router.submit_in_session(retry_sid, retry_delta, MAX_NEW).unwrap();
+    assert_eq!(again, retry_gen, "the deduped retry must replay the acked tokens verbatim");
+    let after: u64 = router.health().unwrap().iter().map(|h| h.requests_done).sum();
+    assert_eq!(after, before, "a deduped retry must not reach any shard");
+    assert_eq!(router.journal_stats().unwrap().deduped, 1);
+
+    // (c) phase 2, concurrent again through a fresh front door: every
+    // conversation continues where it left off
+    let front = FrontServer::spawn(
+        router,
+        FrontConfig { max_inflight: 32, probe_interval: None, ..FrontConfig::default() },
+    )
+    .unwrap();
+    let addr = front.addr();
+    let workers: Vec<_> = (1..=n_sessions)
+        .map(|sid| {
+            thread::spawn(move || {
+                let d = if sid % 2 == 0 { turn3(sid) } else { turn2(sid) };
+                let g = wire_turn(addr, sid, &d).expect("post-restart turn refused");
+                assert_eq!(g.len(), MAX_NEW);
+                (sid, d, g)
+            })
+        })
+        .collect();
+    for w in workers {
+        let (sid, d, g) = w.join().expect("post-restart worker panicked");
+        logs.get_mut(&sid).unwrap().push((d, g));
+    }
+
+    // bit-identical end to end: replay every session's full turn sequence
+    // on the uninterrupted reference
+    let h_ref = reference();
+    let mut sids: Vec<u64> = logs.keys().copied().collect();
+    sids.sort_unstable();
+    for sid in sids {
+        for (turn_no, (delta, gen)) in logs[&sid].iter().enumerate() {
+            let expect = ref_turn(&h_ref, sid, delta.clone(), MAX_NEW);
+            assert_eq!(
+                gen, &expect,
+                "session {sid:#x} turn {turn_no} diverged from the uninterrupted reference \
+                 across the router crash"
+            );
+        }
+    }
+
+    // the restarted journal's own ledger: one append per post-restart
+    // turn, the one dedup, zero append failures
+    let snap = front.router().lock().unwrap().cluster_metrics();
+    assert_eq!(counter(&snap, "lh_journal_appended_total"), n_sessions);
+    assert_eq!(counter(&snap, "lh_journal_deduped_total"), 1);
+    assert_eq!(counter(&snap, "lh_journal_append_errors_total"), 0);
+    assert!(counter(&snap, "lh_journal_replayed_total") >= phase1_turns);
+
+    h_ref.shutdown();
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+    let _ = fs::remove_dir_all(&jdir);
+}
+
+/// Full-cluster cold restart: front, router and every shard go down;
+/// the cluster relaunches from `--journal-dir` with completely empty
+/// shards.  Every journaled session must resume through transcript
+/// re-prefill bit-identically (zero lost acked turns), and the census
+/// must reconcile: each session live on exactly one shard, nothing in
+/// flight, no export residue.
+#[test]
+fn full_cluster_cold_restart_reconciles_census_with_zero_lost_turns() {
+    let jdir = tmp("cold_restart");
+    let serve_cfg = journaled_cfg(&jdir);
+    let (shards, front) = launch(2, &serve_cfg);
+    let addr = front.addr();
+    let n_sessions = 12u64;
+
+    let mut logs: HashMap<u64, Vec<(Vec<i32>, Vec<i32>)>> = HashMap::new();
+    for sid in 1..=n_sessions {
+        let d1 = turn1(sid);
+        let g1 = wire_turn(addr, sid, &d1).unwrap();
+        let d2 = turn2(sid);
+        let g2 = wire_turn(addr, sid, &d2).unwrap();
+        logs.insert(sid, vec![(d1, g1), (d2, g2)]);
+    }
+
+    // everything dies: front + router (mirror gone) and every shard
+    // (session state, transcripts, engine slots — all gone)
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+
+    // cold restart: same seed, same journal dir, brand-new empty shards
+    let (shards, front) = launch(2, &serve_cfg);
+    let addr = front.addr();
+    let snap = front.router().lock().unwrap().cluster_metrics();
+    assert!(
+        counter(&snap, "lh_journal_replayed_total") >= 2 * n_sessions,
+        "cold start must rebuild the mirror from journal replay"
+    );
+
+    // every session resumes: the shard holds nothing, so the turn rides
+    // the strict → UnknownSession → transcript-re-prefill path, and the
+    // result must match a reference that never restarted anything
+    let h_ref = reference();
+    for sid in 1..=n_sessions {
+        for (delta, gen) in &logs[&sid] {
+            let expect = ref_turn(&h_ref, sid, delta.clone(), MAX_NEW);
+            assert_eq!(gen, &expect, "session {sid:#x} pre-crash turn diverged");
+        }
+        let d3 = turn3(sid);
+        let g3 = wire_turn(addr, sid, &d3).expect("post-cold-restart turn refused");
+        assert_eq!(
+            g3,
+            ref_turn(&h_ref, sid, d3, MAX_NEW),
+            "session {sid:#x} lost acked context across the cold restart"
+        );
+    }
+    let snap = front.router().lock().unwrap().cluster_metrics();
+    assert!(
+        counter(&snap, "lh_resurrections_total") >= n_sessions,
+        "cold-restart resumes must go through the transcript-mirror rebuild"
+    );
+
+    // census reconciliation: exactly one live copy per session, nothing
+    // in flight anywhere, no export stash residue
+    for sid in 1..=n_sessions {
+        let live: usize =
+            shards.iter().map(|s| s.handle.session_known(sid).unwrap() as usize).sum();
+        assert_eq!(live, 1, "session {sid:#x} must be live on exactly one shard");
+    }
+    for (i, shard) in shards.iter().enumerate() {
+        wait_until("in-flight turns to settle", Duration::from_secs(30), || {
+            shard.handle.session_census().unwrap().in_flight == 0
+        });
+        assert_eq!(shard.pending_exports(), 0, "shard {i} export stash holds residue");
+    }
+
+    h_ref.shutdown();
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+    let _ = fs::remove_dir_all(&jdir);
+}
+
+/// Crash-mid-write and bit-rot at the serve layer: a torn (partial)
+/// record appended to the live segment is truncated at open and counted,
+/// with every acked turn before it intact; a flipped bit inside the
+/// sealed region is refused as a typed [`JournalError::Corrupt`] — both
+/// directly at [`Journal::open`] and surfaced through
+/// [`Cluster::launch_native`] as a typed [`RouteError`] — never a panic.
+#[test]
+fn torn_tail_truncates_and_sealed_corruption_is_a_typed_refusal() {
+    let jdir = tmp("torn_tail");
+    let serve_cfg = journaled_cfg(&jdir);
+    let mut cluster = Cluster::launch_native(1, &shape(), 4, SEED, &serve_cfg).unwrap();
+    let mut expect: HashMap<u64, Vec<i32>> = HashMap::new();
+    for sid in 1..=3u64 {
+        for delta in [turn1(sid), turn2(sid)] {
+            let gen = cluster.router.submit_in_session(sid, delta.clone(), MAX_NEW).unwrap();
+            let t = expect.entry(sid).or_default();
+            t.extend_from_slice(&delta);
+            t.extend_from_slice(&gen);
+        }
+    }
+    cluster.shutdown();
+
+    // the crash-mid-write: a record whose length prefix promises more
+    // bytes than the file holds, exactly what a power cut mid-append
+    // leaves behind
+    let wal0 = jdir.join("wal0.log");
+    let clean_len = fs::metadata(&wal0).unwrap().len();
+    let mut f = fs::OpenOptions::new().append(true).open(&wal0).unwrap();
+    f.write_all(&[200, 0, 0, 0, 1, 7, 7]).unwrap();
+    f.sync_all().unwrap();
+    drop(f);
+
+    let (journal, replay) = Journal::open(jcfg(&jdir)).unwrap();
+    assert_eq!(journal.stats().truncated_tails, 1, "the torn tail must be counted");
+    assert_eq!(
+        fs::metadata(&wal0).unwrap().len(),
+        clean_len,
+        "truncation must restore the exact pre-crash length"
+    );
+    for (sid, transcript) in &expect {
+        assert_eq!(
+            replay.sessions.get(sid),
+            Some(transcript),
+            "session {sid:#x} acked turns lost to the torn-tail truncation"
+        );
+    }
+    drop(journal);
+
+    // bit-rot in the sealed region: flip one payload byte of the first
+    // record — the checksum catches it, and because valid records follow
+    // it this is corruption, not a torn tail
+    let mut data = fs::read(&wal0).unwrap();
+    data[5] ^= 0x01;
+    fs::write(&wal0, &data).unwrap();
+    match Journal::open(jcfg(&jdir)) {
+        Err(JournalError::Corrupt { segment, offset, .. }) => {
+            assert_eq!(segment, "wal0.log");
+            assert_eq!(offset, 0, "the corrupt record starts at the head of the segment");
+        }
+        other => panic!("expected a typed Corrupt refusal, got {:?}", other.map(|_| ())),
+    }
+    // and the serve layer refuses the same way: a typed launch error,
+    // not a panic and not a silently-forgetful cluster
+    match Cluster::launch_native(1, &shape(), 4, SEED, &serve_cfg) {
+        Err(RouteError::Protocol(msg)) => {
+            assert!(msg.contains("corrupt"), "refusal must say why: {msg}");
+        }
+        Err(other) => panic!("expected a Protocol refusal, got {other:?}"),
+        Ok(_) => panic!("a corrupt journal must refuse to serve"),
+    }
+    let _ = fs::remove_dir_all(&jdir);
+}
