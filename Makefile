@@ -4,7 +4,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: help build test verify ci chaos metrics load crash lint doc bench bench-decode bench-smoke serve-demo loadgen-demo artifacts clean
+.PHONY: help build test verify ci chaos metrics load crash trace lint doc bench bench-decode bench-smoke serve-demo loadgen-demo artifacts clean
 
 help:
 	@echo "targets:"
@@ -12,8 +12,8 @@ help:
 	@echo "  test         cargo test -q"
 	@echo "  verify       tier-1 gate: build + test"
 	@echo "  ci           full gate: build + test (with and without --features simd)"
-	@echo "               + bounded chaos suite + clippy + docs (warnings denied)"
-	@echo "               + decode bench smoke"
+	@echo "               + bounded chaos/metrics/load/crash/trace suites + clippy"
+	@echo "               + docs (warnings denied) + decode bench smoke"
 	@echo "  chaos        fault-injection suite (tests/serve_chaos.rs) under a"
 	@echo "               wall-clock bound; loopback-only, port-0, sandbox-safe"
 	@echo "  metrics      observability suite: obs unit tests + the live-cluster"
@@ -24,6 +24,9 @@ help:
 	@echo "  crash        crash-durability harness (tests/serve_crash.rs): router kill"
 	@echo "               mid-load + journal-replay restart, full-cluster cold restart,"
 	@echo "               torn-tail/corrupt-record refusal; wall-clock-bounded"
+	@echo "  trace        distributed-tracing harness (tests/serve_trace.rs): cross-hop"
+	@echo "               span-tree join over the wire, resurrection/retry annotations,"
+	@echo "               /trace/<id> lookup, sampled engine profiling; both feature legs"
 	@echo "  lint         cargo clippy with warnings denied"
 	@echo "  doc          cargo doc --no-deps"
 	@echo "  bench        all bench suites (distillation, substrates,"
@@ -63,6 +66,7 @@ ci:
 	$(MAKE) metrics
 	$(MAKE) load
 	$(MAKE) crash
+	$(MAKE) trace
 	$(CARGO) clippy --all-targets -- -D warnings
 	$(CARGO) clippy --all-targets --features simd -- -D warnings
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
@@ -99,6 +103,16 @@ load:
 # reference.  Wall-clock-bounded like the other fault suites.
 crash:
 	timeout 420 $(CARGO) test -q --test serve_crash
+
+# the distributed-tracing acceptance harness: traced wire turns whose
+# span reports must join front/router/shard/coordinator/engine into one
+# clock-skew-immune tree, carry retry/resurrection annotations under an
+# injected shard kill, serve over GET /trace/<id>, and feed the sampled
+# lh_engine_* stage histograms.  Runs on both feature legs because the
+# profiled engine path has a SIMD twin that must stay span-identical.
+trace:
+	timeout 420 $(CARGO) test -q --test serve_trace
+	timeout 420 $(CARGO) test -q --test serve_trace --features simd
 
 # 1-iteration run of the decode bench (keeps its correctness cross-checks,
 # skips the gate and the BENCH_decode.json/CSV writes): proves the bench

@@ -241,6 +241,11 @@ pub struct ServeConfig {
     /// Listener bind address (None = loopback `127.0.0.1`, the default).
     /// Non-loopback binds are opt-in and should travel with `auth_token`.
     pub bind_addr: Option<String>,
+    /// Head-sample 1-in-N requests for engine hot-path profiling at the
+    /// front door (0 = off, the default).  Sampled requests' traces gain
+    /// per-stage engine spans and feed the `lh_engine_*` histograms;
+    /// client-traced requests are always profiled regardless.
+    pub profile_sample: u64,
 }
 
 impl Default for ServeConfig {
@@ -259,6 +264,7 @@ impl Default for ServeConfig {
             journal_fsync: FsyncPolicy::default(),
             auth_token: None,
             bind_addr: None,
+            profile_sample: 0,
         }
     }
 }
@@ -301,6 +307,9 @@ impl ServeConfig {
                 .get("serve", "bind_addr")
                 .filter(|s| !s.is_empty())
                 .map(|s| s.to_string()),
+            profile_sample: raw
+                .get_usize("serve", "profile_sample", d.profile_sample as usize)
+                as u64,
         }
     }
 }
@@ -351,7 +360,7 @@ mod tests {
     fn parses_durability_and_transport_settings() {
         let raw = RawConfig::parse(
             "[serve]\njournal_dir = \"/tmp/wal\"\njournal_fsync = \"per-record\"\n\
-             auth_token = \"hunter2\"\nbind_addr = \"0.0.0.0\"\n",
+             auth_token = \"hunter2\"\nbind_addr = \"0.0.0.0\"\nprofile_sample = 16\n",
         )
         .unwrap();
         let sc = ServeConfig::from_raw(&raw);
@@ -359,12 +368,15 @@ mod tests {
         assert_eq!(sc.journal_fsync, FsyncPolicy::PerRecord);
         assert_eq!(sc.auth_token.as_deref(), Some("hunter2"));
         assert_eq!(sc.bind_addr.as_deref(), Some("0.0.0.0"));
-        // defaults: no journal, batched fsync, open auth, loopback bind
+        assert_eq!(sc.profile_sample, 16);
+        // defaults: no journal, batched fsync, open auth, loopback bind,
+        // profiling off
         let d = ServeConfig::default();
         assert_eq!(d.journal_dir, None);
         assert_eq!(d.journal_fsync, FsyncPolicy::Batched(10));
         assert_eq!(d.auth_token, None);
         assert_eq!(d.bind_addr, None);
+        assert_eq!(d.profile_sample, 0);
     }
 
     #[test]

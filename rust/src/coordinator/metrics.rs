@@ -14,7 +14,22 @@
 use std::sync::Mutex;
 
 use super::request::Refusal;
+use crate::engine::backbone::StageTimes;
 use crate::obs::{Hist, MetricValue};
+
+/// Metric-family names for the six profiled engine hot-path stages,
+/// index-aligned with [`StageTimes::stages`].  Each histogram records
+/// seconds spent in that stage *per profiled request* (summed over the
+/// request's tokens), so the cluster-merged view answers "where inside
+/// the engine does a request's time go?"
+pub const ENGINE_STAGE_FAMILIES: [&str; 6] = [
+    "lh_engine_short_conv_seconds",
+    "lh_engine_modal_sweep_seconds",
+    "lh_engine_qkv_seconds",
+    "lh_engine_out_proj_seconds",
+    "lh_engine_mlp_seconds",
+    "lh_engine_lm_head_seconds",
+];
 
 #[derive(Default, Debug)]
 pub struct MetricsInner {
@@ -66,6 +81,11 @@ pub struct MetricsInner {
     pub shed_deadline: u64,
     /// Requests refused at the door because the queue was at capacity.
     pub shed_overload: u64,
+    /// Per-stage engine hot-path wall time, one histogram per stage in
+    /// [`ENGINE_STAGE_FAMILIES`] order, fed only by profiled requests.
+    pub engine_stages: [Hist; 6],
+    /// Requests whose engine hot path was stage-profiled.
+    pub engine_profiled: u64,
 }
 
 /// Shared metrics handle.
@@ -157,6 +177,17 @@ impl Metrics {
         }
     }
 
+    /// A profiled request retired: fold its per-stage engine timings
+    /// (nanoseconds summed over the request's tokens) into the
+    /// per-stage histograms, one sample per stage per request.
+    pub fn record_engine_stages(&self, t: &StageTimes) {
+        let mut m = self.0.lock().unwrap();
+        m.engine_profiled += 1;
+        for (i, (_, ns)) in t.stages().iter().enumerate() {
+            m.engine_stages[i].record(*ns as f64 * 1e-9);
+        }
+    }
+
     /// A request finished: `ttft`/`total` are seconds since enqueue,
     /// `tokens` the generation length (drives the TPOT sample).
     pub fn record_done(&self, ttft: Option<f64>, total: f64, tokens: usize) {
@@ -199,6 +230,8 @@ impl Metrics {
             spill_compactions: m.spill_compactions,
             shed_deadline: m.shed_deadline,
             shed_overload: m.shed_overload,
+            engine_stages: m.engine_stages.clone(),
+            engine_profiled: m.engine_profiled,
         }
     }
 
@@ -210,7 +243,7 @@ impl Metrics {
         let m = self.0.lock().unwrap();
         let c = MetricValue::Counter;
         let g = MetricValue::Gauge;
-        vec![
+        let mut out = vec![
             ("lh_requests_total".into(), c(m.requests_in)),
             ("lh_requests_done_total".into(), c(m.requests_done)),
             ("lh_tokens_generated_total".into(), c(m.tokens_generated)),
@@ -236,7 +269,12 @@ impl Metrics {
             ("lh_spill_compactions_total".into(), c(m.spill_compactions)),
             ("lh_shed_deadline_total".into(), c(m.shed_deadline)),
             ("lh_shed_overload_total".into(), c(m.shed_overload)),
-        ]
+            ("lh_engine_profiled_total".into(), c(m.engine_profiled)),
+        ];
+        for (i, family) in ENGINE_STAGE_FAMILIES.iter().enumerate() {
+            out.push(((*family).into(), MetricValue::Hist(m.engine_stages[i].clone())));
+        }
+        out
     }
 
     pub fn report(&self) -> String {
@@ -368,6 +406,30 @@ mod tests {
         assert_eq!(s.spill_bytes, 8192);
         assert_eq!(s.spill_evictions, 3);
         assert_eq!(s.spill_compactions, 1);
+    }
+
+    #[test]
+    fn engine_stage_histograms_accumulate() {
+        let m = Metrics::default();
+        let t = StageTimes {
+            short_conv_ns: 1_000,
+            modal_sweep_ns: 2_000,
+            qkv_ns: 3_000,
+            out_proj_ns: 4_000,
+            mlp_ns: 5_000,
+            lm_head_ns: 6_000,
+            tokens: 4,
+        };
+        m.record_engine_stages(&t);
+        m.record_engine_stages(&t);
+        let s = m.snapshot();
+        assert_eq!(s.engine_profiled, 2);
+        for h in &s.engine_stages {
+            assert_eq!(h.count(), 2);
+        }
+        // stage samples land in the microsecond range they were fed
+        let p50 = s.engine_stages[5].quantile(0.5);
+        assert!(p50 > 1e-6 && p50 < 1e-4, "{p50}");
     }
 
     #[test]

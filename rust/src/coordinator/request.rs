@@ -3,9 +3,18 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::obs::HopReport;
+
 /// A generation request submitted to the coordinator.
 pub struct GenRequest {
     pub id: u64,
+    /// Wire-propagated trace id (0 = untraced).  Echoed on the
+    /// response and stamped into the coordinator's trace ring so the
+    /// shard's span report joins the front door's under one id.
+    pub trace: u64,
+    /// Record per-stage engine hot-path timings for this request (the
+    /// sampled-profiling flag; costs one branch per token when false).
+    pub profile: bool,
     /// Tokens to consume this turn.  For a session request this is only the
     /// *delta* (the new turn's tokens) — the coordinator owns the
     /// transcript and either resumes the stored state or re-prefills it.
@@ -62,6 +71,8 @@ pub enum Refusal {
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub id: u64,
+    /// Trace id echoed from the request (0 = untraced).
+    pub trace: u64,
     pub tokens: Vec<i32>,
     /// Seconds from enqueue to first generated token.
     pub ttft_s: f64,
@@ -69,6 +80,11 @@ pub struct GenResponse {
     pub total_s: f64,
     /// Set when the request was shed instead of served.
     pub refusal: Option<Refusal>,
+    /// Span reports for traced requests: the coordinator hop (queue /
+    /// prefill-or-resume / decode, offsets from enqueue) plus an
+    /// "engine" hop with per-stage aggregates when the request was
+    /// profiled.  Empty for untraced requests.
+    pub hops: Vec<HopReport>,
 }
 
 /// Why a sequence left its slot.

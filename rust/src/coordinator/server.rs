@@ -24,7 +24,7 @@ use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse, Refusal};
 pub use super::state::SlotEngine;
 use crate::config::ServeConfig;
-use crate::obs::{Trace, TraceRing};
+use crate::obs::{HopReport, TraceRecord, TraceRing};
 use crate::session::{SessionError, SessionState, Store, StoreConfig};
 
 enum Msg {
@@ -136,8 +136,11 @@ pub struct CoordinatorHandle {
     tx: Sender<Msg>,
     join: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    /// Bounded ring of per-request stage traces (enqueue → admit →
-    /// prefill → first token → done), pushed at retire.
+    /// Bounded ring of per-request span trees (a "coordinator" hop with
+    /// queue / prefill-or-resume / decode spans, plus an "engine" hop
+    /// for profiled requests), pushed at retire.  Records are keyed by
+    /// the wire trace id when the request carried one, else by the
+    /// local request id.
     pub traces: Arc<TraceRing>,
     next_id: AtomicU64,
 }
@@ -238,9 +241,30 @@ impl CoordinatorHandle {
         stream: Option<Sender<i32>>,
         deadline: Option<Instant>,
     ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
+        self.submit_traced(session, prompt, max_new_tokens, stream, deadline, 0, false)
+    }
+
+    /// [`CoordinatorHandle::submit_full`] plus the distributed-tracing
+    /// context: `trace` is the wire-propagated trace id (0 = untraced;
+    /// the retire-time span record is then keyed by trace id and the
+    /// response carries hop reports), `profile` turns on per-stage
+    /// engine hot-path timing for this one request.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_traced(
+        &self,
+        session: Option<u64>,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        stream: Option<Sender<i32>>,
+        deadline: Option<Instant>,
+        trace: u64,
+        profile: bool,
+    ) -> Result<Receiver<GenResponse>, CoordinatorClosed> {
         let (tx, rx) = channel();
         let req = GenRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            trace,
+            profile,
             prompt,
             // a 0-token generation is meaningless and would leave a session
             // snapshot whose pending token is absent from the transcript —
@@ -388,6 +412,24 @@ fn record_first_token(batcher: &mut Batcher, slot: usize, tok: i32) {
     }
 }
 
+/// Stage spans of one in-flight request, recorded as offsets from its
+/// enqueue instant (clock-skew immune: only durations cross the wire).
+/// A stage that did not run stays `None` and is *absent* from the hop
+/// report — skipped work is never rendered as a zero-width span.
+#[derive(Default)]
+struct Stages {
+    /// Queue wait: enqueue → slot admission, µs.
+    admit_us: u64,
+    /// Prefill span `(start offset, duration)` µs; absent for turns
+    /// that resumed a stored state.
+    prefill: Option<(u64, u64)>,
+    /// Resume-feed span `(start offset, duration)` µs; present only
+    /// when the turn resumed a stored state.
+    resume: Option<(u64, u64)>,
+    /// Whether the engine hot path is stage-profiled for this request.
+    profile: bool,
+}
+
 /// Mutable scheduler state the intake path updates (grouped so the three
 /// intake sites — idle block, fast drain, linger wait — share one handler).
 struct Sched {
@@ -407,10 +449,10 @@ struct Sched {
     /// Transcript reads that arrived mid-turn; fulfilled (non-destructively)
     /// when the session quiesces, so the reply reflects the whole turn.
     pending_transcript: HashMap<u64, Vec<Sender<Option<Vec<i32>>>>>,
-    /// Stage offsets (admit µs, prefill µs) per in-flight request id,
-    /// captured at admission/prefill and drained into the trace ring at
-    /// retire — bounded by the slot count, never by traffic.
-    stage_us: HashMap<u64, (u64, u64)>,
+    /// Per-request stage spans captured while the request occupies a
+    /// slot, drained into hop reports + the trace ring at retire —
+    /// bounded by the slot count, never by traffic.
+    stages: HashMap<u64, Stages>,
     /// Last time each known session was touched (turn intake, retire, or
     /// import) — drives the TTL sweep.
     last_active: HashMap<u64, Instant>,
@@ -489,22 +531,32 @@ impl Sched {
     fn refuse(&mut self, req: GenRequest, why: Refusal, m: &Metrics, tr: &TraceRing) {
         m.record_shed(why);
         let total = req.enqueued.elapsed().as_secs_f64();
-        tr.push(Trace {
-            id: req.id,
+        let total_us = (total * 1e6) as u64;
+        let note = match why {
+            Refusal::Overloaded => "refused:overloaded",
+            Refusal::DeadlineExceeded => "refused:deadline",
+        };
+        // a refused turn never left the queue: its whole life is one
+        // queue span, annotated with the typed refusal
+        let hop = HopReport::new("coordinator", total_us)
+            .span("queue", 0, total_us)
+            .note(note);
+        tr.push(TraceRecord {
+            id: if req.trace != 0 { req.trace } else { req.id },
             session: req.session,
-            admit_us: 0,
-            prefill_us: 0,
-            first_token_us: 0,
-            done_us: (total * 1e6) as u64,
-            tokens: 0,
             ok: false,
+            tokens: 0,
+            e2e_us: total_us,
+            hops: vec![hop.clone()],
         });
         let _ = req.reply.send(GenResponse {
             id: req.id,
+            trace: req.trace,
             tokens: vec![],
             ttft_s: total,
             total_s: total,
             refusal: Some(why),
+            hops: if req.trace != 0 { vec![hop] } else { Vec::new() },
         });
         if let Some(id) = req.session {
             if !self.session_in_flight(id) {
@@ -666,7 +718,7 @@ where
             pending_end: HashSet::new(),
             pending_export: HashMap::new(),
             pending_transcript: HashMap::new(),
-            stage_us: HashMap::new(),
+            stages: HashMap::new(),
             last_active: HashMap::new(),
             ttl: (cfg.session_ttl_ms > 0)
                 .then(|| Duration::from_millis(cfg.session_ttl_ms)),
@@ -756,7 +808,18 @@ where
                     if let Slot::Busy { req, .. } = &s.batcher.slots[slot] {
                         let wait = req.enqueued.elapsed().as_secs_f64();
                         m.record_admitted(wait, s.batcher.queue_len());
-                        s.stage_us.insert(req.id, ((wait * 1e6) as u64, 0));
+                        s.stages.insert(
+                            req.id,
+                            Stages {
+                                admit_us: (wait * 1e6) as u64,
+                                profile: req.profile,
+                                ..Stages::default()
+                            },
+                        );
+                        // arm (or disarm, for a slot a profiled request
+                        // vacated) engine stage timing before any token
+                        // of this request runs
+                        engine.set_slot_profiling(slot, req.profile);
                     }
                     let id = match s.batcher.slots[slot].session() {
                         Some(id) => id,
@@ -791,20 +854,36 @@ where
                 s.mirror_store(&m);
                 if !resume_jobs.is_empty() {
                     // restored rows are independent: one pooled feed call
-                    for (slot, tok) in engine.feed_slots(&resume_jobs) {
+                    let t_resume = Instant::now();
+                    let fed = engine.feed_slots(&resume_jobs);
+                    let resume_dur_us = t_resume.elapsed().as_micros() as u64;
+                    for (slot, tok) in fed {
                         record_first_token(&mut s.batcher, slot, tok);
+                        if let Slot::Busy { req, .. } = &s.batcher.slots[slot] {
+                            if let Some(st) = s.stages.get_mut(&req.id) {
+                                let start = t_resume
+                                    .saturating_duration_since(req.enqueued)
+                                    .as_micros() as u64;
+                                st.resume = Some((start, resume_dur_us));
+                            }
+                        }
                     }
                 }
                 if !prefill_jobs.is_empty() {
                     m.record_prefill(prefill_jobs.len());
                     let t_prefill = Instant::now();
                     let firsts = engine.prefill_slots(&prefill_jobs);
-                    m.observe_prefill(t_prefill.elapsed().as_secs_f64());
+                    let prefill_s = t_prefill.elapsed().as_secs_f64();
+                    let prefill_dur_us = (prefill_s * 1e6) as u64;
+                    m.observe_prefill(prefill_s);
                     for (slot, tok) in firsts {
                         record_first_token(&mut s.batcher, slot, tok);
                         if let Slot::Busy { req, .. } = &s.batcher.slots[slot] {
-                            if let Some(st) = s.stage_us.get_mut(&req.id) {
-                                st.1 = req.enqueued.elapsed().as_micros() as u64;
+                            if let Some(st) = s.stages.get_mut(&req.id) {
+                                let start = t_prefill
+                                    .saturating_duration_since(req.enqueued)
+                                    .as_micros() as u64;
+                                st.prefill = Some((start, prefill_dur_us));
                             }
                         }
                     }
@@ -883,24 +962,51 @@ where
                         }
                         let total = req.enqueued.elapsed().as_secs_f64();
                         m.record_done(ttft, total, generated.len());
-                        let (admit_us, prefill_us) =
-                            s.stage_us.remove(&req.id).unwrap_or_default();
-                        tr.push(Trace {
-                            id: req.id,
+                        let total_us = (total * 1e6) as u64;
+                        let ft_us = (ttft.unwrap_or(total) * 1e6) as u64;
+                        let st = s.stages.remove(&req.id).unwrap_or_default();
+                        let mut coord = HopReport::new("coordinator", total_us)
+                            .span("queue", 0, st.admit_us);
+                        if let Some((start, dur)) = st.prefill {
+                            coord = coord.span("prefill", start, dur);
+                        }
+                        if let Some((start, dur)) = st.resume {
+                            coord = coord.span("resume", start, dur);
+                        }
+                        coord = coord.span(
+                            "decode",
+                            ft_us,
+                            total_us.saturating_sub(ft_us),
+                        );
+                        let mut hops = vec![coord];
+                        if st.profile {
+                            if let Some(times) = engine.take_slot_stage_times(slot) {
+                                m.record_engine_stages(&times);
+                                let mut eng =
+                                    HopReport::new("engine", times.total_ns() / 1_000);
+                                for (name, ns) in times.stages() {
+                                    eng = eng.span(name, 0, ns / 1_000);
+                                }
+                                hops.push(eng);
+                            }
+                            engine.set_slot_profiling(slot, false);
+                        }
+                        tr.push(TraceRecord {
+                            id: if req.trace != 0 { req.trace } else { req.id },
                             session: req.session,
-                            admit_us,
-                            prefill_us,
-                            first_token_us: (ttft.unwrap_or(total) * 1e6) as u64,
-                            done_us: (total * 1e6) as u64,
-                            tokens: generated.len() as u32,
                             ok: true,
+                            tokens: generated.len() as u32,
+                            e2e_us: total_us,
+                            hops: hops.clone(),
                         });
                         let _ = req.reply.send(GenResponse {
                             id: req.id,
+                            trace: req.trace,
                             tokens: generated,
                             ttft_s: ttft.unwrap_or(total),
                             total_s: total,
                             refusal: None,
+                            hops: if req.trace != 0 { hops } else { Vec::new() },
                         });
                     }
                     engine.clear_slot(slot);
@@ -952,24 +1058,87 @@ mod tests {
     }
 
     #[test]
-    fn traces_record_stage_offsets_per_request() {
+    fn traces_record_stage_spans_per_request() {
         let h = handle(2);
         let rx = h.submit(vec![1, 2, 3], 4).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let traces = h.traces.recent();
         assert_eq!(traces.len(), 1, "retire pushes exactly one trace");
         let t = &traces[0];
-        assert_eq!(t.id, resp.id);
+        assert_eq!(t.id, resp.id, "untraced requests key by request id");
         assert_eq!(t.session, None);
         assert_eq!(t.tokens, 4);
         assert!(t.ok);
-        assert!(t.admit_us <= t.done_us, "{t:?}");
-        assert!(t.first_token_us <= t.done_us, "{t:?}");
-        assert!(t.prefill_us > 0, "one-shot prompts go through prefill: {t:?}");
+        let coord = t.hop("coordinator").expect("coordinator hop");
+        let queue = coord.span_named("queue").expect("queue span");
+        assert!(queue.dur_us <= t.e2e_us, "{t:?}");
+        let prefill = coord
+            .span_named("prefill")
+            .expect("one-shot prompts go through prefill");
+        assert!(prefill.start_us <= t.e2e_us, "{t:?}");
+        let decode = coord.span_named("decode").expect("decode span");
+        assert!(decode.start_us + decode.dur_us <= t.e2e_us + 1, "{t:?}");
+        // a one-shot never resumes: the skipped stage is absent from
+        // the spans, not rendered as a zero-width span
+        assert!(coord.span_named("resume").is_none(), "{t:?}");
         let m = h.metrics.snapshot();
         assert_eq!(m.queue_wait.count(), 1);
         assert_eq!(m.prefill_time.count(), 1);
         assert_eq!(m.queue_depth, 0, "queue drained after admission");
+        // session turn 1 prefills; turn 2 resumes the stored state and
+        // its trace carries "resume" but no "prefill" — the other half
+        // of the skipped-stage pin
+        let _ = turn(&h, 7, vec![4, 2], 3);
+        let _ = turn(&h, 7, vec![6], 3);
+        let recent = h.traces.recent();
+        assert_eq!(recent.len(), 3);
+        let t1 = recent[1].hop("coordinator").unwrap().clone();
+        let t2 = recent[2].hop("coordinator").unwrap().clone();
+        assert!(t1.span_named("prefill").is_some(), "{t1:?}");
+        assert!(t1.span_named("resume").is_none(), "{t1:?}");
+        assert!(t2.span_named("resume").is_some(), "{t2:?}");
+        assert!(t2.span_named("prefill").is_none(), "{t2:?}");
+        h.shutdown();
+    }
+
+    /// The sampled-profiling contract: a traced+profiled request's trace
+    /// record (keyed by the wire trace id) carries an "engine" hop with
+    /// all six hot-path stage spans, the `lh_engine_*` histograms get
+    /// one sample per stage, and the response echoes the trace context —
+    /// while untraced requests keep empty hop reports on the wire.
+    #[test]
+    fn traced_profiled_request_reports_engine_stage_spans() {
+        let h = handle(2);
+        let rx = h
+            .submit_traced(None, vec![1, 2, 3], 4, None, None, 0xBEEF, true)
+            .unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.trace, 0xBEEF);
+        assert_eq!(resp.tokens.len(), 4);
+        assert!(!resp.hops.is_empty(), "traced response carries hop reports");
+        let t = h.traces.find(0xBEEF).expect("record keyed by trace id");
+        assert!(t.ok);
+        assert!(t.hop("coordinator").is_some());
+        let eng = t.hop("engine").expect("profiled request reports an engine hop");
+        for name in ["short_conv", "modal_sweep", "qkv", "out_proj", "mlp", "lm_head"] {
+            assert!(eng.span_named(name).is_some(), "missing engine stage {name}");
+        }
+        assert!(eng.total_us <= t.e2e_us, "engine time within wall time: {t:?}");
+        let m = h.metrics.snapshot();
+        assert_eq!(m.engine_profiled, 1);
+        for hist in &m.engine_stages {
+            assert_eq!(hist.count(), 1);
+        }
+        // an unprofiled follow-up reuses the slot without inheriting the
+        // profiling flag, and untraced responses stay hop-free
+        let resp2 = h
+            .submit(vec![1, 2], 2)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(resp2.trace, 0);
+        assert!(resp2.hops.is_empty());
+        assert_eq!(h.metrics.snapshot().engine_profiled, 1);
         h.shutdown();
     }
 

@@ -4,6 +4,7 @@
 //! KV-cached [`crate::engine::transformer::TransformerEngine`] baseline,
 //! and the PJRT [`crate::runtime::lm::ServedModel`] (AOT artifacts).
 
+use crate::engine::backbone::StageTimes;
 use crate::engine::recurrent::RecurrentEngine;
 use crate::engine::transformer::TransformerEngine;
 use crate::runtime::lm::{RowState, ServedModel};
@@ -58,6 +59,18 @@ pub trait SlotEngine {
     fn feed_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
         jobs.iter().map(|(s, t)| (*s, self.feed_slot(*s, t))).collect()
     }
+
+    /// Enable/disable per-stage hot-path profiling for one slot (the
+    /// sampled-tracing hook).  Default: no-op — engines without
+    /// instrumentation simply report nothing.
+    fn set_slot_profiling(&mut self, _slot: usize, _on: bool) {}
+
+    /// Drain the per-stage timings a profiled slot accumulated since
+    /// profiling was enabled (or last drained).  `None` when the engine
+    /// does not instrument its hot path.
+    fn take_slot_stage_times(&mut self, _slot: usize) -> Option<StageTimes> {
+        None
+    }
 }
 
 impl SlotEngine for RecurrentEngine {
@@ -103,6 +116,14 @@ impl SlotEngine for RecurrentEngine {
     fn feed_slots(&mut self, jobs: &[(usize, Vec<i32>)]) -> Vec<(usize, i32)> {
         // rows are independent: fan the resumed turns out across cores
         self.feed_rows(jobs)
+    }
+
+    fn set_slot_profiling(&mut self, slot: usize, on: bool) {
+        self.set_row_profiling(slot, on);
+    }
+
+    fn take_slot_stage_times(&mut self, slot: usize) -> Option<StageTimes> {
+        Some(self.take_row_stage_times(slot))
     }
 }
 

@@ -9,10 +9,71 @@
 //! pre-allocated buffers (the engines keep one scratch per batch row and
 //! reuse it for every token).
 
+use std::time::Instant;
+
 use super::linear::{argmax, gelu, layer_norm, Dense};
 use super::shapes::LmShape;
 use crate::util::pool::Pool;
 use crate::util::Prng;
+
+/// Per-stage hot-path timings for one profiled request, in nanoseconds.
+/// Plain `Copy` counters — recording is allocation-free and the struct
+/// lives inside per-row scratch, so profiled rows never contend.  The
+/// stages interleave per token, so these are per-request aggregates,
+/// not a timeline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    /// Short-conv window contraction inside the fused mixer.
+    pub short_conv_ns: u64,
+    /// Modal SSM state sweep inside the fused mixer.
+    pub modal_sweep_ns: u64,
+    /// qkv projection GEMVs.
+    pub qkv_ns: u64,
+    /// Post-mixer out-projection GEMVs.
+    pub out_proj_ns: u64,
+    /// MLP up + gelu + down.
+    pub mlp_ns: u64,
+    /// LM-head GEMV.
+    pub lm_head_ns: u64,
+    /// Tokens these aggregates cover (prefill + decode + resume feeds).
+    pub tokens: u64,
+}
+
+impl StageTimes {
+    pub fn add(&mut self, o: &StageTimes) {
+        self.short_conv_ns += o.short_conv_ns;
+        self.modal_sweep_ns += o.modal_sweep_ns;
+        self.qkv_ns += o.qkv_ns;
+        self.out_proj_ns += o.out_proj_ns;
+        self.mlp_ns += o.mlp_ns;
+        self.lm_head_ns += o.lm_head_ns;
+        self.tokens += o.tokens;
+    }
+
+    /// Sum of every instrumented stage.
+    pub fn total_ns(&self) -> u64 {
+        self.short_conv_ns
+            + self.modal_sweep_ns
+            + self.qkv_ns
+            + self.out_proj_ns
+            + self.mlp_ns
+            + self.lm_head_ns
+    }
+
+    /// (stage name, nanoseconds) pairs in fixed order — the single list
+    /// both the `lh_engine_*` histograms and the trace "engine" hop
+    /// spans are built from.
+    pub fn stages(&self) -> [(&'static str, u64); 6] {
+        [
+            ("short_conv", self.short_conv_ns),
+            ("modal_sweep", self.modal_sweep_ns),
+            ("qkv", self.qkv_ns),
+            ("out_proj", self.out_proj_ns),
+            ("mlp", self.mlp_ns),
+            ("lm_head", self.lm_head_ns),
+        ]
+    }
+}
 
 /// Reusable buffers for [`Backbone::decode_one`]: everything the
 /// single-token forward pass needs, allocated once per row and reused for
@@ -135,6 +196,56 @@ impl Backbone {
         self.lm_head.apply(x, logits);
     }
 
+    /// [`Backbone::decode_one`] with per-stage wall-clock attribution
+    /// into `t` — the sampled-profiling path.  The arithmetic is the
+    /// *same statements in the same order* as the unprofiled method
+    /// (timers only read the clock between stages), so a profiled
+    /// request's tokens are bit-identical to an unprofiled one's; the
+    /// mixer's own short-conv/modal-sweep split is recorded by the
+    /// caller's closure (see `engine::recurrent`).
+    pub fn decode_one_timed(
+        &self,
+        token: i32,
+        scratch: &mut DecodeScratch,
+        mut mixer: impl FnMut(usize, &[f32], &mut [f32]),
+        t: &mut StageTimes,
+    ) {
+        let d = self.shape.d_model;
+        let DecodeScratch { x, h, qkv, mixed, proj, mid, logits } = scratch;
+        x.copy_from_slice(&self.embed[token as usize * d..(token as usize + 1) * d]);
+        for (li, layer) in self.layers.iter().enumerate() {
+            h.copy_from_slice(x);
+            layer_norm(h);
+            let t0 = Instant::now();
+            layer.qkv.apply(h, qkv);
+            t.qkv_ns += t0.elapsed().as_nanos() as u64;
+            mixer(li, qkv, mixed);
+            let t0 = Instant::now();
+            layer.out.apply(mixed, proj);
+            t.out_proj_ns += t0.elapsed().as_nanos() as u64;
+            for (xi, p) in x.iter_mut().zip(proj.iter()) {
+                *xi += *p;
+            }
+            h.copy_from_slice(x);
+            layer_norm(h);
+            let t0 = Instant::now();
+            layer.mlp1.apply(h, mid);
+            for v in mid.iter_mut() {
+                *v = gelu(*v);
+            }
+            layer.mlp2.apply(mid, proj);
+            t.mlp_ns += t0.elapsed().as_nanos() as u64;
+            for (xi, p) in x.iter_mut().zip(proj.iter()) {
+                *xi += *p;
+            }
+        }
+        layer_norm(x);
+        let t0 = Instant::now();
+        self.lm_head.apply(x, logits);
+        t.lm_head_ns += t0.elapsed().as_nanos() as u64;
+        t.tokens += 1;
+    }
+
     /// Block forward over a whole prompt for one sequence; the mixer sees
     /// qkv for all T positions ([T, 3D] row-major) and returns [T, D].
     /// Returns the logits at the final position.
@@ -231,6 +342,29 @@ mod tests {
         for (a, b) in block.iter().zip(&scratch.logits) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn timed_decode_is_bit_identical_and_attributes_stages() {
+        // the profiled path runs the same statements in the same order;
+        // only the clock is read between stages — logits must match
+        // bit-for-bit and every GEMV stage must receive attribution
+        let shape = LmShape::bench("nano").unwrap();
+        let bb = Backbone::new(&shape, 5);
+        let d = shape.d_model;
+        let mixer = |_li: usize, qkv: &[f32], out: &mut [f32]| {
+            out.copy_from_slice(&qkv[2 * d..3 * d]);
+        };
+        let mut plain = DecodeScratch::new(&shape);
+        bb.decode_one(11, &mut plain, mixer);
+        let mut timed = DecodeScratch::new(&shape);
+        let mut t = StageTimes::default();
+        bb.decode_one_timed(11, &mut timed, mixer, &mut t);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&plain.logits), bits(&timed.logits));
+        assert_eq!(t.tokens, 1);
+        assert!(t.qkv_ns > 0 && t.out_proj_ns > 0 && t.mlp_ns > 0 && t.lm_head_ns > 0);
+        assert_eq!(t.total_ns(), t.stages().iter().map(|(_, ns)| ns).sum::<u64>());
     }
 
     #[test]

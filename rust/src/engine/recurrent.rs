@@ -31,7 +31,9 @@
 //!   `--features simd`, bit-identical to the scalar kernel by
 //!   construction.
 
-use super::backbone::{Backbone, DecodeScratch};
+use std::time::Instant;
+
+use super::backbone::{Backbone, DecodeScratch, StageTimes};
 use super::shapes::{LmShape, SHORT_TAPS};
 use super::Engine;
 use crate::dsp::C64;
@@ -85,6 +87,10 @@ struct RowScratch {
     bb: DecodeScratch,
     /// Short-conv output [3D].
     qkv_c: Vec<f32>,
+    /// Per-stage profiling aggregates, populated only while the row is
+    /// marked profiled (plain `Copy` counters — recording allocates
+    /// nothing and rows never share them).
+    times: StageTimes,
 }
 
 impl RowScratch {
@@ -92,6 +98,7 @@ impl RowScratch {
         RowScratch {
             bb: DecodeScratch::new(shape),
             qkv_c: vec![0.0; 3 * shape.d_model],
+            times: StageTimes::default(),
         }
     }
 }
@@ -119,6 +126,11 @@ pub struct RecurrentEngine {
     last: Vec<i32>,
     /// Per-row decode scratch (index-aligned with the state rows).
     scratch: Vec<RowScratch>,
+    /// Per-row profiling flags: a profiled row routes its tokens
+    /// through the timed twin of the hot path (same statements, same
+    /// order — bit-identical output); an unprofiled row pays exactly
+    /// one branch per token, as before.
+    profiled: Vec<bool>,
 }
 
 impl RecurrentEngine {
@@ -156,7 +168,23 @@ impl RecurrentEngine {
             sc_pos: vec![0; batch],
             last: vec![0; batch],
             scratch: (0..batch).map(|_| RowScratch::new(shape)).collect(),
+            profiled: vec![false; batch],
         }
+    }
+
+    /// Mark one row (not) profiled.  Turning profiling on clears any
+    /// stale aggregates so the next [`RecurrentEngine::take_row_stage_times`]
+    /// covers exactly this request's tokens.
+    pub fn set_row_profiling(&mut self, b: usize, on: bool) {
+        if on && !self.profiled[b] {
+            self.scratch[b].times = StageTimes::default();
+        }
+        self.profiled[b] = on;
+    }
+
+    /// Drain one row's per-stage profiling aggregates (zeroing them).
+    pub fn take_row_stage_times(&mut self, b: usize) -> StageTimes {
+        std::mem::take(&mut self.scratch[b].times)
     }
 
     /// Zero the generation state of one batch row (slot recycling).
@@ -209,11 +237,13 @@ impl RecurrentEngine {
     /// Pooled multi-row token ingestion; `reset` distinguishes prefill
     /// (fresh rows) from session resume (continue from restored state).
     fn run_wanted(&mut self, wanted: &[Option<&[i32]>], reset: bool) -> Vec<(usize, i32)> {
-        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, profiled, .. } =
+            self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let ds = *d_state;
         let bb = &*bb;
         let modal = &modal[..];
+        let profiled = &profiled[..];
         let rows: Vec<_> = x_re
             .iter_mut()
             .zip(x_im.iter_mut())
@@ -231,8 +261,21 @@ impl RecurrentEngine {
                 reset_row_state(xr, xi, sc_b, pos);
             }
             let fallback = if reset { 0 } else { *last_b };
-            let next =
-                consume_row(bb, modal, d, kw, ds, sc_b, pos, xr, xi, scr, prompt, fallback);
+            let next = consume_row(
+                bb,
+                modal,
+                d,
+                kw,
+                ds,
+                sc_b,
+                pos,
+                xr,
+                xi,
+                scr,
+                prompt,
+                fallback,
+                profiled[b],
+            );
             *last_b = next;
             (b, next)
         })
@@ -249,11 +292,13 @@ impl RecurrentEngine {
         for &s in active {
             mask[s] = true;
         }
-        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, profiled, .. } =
+            self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let ds = *d_state;
         let bb = &*bb;
         let modal = &modal[..];
+        let profiled = &profiled[..];
         let rows: Vec<_> = x_re
             .iter_mut()
             .zip(x_im.iter_mut())
@@ -272,7 +317,21 @@ impl RecurrentEngine {
             .collect();
         let stepped = Pool::auto().map(rows, |(b, xr, xi, sc_b, pos, last_b, scr)| {
             let tok = [*last_b];
-            let next = consume_row(bb, modal, d, kw, ds, sc_b, pos, xr, xi, scr, &tok, *last_b);
+            let next = consume_row(
+                bb,
+                modal,
+                d,
+                kw,
+                ds,
+                sc_b,
+                pos,
+                xr,
+                xi,
+                scr,
+                &tok,
+                *last_b,
+                profiled[b],
+            );
             *last_b = next;
             (b, next)
         });
@@ -298,7 +357,8 @@ impl RecurrentEngine {
     /// sessions bit-exact.  Returns the greedy token after the last fed
     /// token (the row's `last` if `tokens` is empty).
     pub fn feed_row(&mut self, b: usize, tokens: &[i32]) -> i32 {
-        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, .. } = self;
+        let Self { bb, modal, x_re, x_im, sc, sc_pos, d_state, last, scratch, profiled, .. } =
+            self;
         let (d, kw) = (bb.shape.d_model, bb.shape.short_kw);
         let next = consume_row(
             bb,
@@ -313,6 +373,7 @@ impl RecurrentEngine {
             &mut scratch[b],
             tokens,
             last[b],
+            profiled[b],
         );
         last[b] = next;
         next
@@ -396,6 +457,9 @@ fn reset_row_state(xr: &mut [f32], xi: &mut [f32], sc: &mut [f32], pos: &mut usi
 /// greedy token after the last one (`fallback` when `tokens` is empty).
 /// The single per-token path shared by prefill, decode and session resume —
 /// sharing it is what guarantees the three produce identical arithmetic.
+/// `profile` routes the token through the timed twin of the same code
+/// (per-stage wall clocks into the row's [`StageTimes`]); unprofiled
+/// rows pay exactly this one branch per token.
 #[allow(clippy::too_many_arguments)]
 fn consume_row(
     bb: &Backbone,
@@ -410,6 +474,7 @@ fn consume_row(
     scratch: &mut RowScratch,
     tokens: &[i32],
     fallback: i32,
+    profile: bool,
 ) -> i32 {
     if tokens.is_empty() {
         return fallback;
@@ -419,22 +484,50 @@ fn consume_row(
     let sc_plane = 3 * d * tail; // per-layer short-conv length
     for &tok in tokens {
         let pos = *sc_pos;
-        let RowScratch { bb: bb_scr, qkv_c } = scratch;
-        bb.decode_one(tok, bb_scr, |li, qkv, out| {
-            mix_one(
-                d,
-                kw,
-                ds,
-                &modal[li],
-                &mut sc_b[li * sc_plane..(li + 1) * sc_plane],
-                pos,
-                &mut xr_b[li * x_plane..(li + 1) * x_plane],
-                &mut xi_b[li * x_plane..(li + 1) * x_plane],
-                qkv,
-                qkv_c,
-                out,
+        let RowScratch { bb: bb_scr, qkv_c, times } = scratch;
+        if !profile {
+            bb.decode_one(tok, bb_scr, |li, qkv, out| {
+                mix_one(
+                    d,
+                    kw,
+                    ds,
+                    &modal[li],
+                    &mut sc_b[li * sc_plane..(li + 1) * sc_plane],
+                    pos,
+                    &mut xr_b[li * x_plane..(li + 1) * x_plane],
+                    &mut xi_b[li * x_plane..(li + 1) * x_plane],
+                    qkv,
+                    qkv_c,
+                    out,
+                );
+            });
+        } else {
+            let (mut sc_ns, mut sweep_ns) = (0u64, 0u64);
+            bb.decode_one_timed(
+                tok,
+                bb_scr,
+                |li, qkv, out| {
+                    mix_one_timed(
+                        d,
+                        kw,
+                        ds,
+                        &modal[li],
+                        &mut sc_b[li * sc_plane..(li + 1) * sc_plane],
+                        pos,
+                        &mut xr_b[li * x_plane..(li + 1) * x_plane],
+                        &mut xi_b[li * x_plane..(li + 1) * x_plane],
+                        qkv,
+                        qkv_c,
+                        out,
+                        &mut sc_ns,
+                        &mut sweep_ns,
+                    );
+                },
+                times,
             );
-        });
+            times.short_conv_ns += sc_ns;
+            times.modal_sweep_ns += sweep_ns;
+        }
         if tail > 0 {
             *sc_pos = (pos + 1) % tail;
         }
@@ -462,9 +555,43 @@ fn mix_one(
     qkv_c: &mut [f32],
     out: &mut [f32],
 ) {
-    // short conv against the circular window: taps SHORT_TAPS[..kw], the
-    // last weighting the current input, then overwrite the oldest slot
-    // (the caller advances the cursor once per token)
+    short_conv_one(d, kw, buf, pos, qkv, qkv_c);
+    sweep_one(d, ds, modal, xr, xi, qkv_c, out);
+}
+
+/// [`mix_one`] with the short-conv / modal-sweep split wall-clocked into
+/// the caller's accumulators — the sampled-profiling twin.  Both paths
+/// call the *same* two inlined stage helpers, so a profiled token's
+/// arithmetic is bit-identical to an unprofiled one's.
+#[allow(clippy::too_many_arguments)]
+fn mix_one_timed(
+    d: usize,
+    kw: usize,
+    ds: usize,
+    modal: &LayerModal,
+    buf: &mut [f32],
+    pos: usize,
+    xr: &mut [f32],
+    xi: &mut [f32],
+    qkv: &[f32],
+    qkv_c: &mut [f32],
+    out: &mut [f32],
+    sc_ns: &mut u64,
+    sweep_ns: &mut u64,
+) {
+    let t0 = Instant::now();
+    short_conv_one(d, kw, buf, pos, qkv, qkv_c);
+    *sc_ns += t0.elapsed().as_nanos() as u64;
+    let t0 = Instant::now();
+    sweep_one(d, ds, modal, xr, xi, qkv_c, out);
+    *sweep_ns += t0.elapsed().as_nanos() as u64;
+}
+
+/// Short conv against the circular window: taps SHORT_TAPS[..kw], the
+/// last weighting the current input, then overwrite the oldest slot
+/// (the caller advances the cursor once per token).
+#[inline(always)]
+fn short_conv_one(d: usize, kw: usize, buf: &mut [f32], pos: usize, qkv: &[f32], qkv_c: &mut [f32]) {
     let tail = kw - 1;
     let cur = SHORT_TAPS[tail];
     if tail == 0 {
@@ -484,11 +611,23 @@ fn mix_one(
             win[pos] = qkv[c];
         }
     }
+}
+
+/// Gated SSM update: one contiguous [D, d] sweep over the interleaved
+/// modal plane (no per-channel head lookup), dispatched through the
+/// lane-structured / SIMD kernel — see engine::modal_sweep.
+#[inline(always)]
+fn sweep_one(
+    d: usize,
+    ds: usize,
+    modal: &LayerModal,
+    xr: &mut [f32],
+    xi: &mut [f32],
+    qkv_c: &mut [f32],
+    out: &mut [f32],
+) {
     let (q, rest) = qkv_c.split_at(d);
     let (k, v) = rest.split_at(d);
-    // gated SSM update: one contiguous [D, d] sweep over the interleaved
-    // modal plane (no per-channel head lookup), dispatched through the
-    // lane-structured / SIMD kernel — see engine::modal_sweep
     for c in 0..d {
         let u = k[c] * v[c];
         let base = c * ds;
@@ -651,6 +790,37 @@ mod tests {
         for _ in 0..3 {
             assert_eq!(pooled.decode(), serial.decode());
         }
+    }
+
+    #[test]
+    fn profiled_rows_are_bit_identical_and_attribute_stages() {
+        // the sampled-profiling twin runs the same stage helpers in the
+        // same order — prefill + pooled decode must match an unprofiled
+        // engine token-for-token, while the profiled row accumulates
+        // per-stage attribution and the unprofiled row stays at zero
+        let shape = LmShape::bench("nano").unwrap();
+        let mut plain = RecurrentEngine::new(&shape, 2, 11);
+        let mut prof = RecurrentEngine::new(&shape, 2, 11);
+        prof.set_row_profiling(0, true);
+        let prompts = vec![vec![1, 2, 3], vec![4, 5, 6, 7]];
+        assert_eq!(plain.prefill(&prompts), prof.prefill(&prompts));
+        for _ in 0..4 {
+            assert_eq!(plain.decode(), prof.decode());
+        }
+        // row 0: 3 prefill tokens + 4 decode steps, every stage timed
+        let t = prof.take_row_stage_times(0);
+        assert_eq!(t.tokens, 7);
+        assert!(t.total_ns() > 0);
+        assert!(t.qkv_ns > 0 && t.mlp_ns > 0 && t.lm_head_ns > 0);
+        assert!(t.short_conv_ns > 0 && t.modal_sweep_ns > 0);
+        // take drains: a second take is zero
+        assert_eq!(prof.take_row_stage_times(0), StageTimes::default());
+        // the unprofiled neighbor recorded nothing
+        assert_eq!(prof.take_row_stage_times(1), StageTimes::default());
+        // re-enabling clears stale aggregates, feed_row is covered too
+        prof.set_row_profiling(1, true);
+        assert_eq!(plain.feed_row(1, &[9, 9]), prof.feed_row(1, &[9, 9]));
+        assert_eq!(prof.take_row_stage_times(1).tokens, 2);
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //! shed is the *correct* answer.  [`bench_doc`] renders the report plus
 //! the cluster's own counters (retries, TTL evictions, spill evictions,
 //! sheds) into the checked-in `BENCH_load.json` shape.
+//!
+//! Every submitted turn also carries a deterministic nonzero trace id
+//! (derived from the workload seed) with profiling on, so the front door
+//! streams a [`Frame::Spans`] report back before `Done`.  The generator
+//! folds each hop's total duration into per-hop histograms
+//! ([`HOP_NAMES`]) and `bench_doc` emits them as the `client.hops`
+//! percentile breakdown — the "where did the latency go" section.
 
 use std::net::{SocketAddr, TcpStream};
 use std::thread;
@@ -35,7 +42,12 @@ use std::time::{Duration, Instant};
 use crate::benchkit::Json;
 use crate::obs::hist::Hist;
 use crate::obs::registry::{MetricValue, Snapshot};
+use crate::obs::HopReport;
 use crate::serve::wire::{self, ErrCode, Frame};
+
+/// Hop names the per-hop latency breakdown tracks, in timeline order.
+/// Indexes [`LoadReport::hop_totals`].
+pub const HOP_NAMES: [&str; 5] = ["front", "router", "shard", "coordinator", "engine"];
 
 /// Read timeout on loadgen client sockets: generous, because under
 /// deliberate overload a queued turn legitimately waits a long time.
@@ -174,8 +186,9 @@ pub fn plan(cfg: &LoadConfig) -> Vec<SessionPlan> {
 
 /// What one submitted turn came back as.
 enum TurnOutcome {
-    /// Completed generation: token count plus client-side timings.
-    Done { toks: usize, ttft_s: f64, e2e_s: f64 },
+    /// Completed generation: token count, client-side timings, and the
+    /// cross-hop span report the front streamed back for our trace id.
+    Done { toks: usize, ttft_s: f64, e2e_s: f64, hops: Vec<HopReport> },
     /// Typed refusal frame — the request was shed, session untouched.
     Refused(ErrCode),
     /// Connection-level failure (connect, framing, unexpected frame).
@@ -203,6 +216,9 @@ pub struct LoadReport {
     pub tpot: Hist,
     /// Client-observed submit → final token.
     pub e2e: Hist,
+    /// Per-hop total duration (seconds), indexed per [`HOP_NAMES`], from
+    /// the span reports traced turns stream back.
+    pub hop_totals: [Hist; 5],
     /// Wall time of the whole run, seconds.
     pub wall_s: f64,
 }
@@ -219,6 +235,9 @@ impl LoadReport {
         self.ttft.merge(&other.ttft);
         self.tpot.merge(&other.tpot);
         self.e2e.merge(&other.e2e);
+        for (mine, theirs) in self.hop_totals.iter_mut().zip(&other.hop_totals) {
+            mine.merge(theirs);
+        }
     }
 
     /// Total turns submitted (completed + refused + failed).
@@ -271,12 +290,37 @@ impl LoadReport {
             q(&self.e2e, 0.99),
             self.e2e.mean() * 1e3,
         ));
+        for (name, h) in HOP_NAMES.iter().zip(&self.hop_totals) {
+            if h.count() > 0 {
+                s.push_str(&format!(
+                    "hop {name:<11} ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  mean {:.2}\n",
+                    q(h, 0.50),
+                    q(h, 0.90),
+                    q(h, 0.99),
+                    h.mean() * 1e3,
+                ));
+            }
+        }
         s
     }
 }
 
-/// One wire-level turn: connect, swallow the greeting, submit, collect.
-fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> TurnOutcome {
+/// Deterministic nonzero trace id for `(seed, sid, turn)` — the low bit
+/// is pinned so 0 (the "untraced" sentinel) can never come out.
+pub fn trace_id(seed: u64, sid: u64, turn: usize) -> u64 {
+    let mut s = stream(seed ^ 0x7ace_7ace, (sid << 24) | turn as u64);
+    splitmix64(&mut s) | 1
+}
+
+/// One wire-level turn: connect, swallow the greeting, submit traced,
+/// collect tokens + the span report.
+fn one_turn(
+    addr: SocketAddr,
+    sid: u64,
+    turn: usize,
+    delta: Vec<i32>,
+    cfg: &LoadConfig,
+) -> TurnOutcome {
     let t0 = Instant::now();
     let mut s = match TcpStream::connect(addr) {
         Ok(s) => s,
@@ -294,6 +338,8 @@ fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> Tu
         strict: false,
         max_new: cfg.max_new as u32,
         deadline_ms: cfg.deadline_ms,
+        trace: trace_id(cfg.seed, sid, turn),
+        profile: true,
         delta,
     };
     if wire::write_frame(&mut s, &submit).is_err() {
@@ -301,6 +347,7 @@ fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> Tu
     }
     let mut toks = 0usize;
     let mut ttft_s = None;
+    let mut hops = Vec::new();
     loop {
         match wire::read_frame(&mut s) {
             Ok(Frame::Token { .. }) => {
@@ -309,9 +356,15 @@ fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> Tu
                 }
                 toks += 1;
             }
+            Ok(Frame::Spans { hops: h, .. }) => hops = h,
             Ok(Frame::Done { .. }) => {
                 let e2e_s = t0.elapsed().as_secs_f64();
-                return TurnOutcome::Done { toks, ttft_s: ttft_s.unwrap_or(e2e_s), e2e_s };
+                return TurnOutcome::Done {
+                    toks,
+                    ttft_s: ttft_s.unwrap_or(e2e_s),
+                    e2e_s,
+                    hops,
+                };
             }
             Ok(Frame::Error { code, .. }) => return TurnOutcome::Refused(code),
             _ => return TurnOutcome::Transport,
@@ -322,18 +375,23 @@ fn one_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, cfg: &LoadConfig) -> Tu
 /// Drive one planned session to completion, classifying every outcome.
 fn run_session(addr: SocketAddr, cfg: &LoadConfig, sp: &SessionPlan) -> LoadReport {
     let mut rep = LoadReport::default();
-    for turn in &sp.turns {
+    for (t, turn) in sp.turns.iter().enumerate() {
         if turn.think > Duration::ZERO {
             thread::sleep(turn.think);
         }
-        match one_turn(addr, sp.sid, turn.delta.clone(), cfg) {
-            TurnOutcome::Done { toks, ttft_s, e2e_s } => {
+        match one_turn(addr, sp.sid, t, turn.delta.clone(), cfg) {
+            TurnOutcome::Done { toks, ttft_s, e2e_s, hops } => {
                 rep.turns_ok += 1;
                 rep.tokens += toks as u64;
                 rep.ttft.record(ttft_s);
                 rep.e2e.record(e2e_s);
                 if toks > 1 {
                     rep.tpot.record((e2e_s - ttft_s) / (toks - 1) as f64);
+                }
+                for hop in &hops {
+                    if let Some(i) = HOP_NAMES.iter().position(|n| *n == hop.hop) {
+                        rep.hop_totals[i].record(hop.total_us as f64 / 1e6);
+                    }
                 }
             }
             TurnOutcome::Refused(ErrCode::Overloaded) => rep.refused_overloaded += 1,
@@ -448,6 +506,16 @@ pub fn bench_doc(
                 ("ttft", hist_json(&rep.ttft)),
                 ("tpot", hist_json(&rep.tpot)),
                 ("e2e", hist_json(&rep.e2e)),
+                (
+                    "hops",
+                    Json::obj(
+                        HOP_NAMES
+                            .iter()
+                            .zip(&rep.hop_totals)
+                            .map(|(n, h)| (*n, hist_json(h)))
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         (
@@ -563,6 +631,8 @@ mod tests {
         b.transport_errors = 1;
         b.ttft.record(0.02);
         b.e2e.record(0.06);
+        a.hop_totals[4].record(0.001);
+        b.hop_totals[4].record(0.002);
         let mut total = LoadReport::default();
         total.absorb(&a);
         total.absorb(&b);
@@ -571,10 +641,26 @@ mod tests {
         assert_eq!(total.turns_submitted(), 9);
         assert_eq!(total.ttft.count(), 2);
         assert_eq!(total.e2e.count(), 2);
+        assert_eq!(total.hop_totals[4].count(), 2, "per-hop hists must merge too");
         let s = total.summary();
         assert!(s.contains("5 ok"), "{s}");
         assert!(s.contains("2 shed overloaded"), "{s}");
         assert!(s.contains("1 shed deadline"), "{s}");
+        assert!(s.contains("hop engine"), "recorded hops must render: {s}");
+        assert!(!s.contains("hop front"), "empty hop hists stay silent: {s}");
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_nonzero_and_distinct() {
+        assert_eq!(trace_id(7, 3, 1), trace_id(7, 3, 1));
+        assert_ne!(trace_id(7, 3, 1), trace_id(7, 3, 2));
+        assert_ne!(trace_id(7, 3, 1), trace_id(7, 4, 1));
+        assert_ne!(trace_id(7, 3, 1), trace_id(8, 3, 1));
+        for sid in 0..64 {
+            for t in 0..8 {
+                assert_ne!(trace_id(0, sid, t), 0, "0 is the untraced sentinel");
+            }
+        }
     }
 
     #[test]
@@ -584,6 +670,8 @@ mod tests {
         rep.tokens = 16;
         rep.wall_s = 2.0;
         rep.ttft.record(0.01);
+        rep.hop_totals[0].record(0.004);
+        rep.hop_totals[4].record(0.002);
         let mut cluster = Snapshot::default();
         cluster.add_counter("lh_retries_total", 3);
         cluster.add_counter("lh_session_ttl_evictions_total", 2);
@@ -599,5 +687,10 @@ mod tests {
         assert!(s.contains("\"shed_deadline_total\": 5"), "{s}");
         // a counter missing from the snapshot reads 0, not an error
         assert!(s.contains("\"spill_evictions_total\": 0"), "{s}");
+        // per-hop breakdown rides inside "client" with one key per hop
+        assert!(s.contains("\"hops\""), "{s}");
+        for name in HOP_NAMES {
+            assert!(s.contains(&format!("\"{name}\"")), "missing hop {name}: {s}");
+        }
     }
 }

@@ -262,10 +262,20 @@ fn cmd_serve_cluster(args: &Args, serve_cfg: ServeConfig, n_shards: usize) -> Re
     // lock the front's wire connections use
     let (shards, cluster_router) = cluster.into_parts();
     let bind_host = serve_cfg.bind_addr.clone().unwrap_or_else(|| "127.0.0.1".to_string());
-    let front = FrontServer::spawn_on(cluster_router, FrontConfig::default(), &bind_host)?;
+    let front_cfg = FrontConfig {
+        profile_sample: serve_cfg.profile_sample,
+        ..FrontConfig::default()
+    };
+    let front = FrontServer::spawn_on(cluster_router, front_cfg, &bind_host)?;
     println!(
         "observability: scrape http://{addr}/metrics (Prometheus text); \
          dashboard at http://{addr}/admin, recent traces at http://{addr}/traces",
+        addr = front.http_addr()
+    );
+    println!(
+        "tracing: per-request span timelines at http://{addr}/trace/<id> \
+         (the <id> every Done frame carries); liveness http://{addr}/healthz, \
+         readiness http://{addr}/readyz",
         addr = front.http_addr()
     );
     if let Some(dir) = &serve_cfg.journal_dir {
@@ -379,6 +389,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let (shards, cluster_router) = cluster.into_parts();
     let front_cfg = FrontConfig {
         max_inflight: args.get_usize("max-inflight", 32),
+        profile_sample: serve_cfg.profile_sample,
         ..FrontConfig::default()
     };
     let front = FrontServer::spawn(cluster_router, front_cfg)?;

@@ -8,9 +8,11 @@
 //! * [`registry`] — named counters/gauges/histograms behind stable
 //!   `lh_*` metric names (declared once in [`registry::SCHEMA`]),
 //!   snapshotable, mergeable, and renderable as Prometheus text.
-//! * [`trace`] — per-request stage timelines (enqueue → admit →
-//!   prefill → first token → done) in a bounded ring, rendered as JSON
-//!   lines.
+//! * [`trace`] — per-request distributed trace records: named spans
+//!   (durations + hop-relative offsets, clock-skew-immune) grouped into
+//!   per-hop reports and joined across front → router → shard →
+//!   coordinator → engine, held in a bounded ring and rendered as JSON
+//!   for `GET /traces` and `GET /trace/<id>`.
 //!
 //! The flow: each shard's coordinator records into its own counters and
 //! histograms; a `Metrics` wire frame pulls a shard's snapshot to the
@@ -25,4 +27,4 @@ pub mod trace;
 
 pub use hist::{bucket_upper, Hist, BUCKETS};
 pub use registry::{render_prometheus, MetricKind, MetricValue, Registry, Snapshot, SCHEMA};
-pub use trace::{Trace, TraceRing, DEFAULT_TRACE_CAP};
+pub use trace::{HopReport, Span, TraceRecord, TraceRing, DEFAULT_TRACE_CAP};

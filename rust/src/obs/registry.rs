@@ -95,6 +95,14 @@ pub const SCHEMA: &[(&str, MetricKind, &str)] = &[
     ("lh_spill_compactions_total", MetricKind::Counter, "spill segments compacted"),
     ("lh_shed_deadline_total", MetricKind::Counter, "queued requests shed past their deadline budget"),
     ("lh_shed_overload_total", MetricKind::Counter, "requests refused at a full admission queue"),
+    // engine hot-path profiling (sampled; per shard, merged by the router)
+    ("lh_engine_profiled_total", MetricKind::Counter, "requests whose engine hot path was stage-profiled"),
+    ("lh_engine_short_conv_seconds", MetricKind::Hist, "per profiled request: short-conv stage wall time"),
+    ("lh_engine_modal_sweep_seconds", MetricKind::Hist, "per profiled request: modal recurrence sweep wall time"),
+    ("lh_engine_qkv_seconds", MetricKind::Hist, "per profiled request: qkv projection GEMV wall time"),
+    ("lh_engine_out_proj_seconds", MetricKind::Hist, "per profiled request: output projection GEMV wall time"),
+    ("lh_engine_mlp_seconds", MetricKind::Hist, "per profiled request: MLP GEMV wall time"),
+    ("lh_engine_lm_head_seconds", MetricKind::Hist, "per profiled request: LM-head GEMV wall time"),
     // router
     ("lh_route_seconds", MetricKind::Hist, "router-observed round trip per routed turn"),
     ("lh_migration_attempts_total", MetricKind::Counter, "live session migrations started"),

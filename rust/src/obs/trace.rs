@@ -1,68 +1,188 @@
-//! Per-request trace records in a bounded ring.
+//! Per-request distributed trace records in a bounded ring.
 //!
-//! A [`Trace`] pins down where one request's latency went as stage
-//! offsets from its enqueue instant: queue wait until admission, the
-//! prefill batch it rode (if it could not resume a stored state), the
-//! first emitted token, and completion. The coordinator pushes one
-//! record per retired request into a [`TraceRing`]; the front door
-//! keeps its own ring of relayed turns. Rings are fixed-capacity
-//! `VecDeque`s — the observability layer never holds unbounded
-//! per-request memory — and render as JSON lines for `GET /traces`.
+//! One request that crosses the serving stack leaves one
+//! [`TraceRecord`]: a list of [`HopReport`]s (front, router, shard,
+//! coordinator, engine), each carrying named [`Span`]s.  Spans are
+//! **durations plus offsets relative to their hop's own start** — never
+//! absolute timestamps — so reports taken on different machines join
+//! into one timeline without any clock-synchronisation assumption, the
+//! same scheme the wire protocol already uses for `deadline_ms`
+//! budgets.
+//!
+//! A stage that did not happen (e.g. prefill on a state-resume turn) is
+//! simply **absent** from the hop's span list — unlike the old flat
+//! fixed-field record, where "offset 0" was ambiguous between "happened
+//! instantly" and "skipped".  Events that are not durations (a retry, a
+//! resurrection, a journal-dedup answer) travel as string `notes` on
+//! the hop that observed them.
+//!
+//! The coordinator pushes one record per retired request into a
+//! [`TraceRing`]; the front door keeps its own ring of *joined*
+//! cross-hop records.  Rings are fixed-capacity `VecDeque`s — the
+//! observability layer never holds unbounded per-request memory — and
+//! render as JSON lines for `GET /traces` and single objects for
+//! `GET /trace/<id>`.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
-/// One request's stage timeline, offsets in µs from enqueue. A stage
-/// that did not happen (e.g. prefill on a state-resume turn) is 0.
+/// One named stage inside a hop: `start_us` is the offset from the
+/// *hop's* start (not from any global clock), `dur_us` its duration.
+/// Engine stage spans (short-conv, modal sweep, the GEMV projections)
+/// interleave per token, so they carry `start_us == 0` and their
+/// `dur_us` is the per-request aggregate.
 #[derive(Clone, Debug, Default, PartialEq)]
-pub struct Trace {
-    pub id: u64,
-    pub session: Option<u64>,
-    /// Enqueue → slot admission (queue wait).
-    pub admit_us: u64,
-    /// Enqueue → end of the prefill batch that processed this prompt;
-    /// 0 when the turn resumed a stored state and skipped prefill.
-    pub prefill_us: u64,
-    /// Enqueue → first token emitted.
-    pub first_token_us: u64,
-    /// Enqueue → final token (end-to-end latency).
-    pub done_us: u64,
-    /// Tokens generated.
-    pub tokens: u32,
-    /// False when the request ended in an error instead of a reply.
-    pub ok: bool,
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
 }
 
-impl Trace {
-    /// One JSON object, no trailing newline. Field order is fixed so
-    /// the output is line-diffable.
+impl Span {
+    pub fn new(name: &str, start_us: u64, dur_us: u64) -> Self {
+        Span { name: name.to_string(), start_us, dur_us }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"start_us\":{},\"dur_us\":{}}}",
+            escape(&self.name),
+            self.start_us,
+            self.dur_us
+        )
+    }
+}
+
+/// One layer's view of a request: where its `total_us` went, as spans
+/// offset from the hop's own start, plus annotations for events that
+/// are not durations ("retry:2", "resurrected", "refused:overloaded").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HopReport {
+    /// Which layer reported: "front", "router", "shard", "coordinator",
+    /// "engine".
+    pub hop: String,
+    /// The hop's own start-to-finish time for this request.
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+    pub notes: Vec<String>,
+}
+
+impl HopReport {
+    pub fn new(hop: &str, total_us: u64) -> Self {
+        HopReport { hop: hop.to_string(), total_us, spans: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Append a named span; returns `self` for chaining.
+    pub fn span(mut self, name: &str, start_us: u64, dur_us: u64) -> Self {
+        self.spans.push(Span::new(name, start_us, dur_us));
+        self
+    }
+
+    pub fn note(mut self, note: &str) -> Self {
+        self.notes.push(note.to_string());
+        self
+    }
+
+    /// The named span, if the stage happened on this hop at all.
+    pub fn span_named(&self, name: &str) -> Option<&Span> {
+        self.spans.iter().find(|s| s.name == name)
+    }
+
+    fn to_json(&self) -> String {
+        let spans: Vec<String> = self.spans.iter().map(|s| s.to_json()).collect();
+        let notes: Vec<String> =
+            self.notes.iter().map(|n| format!("\"{}\"", escape(n))).collect();
+        format!(
+            "{{\"hop\":\"{}\",\"total_us\":{},\"spans\":[{}],\"notes\":[{}]}}",
+            escape(&self.hop),
+            self.total_us,
+            spans.join(","),
+            notes.join(",")
+        )
+    }
+}
+
+/// One request's joined timeline: the trace id minted at the front
+/// door, every hop's report in traversal order (front first, engine
+/// last), and the envelope facts every consumer wants without walking
+/// the tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceRecord {
+    /// The wire-propagated 64-bit trace id (never 0 for traced work).
+    pub id: u64,
+    pub session: Option<u64>,
+    /// False when the request ended in an error instead of a reply.
+    pub ok: bool,
+    /// Tokens generated.
+    pub tokens: u32,
+    /// End-to-end latency as observed by the *outermost* recorded hop.
+    pub e2e_us: u64,
+    pub hops: Vec<HopReport>,
+}
+
+impl TraceRecord {
+    /// The named hop's report, if that layer contributed one.
+    pub fn hop(&self, name: &str) -> Option<&HopReport> {
+        self.hops.iter().find(|h| h.hop == name)
+    }
+
+    /// True if any hop carries the note (exact match or `prefix:`-style
+    /// prefix match, e.g. `has_note("retry")` matches "retry:2").
+    pub fn has_note(&self, note: &str) -> bool {
+        self.hops.iter().any(|h| {
+            h.notes.iter().any(|n| {
+                n == note || (n.starts_with(note) && n.as_bytes().get(note.len()) == Some(&b':'))
+            })
+        })
+    }
+
+    /// One JSON object, no trailing newline.  Field order is fixed so
+    /// the output is line-diffable; skipped stages are *absent* from
+    /// `spans`, never rendered as zeros.
     pub fn to_json(&self) -> String {
         let session = match self.session {
             Some(s) => s.to_string(),
             None => "null".to_string(),
         };
+        let hops: Vec<String> = self.hops.iter().map(|h| h.to_json()).collect();
         format!(
-            "{{\"id\":{},\"session\":{},\"admit_us\":{},\"prefill_us\":{},\
-             \"first_token_us\":{},\"done_us\":{},\"tokens\":{},\"ok\":{}}}",
+            "{{\"id\":{},\"session\":{},\"ok\":{},\"tokens\":{},\"e2e_us\":{},\"hops\":[{}]}}",
             self.id,
             session,
-            self.admit_us,
-            self.prefill_us,
-            self.first_token_us,
-            self.done_us,
+            self.ok,
             self.tokens,
-            self.ok
+            self.e2e_us,
+            hops.join(",")
         )
     }
+}
+
+/// Minimal JSON string escape for hop/span/note text (quotes,
+/// backslashes, control bytes) — trace text is internal, but an error
+/// message quoted into a note must not break the rendering.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Capacity of a ring unless the caller picks one: enough recent
 /// context to debug a latency spike, small enough to never matter.
 pub const DEFAULT_TRACE_CAP: usize = 256;
 
-/// Bounded ring of recent traces, oldest evicted first.
+/// Bounded ring of recent trace records, oldest evicted first.
 pub struct TraceRing {
-    inner: Mutex<VecDeque<Trace>>,
+    inner: Mutex<VecDeque<TraceRecord>>,
     cap: usize,
 }
 
@@ -77,7 +197,7 @@ impl TraceRing {
         TraceRing { inner: Mutex::new(VecDeque::with_capacity(cap.max(1))), cap: cap.max(1) }
     }
 
-    pub fn push(&self, t: Trace) {
+    pub fn push(&self, t: TraceRecord) {
         let mut r = self.inner.lock().unwrap();
         if r.len() == self.cap {
             r.pop_front();
@@ -86,8 +206,14 @@ impl TraceRing {
     }
 
     /// Most recent traces, oldest first.
-    pub fn recent(&self) -> Vec<Trace> {
+    pub fn recent(&self) -> Vec<TraceRecord> {
         self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// The most recent record for the trace id, if it is still in the
+    /// ring — backs `GET /trace/<id>`.
+    pub fn find(&self, id: u64) -> Option<TraceRecord> {
+        self.inner.lock().unwrap().iter().rev().find(|t| t.id == id).cloned()
     }
 
     pub fn len(&self) -> usize {
@@ -99,10 +225,14 @@ impl TraceRing {
     }
 
     /// JSON-lines rendering for `GET /traces`: one object per line,
-    /// oldest first, trailing newline when non-empty.
-    pub fn to_json_lines(&self) -> String {
+    /// oldest first, trailing newline when non-empty.  `session`
+    /// filters to one session's turns (`GET /traces?session=<id>`).
+    pub fn to_json_lines(&self, session: Option<u64>) -> String {
         let mut out = String::new();
         for t in self.inner.lock().unwrap().iter() {
+            if session.is_some() && t.session != session {
+                continue;
+            }
             out.push_str(&t.to_json());
             out.push('\n');
         }
@@ -118,7 +248,7 @@ mod tests {
     fn ring_is_bounded_and_fifo() {
         let ring = TraceRing::with_capacity(3);
         for i in 0..10u64 {
-            ring.push(Trace { id: i, ok: true, ..Trace::default() });
+            ring.push(TraceRecord { id: i, ok: true, ..TraceRecord::default() });
         }
         let recent = ring.recent();
         assert_eq!(recent.len(), 3);
@@ -127,35 +257,103 @@ mod tests {
             vec![7, 8, 9],
             "oldest evicted first"
         );
+        assert_eq!(ring.find(8).unwrap().id, 8);
+        assert!(ring.find(2).is_none(), "evicted ids are gone");
     }
 
+    /// Pins the JSON shape: fixed key order, hops/spans/notes nested,
+    /// `session:null` for one-shots.
     #[test]
     fn json_lines_are_stable() {
         let ring = TraceRing::with_capacity(8);
-        ring.push(Trace {
+        let front = HopReport::new("front", 900)
+            .span("queue", 0, 10)
+            .span("relay", 10, 890);
+        let coord = HopReport::new("coordinator", 700)
+            .span("queue", 0, 5)
+            .span("prefill", 5, 195)
+            .span("decode", 200, 500)
+            .note("retry:1");
+        ring.push(TraceRecord {
             id: 1,
             session: Some(42),
-            admit_us: 10,
-            prefill_us: 200,
-            first_token_us: 250,
-            done_us: 900,
-            tokens: 8,
             ok: true,
+            tokens: 8,
+            e2e_us: 900,
+            hops: vec![front, coord],
         });
-        ring.push(Trace { id: 2, ok: false, ..Trace::default() });
+        ring.push(TraceRecord { id: 2, ok: false, ..TraceRecord::default() });
         assert_eq!(
-            ring.to_json_lines(),
-            "{\"id\":1,\"session\":42,\"admit_us\":10,\"prefill_us\":200,\
-             \"first_token_us\":250,\"done_us\":900,\"tokens\":8,\"ok\":true}\n\
-             {\"id\":2,\"session\":null,\"admit_us\":0,\"prefill_us\":0,\
-             \"first_token_us\":0,\"done_us\":0,\"tokens\":0,\"ok\":false}\n"
+            ring.to_json_lines(None),
+            "{\"id\":1,\"session\":42,\"ok\":true,\"tokens\":8,\"e2e_us\":900,\"hops\":[\
+             {\"hop\":\"front\",\"total_us\":900,\"spans\":[\
+             {\"name\":\"queue\",\"start_us\":0,\"dur_us\":10},\
+             {\"name\":\"relay\",\"start_us\":10,\"dur_us\":890}],\"notes\":[]},\
+             {\"hop\":\"coordinator\",\"total_us\":700,\"spans\":[\
+             {\"name\":\"queue\",\"start_us\":0,\"dur_us\":5},\
+             {\"name\":\"prefill\",\"start_us\":5,\"dur_us\":195},\
+             {\"name\":\"decode\",\"start_us\":200,\"dur_us\":500}],\"notes\":[\"retry:1\"]}]}\n\
+             {\"id\":2,\"session\":null,\"ok\":false,\"tokens\":0,\"e2e_us\":0,\"hops\":[]}\n"
         );
+    }
+
+    /// A skipped stage is *absent*, not zero: a state-resume turn's
+    /// coordinator hop simply has no "prefill" span, which is
+    /// distinguishable from a prefill that measured 0µs.
+    #[test]
+    fn skipped_stages_are_absent_not_zero() {
+        let resumed = HopReport::new("coordinator", 100)
+            .span("queue", 0, 2)
+            .span("decode", 2, 98);
+        assert!(resumed.span_named("prefill").is_none(), "skipped stage is absent");
+        let instant = HopReport::new("coordinator", 100)
+            .span("queue", 0, 2)
+            .span("prefill", 2, 0)
+            .span("decode", 2, 98);
+        assert_eq!(instant.span_named("prefill").unwrap().dur_us, 0);
+        // the two shapes render differently — the old flat-record
+        // ambiguity ("prefill_us:0" meaning either) is gone
+        let r = |h: HopReport| TraceRecord { id: 9, hops: vec![h], ..Default::default() }.to_json();
+        let resumed_json = r(resumed);
+        let instant_json = r(instant);
+        assert!(!resumed_json.contains("\"name\":\"prefill\""), "{resumed_json}");
+        assert!(instant_json.contains("{\"name\":\"prefill\",\"start_us\":2,\"dur_us\":0}"));
+    }
+
+    #[test]
+    fn session_filter_and_note_lookup() {
+        let ring = TraceRing::with_capacity(8);
+        ring.push(TraceRecord { id: 1, session: Some(5), ..Default::default() });
+        ring.push(TraceRecord { id: 2, session: Some(6), ..Default::default() });
+        ring.push(TraceRecord { id: 3, session: Some(5), ..Default::default() });
+        let only5 = ring.to_json_lines(Some(5));
+        assert!(only5.contains("\"id\":1") && only5.contains("\"id\":3"));
+        assert!(!only5.contains("\"id\":2"));
+        let t = TraceRecord {
+            id: 4,
+            hops: vec![HopReport::new("router", 10).note("retry:2").note("resurrected")],
+            ..Default::default()
+        };
+        assert!(t.has_note("retry"));
+        assert!(t.has_note("retry:2"));
+        assert!(t.has_note("resurrected"));
+        assert!(!t.has_note("resur"), "prefix match requires a ':' boundary");
+    }
+
+    #[test]
+    fn notes_with_quotes_escape_cleanly() {
+        let t = TraceRecord {
+            id: 7,
+            hops: vec![HopReport::new("router", 1).note("refused:\"why\"\n")],
+            ..Default::default()
+        };
+        assert!(t.to_json().contains("refused:\\\"why\\\"\\n"));
     }
 
     #[test]
     fn empty_ring_renders_empty() {
         let ring = TraceRing::default();
         assert!(ring.is_empty());
-        assert_eq!(ring.to_json_lines(), "");
+        assert_eq!(ring.to_json_lines(None), "");
     }
 }

@@ -59,6 +59,7 @@ pub enum FrameKind {
     BulkAbort,
     Token,
     Done,
+    Spans,
     Blob,
     Ok,
     HealthReport,
@@ -91,6 +92,7 @@ impl FrameKind {
             Frame::BulkBlob { .. } => FrameKind::BulkBlob,
             Frame::Token { .. } => FrameKind::Token,
             Frame::Done { .. } => FrameKind::Done,
+            Frame::Spans { .. } => FrameKind::Spans,
             Frame::Blob { .. } => FrameKind::Blob,
             Frame::Ok => FrameKind::Ok,
             Frame::HealthReport(_) => FrameKind::HealthReport,

@@ -53,9 +53,12 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::admin::AdminReport;
+use super::circuit::BreakerState;
 use super::router::{RouteError, Router};
 use super::wire::{self, ErrCode, Frame, MAX_FRAME_BYTES};
-use crate::obs::{render_prometheus, MetricValue, Registry, Snapshot, Trace, TraceRing};
+use crate::obs::{
+    render_prometheus, HopReport, MetricValue, Registry, Snapshot, TraceRecord, TraceRing,
+};
 
 /// How often blocked reads wake to check the stop flag.
 const STOP_POLL: Duration = Duration::from_millis(50);
@@ -73,6 +76,11 @@ pub struct FrontConfig {
     /// served from cache up to this age instead of taking the router
     /// lock per scrape.
     pub metrics_max_age: Duration,
+    /// Head-sample 1-in-N requests for engine hot-path profiling (their
+    /// trace gains an "engine" hop with per-stage spans, and the
+    /// `lh_engine_*` histograms accumulate).  0 disables sampling; a
+    /// client-traced request is always profiled regardless.
+    pub profile_sample: u64,
 }
 
 impl Default for FrontConfig {
@@ -81,6 +89,7 @@ impl Default for FrontConfig {
             max_inflight: 32,
             probe_interval: Some(Duration::from_millis(500)),
             metrics_max_age: Duration::from_secs(2),
+            profile_sample: 0,
         }
     }
 }
@@ -185,6 +194,9 @@ struct FrontShared {
     reg: Registry,
     traces: TraceRing,
     next_req: AtomicU64,
+    /// Head-sampling rate for engine profiling (see
+    /// [`FrontConfig::profile_sample`]).
+    profile_sample: u64,
     /// Cached cluster snapshot and when it was pulled — what lets
     /// `/metrics` answer inside the freshness bound without the router
     /// lock.
@@ -230,6 +242,7 @@ impl FrontServer {
             reg: Registry::new(),
             traces: TraceRing::default(),
             next_req: AtomicU64::new(1),
+            profile_sample: cfg.profile_sample,
             metrics_cache: Mutex::new(None),
         });
         let accept = {
@@ -462,28 +475,46 @@ fn admit_or_refuse(
 /// the connection but never the generation — the router still completes
 /// the turn and keeps its mirror consistent.
 ///
-/// Every relay leaves a [`Trace`] in the front door's ring (front-door
-/// traces clock from relay start, so the coordinator-side admit/prefill
-/// offsets are zero here) and feeds the front registry: inter-token gaps
-/// into `lh_stream_token_seconds`, failures into `lh_front_errors_total`.
+/// Every relay leaves a [`TraceRecord`] in the front door's ring: a
+/// "front" hop (queue wait + relayed stream, clocked from `t_req` — the
+/// moment the request frame arrived) joined with the router / shard /
+/// coordinator / engine hop reports the trace context collected
+/// downstream.  The wire trace id is the client's when nonzero, else
+/// minted here from the request counter, and is echoed on `Done` either
+/// way — so every caller can `GET /trace/<id>` afterwards.  The span
+/// report itself is streamed back (`Frame::Spans`, before `Done`) only
+/// to clients that traced explicitly; everyone else pays no extra
+/// frames.  The registry feeds stay as before: inter-token gaps into
+/// `lh_stream_token_seconds`, failures into `lh_front_errors_total`.
+#[allow(clippy::too_many_arguments)]
 fn relay_generation<F>(
     stream: &mut TcpStream,
     router: &Mutex<Router>,
     shared: &FrontShared,
     session: Option<u64>,
+    t_req: Instant,
+    client_trace: u64,
+    client_profile: bool,
     run: F,
 ) -> io::Result<()>
 where
     F: FnOnce(&mut Router, &mut dyn FnMut(i32)) -> Result<Vec<i32>, RouteError>,
 {
+    let id = shared.next_req.fetch_add(1, Ordering::Relaxed);
+    let trace = if client_trace != 0 { client_trace } else { id };
+    let profile = client_profile
+        || client_trace != 0
+        || (shared.profile_sample > 0 && id % shared.profile_sample == 0);
     let start = Instant::now();
+    let queue_us = start.saturating_duration_since(t_req).as_micros() as u64;
     let mut first: Option<Duration> = None;
     let mut prev_tok: Option<Instant> = None;
     let mut n_tokens: u32 = 0;
     let mut relay_err: Option<io::Error> = None;
-    let result = {
+    let (result, router_hops) = {
         let mut r = router.lock().unwrap();
-        run(&mut r, &mut |t| {
+        r.begin_trace(trace, profile);
+        let res = run(&mut r, &mut |t| {
             let now = Instant::now();
             if first.is_none() {
                 first = Some(start.elapsed());
@@ -499,19 +530,25 @@ where
                     relay_err = Some(e);
                 }
             }
-        })
+        });
+        let hops = r.take_trace();
+        (res, hops)
     };
     let total = start.elapsed();
     let ttft = first.unwrap_or(total);
-    shared.traces.push(Trace {
-        id: shared.next_req.fetch_add(1, Ordering::Relaxed),
+    let e2e_us = t_req.elapsed().as_micros() as u64;
+    let front_hop = HopReport::new("front", e2e_us)
+        .span("queue", 0, queue_us)
+        .span("relay", queue_us, total.as_micros() as u64);
+    let mut hops = vec![front_hop];
+    hops.extend(router_hops);
+    shared.traces.push(TraceRecord {
+        id: trace,
         session,
-        admit_us: 0,
-        prefill_us: 0,
-        first_token_us: ttft.as_micros() as u64,
-        done_us: total.as_micros() as u64,
-        tokens: n_tokens,
         ok: result.is_ok(),
+        tokens: n_tokens,
+        e2e_us,
+        hops: hops.clone(),
     });
     if result.is_err() {
         shared.reg.inc("lh_front_errors_total", 1);
@@ -520,13 +557,19 @@ where
         return Err(e);
     }
     match result {
-        Ok(_) => wire::write_frame(
-            stream,
-            &Frame::Done {
-                ttft_us: ttft.as_micros() as u64,
-                total_us: total.as_micros() as u64,
-            },
-        ),
+        Ok(_) => {
+            if client_trace != 0 {
+                wire::write_frame(stream, &Frame::Spans { trace, hops })?;
+            }
+            wire::write_frame(
+                stream,
+                &Frame::Done {
+                    trace,
+                    ttft_us: ttft.as_micros() as u64,
+                    total_us: total.as_micros() as u64,
+                },
+            )
+        }
         Err(e) => wire::write_frame(stream, &err_frame(&e)),
     }
 }
@@ -549,24 +592,43 @@ fn serve_conn(
             None => return Ok(()),
         };
         match frame {
-            Frame::Submit { max_new, deadline_ms, prompt } => {
+            Frame::Submit { max_new, deadline_ms, trace, profile, prompt } => {
                 shared.reg.inc("lh_front_requests_total", 1);
+                let t_req = Instant::now();
                 let deadline = wire_deadline(deadline_ms);
                 if !admit_or_refuse(&mut stream, gate, shared, deadline, false)? {
                     continue;
                 }
-                let res = relay_generation(&mut stream, router, shared, None, |r, on_tok| {
-                    r.submit_streaming_deadline(prompt, max_new as usize, deadline, |t| {
-                        on_tok(t)
-                    })
-                });
+                let res = relay_generation(
+                    &mut stream,
+                    router,
+                    shared,
+                    None,
+                    t_req,
+                    trace,
+                    profile,
+                    |r, on_tok| {
+                        r.submit_streaming_deadline(prompt, max_new as usize, deadline, |t| {
+                            on_tok(t)
+                        })
+                    },
+                );
                 gate.leave();
                 res?;
             }
-            Frame::SubmitInSession { session, strict: _, max_new, deadline_ms, delta } => {
+            Frame::SubmitInSession {
+                session,
+                strict: _,
+                max_new,
+                deadline_ms,
+                trace,
+                profile,
+                delta,
+            } => {
                 // the front door decides strictness itself: residency in
                 // the router is what distinguishes turn 1 from a resume
                 shared.reg.inc("lh_front_requests_total", 1);
+                let t_req = Instant::now();
                 let deadline = wire_deadline(deadline_ms);
                 // resident turns queue at high priority — their state is
                 // already paid for, so serving them first frees RAM
@@ -579,8 +641,15 @@ fn serve_conn(
                 if !admit_or_refuse(&mut stream, gate, shared, deadline, hi)? {
                     continue;
                 }
-                let res =
-                    relay_generation(&mut stream, router, shared, Some(session), |r, on_tok| {
+                let res = relay_generation(
+                    &mut stream,
+                    router,
+                    shared,
+                    Some(session),
+                    t_req,
+                    trace,
+                    profile,
+                    |r, on_tok| {
                         r.submit_in_session_streaming_deadline(
                             session,
                             delta,
@@ -588,7 +657,8 @@ fn serve_conn(
                             deadline,
                             |t| on_tok(t),
                         )
-                    });
+                    },
+                );
                 gate.leave();
                 res?;
             }
@@ -652,7 +722,8 @@ const MAX_HTTP_HEAD: usize = 8 * 1024;
 /// at the endpoint maps onto one of these — the handler never panics.
 #[derive(Debug, PartialEq, Eq)]
 enum HttpParse {
-    /// A well-formed `GET`: the path, query string stripped.
+    /// A well-formed `GET`: the request target, query string preserved
+    /// (the responder splits it — `/traces?session=7` filters).
     Get(String),
     /// Well-formed HTTP but a method other than GET → 405.
     NotGet,
@@ -689,7 +760,6 @@ fn parse_http_head(head: &[u8]) -> HttpParse {
             } else if !path.starts_with('/') {
                 HttpParse::Malformed
             } else {
-                let path = path.split('?').next().unwrap_or(path);
                 HttpParse::Get(path.to_string())
             }
         }
@@ -729,17 +799,44 @@ fn cluster_snapshot(
     snap
 }
 
+/// One `key=value` query parameter parsed as a `u64`, if present.
+fn query_u64(query: Option<&str>, key: &str) -> Option<u64> {
+    query?
+        .split('&')
+        .find_map(|kv| kv.strip_prefix(key).and_then(|v| v.strip_prefix('=')))
+        .and_then(|v| v.parse().ok())
+}
+
 /// Route one GET.  `/metrics` merges the (cached, freshness-bounded)
 /// cluster snapshot with the front door's own live registry; `/admin`
 /// renders the aggregated dashboard; `/traces` dumps the recent
-/// per-request timelines as JSON lines.
+/// per-request timelines as JSON lines (`?session=<id>` filters);
+/// `/trace/<id>` looks up one request's joined multi-hop span tree;
+/// `/healthz` answers 200 whenever the listener serves at all, and
+/// `/readyz` 200 only while at least one shard breaker is closed (or
+/// the router is busy relaying — serving traffic *is* readiness).
 fn respond_get(
-    path: &str,
+    target: &str,
     router: &Mutex<Router>,
     shared: &FrontShared,
     gate: &Gate,
     max_age: Duration,
 ) -> Vec<u8> {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    if let Some(id) = path.strip_prefix("/trace/") {
+        return match id.parse::<u64>().ok().and_then(|id| shared.traces.find(id)) {
+            Some(rec) => http_response(200, "OK", "application/json", &rec.to_json()),
+            None => http_response(
+                404,
+                "Not Found",
+                "text/plain",
+                "no such trace (evicted from the ring, or never seen)\n",
+            ),
+        };
+    }
     match path {
         "/metrics" => {
             let mut snap = cluster_snapshot(router, shared, max_age);
@@ -767,13 +864,33 @@ fn respond_get(
             200,
             "OK",
             "application/x-ndjson",
-            &shared.traces.to_json_lines(),
+            &shared.traces.to_json_lines(query_u64(query, "session")),
         ),
+        "/healthz" => http_response(200, "OK", "text/plain", "ok\n"),
+        "/readyz" => {
+            // try_lock: a router busy relaying a stream is serving, which
+            // is the strongest possible readiness signal — don't queue a
+            // probe behind it
+            let ready = match router.try_lock() {
+                Err(_) => true,
+                Ok(r) => r.breaker_states().iter().any(|s| *s == BreakerState::Closed),
+            };
+            if ready {
+                http_response(200, "OK", "text/plain", "ready\n")
+            } else {
+                http_response(
+                    503,
+                    "Service Unavailable",
+                    "text/plain",
+                    "not ready: no shard breaker is closed\n",
+                )
+            }
+        }
         _ => http_response(
             404,
             "Not Found",
             "text/plain",
-            "try /metrics, /admin or /traces\n",
+            "try /metrics, /admin, /traces, /trace/<id>, /healthz or /readyz\n",
         ),
     }
 }
@@ -977,6 +1094,22 @@ mod tests {
                 }
             }
         }
+
+        /// Collect one traced generation: (tokens, span report, Done's
+        /// echoed trace id).
+        fn collect_traced(&mut self) -> (Vec<i32>, Vec<HopReport>, u64) {
+            let mut toks = Vec::new();
+            let mut spans = Vec::new();
+            loop {
+                match self.recv() {
+                    Frame::Token { token } => toks.push(token),
+                    Frame::Spans { hops, .. } => spans = hops,
+                    Frame::Done { trace, .. } => return (toks, spans, trace),
+                    Frame::Error { code, msg } => panic!("shard error {code:?}: {msg}"),
+                    other => panic!("expected Token/Spans/Done, got {other:?}"),
+                }
+            }
+        }
     }
 
     #[test]
@@ -988,6 +1121,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2, 3],
         });
         let (t1, done) = c.collect();
@@ -999,6 +1134,8 @@ mod tests {
             strict: true,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![7],
         });
         let (t2, _) = c.collect();
@@ -1032,7 +1169,7 @@ mod tests {
         );
         assert!(front.gate.try_enter(), "gate must admit the first request");
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1, 2] });
         match c.recv() {
             Frame::Error { code, msg } => {
                 assert_eq!(code, ErrCode::Unavailable, "{msg}");
@@ -1042,7 +1179,7 @@ mod tests {
         }
         front.gate.leave();
         // with the gate free the same request is served
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1, 2] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 2);
         front.shutdown();
@@ -1063,7 +1200,7 @@ mod tests {
             other => panic!("expected Error, got {other:?}"),
         }
         // the connection survives the refusal
-        c.send(&Frame::Submit { max_new: 1, deadline_ms: 0, prompt: vec![3] });
+        c.send(&Frame::Submit { max_new: 1, deadline_ms: 0, trace: 0, profile: false, prompt: vec![3] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 1);
         front.shutdown();
@@ -1079,8 +1216,12 @@ mod tests {
             parse_http_head(b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n"),
             Get("/metrics".into())
         );
-        // query strings are stripped, HTTP/1.0 is accepted
-        assert_eq!(parse_http_head(b"GET /traces?n=5 HTTP/1.0\r\n\r\n"), Get("/traces".into()));
+        // query strings survive for the responder to parse, HTTP/1.0 is
+        // accepted
+        assert_eq!(
+            parse_http_head(b"GET /traces?n=5 HTTP/1.0\r\n\r\n"),
+            Get("/traces?n=5".into())
+        );
         assert_eq!(parse_http_head(b"POST /metrics HTTP/1.1\r\n\r\n"), NotGet);
         assert_eq!(parse_http_head(b"DELETE / HTTP/1.1\r\n\r\n"), NotGet);
         assert_eq!(parse_http_head(b"this is not http\r\n\r\n"), Malformed);
@@ -1114,6 +1255,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2, 3],
         });
         let (toks, _) = c.collect();
@@ -1170,6 +1313,104 @@ mod tests {
         for s in shards {
             s.shutdown();
         }
+    }
+
+    /// A client-traced request gets the full joined timeline on the wire
+    /// (Spans before Done, Done echoing the trace id) and the same tree
+    /// from `GET /trace/<id>`; `/traces?session=` filters; an unknown
+    /// trace id is a 404.
+    #[test]
+    fn traced_request_streams_spans_and_serves_trace_lookup() {
+        let (shards, front) =
+            front_over(1, FrontConfig { probe_interval: None, ..FrontConfig::default() });
+        let mut c = Client::connect(front.addr());
+        c.send(&Frame::SubmitInSession {
+            session: 9,
+            strict: false,
+            max_new: 3,
+            deadline_ms: 0,
+            trace: 777,
+            profile: true,
+            delta: vec![1, 2],
+        });
+        let (toks, spans, done_trace) = c.collect_traced();
+        assert_eq!(toks.len(), 3);
+        assert_eq!(done_trace, 777, "Done must echo the client's trace id");
+        let names: Vec<&str> = spans.iter().map(|h| h.hop.as_str()).collect();
+        for want in ["front", "router", "shard", "coordinator", "engine"] {
+            assert!(names.contains(&want), "missing {want} hop in {names:?}");
+        }
+        // the hop reports account for the front-observed end-to-end time:
+        // the front hop leads and every inner hop fits inside it
+        assert_eq!(names.first(), Some(&"front"));
+        for h in &spans[1..] {
+            assert!(h.total_us <= spans[0].total_us, "{} hop exceeds front e2e", h.hop);
+        }
+        let engine = spans.iter().find(|h| h.hop == "engine").unwrap();
+        assert!(engine.span_named("modal_sweep").is_some(), "profiled stages missing");
+        // the HTTP lookup joins the same tree under the same id
+        let looked = http_exchange(front.http_addr(), b"GET /trace/777 HTTP/1.1\r\n\r\n");
+        assert!(looked.starts_with("HTTP/1.1 200 OK\r\n"), "{looked}");
+        assert!(looked.contains("\"id\":777"), "{looked}");
+        for want in ["\"hop\":\"front\"", "\"hop\":\"shard\"", "\"hop\":\"engine\""] {
+            assert!(looked.contains(want), "{looked}");
+        }
+        let miss = http_exchange(front.http_addr(), b"GET /trace/123456789 HTTP/1.1\r\n\r\n");
+        assert!(miss.starts_with("HTTP/1.1 404 "), "{miss}");
+        // session filtering: an untraced one-shot lands in the ring too,
+        // but ?session=9 keeps only the session's turns
+        c.send(&Frame::Submit {
+            max_new: 1,
+            deadline_ms: 0,
+            trace: 0,
+            profile: false,
+            prompt: vec![4],
+        });
+        let (one, _) = c.collect();
+        assert_eq!(one.len(), 1);
+        let all = http_exchange(front.http_addr(), b"GET /traces HTTP/1.1\r\n\r\n");
+        assert!(all.contains("\"session\":null"), "{all}");
+        let filtered =
+            http_exchange(front.http_addr(), b"GET /traces?session=9 HTTP/1.1\r\n\r\n");
+        assert!(filtered.contains("\"session\":9"), "{filtered}");
+        assert!(!filtered.contains("\"session\":null"), "{filtered}");
+        front.shutdown();
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// `/healthz` answers 200 whenever the listener serves; `/readyz`
+    /// answers 200 while a shard breaker is closed and 503 once every
+    /// breaker has opened — both over real sockets.
+    #[test]
+    fn healthz_is_liveness_and_readyz_tracks_breakers() {
+        let (shards, front) =
+            front_over(1, FrontConfig { probe_interval: None, ..FrontConfig::default() });
+        let hz = http_exchange(front.http_addr(), b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(hz.starts_with("HTTP/1.1 200 OK\r\n"), "{hz}");
+        assert!(hz.contains("ok"), "{hz}");
+        let rz = http_exchange(front.http_addr(), b"GET /readyz HTTP/1.1\r\n\r\n");
+        assert!(rz.starts_with("HTTP/1.1 200 OK\r\n"), "{rz}");
+        // kill the only shard and let probes trip its breaker
+        for s in shards {
+            s.shutdown();
+        }
+        {
+            let router = front.router();
+            let mut r = router.lock().unwrap();
+            let t0 = Instant::now();
+            while r.breaker_states()[0] == BreakerState::Closed {
+                assert!(t0.elapsed() < Duration::from_secs(30), "breaker never opened");
+                r.probe_all();
+            }
+        }
+        let rz = http_exchange(front.http_addr(), b"GET /readyz HTTP/1.1\r\n\r\n");
+        assert!(rz.starts_with("HTTP/1.1 503 "), "{rz}");
+        // liveness is about the listener, not the cluster
+        let hz = http_exchange(front.http_addr(), b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(hz.starts_with("HTTP/1.1 200 OK\r\n"), "{hz}");
+        front.shutdown();
     }
 
     /// The gate's two-priority contract, driven deterministically: a
@@ -1233,7 +1474,7 @@ mod tests {
             })
         };
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 30_000, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 30_000, trace: 0, profile: false, prompt: vec![1, 2] });
         let (toks, done) = c.collect();
         assert_eq!(toks.len(), 2);
         assert!(done);
@@ -1254,7 +1495,7 @@ mod tests {
         );
         assert!(front.gate.try_enter(), "fill the only slot");
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 50, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 50, trace: 0, profile: false, prompt: vec![1, 2] });
         match c.recv() {
             Frame::Error { code, msg } => assert_eq!(code, ErrCode::Overloaded, "{msg}"),
             other => panic!("expected Overloaded, got {other:?}"),
@@ -1262,7 +1503,7 @@ mod tests {
         let shed = render_prometheus(&front.front_metrics());
         assert!(shed.contains("lh_front_shed_deadline_total 1\n"), "{shed}");
         front.gate.leave();
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 5_000, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 5_000, trace: 0, profile: false, prompt: vec![1, 2] });
         let (toks, _) = c.collect();
         assert_eq!(toks.len(), 2);
         front.shutdown();
@@ -1284,13 +1525,13 @@ mod tests {
             },
         );
         let mut c = Client::connect(front.addr());
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1, 2] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1, 2] });
         assert_eq!(c.collect().0.len(), 2);
         // first scrape pulls under the router lock and fills the cache
         let first = http_exchange(front.http_addr(), b"GET /metrics HTTP/1.1\r\n\r\n");
         assert!(first.contains("lh_requests_done_total 1\n"), "{first}");
         // another turn lands on the cluster...
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![3] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![3] });
         assert_eq!(c.collect().0.len(), 2);
         // ...but a scrape inside the bound serves the cached cluster
         // view, while the front door's own counters are live

@@ -64,7 +64,7 @@ use super::wire::{
     self, fnv1a64, splitmix64, ErrCode, Frame, HealthReport, SessionBlob, MAX_FRAME_BYTES,
     PROTO_VERSION,
 };
-use crate::obs::{Hist, MetricValue, Snapshot};
+use crate::obs::{Hist, HopReport, MetricValue, Snapshot};
 use crate::session::{Journal, JournalStats, Replay};
 
 /// Virtual ring points per shard: enough that removing one shard moves
@@ -179,6 +179,9 @@ struct Conn {
     faults: Option<Arc<FaultPlan>>,
     /// Kind of the last request written (keys the `RecvReplyTo` hook).
     last_req: Option<FrameKind>,
+    /// Span report the shard streamed back for a traced generation
+    /// (`Frame::Spans`, arriving between the last `Token` and `Done`).
+    spans: Option<(u64, Vec<HopReport>)>,
 }
 
 impl Conn {
@@ -212,7 +215,7 @@ impl Conn {
                         "shard {addr} speaks protocol {proto}, router speaks {PROTO_VERSION}"
                     )));
                 }
-                let mut conn = Conn { stream, addr, faults, last_req: None };
+                let mut conn = Conn { stream, addr, faults, last_req: None, spans: None };
                 // shared-secret handshake (fire-and-forget): success earns
                 // no reply, so no round trip is spent here; a mismatch is
                 // refused with the typed AuthFailed, read at the next reply
@@ -356,6 +359,7 @@ impl Conn {
                     toks.push(token);
                     on_token(token);
                 }
+                Frame::Spans { trace, hops } => self.spans = Some((trace, hops)),
                 Frame::Done { .. } => return Ok(toks),
                 Frame::Error { code, msg } => return Err(RouteError::Shard(code, msg)),
                 other => {
@@ -462,6 +466,28 @@ fn remaining_ms(deadline: Option<Instant>) -> Result<u32, RouteError> {
     }
 }
 
+/// Trace context for the request currently being routed.  Armed by
+/// [`Router::begin_trace`] (the front door, under its router lock, just
+/// before the routed call) and harvested by [`Router::take_trace`] just
+/// after: the router is driven by one thread per request, so one pending
+/// context is exactly enough.  All timings are durations relative to the
+/// context's own `t0` — never absolute timestamps — so reports from
+/// different hosts join without clock agreement.
+struct TraceCtx {
+    /// Wire trace id (nonzero by construction).
+    trace: u64,
+    /// Ask the shard's engine for per-stage hot-path timings.
+    profile: bool,
+    /// When the router took custody of the request.
+    t0: Instant,
+    /// Routing events worth surfacing on the router hop: `retry:N`,
+    /// `resurrected`, `reconciled`, `journal-dedup`.
+    notes: Vec<String>,
+    /// Downstream span reports (shard → coordinator → engine) from the
+    /// attempt that actually completed.
+    hops: Vec<HopReport>,
+}
+
 /// The sharded front door.
 pub struct Router {
     shards: Vec<ShardInfo>,
@@ -508,6 +534,8 @@ pub struct Router {
     replay_dedup: HashMap<u64, (Vec<i32>, Vec<i32>)>,
     /// Shared-secret token presented on every shard connection.
     auth: Option<Arc<String>>,
+    /// Trace context for the in-flight routed request, if traced.
+    trace_ctx: Option<TraceCtx>,
 }
 
 impl Router {
@@ -566,6 +594,7 @@ impl Router {
             journal: None,
             replay_dedup: HashMap::new(),
             auth,
+            trace_ctx: None,
         };
         r.rebuild_ring();
         Ok(r)
@@ -664,6 +693,64 @@ impl Router {
     /// Lifetime retries spent from per-request retry budgets.
     pub fn retries_spent(&self) -> u64 {
         self.retries
+    }
+
+    /// Arm tracing for the next routed call: the Submit/SubmitInSession
+    /// frames it sends will carry `trace` (and `profile`), the shard's
+    /// `Spans` report is captured, and routing events (retries,
+    /// resurrection) are noted.  `trace == 0` disarms (untraced requests
+    /// pay nothing beyond this `Option` store).  The front door calls
+    /// this under its router lock immediately before the routed call and
+    /// harvests with [`Router::take_trace`] immediately after.
+    pub fn begin_trace(&mut self, trace: u64, profile: bool) {
+        self.trace_ctx = (trace != 0).then(|| TraceCtx {
+            trace,
+            profile,
+            t0: Instant::now(),
+            notes: Vec::new(),
+            hops: Vec::new(),
+        });
+    }
+
+    /// Harvest the armed trace: a "router" hop (total custody time plus
+    /// any routing notes) followed by the downstream span reports from
+    /// the attempt that completed.  Empty when tracing was not armed.
+    pub fn take_trace(&mut self) -> Vec<HopReport> {
+        match self.trace_ctx.take() {
+            None => Vec::new(),
+            Some(ctx) => {
+                let mut hop = HopReport::new("router", ctx.t0.elapsed().as_micros() as u64);
+                hop.notes = ctx.notes;
+                let mut hops = vec![hop];
+                hops.extend(ctx.hops);
+                hops
+            }
+        }
+    }
+
+    /// (trace, profile) to stamp into the next generation frame.
+    fn trace_req(&self) -> (u64, bool) {
+        self.trace_ctx.as_ref().map(|c| (c.trace, c.profile)).unwrap_or((0, false))
+    }
+
+    /// Note a routing event on the armed trace (no-op when untraced).
+    fn trace_note(&mut self, note: String) {
+        if let Some(ctx) = self.trace_ctx.as_mut() {
+            ctx.notes.push(note);
+        }
+    }
+
+    /// Absorb the `Spans` report a connection captured into the armed
+    /// trace.  The id must match: a stale report from a half-dead retry
+    /// must not masquerade as the completed attempt's timeline.
+    fn trace_absorb(&mut self, conn: &mut Conn) {
+        if let Some((t, hops)) = conn.spans.take() {
+            if let Some(ctx) = self.trace_ctx.as_mut() {
+                if ctx.trace == t {
+                    ctx.hops = hops;
+                }
+            }
+        }
     }
 
     /// Spend one unit of retry budget: pause for the jittered backoff
@@ -827,6 +914,9 @@ impl Router {
         for k in 0..live.len() {
             let deadline_ms = remaining_ms(deadline)?;
             let shard = live[(base + k) % live.len()];
+            if k > 0 {
+                self.trace_note(format!("retry:{k}"));
+            }
             let mut conn = match self.open_shard(shard) {
                 Ok(c) => c,
                 Err(e) => {
@@ -836,14 +926,21 @@ impl Router {
                 }
             };
             let mut emitted = 0usize;
-            let req =
-                Frame::Submit { max_new: max_new as u32, deadline_ms, prompt: prompt.clone() };
+            let (trace, profile) = self.trace_req();
+            let req = Frame::Submit {
+                max_new: max_new as u32,
+                deadline_ms,
+                trace,
+                profile,
+                prompt: prompt.clone(),
+            };
             let t0 = Instant::now();
             match conn.generate_streaming(&req, |t| {
                 emitted += 1;
                 on_token(t);
             }) {
                 Ok(toks) => {
+                    self.trace_absorb(&mut conn);
                     self.route_hist[shard].record(t0.elapsed().as_secs_f64());
                     self.note_outcome(shard, None);
                     return Ok(toks);
@@ -923,6 +1020,7 @@ impl Router {
                 if let Some(j) = self.journal.as_mut() {
                     j.note_dedup();
                 }
+                self.trace_note("journal-dedup".to_string());
                 for &t in &gen {
                     on_token(t);
                 }
@@ -941,19 +1039,28 @@ impl Router {
         loop {
             let deadline_ms = remaining_ms(deadline)?;
             let mut emitted = 0usize;
+            let (trace, profile) = self.trace_req();
             let req = Frame::SubmitInSession {
                 session,
                 strict,
                 max_new: max_new as u32,
                 deadline_ms,
+                trace,
+                profile,
                 delta: delta.clone(),
             };
             let t0 = Instant::now();
             let attempt = match self.open_shard(shard) {
-                Ok(mut conn) => conn.generate_streaming(&req, |t| {
-                    emitted += 1;
-                    on_token(t);
-                }),
+                Ok(mut conn) => {
+                    let r = conn.generate_streaming(&req, |t| {
+                        emitted += 1;
+                        on_token(t);
+                    });
+                    if r.is_ok() {
+                        self.trace_absorb(&mut conn);
+                    }
+                    r
+                }
                 Err(e) => Err(e),
             };
             return match attempt {
@@ -980,6 +1087,7 @@ impl Router {
                     if attempt_no < self.retry.max_attempts {
                         self.backoff_pause(attempt_no, deadline)?;
                         attempt_no += 1;
+                        self.trace_note(format!("retry:{attempt_no}"));
                         continue;
                     }
                     Err(RouteError::Overloaded)
@@ -1042,6 +1150,7 @@ impl Router {
                 for &t in &generated[emitted..] {
                     on_token(t);
                 }
+                self.trace_note("reconciled".to_string());
                 self.note_outcome(shard, None);
                 self.mirror.insert(session, tokens);
                 self.resident.insert(session, shard);
@@ -1062,11 +1171,15 @@ impl Router {
                     }
                     let deadline_ms = remaining_ms(deadline)?;
                     let Ok(mut conn) = self.open_shard(shard) else { continue };
+                    self.trace_note(format!("retry:{}", attempt + 1));
+                    let (trace, profile) = self.trace_req();
                     let req = Frame::SubmitInSession {
                         session,
                         strict: true,
                         max_new: max_new as u32,
                         deadline_ms,
+                        trace,
+                        profile,
                         delta: delta.to_vec(),
                     };
                     let mut streamed = 0usize;
@@ -1077,6 +1190,7 @@ impl Router {
                         }
                     }) {
                         Ok(toks) => {
+                            self.trace_absorb(&mut conn);
                             self.note_outcome(shard, None);
                             self.note_turn(session, shard, delta, &toks);
                             return Ok(toks);
@@ -1180,11 +1294,14 @@ impl Router {
             // strict replay: deterministic greedy decode regenerates the
             // identical tokens; emit only the unseen suffix
             let deadline_ms = remaining_ms(deadline)?;
+            let (trace, profile) = self.trace_req();
             let req = Frame::SubmitInSession {
                 session,
                 strict: true,
                 max_new: max_new as u32,
                 deadline_ms,
+                trace,
+                profile,
                 delta: delta.to_vec(),
             };
             let mut replayed = 0usize;
@@ -1196,6 +1313,8 @@ impl Router {
                 }
             }) {
                 Ok(toks) => {
+                    self.trace_absorb(&mut conn);
+                    self.trace_note("resurrected".to_string());
                     self.route_hist[target].record(t0.elapsed().as_secs_f64());
                     self.migrations.resurrections += 1;
                     self.note_outcome(target, None);
@@ -2047,6 +2166,45 @@ mod tests {
         let mut want = vec![1, 2];
         want.extend_from_slice(&t1);
         assert_eq!(r.mirror_of(7).unwrap(), &want[..]);
+        for s in shards {
+            s.shutdown();
+        }
+    }
+
+    /// A traced turn must come back with the full cross-hop timeline —
+    /// router, shard, coordinator, and (profiled) engine reports joined
+    /// under one id — while an untraced turn collects nothing.
+    #[test]
+    fn traced_turn_collects_cross_hop_spans() {
+        let shards = native_shards(1);
+        let mut r = router_over(&shards);
+        r.begin_trace(0x5EED, true);
+        let toks = r.submit_in_session(11, vec![1, 2], 3).unwrap();
+        assert_eq!(toks.len(), 3);
+        let hops = r.take_trace();
+        let names: Vec<&str> = hops.iter().map(|h| h.hop.as_str()).collect();
+        assert_eq!(names.first(), Some(&"router"), "router hop must lead the report");
+        for want in ["shard", "coordinator", "engine"] {
+            assert!(names.contains(&want), "missing {want} hop in {names:?}");
+        }
+        let shard_hop = hops.iter().find(|h| h.hop == "shard").unwrap();
+        assert!(shard_hop.span_named("to_first_token").is_some());
+        assert!(shard_hop.span_named("stream").is_some());
+        // hop totals are durations on each hop's own clock: every inner
+        // hop fits inside the router's custody window (no clock skew)
+        for h in &hops[1..] {
+            assert!(
+                h.total_us <= hops[0].total_us,
+                "{} hop ({}us) exceeds router custody ({}us)",
+                h.hop,
+                h.total_us,
+                hops[0].total_us
+            );
+        }
+        // a second take is empty, and an untraced turn collects nothing
+        assert!(r.take_trace().is_empty());
+        assert_eq!(r.submit_in_session(11, vec![4], 2).unwrap().len(), 2);
+        assert!(r.take_trace().is_empty());
         for s in shards {
             s.shutdown();
         }

@@ -47,6 +47,7 @@ use crate::coordinator::server::{spawn, SessionExport};
 use crate::coordinator::{CoordinatorHandle, GenResponse, Refusal, SlotEngine};
 use crate::engine::recurrent::{RecurrentEngine, STATE_TAG};
 use crate::engine::LmShape;
+use crate::obs::HopReport;
 use crate::session::{SessionError, SessionState};
 
 /// How often a blocked read wakes to check the stop flag.
@@ -331,15 +332,35 @@ fn serve_conn(
             None => return Ok(()),
         };
         match frame {
-            Frame::Submit { max_new, deadline_ms, prompt } => {
+            Frame::Submit { max_new, deadline_ms, trace, profile, prompt } => {
+                // the shard hop's clock starts at frame receipt — spans
+                // are offsets from here, never absolute timestamps
+                let t0 = Instant::now();
                 let deadline = wire_deadline(deadline_ms);
                 let (tok_tx, tok_rx) = channel();
-                match h.submit_full(None, prompt, max_new as usize, Some(tok_tx), deadline) {
-                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx)?,
+                match h.submit_traced(
+                    None,
+                    prompt,
+                    max_new as usize,
+                    Some(tok_tx),
+                    deadline,
+                    trace,
+                    profile,
+                ) {
+                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx, t0)?,
                     Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
                 }
             }
-            Frame::SubmitInSession { session, strict, max_new, deadline_ms, delta } => {
+            Frame::SubmitInSession {
+                session,
+                strict,
+                max_new,
+                deadline_ms,
+                trace,
+                profile,
+                delta,
+            } => {
+                let t0 = Instant::now();
                 let deadline = wire_deadline(deadline_ms);
                 // strict resume: refuse with the typed UnknownSession
                 // instead of silently forking a fresh conversation.  (The
@@ -355,14 +376,16 @@ fn serve_conn(
                     continue;
                 }
                 let (tok_tx, tok_rx) = channel();
-                match h.submit_full(
+                match h.submit_traced(
                     Some(session),
                     delta,
                     max_new as usize,
                     Some(tok_tx),
                     deadline,
+                    trace,
+                    profile,
                 ) {
-                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx)?,
+                    Ok(rx) => stream_generation(&mut stream, tok_rx, rx, t0)?,
                     Err(_) => send_err(&mut stream, ErrCode::Closed, "coordinator closed")?,
                 }
             }
@@ -643,6 +666,7 @@ fn stream_generation(
     stream: &mut TcpStream,
     tokens: Receiver<i32>,
     resp: Receiver<GenResponse>,
+    t0: Instant,
 ) -> io::Result<()> {
     for t in tokens.iter() {
         wire::write_frame(stream, &Frame::Token { token: t })?;
@@ -654,7 +678,7 @@ fn stream_generation(
         // surface the coordinator's typed refusal as a typed wire error so
         // the client can back off / respect the spent budget — never a
         // silent hang, never a half-reply
-        Ok(resp) => match resp.refusal {
+        Ok(mut resp) => match resp.refusal {
             Some(Refusal::Overloaded) => {
                 send_err(stream, ErrCode::Overloaded, "admission queue full")
             }
@@ -663,13 +687,27 @@ fn stream_generation(
                 ErrCode::DeadlineExceeded,
                 "deadline budget exhausted before admission",
             ),
-            None => wire::write_frame(
-                stream,
-                &Frame::Done {
-                    ttft_us: (resp.ttft_s * 1e6) as u64,
-                    total_us: (resp.total_s * 1e6) as u64,
-                },
-            ),
+            None => {
+                let ttft_us = (resp.ttft_s * 1e6) as u64;
+                let total_us = (resp.total_s * 1e6) as u64;
+                if resp.trace != 0 {
+                    // span report first, Done last — the closing frame
+                    // stays the closing frame for every client
+                    let hop = HopReport::new("shard", t0.elapsed().as_micros() as u64)
+                        .span("to_first_token", 0, ttft_us)
+                        .span("stream", ttft_us, total_us.saturating_sub(ttft_us));
+                    let mut hops = vec![hop];
+                    hops.append(&mut resp.hops);
+                    wire::write_frame(
+                        stream,
+                        &Frame::Spans { trace: resp.trace, hops },
+                    )?;
+                }
+                wire::write_frame(
+                    stream,
+                    &Frame::Done { trace: resp.trace, ttft_us, total_us },
+                )
+            }
         },
         Err(_) => send_err(stream, ErrCode::Closed, "generation reply lost"),
     }
@@ -729,7 +767,7 @@ mod tests {
             loop {
                 match self.recv() {
                     Frame::Token { token } => toks.push(token),
-                    Frame::Done { ttft_us, total_us } => {
+                    Frame::Done { ttft_us, total_us, .. } => {
                         assert!(ttft_us <= total_us);
                         return toks;
                     }
@@ -770,10 +808,10 @@ mod tests {
             .unwrap()
             .tokens;
         let mut client = RawClient::connect(shard.addr());
-        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, prompt: vec![4, 2, 4] });
+        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, trace: 0, profile: false, prompt: vec![4, 2, 4] });
         assert_eq!(client.collect_generation(), want);
         // a second command reuses the same connection
-        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, prompt: vec![4, 2, 4] });
+        client.send(&Frame::Submit { max_new: 5, deadline_ms: 0, trace: 0, profile: false, prompt: vec![4, 2, 4] });
         assert_eq!(client.collect_generation(), want);
         h_ref.shutdown();
         shard.shutdown();
@@ -788,6 +826,8 @@ mod tests {
             strict: true,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2],
         });
         match client.recv() {
@@ -800,6 +840,8 @@ mod tests {
             strict: false,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2],
         });
         let g1 = client.collect_generation();
@@ -809,6 +851,8 @@ mod tests {
             strict: true,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![3],
         });
         assert_eq!(client.collect_generation().len(), 3);
@@ -878,6 +922,8 @@ mod tests {
             strict: true,
             max_new: 1,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![5],
         });
         assert!(matches!(
@@ -913,6 +959,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![3, 1, 4],
         });
         let g1 = a.collect_generation();
@@ -941,6 +989,8 @@ mod tests {
             strict: true,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 5],
         });
         assert_eq!(b.collect_generation(), turn_ref(vec![1, 5], 3));
@@ -981,6 +1031,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![2, 7, 1],
         });
         assert_eq!(c.collect_generation(), turn_ref(vec![2, 7, 1], 4));
@@ -992,7 +1044,7 @@ mod tests {
             !shard.handle.session_known(sid).unwrap(),
             "a stashed session must not be able to serve turns"
         );
-        c.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, delta: vec![9] });
+        c.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, trace: 0, profile: false, delta: vec![9] });
         assert!(matches!(c.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
         // abort on a NEW connection: settlement survives a reconnect
         let mut c2 = RawClient::connect(shard.addr());
@@ -1009,6 +1061,8 @@ mod tests {
             strict: true,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![5, 5],
         });
         assert_eq!(c2.collect_generation(), turn_ref(vec![5, 5], 3));
@@ -1020,7 +1074,7 @@ mod tests {
         assert_eq!(shard.pending_exports(), 0);
         c2.send(&Frame::ExportCommit { session: sid }); // duplicate commit
         assert_eq!(c2.recv(), Frame::Ok);
-        c2.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, delta: vec![1] });
+        c2.send(&Frame::SubmitInSession { session: sid, strict: true, max_new: 1, deadline_ms: 0, trace: 0, profile: false, delta: vec![1] });
         assert!(matches!(c2.recv(), Frame::Error { code: ErrCode::UnknownSession, .. }));
         h_ref.shutdown();
         shard.shutdown();
@@ -1040,6 +1094,8 @@ mod tests {
             strict: false,
             max_new: 3,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2],
         });
         let g = c.collect_generation();
@@ -1052,7 +1108,7 @@ mod tests {
             }
             other => panic!("expected TranscriptIs, got {other:?}"),
         }
-        c.send(&Frame::SubmitInSession { session: 42, strict: true, max_new: 2, deadline_ms: 0, delta: vec![3] });
+        c.send(&Frame::SubmitInSession { session: 42, strict: true, max_new: 2, deadline_ms: 0, trace: 0, profile: false, delta: vec![3] });
         assert_eq!(c.collect_generation().len(), 2);
         shard.shutdown();
     }
@@ -1066,6 +1122,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![2, 7],
         });
         let _ = client.collect_generation();
@@ -1093,6 +1151,8 @@ mod tests {
             strict: false,
             max_new: 4,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![2, 7],
         });
         let _ = client.collect_generation();
@@ -1142,6 +1202,8 @@ mod tests {
                 strict: false,
                 max_new: 3,
                 deadline_ms: 0,
+                trace: 0,
+                profile: false,
                 delta: vec![1 + sid as i32, 2],
             });
             let got = a.collect_generation();
@@ -1183,6 +1245,8 @@ mod tests {
                 strict: true,
                 max_new: 3,
                 deadline_ms: 0,
+                trace: 0,
+                profile: false,
                 delta: vec![9],
             });
             let got = b.collect_generation();
@@ -1212,6 +1276,8 @@ mod tests {
                 strict: false,
                 max_new: 2,
                 deadline_ms: 0,
+                trace: 0,
+                profile: false,
                 delta: vec![sid as i32],
             });
             let _ = c.collect_generation();
@@ -1231,6 +1297,8 @@ mod tests {
             strict: true,
             max_new: 2,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![5],
         });
         assert_eq!(c.collect_generation().len(), 2);
@@ -1253,14 +1321,14 @@ mod tests {
         // pin the single slot with a long generation: read the first token
         // to prove admission, leaving the rest of the stream in flight
         let mut busy = RawClient::connect(shard.addr());
-        busy.send(&Frame::Submit { max_new: 20_000, deadline_ms: 0, prompt: vec![1, 2] });
+        busy.send(&Frame::Submit { max_new: 20_000, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1, 2] });
         match busy.recv() {
             Frame::Token { .. } => {}
             other => panic!("expected first token, got {other:?}"),
         }
         // a 1ms budget expires in the queue behind the busy slot
         let mut late = RawClient::connect(shard.addr());
-        late.send(&Frame::Submit { max_new: 4, deadline_ms: 1, prompt: vec![3] });
+        late.send(&Frame::Submit { max_new: 4, deadline_ms: 1, trace: 0, profile: false, prompt: vec![3] });
         match late.recv() {
             Frame::Error { code, .. } => assert_eq!(code, ErrCode::DeadlineExceeded),
             other => panic!("expected DeadlineExceeded, got {other:?}"),
@@ -1297,6 +1365,8 @@ mod tests {
             strict: false,
             max_new: 20_000,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![1, 2],
         });
         match busy.recv() {
@@ -1312,6 +1382,8 @@ mod tests {
             strict: false,
             max_new: 2,
             deadline_ms: 0,
+            trace: 0,
+            profile: false,
             delta: vec![3],
         });
         let t0 = Instant::now();
@@ -1321,7 +1393,7 @@ mod tests {
         }
         // past the cap: typed refusal, immediately
         let mut extra = RawClient::connect(shard.addr());
-        extra.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![4] });
+        extra.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![4] });
         match extra.recv() {
             Frame::Error { code, .. } => assert_eq!(code, ErrCode::Overloaded),
             other => panic!("expected Overloaded, got {other:?}"),
@@ -1356,26 +1428,74 @@ mod tests {
         .unwrap();
         // no token: the first command is refused, typed
         let mut c = RawClient::connect(shard.addr());
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1] });
         assert!(matches!(c.recv(), Frame::Error { code: ErrCode::AuthFailed, .. }));
         // wrong token: refused too
         let mut c = RawClient::connect(shard.addr());
         c.send(&Frame::Auth { token: "hunter3".into() });
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1] });
         assert!(matches!(c.recv(), Frame::Error { code: ErrCode::AuthFailed, .. }));
         // the right token admits the connection for all further commands
         let mut c = RawClient::connect(shard.addr());
         c.send(&Frame::Auth { token: "hunter2".into() });
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1] });
         assert_eq!(c.collect_generation().len(), 2);
         shard.shutdown();
         // an open (token-less) shard ignores a presented credential
         let open = native_shard();
         let mut c = RawClient::connect(open.addr());
         c.send(&Frame::Auth { token: "whatever".into() });
-        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, prompt: vec![1] });
+        c.send(&Frame::Submit { max_new: 2, deadline_ms: 0, trace: 0, profile: false, prompt: vec![1] });
         assert_eq!(c.collect_generation().len(), 2);
         open.shutdown();
+    }
+
+    /// The wire tracing contract at the shard boundary: a traced submit
+    /// gets one Spans frame — shard + coordinator + engine hops joined
+    /// under the client's trace id — after the last token and before the
+    /// Done, and the Done echoes the trace id.  Untraced submits (all
+    /// the other tests here) never see a Spans frame.
+    #[test]
+    fn traced_submit_streams_spans_before_done() {
+        let shard = native_shard();
+        let mut c = RawClient::connect(shard.addr());
+        c.send(&Frame::Submit {
+            max_new: 3,
+            deadline_ms: 0,
+            trace: 0xABCD,
+            profile: true,
+            prompt: vec![1, 2],
+        });
+        let mut toks = 0;
+        let mut spans: Option<(u64, Vec<HopReport>)> = None;
+        loop {
+            match c.recv() {
+                Frame::Token { .. } => {
+                    assert!(spans.is_none(), "Spans must come after the last token");
+                    toks += 1;
+                }
+                Frame::Spans { trace, hops } => spans = Some((trace, hops)),
+                Frame::Done { trace, ttft_us, total_us } => {
+                    assert_eq!(trace, 0xABCD, "Done must echo the trace id");
+                    assert!(ttft_us <= total_us);
+                    break;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(toks, 3);
+        let (trace, hops) = spans.expect("traced submit must ship a span report");
+        assert_eq!(trace, 0xABCD);
+        let names: Vec<&str> = hops.iter().map(|h| h.hop.as_str()).collect();
+        assert!(names.contains(&"shard"), "{names:?}");
+        assert!(names.contains(&"coordinator"), "{names:?}");
+        assert!(
+            names.contains(&"engine"),
+            "profiled request must report engine stages: {names:?}"
+        );
+        let eng = hops.iter().find(|h| h.hop == "engine").unwrap();
+        assert!(eng.span_named("modal_sweep").is_some(), "{eng:?}");
+        shard.shutdown();
     }
 
     #[test]

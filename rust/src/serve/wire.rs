@@ -40,7 +40,7 @@
 
 use std::io::{self, Read, Write};
 
-use crate::obs::{Hist, MetricValue, BUCKETS};
+use crate::obs::{Hist, HopReport, MetricValue, Span, BUCKETS};
 use crate::util::bytes::{ByteReader, ReadErr};
 
 /// Protocol version; bump on any frame-layout change so mixed-version
@@ -57,8 +57,14 @@ use crate::util::bytes::{ByteReader, ReadErr};
 /// [`Frame::BulkAbort`], [`Frame::BulkBlob`]).  v5 added the optional
 /// shared-secret handshake ([`Frame::Auth`], sent by the client right
 /// after validating the server's [`Frame::Hello`]) and the typed
-/// [`ErrCode::AuthFailed`] refusal.
-pub const PROTO_VERSION: u32 = 5;
+/// [`ErrCode::AuthFailed`] refusal.  v6 added the distributed-tracing
+/// context: a 64-bit `trace` id + a `profile` flag on [`Frame::Submit`]
+/// / [`Frame::SubmitInSession`] (0 = untraced; the flag requests
+/// engine hot-path stage profiling), the `trace` echo on
+/// [`Frame::Done`], and the [`Frame::Spans`] reply carrying a hop's
+/// span report (durations + hop-relative offsets — clock-skew-immune
+/// like `deadline_ms`) back toward the front door.
+pub const PROTO_VERSION: u32 = 6;
 
 /// Upper bound on one frame's encoded size (tag + payload).
 pub const MAX_FRAME_BYTES: u32 = 64 << 20;
@@ -176,16 +182,23 @@ pub enum Frame {
     Auth { token: String },
     /// One-shot generation.  `deadline_ms` is the client's remaining
     /// deadline budget in milliseconds at send time (0 = none).
-    Submit { max_new: u32, deadline_ms: u32, prompt: Vec<i32> },
+    /// `trace` is the request's 64-bit trace id (0 = untraced; the
+    /// front door mints one for every admitted request and propagates
+    /// it on this field, so the reply's span reports join across
+    /// hops).  `profile` asks the serving engine to record per-stage
+    /// hot-path timings for this request.
+    Submit { max_new: u32, deadline_ms: u32, trace: u64, profile: bool, prompt: Vec<i32> },
     /// One turn of a session.  `strict` asks for a typed
     /// [`ErrCode::UnknownSession`] instead of silently starting a fresh
     /// conversation when the shard does not hold the session.
-    /// `deadline_ms` as on [`Frame::Submit`].
+    /// `deadline_ms`, `trace` and `profile` as on [`Frame::Submit`].
     SubmitInSession {
         session: u64,
         strict: bool,
         max_new: u32,
         deadline_ms: u32,
+        trace: u64,
+        profile: bool,
         delta: Vec<i32>,
     },
     /// Drop the session's state + transcript (deferred until quiescent).
@@ -249,8 +262,17 @@ pub enum Frame {
     BulkAbort { sessions: Vec<u64> },
     /// One generated token of the current request.
     Token { token: i32 },
-    /// End of a generation reply.
-    Done { ttft_us: u64, total_us: u64 },
+    /// End of a generation reply.  `trace` echoes the request's trace
+    /// id (0 when the request was untraced) so every client learns the
+    /// id it can look up at `GET /trace/<id>`.
+    Done { trace: u64, ttft_us: u64, total_us: u64 },
+    /// Span report for one traced generation, sent immediately before
+    /// [`Frame::Done`] when the request carried a non-zero `trace`.
+    /// Each hop's spans are durations + offsets relative to that hop's
+    /// own start (clock-skew-immune); a replying layer *prepends* its
+    /// own hop to the reports it gathered downstream, so the front
+    /// door receives the hops in traversal order.
+    Spans { trace: u64, hops: Vec<HopReport> },
     /// Export reply: the detached session (wire-encoded
     /// [`crate::session::SessionState`] bytes, when the engine snapshots),
     /// stamped with the exporting shard's fingerprints.
@@ -305,6 +327,7 @@ const TAG_TRANSCRIPT_IS: u8 = 22;
 const TAG_METRICS_REPORT: u8 = 23;
 const TAG_BULK_BLOB: u8 = 24;
 const TAG_AUTH: u8 = 25;
+const TAG_SPANS: u8 = 26;
 
 fn bad_data(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -384,6 +407,24 @@ impl Enc {
         }
         self.u64(h.count());
         self.u64(h.sum().to_bits());
+    }
+
+    fn hops(&mut self, hops: &[HopReport]) {
+        self.u32(hops.len() as u32);
+        for h in hops {
+            self.str(&h.hop);
+            self.u64(h.total_us);
+            self.u32(h.spans.len() as u32);
+            for s in &h.spans {
+                self.str(&s.name);
+                self.u64(s.start_us);
+                self.u64(s.dur_us);
+            }
+            self.u32(h.notes.len() as u32);
+            for n in &h.notes {
+                self.str(n);
+            }
+        }
     }
 
     fn metric(&mut self, v: &MetricValue) {
@@ -503,6 +544,31 @@ impl Dec<'_> {
         Ok(Hist::from_raw(counts, count, sum))
     }
 
+    fn hops(&mut self) -> io::Result<Vec<HopReport>> {
+        let n = self.u32()? as usize;
+        let mut hops = Vec::new();
+        for _ in 0..n {
+            let hop = self.str()?;
+            let total_us = self.u64()?;
+            let n_spans = self.u32()? as usize;
+            let mut spans = Vec::new();
+            for _ in 0..n_spans {
+                spans.push(Span {
+                    name: self.str()?,
+                    start_us: self.u64()?,
+                    dur_us: self.u64()?,
+                });
+            }
+            let n_notes = self.u32()? as usize;
+            let mut notes = Vec::new();
+            for _ in 0..n_notes {
+                notes.push(self.str()?);
+            }
+            hops.push(HopReport { hop, total_us, spans, notes });
+        }
+        Ok(hops)
+    }
+
     fn metric(&mut self) -> io::Result<MetricValue> {
         match self.u8()? {
             0 => Ok(MetricValue::Counter(self.u64()?)),
@@ -536,18 +602,30 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u8(TAG_AUTH);
             e.str(token);
         }
-        Frame::Submit { max_new, deadline_ms, prompt } => {
+        Frame::Submit { max_new, deadline_ms, trace, profile, prompt } => {
             e.u8(TAG_SUBMIT);
             e.u32(*max_new);
             e.u32(*deadline_ms);
+            e.u64(*trace);
+            e.u8(*profile as u8);
             e.tokens(prompt);
         }
-        Frame::SubmitInSession { session, strict, max_new, deadline_ms, delta } => {
+        Frame::SubmitInSession {
+            session,
+            strict,
+            max_new,
+            deadline_ms,
+            trace,
+            profile,
+            delta,
+        } => {
             e.u8(TAG_SUBMIT_IN_SESSION);
             e.u64(*session);
             e.u8(*strict as u8);
             e.u32(*max_new);
             e.u32(*deadline_ms);
+            e.u64(*trace);
+            e.u8(*profile as u8);
             e.tokens(delta);
         }
         Frame::EndSession { session } => {
@@ -613,10 +691,16 @@ fn encode(frame: &Frame) -> Vec<u8> {
             e.u8(TAG_TOKEN);
             e.i32(*token);
         }
-        Frame::Done { ttft_us, total_us } => {
+        Frame::Done { trace, ttft_us, total_us } => {
             e.u8(TAG_DONE);
+            e.u64(*trace);
             e.u64(*ttft_us);
             e.u64(*total_us);
+        }
+        Frame::Spans { trace, hops } => {
+            e.u8(TAG_SPANS);
+            e.u64(*trace);
+            e.hops(hops);
         }
         Frame::Blob { session, shape_fp, weights_fp, transcript, state } => {
             e.u8(TAG_BLOB);
@@ -674,6 +758,8 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
         TAG_SUBMIT => Frame::Submit {
             max_new: d.u32()?,
             deadline_ms: d.u32()?,
+            trace: d.u64()?,
+            profile: d.u8()? != 0,
             prompt: d.tokens()?,
         },
         TAG_SUBMIT_IN_SESSION => Frame::SubmitInSession {
@@ -681,6 +767,8 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
             strict: d.u8()? != 0,
             max_new: d.u32()?,
             deadline_ms: d.u32()?,
+            trace: d.u64()?,
+            profile: d.u8()? != 0,
             delta: d.tokens()?,
         },
         TAG_END_SESSION => Frame::EndSession { session: d.u64()? },
@@ -716,7 +804,8 @@ pub(crate) fn decode(body: &[u8]) -> io::Result<Frame> {
         TAG_BULK_COMMIT => Frame::BulkCommit { sessions: d.sessions()? },
         TAG_BULK_ABORT => Frame::BulkAbort { sessions: d.sessions()? },
         TAG_TOKEN => Frame::Token { token: d.i32()? },
-        TAG_DONE => Frame::Done { ttft_us: d.u64()?, total_us: d.u64()? },
+        TAG_DONE => Frame::Done { trace: d.u64()?, ttft_us: d.u64()?, total_us: d.u64()? },
+        TAG_SPANS => Frame::Spans { trace: d.u64()?, hops: d.hops()? },
         TAG_BLOB => Frame::Blob {
             session: d.u64()?,
             shape_fp: d.u64()?,
@@ -809,13 +898,27 @@ mod tests {
         });
         roundtrip(Frame::Auth { token: "".into() });
         roundtrip(Frame::Auth { token: "hunter2".into() });
-        roundtrip(Frame::Submit { max_new: 16, deadline_ms: 0, prompt: vec![1, -2, 3] });
-        roundtrip(Frame::Submit { max_new: 16, deadline_ms: 2500, prompt: vec![] });
+        roundtrip(Frame::Submit {
+            max_new: 16,
+            deadline_ms: 0,
+            trace: 0,
+            profile: false,
+            prompt: vec![1, -2, 3],
+        });
+        roundtrip(Frame::Submit {
+            max_new: 16,
+            deadline_ms: 2500,
+            trace: u64::MAX,
+            profile: true,
+            prompt: vec![],
+        });
         roundtrip(Frame::SubmitInSession {
             session: u64::MAX,
             strict: true,
             max_new: 0,
             deadline_ms: u32::MAX,
+            trace: 0,
+            profile: false,
             delta: vec![],
         });
         roundtrip(Frame::SubmitInSession {
@@ -823,6 +926,8 @@ mod tests {
             strict: false,
             max_new: 3,
             deadline_ms: 0,
+            trace: 99,
+            profile: true,
             delta: vec![i32::MIN, i32::MAX],
         });
         roundtrip(Frame::EndSession { session: 9 });
@@ -883,7 +988,23 @@ mod tests {
             }],
         });
         roundtrip(Frame::Token { token: -1 });
-        roundtrip(Frame::Done { ttft_us: 1, total_us: 2 });
+        roundtrip(Frame::Done { trace: 0, ttft_us: 1, total_us: 2 });
+        roundtrip(Frame::Done { trace: u64::MAX, ttft_us: 1, total_us: 2 });
+        roundtrip(Frame::Spans { trace: 7, hops: vec![] });
+        roundtrip(Frame::Spans {
+            trace: u64::MAX,
+            hops: vec![
+                HopReport::new("shard", 1234)
+                    .span("to_first_token", 0, 200)
+                    .span("stream", 200, 1034),
+                HopReport::new("coordinator", 1100)
+                    .span("queue", 0, 5)
+                    .span("decode", 5, 1095)
+                    .note("retry:2")
+                    .note("resurrected"),
+                HopReport::new("engine", 900),
+            ],
+        });
         roundtrip(Frame::Blob {
             session: 11,
             shape_fp: 13,
@@ -924,7 +1045,7 @@ mod tests {
         let frames = [
             Frame::Token { token: 4 },
             Frame::Token { token: 5 },
-            Frame::Done { ttft_us: 10, total_us: 20 },
+            Frame::Done { trace: 0, ttft_us: 10, total_us: 20 },
         ];
         for f in &frames {
             write_frame(&mut buf, f).unwrap();
@@ -971,6 +1092,8 @@ mod tests {
                 strict: true,
                 max_new: 4,
                 deadline_ms: 0,
+                trace: 3,
+                profile: false,
                 delta: vec![1, 2],
             },
         )
@@ -1049,6 +1172,21 @@ mod tests {
         }
     }
 
+    fn arb_hops(rng: &mut Prng) -> Vec<HopReport> {
+        (0..rng.below(4))
+            .map(|i| {
+                let mut h = HopReport::new(["front", "router", "shard"][i % 3], rng.next_u64());
+                for _ in 0..rng.below(4) {
+                    h = h.span("stage", rng.next_u64(), rng.next_u64());
+                }
+                for _ in 0..rng.below(3) {
+                    h = h.note(&"n".repeat(rng.below(6)));
+                }
+                h
+            })
+            .collect()
+    }
+
     fn arb_session_blobs(rng: &mut Prng) -> Vec<SessionBlob> {
         (0..rng.below(4))
             .map(|_| SessionBlob {
@@ -1062,7 +1200,7 @@ mod tests {
     /// A random instance of every frame kind — the generator behind the
     /// wire property tests, so fuzzing covers each tag's payload layout.
     fn arb_frame(rng: &mut Prng) -> Frame {
-        match rng.below(25) {
+        match rng.below(26) {
             0 => Frame::Hello {
                 proto: rng.next_u64() as u32,
                 engine: "hyena".into(),
@@ -1072,6 +1210,8 @@ mod tests {
             1 => Frame::Submit {
                 max_new: rng.below(64) as u32,
                 deadline_ms: rng.next_u64() as u32,
+                trace: rng.next_u64(),
+                profile: rng.below(2) == 1,
                 prompt: arb_tokens(rng, 8),
             },
             2 => Frame::SubmitInSession {
@@ -1079,6 +1219,8 @@ mod tests {
                 strict: rng.below(2) == 1,
                 max_new: rng.below(64) as u32,
                 deadline_ms: rng.next_u64() as u32,
+                trace: rng.next_u64(),
+                profile: rng.below(2) == 1,
                 delta: arb_tokens(rng, 8),
             },
             3 => Frame::EndSession { session: rng.next_u64() },
@@ -1095,7 +1237,11 @@ mod tests {
             8 => Frame::ExportAbort { session: rng.next_u64() },
             9 => Frame::Transcript { session: rng.next_u64() },
             10 => Frame::Token { token: rng.next_u64() as i32 },
-            11 => Frame::Done { ttft_us: rng.next_u64(), total_us: rng.next_u64() },
+            11 => Frame::Done {
+                trace: rng.next_u64(),
+                ttft_us: rng.next_u64(),
+                total_us: rng.next_u64(),
+            },
             12 => Frame::Blob {
                 session: rng.next_u64(),
                 shape_fp: rng.next_u64(),
@@ -1140,6 +1286,7 @@ mod tests {
                 sessions: arb_session_blobs(rng),
             },
             23 => Frame::Auth { token: "t".repeat(rng.below(8)) },
+            24 => Frame::Spans { trace: rng.next_u64(), hops: arb_hops(rng) },
             _ => Frame::Error {
                 code: ErrCode::from_u16(rng.below(10) as u16),
                 msg: "m".repeat(rng.below(16)),

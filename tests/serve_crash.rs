@@ -138,6 +138,8 @@ fn wire_turn(addr: SocketAddr, sid: u64, delta: &[i32]) -> Result<Vec<i32>, ErrC
             strict: false,
             max_new: MAX_NEW as u32,
             deadline_ms: PATIENT_MS,
+            trace: 0,
+            profile: false,
             delta: delta.to_vec(),
         },
     )

@@ -128,6 +128,8 @@ fn wire_turn(
             strict: false,
             max_new,
             deadline_ms,
+            trace: 0,
+            profile: false,
             delta: delta.to_vec(),
         },
     )

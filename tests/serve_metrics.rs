@@ -94,7 +94,15 @@ fn front_turn(addr: SocketAddr, sid: u64, delta: Vec<i32>, max_new: u32) -> Vec<
     }
     wire::write_frame(
         &mut s,
-        &Frame::SubmitInSession { session: sid, strict: false, max_new, deadline_ms: 0, delta },
+        &Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new,
+            deadline_ms: 0,
+            trace: 0,
+            profile: false,
+            delta,
+        },
     )
     .unwrap();
     let mut toks = Vec::new();
@@ -204,6 +212,8 @@ fn mid_generation_scrape_waits_out_the_stream_and_succeeds() {
                 strict: false,
                 max_new: 5,
                 deadline_ms: 0,
+                trace: 0,
+                profile: false,
                 delta: vec![3, 1, 4],
             },
         )

@@ -229,7 +229,15 @@ fn front_turn(addr: std::net::SocketAddr, sid: u64, delta: Vec<i32>, max_new: u3
     }
     wire::write_frame(
         &mut s,
-        &Frame::SubmitInSession { session: sid, strict: false, max_new, deadline_ms: 0, delta },
+        &Frame::SubmitInSession {
+            session: sid,
+            strict: false,
+            max_new,
+            deadline_ms: 0,
+            trace: 0,
+            profile: false,
+            delta,
+        },
     )
     .unwrap();
     let mut toks = Vec::new();
@@ -330,6 +338,8 @@ fn mid_stream_drain_defers_until_the_stream_completes() {
                 strict: false,
                 max_new: 5,
                 deadline_ms: 0,
+                trace: 0,
+                profile: false,
                 delta: d1c,
             },
         )

@@ -1,0 +1,364 @@
+//! Loopback integration test of end-to-end distributed tracing: a
+//! 2-shard cluster behind a [`FrontServer`], driven over real wire
+//! sockets by clients that stamp their own trace ids.
+//!
+//! The acceptance invariants:
+//!
+//! * a traced turn's `Spans` report joins front → router → shard →
+//!   coordinator → engine into **one tree** whose hop durations nest
+//!   (every inner hop fits inside its parent) and account for the
+//!   front-observed end-to-end latency within a small assembly slack;
+//! * skipped stages are *absent* end-to-end: the first turn's
+//!   coordinator hop carries `prefill` and no `resume`, the second
+//!   turn's carries `resume` and no `prefill`;
+//! * a session whose home shard is killed mid-conversation still
+//!   answers, and the surviving turn's span tree is annotated
+//!   `resurrected`; a one-shot that lands on the dead shard first is
+//!   annotated `retry:1`;
+//! * `GET /trace/<id>` serves the same joined tree over HTTP, and the
+//!   sampled engine profile feeds the `lh_engine_*` histograms visible
+//!   in a `/metrics` scrape.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use laughing_hyena::config::ServeConfig;
+use laughing_hyena::engine::LmShape;
+use laughing_hyena::obs::HopReport;
+use laughing_hyena::serve::wire;
+use laughing_hyena::serve::{
+    BreakerConfig, FaultPlan, Frame, FrontConfig, FrontServer, Router, ShardServer,
+};
+
+/// Shared seed: every shard carries identical weights, the precondition
+/// for resurrecting a killed session anywhere in the cluster.
+const SEED: u64 = 11;
+
+/// Slack allowed between a parent hop's total and the sum of the work it
+/// directly measured: record assembly, frame writes and scheduler noise
+/// live in this gap, never generation work.
+const SLACK_US: u64 = 50_000;
+
+fn cfg() -> ServeConfig {
+    ServeConfig { max_batch: 2, linger_ms: 1, ..ServeConfig::default() }
+}
+
+fn shape() -> LmShape {
+    LmShape::bench("nano").unwrap()
+}
+
+/// N native shards behind a front server with a fault plan threaded in
+/// and the background prober disabled.
+fn launch(n: usize) -> (Vec<ShardServer>, FrontServer, Arc<FaultPlan>) {
+    let shape = shape();
+    let shards: Vec<ShardServer> =
+        (0..n).map(|_| ShardServer::spawn_native(&shape, 2, SEED, cfg()).unwrap()).collect();
+    let addrs: Vec<_> = shards.iter().map(|s| s.addr()).collect();
+    let faults = Arc::new(FaultPlan::new());
+    let router = Router::new_with(&addrs, BreakerConfig::default(), Some(faults.clone())).unwrap();
+    let front =
+        FrontServer::spawn(
+            router,
+            FrontConfig { max_inflight: 4, probe_interval: None, ..FrontConfig::default() },
+        )
+        .unwrap();
+    (shards, front, faults)
+}
+
+/// One blocking HTTP/1.1 exchange against the sibling listener.
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nhost: t\r\n\r\n").as_bytes()).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable status line in {text:?}"));
+    let body = text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// A histogram `_count` / counter value from a Prometheus text body.
+fn metric_value(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find_map(|l| {
+            l.strip_prefix(name)
+                .and_then(|r| r.strip_prefix(' '))
+                .and_then(|v| v.trim().parse::<f64>().ok())
+        })
+        .unwrap_or_else(|| panic!("metric {name} not found in scrape")) as u64
+}
+
+/// One traced wire turn: connect, swallow the greeting, submit, collect
+/// the stream plus the `Spans` report, return (tokens, hops, Done trace).
+fn traced_turn(addr: SocketAddr, submit: &Frame) -> (Vec<i32>, Vec<HopReport>, u64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    match wire::read_frame(&mut s).unwrap() {
+        Frame::Hello { .. } => {}
+        other => panic!("expected Hello greeting, got {other:?}"),
+    }
+    wire::write_frame(&mut s, submit).unwrap();
+    let mut toks = Vec::new();
+    let mut hops = Vec::new();
+    loop {
+        match wire::read_frame(&mut s).unwrap() {
+            Frame::Token { token } => toks.push(token),
+            Frame::Spans { hops: h, .. } => hops = h,
+            Frame::Done { trace, .. } => return (toks, hops, trace),
+            other => panic!("expected Token/Spans/Done, got {other:?}"),
+        }
+    }
+}
+
+fn in_session(sid: u64, trace: u64, delta: Vec<i32>, max_new: u32) -> Frame {
+    Frame::SubmitInSession {
+        session: sid,
+        strict: false,
+        max_new,
+        deadline_ms: 0,
+        trace,
+        profile: true,
+        delta,
+    }
+}
+
+/// The hop by name, or panic with the tree that was actually reported.
+fn hop<'a>(hops: &'a [HopReport], name: &str) -> &'a HopReport {
+    hops.iter()
+        .find(|h| h.hop == name)
+        .unwrap_or_else(|| panic!("no {name} hop in {:?}", hops.iter().map(|h| &h.hop).collect::<Vec<_>>()))
+}
+
+/// Tentpole: a traced, profiled turn's span report joins every layer
+/// into one tree with nesting durations that account for the front's
+/// end-to-end latency, skipped stages are absent (prefill vs resume),
+/// and `GET /trace/<id>` serves the same tree over HTTP with the engine
+/// profile visible in `/metrics`.
+#[test]
+fn traced_turns_join_one_tree_that_accounts_for_e2e_latency() {
+    let (shards, front, _faults) = launch(2);
+    let sid = 0x51D;
+    let (t1, t2) = (0xAAA1u64, 0xAAA2u64);
+
+    let wall = Instant::now();
+    let (toks, hops, done_trace) = traced_turn(front.addr(), &in_session(sid, t1, vec![3, 1, 4], 4));
+    let client_e2e_us = wall.elapsed().as_micros() as u64;
+    assert_eq!(toks.len(), 4);
+    assert_eq!(done_trace, t1, "Done must echo the client's trace id");
+
+    // one tree, every layer present, in traversal order
+    let names: Vec<&str> = hops.iter().map(|h| h.hop.as_str()).collect();
+    assert_eq!(
+        names,
+        ["front", "router", "shard", "coordinator", "engine"],
+        "hops must join front-first in traversal order"
+    );
+
+    // durations nest: every hop fits inside the one that carried it,
+    // and the outermost fits inside what the client itself observed
+    let (front_hop, router_hop) = (hop(&hops, "front"), hop(&hops, "router"));
+    let (shard_hop, coord_hop) = (hop(&hops, "shard"), hop(&hops, "coordinator"));
+    let engine_hop = hop(&hops, "engine");
+    assert!(front_hop.total_us <= client_e2e_us, "front e2e exceeds the client's own clock");
+    assert!(router_hop.total_us <= front_hop.total_us);
+    assert!(shard_hop.total_us <= router_hop.total_us);
+    assert!(coord_hop.total_us <= shard_hop.total_us);
+    assert!(engine_hop.total_us <= coord_hop.total_us);
+
+    // the front's own spans account for its total within assembly slack
+    let queue = front_hop.span_named("queue").expect("front queue span");
+    let relay = front_hop.span_named("relay").expect("front relay span");
+    assert_eq!(queue.start_us, 0);
+    assert_eq!(relay.start_us, queue.dur_us, "relay starts where queue ends");
+    let accounted = queue.dur_us + relay.dur_us;
+    assert!(accounted <= front_hop.total_us, "spans cannot exceed their hop");
+    assert!(
+        front_hop.total_us - accounted <= SLACK_US,
+        "unaccounted front time {}us exceeds slack",
+        front_hop.total_us - accounted
+    );
+    // the relay span is where the router's custody lives
+    assert!(router_hop.total_us <= relay.dur_us);
+
+    // the shard splits its custody at the first token
+    let tft = shard_hop.span_named("to_first_token").expect("shard to_first_token span");
+    let stream = shard_hop.span_named("stream").expect("shard stream span");
+    assert_eq!(stream.start_us, tft.dur_us);
+    assert!(tft.dur_us + stream.dur_us <= shard_hop.total_us + SLACK_US);
+
+    // first turn of a session: prefill happened, resume is *absent*
+    assert!(coord_hop.span_named("queue").is_some());
+    assert!(coord_hop.span_named("decode").is_some());
+    assert!(coord_hop.span_named("prefill").is_some(), "turn 1 must prefill");
+    assert!(coord_hop.span_named("resume").is_none(), "no stored state to resume on turn 1");
+
+    // the profiled engine hop carries every hot-path stage (start 0:
+    // stages interleave per token, durations are per-request aggregates)
+    for stage in ["short_conv", "modal_sweep", "qkv", "out_proj", "mlp", "lm_head"] {
+        let s = engine_hop
+            .span_named(stage)
+            .unwrap_or_else(|| panic!("missing engine stage {stage}"));
+        assert_eq!(s.start_us, 0, "engine stages carry no offsets");
+    }
+
+    // turn 2 resumes stored state: resume present, prefill absent
+    let (_, hops2, done2) = traced_turn(front.addr(), &in_session(sid, t2, vec![1, 5], 3));
+    assert_eq!(done2, t2);
+    let coord2 = hop(&hops2, "coordinator");
+    assert!(coord2.span_named("resume").is_some(), "turn 2 must resume stored state");
+    assert!(coord2.span_named("prefill").is_none(), "a resumed turn never prefills");
+
+    // the same trees over HTTP: /trace/<id> joins, /traces?session filters
+    let (status, body) = http_get(front.http_addr(), &format!("/trace/{t1}"));
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains(&format!("\"id\":{t1}")), "{body}");
+    for name in ["front", "router", "shard", "coordinator", "engine"] {
+        assert!(body.contains(&format!("\"hop\":\"{name}\"")), "{name} missing from {body}");
+    }
+    assert!(body.contains("\"name\":\"modal_sweep\""), "{body}");
+    let (status, filtered) = http_get(front.http_addr(), &format!("/traces?session={sid}"));
+    assert_eq!(status, 200);
+    assert!(filtered.contains(&format!("\"id\":{t1}")), "{filtered}");
+    assert!(filtered.contains(&format!("\"id\":{t2}")), "{filtered}");
+    let (status, missing) = http_get(front.http_addr(), "/trace/999999999");
+    assert_eq!(status, 404, "an unseen id must be a clean 404: {missing}");
+
+    // the profiled turns fed the engine-stage histograms
+    let (status, scrape) = http_get(front.http_addr(), "/metrics");
+    assert_eq!(status, 200);
+    assert!(metric_value(&scrape, "lh_engine_profiled_total") >= 2, "{scrape}");
+    assert!(metric_value(&scrape, "lh_engine_modal_sweep_seconds_count") >= 2, "{scrape}");
+    assert!(metric_value(&scrape, "lh_engine_lm_head_seconds_count") >= 2, "{scrape}");
+
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// Satellite: kill a traced session's home shard mid-conversation.  The
+/// next turn still answers — and its span tree says *how*: the router
+/// hop is annotated `resurrected`, and the joined tree (wire and HTTP
+/// alike) still carries every hop from the surviving attempt.
+#[test]
+fn killed_session_turn_is_annotated_resurrected_in_its_span_tree() {
+    let (shards, front, faults) = launch(2);
+    let sid = 0xDEAD_5EED;
+    let (t1, t2) = (0xBBB1u64, 0xBBB2u64);
+
+    let (toks1, hops1, _) = traced_turn(front.addr(), &in_session(sid, t1, vec![3, 1, 4], 4));
+    assert_eq!(toks1.len(), 4);
+    assert!(
+        hops1.iter().all(|h| h.notes.is_empty()),
+        "an unremarkable turn carries no annotations: {hops1:?}"
+    );
+
+    // the home shard "crashes": every connect to it is refused from now on
+    let home = front.router().lock().unwrap().shard_of(sid).unwrap();
+    faults.kill(shards[home].addr());
+
+    let (toks2, hops2, done2) = traced_turn(front.addr(), &in_session(sid, t2, vec![1, 5, 9], 3));
+    assert_eq!(toks2.len(), 3, "the killed session's turn must still answer");
+    assert_eq!(done2, t2);
+    let router_hop = hop(&hops2, "router");
+    assert!(
+        router_hop.notes.iter().any(|n| n == "resurrected"),
+        "the surviving turn must be annotated resurrected: {:?}",
+        router_hop.notes
+    );
+    // the resurrected attempt's downstream reports still joined the tree
+    for name in ["shard", "coordinator", "engine"] {
+        assert!(hops2.iter().any(|h| h.hop == name), "{name} missing after resurrection");
+    }
+    // and the session now answers from the survivor
+    assert_ne!(front.router().lock().unwrap().shard_of(sid), Some(home));
+
+    // the annotation is queryable after the fact
+    let (status, body) = http_get(front.http_addr(), &format!("/trace/{t2}"));
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"resurrected\""), "{body}");
+
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
+
+/// Satellite: a one-shot whose first routing choice is the dead shard is
+/// annotated `retry:1` — the trace says the latency went to failover,
+/// not generation.  Round-robin alternates the starting shard, so of two
+/// back-to-back one-shots exactly the one that led with the corpse
+/// carries the note.  Also pins the sampling contract: tracing forces
+/// profiling, while an untraced unprofiled request gets no engine hop
+/// and no Spans frame.
+#[test]
+fn one_shot_failover_is_annotated_retry_in_its_span_tree() {
+    let (shards, front, faults) = launch(2);
+    faults.kill(shards[0].addr());
+    let (ta, tb) = (0xCCC1u64, 0xCCC2u64);
+    let submit = |trace| Frame::Submit {
+        max_new: 3,
+        deadline_ms: 0,
+        trace,
+        profile: false,
+        prompt: vec![2, 7, 1],
+    };
+
+    let (toks_a, hops_a, _) = traced_turn(front.addr(), &submit(ta));
+    let (toks_b, hops_b, _) = traced_turn(front.addr(), &submit(tb));
+    assert_eq!(toks_a.len(), 3, "failover must still answer");
+    assert_eq!(toks_b.len(), 3);
+
+    let retried: Vec<bool> = [&hops_a, &hops_b]
+        .iter()
+        .map(|hops| hop(hops, "router").notes.iter().any(|n| n == "retry:1"))
+        .collect();
+    assert_eq!(
+        retried.iter().filter(|&&r| r).count(),
+        1,
+        "exactly one of two round-robin one-shots leads with the dead shard: {hops_a:?} / {hops_b:?}"
+    );
+
+    // tracing forces profiling (the whole point of tracing a slow
+    // request is seeing where the engine spent it), so even with
+    // profile:false on the frame the retried tree carries every hop
+    let annotated = if retried[0] { &hops_a } else { &hops_b };
+    for name in ["front", "router", "shard", "coordinator", "engine"] {
+        assert!(annotated.iter().any(|h| h.hop == name), "{name} missing");
+    }
+
+    // an UNtraced, unprofiled request never pays for engine stage
+    // timing — its ring record (looked up via the minted id `Done`
+    // echoes) has no engine hop, and no Spans frame reached the wire
+    let plain = Frame::Submit {
+        max_new: 3,
+        deadline_ms: 0,
+        trace: 0,
+        profile: false,
+        prompt: vec![2, 7, 1],
+    };
+    let (toks_p, hops_p, minted) = traced_turn(front.addr(), &plain);
+    assert_eq!(toks_p.len(), 3);
+    assert!(hops_p.is_empty(), "untraced clients must not receive Spans frames");
+    assert_ne!(minted, 0, "Done must still echo a minted trace id");
+    let (status, body) = http_get(front.http_addr(), &format!("/trace/{minted}"));
+    assert_eq!(status, 200, "{body}");
+    assert!(
+        !body.contains("\"hop\":\"engine\""),
+        "an unprofiled request must not pay for engine stage timing: {body}"
+    );
+    assert!(body.contains("\"hop\":\"coordinator\""), "{body}");
+
+    front.shutdown();
+    for s in shards {
+        s.shutdown();
+    }
+}
